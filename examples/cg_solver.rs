@@ -1,0 +1,133 @@
+//! Conjugate-gradient solver on a 2-D Poisson system — the exascale
+//! scientific-computing workload class the paper's introduction cites
+//! (iterative solvers dominated by SpMV).
+//!
+//! Builds the standard 5-point Laplacian on a `G x G` grid (SPD), then
+//! solves `A u = b` with CG, running every `A·p` product through the MSREP
+//! engine on a simulated DGX-1. Converges in O(G) iterations; the residual
+//! check at the end proves the multi-GPU SpMV is exact enough for a real
+//! numerical method.
+//!
+//! ```bash
+//! cargo run --release --example cg_solver [--pjrt]
+//! ```
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+use msrep::formats::{convert, Coo, FormatKind, Matrix};
+use msrep::report::format_duration_s;
+use msrep::sim::Platform;
+
+const G: usize = 120; // grid side; N = G*G unknowns
+const MAX_ITERS: usize = 600;
+const TOL: f32 = 1e-4;
+
+/// 5-point 2-D Laplacian stencil on a G x G grid: 4 on the diagonal, -1
+/// for each neighbour — symmetric positive definite.
+fn laplacian_2d(g: usize) -> Coo {
+    let n = g * g;
+    let mut rows = Vec::with_capacity(5 * n);
+    let mut cols = Vec::with_capacity(5 * n);
+    let mut vals = Vec::with_capacity(5 * n);
+    let idx = |r: usize, c: usize| (r * g + c) as u32;
+    for r in 0..g {
+        for c in 0..g {
+            let i = idx(r, c);
+            rows.push(i);
+            cols.push(i);
+            vals.push(4.0);
+            let mut push = |j: u32| {
+                rows.push(i);
+                cols.push(j);
+                vals.push(-1.0);
+            };
+            if r > 0 {
+                push(idx(r - 1, c));
+            }
+            if r + 1 < g {
+                push(idx(r + 1, c));
+            }
+            if c > 0 {
+                push(idx(r, c - 1));
+            }
+            if c + 1 < g {
+                push(idx(r, c + 1));
+            }
+        }
+    }
+    Coo::new(n, n, rows, cols, vals).expect("laplacian is valid")
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+fn main() -> msrep::Result<()> {
+    let use_pjrt = std::env::args().any(|a| a == "--pjrt");
+    let n = G * G;
+
+    println!("building 2-D Poisson system: {G}x{G} grid, {n} unknowns");
+    let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(laplacian_2d(G))));
+    println!("matrix: {} nnz (5-point stencil)", a.nnz());
+
+    let engine = Engine::new(RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: 8,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: if use_pjrt { Backend::Pjrt } else { Backend::CpuRef },
+        numa_aware: None,
+        strategy_override: None,
+    })?;
+
+    // manufactured solution: u* = 1, b = A*u*
+    let u_star = vec![1.0f32; n];
+    let b = engine.spmv(&a, &u_star, 1.0, 0.0, None)?.y;
+
+    // CG, every matvec through the engine
+    let mut u = vec![0.0f32; n];
+    let mut r = b.clone(); // r = b - A*0
+    let mut p = r.clone();
+    let mut rs_old = dot(&r, &r);
+    let mut modeled = 0.0f64;
+    let mut iters = 0;
+
+    for it in 1..=MAX_ITERS {
+        iters = it;
+        let rep = engine.spmv(&a, &p, 1.0, 0.0, None)?;
+        modeled += rep.metrics.modeled_total;
+        let ap = rep.y;
+        let alpha = (rs_old / dot(&p, &ap)) as f32;
+        for i in 0..n {
+            u[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new = dot(&r, &r);
+        if it % 100 == 0 {
+            println!("  iter {it:>4}: ||r|| = {:.3e}", rs_new.sqrt());
+        }
+        if rs_new.sqrt() < TOL as f64 {
+            println!("  converged at iter {it}: ||r|| = {:.3e}", rs_new.sqrt());
+            break;
+        }
+        let beta = (rs_new / rs_old) as f32;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs_old = rs_new;
+    }
+
+    let max_err = u
+        .iter()
+        .zip(&u_star)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("\nsolution error vs manufactured u*=1: max |u - u*| = {max_err:.3e}");
+    assert!(max_err < 1e-2, "CG failed to converge to the manufactured solution");
+    println!(
+        "modeled engine time: {} over {iters} matvecs ({} per SpMV)",
+        format_duration_s(modeled),
+        format_duration_s(modeled / iters as f64),
+    );
+    println!("cg_solver OK");
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! End-to-end driver: regenerate EVERY table and figure of the paper's
+//! evaluation (§5) through the full stack and print them in report form.
+//! The output of this binary is what EXPERIMENTS.md records.
+//!
+//! ```bash
+//! cargo run --release --example paper_figures            # full suite
+//! cargo run --release --example paper_figures -- --quick # 2-matrix cache
+//! ```
+//!
+//! Before the sweeps, one configuration per format is verified end-to-end
+//! through PJRT against the CPU oracle, proving the three layers compose;
+//! the sweeps themselves run on the CpuRef backend (identical partition +
+//! merge logic, hundreds of runs).
+
+use std::time::Instant;
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+use msrep::formats::{gen, FormatKind};
+use msrep::report::figures::{self, SuiteCache};
+use msrep::report::Series;
+use msrep::sim::Platform;
+use msrep::spmv::spmv_matrix;
+use msrep::workload;
+
+fn main() -> msrep::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+
+    println!("# MSREP paper-figure regeneration");
+    println!("(simulated platforms; see DESIGN.md §3 for the substitution rationale)\n");
+
+    // ---- end-to-end PJRT verification gate --------------------------------
+    println!("## E2E gate: PJRT numerics vs CPU oracle");
+    match e2e_gate() {
+        Ok(errs) => {
+            for (fmt, err) in errs {
+                println!("  {fmt:<4} max-rel-err {err:.2e}  OK");
+            }
+        }
+        Err(e) => {
+            println!("  SKIPPED ({e}) — run `make artifacts` for the PJRT gate");
+        }
+    }
+
+    println!("\ngenerating Table-2 analog suite ({})...", if quick { "quick: 2 matrices" } else { "6 matrices" });
+    let cache = if quick { SuiteCache::build_quick(2) } else { SuiteCache::build() };
+
+    println!("\n## Table 2 — evaluation suite");
+    print!("{}", figures::table2(&cache).render());
+
+    println!("\n## Fig. 6 — naive distribution vs nnz imbalance (DGX-1, 8 GPUs, baseline)");
+    print!("{}", figures::fig06_imbalance()?.render());
+
+    println!("\n## Fig. 16 — partitioning overhead (% of end-to-end, geomean over suite)");
+    print!("{}", figures::fig16_partition_overhead(&cache)?.render());
+
+    println!("\n## Fig. 19/22 — merge overhead (HV15R analog, % of end-to-end)");
+    print!("{}", figures::fig19_merge_overhead(&cache)?.render());
+
+    println!("\n## Fig. 20 — NUMA awareness (com-Orkut analog, p*-opt speedup vs #GPUs)");
+    for (platform, series) in figures::fig20_numa(&cache)? {
+        println!("\n### {platform}");
+        print!("{}", Series::render_table(&series, "gpus"));
+    }
+
+    println!("\n## Fig. 21 — overall speedup vs #GPUs (geomean over suite, CSR)");
+    for (platform, series) in figures::fig21_overall(&cache)? {
+        println!("\n### {platform}");
+        print!("{}", Series::render_table(&series, "gpus"));
+    }
+
+    println!("\n## Fig. 23 — per-matrix p*-opt speedup vs #GPUs (CSR)");
+    let mut headline = vec![];
+    for (platform, series) in figures::fig23_per_matrix(&cache)? {
+        println!("\n### {platform}");
+        print!("{}", Series::render_table(&series, "gpus"));
+        // headline claim: geomean speedup at max GPU count
+        let finals: Vec<f64> = series.iter().map(|s| s.points.last().unwrap().1).collect();
+        let geo = msrep::util::stats::geomean(&finals);
+        let gpus = series[0].points.last().unwrap().0;
+        headline.push(format!("{platform}: {geo:.1}x @ {gpus:.0} GPUs"));
+    }
+
+    println!("\n## Headline (paper: 5.5x @ 6 GPUs Summit, 6.2x @ 8 GPUs DGX-1)");
+    for h in &headline {
+        println!("  measured {h}");
+    }
+    println!("\ndone in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Run one mid-size SpMV per format through PJRT and report the max
+/// relative error vs the CPU oracle.
+fn e2e_gate() -> msrep::Result<Vec<(&'static str, f32)>> {
+    let entry = &workload::suite()[0]; // mouse_gene analog (most skewed)
+    let coo = workload::suite_matrix(entry);
+    let base = msrep::formats::Matrix::Coo(coo);
+    let mut out = vec![];
+    for format in FormatKind::ALL {
+        let mat = figures::in_format(&base, format);
+        let x = gen::dense_vector(mat.cols(), 3);
+        let y0 = gen::dense_vector(mat.rows(), 4);
+        let engine = Engine::new(RunConfig {
+            platform: Platform::summit(),
+            num_gpus: 6,
+            mode: Mode::PStarOpt,
+            format,
+            backend: Backend::Pjrt,
+            numa_aware: None,
+        strategy_override: None,
+        })?;
+        let rep = engine.spmv(&mat, &x, 1.5, -0.5, Some(&y0))?;
+        let mut expect = y0.clone();
+        spmv_matrix(&mat, &x, 1.5, -0.5, &mut expect)?;
+        let max_rel = rep
+            .y
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+            .fold(0.0f32, f32::max);
+        assert!(max_rel < 1e-2, "{format:?} e2e gate failed: {max_rel}");
+        out.push((format.name(), max_rel));
+    }
+    Ok(out)
+}

@@ -1,0 +1,114 @@
+"""AOT pipeline: lower every bucketed L2 graph to HLO *text* + manifest.json.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--quick]
+
+``--quick`` emits only the smallest bucket of each kind — used by the python
+test suite to validate the pipeline without paying for the full grid.
+Incremental: an artifact is skipped if it already exists (the Makefile
+handles staleness against the python sources).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import buckets, model
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the rust-loadable form)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def quick_subset(arts: list[dict]) -> list[dict]:
+    """Smallest bucket of each kind — enough for pipeline tests."""
+    out = []
+    seen = set()
+    for a in arts:
+        if a["kind"] not in seen:
+            seen.add(a["kind"])
+            out.append(a)
+    return out
+
+
+def build(out_dir: str, quick: bool = False, force: bool = False, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    arts = buckets.all_artifacts()
+    if quick:
+        arts = quick_subset(arts)
+
+    built, skipped = 0, 0
+    t0 = time.time()
+    for entry in arts:
+        path = os.path.join(out_dir, entry["file"])
+        if os.path.exists(path) and not force:
+            skipped += 1
+            continue
+        t1 = time.time()
+        lowered = model.lower_artifact(entry)
+        text = to_hlo_text(lowered)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+        built += 1
+        if verbose:
+            print(
+                f"[aot] {entry['name']}: {len(text)} chars in {time.time() - t1:.2f}s",
+                file=sys.stderr,
+            )
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "quick": quick,
+        "jax_version": jax.__version__,
+        "dtype": buckets.DTYPE,
+        "index_dtype": buckets.INDEX_DTYPE,
+        "tile": buckets.TILE,
+        "reduce_k": buckets.REDUCE_K,
+        "nnz_buckets": buckets.NNZ_BUCKETS,
+        "vec_buckets": buckets.VEC_BUCKETS,
+        "artifacts": arts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(
+            f"[aot] built {built}, skipped {skipped} (cached), "
+            f"total {time.time() - t0:.1f}s -> {out_dir}",
+            file=sys.stderr,
+        )
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--quick", action="store_true", help="smallest bucket per kind only")
+    p.add_argument("--force", action="store_true", help="rebuild even if present")
+    args = p.parse_args()
+    build(args.out_dir, quick=args.quick, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

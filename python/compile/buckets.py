@@ -1,0 +1,146 @@
+"""Shape-bucket grid shared between the AOT pipeline and the rust runtime.
+
+XLA artifacts need static shapes but MSREP partitions are dynamic: a pCSR /
+pCOO / pCSC partition owns an arbitrary contiguous nnz-range and a row
+(column) span that depends on the matrix.  We therefore AOT-compile a small
+grid of shape *buckets* and let the rust runtime pad each partition up to the
+nearest bucket (see DESIGN.md §4 "Static shapes / bucketing"):
+
+  * ``NNZ_BUCKETS``  — padded length of the val/col_idx/row_idx streams.
+  * ``VEC_BUCKETS``  — padded length of dense vectors (x input, y output).
+
+Padding is harmless by construction: padded ``val`` entries are zero (so the
+products contribute nothing), padded ``col_idx``/``row_idx`` entries are 0 (a
+valid in-range index), and the rust side slices the first ``m`` entries of
+the result.
+
+``rust/src/runtime/buckets.rs`` mirrors these constants; the AOT pipeline
+writes them into ``artifacts/manifest.json`` and the rust manifest loader
+cross-checks at startup so the two sides can never silently diverge.
+"""
+
+from __future__ import annotations
+
+# Padded nnz-stream lengths. ×2 spacing (§Perf iteration 3): the original
+# ×4 grid measured 2.13x padding waste on the suite partitions, and padded
+# nnz is what the interpret-mode kernel pays for — halving the spacing cut
+# the measured engine hot path by ~25% for 2.4x as many (lazily compiled)
+# artifacts.
+NNZ_BUCKETS = [4_096, 8_192, 16_384, 32_768, 65_536, 131_072, 262_144, 524_288, 1_048_576]
+
+# Padded dense-vector lengths (both the x input of length n and the
+# y_partial output of length m_local / m use this grid).
+VEC_BUCKETS = [4_096, 32_768, 262_144]
+
+# Pallas grid tile: each grid step streams TILE non-zeros HBM->VMEM.
+# §Perf sweep (EXPERIMENTS.md): 16Ki -> 14.2 ms, 64Ki -> 6.2 ms,
+# 256Ki -> 1.6 ms per 256Ki-nnz partition on the XLA-CPU interpret path
+# (fewer grid steps = less per-step loop overhead). 256Ki keeps the VMEM
+# working set at 2·TILE·12 B (double-buffered streams) + residents
+# ≈ 8.4 MiB, inside the 16 MiB budget for every bucket.
+TILE = 262_144
+
+# Fan-in of the on-GPU partial-result tree reduction used by the column-based
+# (pCSC) merge path.  8 covers both evaluation platforms (6 and 8 GPUs).
+REDUCE_K = 8
+
+# SpMM (sparse matrix x K dense vectors, paper §2.3) right-hand-side width.
+SPMM_K = 8
+
+# SpMM keeps K-wide X and Y resident in VMEM, so its vector buckets stop at
+# 32Ki: 262144 x 8 x 4 B x 2 would blow the 16 MiB budget.  Larger matrices
+# fall back to K single-vector SpMV calls (the rust engine handles this).
+SPMM_VEC_BUCKETS = [4_096, 32_768]
+
+DTYPE = "float32"
+INDEX_DTYPE = "int32"
+
+
+def bucket_for(value: int, buckets: list[int]) -> int:
+    """Smallest bucket >= value. Raises if value exceeds the largest bucket."""
+    if value < 0:
+        raise ValueError(f"negative size: {value}")
+    for b in buckets:
+        if value <= b:
+            return b
+    raise ValueError(f"size {value} exceeds largest bucket {buckets[-1]}")
+
+
+def nnz_bucket(nnz: int) -> int:
+    return bucket_for(nnz, NNZ_BUCKETS)
+
+
+def vec_bucket(n: int) -> int:
+    return bucket_for(n, VEC_BUCKETS)
+
+
+def spmv_name(nnz_pad: int, n_pad: int, m_pad: int) -> str:
+    return f"spmv_partial_nnz{nnz_pad}_n{n_pad}_m{m_pad}"
+
+
+def spmm_name(nnz_pad: int, n_pad: int, m_pad: int) -> str:
+    return f"spmm_partial_nnz{nnz_pad}_n{n_pad}_m{m_pad}_k{SPMM_K}"
+
+
+def axpby_name(m_pad: int) -> str:
+    return f"axpby_m{m_pad}"
+
+
+def reduce_name(m_pad: int) -> str:
+    return f"reduce_k{REDUCE_K}_m{m_pad}"
+
+
+def all_artifacts() -> list[dict]:
+    """Enumerate every artifact in the grid with its metadata record.
+
+    The returned dicts become the entries of ``artifacts/manifest.json``.
+    """
+    arts: list[dict] = []
+    for nnz_pad in NNZ_BUCKETS:
+        for n_pad in VEC_BUCKETS:
+            for m_pad in VEC_BUCKETS:
+                name = spmv_name(nnz_pad, n_pad, m_pad)
+                arts.append(
+                    {
+                        "name": name,
+                        "kind": "spmv_partial",
+                        "file": f"{name}.hlo.txt",
+                        "nnz_pad": nnz_pad,
+                        "n_pad": n_pad,
+                        "m_pad": m_pad,
+                        "tile": min(TILE, nnz_pad),
+                    }
+                )
+    for nnz_pad in NNZ_BUCKETS:
+        for n_pad in SPMM_VEC_BUCKETS:
+            for m_pad in SPMM_VEC_BUCKETS:
+                name = spmm_name(nnz_pad, n_pad, m_pad)
+                arts.append(
+                    {
+                        "name": name,
+                        "kind": "spmm_partial",
+                        "file": f"{name}.hlo.txt",
+                        "nnz_pad": nnz_pad,
+                        "n_pad": n_pad,
+                        "m_pad": m_pad,
+                        "k": SPMM_K,
+                        "tile": min(TILE, nnz_pad),
+                    }
+                )
+    for m_pad in VEC_BUCKETS:
+        name = axpby_name(m_pad)
+        arts.append(
+            {"name": name, "kind": "axpby", "file": f"{name}.hlo.txt", "m_pad": m_pad}
+        )
+    for m_pad in VEC_BUCKETS:
+        name = reduce_name(m_pad)
+        arts.append(
+            {
+                "name": name,
+                "kind": "reduce_partials",
+                "file": f"{name}.hlo.txt",
+                "m_pad": m_pad,
+                "k": REDUCE_K,
+            }
+        )
+    return arts

@@ -1,0 +1,53 @@
+"""Pure-jnp correctness oracles for the MSREP kernels.
+
+These are the ground truth the Pallas kernels (``spmv.py``) are validated
+against in ``python/tests``.  They deliberately use the most direct jnp
+formulation — no tiling, no pallas — so a bug cannot be shared between
+implementation and oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmv_stream_ref(val, col_idx, row_idx, x, m):
+    """COO-stream SpMV oracle: ``y[r] = sum_{k: row_idx[k]==r} val[k] * x[col_idx[k]]``.
+
+    This is the semantics of one MSREP partition: a contiguous slice of the
+    nnz stream with *local* row ids, producing a partial result of length
+    ``m`` (the padded local row count).  Zero-padded ``val`` entries
+    contribute nothing regardless of their index entries.
+    """
+    prod = val * x[col_idx]
+    return jnp.zeros((m,), dtype=val.dtype).at[row_idx].add(prod)
+
+
+def spmv_csr_ref(val, col_idx, row_ptr, x):
+    """CSR SpMV oracle ``y = A @ x`` (loop form, mirrors paper Alg. 1 with
+    alpha=1, beta=0). Only used for small test matrices."""
+    m = row_ptr.shape[0] - 1
+    rows = []
+    for i in range(m):
+        s, e = int(row_ptr[i]), int(row_ptr[i + 1])
+        rows.append(jnp.sum(val[s:e] * x[col_idx[s:e]]))
+    return jnp.stack(rows) if rows else jnp.zeros((0,), dtype=val.dtype)
+
+
+def axpby_ref(a, x, b, y):
+    """``a*x + b*y`` elementwise — the merge epilogue."""
+    return a * x + b * y
+
+
+def reduce_partials_ref(parts):
+    """Sum a ``(k, m)`` stack of partial result vectors along axis 0 —
+    the column-based (pCSC) merge tree reduction."""
+    return jnp.sum(parts, axis=0)
+
+
+def dense_spmv_ref(dense, x, alpha=1.0, beta=0.0, y=None):
+    """Full GEMV semantics ``y = alpha*A@x + beta*y`` on a dense matrix."""
+    base = alpha * (dense @ x)
+    if y is None:
+        return base
+    return base + beta * y

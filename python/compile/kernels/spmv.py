@@ -1,0 +1,134 @@
+"""Layer-1 Pallas SpMV kernel: tiled gather + segment-reduce over the nnz stream.
+
+Hardware-adaptation rationale (DESIGN.md §4): the paper's per-GPU kernel is
+cuSparse CSR SpMV — warp-per-row scheduling, shared-memory staging, coalesced
+HBM loads.  The transferable insight is *contiguous nnz-range processing with
+balanced work per compute unit*, which is exactly what the pCSR/pCOO formats
+expose.  On TPU the natural expression is:
+
+  * the nnz stream (val / col_idx / row_idx) is tiled into fixed-size VMEM
+    blocks via ``BlockSpec`` — one contiguous nnz-range per grid step, the
+    same decomposition MSREP applies one level up (per GPU);
+  * the dense ``x`` vector and the ``y`` accumulator stay resident in VMEM
+    across grid steps (constant ``index_map``), mirroring cuSparse's reliance
+    on caching x in L2/texture memory;
+  * per tile: gather ``x[col]``, multiply, scatter-add by row id into the
+    resident accumulator — the vector-unit-friendly form of the warp-level
+    segmented reduction (no ballot/shuffle primitives on TPU).
+
+SpMV contains no matmul, so the MXU is idle by design; the kernel is
+VPU/memory bound.  DESIGN.md §8 reports the VMEM footprint and bytes/nnz
+roofline per bucket instead of MXU utilization.
+
+``interpret=True`` is mandatory in this environment: the CPU PJRT plugin
+cannot execute Mosaic custom-calls.  Interpret-mode lowering produces plain
+HLO (a while-loop over grid steps) that the rust runtime loads and runs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import buckets
+
+
+def _spmv_kernel(val_ref, col_ref, row_ref, x_ref, y_ref):
+    """One grid step: process a TILE-sized contiguous slice of the nnz stream.
+
+    Refs (all VMEM blocks):
+      val_ref : (TILE,)  f32   non-zero values (zero-padded)
+      col_ref : (TILE,)  i32   column index of each nnz (0-padded, in range)
+      row_ref : (TILE,)  i32   LOCAL row index of each nnz (0-padded)
+      x_ref   : (N_PAD,) f32   dense input vector, resident across steps
+      y_ref   : (M_PAD,) f32   output accumulator, resident across steps
+    """
+    step = pl.program_id(0)
+
+    # First visit of the resident y block: clear the accumulator.
+    @pl.when(step == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    val = val_ref[...]
+    col = col_ref[...]
+    row = row_ref[...]
+    x = x_ref[...]
+
+    # Gather + multiply: the flops of SpMV.  Padding lanes have val == 0 so
+    # their (valid-index) gathers contribute nothing.
+    prod = val * x[col]
+
+    # Segment reduction by local row id, accumulated into the resident block.
+    # ``.at[].add`` is the TPU-friendly scatter-add; on real hardware Mosaic
+    # lowers it onto the VPU, in interpret mode it is an XLA scatter.
+    y_ref[...] = y_ref[...].at[row].add(prod)
+
+
+@functools.partial(jax.jit, static_argnames=("nnz_pad", "n_pad", "m_pad", "tile"))
+def spmv_partial(val, col_idx, row_idx, x, *, nnz_pad, n_pad, m_pad, tile=None):
+    """Partial SpMV over a padded nnz stream: ``y[r] += sum val*x[col]`` per row.
+
+    This is the single-device kernel MSREP schedules: it computes the partial
+    result of ONE partition (pCSR / pCOO with local row ids, or pCSC with
+    global row ids — the stream formulation covers all three, see
+    DESIGN.md §2).  alpha/beta handling lives in the merge step (paper
+    Alg. 3/5/7), not here.
+
+    Args:
+      val:     f32[nnz_pad]  values, zero-padded.
+      col_idx: i32[nnz_pad]  column ids into x, padding entries in [0, n_pad).
+      row_idx: i32[nnz_pad]  local row ids into y, padding entries in [0, m_pad).
+      x:       f32[n_pad]    dense input vector (padded with zeros).
+    Returns:
+      f32[m_pad] partial result.
+    """
+    if tile is None:
+        tile = min(buckets.TILE, nnz_pad)
+    assert nnz_pad % tile == 0, (nnz_pad, tile)
+    grid = (nnz_pad // tile,)
+
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),      # val   — streamed
+            pl.BlockSpec((tile,), lambda i: (i,)),      # col   — streamed
+            pl.BlockSpec((tile,), lambda i: (i,)),      # row   — streamed
+            pl.BlockSpec((n_pad,), lambda i: (0,)),     # x     — resident
+        ],
+        out_specs=pl.BlockSpec((m_pad,), lambda i: (0,)),  # y  — resident
+        out_shape=jax.ShapeDtypeStruct((m_pad,), val.dtype),
+        interpret=True,
+    )(val, col_idx, row_idx, x)
+
+
+def vmem_footprint_bytes(nnz_pad: int, n_pad: int, m_pad: int, tile: int | None = None) -> dict:
+    """Estimate the VMEM working set of one grid step (DESIGN.md §8).
+
+    Streams are double-buffered on real hardware, so they count twice; the
+    resident x / y blocks count once.
+    """
+    if tile is None:
+        tile = min(buckets.TILE, nnz_pad)
+    stream = 2 * tile * 4 * 3          # val, col, row — double buffered
+    resident = (n_pad + m_pad) * 4     # x + y
+    total = stream + resident
+    return {
+        "tile": tile,
+        "stream_bytes": stream,
+        "resident_bytes": resident,
+        "total_bytes": total,
+        "fits_16mib_vmem": total <= 16 * 1024 * 1024,
+    }
+
+
+def bytes_per_nnz(nnz: int, m: int, n: int) -> float:
+    """Memory-roofline bytes touched per non-zero for the stream kernel:
+    12 B of stream (val+col+row) + amortized x/y traffic."""
+    if nnz == 0:
+        return 0.0
+    return 12.0 + 4.0 * (m + n) / nnz

@@ -1,0 +1,150 @@
+"""Layer-2 JAX compute graphs, AOT-lowered to HLO artifacts for the rust runtime.
+
+Three graph families (see DESIGN.md §4), each jitted per shape bucket:
+
+  * ``spmv_partial_graph`` — wraps the L1 Pallas kernel; computes the partial
+    result of one MSREP partition.  alpha/beta are *runtime scalar inputs*
+    (rank-0 parameters), so one executable serves every (alpha, beta) — the
+    scaling fuses into the same HLO module.
+  * ``axpby_graph`` — ``y = a*p + b*y`` merge epilogue (used by the baseline
+    path and the row-merge fix-up).
+  * ``reduce_partials_graph`` — tree-sum of up to K partial vectors, the
+    column-based (pCSC) merge that the paper runs on one GPU (§4.3).
+
+Everything here is build-time only; the rust coordinator calls the compiled
+artifacts through PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import buckets
+from .kernels import spmm, spmv
+
+
+def spmv_partial_graph(nnz_pad: int, n_pad: int, m_pad: int, tile: int | None = None):
+    """Build the jittable partition-SpMV graph for one shape bucket.
+
+    Signature (all parameters, in artifact input order):
+      val:     f32[nnz_pad]
+      col_idx: i32[nnz_pad]
+      row_idx: i32[nnz_pad]
+      x:       f32[n_pad]
+      alpha:   f32[]          scale on the product (paper Alg. 1)
+    Returns a 1-tuple (rust side unwraps with ``to_tuple1``):
+      y_partial: f32[m_pad] = alpha * partition_spmv(...)
+    """
+
+    def fn(val, col_idx, row_idx, x, alpha):
+        y = spmv.spmv_partial(
+            val, col_idx, row_idx, x,
+            nnz_pad=nnz_pad, n_pad=n_pad, m_pad=m_pad, tile=tile,
+        )
+        return (alpha * y,)
+
+    return fn
+
+
+def spmm_partial_graph(nnz_pad: int, n_pad: int, m_pad: int, k: int, tile: int | None = None):
+    """Partition-SpMM graph (paper §2.3 multi-vector extension).
+
+    Signature:
+      val: f32[nnz_pad], col_idx/row_idx: i32[nnz_pad],
+      x: f32[n_pad, k], alpha: f32[]
+    Returns (y_partial: f32[m_pad, k],).
+    """
+
+    def fn(val, col_idx, row_idx, x, alpha):
+        y = spmm.spmm_partial(
+            val, col_idx, row_idx, x,
+            nnz_pad=nnz_pad, n_pad=n_pad, m_pad=m_pad, k=k, tile=tile,
+        )
+        return (alpha * y,)
+
+    return fn
+
+
+def spmm_abstract_args(nnz_pad: int, n_pad: int, m_pad: int, k: int):
+    f32, i32 = jnp.float32, jnp.int32
+    return (
+        jax.ShapeDtypeStruct((nnz_pad,), f32),
+        jax.ShapeDtypeStruct((nnz_pad,), i32),
+        jax.ShapeDtypeStruct((nnz_pad,), i32),
+        jax.ShapeDtypeStruct((n_pad, k), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )
+
+
+def axpby_graph():
+    """``y_out = a*p + b*y`` — merge epilogue. Shapes: p, y f32[m_pad]; a, b f32[]."""
+
+    def fn(a, p, b, y):
+        return (a * p + b * y,)
+
+    return fn
+
+
+def reduce_partials_graph():
+    """Sum k partial vectors: parts f32[k, m_pad] -> f32[m_pad].
+
+    The coordinator zero-pads unused slots, so one k=REDUCE_K executable
+    serves any 1..=k fan-in.
+    """
+
+    def fn(parts):
+        return (jnp.sum(parts, axis=0),)
+
+    return fn
+
+
+def spmv_abstract_args(nnz_pad: int, n_pad: int, m_pad: int):
+    f32, i32 = jnp.float32, jnp.int32
+    return (
+        jax.ShapeDtypeStruct((nnz_pad,), f32),
+        jax.ShapeDtypeStruct((nnz_pad,), i32),
+        jax.ShapeDtypeStruct((nnz_pad,), i32),
+        jax.ShapeDtypeStruct((n_pad,), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )
+
+
+def axpby_abstract_args(m_pad: int):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((), f32),
+        jax.ShapeDtypeStruct((m_pad,), f32),
+        jax.ShapeDtypeStruct((), f32),
+        jax.ShapeDtypeStruct((m_pad,), f32),
+    )
+
+
+def reduce_abstract_args(m_pad: int, k: int = buckets.REDUCE_K):
+    return (jax.ShapeDtypeStruct((k, m_pad), jnp.float32),)
+
+
+def lower_artifact(entry: dict):
+    """Lower one manifest entry to a ``jax.stages.Lowered`` object."""
+    kind = entry["kind"]
+    if kind == "spmv_partial":
+        fn = spmv_partial_graph(
+            entry["nnz_pad"], entry["n_pad"], entry["m_pad"], entry.get("tile")
+        )
+        args = spmv_abstract_args(entry["nnz_pad"], entry["n_pad"], entry["m_pad"])
+    elif kind == "spmm_partial":
+        fn = spmm_partial_graph(
+            entry["nnz_pad"], entry["n_pad"], entry["m_pad"], entry["k"], entry.get("tile")
+        )
+        args = spmm_abstract_args(
+            entry["nnz_pad"], entry["n_pad"], entry["m_pad"], entry["k"]
+        )
+    elif kind == "axpby":
+        fn = axpby_graph()
+        args = axpby_abstract_args(entry["m_pad"])
+    elif kind == "reduce_partials":
+        fn = reduce_partials_graph()
+        args = reduce_abstract_args(entry["m_pad"], entry["k"])
+    else:
+        raise ValueError(f"unknown artifact kind: {kind}")
+    return jax.jit(fn).lower(*args)

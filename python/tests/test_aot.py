@@ -1,0 +1,94 @@
+"""AOT pipeline tests: HLO-text emission, manifest schema, incrementality."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from compile import aot, buckets, model
+
+
+class TestHloText:
+    def test_hlo_text_structure(self):
+        entry = next(e for e in buckets.all_artifacts() if e["kind"] == "axpby")
+        text = aot.to_hlo_text(model.lower_artifact(entry))
+        # HLO text (not proto) is the interchange format: the rust loader
+        # parses this with HloModuleProto::from_text_file.
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        assert f"f32[{entry['m_pad']}]" in text
+
+    def test_return_tuple_layout(self):
+        """Outputs are 1-tuples so rust unwraps with to_tuple1()."""
+        entry = next(e for e in buckets.all_artifacts() if e["kind"] == "reduce_partials")
+        text = aot.to_hlo_text(model.lower_artifact(entry))
+        compact = text.replace(" ", "")
+        assert f"->(f32[{entry['m_pad']}]{{0}})" in compact
+
+
+class TestBuild:
+    def test_quick_build_and_manifest(self, tmp_path):
+        out = str(tmp_path / "arts")
+        manifest = aot.build(out, quick=True, verbose=False)
+        # one artifact per kind
+        kinds = {a["kind"] for a in aot.quick_subset(buckets.all_artifacts())}
+        assert kinds == {"spmv_partial", "spmm_partial", "axpby", "reduce_partials"}
+        files = os.listdir(out)
+        assert "manifest.json" in files
+        for a in aot.quick_subset(buckets.all_artifacts()):
+            assert a["file"] in files
+        with open(os.path.join(out, "manifest.json")) as f:
+            on_disk = json.load(f)
+        assert on_disk["version"] == aot.MANIFEST_VERSION
+        assert on_disk["nnz_buckets"] == buckets.NNZ_BUCKETS
+        assert on_disk["vec_buckets"] == buckets.VEC_BUCKETS
+        assert on_disk == json.loads(json.dumps(manifest))
+
+    def test_incremental_skips_existing(self, tmp_path):
+        out = str(tmp_path / "arts")
+        aot.build(out, quick=True, verbose=False)
+        entry = aot.quick_subset(buckets.all_artifacts())[0]
+        path = os.path.join(out, entry["file"])
+        mtime = os.path.getmtime(path)
+        aot.build(out, quick=True, verbose=False)
+        assert os.path.getmtime(path) == mtime  # untouched
+
+    def test_force_rebuilds(self, tmp_path):
+        out = str(tmp_path / "arts")
+        aot.build(out, quick=True, verbose=False)
+        entry = aot.quick_subset(buckets.all_artifacts())[0]
+        path = os.path.join(out, entry["file"])
+        with open(path, "w") as f:
+            f.write("garbage")
+        aot.build(out, quick=True, force=True, verbose=False)
+        with open(path) as f:
+            assert f.read().startswith("HloModule")
+
+    def test_manifest_artifact_records_complete(self, tmp_path):
+        for a in buckets.all_artifacts():
+            assert a["kind"] in ("spmv_partial", "spmm_partial", "axpby", "reduce_partials")
+            if a["kind"] == "spmv_partial":
+                assert {"nnz_pad", "n_pad", "m_pad", "tile"} <= a.keys()
+            elif a["kind"] == "spmm_partial":
+                assert {"nnz_pad", "n_pad", "m_pad", "k", "tile"} <= a.keys()
+            else:
+                assert "m_pad" in a
+
+
+class TestRepoArtifacts:
+    """The checked-out artifacts/ dir (built by `make artifacts`) is coherent."""
+
+    ARTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    def test_manifest_matches_grid(self):
+        mpath = os.path.join(self.ARTS, "manifest.json")
+        if not os.path.exists(mpath):
+            import pytest
+
+            pytest.skip("artifacts not built yet")
+        with open(mpath) as f:
+            m = json.load(f)
+        assert m["nnz_buckets"] == buckets.NNZ_BUCKETS
+        assert m["vec_buckets"] == buckets.VEC_BUCKETS
+        for a in m["artifacts"]:
+            assert os.path.exists(os.path.join(self.ARTS, a["file"])), a["name"]

@@ -1,0 +1,72 @@
+"""Bucket-grid invariants — the contract shared with rust/src/runtime/buckets.rs."""
+
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import buckets
+
+
+class TestBucketFor:
+    def test_exact_match_returns_bucket(self):
+        for b in buckets.NNZ_BUCKETS:
+            assert buckets.nnz_bucket(b) == b
+
+    def test_zero_maps_to_smallest(self):
+        assert buckets.nnz_bucket(0) == buckets.NNZ_BUCKETS[0]
+        assert buckets.vec_bucket(0) == buckets.VEC_BUCKETS[0]
+
+    def test_one_past_bucket_rounds_up(self):
+        assert buckets.nnz_bucket(buckets.NNZ_BUCKETS[0] + 1) == buckets.NNZ_BUCKETS[1]
+
+    def test_overflow_raises(self):
+        with pytest.raises(ValueError):
+            buckets.nnz_bucket(buckets.NNZ_BUCKETS[-1] + 1)
+
+    def test_negative_raises(self):
+        with pytest.raises(ValueError):
+            buckets.nnz_bucket(-1)
+
+    @given(v=st.integers(0, buckets.NNZ_BUCKETS[-1]))
+    def test_bucket_is_smallest_upper_bound(self, v):
+        b = buckets.nnz_bucket(v)
+        assert b >= v
+        smaller = [x for x in buckets.NNZ_BUCKETS if x < b]
+        assert all(x < v for x in smaller)
+
+    @given(v=st.integers(1, buckets.NNZ_BUCKETS[-1]))
+    def test_padding_waste_bounded(self, v):
+        """x4 spacing => padded size < 4x the request (the §Perf waste bound)."""
+        assert buckets.nnz_bucket(v) < 4 * v + buckets.NNZ_BUCKETS[0]
+
+
+class TestGridEnumeration:
+    def test_counts(self):
+        arts = buckets.all_artifacts()
+        n_spmv = len(buckets.NNZ_BUCKETS) * len(buckets.VEC_BUCKETS) ** 2
+        assert len([a for a in arts if a["kind"] == "spmv_partial"]) == n_spmv
+        assert len([a for a in arts if a["kind"] == "axpby"]) == len(buckets.VEC_BUCKETS)
+        assert len([a for a in arts if a["kind"] == "reduce_partials"]) == len(buckets.VEC_BUCKETS)
+
+    def test_names_unique(self):
+        arts = buckets.all_artifacts()
+        names = [a["name"] for a in arts]
+        assert len(names) == len(set(names))
+        files = [a["file"] for a in arts]
+        assert len(files) == len(set(files))
+
+    def test_tile_divides_nnz_pad(self):
+        for a in buckets.all_artifacts():
+            if a["kind"] == "spmv_partial":
+                assert a["nnz_pad"] % a["tile"] == 0
+
+    def test_buckets_sorted_ascending(self):
+        assert buckets.NNZ_BUCKETS == sorted(buckets.NNZ_BUCKETS)
+        assert buckets.VEC_BUCKETS == sorted(buckets.VEC_BUCKETS)
+        assert len(set(buckets.NNZ_BUCKETS)) == len(buckets.NNZ_BUCKETS)
+
+    def test_name_roundtrip(self):
+        assert buckets.spmv_name(1, 2, 3) == "spmv_partial_nnz1_n2_m3"
+        assert buckets.axpby_name(7) == "axpby_m7"
+        assert buckets.reduce_name(9) == f"reduce_k{buckets.REDUCE_K}_m9"

@@ -1,0 +1,218 @@
+"""L1 Pallas kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps the shape/sparsity/tile space; the fixed cases pin the
+regressions we care most about (padding semantics, duplicates, empty input).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import buckets
+from compile.kernels import ref, spmv
+
+F32 = np.float32
+I32 = np.int32
+
+
+def make_stream(rng, nnz, n, m, nnz_pad):
+    """Random padded COO stream with values in [-1, 1]."""
+    val = np.zeros(nnz_pad, F32)
+    col = np.zeros(nnz_pad, I32)
+    row = np.zeros(nnz_pad, I32)
+    if nnz:
+        val[:nnz] = rng.uniform(-1.0, 1.0, nnz).astype(F32)
+        col[:nnz] = rng.integers(0, n, nnz)
+        row[:nnz] = rng.integers(0, m, nnz)
+    return val, col, row
+
+
+def run_kernel(val, col, row, x, nnz_pad, n_pad, m_pad, tile):
+    return np.asarray(
+        spmv.spmv_partial(
+            jnp.array(val), jnp.array(col), jnp.array(row), jnp.array(x),
+            nnz_pad=nnz_pad, n_pad=n_pad, m_pad=m_pad, tile=tile,
+        )
+    )
+
+
+def run_ref(val, col, row, x, m_pad):
+    return np.asarray(
+        ref.spmv_stream_ref(jnp.array(val), jnp.array(col), jnp.array(row), jnp.array(x), m_pad)
+    )
+
+
+class TestFixedCases:
+    def test_identity_matrix(self):
+        """A = I_8 => y == x (padded)."""
+        nnz_pad = n_pad = m_pad = 64
+        val = np.zeros(nnz_pad, F32)
+        col = np.zeros(nnz_pad, I32)
+        row = np.zeros(nnz_pad, I32)
+        val[:8] = 1.0
+        col[:8] = np.arange(8)
+        row[:8] = np.arange(8)
+        x = np.zeros(n_pad, F32)
+        x[:8] = np.arange(1, 9)
+        y = run_kernel(val, col, row, x, nnz_pad, n_pad, m_pad, tile=16)
+        np.testing.assert_allclose(y[:8], x[:8])
+        np.testing.assert_allclose(y[8:], 0.0)
+
+    def test_paper_example_matrix(self):
+        """The 6x6 example matrix of paper Fig. 1, y = A @ ones."""
+        dense = np.array(
+            [
+                [10, 0, 0, 0, -2, 0],
+                [3, 9, 0, 0, 0, 3],
+                [0, 7, 8, 7, 0, 0],
+                [3, 0, 8, 7, 5, 0],
+                [0, 8, 0, 9, 9, 13],
+                [0, 4, 0, 0, 2, -1],
+            ],
+            dtype=F32,
+        )
+        rr, cc = np.nonzero(dense)
+        nnz = len(rr)
+        nnz_pad = n_pad = m_pad = 32
+        val = np.zeros(nnz_pad, F32)
+        col = np.zeros(nnz_pad, I32)
+        row = np.zeros(nnz_pad, I32)
+        val[:nnz] = dense[rr, cc]
+        col[:nnz] = cc
+        row[:nnz] = rr
+        x = np.zeros(n_pad, F32)
+        x[:6] = 1.0
+        y = run_kernel(val, col, row, x, nnz_pad, n_pad, m_pad, tile=8)
+        np.testing.assert_allclose(y[:6], dense.sum(axis=1))
+
+    def test_all_padding_is_zero(self):
+        """A fully padded (nnz=0) stream must produce exactly zero."""
+        nnz_pad, n_pad, m_pad = 128, 64, 64
+        val = np.zeros(nnz_pad, F32)
+        col = np.zeros(nnz_pad, I32)
+        row = np.zeros(nnz_pad, I32)
+        x = np.full(n_pad, 7.0, F32)  # nonzero x exercises val==0 masking
+        y = run_kernel(val, col, row, x, nnz_pad, n_pad, m_pad, tile=32)
+        np.testing.assert_array_equal(y, np.zeros(m_pad, F32))
+
+    def test_duplicate_coordinates_accumulate(self):
+        """Multiple stream entries on the same (row, col) must sum."""
+        nnz_pad = n_pad = m_pad = 16
+        val = np.zeros(nnz_pad, F32)
+        col = np.zeros(nnz_pad, I32)
+        row = np.zeros(nnz_pad, I32)
+        val[:4] = [1.0, 2.0, 3.0, 4.0]
+        col[:4] = [5, 5, 5, 5]
+        row[:4] = [3, 3, 3, 3]
+        x = np.zeros(n_pad, F32)
+        x[5] = 2.0
+        y = run_kernel(val, col, row, x, nnz_pad, n_pad, m_pad, tile=16)
+        assert y[3] == pytest.approx(20.0)
+        assert np.count_nonzero(y) == 1
+
+    def test_single_tile_equals_multi_tile(self):
+        """Tiling must not change the result (accumulator correctness)."""
+        rng = np.random.default_rng(42)
+        nnz_pad, n_pad, m_pad = 256, 64, 64
+        val, col, row = make_stream(rng, 200, 60, 60, nnz_pad)
+        x = rng.standard_normal(n_pad).astype(F32)
+        y1 = run_kernel(val, col, row, x, nnz_pad, n_pad, m_pad, tile=256)
+        y2 = run_kernel(val, col, row, x, nnz_pad, n_pad, m_pad, tile=32)
+        np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
+
+    def test_row_concentration(self):
+        """Power-law extreme: every nnz lands in one row (worst-case skew)."""
+        rng = np.random.default_rng(3)
+        nnz_pad, n_pad, m_pad = 512, 128, 128
+        val = np.zeros(nnz_pad, F32)
+        col = np.zeros(nnz_pad, I32)
+        row = np.zeros(nnz_pad, I32)
+        val[:500] = rng.uniform(-1, 1, 500).astype(F32)
+        col[:500] = rng.integers(0, 128, 500)
+        row[:500] = 17
+        x = rng.standard_normal(n_pad).astype(F32)
+        y = run_kernel(val, col, row, x, nnz_pad, n_pad, m_pad, tile=64)
+        yr = run_ref(val, col, row, x, m_pad)
+        np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+
+    def test_matches_csr_oracle(self):
+        """Stream kernel on a CSR-expanded matrix == row-loop CSR oracle."""
+        rng = np.random.default_rng(9)
+        m, n, nnz = 40, 50, 300
+        nnz_pad, n_pad, m_pad = 512, 64, 64
+        # random CSR
+        counts = rng.multinomial(nnz, np.ones(m) / m)
+        row_ptr = np.zeros(m + 1, I32)
+        np.cumsum(counts, out=row_ptr[1:])
+        col_idx = rng.integers(0, n, nnz).astype(I32)
+        vals = rng.uniform(-1, 1, nnz).astype(F32)
+        x = rng.standard_normal(n).astype(F32)
+        y_csr = np.asarray(
+            ref.spmv_csr_ref(jnp.array(vals), jnp.array(col_idx), jnp.array(row_ptr), jnp.array(x))
+        )
+        # expand to stream
+        row_ids = np.repeat(np.arange(m, dtype=I32), counts)
+        val_p = np.zeros(nnz_pad, F32); val_p[:nnz] = vals
+        col_p = np.zeros(nnz_pad, I32); col_p[:nnz] = col_idx
+        row_p = np.zeros(nnz_pad, I32); row_p[:nnz] = row_ids
+        x_p = np.zeros(n_pad, F32); x_p[:n] = x
+        y = run_kernel(val_p, col_p, row_p, x_p, nnz_pad, n_pad, m_pad, tile=128)
+        np.testing.assert_allclose(y[:m], y_csr, rtol=1e-4, atol=1e-5)
+
+
+class TestHypothesisSweep:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        nnz_frac=st.floats(0.0, 1.0),
+        shape=st.sampled_from([(64, 64, 64), (256, 64, 64), (256, 128, 32), (1024, 256, 256)]),
+        tile_div=st.sampled_from([1, 2, 4, 8]),
+    )
+    def test_random_streams(self, seed, nnz_frac, shape, tile_div):
+        nnz_pad, n_pad, m_pad = shape
+        tile = nnz_pad // tile_div
+        rng = np.random.default_rng(seed)
+        nnz = int(nnz_frac * nnz_pad)
+        n = rng.integers(1, n_pad + 1)
+        m = rng.integers(1, m_pad + 1)
+        val, col, row = make_stream(rng, nnz, n, m, nnz_pad)
+        x = np.zeros(n_pad, F32)
+        x[:n] = rng.standard_normal(n)
+        y = run_kernel(val, col, row, x, nnz_pad, n_pad, m_pad, tile)
+        yr = run_ref(val, col, row, x, m_pad)
+        np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_linearity_in_x(self, seed):
+        """SpMV is linear: K(2x) == 2*K(x)."""
+        rng = np.random.default_rng(seed)
+        nnz_pad, n_pad, m_pad = 256, 64, 64
+        val, col, row = make_stream(rng, 200, 64, 64, nnz_pad)
+        x = rng.standard_normal(n_pad).astype(F32)
+        y1 = run_kernel(val, col, row, x, nnz_pad, n_pad, m_pad, 64)
+        y2 = run_kernel(val, col, row, (2.0 * x).astype(F32), nnz_pad, n_pad, m_pad, 64)
+        np.testing.assert_allclose(y2, 2.0 * y1, rtol=1e-4, atol=1e-4)
+
+
+class TestVmemModel:
+    def test_all_buckets_fit_vmem(self):
+        """Every bucket in the AOT grid must fit the 16 MiB VMEM budget."""
+        for e in buckets.all_artifacts():
+            if e["kind"] != "spmv_partial":
+                continue
+            fp = spmv.vmem_footprint_bytes(e["nnz_pad"], e["n_pad"], e["m_pad"], e["tile"])
+            assert fp["fits_16mib_vmem"], e
+
+    def test_footprint_monotone_in_tile(self):
+        a = spmv.vmem_footprint_bytes(65536, 4096, 4096, tile=1024)
+        b = spmv.vmem_footprint_bytes(65536, 4096, 4096, tile=16384)
+        assert a["total_bytes"] < b["total_bytes"]
+
+    def test_bytes_per_nnz_roofline(self):
+        # Dense-ish stream: amortized x/y traffic vanishes, -> 12 B/nnz.
+        assert spmv.bytes_per_nnz(10**9, 10**3, 10**3) == pytest.approx(12.0, abs=0.1)
+        assert spmv.bytes_per_nnz(0, 10, 10) == 0.0

@@ -1,0 +1,128 @@
+"""L2 graph tests: alpha scaling, merge epilogues, abstract-arg consistency."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import buckets, model
+from compile.kernels import ref
+
+F32 = np.float32
+I32 = np.int32
+
+
+def _stream(seed, nnz, nnz_pad, n, m):
+    rng = np.random.default_rng(seed)
+    val = np.zeros(nnz_pad, F32); val[:nnz] = rng.uniform(-1, 1, nnz)
+    col = np.zeros(nnz_pad, I32); col[:nnz] = rng.integers(0, n, nnz)
+    row = np.zeros(nnz_pad, I32); row[:nnz] = rng.integers(0, m, nnz)
+    return val, col, row
+
+
+class TestSpmvPartialGraph:
+    def test_alpha_scales_output(self):
+        nnz_pad = n_pad = m_pad = 64
+        fn = model.spmv_partial_graph(nnz_pad, n_pad, m_pad, tile=32)
+        val, col, row = _stream(0, 50, nnz_pad, 60, 60)
+        x = np.random.default_rng(1).standard_normal(n_pad).astype(F32)
+        (y1,) = fn(val, col, row, x, jnp.float32(1.0))
+        (y3,) = fn(val, col, row, x, jnp.float32(3.0))
+        np.testing.assert_allclose(np.asarray(y3), 3.0 * np.asarray(y1), rtol=1e-5, atol=1e-5)
+
+    def test_alpha_zero_kills_output(self):
+        nnz_pad = n_pad = m_pad = 64
+        fn = model.spmv_partial_graph(nnz_pad, n_pad, m_pad, tile=64)
+        val, col, row = _stream(2, 64, nnz_pad, 64, 64)
+        x = np.ones(n_pad, F32)
+        (y,) = fn(val, col, row, x, jnp.float32(0.0))
+        np.testing.assert_array_equal(np.asarray(y), np.zeros(m_pad, F32))
+
+    def test_matches_oracle_through_graph(self):
+        nnz_pad, n_pad, m_pad = 256, 64, 64
+        fn = model.spmv_partial_graph(nnz_pad, n_pad, m_pad, tile=64)
+        val, col, row = _stream(5, 200, nnz_pad, 64, 64)
+        x = np.random.default_rng(6).standard_normal(n_pad).astype(F32)
+        (y,) = fn(val, col, row, x, jnp.float32(2.5))
+        yr = 2.5 * np.asarray(
+            ref.spmv_stream_ref(jnp.array(val), jnp.array(col), jnp.array(row), jnp.array(x), m_pad)
+        )
+        np.testing.assert_allclose(np.asarray(y), yr, rtol=1e-4, atol=1e-4)
+
+    def test_abstract_args_shapes(self):
+        args = model.spmv_abstract_args(128, 64, 32)
+        assert [a.shape for a in args] == [(128,), (128,), (128,), (64,), ()]
+        assert args[1].dtype == jnp.int32 and args[0].dtype == jnp.float32
+
+
+class TestAxpbyGraph:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        a=st.floats(-10, 10), b=st.floats(-10, 10), seed=st.integers(0, 2**31 - 1)
+    )
+    def test_matches_ref(self, a, b, seed):
+        rng = np.random.default_rng(seed)
+        p = rng.standard_normal(32).astype(F32)
+        y = rng.standard_normal(32).astype(F32)
+        fn = model.axpby_graph()
+        (out,) = fn(jnp.float32(a), p, jnp.float32(b), y)
+        np.testing.assert_allclose(
+            np.asarray(out),
+            np.asarray(ref.axpby_ref(F32(a), jnp.array(p), F32(b), jnp.array(y))),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_beta_zero_is_pure_scale(self):
+        fn = model.axpby_graph()
+        p = np.arange(8, dtype=F32)
+        (out,) = fn(jnp.float32(2.0), p, jnp.float32(0.0), np.full(8, 999.0, F32))
+        np.testing.assert_allclose(np.asarray(out), 2.0 * p)
+
+
+class TestReduceGraph:
+    def test_zero_padded_slots_ignored(self):
+        fn = model.reduce_partials_graph()
+        parts = np.zeros((buckets.REDUCE_K, 16), F32)
+        parts[0] = 1.0
+        parts[1] = 2.0
+        (out,) = fn(parts)
+        np.testing.assert_allclose(np.asarray(out), np.full(16, 3.0, F32))
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), k_used=st.integers(1, buckets.REDUCE_K))
+    def test_matches_ref(self, seed, k_used):
+        rng = np.random.default_rng(seed)
+        parts = np.zeros((buckets.REDUCE_K, 24), F32)
+        parts[:k_used] = rng.standard_normal((k_used, 24))
+        fn = model.reduce_partials_graph()
+        (out,) = fn(parts)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.reduce_partials_ref(jnp.array(parts))),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+class TestLowering:
+    """Every artifact kind must lower; the HLO must have the declared layout."""
+
+    @pytest.mark.parametrize("kind", ["spmv_partial", "axpby", "reduce_partials"])
+    def test_lower_smallest_bucket(self, kind):
+        entry = next(e for e in buckets.all_artifacts() if e["kind"] == kind)
+        lowered = model.lower_artifact(entry)
+        hlo = str(lowered.compiler_ir("stablehlo"))
+        assert "func.func public @main" in hlo
+
+    def test_spmv_hlo_io_shapes(self):
+        entry = {
+            "kind": "spmv_partial", "nnz_pad": 4096, "n_pad": 4096,
+            "m_pad": 4096, "tile": 4096,
+        }
+        lowered = model.lower_artifact(entry)
+        from compile.aot import to_hlo_text
+        text = to_hlo_text(lowered)
+        assert "f32[4096]" in text and "s32[4096]" in text
+        # one executable output tuple
+        assert "->(f32[4096]{0})" in text.replace(" ", "")

@@ -1,0 +1,88 @@
+"""Oracle self-consistency: the jnp references agree with dense linear algebra."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+F32 = np.float32
+I32 = np.int32
+
+
+def random_dense(rng, m, n, density):
+    dense = rng.standard_normal((m, n)).astype(F32)
+    mask = rng.uniform(size=(m, n)) < density
+    return dense * mask
+
+
+def dense_to_stream(dense):
+    rr, cc = np.nonzero(dense)
+    return dense[rr, cc].astype(F32), cc.astype(I32), rr.astype(I32)
+
+
+def dense_to_csr(dense):
+    m = dense.shape[0]
+    rr, cc = np.nonzero(dense)
+    row_ptr = np.zeros(m + 1, I32)
+    for r in rr:
+        row_ptr[r + 1] += 1
+    np.cumsum(row_ptr, out=row_ptr)
+    return dense[rr, cc].astype(F32), cc.astype(I32), row_ptr
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(1, 24),
+    n=st.integers(1, 24),
+    density=st.floats(0.0, 1.0),
+)
+def test_stream_ref_equals_dense(seed, m, n, density):
+    rng = np.random.default_rng(seed)
+    dense = random_dense(rng, m, n, density)
+    val, col, row = dense_to_stream(dense)
+    x = rng.standard_normal(n).astype(F32)
+    y = ref.spmv_stream_ref(jnp.array(val), jnp.array(col), jnp.array(row), jnp.array(x), m)
+    np.testing.assert_allclose(np.asarray(y), dense @ x, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 16), n=st.integers(1, 16))
+def test_csr_ref_equals_dense(seed, m, n):
+    rng = np.random.default_rng(seed)
+    dense = random_dense(rng, m, n, 0.3)
+    val, col, row_ptr = dense_to_csr(dense)
+    x = rng.standard_normal(n).astype(F32)
+    y = ref.spmv_csr_ref(jnp.array(val), jnp.array(col), jnp.array(row_ptr), jnp.array(x))
+    np.testing.assert_allclose(np.asarray(y), dense @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_stream_and_csr_refs_agree():
+    rng = np.random.default_rng(123)
+    dense = random_dense(rng, 12, 15, 0.4)
+    x = rng.standard_normal(15).astype(F32)
+    val_s, col_s, row_s = dense_to_stream(dense)
+    val_c, col_c, row_ptr = dense_to_csr(dense)
+    y_s = ref.spmv_stream_ref(jnp.array(val_s), jnp.array(col_s), jnp.array(row_s), jnp.array(x), 12)
+    y_c = ref.spmv_csr_ref(jnp.array(val_c), jnp.array(col_c), jnp.array(row_ptr), jnp.array(x))
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_c), rtol=1e-5, atol=1e-5)
+
+
+def test_dense_spmv_ref_alpha_beta():
+    rng = np.random.default_rng(7)
+    A = rng.standard_normal((5, 4)).astype(F32)
+    x = rng.standard_normal(4).astype(F32)
+    y = rng.standard_normal(5).astype(F32)
+    out = ref.dense_spmv_ref(jnp.array(A), jnp.array(x), 2.0, 3.0, jnp.array(y))
+    np.testing.assert_allclose(np.asarray(out), 2.0 * (A @ x) + 3.0 * y, rtol=1e-5)
+
+
+def test_empty_matrix():
+    y = ref.spmv_csr_ref(
+        jnp.zeros((0,), jnp.float32), jnp.zeros((0,), jnp.int32),
+        jnp.zeros((1,), jnp.int32), jnp.zeros((3,), jnp.float32),
+    )
+    assert y.shape == (0,)

@@ -1,0 +1,116 @@
+"""SpMM Pallas kernel vs oracle (the paper's §2.3 multi-vector extension)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import buckets
+from compile.kernels import ref, spmm
+
+F32 = np.float32
+I32 = np.int32
+
+
+def make_inputs(rng, nnz, n, m, k, nnz_pad, n_pad):
+    val = np.zeros(nnz_pad, F32)
+    col = np.zeros(nnz_pad, I32)
+    row = np.zeros(nnz_pad, I32)
+    if nnz:
+        val[:nnz] = rng.uniform(-1, 1, nnz)
+        col[:nnz] = rng.integers(0, n, nnz)
+        row[:nnz] = rng.integers(0, m, nnz)
+    x = np.zeros((n_pad, k), F32)
+    x[:n] = rng.standard_normal((n, k))
+    return val, col, row, x
+
+
+def run(val, col, row, x, nnz_pad, n_pad, m_pad, k, tile):
+    return np.asarray(
+        spmm.spmm_partial(
+            jnp.array(val), jnp.array(col), jnp.array(row), jnp.array(x),
+            nnz_pad=nnz_pad, n_pad=n_pad, m_pad=m_pad, k=k, tile=tile,
+        )
+    )
+
+
+class TestFixed:
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(0)
+        nnz_pad = 256
+        n_pad = m_pad = 64
+        k = buckets.SPMM_K
+        val, col, row, x = make_inputs(rng, 200, 60, 60, k, nnz_pad, n_pad)
+        y = run(val, col, row, x, nnz_pad, n_pad, m_pad, k, tile=64)
+        yr = np.asarray(spmm.spmm_ref(jnp.array(val), jnp.array(col), jnp.array(row), jnp.array(x), m_pad))
+        np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+
+    def test_each_column_equals_spmv(self):
+        """SpMM column j == SpMV against X[:, j] (consistency across kernels)."""
+        rng = np.random.default_rng(1)
+        nnz_pad = 128
+        n_pad = m_pad = 32
+        k = buckets.SPMM_K
+        val, col, row, x = make_inputs(rng, 100, 32, 32, k, nnz_pad, n_pad)
+        y = run(val, col, row, x, nnz_pad, n_pad, m_pad, k, tile=32)
+        for j in range(k):
+            yv = np.asarray(
+                ref.spmv_stream_ref(
+                    jnp.array(val), jnp.array(col), jnp.array(row), jnp.array(x[:, j]), m_pad
+                )
+            )
+            np.testing.assert_allclose(y[:, j], yv, rtol=1e-4, atol=1e-4, err_msg=f"col {j}")
+
+    def test_all_padding_zero(self):
+        k = buckets.SPMM_K
+        y = run(
+            np.zeros(64, F32), np.zeros(64, I32), np.zeros(64, I32),
+            np.ones((32, k), F32), 64, 32, 32, k, tile=32,
+        )
+        np.testing.assert_array_equal(y, np.zeros((32, k), F32))
+
+    def test_tiling_invariance(self):
+        rng = np.random.default_rng(2)
+        k = buckets.SPMM_K
+        val, col, row, x = make_inputs(rng, 250, 64, 64, k, 256, 64)
+        y1 = run(val, col, row, x, 256, 64, 64, k, tile=256)
+        y2 = run(val, col, row, x, 256, 64, 64, k, tile=32)
+        np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
+
+
+class TestHypothesis:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), frac=st.floats(0.0, 1.0))
+    def test_random(self, seed, frac):
+        rng = np.random.default_rng(seed)
+        nnz_pad, n_pad, m_pad = 256, 64, 64
+        k = buckets.SPMM_K
+        nnz = int(frac * nnz_pad)
+        val, col, row, x = make_inputs(rng, nnz, 64, 64, k, nnz_pad, n_pad)
+        y = run(val, col, row, x, nnz_pad, n_pad, m_pad, k, tile=64)
+        yr = np.asarray(spmm.spmm_ref(jnp.array(val), jnp.array(col), jnp.array(row), jnp.array(x), m_pad))
+        np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+
+
+class TestVmem:
+    def test_spmm_buckets_fit_vmem(self):
+        for e in buckets.all_artifacts():
+            if e["kind"] != "spmm_partial":
+                continue
+            fp = spmm.vmem_footprint_bytes(
+                e["nnz_pad"], e["n_pad"], e["m_pad"], e["k"], e["tile"]
+            )
+            assert fp["fits_16mib_vmem"], e
+
+    def test_largest_vec_bucket_excluded_for_good_reason(self):
+        """262144-wide SpMM residents would exceed VMEM — that is why
+        SPMM_VEC_BUCKETS stops at 32Ki."""
+        fp = spmm.vmem_footprint_bytes(65536, 262144, 262144, buckets.SPMM_K)
+        assert not fp["fits_16mib_vmem"]
+
+    def test_grid_counts(self):
+        arts = [a for a in buckets.all_artifacts() if a["kind"] == "spmm_partial"]
+        assert len(arts) == len(buckets.NNZ_BUCKETS) * len(buckets.SPMM_VEC_BUCKETS) ** 2
+        assert all(a["k"] == buckets.SPMM_K for a in arts)

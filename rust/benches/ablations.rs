@@ -1,0 +1,166 @@
+//! Ablations over MSREP's design choices (the DESIGN.md §6 extras — not a
+//! paper figure, but the studies the paper's §6 discussion implies):
+//!
+//!  1. merge-path crossover: on-GPU tree reduce vs CPU sum as the result
+//!     vector grows (why the paper's column merge is on-GPU at 1M+ rows);
+//!  2. skew sensitivity: nnz-balanced vs row-block imbalance as the
+//!     power-law exponent R varies;
+//!  3. bucket padding waste: what the ×4 nnz-bucket spacing costs;
+//!  4. two-level vs naive placement under partial GPU counts.
+
+use msrep::coordinator::partitioner::{balanced, baseline};
+use msrep::formats::{convert, gen, Matrix};
+use msrep::report::Table;
+use msrep::runtime::buckets;
+use msrep::sim::{model, Platform};
+use msrep::util::bench::section;
+use msrep::util::stats::imbalance;
+
+fn main() {
+    ablation_merge_crossover();
+    ablation_skew_sensitivity();
+    ablation_padding_waste();
+    ablation_numa_partial_counts();
+    ablation_scaleout();
+    ablation_spmm_amortization();
+}
+
+fn ablation_scaleout() {
+    use msrep::coordinator::scaleout::{scaleout_spmv, ScaleOutScheme};
+    use msrep::sim::Cluster;
+
+    section("ablation 5 — scale-out: MSREP two-level vs broadcast all-gather [39]");
+    let csr = convert::to_csr(&Matrix::Coo(gen::power_law(8_192, 8_192, 800_000, 2.0, 77)));
+    let mut t = Table::new(["nodes", "msrep-2level speedup", "broadcast[39] speedup"]);
+    let base_ms = scaleout_spmv(&Cluster::summit(1), &csr, ScaleOutScheme::MsrepPartialMerge)
+        .unwrap()
+        .total;
+    let base_bc = scaleout_spmv(&Cluster::summit(1), &csr, ScaleOutScheme::BroadcastAllGather)
+        .unwrap()
+        .total;
+    for nodes in [1usize, 2, 4, 8, 16] {
+        let ms = scaleout_spmv(&Cluster::summit(nodes), &csr, ScaleOutScheme::MsrepPartialMerge)
+            .unwrap()
+            .total;
+        let bc = scaleout_spmv(&Cluster::summit(nodes), &csr, ScaleOutScheme::BroadcastAllGather)
+            .unwrap()
+            .total;
+        t.row([
+            nodes.to_string(),
+            format!("{:.2}x", base_ms / ms),
+            format!("{:.2}x", base_bc / bc),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(the broadcast scheme's all-gather is what caps Yang et al.'s scaling — paper §7)");
+}
+
+fn ablation_spmm_amortization() {
+    use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+    use msrep::formats::FormatKind;
+
+    section("ablation 6 — SpMM stream amortization vs K independent SpMV (paper §2.3)");
+    let coo = gen::power_law(4_096, 4_096, 500_000, 2.0, 78);
+    let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+    let eng = Engine::new(RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: 8,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })
+    .unwrap();
+    let x1 = gen::dense_vector(4_096, 79);
+    let t_spmv = eng.spmv(&mat, &x1, 1.0, 0.0, None).unwrap().metrics.modeled_total;
+    let mut t = Table::new(["K", "K x SpMV", "SpMM", "speedup"]);
+    for k in [2usize, 4, 8, 16] {
+        let xk = gen::dense_vector(4_096 * k, 80 + k as u64);
+        let t_spmm = eng.spmm(&mat, &xk, k, 1.0, 0.0, None).unwrap().metrics.modeled_total;
+        t.row([
+            k.to_string(),
+            format!("{:.1} µs", k as f64 * t_spmv * 1e6),
+            format!("{:.1} µs", t_spmm * 1e6),
+            format!("{:.2}x", k as f64 * t_spmv / t_spmm),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn ablation_merge_crossover() {
+    section("ablation 1 — column-merge path: GPU tree reduce vs CPU sum (np=8, DGX-1)");
+    let p = Platform::dgx1();
+    let mut t = Table::new(["rows m", "tree reduce", "cpu sum", "winner"]);
+    for m in [1_000usize, 10_000, 100_000, 1_000_000, 10_000_000] {
+        let bytes = (m * 4) as u64;
+        let tree = model::gpu_tree_reduce_time(&p, 8, bytes)
+            + model::lone_transfer_time(&p, bytes);
+        let cpu = model::lone_transfer_time(&p, bytes) + model::cpu_vector_sum_time(&p, 8, bytes);
+        t.row([
+            m.to_string(),
+            format!("{:.2} µs", tree * 1e6),
+            format!("{:.2} µs", cpu * 1e6),
+            if tree < cpu { "tree" } else { "cpu" }.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(the paper's >=1M-row matrices sit firmly on the tree side)");
+}
+
+fn ablation_skew_sensitivity() {
+    section("ablation 2 — load imbalance vs power-law exponent R (np=8)");
+    let mut t = Table::new(["R", "row-block imbalance", "nnz-balanced imbalance"]);
+    for r in [1.2f64, 1.6, 2.0, 2.6, 3.2] {
+        let coo = gen::power_law(8_192, 8_192, 400_000, r, (r * 10.0) as u64);
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let blocks = baseline(&mat, 8).unwrap();
+        let bal = balanced(&mat, 8).unwrap();
+        t.row([
+            format!("{r:.1}"),
+            format!("{:.3}", imbalance(&blocks.loads())),
+            format!("{:.3}", imbalance(&bal.loads())),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn ablation_padding_waste() {
+    section("ablation 3 — AOT bucket padding waste across the suite partition sizes");
+    let mut t = Table::new(["partition nnz", "bucket", "waste x"]);
+    for nnz in [987_000usize / 8, 750_000 / 6, 120_000, 40_000, 5_000] {
+        let b = buckets::nnz_bucket(nnz).unwrap();
+        t.row([
+            nnz.to_string(),
+            b.to_string(),
+            format!("{:.2}", buckets::padding_waste(nnz, b)),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn ablation_numa_partial_counts() {
+    section("ablation 4 — NUMA-aware H2D advantage at partial GPU counts (Summit)");
+    let p = Platform::summit();
+    let mut t = Table::new(["gpus", "naive max-transfer", "aware max-transfer", "gain"]);
+    for np in 1..=6usize {
+        let bytes: Vec<u64> = (0..p.num_gpus)
+            .map(|g| if g < np { 10_000_000 } else { 0 })
+            .collect();
+        let naive = vec![0usize; p.num_gpus];
+        let aware: Vec<usize> = p.gpu_numa.clone();
+        let t_naive = model::concurrent_h2d_times(&p, &bytes, &naive)
+            .into_iter()
+            .fold(0.0, f64::max);
+        let t_aware = model::concurrent_h2d_times(&p, &bytes, &aware)
+            .into_iter()
+            .fold(0.0, f64::max);
+        t.row([
+            np.to_string(),
+            format!("{:.1} µs", t_naive * 1e6),
+            format!("{:.1} µs", t_aware * 1e6),
+            format!("{:.2}x", t_naive / t_aware),
+        ]);
+    }
+    print!("{}", t.render());
+}

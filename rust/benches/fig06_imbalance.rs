@@ -1,0 +1,38 @@
+//! Bench: paper Fig. 6 — naive workload distribution vs nnz imbalance.
+//!
+//! Prints the regenerated figure (throughput vs low:high ratio on 8
+//! simulated DGX-1 GPUs) and micro-benchmarks the engine run at the two
+//! extremes of the sweep.
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig, Strategy};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
+use msrep::report::figures;
+use msrep::sim::Platform;
+use msrep::util::bench::{section, Bench};
+
+fn main() {
+    section("Fig. 6 — naive distribution vs nnz imbalance (DGX-1, 8 GPUs)");
+    print!("{}", figures::fig06_imbalance().expect("fig06").render());
+
+    section("host-side cost of one naive-distribution run (engine wall time)");
+    let b = Bench::from_env();
+    for ratio in [1.0f64, 10.0] {
+        let coo = gen::two_band(8_192, 8_192, 800_000, ratio, 60 + ratio as u64);
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let x = gen::dense_vector(mat.cols(), 7);
+        let eng = Engine::new(RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: 8,
+            mode: Mode::PStar,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: Some(Strategy::Blocks),
+        })
+        .unwrap();
+        let r = b.run(&format!("fig06/engine_run/ratio_1:{ratio:.0}"), || {
+            eng.spmv(&mat, &x, 1.0, 0.0, None).unwrap().metrics.modeled_total
+        });
+        println!("{}", r.render());
+    }
+}

@@ -1,0 +1,40 @@
+//! Bench: paper Fig. 16 — workload-partitioning overhead.
+//!
+//! Prints the regenerated overhead table (% of end-to-end, per platform ×
+//! format × mode) and micro-benchmarks the real partitioning code paths
+//! (the host-side cost the three modes attribute differently, §4.1).
+
+use msrep::coordinator::partitioner::{balanced, baseline};
+use msrep::formats::FormatKind;
+use msrep::report::figures::{self, SuiteCache};
+use msrep::util::bench::{black_box, section, Bench};
+
+fn main() {
+    let quick = std::env::var("MSREP_BENCH_QUICK").is_ok();
+    let cache = if quick { SuiteCache::build_quick(2) } else { SuiteCache::build() };
+
+    section("Fig. 16 — partitioning overhead (% of end-to-end, geomean over suite)");
+    print!(
+        "{}",
+        figures::fig16_partition_overhead(&cache).expect("fig16").render()
+    );
+
+    section("real partitioning cost on the HV15R analog (host wall time)");
+    let b = Bench::from_env();
+    for format in FormatKind::ALL {
+        let mat = cache.matrix("HV15R", format);
+        type PartFn = fn(
+            &msrep::formats::Matrix,
+            usize,
+        ) -> msrep::Result<msrep::coordinator::PartitionOutcome>;
+        for (label, f) in [
+            ("blocks", baseline as PartFn),
+            ("nnz-balanced", balanced as PartFn),
+        ] {
+            let r = b.run(&format!("fig16/partition/{}/{label}/np8", format.name()), || {
+                black_box(f(&mat, 8).unwrap())
+            });
+            println!("{}", r.render());
+        }
+    }
+}

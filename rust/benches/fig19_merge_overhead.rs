@@ -1,0 +1,47 @@
+//! Bench: paper Fig. 19/22 — partial-result merging overhead (HV15R).
+//!
+//! Prints the regenerated merge-overhead table and micro-benchmarks the
+//! real row-based and column-based merge code paths.
+
+use msrep::coordinator::partitioner::balanced;
+use msrep::coordinator::merge::merge;
+use msrep::formats::{gen, FormatKind};
+use msrep::report::figures::{self, SuiteCache};
+use msrep::util::bench::{black_box, section, Bench};
+
+fn main() {
+    let quick = std::env::var("MSREP_BENCH_QUICK").is_ok();
+    let cache = if quick { SuiteCache::build_quick(2) } else { SuiteCache::build() };
+
+    section("Fig. 19/22 — merge overhead (HV15R analog, % of end-to-end)");
+    print!("{}", figures::fig19_merge_overhead(&cache).expect("fig19").render());
+
+    section("real merge cost (host wall time, np=8)");
+    let b = Bench::from_env();
+    for format in [FormatKind::Csr, FormatKind::Csc] {
+        let mat = cache.matrix("HV15R", format);
+        let out = balanced(&mat, 8).unwrap();
+        let x = gen::dense_vector(mat.cols(), 3);
+        let partials: Vec<Vec<f32>> = out
+            .tasks
+            .iter()
+            .map(|t| {
+                let mut py = vec![0.0f32; t.out_len];
+                for k in 0..t.nnz() {
+                    py[t.row_idx[k] as usize] += t.val[k] * x[t.col_idx[k] as usize];
+                }
+                py
+            })
+            .collect();
+        let mut y = vec![0.0f32; mat.rows()];
+        let label = match format {
+            FormatKind::Csr => "row-based",
+            _ => "col-based",
+        };
+        let r = b.run(&format!("fig19/merge/{label}/np8"), || {
+            merge(&out.tasks, &partials, 0.5, &mut y).unwrap();
+            black_box(y[0])
+        });
+        println!("{}", r.render());
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: paper Fig. 20 — effect of NUMA awareness on scaling.
+//!
+//! Prints the regenerated speedup-vs-GPUs series (NUMA-aware vs naive
+//! placement, com-Orkut analog, p\*-opt) for both platforms. The expected
+//! shape: Summit saturates near 3 GPUs without NUMA awareness; DGX-1 is
+//! largely indifferent (paper §5.6).
+
+use msrep::report::figures::{self, SuiteCache};
+use msrep::report::Series;
+use msrep::util::bench::section;
+
+fn main() {
+    let quick = std::env::var("MSREP_BENCH_QUICK").is_ok();
+    let cache = if quick { SuiteCache::build_quick(1) } else { SuiteCache::build() };
+
+    section("Fig. 20 — NUMA awareness (com-Orkut analog, p*-opt)");
+    for (platform, series) in figures::fig20_numa(&cache).expect("fig20") {
+        println!("\n--- {platform} ---");
+        print!("{}", Series::render_table(&series, "gpus"));
+    }
+}

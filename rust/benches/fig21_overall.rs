@@ -1,0 +1,20 @@
+//! Bench: paper Fig. 21 — overall speedup of baseline / p\* / p\*-opt.
+//!
+//! Prints the regenerated speedup-vs-GPUs series (geomean over the
+//! Table-2 suite, CSR) for both platforms. Expected shape: baseline flat,
+//! p\* scales then sags (no NUMA awareness), p\*-opt near-linear.
+
+use msrep::report::figures::{self, SuiteCache};
+use msrep::report::Series;
+use msrep::util::bench::section;
+
+fn main() {
+    let quick = std::env::var("MSREP_BENCH_QUICK").is_ok();
+    let cache = if quick { SuiteCache::build_quick(2) } else { SuiteCache::build() };
+
+    section("Fig. 21 — overall speedup vs #GPUs (geomean over suite, CSR)");
+    for (platform, series) in figures::fig21_overall(&cache).expect("fig21") {
+        println!("\n--- {platform} ---");
+        print!("{}", Series::render_table(&series, "gpus"));
+    }
+}

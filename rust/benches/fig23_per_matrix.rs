@@ -1,0 +1,27 @@
+//! Bench: paper Fig. 23 (+ the DGX-1 companion figure) — per-matrix
+//! p\*-opt speedup across the full suite.
+//!
+//! The paper's headline claims live here: 5.5× @ 6 GPUs (Summit) and
+//! 6.2× @ 8 GPUs (DGX-1).
+
+use msrep::report::figures::{self, SuiteCache};
+use msrep::report::Series;
+use msrep::util::bench::section;
+use msrep::util::stats::geomean;
+
+fn main() {
+    let quick = std::env::var("MSREP_BENCH_QUICK").is_ok();
+    let cache = if quick { SuiteCache::build_quick(2) } else { SuiteCache::build() };
+
+    section("Fig. 23 — per-matrix p*-opt speedup vs #GPUs (CSR)");
+    for (platform, series) in figures::fig23_per_matrix(&cache).expect("fig23") {
+        println!("\n--- {platform} ---");
+        print!("{}", Series::render_table(&series, "gpus"));
+        let finals: Vec<f64> = series.iter().map(|s| s.points.last().unwrap().1).collect();
+        println!(
+            "geomean final speedup: {:.2}x @ {:.0} GPUs (paper: 5.5x summit / 6.2x dgx1)",
+            geomean(&finals),
+            series[0].points.last().unwrap().0
+        );
+    }
+}

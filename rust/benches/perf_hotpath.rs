@@ -1,0 +1,114 @@
+//! §Perf hot-path profiling (EXPERIMENTS.md §Perf): the real host-side
+//! costs of the request path, measured on the HV15R-scale analog.
+//!
+//! Run with `cargo bench --bench perf_hotpath`. These are *measured* wall
+//! times on this container, not modeled platform times — they are what the
+//! L3 optimization iterations target.
+
+use msrep::coordinator::partitioner::{balanced, baseline};
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
+use msrep::runtime::SpmvRuntime;
+use msrep::sim::Platform;
+use msrep::util::bench::{black_box, section, Bench};
+
+fn main() {
+    let b = Bench::from_env();
+    let coo = gen::power_law(7_000, 7_000, 987_000, 3.09, 106); // HV15R analog
+    let csr = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone())));
+    let coo_m = Matrix::Coo(coo);
+
+    section("L3 partition build (np=8, HV15R analog ~1M nnz)");
+    for (label, mat) in [("csr", &csr), ("coo", &coo_m)] {
+        let r = b.run(&format!("partition/balanced/{label}"), || {
+            black_box(balanced(mat, 8).unwrap())
+        });
+        println!("{}", r.render());
+        let r = b.run(&format!("partition/blocks/{label}"), || {
+            black_box(baseline(mat, 8).unwrap())
+        });
+        println!("{}", r.render());
+    }
+
+    section("engine end-to-end, CpuRef backend (measured host wall)");
+    let x = gen::dense_vector(7_000, 7);
+    let eng = Engine::new(RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: 8,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })
+    .unwrap();
+    let r = b.run("engine/cpuref/spmv_1Mnnz", || {
+        black_box(eng.spmv(&csr, &x, 1.0, 0.0, None).unwrap().y[0])
+    });
+    println!("{}", r.render());
+    let rep = eng.spmv(&csr, &x, 1.0, 0.0, None).unwrap();
+    println!(
+        "  breakdown: partition {:.2} ms, exec {:.2} ms, merge {:.2} ms",
+        rep.metrics.measured_partition * 1e3,
+        rep.metrics.measured_exec * 1e3,
+        rep.metrics.measured_merge * 1e3
+    );
+
+    section("PJRT runtime (measured host wall; artifacts required)");
+    match SpmvRuntime::with_default_artifacts() {
+        Err(e) => println!("  skipped: {e}"),
+        Ok(rt) => {
+            // one partition-sized call (1M/8 nnz -> 262144 bucket)
+            let nnz = 987_000 / 8;
+            let val = vec![1.0f32; nnz];
+            let col: Vec<u32> = (0..nnz).map(|i| (i % 7_000) as u32).collect();
+            let row: Vec<u32> = (0..nnz).map(|i| (i % 875) as u32).collect();
+            let xs = vec![1.0f32; 7_000];
+            // warm the executable cache first
+            rt.spmv_partial(&val, &col, &row, &xs, 1.0, 875).unwrap();
+            let r = b.run("runtime/spmv_partial/123k_nnz", || {
+                black_box(rt.spmv_partial(&val, &col, &row, &xs, 1.0, 875).unwrap()[0])
+            });
+            println!("{}", r.render());
+
+            // isolate the padding + literal-construction cost
+            let r = b.run("runtime/pad_and_literal_only/123k_nnz", || {
+                let mut buf = vec![0.0f32; 262_144];
+                buf[..nnz].copy_from_slice(&val);
+                let l = xla::Literal::vec1(&buf);
+                let mut ibuf = vec![0i32; 262_144];
+                for (bb, &c) in ibuf.iter_mut().zip(&col) {
+                    *bb = c as i32;
+                }
+                let l2 = xla::Literal::vec1(&ibuf);
+                black_box((l, l2))
+            });
+            println!("{}", r.render());
+
+            let eng = Engine::with_runtime(
+                RunConfig {
+                    platform: Platform::dgx1(),
+                    num_gpus: 8,
+                    mode: Mode::PStarOpt,
+                    format: FormatKind::Csr,
+                    backend: Backend::Pjrt,
+                    numa_aware: None,
+                    strategy_override: None,
+                },
+                Some(rt),
+            )
+            .unwrap();
+            let r = b.run("engine/pjrt/spmv_1Mnnz", || {
+                black_box(eng.spmv(&csr, &x, 1.0, 0.0, None).unwrap().y[0])
+            });
+            println!("{}", r.render());
+            if let Some(s) = eng.runtime_stats() {
+                println!(
+                    "  runtime stats: {} spmv calls, padding waste {:.2}x",
+                    s.spmv_calls,
+                    s.padding_waste()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench: paper Table 2 — the evaluation-suite analogs.
+//!
+//! Prints the regenerated table (with the fitted power-law exponent of
+//! each analog) and benchmarks matrix generation + the R estimator.
+
+use msrep::formats::{gen, stats};
+use msrep::report::figures::{self, SuiteCache};
+use msrep::util::bench::{black_box, section, Bench};
+
+fn main() {
+    let quick = std::env::var("MSREP_BENCH_QUICK").is_ok();
+    section("Table 2 — evaluation suite analogs");
+    let cache = if quick { SuiteCache::build_quick(2) } else { SuiteCache::build() };
+    print!("{}", figures::table2(&cache).render());
+
+    section("suite-substrate microbenchmarks");
+    let b = Bench::from_env();
+    let r = b.run("table2/power_law_gen_100k", || {
+        black_box(gen::power_law(10_000, 10_000, 100_000, 2.0, 1))
+    });
+    println!("{}", r.render());
+    let m = gen::power_law(10_000, 10_000, 100_000, 2.0, 1);
+    let r = b.run("table2/profile_plus_r_fit", || black_box(stats::profile(&m)));
+    println!("{}", r.render());
+}

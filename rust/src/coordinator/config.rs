@@ -1,0 +1,140 @@
+//! Engine configuration: the three evaluation variants of paper §5.3 plus
+//! execution-backend and NUMA toggles.
+
+use crate::formats::FormatKind;
+use crate::sim::Platform;
+
+use super::partitioner::Strategy;
+
+/// Which implementation variant to run (paper §5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// Row/column **blocks** of equal row/column count, no multi-threading,
+    /// CPU-only partitioning and merging, no NUMA awareness.
+    Baseline,
+    /// nnz-balanced pCSR/pCSC/pCOO with one CPU thread per GPU for
+    /// partitioning, merging and GPU management — but no further
+    /// optimizations.
+    PStar,
+    /// `p*` plus all §4 optimizations: GPU-offloaded pointer/index rewrite,
+    /// NUMA-aware two-level placement, GPU-accelerated merging.
+    PStarOpt,
+}
+
+impl Mode {
+    /// All three variants, baseline first (report order).
+    pub const ALL: [Mode; 3] = [Mode::Baseline, Mode::PStar, Mode::PStarOpt];
+
+    /// Label used in the paper's figures.
+    pub fn label(self) -> &'static str {
+        match self {
+            Mode::Baseline => "baseline",
+            Mode::PStar => "p*",
+            Mode::PStarOpt => "p*-opt",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" => Some(Mode::Baseline),
+            "p*" | "pstar" | "p" => Some(Mode::PStar),
+            "p*-opt" | "pstaropt" | "popt" | "opt" => Some(Mode::PStarOpt),
+            _ => None,
+        }
+    }
+}
+
+/// How partition kernels are actually executed for numerics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT HLO artifacts through the PJRT CPU client — the real three-layer
+    /// stack (examples, integration tests, quickstart).
+    Pjrt,
+    /// In-process rust reference kernels — bit-for-bit the same partition
+    /// and merge logic, used for large figure sweeps where thousands of
+    /// PJRT round-trips would dominate wall time without changing any
+    /// modeled number.
+    CpuRef,
+}
+
+/// Full engine configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// simulated platform (topology + bandwidths)
+    pub platform: Platform,
+    /// GPUs to use (<= platform.num_gpus)
+    pub num_gpus: usize,
+    /// implementation variant
+    pub mode: Mode,
+    /// input storage format
+    pub format: FormatKind,
+    /// numerics backend
+    pub backend: Backend,
+    /// NUMA-aware placement override; `None` = the mode's default
+    /// (only `PStarOpt` is NUMA-aware, per §5.3)
+    pub numa_aware: Option<bool>,
+    /// Partitioning-strategy override; `None` = the mode's default
+    /// (Baseline ⇒ blocks, p\*/p\*-opt ⇒ nnz-balanced). The Fig. 6
+    /// motivation experiment uses `Some(Blocks)` with concurrent (p\*)
+    /// management to isolate the *distribution* effect from threading.
+    pub strategy_override: Option<Strategy>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: 8,
+            mode: Mode::PStarOpt,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Effective NUMA awareness for this run.
+    pub fn effective_numa_aware(&self) -> bool {
+        self.numa_aware.unwrap_or(self.mode == Mode::PStarOpt)
+    }
+
+    /// Effective partitioning strategy for this run.
+    pub fn effective_strategy(&self) -> Strategy {
+        self.strategy_override.unwrap_or(match self.mode {
+            Mode::Baseline => Strategy::Blocks,
+            _ => Strategy::NnzBalanced,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_labels_match_paper() {
+        assert_eq!(Mode::Baseline.label(), "baseline");
+        assert_eq!(Mode::PStar.label(), "p*");
+        assert_eq!(Mode::PStarOpt.label(), "p*-opt");
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(Mode::parse("pstar"), Some(Mode::PStar));
+        assert_eq!(Mode::parse("P*-OPT"), Some(Mode::PStarOpt));
+        assert_eq!(Mode::parse("nope"), None);
+    }
+
+    #[test]
+    fn numa_default_follows_mode() {
+        let mut c = RunConfig { mode: Mode::PStarOpt, ..Default::default() };
+        assert!(c.effective_numa_aware());
+        c.mode = Mode::PStar;
+        assert!(!c.effective_numa_aware());
+        c.numa_aware = Some(true);
+        assert!(c.effective_numa_aware());
+    }
+}

@@ -1,0 +1,225 @@
+//! Partial-result merging (paper §4.3) and its cost attribution.
+//!
+//! * **Row-based** (pCSR, row-sorted pCOO, baseline row blocks): each
+//!   partial is a consecutive slice of y; interior rows are plain stores,
+//!   rows shared across partition boundaries accumulate, and the paper's
+//!   Alg. 3 beta fix-up is applied exactly once per row.
+//! * **Column-based** (pCSC, col-sorted pCOO, baseline col blocks): each
+//!   partial is a full-length vector; the final y is their sum. The
+//!   Baseline sums on the CPU (cost linear in np, §5.5); p\*-opt reduces on
+//!   the GPUs first (log np NVLink rounds) and downloads once.
+
+use crate::error::{Error, Result};
+
+use super::partitioner::{GpuTask, MergeClass};
+
+/// Merge per-task partial results into `y = (Σ partials) + beta*y`
+/// (alpha was applied device-side). Works for both merge classes.
+pub fn merge(tasks: &[GpuTask], partials: &[Vec<f32>], beta: f32, y: &mut [f32]) -> Result<()> {
+    if tasks.len() != partials.len() {
+        return Err(Error::InvalidPartition(format!(
+            "{} tasks but {} partials",
+            tasks.len(),
+            partials.len()
+        )));
+    }
+    for (t, p) in tasks.iter().zip(partials) {
+        if p.len() < t.out_len {
+            return Err(Error::InvalidPartition(format!(
+                "gpu {} partial length {} < out_len {}",
+                t.gpu,
+                p.len(),
+                t.out_len
+            )));
+        }
+        if t.merge == MergeClass::RowBased && t.out_offset + t.out_len > y.len() {
+            return Err(Error::InvalidPartition(format!(
+                "gpu {} writes rows [{}, {}) past y length {}",
+                t.gpu,
+                t.out_offset,
+                t.out_offset + t.out_len,
+                y.len()
+            )));
+        }
+    }
+    // beta base exactly once
+    if beta == 0.0 {
+        y.iter_mut().for_each(|v| *v = 0.0);
+    } else {
+        y.iter_mut().for_each(|v| *v *= beta);
+    }
+    for (t, p) in tasks.iter().zip(partials) {
+        match t.merge {
+            MergeClass::RowBased => {
+                for j in 0..t.out_len {
+                    y[t.out_offset + j] += p[j];
+                }
+            }
+            MergeClass::ColBased => {
+                for (v, &pj) in y.iter_mut().zip(p.iter()) {
+                    *v += pj;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// K-wide merge for SpMM (paper §2.3): partials and `y` are row-major
+/// `(rows, k)` blocks; same accumulation rules as [`merge`].
+pub fn merge_k(
+    tasks: &[GpuTask],
+    partials: &[Vec<f32>],
+    beta: f32,
+    y: &mut [f32],
+    k: usize,
+) -> Result<()> {
+    if tasks.len() != partials.len() {
+        return Err(Error::InvalidPartition(format!(
+            "{} tasks but {} partials",
+            tasks.len(),
+            partials.len()
+        )));
+    }
+    for (t, p) in tasks.iter().zip(partials) {
+        if p.len() < t.out_len * k {
+            return Err(Error::InvalidPartition(format!(
+                "gpu {} partial length {} < out_len {} * k {k}",
+                t.gpu,
+                p.len(),
+                t.out_len
+            )));
+        }
+        if t.merge == MergeClass::RowBased && (t.out_offset + t.out_len) * k > y.len() {
+            return Err(Error::InvalidPartition(format!(
+                "gpu {} writes past y (len {})",
+                t.gpu,
+                y.len()
+            )));
+        }
+    }
+    if beta == 0.0 {
+        y.iter_mut().for_each(|v| *v = 0.0);
+    } else {
+        y.iter_mut().for_each(|v| *v *= beta);
+    }
+    for (t, p) in tasks.iter().zip(partials) {
+        match t.merge {
+            MergeClass::RowBased => {
+                let dst = &mut y[t.out_offset * k..(t.out_offset + t.out_len) * k];
+                for (d, s) in dst.iter_mut().zip(&p[..t.out_len * k]) {
+                    *d += s;
+                }
+            }
+            MergeClass::ColBased => {
+                for (d, s) in y.iter_mut().zip(p.iter()) {
+                    *d += s;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Count of boundary rows that required accumulation (the `np`-bounded
+/// overlap fix-up of §4.3 — "the overlapping issue only need to be handled
+/// np times").
+pub fn overlap_count(tasks: &[GpuTask]) -> usize {
+    tasks.iter().filter(|t| t.overlaps_prev).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partitioner::{balanced, baseline};
+    use crate::formats::{convert, gen, Matrix};
+    use crate::spmv::spmv_matrix;
+
+    /// Execute tasks with a trivial CPU stream kernel.
+    fn run_tasks(tasks: &[GpuTask], x: &[f32], alpha: f32) -> Vec<Vec<f32>> {
+        tasks
+            .iter()
+            .map(|t| {
+                let mut py = vec![0.0f32; t.out_len];
+                for k in 0..t.nnz() {
+                    py[t.row_idx[k] as usize] += alpha * t.val[k] * x[t.col_idx[k] as usize];
+                }
+                py
+            })
+            .collect()
+    }
+
+    fn check_against_reference(mat: &Matrix, np: usize, balanced_mode: bool) {
+        let n = mat.cols();
+        let m = mat.rows();
+        let x = gen::dense_vector(n, 5);
+        let y0 = gen::dense_vector(m, 6);
+        let (alpha, beta) = (1.7f32, -0.4f32);
+        let mut expect = y0.clone();
+        spmv_matrix(mat, &x, alpha, beta, &mut expect).unwrap();
+
+        let out = if balanced_mode { balanced(mat, np).unwrap() } else { baseline(mat, np).unwrap() };
+        let partials = run_tasks(&out.tasks, &x, alpha);
+        let mut y = y0.clone();
+        merge(&out.tasks, &partials, beta, &mut y).unwrap();
+        for (i, (a, b)) in y.iter().zip(&expect).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-3 * (1.0 + b.abs()),
+                "row {i}: {a} vs {b} (np={np})"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_matches_reference_all_formats_and_modes() {
+        let coo = gen::power_law(300, 300, 5_000, 2.0, 9);
+        let mats = [
+            Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
+            Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
+            Matrix::Coo(coo),
+        ];
+        for mat in &mats {
+            for np in [1, 2, 5, 8] {
+                check_against_reference(mat, np, true);
+                check_against_reference(mat, np, false);
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_count_bounded_by_np() {
+        let coo = gen::power_law(300, 300, 5_000, 2.0, 9);
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        for np in [2, 4, 8] {
+            let out = balanced(&mat, np).unwrap();
+            assert!(overlap_count(&out.tasks) < np);
+        }
+        // baseline never overlaps
+        let out = baseline(&mat, 8).unwrap();
+        assert_eq!(overlap_count(&out.tasks), 0);
+    }
+
+    #[test]
+    fn merge_rejects_inconsistent_inputs() {
+        let coo = gen::uniform(50, 50, 500, 2);
+        let mat = Matrix::Coo(coo);
+        let out = balanced(&mat, 4).unwrap();
+        let mut y = vec![0.0; 50];
+        assert!(merge(&out.tasks, &[], 0.0, &mut y).is_err());
+        let short: Vec<Vec<f32>> = out.tasks.iter().map(|_| vec![]).collect();
+        assert!(merge(&out.tasks, &short, 0.0, &mut y).is_err());
+    }
+
+    #[test]
+    fn beta_applied_once_with_overlaps() {
+        let coo = gen::power_law(100, 100, 3_000, 1.5, 11);
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let out = balanced(&mat, 6).unwrap();
+        assert!(overlap_count(&out.tasks) > 0, "want overlapping partitions");
+        let partials: Vec<Vec<f32>> =
+            out.tasks.iter().map(|t| vec![0.0f32; t.out_len]).collect();
+        let mut y = vec![2.0f32; 100];
+        merge(&out.tasks, &partials, 0.5, &mut y).unwrap();
+        assert!(y.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,100 @@
+//! Timing breakdown of one mSpMV run: the modeled multi-GPU timeline
+//! (source of every figure) plus the honest host-side measurements.
+
+/// Per-phase modeled timeline + measured host times for one SpMV.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// GPUs used
+    pub np: usize,
+    /// per-GPU nnz loads
+    pub loads: Vec<u64>,
+    /// max/mean load imbalance (1.0 = perfect, paper Fig. 6's x-axis driver)
+    pub imbalance: f64,
+
+    // ---- modeled timeline (seconds, simulated platform) ----
+    /// partitioning: boundary search + pointer/index rewrite (§4.1)
+    pub t_partition: f64,
+    /// host→device uploads (streams + x), with NUMA contention (§4.2)
+    pub t_h2d: f64,
+    /// device SpMV kernels (max over GPUs), incl. COO→CSR conversion
+    pub t_compute: f64,
+    /// partial-result merging (§4.3)
+    pub t_merge: f64,
+    /// end-to-end modeled time
+    pub modeled_total: f64,
+
+    // ---- real host measurements (this container, 1 core) ----
+    /// wall seconds spent building partitions
+    pub measured_partition: f64,
+    /// wall seconds spent executing partition kernels (backend-dependent)
+    pub measured_exec: f64,
+    /// wall seconds spent merging
+    pub measured_merge: f64,
+
+    // ---- traffic ----
+    /// total host→device bytes
+    pub h2d_bytes: u64,
+    /// total device→host bytes
+    pub d2h_bytes: u64,
+    /// boundary rows requiring accumulation during the row merge
+    pub overlap_fixups: usize,
+    /// nnz of the input matrix
+    pub nnz: u64,
+}
+
+impl Metrics {
+    /// Partitioning overhead as a fraction of modeled total (Fig. 16's
+    /// y-axis).
+    pub fn partition_overhead(&self) -> f64 {
+        frac(self.t_partition, self.modeled_total)
+    }
+
+    /// Merging overhead as a fraction of modeled total (Fig. 19/22).
+    pub fn merge_overhead(&self) -> f64 {
+        frac(self.t_merge, self.modeled_total)
+    }
+
+    /// Modeled SpMV throughput in GFLOP/s (2 flops per nnz).
+    pub fn gflops(&self) -> f64 {
+        if self.modeled_total <= 0.0 {
+            0.0
+        } else {
+            2.0 * self.nnz as f64 / self.modeled_total / 1e9
+        }
+    }
+}
+
+fn frac(num: f64, den: f64) -> f64 {
+    if den <= 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overheads_and_gflops() {
+        let m = Metrics {
+            np: 4,
+            t_partition: 0.2,
+            t_merge: 0.1,
+            modeled_total: 1.0,
+            nnz: 1_000_000_000,
+            ..Default::default()
+        };
+        assert!((m.partition_overhead() - 0.2).abs() < 1e-12);
+        assert!((m.merge_overhead() - 0.1).abs() < 1e-12);
+        assert!((m.gflops() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_total_gives_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.partition_overhead(), 0.0);
+        assert_eq!(m.gflops(), 0.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! Layer-3 coordinator — the paper's system contribution (§3–§4).
+//!
+//! * [`partitioner`] — baseline row/column blocks vs nnz-balanced
+//!   pCSR/pCSC/pCOO partitioning into per-GPU [`GpuTask`]s
+//! * [`worker`]      — one CPU thread per GPU fan-out (§3.3)
+//! * [`merge`]       — row-based / column-based partial-result merging (§4.3)
+//! * [`engine`]      — the assembled mSpMV pipeline with the modeled
+//!   multi-GPU timeline ([`Engine`])
+//! * [`config`]      — the Baseline / p\* / p\*-opt variants of §5.3
+//! * [`metrics`]     — per-phase breakdown every figure is derived from
+
+pub mod config;
+pub mod engine;
+pub mod merge;
+pub mod metrics;
+pub mod partitioner;
+pub mod scaleout;
+pub mod worker;
+
+pub use config::{Backend, Mode, RunConfig};
+pub use engine::{Engine, SpmvReport};
+pub use metrics::Metrics;
+pub use partitioner::{GpuTask, MergeClass, PartitionOutcome, Strategy};
+
+// Re-export for the documented `RunConfig { format: ... }` ergonomics.
+pub use crate::formats::FormatKind;

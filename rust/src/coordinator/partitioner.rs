@@ -1,0 +1,456 @@
+//! Partitioning front-end: turns a [`Matrix`] into per-GPU [`GpuTask`]s.
+//!
+//! Two strategies, matching paper §5.3:
+//!
+//! * **baseline** — equal *row* blocks (CSR, row-sorted COO) or equal
+//!   *column* blocks (CSC, col-sorted COO), oblivious to the non-zero
+//!   distribution (Fig. 5's naive split);
+//! * **balanced** — equal *nnz* ranges via pCSR/pCSC/pCOO (Fig. 7 / §3.2).
+//!
+//! Every task carries an explicit per-nnz stream (val, global col id,
+//! local-or-global row id) because that is both what a GPU upload would
+//! marshal and what the AOT stream kernel consumes. The stream *copy* is
+//! what the H2D model charges; the index *rewrite* work is timed separately
+//! because the three modes attribute it differently (§4.1).
+
+use crate::error::{Error, Result};
+use crate::formats::{Coo, Csc, Csr, Matrix, PCoo, PCsc, PCsr, SortOrder};
+
+/// How this task's partial result merges into the final y (paper §4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeClass {
+    /// partial is `out_len` consecutive rows starting at `out_offset`
+    RowBased,
+    /// partial is a full-length m vector to be summed
+    ColBased,
+}
+
+/// One simulated GPU's share of the SpMV.
+#[derive(Debug, Clone)]
+pub struct GpuTask {
+    /// GPU ordinal
+    pub gpu: usize,
+    /// non-zero values (owned copy — this is the upload payload)
+    pub val: Vec<f32>,
+    /// **global** column index per nnz (indexes x)
+    pub col_idx: Vec<u32>,
+    /// row index per nnz: **local** (0-based at `out_offset`) for
+    /// row-based tasks, **global** for column-based tasks
+    pub row_idx: Vec<u32>,
+    /// partial-result length: local rows (row-based) or m (col-based)
+    pub out_len: usize,
+    /// global row of partial[0] (0 for col-based)
+    pub out_offset: usize,
+    /// first row shared with the previous task (row-based only)
+    pub overlaps_prev: bool,
+    /// merge strategy
+    pub merge: MergeClass,
+    /// index-rewrite operations this task required (cost attribution for
+    /// §4.1: O(rows) for CSR/CSC pointer builds, O(nnz) for COO)
+    pub rewrite_ops: u64,
+}
+
+impl GpuTask {
+    /// nnz owned by this task.
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Upload payload bytes: the stream + the x vector (each GPU holds a
+    /// full copy of x, as in the paper's design).
+    pub fn h2d_bytes(&self, n: usize) -> u64 {
+        (self.nnz() * 12 + n * 4) as u64
+    }
+
+    /// Partial-result download bytes.
+    pub fn d2h_bytes(&self) -> u64 {
+        (self.out_len * 4) as u64
+    }
+}
+
+/// Output of a partitioning pass.
+#[derive(Debug, Clone)]
+pub struct PartitionOutcome {
+    /// one task per GPU
+    pub tasks: Vec<GpuTask>,
+    /// merge class (uniform across tasks)
+    pub merge: MergeClass,
+    /// boundary-search operations performed (the O(np·log m) part)
+    pub search_ops: u64,
+}
+
+impl PartitionOutcome {
+    /// Per-GPU nnz loads.
+    pub fn loads(&self) -> Vec<u64> {
+        self.tasks.iter().map(|t| t.nnz() as u64).collect()
+    }
+
+    /// max/mean load imbalance (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        crate::util::stats::imbalance(&self.loads())
+    }
+}
+
+/// Partitioning strategy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// equal row/column blocks (the paper's Baseline)
+    Blocks,
+    /// nnz-balanced pCSR/pCSC/pCOO (the MSREP path)
+    NnzBalanced,
+}
+
+/// Merge class a matrix's partitions will use.
+pub fn merge_class(matrix: &Matrix) -> MergeClass {
+    match matrix {
+        Matrix::Csr(_) => MergeClass::RowBased,
+        Matrix::Csc(_) => MergeClass::ColBased,
+        Matrix::Coo(c) => {
+            if c.sort_order() == SortOrder::Col {
+                MergeClass::ColBased
+            } else {
+                MergeClass::RowBased
+            }
+        }
+    }
+}
+
+/// Build GPU `g`'s task out of `np` — each task is independently
+/// constructible (paper §3.2: "each individual partition can be generated
+/// independently so the partitioning process can be efficiently
+/// parallelized"), which is what lets the engine fan this out over one CPU
+/// thread per GPU.
+pub fn build_task(matrix: &Matrix, np: usize, g: usize, strategy: Strategy) -> Result<GpuTask> {
+    check_np(np)?;
+    if g >= np {
+        return Err(Error::InvalidPartition(format!("gpu {g} >= np {np}")));
+    }
+    match (strategy, matrix) {
+        (Strategy::NnzBalanced, Matrix::Csr(csr)) => balanced_csr_task(csr, np, g),
+        (Strategy::NnzBalanced, Matrix::Csc(csc)) => balanced_csc_task(csc, np, g),
+        (Strategy::NnzBalanced, Matrix::Coo(coo)) => balanced_coo_task(coo, np, g),
+        (Strategy::Blocks, Matrix::Csr(csr)) => Ok(baseline_csr_task(csr, np, g)),
+        (Strategy::Blocks, Matrix::Csc(csc)) => Ok(baseline_csc_task(csc, np, g)),
+        (Strategy::Blocks, Matrix::Coo(coo)) => baseline_coo_task(coo, np, g),
+    }
+}
+
+/// Boundary-search op count for the whole partitioning pass (the
+/// O(np·log·) term of Algorithms 2/4/6; zero for block partitioning, which
+/// indexes the pointer array directly).
+pub fn search_ops(matrix: &Matrix, np: usize, strategy: Strategy) -> u64 {
+    match strategy {
+        Strategy::Blocks => match matrix {
+            // baseline COO still binary-searches the row boundaries
+            Matrix::Coo(c) => 2 * np as u64 * (c.nnz().max(2) as f64).log2().ceil() as u64,
+            _ => 0,
+        },
+        Strategy::NnzBalanced => {
+            let dim = match matrix {
+                Matrix::Csr(a) => a.rows(),
+                Matrix::Csc(a) => a.cols(),
+                Matrix::Coo(a) => a.nnz(),
+            };
+            2 * np as u64 * (dim.max(2) as f64).log2().ceil() as u64
+        }
+    }
+}
+
+/// nnz-balanced partitioning (pCSR / pCSC / pCOO — the MSREP path).
+pub fn balanced(matrix: &Matrix, np: usize) -> Result<PartitionOutcome> {
+    assemble(matrix, np, Strategy::NnzBalanced)
+}
+
+/// Equal row/column **blocks** (the paper's Baseline).
+pub fn baseline(matrix: &Matrix, np: usize) -> Result<PartitionOutcome> {
+    assemble(matrix, np, Strategy::Blocks)
+}
+
+fn assemble(matrix: &Matrix, np: usize, strategy: Strategy) -> Result<PartitionOutcome> {
+    check_np(np)?;
+    let tasks: Vec<GpuTask> = (0..np)
+        .map(|g| build_task(matrix, np, g, strategy))
+        .collect::<Result<_>>()?;
+    Ok(PartitionOutcome {
+        tasks,
+        merge: merge_class(matrix),
+        search_ops: search_ops(matrix, np, strategy),
+    })
+}
+
+fn check_np(np: usize) -> Result<()> {
+    if np == 0 {
+        return Err(Error::InvalidPartition("np must be >= 1".into()));
+    }
+    Ok(())
+}
+
+fn balanced_csr_task(csr: &Csr, np: usize, g: usize) -> Result<GpuTask> {
+    let nnz = csr.nnz();
+    let p = PCsr::from_range(csr, g * nnz / np, (g + 1) * nnz / np)?;
+    Ok(GpuTask {
+        gpu: g,
+        val: p.val(csr).to_vec(),
+        col_idx: p.col_idx(csr).to_vec(),
+        row_idx: p.local_row_ids(),
+        out_len: p.local_rows(),
+        out_offset: p.start_row,
+        overlaps_prev: p.start_flag,
+        merge: MergeClass::RowBased,
+        rewrite_ops: p.local_rows() as u64,
+    })
+}
+
+fn balanced_csc_task(csc: &Csc, np: usize, g: usize) -> Result<GpuTask> {
+    let nnz = csc.nnz();
+    let p = PCsc::from_range(csc, g * nnz / np, (g + 1) * nnz / np)?;
+    // global column ids: rebase the local expansion
+    let col_idx: Vec<u32> = p
+        .local_col_ids()
+        .iter()
+        .map(|&c| c + p.start_col as u32)
+        .collect();
+    Ok(GpuTask {
+        gpu: g,
+        val: p.val(csc).to_vec(),
+        col_idx,
+        row_idx: p.row_idx(csc).to_vec(),
+        out_len: csc.rows(),
+        out_offset: 0,
+        overlaps_prev: p.start_flag,
+        merge: MergeClass::ColBased,
+        rewrite_ops: p.local_cols() as u64,
+    })
+}
+
+fn balanced_coo_task(coo: &Coo, np: usize, g: usize) -> Result<GpuTask> {
+    let nnz = coo.nnz();
+    let p = PCoo::from_range(coo, g * nnz / np, (g + 1) * nnz / np)?;
+    if coo.sort_order() == SortOrder::Row {
+        Ok(GpuTask {
+            gpu: g,
+            val: p.val(coo).to_vec(),
+            col_idx: p.col_idx(coo).to_vec(),
+            row_idx: p.local_key_ids(coo),
+            out_len: p.local_keys(),
+            out_offset: p.start_key,
+            overlaps_prev: p.start_flag,
+            merge: MergeClass::RowBased,
+            // COO rewrite touches every nnz (§4.1, §5.4)
+            rewrite_ops: p.nnz() as u64,
+        })
+    } else {
+        Ok(GpuTask {
+            gpu: g,
+            val: p.val(coo).to_vec(),
+            col_idx: p.col_idx(coo).to_vec(),
+            row_idx: p.row_idx(coo).to_vec(),
+            out_len: coo.rows(),
+            out_offset: 0,
+            overlaps_prev: p.start_flag,
+            merge: MergeClass::ColBased,
+            rewrite_ops: p.nnz() as u64,
+        })
+    }
+}
+
+fn baseline_csr_task(csr: &Csr, np: usize, g: usize) -> GpuTask {
+    let m = csr.rows();
+    let row_lo = g * m / np;
+    let row_hi = (g + 1) * m / np;
+    let lo = csr.row_ptr[row_lo];
+    let hi = csr.row_ptr[row_hi];
+    let mut row_idx = Vec::with_capacity(hi - lo);
+    for i in row_lo..row_hi {
+        let cnt = csr.row_ptr[i + 1] - csr.row_ptr[i];
+        row_idx.extend(std::iter::repeat((i - row_lo) as u32).take(cnt));
+    }
+    GpuTask {
+        gpu: g,
+        val: csr.val[lo..hi].to_vec(),
+        col_idx: csr.col_idx[lo..hi].to_vec(),
+        row_idx,
+        out_len: row_hi - row_lo,
+        out_offset: row_lo,
+        overlaps_prev: false, // blocks never share rows
+        merge: MergeClass::RowBased,
+        rewrite_ops: (row_hi - row_lo) as u64,
+    }
+}
+
+fn baseline_csc_task(csc: &Csc, np: usize, g: usize) -> GpuTask {
+    let n = csc.cols();
+    let col_lo = g * n / np;
+    let col_hi = (g + 1) * n / np;
+    let lo = csc.col_ptr[col_lo];
+    let hi = csc.col_ptr[col_hi];
+    let mut col_idx = Vec::with_capacity(hi - lo);
+    for j in col_lo..col_hi {
+        let cnt = csc.col_ptr[j + 1] - csc.col_ptr[j];
+        col_idx.extend(std::iter::repeat(j as u32).take(cnt));
+    }
+    GpuTask {
+        gpu: g,
+        val: csc.val[lo..hi].to_vec(),
+        col_idx,
+        row_idx: csc.row_idx[lo..hi].to_vec(),
+        out_len: csc.rows(),
+        out_offset: 0,
+        overlaps_prev: false,
+        merge: MergeClass::ColBased,
+        rewrite_ops: (col_hi - col_lo) as u64,
+    }
+}
+
+fn baseline_coo_task(coo: &Coo, np: usize, g: usize) -> Result<GpuTask> {
+    if coo.sort_order() != SortOrder::Row {
+        return Err(Error::InvalidPartition(
+            "baseline COO partitioning requires row-sorted input".into(),
+        ));
+    }
+    let m = coo.rows();
+    let row_lo = (g * m / np) as u32;
+    let row_hi = ((g + 1) * m / np) as u32;
+    // binary search the row boundaries in the sorted stream
+    let lo = coo.row_idx.partition_point(|&r| r < row_lo);
+    let hi = coo.row_idx.partition_point(|&r| r < row_hi);
+    let row_idx: Vec<u32> = coo.row_idx[lo..hi].iter().map(|&r| r - row_lo).collect();
+    Ok(GpuTask {
+        gpu: g,
+        val: coo.val[lo..hi].to_vec(),
+        col_idx: coo.col_idx[lo..hi].to_vec(),
+        row_idx,
+        out_len: (row_hi - row_lo) as usize,
+        out_offset: row_lo as usize,
+        overlaps_prev: false,
+        merge: MergeClass::RowBased,
+        rewrite_ops: (hi - lo) as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{convert, gen};
+
+    fn skewed() -> Matrix {
+        Matrix::Coo(gen::two_band(400, 400, 20_000, 8.0, 1))
+    }
+
+    #[test]
+    fn balanced_loads_are_flat_for_all_formats() {
+        let coo = gen::two_band(400, 400, 20_000, 8.0, 1);
+        for mat in [
+            Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
+            Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
+            Matrix::Coo(coo),
+        ] {
+            let out = balanced(&mat, 8).unwrap();
+            assert!(
+                out.imbalance() < 1.001,
+                "{:?}: imbalance {}",
+                mat.kind(),
+                out.imbalance()
+            );
+            assert_eq!(out.loads().iter().sum::<u64>(), mat.nnz() as u64);
+        }
+    }
+
+    #[test]
+    fn baseline_inherits_matrix_skew() {
+        let mat = Matrix::Csr(convert::to_csr(&skewed()));
+        let out = baseline(&mat, 8).unwrap();
+        // two_band ratio 8 => top-half GPUs carry ~8x the load
+        assert!(out.imbalance() > 1.5, "imbalance {}", out.imbalance());
+        assert_eq!(out.loads().iter().sum::<u64>(), mat.nnz() as u64);
+    }
+
+    #[test]
+    fn baseline_blocks_never_overlap() {
+        let mat = Matrix::Csr(convert::to_csr(&skewed()));
+        let out = baseline(&mat, 5).unwrap();
+        assert!(out.tasks.iter().all(|t| !t.overlaps_prev));
+        // row coverage is exactly [0, m)
+        let total_rows: usize = out.tasks.iter().map(|t| t.out_len).sum();
+        assert_eq!(total_rows, 400);
+    }
+
+    #[test]
+    fn csc_tasks_are_col_based_full_length() {
+        let mat = Matrix::Csc(convert::to_csc(&skewed()));
+        for out in [balanced(&mat, 4).unwrap(), baseline(&mat, 4).unwrap()] {
+            assert_eq!(out.merge, MergeClass::ColBased);
+            assert!(out.tasks.iter().all(|t| t.out_len == 400 && t.out_offset == 0));
+        }
+    }
+
+    #[test]
+    fn col_ids_stay_global_for_csc() {
+        let coo = gen::uniform(50, 300, 2_000, 3);
+        let mat = Matrix::Csc(convert::to_csc(&Matrix::Coo(coo)));
+        let out = balanced(&mat, 4).unwrap();
+        // later partitions must reference high global column ids
+        let max_col = out.tasks.last().unwrap().col_idx.iter().max().copied().unwrap();
+        assert!(max_col > 200, "max col {max_col} looks local, not global");
+    }
+
+    #[test]
+    fn coo_col_sorted_goes_col_based() {
+        let mut coo = gen::uniform(100, 100, 1_000, 4);
+        coo.sort_by_col();
+        let out = balanced(&Matrix::Coo(coo), 4).unwrap();
+        assert_eq!(out.merge, MergeClass::ColBased);
+    }
+
+    #[test]
+    fn baseline_coo_requires_row_sort() {
+        let mut coo = gen::uniform(100, 100, 1_000, 4);
+        coo.sort_by_col();
+        assert!(baseline(&Matrix::Coo(coo), 4).is_err());
+    }
+
+    #[test]
+    fn coo_rewrite_cost_is_per_nnz() {
+        let mat = skewed();
+        let out = balanced(&mat, 4).unwrap();
+        let rewrite: u64 = out.tasks.iter().map(|t| t.rewrite_ops).sum();
+        assert_eq!(rewrite, mat.nnz() as u64);
+        // CSR rewrites rows, far cheaper
+        let csr = Matrix::Csr(convert::to_csr(&mat));
+        let out = balanced(&csr, 4).unwrap();
+        let rewrite_csr: u64 = out.tasks.iter().map(|t| t.rewrite_ops).sum();
+        assert!(rewrite_csr < rewrite / 10);
+    }
+
+    #[test]
+    fn np_one_is_whole_matrix() {
+        let mat = skewed();
+        for f in [baseline(&mat, 1).unwrap(), balanced(&mat, 1).unwrap()] {
+            assert_eq!(f.tasks.len(), 1);
+            assert_eq!(f.tasks[0].nnz(), mat.nnz());
+        }
+    }
+
+    #[test]
+    fn h2d_bytes_accounting() {
+        let t = GpuTask {
+            gpu: 0,
+            val: vec![1.0; 100],
+            col_idx: vec![0; 100],
+            row_idx: vec![0; 100],
+            out_len: 10,
+            out_offset: 0,
+            overlaps_prev: false,
+            merge: MergeClass::RowBased,
+            rewrite_ops: 0,
+        };
+        assert_eq!(t.h2d_bytes(1000), 100 * 12 + 4000);
+        assert_eq!(t.d2h_bytes(), 40);
+    }
+
+    #[test]
+    fn zero_np_rejected() {
+        assert!(balanced(&skewed(), 0).is_err());
+        assert!(baseline(&skewed(), 0).is_err());
+    }
+}

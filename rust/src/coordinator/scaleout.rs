@@ -1,0 +1,236 @@
+//! Scale-out SpMV across a multi-node cluster — the §6 extension,
+//! quantifying the §7 comparison with Yang et al. [39].
+//!
+//! Two cross-node result-exchange schemes:
+//!
+//! * [`ScaleOutScheme::MsrepPartialMerge`] — MSREP's design composed with a
+//!   node level: the matrix is nnz-balanced across nodes (level 0) and then
+//!   across each node's GPUs (level 1, the in-paper two-level split of
+//!   Fig. 13). Each node owns a *row segment* of the result, so the
+//!   cross-node exchange is a gather of disjoint segments — total network
+//!   traffic is one result vector regardless of node count.
+//! * [`ScaleOutScheme::BroadcastAllGather`] — Yang et al.'s design: every
+//!   node broadcasts its local result to all the others, so per-node
+//!   ingest traffic grows linearly with the node count. The paper calls
+//!   this "the key factor limiting the scalability"; the ablation bench
+//!   shows exactly where it bends.
+//!
+//! Intra-node time reuses the real engine machinery: each node's share is
+//! partitioned with the real pCSR partitioner and charged via the same
+//! platform model as [`super::engine`].
+
+use crate::error::Result;
+use crate::formats::Csr;
+use crate::sim::{model, Cluster};
+
+use super::partitioner::MergeClass;
+
+/// Cross-node result exchange scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleOutScheme {
+    /// MSREP two-level partitioning + disjoint-segment gather (§6)
+    MsrepPartialMerge,
+    /// per-node broadcast of local results to all nodes (Yang et al. [39])
+    BroadcastAllGather,
+}
+
+impl ScaleOutScheme {
+    /// Report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            ScaleOutScheme::MsrepPartialMerge => "msrep-2level",
+            ScaleOutScheme::BroadcastAllGather => "broadcast[39]",
+        }
+    }
+}
+
+/// Modeled breakdown of one scale-out SpMV.
+#[derive(Debug, Clone)]
+pub struct ScaleOutReport {
+    /// nnz assigned to each node
+    pub node_loads: Vec<u64>,
+    /// slowest node's intra-node time (partition + H2D + kernel + merge)
+    pub t_intra: f64,
+    /// cross-node result exchange time
+    pub t_network: f64,
+    /// end-to-end modeled time
+    pub total: f64,
+}
+
+/// Model a scale-out SpMV of `csr` on `cluster` under `scheme`.
+///
+/// Level-0 split is nnz-balanced for MSREP and row-block for the broadcast
+/// baseline (faithful to [39], which keeps whole row blocks per node).
+pub fn scaleout_spmv(cluster: &Cluster, csr: &Csr, scheme: ScaleOutScheme) -> Result<ScaleOutReport> {
+    cluster.validate()?;
+    let nodes = cluster.num_nodes;
+    let nnz = csr.nnz();
+    let m = csr.rows();
+    let n = csr.cols();
+
+    // ---- level-0 split ----------------------------------------------------
+    // (start_row, end_row, nnz) per node
+    let mut spans: Vec<(usize, usize, u64)> = Vec::with_capacity(nodes);
+    match scheme {
+        ScaleOutScheme::MsrepPartialMerge => {
+            // nnz-balanced boundaries via the real row_ptr (Alg. 2 level 0)
+            for i in 0..nodes {
+                let lo_idx = i * nnz / nodes;
+                let hi_idx = (i + 1) * nnz / nodes;
+                let lo_row = csr.row_ptr.partition_point(|&p| p <= lo_idx).saturating_sub(1);
+                let hi_row = csr.row_ptr.partition_point(|&p| p < hi_idx);
+                spans.push((lo_row, hi_row.max(lo_row), (hi_idx - lo_idx) as u64));
+            }
+        }
+        ScaleOutScheme::BroadcastAllGather => {
+            // row blocks, like [39]'s per-node matrix distribution
+            for i in 0..nodes {
+                let lo = i * m / nodes;
+                let hi = (i + 1) * m / nodes;
+                spans.push((lo, hi, (csr.row_ptr[hi] - csr.row_ptr[lo]) as u64));
+            }
+        }
+    }
+    let node_loads: Vec<u64> = spans.iter().map(|s| s.2).collect();
+
+    // ---- intra-node time (slowest node) ------------------------------------
+    // Each node runs the full p*-opt pipeline on its share: per-GPU
+    // nnz-balanced split, concurrent NUMA-aware H2D, kernel, row merge.
+    let p = &cluster.node;
+    let gpus = p.num_gpus;
+    let t_intra = spans
+        .iter()
+        .map(|&(lo_row, hi_row, node_nnz)| {
+            let rows = (hi_row - lo_row).max(1) as u64;
+            let per_gpu_nnz = node_nnz.div_ceil(gpus as u64);
+            let per_gpu_rows = rows.div_ceil(gpus as u64);
+            let t_part = model::cpu_search_time(
+                2 * gpus as u64 * (rows.max(2) as f64).log2().ceil() as u64,
+            ) + model::gpu_pointer_rewrite_time(p);
+            let h2d: Vec<u64> = (0..gpus)
+                .map(|_| per_gpu_nnz * 12 + n as u64 * 4)
+                .collect();
+            let src: Vec<usize> = p.gpu_numa.clone();
+            let t_h2d = model::concurrent_h2d_times(p, &h2d, &src)
+                .into_iter()
+                .fold(0.0, f64::max);
+            let t_kernel = model::spmv_kernel_time(
+                p,
+                per_gpu_nnz,
+                per_gpu_rows,
+                n as u64,
+                crate::formats::FormatKind::Csr,
+            );
+            let d2h: Vec<u64> = (0..gpus).map(|_| per_gpu_rows * 4).collect();
+            let t_merge = model::concurrent_d2h_times(p, &d2h, &src)
+                .into_iter()
+                .fold(0.0, f64::max)
+                + model::cpu_fixup_time(gpus);
+            t_part + t_h2d + t_kernel + t_merge
+        })
+        .fold(0.0, f64::max);
+
+    // ---- cross-node exchange -----------------------------------------------
+    let vec_bytes = (m * 4) as f64;
+    let t_network = if nodes <= 1 {
+        0.0
+    } else {
+        match scheme {
+            // disjoint segments: the gathering root ingests one vector
+            ScaleOutScheme::MsrepPartialMerge => {
+                cluster.net_latency * (nodes as f64).log2().ceil() + vec_bytes / cluster.net_bw
+            }
+            // all-gather broadcast: every node ingests (nodes-1) vectors
+            ScaleOutScheme::BroadcastAllGather => {
+                cluster.net_latency * nodes as f64
+                    + (nodes as f64 - 1.0) * vec_bytes / cluster.net_bw
+            }
+        }
+    };
+
+    Ok(ScaleOutReport {
+        node_loads,
+        t_intra,
+        t_network,
+        total: t_intra + t_network,
+    })
+}
+
+/// Which merge class the scale-out row split produces (always row-based —
+/// provided for symmetry with the intra-node API).
+pub fn scaleout_merge_class() -> MergeClass {
+    MergeClass::RowBased
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{convert, gen, Matrix};
+
+    fn suite_like_csr() -> Csr {
+        convert::to_csr(&Matrix::Coo(gen::power_law(8_192, 8_192, 500_000, 2.0, 31)))
+    }
+
+    #[test]
+    fn single_node_has_no_network_cost() {
+        let csr = suite_like_csr();
+        let r = scaleout_spmv(&Cluster::summit(1), &csr, ScaleOutScheme::MsrepPartialMerge)
+            .unwrap();
+        assert_eq!(r.t_network, 0.0);
+        assert_eq!(r.node_loads.len(), 1);
+        assert_eq!(r.node_loads[0], csr.nnz() as u64);
+    }
+
+    #[test]
+    fn msrep_level0_is_nnz_balanced_broadcast_is_not() {
+        let coo = gen::two_band(8_192, 8_192, 400_000, 8.0, 33);
+        let csr = convert::to_csr(&Matrix::Coo(coo));
+        let cluster = Cluster::summit(4);
+        let ms = scaleout_spmv(&cluster, &csr, ScaleOutScheme::MsrepPartialMerge).unwrap();
+        let bc = scaleout_spmv(&cluster, &csr, ScaleOutScheme::BroadcastAllGather).unwrap();
+        let imb = |loads: &[u64]| crate::util::stats::imbalance(loads);
+        assert!(imb(&ms.node_loads) < 1.01, "msrep {:?}", ms.node_loads);
+        assert!(imb(&bc.node_loads) > 1.4, "broadcast {:?}", bc.node_loads);
+    }
+
+    #[test]
+    fn broadcast_network_grows_linearly_msrep_stays_flat() {
+        let csr = suite_like_csr();
+        let net = |scheme, nodes| {
+            scaleout_spmv(&Cluster::summit(nodes), &csr, scheme)
+                .unwrap()
+                .t_network
+        };
+        let ms4 = net(ScaleOutScheme::MsrepPartialMerge, 4);
+        let ms16 = net(ScaleOutScheme::MsrepPartialMerge, 16);
+        let bc4 = net(ScaleOutScheme::BroadcastAllGather, 4);
+        let bc16 = net(ScaleOutScheme::BroadcastAllGather, 16);
+        assert!(ms16 < ms4 * 1.5, "msrep network ~flat: {ms4} -> {ms16}");
+        assert!(bc16 > bc4 * 3.0, "broadcast grows: {bc4} -> {bc16}");
+    }
+
+    #[test]
+    fn msrep_scales_beyond_broadcast() {
+        let csr = suite_like_csr();
+        let total = |scheme, nodes| {
+            scaleout_spmv(&Cluster::summit(nodes), &csr, scheme).unwrap().total
+        };
+        let ms1 = total(ScaleOutScheme::MsrepPartialMerge, 1);
+        let ms16 = total(ScaleOutScheme::MsrepPartialMerge, 16);
+        let bc1 = total(ScaleOutScheme::BroadcastAllGather, 1);
+        let bc16 = total(ScaleOutScheme::BroadcastAllGather, 16);
+        let ms_speedup = ms1 / ms16;
+        let bc_speedup = bc1 / bc16;
+        assert!(
+            ms_speedup > 1.5 * bc_speedup,
+            "msrep {ms_speedup}x vs broadcast {bc_speedup}x at 16 nodes"
+        );
+    }
+
+    #[test]
+    fn invalid_cluster_rejected() {
+        let csr = suite_like_csr();
+        assert!(scaleout_spmv(&Cluster::summit(0), &csr, ScaleOutScheme::MsrepPartialMerge)
+            .is_err());
+    }
+}

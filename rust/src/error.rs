@@ -1,0 +1,84 @@
+//! Crate-wide error hierarchy.
+
+use thiserror::Error;
+
+/// Unified error type for the MSREP crate.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// A matrix or partition failed a structural invariant.
+    #[error("invalid matrix: {0}")]
+    InvalidMatrix(String),
+
+    /// A partition request was malformed (np = 0, np > nnz budget, ...).
+    #[error("invalid partition spec: {0}")]
+    InvalidPartition(String),
+
+    /// Problem size exceeds the AOT bucket grid (see DESIGN.md §4).
+    #[error("shape {value} exceeds largest {axis} bucket {max}")]
+    BucketOverflow {
+        /// which bucketed axis overflowed ("nnz" or "vec")
+        axis: &'static str,
+        /// requested size
+        value: usize,
+        /// largest available bucket
+        max: usize,
+    },
+
+    /// artifacts/ missing or inconsistent with the compiled-in bucket grid.
+    #[error("artifact manifest error: {0}")]
+    Manifest(String),
+
+    /// PJRT client / compile / execute failure (wraps the xla crate error).
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Simulated platform misconfiguration (unknown GPU id, no route, ...).
+    #[error("platform error: {0}")]
+    Platform(String),
+
+    /// Simulated device out of memory (16 GB V100 budget).
+    #[error("device {gpu} out of memory: need {needed} B, free {free} B")]
+    DeviceOom {
+        /// simulated GPU ordinal
+        gpu: usize,
+        /// bytes requested
+        needed: u64,
+        /// bytes available
+        free: u64,
+    },
+
+    /// Matrix-market / workload file IO.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Matrix-market parse failure with line context.
+    #[error("matrix market parse error at line {line}: {msg}")]
+    MatrixMarket {
+        /// 1-based line number
+        line: usize,
+        /// description
+        msg: String,
+    },
+
+    /// JSON parse failure (artifact manifest).
+    #[error("json parse error at byte {at}: {msg}")]
+    Json {
+        /// byte offset in the input
+        at: usize,
+        /// description
+        msg: String,
+    },
+
+    /// CLI usage error.
+    #[error("usage: {0}")]
+    Usage(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,142 @@
+//! Format conversions at the [`Matrix`] level, plus partition re-assembly.
+//!
+//! The paper's compatibility story (§3.1) hinges on cheap conversion between
+//! the three mainstream formats and the ability to merge partial formats
+//! back into a base format ("for merging multiple pCSR into one CSR...").
+
+use crate::error::{Error, Result};
+
+use super::{Coo, Csc, Csr, Matrix, PCsr};
+
+/// Convert any matrix to CSR.
+pub fn to_csr(a: &Matrix) -> Csr {
+    match a {
+        Matrix::Csr(x) => x.clone(),
+        Matrix::Csc(x) => Csr::from_coo(&x.to_coo()),
+        Matrix::Coo(x) => Csr::from_coo(x),
+    }
+}
+
+/// Convert any matrix to CSC.
+pub fn to_csc(a: &Matrix) -> Csc {
+    match a {
+        Matrix::Csr(x) => Csc::from_coo(&x.to_coo()),
+        Matrix::Csc(x) => x.clone(),
+        Matrix::Coo(x) => Csc::from_coo(x),
+    }
+}
+
+/// Convert any matrix to COO (row-sorted for CSR, col-sorted for CSC).
+pub fn to_coo(a: &Matrix) -> Coo {
+    match a {
+        Matrix::Csr(x) => x.to_coo(),
+        Matrix::Csc(x) => x.to_coo(),
+        Matrix::Coo(x) => x.clone(),
+    }
+}
+
+/// Re-assemble a full CSR from consecutive pCSR partitions of `csr`.
+///
+/// This is the inverse of [`PCsr::partition`] and exercises the paper's
+/// "two indices that store the start and end row index in the global view"
+/// merge metadata. Partitions must tile `[0, nnz)` in order.
+pub fn merge_pcsr(csr: &Csr, parts: &[PCsr]) -> Result<Csr> {
+    if parts.is_empty() {
+        return Err(Error::InvalidPartition("no partitions to merge".into()));
+    }
+    if parts[0].start_idx != 0 || parts.last().unwrap().end_idx != csr.nnz() {
+        return Err(Error::InvalidPartition(
+            "partitions do not cover [0, nnz)".into(),
+        ));
+    }
+    for w in parts.windows(2) {
+        if w[0].end_idx != w[1].start_idx {
+            return Err(Error::InvalidPartition(format!(
+                "gap between partitions at idx {} != {}",
+                w[0].end_idx, w[1].start_idx
+            )));
+        }
+    }
+    // Payload is contiguous by construction; rebuild the global row_ptr from
+    // the local ones to prove the metadata is self-sufficient.
+    let m = csr.rows();
+    let mut row_ptr = vec![usize::MAX; m + 1];
+    row_ptr[0] = 0;
+    for p in parts {
+        for j in 0..p.local_rows() {
+            let global_row = p.start_row + j;
+            let global_start = p.start_idx + p.row_ptr[j];
+            // For a shared first row the previous partition already set the
+            // earlier (correct) start; keep the minimum.
+            if row_ptr[global_row] == usize::MAX || global_start < row_ptr[global_row] {
+                if !(j == 0 && p.start_flag && row_ptr[global_row] != usize::MAX) {
+                    row_ptr[global_row] = global_start;
+                }
+            }
+        }
+    }
+    row_ptr[m] = csr.nnz();
+    // Empty rows inherit the next row's start (back-fill).
+    for i in (0..m).rev() {
+        if row_ptr[i] == usize::MAX {
+            row_ptr[i] = row_ptr[i + 1];
+        }
+    }
+    Csr::new(m, csr.cols(), row_ptr, csr.col_idx.clone(), csr.val.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::PCsr;
+
+    fn paper_matrix() -> Matrix {
+        Matrix::Coo(Coo::paper_example())
+    }
+
+    #[test]
+    fn all_conversions_preserve_dense() {
+        let a = paper_matrix();
+        let dense = to_coo(&a).to_dense();
+        assert_eq!(to_csr(&a).to_dense(), dense);
+        assert_eq!(to_csc(&a).to_dense(), dense);
+        let csr_m = Matrix::Csr(to_csr(&a));
+        assert_eq!(to_csc(&csr_m).to_dense(), dense);
+        assert_eq!(to_coo(&csr_m).to_dense(), dense);
+        let csc_m = Matrix::Csc(to_csc(&a));
+        assert_eq!(to_csr(&csc_m).to_dense(), dense);
+        assert_eq!(to_coo(&csc_m).to_dense(), dense);
+    }
+
+    #[test]
+    fn merge_pcsr_roundtrip() {
+        let csr = to_csr(&paper_matrix());
+        for np in 1..=8 {
+            let parts = PCsr::partition(&csr, np).unwrap();
+            let merged = merge_pcsr(&csr, &parts).unwrap();
+            assert_eq!(merged.row_ptr, csr.row_ptr, "np={np}");
+            assert_eq!(merged.col_idx, csr.col_idx);
+            assert_eq!(merged.val, csr.val);
+        }
+    }
+
+    #[test]
+    fn merge_pcsr_with_empty_rows() {
+        let coo = Coo::new(5, 5, vec![0, 0, 4], vec![0, 1, 4], vec![1.0, 2.0, 3.0]).unwrap();
+        let csr = Csr::from_coo(&coo);
+        for np in 1..=4 {
+            let parts = PCsr::partition(&csr, np).unwrap();
+            let merged = merge_pcsr(&csr, &parts).unwrap();
+            assert_eq!(merged.row_ptr, csr.row_ptr, "np={np}");
+        }
+    }
+
+    #[test]
+    fn merge_pcsr_rejects_gaps() {
+        let csr = to_csr(&paper_matrix());
+        let a = PCsr::from_range(&csr, 0, 5).unwrap();
+        let b = PCsr::from_range(&csr, 7, 19).unwrap();
+        assert!(merge_pcsr(&csr, &[a, b]).is_err());
+        assert!(merge_pcsr(&csr, &[]).is_err());
+    }
+}

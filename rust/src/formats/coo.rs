@@ -1,0 +1,254 @@
+//! Coordinate (COO) format — paper §2.1.1, Fig. 2.
+
+use crate::error::{Error, Result};
+
+/// Sort state of a COO matrix. Partitioning semantics depend on it
+/// (paper §3.2.3): row-sorted COO merges like pCSR (row-based), column-
+/// sorted like pCSC (column-based); unsorted COO cannot bound its partial
+/// result and the engine rejects it for the balanced paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SortOrder {
+    /// sorted by (row, col)
+    Row,
+    /// sorted by (col, row)
+    Col,
+    /// no ordering guarantee
+    Unsorted,
+}
+
+/// COO matrix: three parallel nnz-length arrays.
+#[derive(Debug, Clone)]
+pub struct Coo {
+    m: usize,
+    n: usize,
+    /// row index per non-zero
+    pub row_idx: Vec<u32>,
+    /// column index per non-zero
+    pub col_idx: Vec<u32>,
+    /// value per non-zero
+    pub val: Vec<f32>,
+    sorted: SortOrder,
+}
+
+impl Coo {
+    /// Build from triplets, validating bounds and detecting sort order.
+    pub fn new(m: usize, n: usize, row_idx: Vec<u32>, col_idx: Vec<u32>, val: Vec<f32>) -> Result<Coo> {
+        if row_idx.len() != val.len() || col_idx.len() != val.len() {
+            return Err(Error::InvalidMatrix(format!(
+                "COO array length mismatch: rows {}, cols {}, vals {}",
+                row_idx.len(),
+                col_idx.len(),
+                val.len()
+            )));
+        }
+        if let Some(&r) = row_idx.iter().max() {
+            if r as usize >= m {
+                return Err(Error::InvalidMatrix(format!("row index {r} >= m {m}")));
+            }
+        }
+        if let Some(&c) = col_idx.iter().max() {
+            if c as usize >= n {
+                return Err(Error::InvalidMatrix(format!("col index {c} >= n {n}")));
+            }
+        }
+        let sorted = detect_order(&row_idx, &col_idx);
+        Ok(Coo { m, n, row_idx, col_idx, val, sorted })
+    }
+
+    /// Empty matrix of the given shape.
+    pub fn empty(m: usize, n: usize) -> Coo {
+        Coo { m, n, row_idx: vec![], col_idx: vec![], val: vec![], sorted: SortOrder::Row }
+    }
+
+    /// Rows.
+    pub fn rows(&self) -> usize {
+        self.m
+    }
+
+    /// Columns.
+    pub fn cols(&self) -> usize {
+        self.n
+    }
+
+    /// Non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Detected/maintained sort order.
+    pub fn sort_order(&self) -> SortOrder {
+        self.sorted
+    }
+
+    /// Sort in place by (row, col). O(nnz log nnz).
+    pub fn sort_by_row(&mut self) {
+        let mut perm: Vec<u32> = (0..self.nnz() as u32).collect();
+        let (r, c) = (&self.row_idx, &self.col_idx);
+        perm.sort_by_key(|&i| (r[i as usize], c[i as usize]));
+        self.apply_perm(&perm);
+        self.sorted = SortOrder::Row;
+    }
+
+    /// Sort in place by (col, row).
+    pub fn sort_by_col(&mut self) {
+        let mut perm: Vec<u32> = (0..self.nnz() as u32).collect();
+        let (r, c) = (&self.row_idx, &self.col_idx);
+        perm.sort_by_key(|&i| (c[i as usize], r[i as usize]));
+        self.apply_perm(&perm);
+        self.sorted = SortOrder::Col;
+    }
+
+    fn apply_perm(&mut self, perm: &[u32]) {
+        self.row_idx = perm.iter().map(|&i| self.row_idx[i as usize]).collect();
+        self.col_idx = perm.iter().map(|&i| self.col_idx[i as usize]).collect();
+        self.val = perm.iter().map(|&i| self.val[i as usize]).collect();
+    }
+
+    /// Payload bytes: 2 index arrays + 1 value array.
+    pub fn storage_bytes(&self) -> u64 {
+        (self.nnz() * (4 + 4 + 4)) as u64
+    }
+
+    /// Densify (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        let mut d = vec![vec![0.0f32; self.n]; self.m];
+        for k in 0..self.nnz() {
+            d[self.row_idx[k] as usize][self.col_idx[k] as usize] += self.val[k];
+        }
+        d
+    }
+
+    /// Build from a dense matrix (tests / examples only).
+    pub fn from_dense(dense: &[Vec<f32>]) -> Coo {
+        let m = dense.len();
+        let n = dense.first().map_or(0, |r| r.len());
+        let (mut ri, mut ci, mut v) = (vec![], vec![], vec![]);
+        for (i, drow) in dense.iter().enumerate() {
+            for (j, &x) in drow.iter().enumerate() {
+                if x != 0.0 {
+                    ri.push(i as u32);
+                    ci.push(j as u32);
+                    v.push(x);
+                }
+            }
+        }
+        Coo::new(m, n, ri, ci, v).expect("from_dense produces valid COO")
+    }
+
+    /// Transpose: swaps row/column roles (CSC(A) == CSR(Aᵀ), paper §2.1.3).
+    pub fn transpose(&self) -> Coo {
+        let mut t = Coo {
+            m: self.n,
+            n: self.m,
+            row_idx: self.col_idx.clone(),
+            col_idx: self.row_idx.clone(),
+            val: self.val.clone(),
+            sorted: SortOrder::Unsorted,
+        };
+        t.sorted = detect_order(&t.row_idx, &t.col_idx);
+        t
+    }
+
+    /// The paper's Fig. 1 example matrix (used across the test suites).
+    pub fn paper_example() -> Coo {
+        let dense: Vec<Vec<f32>> = vec![
+            vec![10.0, 0.0, 0.0, 0.0, -2.0, 0.0],
+            vec![3.0, 9.0, 0.0, 0.0, 0.0, 3.0],
+            vec![0.0, 7.0, 8.0, 7.0, 0.0, 0.0],
+            vec![3.0, 0.0, 8.0, 7.0, 5.0, 0.0],
+            vec![0.0, 8.0, 0.0, 9.0, 9.0, 13.0],
+            vec![0.0, 4.0, 0.0, 0.0, 2.0, -1.0],
+        ];
+        Coo::from_dense(&dense)
+    }
+}
+
+fn detect_order(row_idx: &[u32], col_idx: &[u32]) -> SortOrder {
+    let by_row = row_idx
+        .windows(2)
+        .zip(col_idx.windows(2))
+        .all(|(r, c)| (r[0], c[0]) <= (r[1], c[1]));
+    if by_row {
+        return SortOrder::Row;
+    }
+    let by_col = col_idx
+        .windows(2)
+        .zip(row_idx.windows(2))
+        .all(|(c, r)| (c[0], r[0]) <= (c[1], r[1]));
+    if by_col {
+        return SortOrder::Col;
+    }
+    SortOrder::Unsorted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_shape() {
+        let a = Coo::paper_example();
+        assert_eq!((a.rows(), a.cols(), a.nnz()), (6, 6, 19));
+        assert_eq!(a.sort_order(), SortOrder::Row);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let a = Coo::paper_example();
+        let d = a.to_dense();
+        let b = Coo::from_dense(&d);
+        assert_eq!(a.row_idx, b.row_idx);
+        assert_eq!(a.col_idx, b.col_idx);
+        assert_eq!(a.val, b.val);
+    }
+
+    #[test]
+    fn rejects_out_of_bounds() {
+        assert!(Coo::new(2, 2, vec![2], vec![0], vec![1.0]).is_err());
+        assert!(Coo::new(2, 2, vec![0], vec![5], vec![1.0]).is_err());
+        assert!(Coo::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn sort_detection() {
+        let a = Coo::new(3, 3, vec![0, 1, 2], vec![2, 1, 0], vec![1.0; 3]).unwrap();
+        assert_eq!(a.sort_order(), SortOrder::Row);
+        let b = Coo::new(3, 3, vec![2, 1, 0], vec![0, 1, 2], vec![1.0; 3]).unwrap();
+        assert_eq!(b.sort_order(), SortOrder::Col);
+        let c = Coo::new(3, 3, vec![2, 0, 1], vec![0, 2, 1], vec![1.0; 3]).unwrap();
+        assert_eq!(c.sort_order(), SortOrder::Unsorted);
+    }
+
+    #[test]
+    fn resort_changes_order() {
+        let mut c = Coo::new(3, 3, vec![2, 0, 1], vec![0, 2, 1], vec![1.0, 2.0, 3.0]).unwrap();
+        let dense_before = c.to_dense();
+        c.sort_by_row();
+        assert_eq!(c.sort_order(), SortOrder::Row);
+        assert_eq!(c.to_dense(), dense_before); // permutation preserves content
+        c.sort_by_col();
+        assert_eq!(c.sort_order(), SortOrder::Col);
+        assert_eq!(c.to_dense(), dense_before);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Coo::paper_example();
+        let tt = a.transpose().transpose();
+        assert_eq!(a.to_dense(), tt.to_dense());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = Coo::empty(4, 7);
+        assert_eq!(a.nnz(), 0);
+        assert_eq!(a.storage_bytes(), 0);
+        assert_eq!(a.to_dense(), vec![vec![0.0f32; 7]; 4]);
+    }
+
+    #[test]
+    fn duplicates_accumulate_in_dense() {
+        let a = Coo::new(2, 2, vec![0, 0], vec![1, 1], vec![2.0, 3.0]).unwrap();
+        assert_eq!(a.to_dense()[0][1], 5.0);
+    }
+}

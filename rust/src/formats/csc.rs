@@ -1,0 +1,169 @@
+//! Compressed Sparse Column (CSC) format — paper §2.1.3, Fig. 4.
+//!
+//! CSC(A) stores the same arrays as CSR(Aᵀ); the implementation leans on
+//! that identity for conversions, exactly as the paper notes.
+
+use crate::error::{Error, Result};
+
+use super::{Coo, Csr};
+
+/// CSC matrix: `col_ptr[j]..col_ptr[j+1]` indexes column `j`'s slice of
+/// `row_idx` / `val`.
+#[derive(Debug, Clone)]
+pub struct Csc {
+    m: usize,
+    n: usize,
+    /// n+1 column start offsets into `row_idx`/`val`
+    pub col_ptr: Vec<usize>,
+    /// row index per non-zero
+    pub row_idx: Vec<u32>,
+    /// value per non-zero
+    pub val: Vec<f32>,
+}
+
+impl Csc {
+    /// Build from raw arrays, validating the CSC invariants.
+    pub fn new(m: usize, n: usize, col_ptr: Vec<usize>, row_idx: Vec<u32>, val: Vec<f32>) -> Result<Csc> {
+        if col_ptr.len() != n + 1 {
+            return Err(Error::InvalidMatrix(format!(
+                "col_ptr length {} != n+1 ({})",
+                col_ptr.len(),
+                n + 1
+            )));
+        }
+        if col_ptr[0] != 0 {
+            return Err(Error::InvalidMatrix("col_ptr[0] != 0".into()));
+        }
+        if !col_ptr.windows(2).all(|w| w[0] <= w[1]) {
+            return Err(Error::InvalidMatrix("col_ptr not monotone".into()));
+        }
+        let nnz = *col_ptr.last().unwrap();
+        if row_idx.len() != nnz || val.len() != nnz {
+            return Err(Error::InvalidMatrix(format!(
+                "nnz mismatch: col_ptr says {nnz}, row_idx {}, val {}",
+                row_idx.len(),
+                val.len()
+            )));
+        }
+        if let Some(&r) = row_idx.iter().max() {
+            if r as usize >= m {
+                return Err(Error::InvalidMatrix(format!("row index {r} >= m {m}")));
+            }
+        }
+        Ok(Csc { m, n, col_ptr, row_idx, val })
+    }
+
+    /// Convert from COO via CSR of the transpose.
+    pub fn from_coo(coo: &Coo) -> Csc {
+        let csr_t = Csr::from_coo(&coo.transpose());
+        Csc {
+            m: coo.rows(),
+            n: coo.cols(),
+            col_ptr: csr_t.row_ptr,
+            row_idx: csr_t.col_idx,
+            val: csr_t.val,
+        }
+    }
+
+    /// Back to column-sorted COO.
+    pub fn to_coo(&self) -> Coo {
+        let col_idx = self.expand_col_ids();
+        Coo::new(self.m, self.n, self.row_idx.clone(), col_idx, self.val.clone())
+            .expect("valid CSC produces valid COO")
+    }
+
+    /// Expand col_ptr into an explicit per-nnz column-id array.
+    pub fn expand_col_ids(&self) -> Vec<u32> {
+        let mut col_idx = Vec::with_capacity(self.nnz());
+        for j in 0..self.n {
+            let cnt = self.col_ptr[j + 1] - self.col_ptr[j];
+            col_idx.extend(std::iter::repeat(j as u32).take(cnt));
+        }
+        col_idx
+    }
+
+    /// Rows.
+    pub fn rows(&self) -> usize {
+        self.m
+    }
+
+    /// Columns.
+    pub fn cols(&self) -> usize {
+        self.n
+    }
+
+    /// Non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// nnz of column `j` — the power-law degree the Table-2 exponent R is
+    /// fitted on (paper §5.2).
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// Payload bytes.
+    pub fn storage_bytes(&self) -> u64 {
+        (self.nnz() * 8 + (self.n + 1) * 8) as u64
+    }
+
+    /// Densify (tests only).
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        self.to_coo().to_dense()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_col_ptr() {
+        let a = Csc::from_coo(&Coo::paper_example());
+        // Fig. 1 column nnz counts: 3, 4, 2, 3, 4, 3
+        assert_eq!(a.col_ptr, vec![0, 3, 7, 9, 12, 16, 19]);
+        assert_eq!(a.col_nnz(1), 4);
+    }
+
+    #[test]
+    fn csc_equals_csr_of_transpose() {
+        let coo = Coo::paper_example();
+        let csc = Csc::from_coo(&coo);
+        let csr_t = Csr::from_coo(&coo.transpose());
+        assert_eq!(csc.col_ptr, csr_t.row_ptr);
+        assert_eq!(csc.row_idx, csr_t.col_idx);
+        assert_eq!(csc.val, csr_t.val);
+    }
+
+    #[test]
+    fn coo_roundtrip_preserves_dense() {
+        let coo = Coo::paper_example();
+        assert_eq!(coo.to_dense(), Csc::from_coo(&coo).to_coo().to_dense());
+    }
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        assert!(Csc::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(Csc::new(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0; 2]).is_err());
+        assert!(Csc::new(2, 2, vec![0, 1, 2], vec![0, 9], vec![1.0; 2]).is_err());
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        let coo = Coo::new(2, 5, vec![0, 1, 1], vec![4, 0, 4], vec![1.0, 2.0, 3.0]).unwrap();
+        let csc = Csc::from_coo(&coo);
+        assert_eq!((csc.rows(), csc.cols()), (2, 5));
+        assert_eq!(csc.col_nnz(4), 2);
+        assert_eq!(csc.col_nnz(1), 0);
+        assert_eq!(csc.to_dense(), coo.to_dense());
+    }
+
+    #[test]
+    fn expand_col_ids_sorted() {
+        let csc = Csc::from_coo(&Coo::paper_example());
+        let ids = csc.expand_col_ids();
+        assert!(ids.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(ids.len(), csc.nnz());
+    }
+}

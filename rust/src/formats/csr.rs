@@ -1,0 +1,181 @@
+//! Compressed Sparse Row (CSR) format — paper §2.1.2, Fig. 3.
+
+use crate::error::{Error, Result};
+
+use super::Coo;
+
+/// CSR matrix: `row_ptr[i]..row_ptr[i+1]` indexes row `i`'s slice of
+/// `col_idx` / `val`.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    m: usize,
+    n: usize,
+    /// m+1 row start offsets into `col_idx`/`val` (row_ptr[0]=0, last=nnz)
+    pub row_ptr: Vec<usize>,
+    /// column index per non-zero
+    pub col_idx: Vec<u32>,
+    /// value per non-zero
+    pub val: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from raw arrays, validating the CSR invariants.
+    pub fn new(m: usize, n: usize, row_ptr: Vec<usize>, col_idx: Vec<u32>, val: Vec<f32>) -> Result<Csr> {
+        if row_ptr.len() != m + 1 {
+            return Err(Error::InvalidMatrix(format!(
+                "row_ptr length {} != m+1 ({})",
+                row_ptr.len(),
+                m + 1
+            )));
+        }
+        if row_ptr[0] != 0 {
+            return Err(Error::InvalidMatrix("row_ptr[0] != 0".into()));
+        }
+        if !row_ptr.windows(2).all(|w| w[0] <= w[1]) {
+            return Err(Error::InvalidMatrix("row_ptr not monotone".into()));
+        }
+        let nnz = *row_ptr.last().unwrap();
+        if col_idx.len() != nnz || val.len() != nnz {
+            return Err(Error::InvalidMatrix(format!(
+                "nnz mismatch: row_ptr says {nnz}, col_idx {}, val {}",
+                col_idx.len(),
+                val.len()
+            )));
+        }
+        if let Some(&c) = col_idx.iter().max() {
+            if c as usize >= n {
+                return Err(Error::InvalidMatrix(format!("col index {c} >= n {n}")));
+            }
+        }
+        Ok(Csr { m, n, row_ptr, col_idx, val })
+    }
+
+    /// Convert from COO (sorts a copy by row; stable for duplicates).
+    pub fn from_coo(coo: &Coo) -> Csr {
+        let mut order: Vec<u32> = (0..coo.nnz() as u32).collect();
+        order.sort_by_key(|&k| (coo.row_idx[k as usize], coo.col_idx[k as usize]));
+        let mut row_ptr = vec![0usize; coo.rows() + 1];
+        for &r in &coo.row_idx {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..coo.rows() {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let col_idx = order.iter().map(|&k| coo.col_idx[k as usize]).collect();
+        let val = order.iter().map(|&k| coo.val[k as usize]).collect();
+        Csr { m: coo.rows(), n: coo.cols(), row_ptr, col_idx, val }
+    }
+
+    /// Back to row-sorted COO (expands row_ptr to explicit row ids).
+    pub fn to_coo(&self) -> Coo {
+        let row_idx = self.expand_row_ids();
+        Coo::new(self.m, self.n, row_idx, self.col_idx.clone(), self.val.clone())
+            .expect("valid CSR produces valid COO")
+    }
+
+    /// Expand the compressed row pointer into an explicit per-nnz row-id
+    /// array — the O(nnz) operation the paper offloads to GPUs for the COO
+    /// path (§4.1) and the form the stream kernel consumes.
+    pub fn expand_row_ids(&self) -> Vec<u32> {
+        let mut row_idx = Vec::with_capacity(self.nnz());
+        for i in 0..self.m {
+            let cnt = self.row_ptr[i + 1] - self.row_ptr[i];
+            row_idx.extend(std::iter::repeat(i as u32).take(cnt));
+        }
+        row_idx
+    }
+
+    /// Rows.
+    pub fn rows(&self) -> usize {
+        self.m
+    }
+
+    /// Columns.
+    pub fn cols(&self) -> usize {
+        self.n
+    }
+
+    /// Non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// nnz of row `i`.
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// Payload bytes: val + col_idx + row_ptr (8B entries).
+    pub fn storage_bytes(&self) -> u64 {
+        (self.nnz() * 8 + (self.m + 1) * 8) as u64
+    }
+
+    /// Densify (tests only).
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        self.to_coo().to_dense()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The CSR arrays of the paper's Fig. 3 (row-major order of Fig. 1).
+    fn paper_csr() -> Csr {
+        Csr::from_coo(&Coo::paper_example())
+    }
+
+    #[test]
+    fn paper_example_row_ptr() {
+        let a = paper_csr();
+        // Fig. 1 row nnz counts: 2, 3, 3, 4, 4, 3
+        assert_eq!(a.row_ptr, vec![0, 2, 5, 8, 12, 16, 19]);
+        assert_eq!(a.row_nnz(3), 4);
+    }
+
+    #[test]
+    fn coo_roundtrip_preserves_dense() {
+        let coo = Coo::paper_example();
+        let back = Csr::from_coo(&coo).to_coo();
+        assert_eq!(coo.to_dense(), back.to_dense());
+    }
+
+    #[test]
+    fn from_unsorted_coo() {
+        let coo = Coo::new(3, 3, vec![2, 0, 1], vec![1, 2, 0], vec![3.0, 1.0, 2.0]).unwrap();
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(csr.row_ptr, vec![0, 1, 2, 3]);
+        assert_eq!(csr.val, vec![1.0, 2.0, 3.0]); // re-sorted by row
+        assert_eq!(csr.col_idx, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn expand_row_ids_matches_coo() {
+        let csr = paper_csr();
+        assert_eq!(csr.expand_row_ids(), Coo::paper_example().row_idx);
+    }
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        assert!(Csr::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // short ptr
+        assert!(Csr::new(2, 2, vec![1, 1, 1], vec![0], vec![1.0]).is_err()); // ptr[0] != 0
+        assert!(Csr::new(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0; 2]).is_err()); // non-monotone
+        assert!(Csr::new(2, 2, vec![0, 1, 2], vec![0, 7], vec![1.0; 2]).is_err()); // col oob
+        assert!(Csr::new(2, 2, vec![0, 1, 2], vec![0], vec![1.0]).is_err()); // nnz mismatch
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let csr = Csr::new(3, 3, vec![0, 0, 2, 2], vec![0, 1], vec![1.0, 2.0]).unwrap();
+        assert_eq!(csr.row_nnz(0), 0);
+        assert_eq!(csr.row_nnz(1), 2);
+        assert_eq!(csr.to_dense()[1], vec![1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn zero_size_matrix() {
+        let csr = Csr::new(0, 0, vec![0], vec![], vec![]).unwrap();
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.to_coo().nnz(), 0);
+    }
+}

@@ -1,0 +1,239 @@
+//! Matrix Market (.mtx) reader/writer.
+//!
+//! Supports the coordinate format in `real` / `integer` / `pattern` fields
+//! with `general` / `symmetric` symmetry — enough to ingest any SuiteSparse
+//! download (paper §5.2) when one is available, and to round-trip the
+//! synthetic suite for external tools.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::Coo;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Field {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Symmetry {
+    General,
+    Symmetric,
+}
+
+/// Read a Matrix Market coordinate file into COO (1-based -> 0-based).
+pub fn read_matrix_market<R: Read>(reader: R) -> Result<Coo> {
+    let mut lines = BufReader::new(reader).lines().enumerate();
+
+    // header
+    let (i, header) = lines.next().ok_or_else(|| mm_err(1, "empty file"))?;
+    let header = header.map_err(Error::Io)?;
+    let lineno = i + 1;
+    let toks: Vec<&str> = header.split_whitespace().collect();
+    if toks.len() < 4 || !toks[0].eq_ignore_ascii_case("%%MatrixMarket") {
+        return Err(mm_err(lineno, "missing %%MatrixMarket header"));
+    }
+    if !toks[1].eq_ignore_ascii_case("matrix") || !toks[2].eq_ignore_ascii_case("coordinate") {
+        return Err(mm_err(lineno, "only 'matrix coordinate' is supported"));
+    }
+    let field = match toks[3].to_ascii_lowercase().as_str() {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        other => return Err(mm_err(lineno, &format!("unsupported field '{other}'"))),
+    };
+    let symmetry = match toks.get(4).map(|s| s.to_ascii_lowercase()) {
+        None => Symmetry::General,
+        Some(s) if s == "general" => Symmetry::General,
+        Some(s) if s == "symmetric" => Symmetry::Symmetric,
+        Some(other) => return Err(mm_err(lineno, &format!("unsupported symmetry '{other}'"))),
+    };
+
+    // size line (skipping comments)
+    let mut size: Option<(usize, usize, usize)> = None;
+    let mut entries_seen = 0usize;
+    let mut row_idx = Vec::new();
+    let mut col_idx = Vec::new();
+    let mut val = Vec::new();
+    for (i, line) in lines {
+        let lineno = i + 1;
+        let line = line.map_err(Error::Io)?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('%') {
+            continue;
+        }
+        let toks: Vec<&str> = trimmed.split_whitespace().collect();
+        match size {
+            None => {
+                if toks.len() != 3 {
+                    return Err(mm_err(lineno, "size line must have 3 fields"));
+                }
+                let m = parse_usize(toks[0], lineno)?;
+                let n = parse_usize(toks[1], lineno)?;
+                let nnz = parse_usize(toks[2], lineno)?;
+                size = Some((m, n, nnz));
+                row_idx.reserve(nnz);
+                col_idx.reserve(nnz);
+                val.reserve(nnz);
+            }
+            Some((m, n, nnz)) => {
+                let need = if field == Field::Pattern { 2 } else { 3 };
+                if toks.len() < need {
+                    return Err(mm_err(lineno, "entry line too short"));
+                }
+                let r = parse_usize(toks[0], lineno)?;
+                let c = parse_usize(toks[1], lineno)?;
+                if r == 0 || c == 0 || r > m || c > n {
+                    return Err(mm_err(lineno, &format!("index ({r}, {c}) out of bounds")));
+                }
+                let v = if field == Field::Pattern {
+                    1.0f32
+                } else {
+                    toks[2]
+                        .parse::<f32>()
+                        .map_err(|_| mm_err(lineno, &format!("bad value '{}'", toks[2])))?
+                };
+                row_idx.push((r - 1) as u32);
+                col_idx.push((c - 1) as u32);
+                val.push(v);
+                if symmetry == Symmetry::Symmetric && r != c {
+                    row_idx.push((c - 1) as u32);
+                    col_idx.push((r - 1) as u32);
+                    val.push(v);
+                }
+                entries_seen += 1;
+                if entries_seen > nnz {
+                    return Err(mm_err(lineno, "more entries than declared"));
+                }
+            }
+        }
+    }
+    let (m, n, nnz) = size.ok_or_else(|| mm_err(0, "missing size line"))?;
+    if entries_seen != nnz {
+        return Err(mm_err(
+            0,
+            &format!("declared {nnz} entries but found {entries_seen}"),
+        ));
+    }
+    Coo::new(m, n, row_idx, col_idx, val)
+}
+
+/// Read from a path.
+pub fn read_matrix_market_file<P: AsRef<Path>>(path: P) -> Result<Coo> {
+    read_matrix_market(std::fs::File::open(path)?)
+}
+
+/// Write COO as a `real general` coordinate Matrix Market file.
+pub fn write_matrix_market<W: Write>(writer: W, coo: &Coo) -> Result<()> {
+    let mut w = BufWriter::new(writer);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% generated by msrep")?;
+    writeln!(w, "{} {} {}", coo.rows(), coo.cols(), coo.nnz())?;
+    for k in 0..coo.nnz() {
+        writeln!(
+            w,
+            "{} {} {}",
+            coo.row_idx[k] + 1,
+            coo.col_idx[k] + 1,
+            coo.val[k]
+        )?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write to a path.
+pub fn write_matrix_market_file<P: AsRef<Path>>(path: P, coo: &Coo) -> Result<()> {
+    write_matrix_market(std::fs::File::create(path)?, coo)
+}
+
+fn mm_err(line: usize, msg: &str) -> Error {
+    Error::MatrixMarket { line, msg: msg.to_string() }
+}
+
+fn parse_usize(s: &str, line: usize) -> Result<usize> {
+    s.parse().map_err(|_| mm_err(line, &format!("bad integer '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_real_general() {
+        let src = "%%MatrixMarket matrix coordinate real general\n\
+                   % comment\n\
+                   3 4 2\n\
+                   1 1 1.5\n\
+                   3 4 -2\n";
+        let coo = read_matrix_market(src.as_bytes()).unwrap();
+        assert_eq!((coo.rows(), coo.cols(), coo.nnz()), (3, 4, 2));
+        assert_eq!(coo.to_dense()[0][0], 1.5);
+        assert_eq!(coo.to_dense()[2][3], -2.0);
+    }
+
+    #[test]
+    fn parse_pattern() {
+        let src = "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 2\n2 1\n";
+        let coo = read_matrix_market(src.as_bytes()).unwrap();
+        assert_eq!(coo.to_dense()[0][1], 1.0);
+        assert_eq!(coo.to_dense()[1][0], 1.0);
+    }
+
+    #[test]
+    fn parse_symmetric_expands() {
+        let src = "%%MatrixMarket matrix coordinate real symmetric\n3 3 2\n2 1 5\n3 3 7\n";
+        let coo = read_matrix_market(src.as_bytes()).unwrap();
+        assert_eq!(coo.nnz(), 3); // off-diagonal mirrored, diagonal not
+        let d = coo.to_dense();
+        assert_eq!(d[1][0], 5.0);
+        assert_eq!(d[0][1], 5.0);
+        assert_eq!(d[2][2], 7.0);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let a = Coo::paper_example();
+        let mut buf = Vec::new();
+        write_matrix_market(&mut buf, &a).unwrap();
+        let b = read_matrix_market(buf.as_slice()).unwrap();
+        assert_eq!(a.to_dense(), b.to_dense());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(read_matrix_market("".as_bytes()).is_err());
+        assert!(read_matrix_market("%%MatrixMarket matrix array real\n".as_bytes()).is_err());
+        let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(read_matrix_market(oob.as_bytes()).is_err());
+        let short = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_matrix_market(short.as_bytes()).is_err());
+        let too_many = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1\n2 2 1\n";
+        assert!(read_matrix_market(too_many.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let src = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 x 1.0\n";
+        match read_matrix_market(src.as_bytes()) {
+            Err(Error::MatrixMarket { line, .. }) => assert_eq!(line, 3),
+            other => panic!("expected MatrixMarket error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("msrep_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("paper.mtx");
+        let a = Coo::paper_example();
+        write_matrix_market_file(&path, &a).unwrap();
+        let b = read_matrix_market_file(&path).unwrap();
+        assert_eq!(a.to_dense(), b.to_dense());
+        std::fs::remove_file(path).ok();
+    }
+}

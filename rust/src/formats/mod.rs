@@ -1,0 +1,199 @@
+//! Sparse matrix formats.
+//!
+//! Base formats ([`Coo`], [`Csr`], [`Csc`]) mirror paper §2.1; the *partial*
+//! formats ([`PCsr`], [`PCsc`], [`PCoo`]) are the paper's contribution
+//! (§3.2, Algorithms 2/4/6): zero-copy views of a contiguous nnz-range of a
+//! base-format matrix, carrying just enough metadata (start/end indices,
+//! start/end row or column, a `start_flag` for shared boundary rows, and a
+//! local pointer array for CSR/CSC) for any single-device kernel to process
+//! the range and for the coordinator to merge the partial results.
+//!
+//! Conventions (documented divergences from the paper's pseudocode):
+//! * ranges are half-open `[start_idx, end_idx)` — the paper uses inclusive
+//!   ends; half-open composes better in rust and is equivalent;
+//! * indices are `u32` (the AOT kernels take `i32`; matrices here are
+//!   < 2^31), pointers are `usize`;
+//! * local pointer arrays have `rows + 1` entries including the leading 0,
+//!   where the paper stores `rows - 1` interior offsets.
+
+mod coo;
+mod csc;
+mod csr;
+pub mod convert;
+pub mod gen;
+pub mod io;
+mod pcoo;
+mod pcsc;
+mod pcsr;
+pub mod stats;
+
+pub use coo::{Coo, SortOrder};
+pub use csc::Csc;
+pub use csr::Csr;
+pub use pcoo::PCoo;
+pub use pcsc::{merge_col_partials, PCsc};
+pub use pcsr::{merge_row_partials, PCsr};
+
+/// Which base format a matrix is stored in (selects kernel + merge paths).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FormatKind {
+    /// Compressed Sparse Row
+    Csr,
+    /// Compressed Sparse Column
+    Csc,
+    /// Coordinate list
+    Coo,
+}
+
+impl FormatKind {
+    /// All three mainstream formats (paper §2.1).
+    pub const ALL: [FormatKind; 3] = [FormatKind::Csr, FormatKind::Csc, FormatKind::Coo];
+
+    /// Short lowercase name for reports and CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            FormatKind::Csr => "csr",
+            FormatKind::Csc => "csc",
+            FormatKind::Coo => "coo",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<FormatKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "csr" => Some(FormatKind::Csr),
+            "csc" => Some(FormatKind::Csc),
+            "coo" => Some(FormatKind::Coo),
+            _ => None,
+        }
+    }
+}
+
+/// A matrix in any of the three base formats (the engine's input type).
+#[derive(Debug, Clone)]
+pub enum Matrix {
+    /// CSR storage
+    Csr(Csr),
+    /// CSC storage
+    Csc(Csc),
+    /// COO storage
+    Coo(Coo),
+}
+
+impl Matrix {
+    /// Rows.
+    pub fn rows(&self) -> usize {
+        match self {
+            Matrix::Csr(a) => a.rows(),
+            Matrix::Csc(a) => a.rows(),
+            Matrix::Coo(a) => a.rows(),
+        }
+    }
+
+    /// Columns.
+    pub fn cols(&self) -> usize {
+        match self {
+            Matrix::Csr(a) => a.cols(),
+            Matrix::Csc(a) => a.cols(),
+            Matrix::Coo(a) => a.cols(),
+        }
+    }
+
+    /// Non-zero count.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Matrix::Csr(a) => a.nnz(),
+            Matrix::Csc(a) => a.nnz(),
+            Matrix::Coo(a) => a.nnz(),
+        }
+    }
+
+    /// Storage format.
+    pub fn kind(&self) -> FormatKind {
+        match self {
+            Matrix::Csr(_) => FormatKind::Csr,
+            Matrix::Csc(_) => FormatKind::Csc,
+            Matrix::Coo(_) => FormatKind::Coo,
+        }
+    }
+
+    /// Bytes of the payload arrays (val + indices + pointers) — the
+    /// quantity the memory-bound cost model and the device memory
+    /// accounting use.
+    pub fn storage_bytes(&self) -> u64 {
+        match self {
+            Matrix::Csr(a) => a.storage_bytes(),
+            Matrix::Csc(a) => a.storage_bytes(),
+            Matrix::Coo(a) => a.storage_bytes(),
+        }
+    }
+}
+
+impl From<Csr> for Matrix {
+    fn from(a: Csr) -> Self {
+        Matrix::Csr(a)
+    }
+}
+impl From<Csc> for Matrix {
+    fn from(a: Csc) -> Self {
+        Matrix::Csc(a)
+    }
+}
+impl From<Coo> for Matrix {
+    fn from(a: Coo) -> Self {
+        Matrix::Coo(a)
+    }
+}
+
+/// Binary search a pointer array for the segment containing `idx`:
+/// returns the largest `r` with `ptr[r] <= idx` (and `r < ptr.len()-1`).
+///
+/// This is the `BinarySearch(A.row_ptr, idx)` of Algorithms 2/4: with
+/// `ptr = [0, 2, 2, 5]` (row 1 empty), `idx = 2` belongs to row 2, and
+/// empty leading rows are skipped correctly.
+pub(crate) fn ptr_search(ptr: &[usize], idx: usize) -> usize {
+    debug_assert!(ptr.len() >= 2);
+    // partition_point = first position where ptr[pos] > idx
+    let pos = ptr.partition_point(|&p| p <= idx);
+    (pos - 1).min(ptr.len() - 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ptr_search_basic() {
+        let ptr = [0usize, 3, 5, 9];
+        assert_eq!(ptr_search(&ptr, 0), 0);
+        assert_eq!(ptr_search(&ptr, 2), 0);
+        assert_eq!(ptr_search(&ptr, 3), 1);
+        assert_eq!(ptr_search(&ptr, 4), 1);
+        assert_eq!(ptr_search(&ptr, 8), 2);
+    }
+
+    #[test]
+    fn ptr_search_skips_empty_segments() {
+        // rows 0,1 empty; idx 0 is in row 2
+        let ptr = [0usize, 0, 0, 5];
+        assert_eq!(ptr_search(&ptr, 0), 2);
+        assert_eq!(ptr_search(&ptr, 4), 2);
+    }
+
+    #[test]
+    fn ptr_search_clamps_to_last_segment() {
+        let ptr = [0usize, 5];
+        assert_eq!(ptr_search(&ptr, 4), 0);
+        // idx == nnz (one past the end) clamps into the last row; callers
+        // only pass idx < nnz but the clamp keeps the helper total.
+        assert_eq!(ptr_search(&ptr, 5), 0);
+    }
+
+    #[test]
+    fn format_kind_roundtrip() {
+        for k in FormatKind::ALL {
+            assert_eq!(FormatKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(FormatKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,222 @@
+//! partialCOO (pCOO) — paper §3.2.3, Fig. 10, Algorithm 6.
+//!
+//! COO partitioning avoids element reordering by splitting the stream into
+//! contiguous nnz-ranges. How much a partition *knows* about itself depends
+//! on the sort order (paper §3.2.3):
+//!
+//! * sorted by row    → the partition knows its `[start_row, end_row]` span
+//!   and merges like pCSR (row-based);
+//! * sorted by column → the span is over columns and merging is
+//!   column-based like pCSC;
+//! * unsorted         → the partition may touch any row; the balanced
+//!   engine requires a sorted input (it would otherwise need an m-length
+//!   partial per GPU, which the paper flags as the extra cost).
+
+use crate::error::{Error, Result};
+
+use super::{Coo, SortOrder};
+
+/// A partition of a (sorted) COO matrix over a contiguous nnz-range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PCoo {
+    /// first owned triplet (inclusive)
+    pub start_idx: usize,
+    /// one past the last owned triplet (exclusive)
+    pub end_idx: usize,
+    /// first (possibly shared) row if row-sorted / column if col-sorted
+    pub start_key: usize,
+    /// last (possibly shared) row/column, inclusive
+    pub end_key: usize,
+    /// true iff the first row/column is shared with the previous partition
+    pub start_flag: bool,
+    /// sort order this partition was derived under
+    pub order: SortOrder,
+}
+
+impl PCoo {
+    /// Algorithm 6, one partition of a sorted COO.
+    pub fn from_range(coo: &Coo, start_idx: usize, end_idx: usize) -> Result<PCoo> {
+        let order = coo.sort_order();
+        if order == SortOrder::Unsorted {
+            return Err(Error::InvalidPartition(
+                "pCOO requires a row- or column-sorted COO (paper §3.2.3)".into(),
+            ));
+        }
+        let nnz = coo.nnz();
+        if start_idx > end_idx || end_idx > nnz {
+            return Err(Error::InvalidPartition(format!(
+                "range [{start_idx}, {end_idx}) out of bounds (nnz={nnz})"
+            )));
+        }
+        let keys: &[u32] = match order {
+            SortOrder::Row => &coo.row_idx,
+            SortOrder::Col => &coo.col_idx,
+            SortOrder::Unsorted => unreachable!(),
+        };
+        if start_idx == end_idx {
+            let k = if nnz == 0 { 0 } else { keys[start_idx.min(nnz - 1)] as usize };
+            return Ok(PCoo {
+                start_idx,
+                end_idx,
+                start_key: k,
+                end_key: k,
+                start_flag: false,
+                order,
+            });
+        }
+        let start_key = keys[start_idx] as usize;
+        let end_key = keys[end_idx - 1] as usize;
+        // Shared iff the previous element continues the same row/column.
+        let start_flag = start_idx > 0 && keys[start_idx - 1] as usize == start_key;
+        Ok(PCoo { start_idx, end_idx, start_key, end_key, start_flag, order })
+    }
+
+    /// Algorithm 6, all partitions (nnz-balanced).
+    pub fn partition(coo: &Coo, np: usize) -> Result<Vec<PCoo>> {
+        if np == 0 {
+            return Err(Error::InvalidPartition("np must be >= 1".into()));
+        }
+        let nnz = coo.nnz();
+        (0..np)
+            .map(|i| PCoo::from_range(coo, i * nnz / np, (i + 1) * nnz / np))
+            .collect()
+    }
+
+    /// Non-zeros owned.
+    pub fn nnz(&self) -> usize {
+        self.end_idx - self.start_idx
+    }
+
+    /// Rows (or columns, if col-sorted) spanned.
+    pub fn local_keys(&self) -> usize {
+        if self.nnz() == 0 {
+            0
+        } else {
+            self.end_key - self.start_key + 1
+        }
+    }
+
+    /// Zero-copy view of owned values.
+    pub fn val<'a>(&self, coo: &'a Coo) -> &'a [f32] {
+        &coo.val[self.start_idx..self.end_idx]
+    }
+
+    /// Zero-copy view of owned row indices (global).
+    pub fn row_idx<'a>(&self, coo: &'a Coo) -> &'a [u32] {
+        &coo.row_idx[self.start_idx..self.end_idx]
+    }
+
+    /// Zero-copy view of owned column indices (global).
+    pub fn col_idx<'a>(&self, coo: &'a Coo) -> &'a [u32] {
+        &coo.col_idx[self.start_idx..self.end_idx]
+    }
+
+    /// Per-nnz LOCAL key ids (row ids if row-sorted): `key - start_key`.
+    /// This is the O(nnz) index rewrite that dominates COO partitioning
+    /// cost and that p\*-opt offloads to the GPU (paper §4.1, §5.4).
+    pub fn local_key_ids(&self, coo: &Coo) -> Vec<u32> {
+        let keys: &[u32] = match self.order {
+            SortOrder::Row => &coo.row_idx,
+            SortOrder::Col => &coo.col_idx,
+            SortOrder::Unsorted => unreachable!("constructor forbids unsorted"),
+        };
+        keys[self.start_idx..self.end_idx]
+            .iter()
+            .map(|&k| k - self.start_key as u32)
+            .collect()
+    }
+
+    /// O(1) metadata — pCOO carries no pointer array at all.
+    pub fn metadata_bytes(&self) -> u64 {
+        5 * 8 + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_coo() -> Coo {
+        Coo::paper_example() // row-sorted by construction
+    }
+
+    #[test]
+    fn partition_balances_nnz() {
+        let coo = paper_coo();
+        let parts = PCoo::partition(&coo, 4).unwrap();
+        let loads: Vec<usize> = parts.iter().map(|p| p.nnz()).collect();
+        assert_eq!(loads, vec![4, 5, 5, 5]);
+        assert_eq!(parts[0].order, SortOrder::Row);
+    }
+
+    #[test]
+    fn key_spans_cover_matrix_rows() {
+        let coo = paper_coo();
+        let parts = PCoo::partition(&coo, 3).unwrap();
+        assert_eq!(parts[0].start_key, 0);
+        assert_eq!(parts[2].end_key, 5);
+        for w in parts.windows(2) {
+            // consecutive partitions overlap by at most the boundary row
+            assert!(w[1].start_key >= w[0].end_key);
+        }
+    }
+
+    #[test]
+    fn start_flag_on_shared_row() {
+        // rows: [0,0,1,1,1] -> split at 3 lands inside row 1
+        let coo = Coo::new(2, 5, vec![0, 0, 1, 1, 1], vec![0, 1, 2, 3, 4], vec![1.0; 5]).unwrap();
+        let p = PCoo::from_range(&coo, 3, 5).unwrap();
+        assert!(p.start_flag);
+        assert_eq!((p.start_key, p.end_key), (1, 1));
+        let q = PCoo::from_range(&coo, 2, 5).unwrap();
+        assert!(!q.start_flag); // starts exactly at row 1's first element
+    }
+
+    #[test]
+    fn col_sorted_partitions_use_columns() {
+        let mut coo = paper_coo();
+        coo.sort_by_col();
+        let parts = PCoo::partition(&coo, 4).unwrap();
+        assert_eq!(parts[0].order, SortOrder::Col);
+        assert_eq!(parts[0].start_key, 0);
+        assert_eq!(parts[3].end_key, 5);
+    }
+
+    #[test]
+    fn unsorted_rejected() {
+        let coo = Coo::new(3, 3, vec![2, 0, 1], vec![0, 2, 1], vec![1.0; 3]).unwrap();
+        assert!(PCoo::partition(&coo, 2).is_err());
+    }
+
+    #[test]
+    fn local_key_ids_are_rebased() {
+        let coo = paper_coo();
+        for p in PCoo::partition(&coo, 4).unwrap() {
+            let ids = p.local_key_ids(&coo);
+            assert_eq!(ids.len(), p.nnz());
+            if !ids.is_empty() {
+                assert_eq!(*ids.iter().min().unwrap(), 0);
+                assert!(
+                    (*ids.iter().max().unwrap() as usize) < p.local_keys(),
+                    "ids exceed local span"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_partition_handling() {
+        let coo = Coo::new(2, 2, vec![0], vec![0], vec![1.0]).unwrap();
+        let parts = PCoo::partition(&coo, 4).unwrap();
+        assert_eq!(parts.iter().map(|p| p.nnz()).sum::<usize>(), 1);
+        assert!(parts.iter().filter(|p| p.nnz() == 0).all(|p| p.local_keys() == 0));
+    }
+
+    #[test]
+    fn metadata_is_constant_size() {
+        let coo = paper_coo();
+        for p in PCoo::partition(&coo, 6).unwrap() {
+            assert_eq!(p.metadata_bytes(), 41);
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! partialCSC (pCSC) — paper §3.2.2, Fig. 9, Algorithm 4.
+//!
+//! Mirror of [`super::PCsr`] over columns: a contiguous nnz-range of a CSC
+//! matrix with a local column-pointer array. A pCSC partition's SpMV
+//! partial result is a **full-length m vector** (each owned column scatters
+//! into arbitrary rows), so merging is a vector sum — the column-based
+//! merge of paper §4.3, optimized as an on-GPU tree reduction.
+
+use crate::error::{Error, Result};
+
+use super::{ptr_search, Csc};
+
+/// A partition of a CSC matrix over a contiguous nnz-range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PCsc {
+    /// first owned position in the parent's `val`/`row_idx` (inclusive)
+    pub start_idx: usize,
+    /// one past the last owned position (exclusive)
+    pub end_idx: usize,
+    /// global index of the first (possibly shared) column
+    pub start_col: usize,
+    /// global index of the last (possibly shared) column, inclusive
+    pub end_col: usize,
+    /// true iff the first column is shared with the previous partition
+    pub start_flag: bool,
+    /// local column pointers: `local_cols()+1` entries, relative to
+    /// `start_idx`
+    pub col_ptr: Vec<usize>,
+}
+
+impl PCsc {
+    /// Algorithm 4, one partition.
+    pub fn from_range(csc: &Csc, start_idx: usize, end_idx: usize) -> Result<PCsc> {
+        let nnz = csc.nnz();
+        if start_idx > end_idx || end_idx > nnz {
+            return Err(Error::InvalidPartition(format!(
+                "range [{start_idx}, {end_idx}) out of bounds (nnz={nnz})"
+            )));
+        }
+        if start_idx == end_idx {
+            let col = if nnz == 0 { 0 } else { ptr_search(&csc.col_ptr, start_idx.min(nnz - 1)) };
+            return Ok(PCsc {
+                start_idx,
+                end_idx,
+                start_col: col,
+                end_col: col,
+                start_flag: false,
+                col_ptr: vec![0],
+            });
+        }
+        let start_col = ptr_search(&csc.col_ptr, start_idx);
+        let end_col = ptr_search(&csc.col_ptr, end_idx - 1);
+        let start_flag = start_idx > csc.col_ptr[start_col];
+        let len = end_idx - start_idx;
+        let cols = end_col - start_col + 1;
+        let mut col_ptr = Vec::with_capacity(cols + 1);
+        col_ptr.push(0);
+        for j in 1..cols {
+            col_ptr.push(csc.col_ptr[start_col + j] - start_idx);
+        }
+        col_ptr.push(len);
+        Ok(PCsc { start_idx, end_idx, start_col, end_col, start_flag, col_ptr })
+    }
+
+    /// Algorithm 4, all partitions (nnz-balanced).
+    pub fn partition(csc: &Csc, np: usize) -> Result<Vec<PCsc>> {
+        if np == 0 {
+            return Err(Error::InvalidPartition("np must be >= 1".into()));
+        }
+        let nnz = csc.nnz();
+        (0..np)
+            .map(|i| PCsc::from_range(csc, i * nnz / np, (i + 1) * nnz / np))
+            .collect()
+    }
+
+    /// Non-zeros owned.
+    pub fn nnz(&self) -> usize {
+        self.end_idx - self.start_idx
+    }
+
+    /// Columns spanned (including shared boundary columns).
+    pub fn local_cols(&self) -> usize {
+        self.col_ptr.len() - 1
+    }
+
+    /// Zero-copy view of the owned values.
+    pub fn val<'a>(&self, csc: &'a Csc) -> &'a [f32] {
+        &csc.val[self.start_idx..self.end_idx]
+    }
+
+    /// Zero-copy view of the owned (global) row indices.
+    pub fn row_idx<'a>(&self, csc: &'a Csc) -> &'a [u32] {
+        &csc.row_idx[self.start_idx..self.end_idx]
+    }
+
+    /// Expand local col pointers to per-nnz LOCAL column ids — used to
+    /// index the x-slice this partition needs.
+    pub fn local_col_ids(&self) -> Vec<u32> {
+        let mut ids = Vec::with_capacity(self.nnz());
+        for j in 0..self.local_cols() {
+            let cnt = self.col_ptr[j + 1] - self.col_ptr[j];
+            ids.extend(std::iter::repeat(j as u32).take(cnt));
+        }
+        ids
+    }
+
+    /// Shared-column inference (mirror of pCSR's shared-row rule).
+    pub fn shares_last_col_with(&self, next: &PCsc) -> bool {
+        next.start_flag && next.start_col == self.end_col
+    }
+
+    /// Metadata bytes beyond the borrowed parent arrays.
+    pub fn metadata_bytes(&self) -> u64 {
+        (5 * 8 + 1 + self.col_ptr.len() * 8) as u64
+    }
+}
+
+/// Merge pCSC partial results (paper Alg. 5 lines 9–12):
+/// `y = alpha·(Σ full-length partials) + beta·y` (alpha pre-applied by the
+/// kernel). Unlike the row-based merge every partial spans all of `y`.
+pub fn merge_col_partials(partials: &[Vec<f32>], beta: f32, y: &mut [f32]) -> Result<()> {
+    for py in partials {
+        if py.len() < y.len() {
+            return Err(Error::InvalidPartition(format!(
+                "column partial too short: {} < {}",
+                py.len(),
+                y.len()
+            )));
+        }
+    }
+    for (i, v) in y.iter_mut().enumerate() {
+        let sum: f32 = partials.iter().map(|p| p[i]).sum();
+        *v = sum + beta * *v;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+
+    fn paper_csc() -> Csc {
+        Csc::from_coo(&Coo::paper_example())
+    }
+
+    #[test]
+    fn four_way_partition_balanced() {
+        // col_ptr = [0,3,7,9,12,16,19]; boundaries 0,4,9,14,19
+        let csc = paper_csc();
+        let parts = PCsc::partition(&csc, 4).unwrap();
+        let loads: Vec<usize> = parts.iter().map(|p| p.nnz()).collect();
+        assert_eq!(loads, vec![4, 5, 5, 5]);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].end_idx, w[1].start_idx);
+        }
+    }
+
+    #[test]
+    fn start_flags() {
+        let csc = paper_csc(); // col_ptr = [0,3,7,9,12,16,19]
+        let parts = PCsc::partition(&csc, 4).unwrap();
+        // starts at 4 (inside col 1: 3..7) -> flagged
+        assert!(parts[1].start_flag);
+        // starts at 9 (exactly col 3 start) -> not flagged
+        assert!(!parts[2].start_flag);
+        // starts at 14 (inside col 4: 12..16) -> flagged
+        assert!(parts[3].start_flag);
+    }
+
+    #[test]
+    fn local_col_ptr_consistent() {
+        let csc = paper_csc();
+        for np in 1..=8 {
+            for p in PCsc::partition(&csc, np).unwrap() {
+                assert_eq!(p.col_ptr[0], 0);
+                assert_eq!(*p.col_ptr.last().unwrap(), p.nnz());
+                assert!(p.col_ptr.windows(2).all(|w| w[0] <= w[1]));
+                assert_eq!(p.local_cols(), p.end_col - p.start_col + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_reconstructs_full_spmv() {
+        let csc = paper_csc();
+        let coo = Coo::paper_example();
+        let x: Vec<f32> = (1..=6).map(|v| v as f32).collect();
+        let dense = coo.to_dense();
+        let expect: Vec<f32> = dense
+            .iter()
+            .map(|row| row.iter().zip(&x).map(|(a, b)| a * b).sum())
+            .collect();
+        for np in 1..=8 {
+            let parts = PCsc::partition(&csc, np).unwrap();
+            let partials: Vec<Vec<f32>> = parts
+                .iter()
+                .map(|p| {
+                    // CSC SpMV over the owned range: y[row_idx[k]] += v*x[col]
+                    let mut py = vec![0.0f32; 6];
+                    let vals = p.val(&csc);
+                    let rows = p.row_idx(&csc);
+                    let local_cols = p.local_col_ids();
+                    for k in 0..p.nnz() {
+                        let global_col = p.start_col + local_cols[k] as usize;
+                        py[rows[k] as usize] += vals[k] * x[global_col];
+                    }
+                    py
+                })
+                .collect();
+            let mut y = vec![0.0f32; 6];
+            merge_col_partials(&partials, 0.0, &mut y).unwrap();
+            for (a, b) in y.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4, "np={np}: {y:?} vs {expect:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_beta_applied_once() {
+        let partials = vec![vec![1.0f32; 4], vec![2.0f32; 4]];
+        let mut y = vec![10.0f32; 4];
+        merge_col_partials(&partials, 0.5, &mut y).unwrap();
+        assert_eq!(y, vec![8.0f32; 4]); // 1+2 + 0.5*10
+    }
+
+    #[test]
+    fn merge_rejects_short_partials() {
+        let mut y = vec![0.0f32; 4];
+        assert!(merge_col_partials(&[vec![0.0; 2]], 0.0, &mut y).is_err());
+    }
+
+    #[test]
+    fn empty_partitions_when_np_exceeds_nnz() {
+        let coo = Coo::new(2, 2, vec![0], vec![1], vec![5.0]).unwrap();
+        let csc = Csc::from_coo(&coo);
+        let parts = PCsc::partition(&csc, 3).unwrap();
+        assert_eq!(parts.iter().map(|p| p.nnz()).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn zero_copy_views() {
+        let csc = paper_csc();
+        let p = PCsc::from_range(&csc, 3, 9).unwrap();
+        assert_eq!(p.val(&csc), &csc.val[3..9]);
+        assert_eq!(p.row_idx(&csc), &csc.row_idx[3..9]);
+    }
+}

@@ -1,0 +1,362 @@
+//! partialCSR (pCSR) — paper §3.2.1, Fig. 8, Algorithm 2.
+//!
+//! A `PCsr` describes one contiguous nnz-range `[start_idx, end_idx)` of a
+//! CSR matrix. It stores **no copy of the payload** — `val`/`col_idx` are
+//! borrowed straight from the parent CSR (`O(1)` extra storage) — plus a
+//! *local* row pointer array (`O(rows-in-partition)`) so that any
+//! CSR-compatible kernel can run on the range unmodified, and boundary
+//! metadata (`start_row`, `end_row`, `start_flag`) so the coordinator can
+//! merge partial results (paper Alg. 3).
+
+use crate::error::{Error, Result};
+
+use super::{ptr_search, Csr};
+
+/// A partition of a CSR matrix over a contiguous nnz-range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PCsr {
+    /// first owned position in the parent's `val`/`col_idx` (inclusive)
+    pub start_idx: usize,
+    /// one past the last owned position (exclusive; paper uses inclusive)
+    pub end_idx: usize,
+    /// global index of the first (possibly shared) row
+    pub start_row: usize,
+    /// global index of the last (possibly shared) row, inclusive
+    pub end_row: usize,
+    /// true iff the first row is also partially owned by the previous
+    /// partition (paper: `start_idx > A.row_ptr[start_row]`)
+    pub start_flag: bool,
+    /// local row pointers: `local_rows()+1` entries, `row_ptr[0] == 0`,
+    /// last entry == `nnz()`; offsets are relative to `start_idx`
+    pub row_ptr: Vec<usize>,
+}
+
+impl PCsr {
+    /// Algorithm 2, one partition: describe `[start_idx, end_idx)` of `csr`.
+    pub fn from_range(csr: &Csr, start_idx: usize, end_idx: usize) -> Result<PCsr> {
+        let nnz = csr.nnz();
+        if start_idx > end_idx || end_idx > nnz {
+            return Err(Error::InvalidPartition(format!(
+                "range [{start_idx}, {end_idx}) out of bounds (nnz={nnz})"
+            )));
+        }
+        if start_idx == end_idx {
+            // Empty partition (np > nnz). Anchor at the containing row.
+            let row = if nnz == 0 { 0 } else { ptr_search(&csr.row_ptr, start_idx.min(nnz - 1)) };
+            return Ok(PCsr {
+                start_idx,
+                end_idx,
+                start_row: row,
+                end_row: row,
+                start_flag: false,
+                row_ptr: vec![0],
+            });
+        }
+        let start_row = ptr_search(&csr.row_ptr, start_idx);
+        let end_row = ptr_search(&csr.row_ptr, end_idx - 1);
+        let start_flag = start_idx > csr.row_ptr[start_row];
+        // Local pointers: clamp the parent's offsets into [0, len].
+        let len = end_idx - start_idx;
+        let rows = end_row - start_row + 1;
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        row_ptr.push(0);
+        for j in 1..rows {
+            row_ptr.push(csr.row_ptr[start_row + j] - start_idx);
+        }
+        row_ptr.push(len);
+        Ok(PCsr { start_idx, end_idx, start_row, end_row, start_flag, row_ptr })
+    }
+
+    /// Algorithm 2, all partitions: split `csr` into `np` nnz-balanced
+    /// pCSRs. Partition `i` owns `[⌊i·nnz/np⌋, ⌊(i+1)·nnz/np⌋)`, so loads
+    /// differ by at most one non-zero.
+    pub fn partition(csr: &Csr, np: usize) -> Result<Vec<PCsr>> {
+        if np == 0 {
+            return Err(Error::InvalidPartition("np must be >= 1".into()));
+        }
+        let nnz = csr.nnz();
+        (0..np)
+            .map(|i| PCsr::from_range(csr, i * nnz / np, (i + 1) * nnz / np))
+            .collect()
+    }
+
+    /// Non-zeros owned by this partition.
+    pub fn nnz(&self) -> usize {
+        self.end_idx - self.start_idx
+    }
+
+    /// Rows spanned (including shared boundary rows); 0 for an empty
+    /// partition.
+    pub fn local_rows(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    /// Zero-copy view of the owned values.
+    pub fn val<'a>(&self, csr: &'a Csr) -> &'a [f32] {
+        &csr.val[self.start_idx..self.end_idx]
+    }
+
+    /// Zero-copy view of the owned column indices.
+    pub fn col_idx<'a>(&self, csr: &'a Csr) -> &'a [u32] {
+        &csr.col_idx[self.start_idx..self.end_idx]
+    }
+
+    /// Expand the local row pointers to per-nnz LOCAL row ids (0-based at
+    /// `start_row`) — the form the AOT stream kernel consumes. In p\*-opt
+    /// the paper computes this on the GPU (§4.1); the engine models that.
+    pub fn local_row_ids(&self) -> Vec<u32> {
+        let mut ids = Vec::with_capacity(self.nnz());
+        for j in 0..self.local_rows() {
+            let cnt = self.row_ptr[j + 1] - self.row_ptr[j];
+            ids.extend(std::iter::repeat(j as u32).take(cnt));
+        }
+        ids
+    }
+
+    /// True iff this partition's last row is shared with `next` (inferred
+    /// from the next partition's `start_flag`, as the paper notes — the
+    /// last row needs no flag of its own).
+    pub fn shares_last_row_with(&self, next: &PCsr) -> bool {
+        next.start_flag && next.start_row == self.end_row
+    }
+
+    /// Metadata bytes beyond the (borrowed) parent arrays: the O(1) fields
+    /// plus the local row pointer array. This is the paper's "small
+    /// additional memory" claim, quantified.
+    pub fn metadata_bytes(&self) -> u64 {
+        (5 * 8 + 1 + self.row_ptr.len() * 8) as u64
+    }
+}
+
+/// Merge pCSR partial results into `y` (paper Algorithm 3, lines 9–17,
+/// generalized): `y = alpha·(Σ partials) + beta·y`, where `partials[i]`
+/// was computed over partition `i` with **alpha already applied** by the
+/// kernel and has `parts[i].local_rows()` entries.
+///
+/// Rows shared between consecutive partitions accumulate; exclusive rows
+/// are plain stores. The `beta` term applies exactly once per row.
+pub fn merge_row_partials(
+    parts: &[PCsr],
+    partials: &[Vec<f32>],
+    beta: f32,
+    y: &mut [f32],
+) -> Result<()> {
+    if parts.len() != partials.len() {
+        return Err(Error::InvalidPartition(format!(
+            "{} partitions but {} partial results",
+            parts.len(),
+            partials.len()
+        )));
+    }
+    // beta*y base, computed once.
+    if beta == 0.0 {
+        y.iter_mut().for_each(|v| *v = 0.0);
+    } else {
+        y.iter_mut().for_each(|v| *v *= beta);
+    }
+    for (p, py) in parts.iter().zip(partials) {
+        if py.len() < p.local_rows() {
+            return Err(Error::InvalidPartition(format!(
+                "partial result too short: {} < {}",
+                py.len(),
+                p.local_rows()
+            )));
+        }
+        for j in 0..p.local_rows() {
+            y[p.start_row + j] += py[j];
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+
+    fn paper_csr() -> Csr {
+        Csr::from_coo(&Coo::paper_example())
+    }
+
+    #[test]
+    fn four_way_partition_of_paper_example() {
+        // Fig. 8: nnz=19, np=4 -> loads 4,5,5,5 (floor boundaries 0,4,9,14,19)
+        let csr = paper_csr();
+        let parts = PCsr::partition(&csr, 4).unwrap();
+        assert_eq!(parts.len(), 4);
+        let loads: Vec<usize> = parts.iter().map(|p| p.nnz()).collect();
+        assert_eq!(loads, vec![4, 5, 5, 5]);
+        assert_eq!(parts[0].start_idx, 0);
+        assert_eq!(parts[3].end_idx, 19);
+        // consecutive coverage
+        for w in parts.windows(2) {
+            assert_eq!(w[0].end_idx, w[1].start_idx);
+        }
+    }
+
+    #[test]
+    fn start_flag_detects_shared_rows() {
+        let csr = paper_csr(); // row_ptr = [0,2,5,8,12,16,19]
+        let parts = PCsr::partition(&csr, 4).unwrap();
+        // boundaries at 4, 9, 14: 4 is inside row 1 (2..5), 9 inside row 3
+        // (8..12), 14 inside row 3..wait 14 is inside row 4? row 4 is 12..16.
+        assert!(parts[1].start_flag);
+        assert!(parts[2].start_flag);
+        assert!(parts[3].start_flag);
+        assert!(!parts[0].start_flag);
+        // boundary exactly on a row start clears the flag:
+        // [8, 12) is exactly row 3 (row_ptr[3]=8, row_ptr[4]=12)
+        let p = PCsr::from_range(&csr, 8, 12).unwrap();
+        assert!(!p.start_flag);
+        assert_eq!((p.start_row, p.end_row), (3, 3));
+    }
+
+    #[test]
+    fn local_row_ptr_consistent() {
+        let csr = paper_csr();
+        for np in 1..=8 {
+            for p in PCsr::partition(&csr, np).unwrap() {
+                assert_eq!(p.row_ptr[0], 0);
+                assert_eq!(*p.row_ptr.last().unwrap(), p.nnz());
+                assert!(p.row_ptr.windows(2).all(|w| w[0] <= w[1]));
+                assert_eq!(p.local_rows(), p.end_row - p.start_row + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn local_row_ids_match_global() {
+        let csr = paper_csr();
+        let global = csr.expand_row_ids();
+        for p in PCsr::partition(&csr, 3).unwrap() {
+            let local = p.local_row_ids();
+            assert_eq!(local.len(), p.nnz());
+            for (k, &lid) in local.iter().enumerate() {
+                assert_eq!(
+                    lid as usize + p.start_row,
+                    global[p.start_idx + k] as usize
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn np_greater_than_nnz_yields_empty_partitions() {
+        let coo = Coo::new(3, 3, vec![0, 2], vec![1, 2], vec![1.0, 2.0]).unwrap();
+        let csr = Csr::from_coo(&coo);
+        let parts = PCsr::partition(&csr, 5).unwrap();
+        assert_eq!(parts.len(), 5);
+        let total: usize = parts.iter().map(|p| p.nnz()).sum();
+        assert_eq!(total, 2);
+        for p in &parts {
+            if p.nnz() == 0 {
+                assert_eq!(p.local_rows(), 0);
+                assert_eq!(p.row_ptr, vec![0]);
+            }
+        }
+    }
+
+    #[test]
+    fn single_partition_is_whole_matrix() {
+        let csr = paper_csr();
+        let parts = PCsr::partition(&csr, 1).unwrap();
+        assert_eq!(parts[0].nnz(), 19);
+        assert_eq!(parts[0].start_row, 0);
+        assert_eq!(parts[0].end_row, 5);
+        assert!(!parts[0].start_flag);
+        // local row_ptr == global row_ptr
+        assert_eq!(parts[0].row_ptr, csr.row_ptr);
+    }
+
+    #[test]
+    fn zero_copy_views() {
+        let csr = paper_csr();
+        let p = PCsr::from_range(&csr, 5, 12).unwrap();
+        assert_eq!(p.val(&csr), &csr.val[5..12]);
+        assert_eq!(p.col_idx(&csr), &csr.col_idx[5..12]);
+    }
+
+    #[test]
+    fn shares_last_row_inference() {
+        let csr = paper_csr();
+        let parts = PCsr::partition(&csr, 4).unwrap();
+        // partition 0 ends mid-row-1, so it shares its last row with part 1
+        assert!(parts[0].shares_last_row_with(&parts[1]));
+    }
+
+    #[test]
+    fn merge_reconstructs_full_spmv() {
+        let csr = paper_csr();
+        let x: Vec<f32> = (1..=6).map(|v| v as f32).collect();
+        // exact full SpMV
+        let mut expect = vec![0.0f32; 6];
+        for i in 0..6 {
+            for k in csr.row_ptr[i]..csr.row_ptr[i + 1] {
+                expect[i] += csr.val[k] * x[csr.col_idx[k] as usize];
+            }
+        }
+        for np in 1..=8 {
+            let parts = PCsr::partition(&csr, np).unwrap();
+            let partials: Vec<Vec<f32>> = parts
+                .iter()
+                .map(|p| {
+                    let mut py = vec![0.0f32; p.local_rows()];
+                    for j in 0..p.local_rows() {
+                        for k in p.row_ptr[j]..p.row_ptr[j + 1] {
+                            py[j] += p.val(&csr)[k] * x[p.col_idx(&csr)[k] as usize];
+                        }
+                    }
+                    py
+                })
+                .collect();
+            let mut y = vec![0.0f32; 6];
+            merge_row_partials(&parts, &partials, 0.0, &mut y).unwrap();
+            for (a, b) in y.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4, "np={np}: {y:?} vs {expect:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_applies_beta_once_per_row() {
+        let csr = paper_csr();
+        let parts = PCsr::partition(&csr, 4).unwrap();
+        let partials: Vec<Vec<f32>> = parts.iter().map(|p| vec![0.0; p.local_rows()]).collect();
+        let mut y = vec![2.0f32; 6];
+        merge_row_partials(&parts, &partials, 3.0, &mut y).unwrap();
+        assert_eq!(y, vec![6.0f32; 6]); // 2*3, even for rows shared by 2 parts
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_inputs() {
+        let csr = paper_csr();
+        let parts = PCsr::partition(&csr, 2).unwrap();
+        let mut y = vec![0.0f32; 6];
+        assert!(merge_row_partials(&parts, &[vec![]], 0.0, &mut y).is_err());
+        let short = vec![vec![0.0; 1], vec![0.0; 1]];
+        assert!(merge_row_partials(&parts, &short, 0.0, &mut y).is_err());
+    }
+
+    #[test]
+    fn range_validation() {
+        let csr = paper_csr();
+        assert!(PCsr::from_range(&csr, 5, 3).is_err());
+        assert!(PCsr::from_range(&csr, 0, 99).is_err());
+        assert!(PCsr::partition(&csr, 0).is_err());
+    }
+
+    #[test]
+    fn metadata_cost_is_small() {
+        // at realistic scale the pCSR metadata is a tiny fraction of the
+        // payload it avoids copying (the paper's "small additional memory")
+        let coo = crate::formats::gen::power_law(5_000, 5_000, 100_000, 2.0, 21);
+        let csr = Csr::from_coo(&coo);
+        let parts = PCsr::partition(&csr, 8).unwrap();
+        let meta: u64 = parts.iter().map(|p| p.metadata_bytes()).sum();
+        assert!(
+            (meta as f64) < 0.15 * csr.storage_bytes() as f64,
+            "meta {meta} vs payload {}",
+            csr.storage_bytes()
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! # MSREP — a fast yet light sparse matrix framework for multi-GPU systems
+//!
+//! Rust + JAX + Pallas reproduction of *MSREP: A Fast yet Light Sparse Matrix
+//! Framework for Multi-GPU Systems* (Chen et al., cs.DC 2022).
+//!
+//! The paper's contribution is **coordination**: partial sparse formats
+//! ([`formats::PCsr`], [`formats::PCsc`], [`formats::PCoo`]) that let an
+//! arbitrary contiguous nnz-range of a CSR/CSC/COO matrix be handed to any
+//! existing single-device SpMV kernel, plus an nnz-balanced multi-GPU SpMV
+//! engine ([`coordinator::Engine`]) with NUMA-aware placement and
+//! format-specific partial-result merging.
+//!
+//! ## Architecture (three layers, python never on the request path)
+//!
+//! ```text
+//!  L3  rust coordinator   partitioning / placement / merging / metrics  (this crate)
+//!  L2  JAX graphs         spmv_partial, axpby, reduce_partials          (python/compile, AOT)
+//!  L1  Pallas kernel      tiled gather + segment-reduce SpMV            (python/compile/kernels)
+//!  RT  PJRT CPU client    loads artifacts/*.hlo.txt                     (rust/src/runtime)
+//! ```
+//!
+//! Physical GPUs are replaced by the [`sim`] substrate: a parameterised
+//! multi-GPU platform model (Summit, DGX-1) whose devices *really execute*
+//! their partitions through PJRT while a calibrated clock models V100
+//! memory-bound SpMV time and interconnect transfers. See `DESIGN.md` §3.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use msrep::formats::{gen, Csr};
+//! use msrep::coordinator::{Engine, RunConfig, Mode, FormatKind};
+//! use msrep::sim::Platform;
+//!
+//! let coo = gen::power_law(10_000, 10_000, 200_000, 2.0, 42);
+//! let csr = Csr::from_coo(&coo);
+//! let engine = Engine::new(RunConfig {
+//!     platform: Platform::dgx1(),
+//!     num_gpus: 8,
+//!     mode: Mode::PStarOpt,
+//!     format: FormatKind::Csr,
+//!     ..Default::default()
+//! }).unwrap();
+//! let x = vec![1.0f32; 10_000];
+//! let report = engine.spmv(&csr.into(), &x, 1.0, 0.0, None).unwrap();
+//! println!("modeled time: {:?}", report.metrics.modeled_total);
+//! ```
+
+pub mod coordinator;
+pub mod error;
+pub mod formats;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod spmv;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,348 @@
+//! `msrep` — command-line launcher for the MSREP multi-GPU SpMV framework.
+//!
+//! ```text
+//! msrep info                               platform presets + artifact status
+//! msrep gen       --out m.mtx ...          generate a synthetic matrix
+//! msrep profile   --matrix m.mtx           structural profile (Table-2 style)
+//! msrep partition --matrix m.mtx --np 8    partition + load/imbalance report
+//! msrep run       --matrix m.mtx ...       one mSpMV with full breakdown
+//! msrep suite                              Table-2 analog summary
+//! ```
+//!
+//! The paper-figure regeneration lives in `cargo bench` /
+//! `cargo run --example paper_figures`.
+
+use std::process::ExitCode;
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+use msrep::formats::{convert, gen, io, stats, FormatKind, Matrix};
+use msrep::report::{format_duration_s, format_pct, Table};
+use msrep::sim::Platform;
+use msrep::util::cli::{Args, Parser};
+use msrep::workload;
+use msrep::{Error, Result};
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let Some(cmd) = argv.first().cloned() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = argv[1..].to_vec();
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "gen" => cmd_gen(rest),
+        "profile" => cmd_profile(rest),
+        "partition" => cmd_partition(rest),
+        "run" => cmd_run(rest),
+        "suite" => cmd_suite(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(Error::Usage(format!("unknown command '{other}' (try `msrep help`)"))),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "msrep — MSREP multi-GPU sparse matrix framework (paper reproduction)\n\n\
+         commands:\n\
+         \x20 info        platform presets and artifact status\n\
+         \x20 gen         generate a synthetic matrix (--help for flags)\n\
+         \x20 profile     structural profile of a MatrixMarket file\n\
+         \x20 partition   partition a matrix and report per-GPU loads\n\
+         \x20 run         run one multi-GPU SpMV with a full breakdown\n\
+         \x20 suite       list the Table-2 evaluation suite analogs\n"
+    );
+}
+
+fn cmd_info() -> Result<()> {
+    println!("platforms:");
+    for p in [Platform::summit(), Platform::dgx1()] {
+        println!(
+            "  {:<8} {} GPUs, {} NUMA domains, {:?} host link, {:.0} GB/s HBM",
+            p.name,
+            p.num_gpus,
+            p.num_numa,
+            p.host_link,
+            p.hbm_bw / 1e9
+        );
+    }
+    let dir = msrep::runtime::default_artifact_dir();
+    match msrep::runtime::Manifest::load(&dir) {
+        Ok(m) => println!(
+            "artifacts: {} entries at {}{}",
+            m.len(),
+            dir.display(),
+            if m.quick { " (QUICK build)" } else { "" }
+        ),
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn gen_parser() -> Parser {
+    Parser::new()
+        .flag("out", "output MatrixMarket path", Some("matrix.mtx"))
+        .flag("kind", "power-law | uniform | banded | two-band", Some("power-law"))
+        .flag("m", "rows", Some("10000"))
+        .flag("n", "cols (default: m)", None)
+        .flag("nnz", "non-zeros", Some("100000"))
+        .flag("r", "power-law exponent R", Some("2.0"))
+        .flag("ratio", "two-band low:high nnz ratio", Some("8.0"))
+        .flag("band", "banded matrix bandwidth", Some("5"))
+        .flag("seed", "PRNG seed", Some("42"))
+}
+
+fn cmd_gen(argv: Vec<String>) -> Result<()> {
+    let p = gen_parser();
+    if argv.iter().any(|a| a == "--help") {
+        println!("msrep gen — generate a synthetic matrix\n{}", p.help());
+        return Ok(());
+    }
+    let a = p.parse(argv)?;
+    let m = a.usize_or("m", 10_000)?;
+    let n = a.usize_or("n", m)?;
+    let nnz = a.usize_or("nnz", 100_000)?;
+    let seed = a.u64_or("seed", 42)?;
+    let kind = a.str_or("kind", "power-law");
+    let coo = match kind.as_str() {
+        "power-law" => gen::power_law(m, n, nnz, a.f64_or("r", 2.0)?, seed),
+        "uniform" => gen::uniform(m, n, nnz, seed),
+        "banded" => gen::banded(m, n, a.usize_or("band", 5)?, seed),
+        "two-band" => gen::two_band(m, n, nnz, a.f64_or("ratio", 8.0)?, seed),
+        other => return Err(Error::Usage(format!("unknown kind '{other}'"))),
+    };
+    let out = a.str_or("out", "matrix.mtx");
+    io::write_matrix_market_file(&out, &coo)?;
+    println!("wrote {} ({}x{}, {} nnz) to {out}", kind, coo.rows(), coo.cols(), coo.nnz());
+    Ok(())
+}
+
+fn load_matrix(a: &Args) -> Result<Matrix> {
+    if let Some(name) = a.get("suite") {
+        let e = workload::by_name(name)
+            .ok_or_else(|| Error::Usage(format!("unknown suite matrix '{name}'")))?;
+        return Ok(Matrix::Coo(workload::suite_matrix(&e)));
+    }
+    let path = a
+        .get("matrix")
+        .ok_or_else(|| Error::Usage("--matrix <file.mtx> or --suite <name> required".into()))?;
+    Ok(Matrix::Coo(io::read_matrix_market_file(path)?))
+}
+
+fn to_format(mat: Matrix, format: FormatKind) -> Matrix {
+    match format {
+        FormatKind::Csr => Matrix::Csr(convert::to_csr(&mat)),
+        FormatKind::Csc => Matrix::Csc(convert::to_csc(&mat)),
+        FormatKind::Coo => Matrix::Coo(convert::to_coo(&mat)),
+    }
+}
+
+fn cmd_profile(argv: Vec<String>) -> Result<()> {
+    let p = Parser::new()
+        .flag("matrix", "MatrixMarket file", None)
+        .flag("suite", "suite matrix name", None);
+    let a = p.parse(argv)?;
+    let mat = load_matrix(&a)?;
+    let coo = convert::to_coo(&mat);
+    let prof = stats::profile(&coo);
+    let mut t = Table::new(["property", "value"]);
+    t.row(["rows", &prof.m.to_string()]);
+    t.row(["cols", &prof.n.to_string()]);
+    t.row(["nnz", &prof.nnz.to_string()]);
+    t.row(["density", &format!("{:.3e}", prof.density)]);
+    t.row(["mean nnz/row", &format!("{:.2}", prof.mean_row_nnz)]);
+    t.row(["max nnz/row", &prof.max_row_nnz.to_string()]);
+    t.row(["max nnz/col", &prof.max_col_nnz.to_string()]);
+    t.row([
+        "power-law R".to_string(),
+        prof.r_exponent.map_or("n/a".to_string(), |r| format!("{r:.2}")),
+    ]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_partition(argv: Vec<String>) -> Result<()> {
+    let p = Parser::new()
+        .flag("matrix", "MatrixMarket file", None)
+        .flag("suite", "suite matrix name", None)
+        .flag("np", "partitions", Some("8"))
+        .flag("format", "csr | csc | coo", Some("csr"))
+        .flag("strategy", "balanced | blocks", Some("balanced"));
+    let a = p.parse(argv)?;
+    let format = FormatKind::parse(&a.str_or("format", "csr"))
+        .ok_or_else(|| Error::Usage("bad --format".into()))?;
+    let mat = to_format(load_matrix(&a)?, format);
+    let np = a.usize_or("np", 8)?;
+    let strategy = a.str_or("strategy", "balanced");
+    let out = match strategy.as_str() {
+        "balanced" => msrep::coordinator::partitioner::balanced(&mat, np)?,
+        "blocks" => msrep::coordinator::partitioner::baseline(&mat, np)?,
+        other => return Err(Error::Usage(format!("unknown strategy '{other}'"))),
+    };
+    let mut t = Table::new(["gpu", "nnz", "share"]);
+    let total: u64 = out.loads().iter().sum();
+    for (g, &l) in out.loads().iter().enumerate() {
+        t.row([
+            g.to_string(),
+            l.to_string(),
+            format_pct(l as f64 / total.max(1) as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("imbalance (max/mean): {:.4}", out.imbalance());
+    Ok(())
+}
+
+fn run_parser() -> Parser {
+    Parser::new()
+        .flag("matrix", "MatrixMarket file", None)
+        .flag("suite", "suite matrix name (e.g. HV15R)", None)
+        .flag("platform", "summit | dgx1", Some("dgx1"))
+        .flag("gpus", "GPUs to use", None)
+        .flag("mode", "baseline | pstar | popt", Some("popt"))
+        .flag("format", "csr | csc | coo", Some("csr"))
+        .flag("backend", "pjrt | cpu", Some("pjrt"))
+        .flag("alpha", "alpha scalar", Some("1.0"))
+        .flag("beta", "beta scalar", Some("0.0"))
+        .flag("iters", "SpMV iterations", Some("1"))
+        .bool_flag("no-numa", "disable NUMA-aware placement")
+        .bool_flag("verify", "check against the CPU oracle")
+        .bool_flag("timeline", "render the modeled phase timeline + per-GPU loads")
+}
+
+fn cmd_run(argv: Vec<String>) -> Result<()> {
+    let p = run_parser();
+    if argv.iter().any(|a| a == "--help") {
+        println!("msrep run — one multi-GPU SpMV\n{}", p.help());
+        return Ok(());
+    }
+    let a = p.parse(argv)?;
+    let platform = Platform::by_name(&a.str_or("platform", "dgx1"))?;
+    let num_gpus = a.usize_or("gpus", platform.num_gpus)?;
+    let mode = Mode::parse(&a.str_or("mode", "popt"))
+        .ok_or_else(|| Error::Usage("bad --mode".into()))?;
+    let format = FormatKind::parse(&a.str_or("format", "csr"))
+        .ok_or_else(|| Error::Usage("bad --format".into()))?;
+    let backend = match a.str_or("backend", "pjrt").as_str() {
+        "pjrt" => Backend::Pjrt,
+        "cpu" => Backend::CpuRef,
+        other => return Err(Error::Usage(format!("unknown backend '{other}'"))),
+    };
+    let mat = to_format(load_matrix(&a)?, format);
+    let alpha = a.f64_or("alpha", 1.0)? as f32;
+    let beta = a.f64_or("beta", 0.0)? as f32;
+    let iters = a.usize_or("iters", 1)?;
+
+    let engine = Engine::new(RunConfig {
+        platform,
+        num_gpus,
+        mode,
+        format,
+        backend,
+        numa_aware: if a.is_set("no-numa") { Some(false) } else { None },
+        strategy_override: None,
+    })?;
+
+    let x = gen::dense_vector(mat.cols(), 7);
+    let y0 = gen::dense_vector(mat.rows(), 8);
+    let mut last = None;
+    for _ in 0..iters.max(1) {
+        last = Some(engine.spmv(&mat, &x, alpha, beta, Some(&y0))?);
+    }
+    let rep = last.unwrap();
+    let mm = &rep.metrics;
+
+    println!(
+        "matrix: {}x{} nnz={} format={} | {} mode={} gpus={}",
+        mat.rows(),
+        mat.cols(),
+        mat.nnz(),
+        format.name(),
+        engine.config().platform.name,
+        mode.label(),
+        num_gpus
+    );
+    let mut t = Table::new(["phase", "modeled", "share"]);
+    t.row([
+        "partition".to_string(),
+        format_duration_s(mm.t_partition),
+        format_pct(mm.partition_overhead()),
+    ]);
+    t.row([
+        "h2d".to_string(),
+        format_duration_s(mm.t_h2d),
+        format_pct(mm.t_h2d / mm.modeled_total),
+    ]);
+    t.row([
+        "compute".to_string(),
+        format_duration_s(mm.t_compute),
+        format_pct(mm.t_compute / mm.modeled_total),
+    ]);
+    t.row([
+        "merge".to_string(),
+        format_duration_s(mm.t_merge),
+        format_pct(mm.merge_overhead()),
+    ]);
+    t.row(["TOTAL".to_string(), format_duration_s(mm.modeled_total), "100.0%".to_string()]);
+    print!("{}", t.render());
+    println!(
+        "imbalance {:.3} | modeled {:.2} GFLOP/s | measured host: partition {} exec {} merge {}",
+        mm.imbalance,
+        mm.gflops(),
+        format_duration_s(mm.measured_partition),
+        format_duration_s(mm.measured_exec),
+        format_duration_s(mm.measured_merge),
+    );
+
+    if a.is_set("timeline") {
+        println!();
+        print!("{}", msrep::report::render_timeline(mm, 50));
+        println!();
+        print!("{}", msrep::report::render_loads(mm, 50));
+    }
+
+    if a.is_set("verify") {
+        let mut expect = y0.clone();
+        msrep::spmv::spmv_matrix(&mat, &x, alpha, beta, &mut expect)?;
+        let max_rel = rep
+            .y
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+            .fold(0.0f32, f32::max);
+        println!("verify: max relative error vs CPU oracle = {max_rel:.2e}");
+        if max_rel > 1e-2 {
+            return Err(Error::InvalidMatrix(format!("verification FAILED ({max_rel})")));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_suite() -> Result<()> {
+    let mut t = Table::new(["matrix", "paper size", "paper nnz", "R", "scaled m", "scaled nnz"]);
+    for e in workload::suite() {
+        t.row([
+            e.name.to_string(),
+            format!("{}K x {}K", e.paper_m / 1000, e.paper_m / 1000),
+            format!("{}M", e.paper_nnz / 1_000_000),
+            format!("{:.2}", e.r),
+            e.m.to_string(),
+            e.nnz.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

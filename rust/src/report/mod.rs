@@ -1,0 +1,9 @@
+//! Paper-style output formatting: ASCII/markdown tables and series plots
+//! for the figure-regeneration benches and the e2e driver.
+
+pub mod figures;
+mod table;
+pub mod timeline;
+
+pub use table::{ascii_bar, format_duration_s, format_pct, Series, Table};
+pub use timeline::{render_loads, render_timeline};

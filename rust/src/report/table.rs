@@ -1,0 +1,179 @@
+//! Minimal table/series renderers (markdown-compatible) for bench output.
+
+use std::fmt::Write as _;
+
+/// A column-aligned markdown table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(headers: I) -> Table {
+        Table {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: vec![],
+        }
+    }
+
+    /// Append a row (must match the header count; checked on render).
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        self.rows.push(cells.into_iter().map(Into::into).collect());
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as a column-aligned markdown table.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            assert_eq!(row.len(), ncols, "row width mismatch");
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            out.push('|');
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(out, " {c:<w$} |", w = w);
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.headers, &widths, &mut out);
+        out.push('|');
+        for w in &widths {
+            let _ = write!(out, "{}|", "-".repeat(w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+/// A named numeric series (one line of a paper figure).
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// legend label
+    pub label: String,
+    /// (x, y) points
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    /// New empty series.
+    pub fn new<S: Into<String>>(label: S) -> Series {
+        Series { label: label.into(), points: vec![] }
+    }
+
+    /// Append a point.
+    pub fn push(&mut self, x: f64, y: f64) -> &mut Self {
+        self.points.push((x, y));
+        self
+    }
+
+    /// Render several series as a table with x in the first column — the
+    /// textual equivalent of one paper figure.
+    pub fn render_table(series: &[Series], x_label: &str) -> String {
+        let mut headers = vec![x_label.to_string()];
+        headers.extend(series.iter().map(|s| s.label.clone()));
+        let mut t = Table::new(headers);
+        let nx = series.first().map_or(0, |s| s.points.len());
+        for i in 0..nx {
+            let mut row = vec![format!("{}", series[0].points[i].0)];
+            for s in series {
+                row.push(format!("{:.3}", s.points.get(i).map_or(f64::NAN, |p| p.1)));
+            }
+            t.row(row);
+        }
+        t.render()
+    }
+}
+
+/// Horizontal ASCII bar of `frac` (clamped to [0,1]) in `width` cells.
+pub fn ascii_bar(frac: f64, width: usize) -> String {
+    let f = frac.clamp(0.0, 1.0);
+    let filled = (f * width as f64).round() as usize;
+    format!("{}{}", "#".repeat(filled), ".".repeat(width - filled))
+}
+
+/// Human duration from seconds: ns/µs/ms/s ranges.
+pub fn format_duration_s(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.0} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+/// Percentage with one decimal.
+pub fn format_pct(frac: f64) -> String {
+    format!("{:.1}%", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(["name", "value"]);
+        t.row(["a", "1"]);
+        t.row(["longer", "22"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all lines same width
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(lines[0].contains("name") && lines[3].contains("longer"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only one"]);
+        t.render();
+    }
+
+    #[test]
+    fn series_table() {
+        let mut a = Series::new("baseline");
+        a.push(1.0, 1.0).push(2.0, 1.5);
+        let mut b = Series::new("p*-opt");
+        b.push(1.0, 1.0).push(2.0, 1.9);
+        let s = Series::render_table(&[a, b], "gpus");
+        assert!(s.contains("baseline") && s.contains("p*-opt"));
+        assert!(s.contains("1.900"));
+    }
+
+    #[test]
+    fn bars_and_formats() {
+        assert_eq!(ascii_bar(0.5, 10), "#####.....");
+        assert_eq!(ascii_bar(2.0, 4), "####");
+        assert_eq!(ascii_bar(-1.0, 4), "....");
+        assert_eq!(format_duration_s(0.5), "500.00 ms");
+        assert_eq!(format_duration_s(2.0), "2.000 s");
+        assert_eq!(format_duration_s(3e-5), "30.0 µs");
+        assert_eq!(format_duration_s(5e-8), "50 ns");
+        assert_eq!(format_pct(0.1234), "12.3%");
+    }
+}

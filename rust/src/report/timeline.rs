@@ -1,0 +1,105 @@
+//! ASCII timeline of an engine run — a Gantt-style view of the modeled
+//! multi-GPU pipeline (`msrep run --timeline`).
+
+use crate::coordinator::Metrics;
+
+use super::table::format_duration_s;
+
+/// Render the modeled phase timeline of one SpMV as proportional bars.
+///
+/// ```text
+/// partition |##                           |   1.2 µs   3.1%
+/// h2d       |############################ |  31.0 µs  77.5%
+/// ...
+/// ```
+pub fn render_timeline(m: &Metrics, width: usize) -> String {
+    let total = m.modeled_total.max(f64::MIN_POSITIVE);
+    let phases = [
+        ("partition", m.t_partition),
+        ("h2d", m.t_h2d),
+        ("compute", m.t_compute),
+        ("merge", m.t_merge),
+    ];
+    let mut out = String::new();
+    for (name, t) in phases {
+        let frac = t / total;
+        let filled = (frac * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{name:<10}|{}{}| {:>10}  {:>5.1}%\n",
+            "#".repeat(filled.min(width)),
+            " ".repeat(width.saturating_sub(filled)),
+            format_duration_s(t),
+            frac * 100.0,
+        ));
+    }
+    out.push_str(&format!(
+        "{:<10} {} total, imbalance {:.3}, {} GPUs, {:.2} GFLOP/s\n",
+        "=",
+        format_duration_s(total),
+        m.imbalance,
+        m.np,
+        m.gflops(),
+    ));
+    out
+}
+
+/// Per-GPU load bars (who owns how many non-zeros).
+pub fn render_loads(m: &Metrics, width: usize) -> String {
+    let max = m.loads.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = String::new();
+    for (g, &l) in m.loads.iter().enumerate() {
+        let filled = (l as f64 / max as f64 * width as f64).round() as usize;
+        out.push_str(&format!(
+            "gpu {g:<2} |{}{}| {l} nnz\n",
+            "#".repeat(filled.min(width)),
+            " ".repeat(width.saturating_sub(filled)),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics() -> Metrics {
+        Metrics {
+            np: 2,
+            loads: vec![100, 50],
+            imbalance: 1.33,
+            t_partition: 0.1,
+            t_h2d: 0.6,
+            t_compute: 0.2,
+            t_merge: 0.1,
+            modeled_total: 1.0,
+            nnz: 150,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn timeline_has_all_phases_and_percentages() {
+        let s = render_timeline(&metrics(), 20);
+        for phase in ["partition", "h2d", "compute", "merge"] {
+            assert!(s.contains(phase), "missing {phase}");
+        }
+        assert!(s.contains("60.0%"));
+        assert!(s.contains("total"));
+    }
+
+    #[test]
+    fn loads_bars_scale_to_max() {
+        let s = render_loads(&metrics(), 10);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].matches('#').count() == 10);
+        assert!(lines[1].matches('#').count() == 5);
+    }
+
+    #[test]
+    fn zero_total_does_not_panic() {
+        let m = Metrics::default();
+        let s = render_timeline(&m, 10);
+        assert!(s.contains("partition"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Shape-bucket grid — rust mirror of `python/compile/buckets.py`.
+//!
+//! The two sides must agree exactly; [`super::manifest`] cross-checks these
+//! constants against `artifacts/manifest.json` at startup so a drift fails
+//! fast instead of selecting a non-existent executable.
+
+use crate::error::{Error, Result};
+
+/// Padded nnz-stream lengths (×2 spacing — see the §Perf note in
+/// python/compile/buckets.py).
+pub const NNZ_BUCKETS: [usize; 9] =
+    [4_096, 8_192, 16_384, 32_768, 65_536, 131_072, 262_144, 524_288, 1_048_576];
+
+/// Padded dense-vector lengths (x inputs and y outputs).
+pub const VEC_BUCKETS: [usize; 3] = [4_096, 32_768, 262_144];
+
+/// Pallas grid tile (nnz per grid step). See the §Perf sweep note in
+/// python/compile/buckets.py — 256Ki is ~9x faster than 16Ki on the
+/// XLA-CPU interpret path while staying inside the VMEM budget.
+pub const TILE: usize = 262_144;
+
+/// Fan-in of the reduce_partials artifact.
+pub const REDUCE_K: usize = 8;
+
+/// SpMM right-hand-side width (paper §2.3 multi-vector extension).
+pub const SPMM_K: usize = 8;
+
+/// SpMM vector buckets stop at 32Ki: K-wide X and Y residents at 262144
+/// would exceed the 16 MiB VMEM budget (see python/compile/buckets.py).
+pub const SPMM_VEC_BUCKETS: [usize; 2] = [4_096, 32_768];
+
+/// Smallest bucket >= `value`, or BucketOverflow.
+fn bucket_for(value: usize, buckets: &[usize], axis: &'static str) -> Result<usize> {
+    buckets
+        .iter()
+        .copied()
+        .find(|&b| value <= b)
+        .ok_or(Error::BucketOverflow { axis, value, max: *buckets.last().unwrap() })
+}
+
+/// nnz-stream bucket for a partition of `nnz` non-zeros.
+pub fn nnz_bucket(nnz: usize) -> Result<usize> {
+    bucket_for(nnz, &NNZ_BUCKETS, "nnz")
+}
+
+/// Dense-vector bucket for a vector of length `n`.
+pub fn vec_bucket(n: usize) -> Result<usize> {
+    bucket_for(n, &VEC_BUCKETS, "vec")
+}
+
+/// SpMM vector bucket (smaller grid; see [`SPMM_VEC_BUCKETS`]).
+pub fn spmm_vec_bucket(n: usize) -> Result<usize> {
+    bucket_for(n, &SPMM_VEC_BUCKETS, "spmm-vec")
+}
+
+/// Artifact name for the partition-SpMV executable of a bucket triple.
+pub fn spmv_name(nnz_pad: usize, n_pad: usize, m_pad: usize) -> String {
+    format!("spmv_partial_nnz{nnz_pad}_n{n_pad}_m{m_pad}")
+}
+
+/// Artifact name for the partition-SpMM executable of a bucket triple.
+pub fn spmm_name(nnz_pad: usize, n_pad: usize, m_pad: usize) -> String {
+    format!("spmm_partial_nnz{nnz_pad}_n{n_pad}_m{m_pad}_k{SPMM_K}")
+}
+
+/// Artifact name for the axpby executable.
+pub fn axpby_name(m_pad: usize) -> String {
+    format!("axpby_m{m_pad}")
+}
+
+/// Artifact name for the reduce executable.
+pub fn reduce_name(m_pad: usize) -> String {
+    format!("reduce_k{REDUCE_K}_m{m_pad}")
+}
+
+/// Padding waste factor for a request: padded/requested (>= 1).
+pub fn padding_waste(requested: usize, padded: usize) -> f64 {
+    if requested == 0 {
+        1.0
+    } else {
+        padded as f64 / requested as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_bucket_is_identity() {
+        for b in NNZ_BUCKETS {
+            assert_eq!(nnz_bucket(b).unwrap(), b);
+        }
+        for b in VEC_BUCKETS {
+            assert_eq!(vec_bucket(b).unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn rounds_up() {
+        assert_eq!(nnz_bucket(0).unwrap(), 4_096);
+        assert_eq!(nnz_bucket(4_097).unwrap(), 8_192);
+        assert_eq!(vec_bucket(5_000).unwrap(), 32_768);
+    }
+
+    #[test]
+    fn overflow_is_typed_error() {
+        match nnz_bucket(2_000_000) {
+            Err(Error::BucketOverflow { axis, value, max }) => {
+                assert_eq!((axis, value, max), ("nnz", 2_000_000, 1_048_576));
+            }
+            other => panic!("expected overflow, got {other:?}"),
+        }
+        assert!(vec_bucket(300_000).is_err());
+    }
+
+    #[test]
+    fn names_match_python_side() {
+        // These strings are the contract with python/compile/buckets.py.
+        assert_eq!(spmv_name(4096, 4096, 4096), "spmv_partial_nnz4096_n4096_m4096");
+        assert_eq!(axpby_name(32768), "axpby_m32768");
+        assert_eq!(reduce_name(262144), "reduce_k8_m262144");
+    }
+
+    #[test]
+    fn waste_bounded_by_spacing() {
+        // x2 nnz spacing: waste < 2 for anything above the smallest bucket
+        for req in [5_000usize, 20_000, 70_000, 300_000] {
+            let padded = nnz_bucket(req).unwrap();
+            assert!(padding_waste(req, padded) < 2.0);
+        }
+        assert_eq!(padding_waste(0, 4096), 1.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! PJRT CPU client wrapper: load HLO text, compile once, cache executables.
+//!
+//! Follows the reference wiring of `/opt/xla-example/load_hlo.rs`:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! HLO **text** is the interchange format — jax ≥ 0.5 emits serialized
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see DESIGN.md §2 and the aot pipeline docs).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use crate::error::Result;
+
+/// A compiled artifact, cached per name.
+pub type Executable = Rc<xla::PjRtLoadedExecutable>;
+
+/// PJRT CPU client with a per-name executable cache.
+///
+/// Not `Sync`: PJRT execution runs on the engine thread (the simulated
+/// GPUs' *time* is modeled, so serialized host execution costs nothing on
+/// this 1-core container — see DESIGN.md §3).
+pub struct Client {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Executable>>,
+    compiles: RefCell<usize>,
+}
+
+impl Client {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Client> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Client {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            compiles: RefCell::new(0),
+        })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file, or return the cached executable.
+    pub fn compile_hlo_file(&self, name: &str, path: &Path) -> Result<Executable> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| crate::error::Error::Manifest("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        *self.compiles.borrow_mut() += 1;
+        Ok(exe)
+    }
+
+    /// Execute a cached executable with literal arguments; returns the
+    /// single tuple-wrapped output as a Literal (our artifacts all lower
+    /// with `return_tuple=True`, so the rust side unwraps a 1-tuple).
+    pub fn execute1(&self, exe: &Executable, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+
+    /// Upload host data to a device-resident buffer (one host→device copy,
+    /// no Literal intermediary — the §Perf fast path; also lets the engine
+    /// upload `x` once and share it across all partitions of one SpMV).
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload i32 host data to a device buffer.
+    pub fn buffer_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute with device-resident buffer arguments; unwraps the 1-tuple.
+    pub fn execute1_b(
+        &self,
+        exe: &Executable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::Literal> {
+        let result = exe.execute_b::<&xla::PjRtBuffer>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+
+    /// How many distinct artifacts have been compiled (cache misses).
+    pub fn compile_count(&self) -> usize {
+        *self.compiles.borrow()
+    }
+
+    /// Number of cached executables.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// Tests for the client live in rust/tests/runtime_integration.rs — they
+// need the artifacts directory, which unit tests must not assume.

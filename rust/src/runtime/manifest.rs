@@ -1,0 +1,263 @@
+//! Artifact manifest loader: parses `artifacts/manifest.json` (written by
+//! `python -m compile.aot`) and cross-checks it against the compiled-in
+//! bucket grid of [`super::buckets`].
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+use super::buckets;
+
+/// Kind of one AOT artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// bucketed partition-SpMV kernel
+    SpmvPartial,
+    /// bucketed partition-SpMM kernel (K dense right-hand sides)
+    SpmmPartial,
+    /// `y = a*p + b*y` epilogue
+    Axpby,
+    /// k-way partial-vector sum
+    ReducePartials,
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// unique artifact name (also the HLO file stem)
+    pub name: String,
+    /// kind
+    pub kind: ArtifactKind,
+    /// HLO text file name inside the artifact dir
+    pub file: String,
+    /// nnz bucket (SpmvPartial only)
+    pub nnz_pad: Option<usize>,
+    /// x-vector bucket (SpmvPartial only)
+    pub n_pad: Option<usize>,
+    /// y-vector bucket
+    pub m_pad: Option<usize>,
+}
+
+/// Parsed and validated manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    /// directory holding the HLO files
+    pub dir: PathBuf,
+    /// whether the python side built only the quick subset
+    pub quick: bool,
+    entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and validate against the bucket grid.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let root = json::parse(&text)?;
+        let quick = matches!(root.get("quick"), Some(Value::Bool(true)));
+
+        // Cross-check the bucket grids (the python side is the source of
+        // truth for what was compiled; the rust side for what is selected).
+        let nnz: Vec<usize> = as_usize_list(&root, "nnz_buckets")?;
+        let vecb: Vec<usize> = as_usize_list(&root, "vec_buckets")?;
+        if nnz != buckets::NNZ_BUCKETS.to_vec() {
+            return Err(Error::Manifest(format!(
+                "nnz bucket grid mismatch: manifest {nnz:?} vs compiled-in {:?}",
+                buckets::NNZ_BUCKETS
+            )));
+        }
+        if vecb != buckets::VEC_BUCKETS.to_vec() {
+            return Err(Error::Manifest(format!(
+                "vec bucket grid mismatch: manifest {vecb:?} vs compiled-in {:?}",
+                buckets::VEC_BUCKETS
+            )));
+        }
+        let reduce_k = root
+            .get("reduce_k")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| Error::Manifest("missing reduce_k".into()))?;
+        if reduce_k != buckets::REDUCE_K {
+            return Err(Error::Manifest(format!(
+                "reduce_k mismatch: manifest {reduce_k} vs compiled-in {}",
+                buckets::REDUCE_K
+            )));
+        }
+
+        let mut entries = BTreeMap::new();
+        let arts = root
+            .get("artifacts")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::Manifest("missing artifacts array".into()))?;
+        for a in arts {
+            let name = field_str(a, "name")?;
+            let kind = match field_str(a, "kind")?.as_str() {
+                "spmv_partial" => ArtifactKind::SpmvPartial,
+                "spmm_partial" => ArtifactKind::SpmmPartial,
+                "axpby" => ArtifactKind::Axpby,
+                "reduce_partials" => ArtifactKind::ReducePartials,
+                other => return Err(Error::Manifest(format!("unknown kind '{other}'"))),
+            };
+            let entry = ArtifactEntry {
+                name: name.clone(),
+                kind,
+                file: field_str(a, "file")?,
+                nnz_pad: a.get("nnz_pad").and_then(Value::as_usize),
+                n_pad: a.get("n_pad").and_then(Value::as_usize),
+                m_pad: a.get("m_pad").and_then(Value::as_usize),
+            };
+            if matches!(kind, ArtifactKind::SpmvPartial | ArtifactKind::SpmmPartial)
+                && (entry.nnz_pad.is_none() || entry.n_pad.is_none() || entry.m_pad.is_none())
+            {
+                return Err(Error::Manifest(format!("incomplete spmv entry '{name}'")));
+            }
+            entries.insert(name, entry);
+        }
+        if entries.is_empty() {
+            return Err(Error::Manifest("manifest lists no artifacts".into()));
+        }
+        Ok(Manifest { dir, quick, entries })
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries.get(name).ok_or_else(|| {
+            Error::Manifest(format!(
+                "artifact '{name}' not in manifest{}",
+                if self.quick { " (quick build — run the full `make artifacts`)" } else { "" }
+            ))
+        })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let e = self.get(name)?;
+        let p = self.dir.join(&e.file);
+        if !p.exists() {
+            return Err(Error::Manifest(format!("HLO file missing: {}", p.display())));
+        }
+        Ok(p)
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if no artifacts (never, post-validation).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate entries.
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.entries.values()
+    }
+}
+
+fn field_str(v: &Value, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .map(|s| s.to_string())
+        .ok_or_else(|| Error::Manifest(format!("missing string field '{key}'")))
+}
+
+fn as_usize_list(root: &Value, key: &str) -> Result<Vec<usize>> {
+    root.get(key)
+        .and_then(Value::as_arr)
+        .map(|xs| xs.iter().filter_map(Value::as_usize).collect())
+        .ok_or_else(|| Error::Manifest(format!("missing list '{key}'")))
+}
+
+/// Default artifact directory: `$MSREP_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("MSREP_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // tests and binaries run from the workspace root
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_manifest() -> Option<Manifest> {
+        let dir = default_artifact_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).expect("repo manifest must load"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn repo_manifest_loads_and_is_complete() {
+        let Some(m) = repo_manifest() else { return };
+        // 81 spmv (9 nnz × 3 n × 3 m) + 36 spmm (9 × 2 × 2) + 3 axpby + 3 reduce
+        assert_eq!(m.len(), 123);
+        assert!(!m.quick);
+        for e in m.iter() {
+            assert!(m.hlo_path(&e.name).unwrap().exists());
+        }
+    }
+
+    #[test]
+    fn repo_manifest_has_every_grid_point() {
+        let Some(m) = repo_manifest() else { return };
+        for nnz in buckets::NNZ_BUCKETS {
+            for n in buckets::VEC_BUCKETS {
+                for mm in buckets::VEC_BUCKETS {
+                    let name = buckets::spmv_name(nnz, n, mm);
+                    let e = m.get(&name).unwrap();
+                    assert_eq!(e.kind, ArtifactKind::SpmvPartial);
+                    assert_eq!(e.nnz_pad, Some(nnz));
+                }
+            }
+        }
+        for mm in buckets::VEC_BUCKETS {
+            assert_eq!(m.get(&buckets::axpby_name(mm)).unwrap().kind, ArtifactKind::Axpby);
+            assert_eq!(
+                m.get(&buckets::reduce_name(mm)).unwrap().kind,
+                ArtifactKind::ReducePartials
+            );
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        match Manifest::load("/nonexistent/path") {
+            Err(Error::Manifest(msg)) => assert!(msg.contains("make artifacts")),
+            other => panic!("expected manifest error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn grid_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("msrep_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"quick": false, "nnz_buckets": [1, 2], "vec_buckets": [4096, 32768, 262144],
+                "reduce_k": 8, "artifacts": []}"#,
+        )
+        .unwrap();
+        match Manifest::load(&dir) {
+            Err(Error::Manifest(msg)) => assert!(msg.contains("nnz bucket grid mismatch")),
+            other => panic!("expected mismatch error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_error_mentions_quick() {
+        let Some(m) = repo_manifest() else { return };
+        assert!(m.get("nope").is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, built once
+//! by `make artifacts`) and executes them on the CPU PJRT client.
+//!
+//! Python is **never** on this path — the artifacts are compiled HLO text
+//! and the rust binary is self-contained after `make artifacts`.
+//!
+//! * [`buckets`]  — the static shape grid (mirror of python/compile/buckets.py)
+//! * [`manifest`] — manifest.json loader + grid cross-check
+//! * [`client`]   — PJRT client + executable cache
+//! * [`spmv_exec`] — bucketed pad/execute/slice wrappers ([`SpmvRuntime`])
+
+pub mod buckets;
+pub mod client;
+pub mod manifest;
+pub mod spmv_exec;
+
+pub use manifest::{default_artifact_dir, ArtifactKind, Manifest};
+pub use spmv_exec::{RuntimeStats, SpmvRuntime};

@@ -1,0 +1,368 @@
+//! High-level bucketed execution of the AOT artifacts.
+//!
+//! [`SpmvRuntime`] is what the coordinator's hot path calls: it selects the
+//! shape bucket for a partition, zero-pads the inputs (padding is harmless
+//! by construction — see `python/compile/buckets.py`), executes the
+//! compiled HLO through PJRT, and slices the result back.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::buckets;
+use super::client::Client;
+use super::manifest::{default_artifact_dir, Manifest};
+
+/// Execution statistics (padding waste feeds the §Perf log).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    /// spmv_partial invocations
+    pub spmv_calls: usize,
+    /// total requested nnz across calls
+    pub nnz_requested: u64,
+    /// total padded nnz across calls
+    pub nnz_padded: u64,
+    /// axpby invocations
+    pub axpby_calls: usize,
+    /// reduce invocations
+    pub reduce_calls: usize,
+    /// spmm_partial invocations
+    pub spmm_calls: usize,
+}
+
+impl RuntimeStats {
+    /// Mean nnz padding waste factor (padded / requested).
+    pub fn padding_waste(&self) -> f64 {
+        if self.nnz_requested == 0 {
+            1.0
+        } else {
+            self.nnz_padded as f64 / self.nnz_requested as f64
+        }
+    }
+}
+
+/// The PJRT-backed executor for the three artifact families.
+pub struct SpmvRuntime {
+    manifest: Manifest,
+    client: Client,
+    stats: std::cell::RefCell<RuntimeStats>,
+    /// reusable padded staging buffers, keyed by bucket length — avoids a
+    /// fresh zeroed megabyte-scale allocation per call (§Perf)
+    f32_scratch: std::cell::RefCell<std::collections::HashMap<usize, Vec<f32>>>,
+    i32_scratch: std::cell::RefCell<std::collections::HashMap<usize, Vec<i32>>>,
+}
+
+impl SpmvRuntime {
+    /// Open the artifact directory and create the PJRT CPU client.
+    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<SpmvRuntime> {
+        Ok(SpmvRuntime {
+            manifest: Manifest::load(artifact_dir)?,
+            client: Client::cpu()?,
+            stats: std::cell::RefCell::new(RuntimeStats::default()),
+            f32_scratch: std::cell::RefCell::new(std::collections::HashMap::new()),
+            i32_scratch: std::cell::RefCell::new(std::collections::HashMap::new()),
+        })
+    }
+
+    /// Open `$MSREP_ARTIFACTS` / `<repo>/artifacts`.
+    pub fn with_default_artifacts() -> Result<SpmvRuntime> {
+        SpmvRuntime::new(default_artifact_dir())
+    }
+
+    /// Snapshot of the execution statistics.
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    /// Number of distinct executables compiled so far.
+    pub fn compile_count(&self) -> usize {
+        self.client.compile_count()
+    }
+
+    /// Partition SpMV: `y_partial[r] = alpha * Σ_{k: row[k]==r} val[k]·x[col[k]]`
+    /// for `r < m_out`. Inputs are the partition's (unpadded) stream with
+    /// LOCAL row ids and the (unpadded) dense x.
+    pub fn spmv_partial(
+        &self,
+        val: &[f32],
+        col_idx: &[u32],
+        row_idx: &[u32],
+        x: &[f32],
+        alpha: f32,
+        m_out: usize,
+    ) -> Result<Vec<f32>> {
+        let nnz = val.len();
+        if col_idx.len() != nnz || row_idx.len() != nnz {
+            return Err(Error::InvalidPartition(format!(
+                "stream length mismatch: val {nnz}, col {}, row {}",
+                col_idx.len(),
+                row_idx.len()
+            )));
+        }
+        let nnz_pad = buckets::nnz_bucket(nnz)?;
+        let n_pad = buckets::vec_bucket(x.len())?;
+        let m_pad = buckets::vec_bucket(m_out)?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.spmv_calls += 1;
+            s.nnz_requested += nnz as u64;
+            s.nnz_padded += nnz_pad as u64;
+        }
+        // zero-padded literals (0 is a valid index; val 0 contributes 0)
+        let val_l = self.pad_f32_scratch(val, nnz_pad);
+        let col_l = self.pad_idx_scratch(col_idx, nnz_pad);
+        let row_l = self.pad_idx_scratch(row_idx, nnz_pad);
+        let x_l = self.pad_f32_scratch(x, n_pad);
+        let alpha_l = xla::Literal::from(alpha);
+
+        let name = buckets::spmv_name(nnz_pad, n_pad, m_pad);
+        let exe = self.client.compile_hlo_file(&name, &self.manifest.hlo_path(&name)?)?;
+        let out = self.client.execute1(&exe, &[val_l, col_l, row_l, x_l, alpha_l])?;
+        let mut y = out.to_vec::<f32>()?;
+        y.truncate(m_out);
+        Ok(y)
+    }
+
+    /// Partition SpMM (paper §2.3 multi-vector extension): K right-hand
+    /// sides at once. `x` is row-major `(x_rows, k)` with
+    /// `k == buckets::SPMM_K`; returns row-major `(m_out, k)` flattened.
+    ///
+    /// The sparse stream is read once and amortized over the K vectors —
+    /// the data-reuse argument of §2.3.
+    pub fn spmm_partial(
+        &self,
+        val: &[f32],
+        col_idx: &[u32],
+        row_idx: &[u32],
+        x: &[f32],
+        x_rows: usize,
+        alpha: f32,
+        m_out: usize,
+    ) -> Result<Vec<f32>> {
+        let k = buckets::SPMM_K;
+        let nnz = val.len();
+        if col_idx.len() != nnz || row_idx.len() != nnz {
+            return Err(Error::InvalidPartition("stream length mismatch".into()));
+        }
+        if x.len() != x_rows * k {
+            return Err(Error::InvalidPartition(format!(
+                "x length {} != x_rows {x_rows} * k {k}",
+                x.len()
+            )));
+        }
+        let nnz_pad = buckets::nnz_bucket(nnz)?;
+        let n_pad = buckets::spmm_vec_bucket(x_rows)?;
+        let m_pad = buckets::spmm_vec_bucket(m_out)?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.spmm_calls += 1;
+            s.nnz_requested += nnz as u64;
+            s.nnz_padded += nnz_pad as u64;
+        }
+        let val_l = pad_f32(val, nnz_pad);
+        let col_l = pad_idx(col_idx, nnz_pad);
+        let row_l = pad_idx(row_idx, nnz_pad);
+        // pad X rows: (x_rows, k) -> (n_pad, k)
+        let mut xbuf = vec![0.0f32; n_pad * k];
+        xbuf[..x.len()].copy_from_slice(x);
+        let x_l = xla::Literal::vec1(&xbuf).reshape(&[n_pad as i64, k as i64])?;
+        let alpha_l = xla::Literal::from(alpha);
+
+        let name = buckets::spmm_name(nnz_pad, n_pad, m_pad);
+        let exe = self.client.compile_hlo_file(&name, &self.manifest.hlo_path(&name)?)?;
+        let out = self.client.execute1(&exe, &[val_l, col_l, row_l, x_l, alpha_l])?;
+        let mut y = out.to_vec::<f32>()?;
+        y.truncate(m_out * k);
+        Ok(y)
+    }
+
+    /// `a*p + b*y` elementwise (merge epilogue). `p` and `y` must have the
+    /// same length.
+    pub fn axpby(&self, a: f32, p: &[f32], b: f32, y: &[f32]) -> Result<Vec<f32>> {
+        if p.len() != y.len() {
+            return Err(Error::InvalidPartition(format!(
+                "axpby length mismatch: {} vs {}",
+                p.len(),
+                y.len()
+            )));
+        }
+        let m_pad = buckets::vec_bucket(p.len())?;
+        self.stats.borrow_mut().axpby_calls += 1;
+        let name = buckets::axpby_name(m_pad);
+        let exe = self.client.compile_hlo_file(&name, &self.manifest.hlo_path(&name)?)?;
+        let out = self.client.execute1(
+            &exe,
+            &[
+                xla::Literal::from(a),
+                pad_f32(p, m_pad),
+                xla::Literal::from(b),
+                pad_f32(y, m_pad),
+            ],
+        )?;
+        let mut r = out.to_vec::<f32>()?;
+        r.truncate(p.len());
+        Ok(r)
+    }
+
+    /// Sum up to any number of equal-length partial vectors (the pCSC
+    /// column merge). Fans in [`buckets::REDUCE_K`] at a time, exactly like
+    /// the paper's on-GPU gather-reduce tree.
+    pub fn reduce_partials(&self, parts: &[&[f32]], m: usize) -> Result<Vec<f32>> {
+        if parts.is_empty() {
+            return Ok(vec![0.0; m]);
+        }
+        for p in parts {
+            if p.len() != m {
+                return Err(Error::InvalidPartition(format!(
+                    "partial length {} != m {m}",
+                    p.len()
+                )));
+            }
+        }
+        let m_pad = buckets::vec_bucket(m)?;
+        let name = buckets::reduce_name(m_pad);
+        let exe = self.client.compile_hlo_file(&name, &self.manifest.hlo_path(&name)?)?;
+
+        let mut current: Vec<Vec<f32>> = parts.iter().map(|p| p.to_vec()).collect();
+        while current.len() > 1 {
+            let mut next = Vec::with_capacity(current.len().div_ceil(buckets::REDUCE_K));
+            for chunk in current.chunks(buckets::REDUCE_K) {
+                self.stats.borrow_mut().reduce_calls += 1;
+                // stack into (REDUCE_K, m_pad), zero-filling unused slots
+                let mut flat = vec![0.0f32; buckets::REDUCE_K * m_pad];
+                for (i, p) in chunk.iter().enumerate() {
+                    flat[i * m_pad..i * m_pad + m].copy_from_slice(p);
+                }
+                let stacked = xla::Literal::vec1(&flat)
+                    .reshape(&[buckets::REDUCE_K as i64, m_pad as i64])?;
+                let out = self.client.execute1(&exe, &[stacked])?;
+                let mut r = out.to_vec::<f32>()?;
+                r.truncate(m);
+                next.push(r);
+            }
+            current = next;
+        }
+        Ok(current.pop().unwrap())
+    }
+}
+
+/// A device-resident padded x vector, uploaded once per SpMV and shared
+/// across all partitions (§Perf fast path).
+pub struct XBuffer {
+    buf: xla::PjRtBuffer,
+    /// padded length (the bucket the executables were selected for)
+    pub n_pad: usize,
+    /// unpadded length
+    pub n: usize,
+}
+
+impl SpmvRuntime {
+    /// Upload the dense x once for a whole multi-partition SpMV.
+    pub fn upload_x(&self, x: &[f32]) -> Result<XBuffer> {
+        let n_pad = buckets::vec_bucket(x.len())?;
+        let mut map = self.f32_scratch.borrow_mut();
+        let buf = map.entry(n_pad).or_insert_with(|| vec![0.0f32; n_pad]);
+        buf[..x.len()].copy_from_slice(x);
+        buf[x.len()..].fill(0.0);
+        Ok(XBuffer {
+            buf: self.client.buffer_f32(buf, &[n_pad])?,
+            n_pad,
+            n: x.len(),
+        })
+    }
+
+    /// Partition SpMV against a pre-uploaded x: streams go host→device as
+    /// buffers directly (no Literal intermediary) and x is not re-sent.
+    pub fn spmv_partial_buf(
+        &self,
+        val: &[f32],
+        col_idx: &[u32],
+        row_idx: &[u32],
+        x: &XBuffer,
+        alpha: f32,
+        m_out: usize,
+    ) -> Result<Vec<f32>> {
+        let nnz = val.len();
+        if col_idx.len() != nnz || row_idx.len() != nnz {
+            return Err(Error::InvalidPartition("stream length mismatch".into()));
+        }
+        let nnz_pad = buckets::nnz_bucket(nnz)?;
+        let m_pad = buckets::vec_bucket(m_out)?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.spmv_calls += 1;
+            s.nnz_requested += nnz as u64;
+            s.nnz_padded += nnz_pad as u64;
+        }
+        let val_b = {
+            let mut map = self.f32_scratch.borrow_mut();
+            let buf = map.entry(nnz_pad).or_insert_with(|| vec![0.0f32; nnz_pad]);
+            buf[..nnz].copy_from_slice(val);
+            buf[nnz..].fill(0.0);
+            self.client.buffer_f32(buf, &[nnz_pad])?
+        };
+        let pad_idx_buf = |xs: &[u32]| -> Result<xla::PjRtBuffer> {
+            let mut map = self.i32_scratch.borrow_mut();
+            let buf = map.entry(nnz_pad).or_insert_with(|| vec![0i32; nnz_pad]);
+            for (b, &v) in buf.iter_mut().zip(xs) {
+                *b = v as i32;
+            }
+            buf[xs.len()..].fill(0);
+            self.client.buffer_i32(buf, &[nnz_pad])
+        };
+        let col_b = pad_idx_buf(col_idx)?;
+        let row_b = pad_idx_buf(row_idx)?;
+        let alpha_b = self.client.buffer_f32(&[alpha], &[])?;
+
+        let name = buckets::spmv_name(nnz_pad, x.n_pad, m_pad);
+        let exe = self.client.compile_hlo_file(&name, &self.manifest.hlo_path(&name)?)?;
+        let out = self
+            .client
+            .execute1_b(&exe, &[&val_b, &col_b, &row_b, &x.buf, &alpha_b])?;
+        let mut y = out.to_vec::<f32>()?;
+        y.truncate(m_out);
+        Ok(y)
+    }
+
+    /// Pad into a per-bucket reusable staging buffer (stale tail zeroed),
+    /// then build the literal. One allocation per bucket per runtime
+    /// lifetime instead of per call.
+    fn pad_f32_scratch(&self, xs: &[f32], to: usize) -> xla::Literal {
+        debug_assert!(xs.len() <= to);
+        let mut map = self.f32_scratch.borrow_mut();
+        let buf = map.entry(to).or_insert_with(|| vec![0.0f32; to]);
+        buf[..xs.len()].copy_from_slice(xs);
+        buf[xs.len()..].fill(0.0);
+        xla::Literal::vec1(buf)
+    }
+
+    fn pad_idx_scratch(&self, xs: &[u32], to: usize) -> xla::Literal {
+        debug_assert!(xs.len() <= to);
+        let mut map = self.i32_scratch.borrow_mut();
+        let buf = map.entry(to).or_insert_with(|| vec![0i32; to]);
+        for (b, &x) in buf.iter_mut().zip(xs) {
+            *b = x as i32;
+        }
+        buf[xs.len()..].fill(0);
+        xla::Literal::vec1(buf)
+    }
+}
+
+fn pad_f32(xs: &[f32], to: usize) -> xla::Literal {
+    debug_assert!(xs.len() <= to);
+    let mut buf = vec![0.0f32; to];
+    buf[..xs.len()].copy_from_slice(xs);
+    xla::Literal::vec1(&buf)
+}
+
+fn pad_idx(xs: &[u32], to: usize) -> xla::Literal {
+    debug_assert!(xs.len() <= to);
+    let mut buf = vec![0i32; to];
+    for (b, &x) in buf.iter_mut().zip(xs) {
+        *b = x as i32;
+    }
+    xla::Literal::vec1(&buf)
+}
+
+// Integration tests (needing built artifacts) live in
+// rust/tests/runtime_integration.rs.

@@ -1,0 +1,93 @@
+//! Multi-node cluster model — the paper's §6 "Impact on distributed GPU
+//! systems" extension.
+//!
+//! MSREP is an intra-node scale-up design; §6 argues it composes with
+//! scale-out designs, and §7 contrasts it with Yang et al. [39], whose
+//! all-to-all result broadcast limits scalability. [`Cluster`] adds the
+//! missing piece to the platform model: N identical nodes joined by a
+//! commodity fabric (EDR InfiniBand class), so the scale-out ablation can
+//! quantify both claims.
+
+use crate::error::{Error, Result};
+
+use super::platform::Platform;
+
+/// A homogeneous cluster of multi-GPU nodes.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    /// per-node platform (topology + intra-node bandwidths)
+    pub node: Platform,
+    /// number of nodes
+    pub num_nodes: usize,
+    /// per-node network injection bandwidth (B/s) — EDR IB ≈ 12.5 GB/s
+    pub net_bw: f64,
+    /// network message latency (s) — scaled like the platform latencies
+    pub net_latency: f64,
+}
+
+impl Cluster {
+    /// Summit-like cluster: N nodes of 6×V100, EDR InfiniBand (2×12.5 GB/s
+    /// ports per node, ~23 GB/s effective).
+    pub fn summit(num_nodes: usize) -> Cluster {
+        Cluster {
+            node: Platform::summit(),
+            num_nodes,
+            net_bw: 23e9,
+            // physical ~1.5 µs MPI latency, scaled by the same ~300x factor
+            // as the platform latencies (DESIGN.md §3)
+            net_latency: 5e-9,
+        }
+    }
+
+    /// DGX-1 pod: N nodes, 4×EDR IB (~45 GB/s effective per node).
+    pub fn dgx1_pod(num_nodes: usize) -> Cluster {
+        Cluster {
+            node: Platform::dgx1(),
+            num_nodes,
+            net_bw: 45e9,
+            net_latency: 5e-9,
+        }
+    }
+
+    /// Total GPUs across the cluster.
+    pub fn total_gpus(&self) -> usize {
+        self.num_nodes * self.node.num_gpus
+    }
+
+    /// Validate.
+    pub fn validate(&self) -> Result<()> {
+        self.node.validate()?;
+        if self.num_nodes == 0 {
+            return Err(Error::Platform("cluster needs >= 1 node".into()));
+        }
+        if self.net_bw <= 0.0 {
+            return Err(Error::Platform("net_bw must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        Cluster::summit(4).validate().unwrap();
+        Cluster::dgx1_pod(2).validate().unwrap();
+    }
+
+    #[test]
+    fn total_gpus() {
+        assert_eq!(Cluster::summit(4).total_gpus(), 24);
+        assert_eq!(Cluster::dgx1_pod(3).total_gpus(), 24);
+    }
+
+    #[test]
+    fn zero_nodes_rejected() {
+        assert!(Cluster::summit(0).validate().is_err());
+        let mut c = Cluster::summit(2);
+        c.net_bw = 0.0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,29 @@
+//! Multi-GPU platform simulator.
+//!
+//! The paper evaluates on physical Summit nodes (6×V100, 2 NUMA domains,
+//! NVLink CPU–GPU, X-Bus between sockets) and a DGX-1 (8×V100, 2 NUMA
+//! domains, PCIe CPU–GPU, QPI between sockets, NVLink GPU–GPU). Neither is
+//! available here (repro band 0), so this module provides the substitution
+//! described in DESIGN.md §3:
+//!
+//! * [`Platform`] — parameterised topology: GPUs, NUMA domains, link
+//!   bandwidths/latencies, host memory bandwidth, HBM bandwidth;
+//! * [`model`] — an analytic cost model for every device-side operation the
+//!   engine performs (H2D/D2H transfers with NUMA and bus contention, the
+//!   memory-bound V100 SpMV kernel, GPU-side partition index rewrites,
+//!   NVLink tree reductions);
+//! * [`memory`] — per-device memory accounting against the 16 GB V100
+//!   budget (the capacity wall that motivates multi-GPU SpMV in §1).
+//!
+//! Numerics stay honest because every simulated GPU *really executes* its
+//! partition through the PJRT runtime; only **time** is modeled. All model
+//! outputs are seconds (f64).
+
+pub mod cluster;
+pub mod memory;
+pub mod model;
+mod platform;
+
+pub use cluster::Cluster;
+pub use memory::DeviceMemory;
+pub use platform::{HostLink, Platform};

@@ -1,0 +1,9 @@
+//! Exact CPU SpMV oracles for every format — the ground truth the
+//! multi-GPU engine's results are validated against, and the paper's
+//! Algorithm 1 (`y = alpha*A*x + beta*y`) in its three format variants.
+
+mod reference;
+
+pub use reference::{
+    spmv_coo, spmv_csc, spmv_csr, spmv_dense_oracle, spmv_matrix, spmv_partition_csr_serial,
+};

@@ -1,0 +1,208 @@
+//! Reference SpMV implementations (paper §2.2, Algorithm 1 and its COO/CSC
+//! analogues). These are single-threaded, allocation-free on the hot loop,
+//! and deliberately simple — they are oracles first, baselines second.
+
+use crate::error::{Error, Result};
+use crate::formats::{Coo, Csc, Csr, Matrix, PCsr};
+
+fn check_dims(m: usize, n: usize, x: &[f32], y: &[f32]) -> Result<()> {
+    if x.len() != n {
+        return Err(Error::InvalidMatrix(format!(
+            "x length {} != n {n}",
+            x.len()
+        )));
+    }
+    if y.len() != m {
+        return Err(Error::InvalidMatrix(format!(
+            "y length {} != m {m}",
+            y.len()
+        )));
+    }
+    Ok(())
+}
+
+/// CSR SpMV: `y = alpha*A*x + beta*y` (paper Algorithm 1, with the standard
+/// fix that the beta term applies exactly once per row).
+pub fn spmv_csr(a: &Csr, x: &[f32], alpha: f32, beta: f32, y: &mut [f32]) -> Result<()> {
+    check_dims(a.rows(), a.cols(), x, y)?;
+    for i in 0..a.rows() {
+        let mut acc = 0.0f32;
+        for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+            acc += a.val[k] * x[a.col_idx[k] as usize];
+        }
+        y[i] = alpha * acc + beta * y[i];
+    }
+    Ok(())
+}
+
+/// CSC SpMV: switch the roles of x and y (paper §2.2) — scatter each
+/// column's contribution into y.
+pub fn spmv_csc(a: &Csc, x: &[f32], alpha: f32, beta: f32, y: &mut [f32]) -> Result<()> {
+    check_dims(a.rows(), a.cols(), x, y)?;
+    for v in y.iter_mut() {
+        *v *= beta;
+    }
+    for j in 0..a.cols() {
+        let xj = alpha * x[j];
+        if xj == 0.0 && a.col_ptr[j + 1] > a.col_ptr[j] {
+            // still must touch nothing — scatter of zero is a no-op
+        }
+        for k in a.col_ptr[j]..a.col_ptr[j + 1] {
+            y[a.row_idx[k] as usize] += a.val[k] * xj;
+        }
+    }
+    Ok(())
+}
+
+/// COO SpMV: one loop over the nnz stream (paper §2.2).
+pub fn spmv_coo(a: &Coo, x: &[f32], alpha: f32, beta: f32, y: &mut [f32]) -> Result<()> {
+    check_dims(a.rows(), a.cols(), x, y)?;
+    for v in y.iter_mut() {
+        *v *= beta;
+    }
+    for k in 0..a.nnz() {
+        y[a.row_idx[k] as usize] += alpha * a.val[k] * x[a.col_idx[k] as usize];
+    }
+    Ok(())
+}
+
+/// Dispatch over [`Matrix`].
+pub fn spmv_matrix(a: &Matrix, x: &[f32], alpha: f32, beta: f32, y: &mut [f32]) -> Result<()> {
+    match a {
+        Matrix::Csr(m) => spmv_csr(m, x, alpha, beta, y),
+        Matrix::Csc(m) => spmv_csc(m, x, alpha, beta, y),
+        Matrix::Coo(m) => spmv_coo(m, x, alpha, beta, y),
+    }
+}
+
+/// Serial SpMV over ONE pCSR partition using its local row pointers —
+/// the "existing CSR-compatible kernel" of paper Algorithm 3, used by the
+/// engine's CPU fallback and by tests to cross-check the PJRT path.
+/// Returns the `local_rows()`-length partial result (alpha pre-applied).
+pub fn spmv_partition_csr_serial(csr: &Csr, p: &PCsr, x: &[f32], alpha: f32) -> Vec<f32> {
+    let val = p.val(csr);
+    let col = p.col_idx(csr);
+    let mut py = vec![0.0f32; p.local_rows()];
+    for j in 0..p.local_rows() {
+        let mut acc = 0.0f32;
+        for k in p.row_ptr[j]..p.row_ptr[j + 1] {
+            acc += val[k] * x[col[k] as usize];
+        }
+        py[j] = alpha * acc;
+    }
+    py
+}
+
+/// Dense oracle for tiny matrices: builds the dense matrix and computes
+/// `alpha*A*x + beta*y` in f64 for a tighter error reference.
+pub fn spmv_dense_oracle(a: &Matrix, x: &[f32], alpha: f32, beta: f32, y: &[f32]) -> Vec<f32> {
+    let coo = crate::formats::convert::to_coo(a);
+    let mut acc = vec![0.0f64; coo.rows()];
+    for k in 0..coo.nnz() {
+        acc[coo.row_idx[k] as usize] += coo.val[k] as f64 * x[coo.col_idx[k] as usize] as f64;
+    }
+    acc.iter()
+        .zip(y)
+        .map(|(&s, &yo)| (alpha as f64 * s + beta as f64 * yo as f64) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{convert, gen};
+
+    fn matrices() -> Vec<Matrix> {
+        let coo = Coo::paper_example();
+        vec![
+            Matrix::Csr(Csr::from_coo(&coo)),
+            Matrix::Csc(Csc::from_coo(&coo)),
+            Matrix::Coo(coo),
+        ]
+    }
+
+    #[test]
+    fn all_formats_agree_with_dense() {
+        let x: Vec<f32> = (1..=6).map(|v| v as f32 * 0.5).collect();
+        let y0: Vec<f32> = (1..=6).map(|v| v as f32).collect();
+        for a in matrices() {
+            let expect = spmv_dense_oracle(&a, &x, 2.0, -1.0, &y0);
+            let mut y = y0.clone();
+            spmv_matrix(&a, &x, 2.0, -1.0, &mut y).unwrap();
+            for (got, want) in y.iter().zip(&expect) {
+                assert!((got - want).abs() < 1e-4, "{:?}: {y:?} vs {expect:?}", a.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_beta_zero_cases() {
+        let a = Matrix::Csr(Csr::from_coo(&Coo::paper_example()));
+        let x = vec![1.0f32; 6];
+        // alpha=0 beta=1: y unchanged
+        let mut y = vec![3.0f32; 6];
+        spmv_matrix(&a, &x, 0.0, 1.0, &mut y).unwrap();
+        assert_eq!(y, vec![3.0f32; 6]);
+        // alpha=0 beta=0: y cleared
+        spmv_matrix(&a, &x, 0.0, 0.0, &mut y).unwrap();
+        assert_eq!(y, vec![0.0f32; 6]);
+    }
+
+    #[test]
+    fn identity_times_x_is_x() {
+        let a = Matrix::Coo(gen::identity(8));
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut y = vec![0.0f32; 8];
+        spmv_matrix(&a, &x, 1.0, 0.0, &mut y).unwrap();
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let a = Matrix::Coo(Coo::paper_example());
+        let mut y = vec![0.0f32; 6];
+        assert!(spmv_matrix(&a, &[1.0; 5], 1.0, 0.0, &mut y).is_err());
+        let mut y_short = vec![0.0f32; 5];
+        assert!(spmv_matrix(&a, &[1.0; 6], 1.0, 0.0, &mut y_short).is_err());
+    }
+
+    #[test]
+    fn partition_serial_sums_to_full() {
+        let coo = gen::power_law(200, 200, 2000, 2.0, 3);
+        let csr = Csr::from_coo(&coo);
+        let x = gen::dense_vector(200, 4);
+        let mut expect = vec![0.0f32; 200];
+        spmv_csr(&csr, &x, 1.5, 0.0, &mut expect).unwrap();
+        for np in [1, 3, 6] {
+            let parts = PCsr::partition(&csr, np).unwrap();
+            let partials: Vec<Vec<f32>> = parts
+                .iter()
+                .map(|p| spmv_partition_csr_serial(&csr, p, &x, 1.5))
+                .collect();
+            let mut y = vec![0.0f32; 200];
+            crate::formats::merge_row_partials(&parts, &partials, 0.0, &mut y).unwrap();
+            for (a, b) in y.iter().zip(&expect) {
+                assert!((a - b).abs() < 2e-3, "np={np}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_matrix_formats_agree() {
+        let coo = gen::uniform(100, 80, 600, 7);
+        let a = Matrix::Coo(coo);
+        let csr = Matrix::Csr(convert::to_csr(&a));
+        let csc = Matrix::Csc(convert::to_csc(&a));
+        let x = gen::dense_vector(80, 8);
+        let mut y1 = vec![0.0f32; 100];
+        let mut y2 = y1.clone();
+        let mut y3 = y1.clone();
+        spmv_matrix(&a, &x, 1.0, 0.0, &mut y1).unwrap();
+        spmv_matrix(&csr, &x, 1.0, 0.0, &mut y2).unwrap();
+        spmv_matrix(&csc, &x, 1.0, 0.0, &mut y3).unwrap();
+        for i in 0..100 {
+            assert!((y1[i] - y2[i]).abs() < 1e-3);
+            assert!((y1[i] - y3[i]).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Micro/meso benchmark harness (replaces criterion, unavailable offline).
+//!
+//! Used by every target under `rust/benches/` (declared `harness = false`).
+//! Auto-calibrates the iteration count to a time budget, reports
+//! mean/σ/min/p95, and supports the before/after comparisons the §Perf log
+//! records.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One benchmark's collected samples + summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// benchmark id ("fig16/summit/csr/baseline")
+    pub name: String,
+    /// per-iteration seconds
+    pub summary: Summary,
+    /// iterations actually run
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// One-line human rendering.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<48} {:>12}/iter  (σ {:>10}, min {:>10}, p95 {:>10}, n={})",
+            self.name,
+            crate::report::format_duration_s(self.summary.mean),
+            crate::report::format_duration_s(self.summary.std_dev),
+            crate::report::format_duration_s(self.summary.min),
+            crate::report::format_duration_s(self.summary.p95),
+            self.iters,
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bench {
+    /// target measurement time per benchmark (seconds)
+    pub budget_s: f64,
+    /// warm-up iterations before sampling
+    pub warmup: usize,
+    /// max samples to collect
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // modest defaults: the figure benches sweep many configurations
+        Bench { budget_s: 0.6, warmup: 1, max_samples: 25 }
+    }
+}
+
+impl Bench {
+    /// Quick harness for CI-ish runs (`MSREP_BENCH_QUICK=1`).
+    pub fn from_env() -> Bench {
+        if std::env::var("MSREP_BENCH_QUICK").is_ok() {
+            Bench { budget_s: 0.05, warmup: 0, max_samples: 3 }
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Measure `f`, auto-scaling iterations into the budget. The closure's
+    /// return value is black-boxed to keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        // pilot to size the sample count
+        let t0 = Instant::now();
+        black_box(f());
+        let pilot = t0.elapsed().as_secs_f64().max(1e-9);
+        let want = ((self.budget_s / pilot) as usize).clamp(1, self.max_samples);
+        let mut samples = Vec::with_capacity(want + 1);
+        samples.push(pilot);
+        for _ in 0..want {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+            iters: samples.len(),
+        }
+    }
+}
+
+/// Optimization-barrier identity (stable-rust black box).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a bench-section header (keeps `cargo bench` output scannable).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_samples_within_bounds() {
+        let b = Bench { budget_s: 0.02, warmup: 1, max_samples: 10 };
+        let mut count = 0u64;
+        let r = b.run("noop", || {
+            count += 1;
+            count
+        });
+        assert!(r.iters >= 2 && r.iters <= 11, "iters {}", r.iters);
+        assert!(r.summary.mean >= 0.0);
+        assert!(count as usize >= r.iters);
+    }
+
+    #[test]
+    fn slow_benchmark_runs_once_plus_pilot() {
+        let b = Bench { budget_s: 0.0, warmup: 0, max_samples: 25 };
+        let r = b.run("slow", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(r.iters <= 2 + 1);
+    }
+
+    #[test]
+    fn render_contains_name_and_mean() {
+        let b = Bench { budget_s: 0.01, warmup: 0, max_samples: 3 };
+        let r = b.run("my_bench", || 42);
+        let s = r.render();
+        assert!(s.contains("my_bench"));
+        assert!(s.contains("/iter"));
+    }
+}

@@ -1,0 +1,231 @@
+//! Declarative command-line flag parser (replaces `clap`, unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, per-command help text, and typed accessors with defaults.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Specification of one flag.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    /// long name without the leading `--`
+    pub name: &'static str,
+    /// help text
+    pub help: &'static str,
+    /// true if the flag takes no value
+    pub is_bool: bool,
+    /// printable default (for help only)
+    pub default: Option<&'static str>,
+}
+
+/// A parsed command line: flag values + positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    /// positional arguments in order
+    pub positional: Vec<String>,
+}
+
+/// Flag-set builder + parser.
+#[derive(Debug, Default)]
+pub struct Parser {
+    specs: Vec<FlagSpec>,
+}
+
+impl Parser {
+    /// Empty parser.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a value-taking flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.specs.push(FlagSpec { name, help, is_bool: false, default });
+        self
+    }
+
+    /// Register a boolean flag.
+    pub fn bool_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, is_bool: true, default: None });
+        self
+    }
+
+    fn spec(&self, name: &str) -> Option<&FlagSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    /// Render a help block listing all registered flags.
+    pub fn help(&self) -> String {
+        let mut out = String::new();
+        for s in &self.specs {
+            let mut line = format!("  --{}", s.name);
+            if !s.is_bool {
+                line.push_str(" <value>");
+            }
+            while line.len() < 28 {
+                line.push(' ');
+            }
+            line.push_str(s.help);
+            if let Some(d) = s.default {
+                line.push_str(&format!(" [default: {d}]"));
+            }
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a token stream (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .spec(&name)
+                    .ok_or_else(|| Error::Usage(format!("unknown flag --{name}")))?;
+                let value = if spec.is_bool {
+                    if inline_val.is_some() {
+                        return Err(Error::Usage(format!("--{name} takes no value")));
+                    }
+                    "true".to_string()
+                } else {
+                    match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| Error::Usage(format!("--{name} needs a value")))?,
+                    }
+                };
+                args.flags.insert(name, value);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    /// Raw string value of a flag, if present.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// String value with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Boolean flag presence.
+    pub fn is_set(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+
+    /// Typed usize flag.
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    /// Typed u64 flag.
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    /// Typed f64 flag.
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name}: expected float, got '{v}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn parser() -> Parser {
+        Parser::new()
+            .flag("gpus", "number of gpus", Some("8"))
+            .flag("alpha", "scale", Some("1.0"))
+            .bool_flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn parse_separate_and_inline_values() {
+        let a = parser().parse(argv(&["--gpus", "4", "--alpha=2.5"])).unwrap();
+        assert_eq!(a.usize_or("gpus", 8).unwrap(), 4);
+        assert_eq!(a.f64_or("alpha", 1.0).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn defaults_apply_when_absent() {
+        let a = parser().parse(argv(&[])).unwrap();
+        assert_eq!(a.usize_or("gpus", 8).unwrap(), 8);
+        assert!(!a.is_set("verbose"));
+    }
+
+    #[test]
+    fn bool_flag_and_positionals() {
+        let a = parser().parse(argv(&["run", "--verbose", "file.mtx"])).unwrap();
+        assert!(a.is_set("verbose"));
+        assert_eq!(a.positional, vec!["run", "file.mtx"]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(
+            parser().parse(argv(&["--nope"])),
+            Err(Error::Usage(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parser().parse(argv(&["--gpus"])).is_err());
+    }
+
+    #[test]
+    fn bool_with_value_rejected() {
+        assert!(parser().parse(argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn bad_type_reports_flag_name() {
+        let a = parser().parse(argv(&["--gpus", "many"])).unwrap();
+        match a.usize_or("gpus", 1) {
+            Err(Error::Usage(msg)) => assert!(msg.contains("gpus")),
+            other => panic!("expected usage error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let h = parser().help();
+        assert!(h.contains("--gpus") && h.contains("default: 8"));
+        assert!(h.contains("--verbose"));
+    }
+}

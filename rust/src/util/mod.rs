@@ -1,0 +1,20 @@
+//! Standard-library substrates.
+//!
+//! The build environment is offline and only the `xla` crate's vendored
+//! dependency closure is available (DESIGN.md §3), so the usual ecosystem
+//! crates (rand, serde, clap, criterion, proptest) are replaced by small,
+//! tested in-crate implementations:
+//!
+//! * [`rng`]   — splitmix64 / xoshiro256++ PRNG (replaces `rand`)
+//! * [`json`]  — minimal JSON value parser + writer (replaces `serde_json`,
+//!   used for the artifact manifest)
+//! * [`cli`]   — declarative flag parser (replaces `clap`)
+//! * [`stats`] — streaming summary statistics for benches and reports
+//! * [`prop`]  — seeded property-test driver (replaces `proptest`)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

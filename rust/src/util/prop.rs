@@ -1,0 +1,162 @@
+//! Seeded property-test driver (replaces `proptest`, unavailable offline).
+//!
+//! A property is a closure over a [`Gen`]; the driver runs it for a fixed
+//! number of deterministic cases. On failure it reports the case seed so the
+//! exact input can be replayed by setting `MSREP_PROP_SEED`. No shrinking —
+//! generators are written to produce small cases early (sizes ramp up with
+//! the case index), which in practice localises failures well enough.
+//!
+//! ```
+//! use msrep::util::prop::{check, Gen};
+//! check("reverse twice is identity", 64, |g| {
+//!     let xs = g.vec_usize(0..g.size().max(1), 100);
+//!     let mut twice = xs.clone();
+//!     twice.reverse();
+//!     twice.reverse();
+//!     assert_eq!(xs, twice);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Per-case generator handle: a PRNG plus a size hint that grows with the
+/// case index (case 0 is smallest), so early failures are small failures.
+pub struct Gen {
+    rng: Rng,
+    size: usize,
+}
+
+impl Gen {
+    /// Current size hint (grows with case index; use to bound dimensions).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Uniform usize in [lo, hi) (half-open, like ranges).
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        assert!(range.start < range.end, "empty range");
+        self.rng.usize_range(range.start, range.end - 1)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_range(lo, hi)
+    }
+
+    /// Boolean with probability p of true.
+    pub fn prob(&mut self, p: f64) -> bool {
+        self.rng.f64() < p
+    }
+
+    /// Vector of uniform usize below `bound`, with length drawn from `len`.
+    pub fn vec_usize(&mut self, len: std::ops::Range<usize>, bound: usize) -> Vec<usize> {
+        let n = if len.is_empty() { len.start } else { self.usize_in(len) };
+        (0..n).map(|_| self.rng.usize_below(bound.max(1))).collect()
+    }
+
+    /// Vector of uniform f32 in [-1, 1).
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.f32_range(-1.0, 1.0)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.usize_below(xs.len())]
+    }
+
+    /// Access the raw RNG (for domain-specific generators).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Base seed: `MSREP_PROP_SEED` env var if set, else a fixed default so CI
+/// is deterministic.
+pub fn base_seed() -> u64 {
+    std::env::var("MSREP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `body` for `cases` deterministic cases. Panics (with the replay seed
+/// in the message) if the body panics for any case.
+pub fn check<F: Fn(&mut Gen)>(name: &str, cases: usize, body: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ ((case as u64) << 32) ^ 0x9E3779B97F4A7C15u64.wrapping_mul(case as u64);
+        // size ramps 4 -> ~4+cases
+        let size = 4 + case;
+        let mut gen = Gen { rng: Rng::new(seed), size };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut gen)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay: MSREP_PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        check("always true", 10, |g| {
+            let _ = g.usize_in(0..5);
+            **counter.borrow_mut() += 1;
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_name_and_seed() {
+        check("fails", 5, |g| {
+            assert!(g.usize_in(0..10) > 100, "impossible");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<usize> = vec![];
+        let mut second: Vec<usize> = vec![];
+        {
+            let sink = std::cell::RefCell::new(&mut first);
+            check("collect1", 8, |g| sink.borrow_mut().push(g.usize_in(0..1000)));
+        }
+        {
+            let sink = std::cell::RefCell::new(&mut second);
+            check("collect2", 8, |g| sink.borrow_mut().push(g.usize_in(0..1000)));
+        }
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        let mut sizes = vec![];
+        let sink = std::cell::RefCell::new(&mut sizes);
+        check("sizes", 6, |g| sink.borrow_mut().push(g.size()));
+        assert_eq!(sizes, vec![4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn vec_generators_respect_bounds() {
+        check("vec bounds", 20, |g| {
+            let v = g.vec_usize(0..10, 7);
+            assert!(v.len() < 10);
+            assert!(v.iter().all(|&x| x < 7));
+            let f = g.vec_f32(5);
+            assert!(f.iter().all(|&x| (-1.0..1.0).contains(&x)));
+        });
+    }
+}

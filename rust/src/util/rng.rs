@@ -1,0 +1,245 @@
+//! Deterministic PRNG: splitmix64 seeding + xoshiro256++ generation.
+//!
+//! Replaces the `rand` crate (unavailable offline). The generator is the
+//! reference xoshiro256++ by Blackman & Vigna (public domain), which is more
+//! than adequate for synthetic matrix generation and property tests, and —
+//! crucially for reproducibility of EXPERIMENTS.md — fully deterministic
+//! across platforms for a given seed.
+
+/// xoshiro256++ generator, seeded via splitmix64.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (any value, including 0).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = rotl(s[0].wrapping_add(s[3]), 23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = rotl(s[3], 45);
+        result
+    }
+
+    /// Uniform u32.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 top bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Unbiased uniform integer in [0, bound) via Lemire's method.
+    #[inline]
+    pub fn usize_below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        // 64-bit multiply-shift; bias negligible for bound << 2^64 and
+        // irrelevant for workload generation.
+        let x = self.next_u64();
+        ((x as u128 * bound as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in the inclusive range [lo, hi].
+    #[inline]
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.usize_below(hi - lo + 1)
+    }
+
+    /// Standard normal (Box–Muller; one value per call, simple over fast).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE); // avoid ln(0)
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Sample from a discrete power law P(k) ~ k^-r over k in [1, kmax]
+    /// by inverse-CDF on the continuous Pareto and clamping.
+    ///
+    /// Used to draw per-column non-zero counts matching the paper's
+    /// Table-2 exponents (P(k) ~ k^-R, R in [1, 4]).
+    pub fn power_law(&mut self, r: f64, kmax: usize) -> usize {
+        debug_assert!(r > 0.0 && kmax >= 1);
+        let u = self.f64();
+        let k = if (r - 1.0).abs() < 1e-9 {
+            // r == 1: CDF is log-uniform
+            (kmax as f64).powf(u)
+        } else {
+            // inverse CDF of Pareto truncated to [1, kmax]
+            let a = 1.0 - r;
+            let km = (kmax as f64).powf(a);
+            (1.0 + u * (km - 1.0)).powf(1.0 / a)
+        };
+        (k.floor() as usize).clamp(1, kmax)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent child generator (for per-thread streams).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn usize_below_in_range_and_covers() {
+        let mut r = Rng::new(4);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let x = r.usize_below(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_mean_is_half() {
+        let mut r = Rng::new(5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(6);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn power_law_bounds_and_skew() {
+        let mut r = Rng::new(8);
+        let kmax = 1000;
+        let xs: Vec<usize> = (0..50_000).map(|_| r.power_law(2.0, kmax)).collect();
+        assert!(xs.iter().all(|&k| (1..=kmax).contains(&k)));
+        // heavy skew: k=1 must be by far the most common outcome
+        let ones = xs.iter().filter(|&&k| k == 1).count();
+        assert!(ones > xs.len() / 3, "ones={ones}");
+        // but the tail must exist
+        assert!(xs.iter().any(|&k| k > 50));
+    }
+
+    #[test]
+    fn power_law_r1_log_uniform() {
+        let mut r = Rng::new(9);
+        let xs: Vec<usize> = (0..50_000).map(|_| r.power_law(1.0, 1024)).collect();
+        assert!(xs.iter().all(|&k| (1..=1024).contains(&k)));
+        // log-uniform: ~10% of mass per decade factor; median ~ sqrt(kmax)=32
+        let mut s = xs.clone();
+        s.sort_unstable();
+        let median = s[s.len() / 2];
+        assert!((8..=128).contains(&median), "median={median}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(10);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut parent = Rng::new(11);
+        let mut c1 = parent.fork();
+        let mut c2 = parent.fork();
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+}

@@ -1,0 +1,166 @@
+//! Summary statistics for benches and reports (replaces criterion's stats).
+
+use std::time::Duration;
+
+/// Summary of a sample set (times in seconds or any positive metric).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    /// number of samples
+    pub n: usize,
+    /// arithmetic mean
+    pub mean: f64,
+    /// sample standard deviation (n-1); 0 for n < 2
+    pub std_dev: f64,
+    /// minimum
+    pub min: f64,
+    /// maximum
+    pub max: f64,
+    /// median (p50)
+    pub median: f64,
+    /// 95th percentile
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Compute a summary of the samples. Panics on empty input.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty samples");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std_dev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+        }
+    }
+
+    /// Summary of durations, in seconds.
+    pub fn of_durations(ds: &[Duration]) -> Summary {
+        let secs: Vec<f64> = ds.iter().map(|d| d.as_secs_f64()).collect();
+        Summary::of(&secs)
+    }
+
+    /// Relative std dev (coefficient of variation).
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std_dev / self.mean
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, q in [0, 1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Geometric mean of positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let log_sum: f64 = xs.iter().map(|x| x.ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Imbalance factor of a workload distribution: max/mean. 1.0 == perfectly
+/// balanced. This is the quantity MSREP's nnz-balanced partitioning drives
+/// to 1 (paper §2.3).
+pub fn imbalance(loads: &[u64]) -> f64 {
+    if loads.is_empty() {
+        return 1.0;
+    }
+    let max = *loads.iter().max().unwrap() as f64;
+    let mean = loads.iter().sum::<u64>() as f64 / loads.len() as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::of(&[2.0, 2.0, 2.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std_dev, 0.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!((s.min, s.max), (2.0, 2.0));
+    }
+
+    #[test]
+    fn summary_known_values() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.median, 2.5);
+        assert!((s.std_dev - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert_eq!(percentile(&v, 0.0), 0.0);
+        assert_eq!(percentile(&v, 0.5), 5.0);
+        assert_eq!(percentile(&v, 1.0), 10.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::of(&[5.0]);
+        assert_eq!(s.std_dev, 0.0);
+        assert_eq!(s.p95, 5.0);
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_balanced_is_one() {
+        assert_eq!(imbalance(&[5, 5, 5, 5]), 1.0);
+    }
+
+    #[test]
+    fn imbalance_skewed() {
+        // one GPU with 10x the load of the others (paper Fig. 6 scenario)
+        let im = imbalance(&[10, 1, 1, 1]);
+        assert!((im - 10.0 / 3.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_degenerate() {
+        assert_eq!(imbalance(&[]), 1.0);
+        assert_eq!(imbalance(&[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn of_durations_converts() {
+        let s = Summary::of_durations(&[Duration::from_millis(100), Duration::from_millis(300)]);
+        assert!((s.mean - 0.2).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,6 @@
+//! Evaluation workloads: the Table-2 matrix suite (scaled synthetic
+//! analogs) and the Fig. 6 imbalance sweep inputs.
+
+mod suite;
+
+pub use suite::{by_name, fig6_ratios, suite, suite_matrix, SuiteEntry};

@@ -1,0 +1,108 @@
+//! CLI integration tests: drive the compiled `msrep` binary end to end.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn msrep(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_msrep"))
+        .args(args)
+        .output()
+        .expect("binary must run")
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stdout).to_string()
+}
+
+fn tmpdir() -> PathBuf {
+    let d = std::env::temp_dir().join(format!("msrep_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let o = msrep(&[]);
+    assert!(o.status.success());
+    assert!(stdout(&o).contains("commands:"));
+}
+
+#[test]
+fn unknown_command_fails_with_hint() {
+    let o = msrep(&["frobnicate"]);
+    assert!(!o.status.success());
+    assert!(String::from_utf8_lossy(&o.stderr).contains("unknown command"));
+}
+
+#[test]
+fn info_lists_platforms() {
+    let o = msrep(&["info"]);
+    assert!(o.status.success());
+    let s = stdout(&o);
+    assert!(s.contains("summit") && s.contains("dgx1"));
+}
+
+#[test]
+fn suite_lists_six_matrices() {
+    let o = msrep(&["suite"]);
+    assert!(o.status.success());
+    let s = stdout(&o);
+    for name in ["mouse_gene", "wb-edu", "HV15R"] {
+        assert!(s.contains(name), "missing {name}");
+    }
+}
+
+#[test]
+fn gen_profile_partition_run_pipeline() {
+    let dir = tmpdir();
+    let mtx = dir.join("cli_test.mtx");
+    let mtx_s = mtx.to_str().unwrap();
+
+    // gen
+    let o = msrep(&[
+        "gen", "--out", mtx_s, "--kind", "power-law", "--m", "500", "--nnz", "5000",
+        "--r", "2.0", "--seed", "1",
+    ]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    assert!(mtx.exists());
+
+    // profile
+    let o = msrep(&["profile", "--matrix", mtx_s]);
+    assert!(o.status.success());
+    let s = stdout(&o);
+    assert!(s.contains("power-law R"));
+
+    // partition (balanced vs blocks imbalance should differ)
+    let o = msrep(&["partition", "--matrix", mtx_s, "--np", "4", "--strategy", "balanced"]);
+    assert!(o.status.success());
+    assert!(stdout(&o).contains("imbalance"));
+
+    // run on the CPU backend with verification
+    let o = msrep(&[
+        "run", "--matrix", mtx_s, "--platform", "summit", "--gpus", "6", "--mode",
+        "popt", "--backend", "cpu", "--verify",
+    ]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let s = stdout(&o);
+    assert!(s.contains("TOTAL") && s.contains("max relative error"));
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn run_on_suite_matrix_baseline_mode() {
+    let o = msrep(&[
+        "run", "--suite", "mouse_gene", "--platform", "dgx1", "--mode", "baseline",
+        "--backend", "cpu", "--format", "coo",
+    ]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    assert!(stdout(&o).contains("mode=baseline"));
+}
+
+#[test]
+fn bad_flags_are_rejected() {
+    assert!(!msrep(&["run", "--platform", "cray"]).status.success());
+    assert!(!msrep(&["run", "--suite", "nope", "--backend", "cpu"]).status.success());
+    assert!(!msrep(&["gen", "--m", "abc"]).status.success());
+    assert!(!msrep(&["partition", "--np", "4"]).status.success()); // no matrix
+}

@@ -1,0 +1,306 @@
+//! Engine-level integration tests: suite-scale workloads, scaling shapes,
+//! failure injection, and cross-mode/format agreement on the CpuRef
+//! backend (the PJRT path is covered in runtime_integration.rs).
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig, Strategy};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
+use msrep::sim::Platform;
+use msrep::spmv::spmv_matrix;
+use msrep::workload;
+
+fn engine_on(platform: Platform, np: usize, mode: Mode, format: FormatKind) -> Engine {
+    Engine::new(RunConfig {
+        platform,
+        num_gpus: np,
+        mode,
+        format,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })
+    .unwrap()
+}
+
+#[test]
+fn suite_matrix_full_pipeline_all_formats() {
+    // one real Table-2 analog end to end (hollywood: dense rows, high skew)
+    let e = workload::by_name("hollywood-2009").unwrap();
+    let coo = workload::suite_matrix(&e);
+    let x = gen::dense_vector(e.m, 5);
+    for format in FormatKind::ALL {
+        let mat = match format {
+            FormatKind::Csr => Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
+            FormatKind::Csc => Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
+            FormatKind::Coo => Matrix::Coo(coo.clone()),
+        };
+        let mut expect = vec![0.0f32; e.m];
+        spmv_matrix(&mat, &x, 1.0, 0.0, &mut expect).unwrap();
+        let rep = engine_on(Platform::summit(), 6, Mode::PStarOpt, format)
+            .spmv(&mat, &x, 1.0, 0.0, None)
+            .unwrap();
+        let max_rel = rep
+            .y
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+            .fold(0.0f32, f32::max);
+        assert!(max_rel < 5e-3, "{format:?}: {max_rel}");
+        assert!(rep.metrics.imbalance < 1.01, "{format:?} must be nnz-balanced");
+    }
+}
+
+#[test]
+fn scaling_shape_matches_paper_claims() {
+    // p*-opt approaches linear; baseline does not improve materially.
+    let e = workload::by_name("com-Orkut").unwrap();
+    let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(workload::suite_matrix(&e))));
+    let x = gen::dense_vector(e.m, 6);
+    let total = |mode: Mode, np: usize| {
+        engine_on(Platform::dgx1(), np, mode, FormatKind::Csr)
+            .spmv(&mat, &x, 1.0, 0.0, None)
+            .unwrap()
+            .metrics
+            .modeled_total
+    };
+    let t1 = total(Mode::PStarOpt, 1);
+    let t8 = total(Mode::PStarOpt, 8);
+    let speedup = t1 / t8;
+    assert!(speedup > 5.0, "p*-opt 8-GPU speedup {speedup} (paper: 6.2)");
+    let b1 = total(Mode::Baseline, 1);
+    let b8 = total(Mode::Baseline, 8);
+    assert!(
+        b1 / b8 < 2.0,
+        "baseline must not scale like p*-opt ({})",
+        b1 / b8
+    );
+}
+
+#[test]
+fn numa_effect_is_summit_specific() {
+    // paper §5.6: Summit cannot scale past ~3 GPUs without NUMA awareness;
+    // DGX-1 shows no strong effect.
+    let e = workload::by_name("com-Orkut").unwrap();
+    let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(workload::suite_matrix(&e))));
+    let x = gen::dense_vector(e.m, 7);
+    let run = |platform: Platform, np: usize, aware: bool| {
+        Engine::new(RunConfig {
+            platform,
+            num_gpus: np,
+            mode: Mode::PStarOpt,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: Some(aware),
+            strategy_override: None,
+        })
+        .unwrap()
+        .spmv(&mat, &x, 1.0, 0.0, None)
+        .unwrap()
+        .metrics
+        .modeled_total
+    };
+    // summit, naive: 6-GPU time barely beats 3-GPU time
+    let s3 = run(Platform::summit(), 3, false);
+    let s6 = run(Platform::summit(), 6, false);
+    assert!(s6 > 0.75 * s3, "summit naive should saturate: t3 {s3} t6 {s6}");
+    // summit, aware: 6 GPUs clearly beat 3
+    let a3 = run(Platform::summit(), 3, true);
+    let a6 = run(Platform::summit(), 6, true);
+    assert!(a6 < 0.62 * a3, "summit aware should scale: t3 {a3} t6 {a6}");
+    // dgx1: naive vs aware within 40% at 8 GPUs
+    let d_naive = run(Platform::dgx1(), 8, false);
+    let d_aware = run(Platform::dgx1(), 8, true);
+    assert!(d_naive / d_aware < 1.4, "dgx1 NUMA effect too strong");
+}
+
+#[test]
+fn fig6_imbalance_degrades_naive_throughput() {
+    // ratio 1:10 should cost roughly half the balanced throughput
+    // (paper Fig. 6: 559/1028 ≈ 0.54)
+    let x_len = 4_096;
+    let run = |ratio: f64| {
+        let coo = gen::two_band(x_len, x_len, 400_000, ratio, 9);
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let x = gen::dense_vector(x_len, 10);
+        Engine::new(RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: 8,
+            mode: Mode::PStar,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: Some(Strategy::Blocks),
+        })
+        .unwrap()
+        .spmv(&mat, &x, 1.0, 0.0, None)
+        .unwrap()
+        .metrics
+        .gflops()
+    };
+    let balanced = run(1.0);
+    let skewed = run(10.0);
+    let rel = skewed / balanced;
+    assert!(
+        (0.35..0.75).contains(&rel),
+        "1:10 imbalance should roughly halve throughput, got {rel}"
+    );
+}
+
+#[test]
+fn coo_partition_overhead_dominates_baseline() {
+    // §5.4: baseline COO partitioning costs 38–85% of end-to-end;
+    // p*-opt collapses it by an order of magnitude.
+    let e = workload::by_name("hollywood-2009").unwrap();
+    let mat = Matrix::Coo(workload::suite_matrix(&e));
+    let x = gen::dense_vector(e.m, 11);
+    let frac = |mode: Mode| {
+        engine_on(Platform::summit(), 6, mode, FormatKind::Coo)
+            .spmv(&mat, &x, 1.0, 0.0, None)
+            .unwrap()
+            .metrics
+            .partition_overhead()
+    };
+    let base = frac(Mode::Baseline);
+    let opt = frac(Mode::PStarOpt);
+    assert!(base > 0.3, "baseline COO partition overhead {base}");
+    assert!(opt < base / 5.0, "p*-opt should collapse it: {opt} vs {base}");
+}
+
+#[test]
+fn iterative_reuse_is_consistent() {
+    // engine is stateless across calls: same input, same output
+    let coo = gen::power_law(1_000, 1_000, 30_000, 2.0, 12);
+    let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+    let x = gen::dense_vector(1_000, 13);
+    let eng = engine_on(Platform::dgx1(), 8, Mode::PStarOpt, FormatKind::Csr);
+    let y1 = eng.spmv(&mat, &x, 1.0, 0.0, None).unwrap().y;
+    let y2 = eng.spmv(&mat, &x, 1.0, 0.0, None).unwrap().y;
+    assert_eq!(y1, y2);
+}
+
+#[test]
+fn empty_and_tiny_matrices() {
+    // nnz == 0
+    let mat = Matrix::Coo(msrep::formats::Coo::empty(5, 5));
+    let eng = engine_on(Platform::dgx1(), 4, Mode::PStarOpt, FormatKind::Coo);
+    let rep = eng.spmv(&mat, &[1.0; 5], 2.0, 0.0, None).unwrap();
+    assert_eq!(rep.y, vec![0.0; 5]);
+    // 1x1
+    let one = Matrix::Csr(convert::to_csr(&Matrix::Coo(
+        msrep::formats::Coo::new(1, 1, vec![0], vec![0], vec![3.0]).unwrap(),
+    )));
+    let eng = engine_on(Platform::summit(), 6, Mode::PStar, FormatKind::Csr);
+    let rep = eng.spmv(&one, &[2.0], 1.0, 0.0, None).unwrap();
+    assert!((rep.y[0] - 6.0).abs() < 1e-6);
+}
+
+#[test]
+fn more_gpus_than_rows() {
+    let coo = gen::uniform(3, 3, 5, 14);
+    let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+    let eng = engine_on(Platform::dgx1(), 8, Mode::PStarOpt, FormatKind::Csr);
+    let x = vec![1.0f32; 3];
+    let mut expect = vec![0.0f32; 3];
+    spmv_matrix(&mat, &x, 1.0, 0.0, &mut expect).unwrap();
+    let rep = eng.spmv(&mat, &x, 1.0, 0.0, None).unwrap();
+    for (a, b) in rep.y.iter().zip(&expect) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn rectangular_matrices() {
+    for (m, n) in [(100usize, 700usize), (700, 100)] {
+        let coo = gen::uniform(m, n, 2_000, 15);
+        let x = gen::dense_vector(n, 16);
+        let mut expect = vec![0.0f32; m];
+        for format in FormatKind::ALL {
+            let mat = match format {
+                FormatKind::Csr => Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
+                FormatKind::Csc => Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
+                FormatKind::Coo => Matrix::Coo(coo.clone()),
+            };
+            spmv_matrix(&mat, &x, 1.0, 0.0, &mut expect).unwrap();
+            let rep = engine_on(Platform::summit(), 5, Mode::PStar, format)
+                .spmv(&mat, &x, 1.0, 0.0, None)
+                .unwrap();
+            for (a, b) in rep.y.iter().zip(&expect) {
+                assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()), "{format:?} {m}x{n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn spmm_matches_column_by_column_spmv() {
+    let k = 5; // non-native K exercises the general path
+    let coo = gen::power_law(600, 600, 10_000, 2.0, 19);
+    let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+    let x = gen::dense_vector(600 * k, 20);
+    let y0 = gen::dense_vector(600 * k, 21);
+    let eng = engine_on(Platform::summit(), 6, Mode::PStarOpt, FormatKind::Csr);
+    let rep = eng.spmm(&mat, &x, k, 1.5, -0.5, Some(&y0)).unwrap();
+    // column j of SpMM == SpMV on column slice j
+    for j in 0..k {
+        let xj: Vec<f32> = (0..600).map(|i| x[i * k + j]).collect();
+        let y0j: Vec<f32> = (0..600).map(|i| y0[i * k + j]).collect();
+        let yj = eng.spmv(&mat, &xj, 1.5, -0.5, Some(&y0j)).unwrap().y;
+        for r in 0..600 {
+            assert!(
+                (rep.y[r * k + j] - yj[r]).abs() < 2e-3 * (1.0 + yj[r].abs()),
+                "col {j} row {r}"
+            );
+        }
+    }
+}
+
+#[test]
+fn spmm_amortizes_stream_traffic() {
+    // modeled SpMM time must be far below K x SpMV time (§2.3 data reuse)
+    let k = 8;
+    let coo = gen::power_law(4_096, 4_096, 500_000, 2.0, 22);
+    let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+    let eng = engine_on(Platform::dgx1(), 8, Mode::PStarOpt, FormatKind::Csr);
+    let x1 = gen::dense_vector(4_096, 23);
+    let t_spmv = eng.spmv(&mat, &x1, 1.0, 0.0, None).unwrap().metrics.modeled_total;
+    let xk = gen::dense_vector(4_096 * k, 24);
+    let t_spmm = eng.spmm(&mat, &xk, k, 1.0, 0.0, None).unwrap().metrics.modeled_total;
+    assert!(
+        t_spmm < 0.6 * k as f64 * t_spmv,
+        "spmm {t_spmm} vs {k}x spmv {}",
+        k as f64 * t_spmv
+    );
+}
+
+#[test]
+fn spmm_dimension_validation() {
+    let mat = Matrix::Coo(gen::uniform(10, 10, 30, 25));
+    let eng = engine_on(Platform::dgx1(), 2, Mode::PStar, FormatKind::Coo);
+    assert!(eng.spmm(&mat, &[0.0; 10], 0, 1.0, 0.0, None).is_err()); // k=0
+    assert!(eng.spmm(&mat, &[0.0; 25], 3, 1.0, 0.0, None).is_err()); // bad x len
+    assert!(eng
+        .spmm(&mat, &[0.0; 30], 3, 1.0, 1.0, Some(&[0.0; 29]))
+        .is_err()); // bad y0 len
+}
+
+#[test]
+fn device_memory_wall_reports_oom() {
+    let mut platform = Platform::summit();
+    platform.gpu_mem_bytes = 8 * 1024; // 8 KiB "GPUs"
+    let coo = gen::uniform(2_000, 2_000, 50_000, 17);
+    let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+    let eng = Engine::new(RunConfig {
+        platform,
+        num_gpus: 6,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })
+    .unwrap();
+    let x = gen::dense_vector(2_000, 18);
+    match eng.spmv(&mat, &x, 1.0, 0.0, None) {
+        Err(msrep::Error::DeviceOom { gpu, .. }) => assert!(gpu < 6),
+        other => panic!("expected DeviceOom, got {other:?}"),
+    }
+}

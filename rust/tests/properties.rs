@@ -1,0 +1,243 @@
+//! Property-based tests over the coordinator's core invariants, driven by
+//! the in-crate `util::prop` harness (proptest is unavailable offline —
+//! see DESIGN.md §3). Each property runs a deterministic seeded sweep;
+//! failures print the replay seed.
+//!
+//! Invariants covered (the ones the paper's correctness rests on):
+//!  * partitions tile `[0, nnz)` exactly — no loss, no overlap (Alg. 2/4/6)
+//!  * per-partition loads differ by at most one non-zero (nnz balance)
+//!  * local pointer arrays are monotone and consistent with the range
+//!  * partition → execute → merge reproduces the exact SpMV for every
+//!    format × strategy × np (routing/batching/state correctness)
+//!  * pCSR merge metadata is self-sufficient (merge back to the original CSR)
+
+use msrep::coordinator::partitioner::{balanced, baseline};
+use msrep::coordinator::{merge, Engine, Mode, RunConfig};
+use msrep::coordinator::{Backend, FormatKind};
+use msrep::formats::{convert, gen, merge_row_partials, Coo, Csr, Matrix, PCoo, PCsc, PCsr};
+use msrep::sim::Platform;
+use msrep::spmv::spmv_matrix;
+use msrep::util::prop::{check, Gen};
+
+/// Random sparse matrix: size/density/skew all drawn from the generator.
+fn arb_coo(g: &mut Gen) -> Coo {
+    let m = g.usize_in(1..40 + g.size() * 8);
+    let n = g.usize_in(1..40 + g.size() * 8);
+    let nnz = g.usize_in(0..(m * n).min(60 + g.size() * 30));
+    match g.usize_in(0..3) {
+        0 => gen::uniform(m, n, nnz, g.rng().next_u64()),
+        1 => gen::power_law(m, n, nnz.max(1), 1.0 + 2.5 * g.rng().f64(), g.rng().next_u64()),
+        _ => {
+            if m >= 2 {
+                gen::two_band(m, n, nnz.max(2), 1.0 + 9.0 * g.rng().f64(), g.rng().next_u64())
+            } else {
+                gen::uniform(m, n, nnz, g.rng().next_u64())
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pcsr_partitions_tile_nnz_exactly() {
+    check("pcsr tiles [0,nnz)", 60, |g| {
+        let coo = arb_coo(g);
+        let csr = Csr::from_coo(&coo);
+        let np = g.usize_in(1..12);
+        let parts = PCsr::partition(&csr, np).unwrap();
+        assert_eq!(parts.len(), np);
+        assert_eq!(parts[0].start_idx, 0);
+        assert_eq!(parts.last().unwrap().end_idx, csr.nnz());
+        for w in parts.windows(2) {
+            assert_eq!(w[0].end_idx, w[1].start_idx, "gap/overlap");
+        }
+        // nnz balance: loads differ by at most 1
+        let loads: Vec<usize> = parts.iter().map(|p| p.nnz()).collect();
+        let (lo, hi) = (loads.iter().min().unwrap(), loads.iter().max().unwrap());
+        assert!(hi - lo <= 1, "loads {loads:?}");
+    });
+}
+
+#[test]
+fn prop_pcsc_pcoo_tile_and_balance() {
+    check("pcsc/pcoo tile and balance", 40, |g| {
+        let coo = arb_coo(g);
+        let np = g.usize_in(1..10);
+        let csc = convert::to_csc(&Matrix::Coo(coo.clone()));
+        let parts = PCsc::partition(&csc, np).unwrap();
+        assert_eq!(parts.iter().map(|p| p.nnz()).sum::<usize>(), csc.nnz());
+        for w in parts.windows(2) {
+            assert_eq!(w[0].end_idx, w[1].start_idx);
+        }
+        let mut row_sorted = coo.clone();
+        row_sorted.sort_by_row();
+        let parts = PCoo::partition(&row_sorted, np).unwrap();
+        assert_eq!(parts.iter().map(|p| p.nnz()).sum::<usize>(), coo.nnz());
+        let loads: Vec<usize> = parts.iter().map(|p| p.nnz()).collect();
+        let (lo, hi) = (loads.iter().min().unwrap(), loads.iter().max().unwrap());
+        assert!(hi - lo <= 1);
+    });
+}
+
+#[test]
+fn prop_local_row_ptr_consistent() {
+    check("pcsr local row_ptr", 60, |g| {
+        let coo = arb_coo(g);
+        let csr = Csr::from_coo(&coo);
+        let np = g.usize_in(1..10);
+        for p in PCsr::partition(&csr, np).unwrap() {
+            assert_eq!(p.row_ptr[0], 0);
+            assert_eq!(*p.row_ptr.last().unwrap(), p.nnz());
+            assert!(p.row_ptr.windows(2).all(|w| w[0] <= w[1]));
+            // every local (row, k) maps back to the right global nnz
+            let ids = p.local_row_ids();
+            assert_eq!(ids.len(), p.nnz());
+            if p.nnz() > 0 {
+                assert!((*ids.iter().max().unwrap() as usize) < p.local_rows());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_merge_pcsr_roundtrip() {
+    check("merge pCSR back to CSR", 40, |g| {
+        let coo = arb_coo(g);
+        let csr = Csr::from_coo(&coo);
+        let np = g.usize_in(1..8);
+        let parts = PCsr::partition(&csr, np).unwrap();
+        let merged = convert::merge_pcsr(&csr, &parts).unwrap();
+        assert_eq!(merged.row_ptr, csr.row_ptr);
+    });
+}
+
+#[test]
+fn prop_partition_execute_merge_equals_reference() {
+    check("partition+merge == SpMV", 40, |g| {
+        let coo = arb_coo(g);
+        let format = *g.choose(&FormatKind::ALL);
+        let mat = match format {
+            FormatKind::Csr => Matrix::Csr(convert::to_csr(&Matrix::Coo(coo))),
+            FormatKind::Csc => Matrix::Csc(convert::to_csc(&Matrix::Coo(coo))),
+            FormatKind::Coo => {
+                let mut c = coo;
+                if g.prob(0.5) {
+                    c.sort_by_col();
+                } else {
+                    c.sort_by_row();
+                }
+                Matrix::Coo(c)
+            }
+        };
+        let np = g.usize_in(1..9);
+        let use_balanced = g.prob(0.7);
+        let out = if use_balanced { balanced(&mat, np) } else { baseline(&mat, np) };
+        let out = match out {
+            Ok(o) => o,
+            // baseline COO rejects col-sorted input by contract
+            Err(_) => return,
+        };
+        let n = mat.cols();
+        let m = mat.rows();
+        let x = gen::dense_vector(n, g.rng().next_u64());
+        let alpha = g.f32_in(-2.0, 2.0);
+        let beta = g.f32_in(-2.0, 2.0);
+        let y0 = gen::dense_vector(m, g.rng().next_u64());
+
+        // execute each task with the plain stream loop
+        let partials: Vec<Vec<f32>> = out
+            .tasks
+            .iter()
+            .map(|t| {
+                let mut py = vec![0.0f32; t.out_len];
+                for k in 0..t.nnz() {
+                    py[t.row_idx[k] as usize] += alpha * t.val[k] * x[t.col_idx[k] as usize];
+                }
+                py
+            })
+            .collect();
+        let mut y = y0.clone();
+        merge::merge(&out.tasks, &partials, beta, &mut y).unwrap();
+
+        let mut expect = y0;
+        spmv_matrix(&mat, &x, alpha, beta, &mut expect).unwrap();
+        for (i, (a, b)) in y.iter().zip(&expect).enumerate() {
+            assert!(
+                (a - b).abs() < 3e-3 * (1.0 + b.abs()),
+                "{format:?} np={np} balanced={use_balanced} row {i}: {a} vs {b}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_engine_modes_agree_with_each_other() {
+    check("all modes produce the same y", 15, |g| {
+        let coo = arb_coo(g);
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let x = gen::dense_vector(mat.cols(), g.rng().next_u64());
+        let np = g.usize_in(1..7);
+        let mut results = vec![];
+        for mode in Mode::ALL {
+            let eng = Engine::new(RunConfig {
+                platform: Platform::summit(),
+                num_gpus: np.min(6),
+                mode,
+                format: FormatKind::Csr,
+                backend: Backend::CpuRef,
+                numa_aware: None,
+                strategy_override: None,
+            })
+            .unwrap();
+            results.push(eng.spmv(&mat, &x, 1.0, 0.0, None).unwrap().y);
+        }
+        for w in results.windows(2) {
+            for (a, b) in w[0].iter().zip(&w[1]) {
+                assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_merge_row_partials_linear_in_beta() {
+    check("row merge is affine in beta", 30, |g| {
+        let coo = arb_coo(g);
+        let csr = Csr::from_coo(&coo);
+        let np = g.usize_in(1..6);
+        let parts = PCsr::partition(&csr, np).unwrap();
+        let partials: Vec<Vec<f32>> = parts
+            .iter()
+            .map(|p| g.vec_f32(p.local_rows()))
+            .collect();
+        let y0 = g.vec_f32(csr.rows());
+        let mut y_b0 = y0.clone();
+        merge_row_partials(&parts, &partials, 0.0, &mut y_b0).unwrap();
+        let mut y_b2 = y0.clone();
+        merge_row_partials(&parts, &partials, 2.0, &mut y_b2).unwrap();
+        // affine: y(beta) = y(0) + beta*y0
+        for i in 0..csr.rows() {
+            let want = y_b0[i] + 2.0 * y0[i];
+            assert!((y_b2[i] - want).abs() < 1e-4 * (1.0 + want.abs()));
+        }
+    });
+}
+
+#[test]
+fn prop_generator_invariants() {
+    check("generators produce valid matrices", 50, |g| {
+        let coo = arb_coo(g);
+        // constructor-level invariants re-checked end to end
+        assert!(coo.row_idx.iter().all(|&r| (r as usize) < coo.rows()));
+        assert!(coo.col_idx.iter().all(|&c| (c as usize) < coo.cols()));
+        assert_eq!(coo.row_idx.len(), coo.val.len());
+        // conversions preserve nnz and dense content
+        let csr = convert::to_csr(&Matrix::Coo(coo.clone()));
+        let csc = convert::to_csc(&Matrix::Coo(coo.clone()));
+        assert_eq!(csr.nnz(), coo.nnz());
+        assert_eq!(csc.nnz(), coo.nnz());
+        if coo.rows() * coo.cols() <= 4096 {
+            assert_eq!(csr.to_dense(), coo.to_dense());
+            assert_eq!(csc.to_dense(), coo.to_dense());
+        }
+    });
+}

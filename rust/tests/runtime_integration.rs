@@ -1,0 +1,227 @@
+//! Integration tests for the PJRT runtime: load AOT artifacts, execute,
+//! and validate numerics against the rust CPU oracles.
+//!
+//! These tests require `make artifacts` to have run (the test harness
+//! skips gracefully if the directory is absent, so `cargo test` before
+//! `make artifacts` still passes — but CI/`make test` always builds
+//! artifacts first).
+
+use msrep::formats::{convert, gen, Matrix};
+use msrep::runtime::{default_artifact_dir, SpmvRuntime};
+use msrep::spmv::spmv_matrix;
+use msrep::util::rng::Rng;
+
+fn runtime() -> Option<SpmvRuntime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built ({})", dir.display());
+        return None;
+    }
+    Some(SpmvRuntime::new(dir).expect("runtime must open"))
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (a - b).abs() <= tol * (1.0 + b.abs()),
+            "{ctx}: element {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn spmv_partial_matches_cpu_oracle() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(42);
+    let (nnz, n, m) = (3_000, 1_000, 800);
+    let val: Vec<f32> = (0..nnz).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let col: Vec<u32> = (0..nnz).map(|_| rng.usize_below(n) as u32).collect();
+    let row: Vec<u32> = (0..nnz).map(|_| rng.usize_below(m) as u32).collect();
+    let x: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let alpha = 1.5f32;
+
+    let got = rt.spmv_partial(&val, &col, &row, &x, alpha, m).unwrap();
+
+    let mut want = vec![0.0f32; m];
+    for k in 0..nnz {
+        want[row[k] as usize] += alpha * val[k] * x[col[k] as usize];
+    }
+    assert_close(&got, &want, 1e-4, "spmv_partial");
+}
+
+#[test]
+fn spmv_partial_empty_stream_is_zero() {
+    let Some(rt) = runtime() else { return };
+    let y = rt.spmv_partial(&[], &[], &[], &[1.0, 2.0], 3.0, 5).unwrap();
+    assert_eq!(y, vec![0.0; 5]);
+}
+
+#[test]
+fn spmv_partial_bucket_boundaries() {
+    let Some(rt) = runtime() else { return };
+    // exactly at and one past the smallest nnz bucket
+    for nnz in [4_096usize, 4_097] {
+        let val = vec![1.0f32; nnz];
+        let col = vec![0u32; nnz];
+        let row = vec![0u32; nnz];
+        let x = vec![2.0f32; 4];
+        let y = rt.spmv_partial(&val, &col, &row, &x, 1.0, 4).unwrap();
+        assert!((y[0] - 2.0 * nnz as f32).abs() < 2.0, "nnz={nnz}: {}", y[0]);
+        assert_eq!(&y[1..], &[0.0, 0.0, 0.0]);
+    }
+}
+
+#[test]
+fn axpby_matches() {
+    let Some(rt) = runtime() else { return };
+    let p: Vec<f32> = (0..100).map(|i| i as f32).collect();
+    let y: Vec<f32> = (0..100).map(|i| (100 - i) as f32).collect();
+    let out = rt.axpby(2.0, &p, -0.5, &y).unwrap();
+    for i in 0..100 {
+        let want = 2.0 * p[i] - 0.5 * y[i];
+        assert!((out[i] - want).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn reduce_partials_sums_any_fan_in() {
+    let Some(rt) = runtime() else { return };
+    for k in [1usize, 2, 7, 8, 9, 20] {
+        let parts: Vec<Vec<f32>> = (0..k).map(|i| vec![(i + 1) as f32; 50]).collect();
+        let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+        let got = rt.reduce_partials(&refs, 50).unwrap();
+        let want = (k * (k + 1) / 2) as f32;
+        assert!(
+            got.iter().all(|&v| (v - want).abs() < 1e-3),
+            "k={k}: got {} want {want}",
+            got[0]
+        );
+    }
+}
+
+#[test]
+fn spmm_partial_matches_k_spmv_calls() {
+    let Some(rt) = runtime() else { return };
+    let k = msrep::runtime::buckets::SPMM_K;
+    let mut rng = Rng::new(7);
+    let (nnz, n, m) = (2_000, 500, 400);
+    let val: Vec<f32> = (0..nnz).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let col: Vec<u32> = (0..nnz).map(|_| rng.usize_below(n) as u32).collect();
+    let row: Vec<u32> = (0..nnz).map(|_| rng.usize_below(m) as u32).collect();
+    let x: Vec<f32> = (0..n * k).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+
+    let y = rt.spmm_partial(&val, &col, &row, &x, n, 2.0, m).unwrap();
+    assert_eq!(y.len(), m * k);
+    for j in 0..k {
+        let xj: Vec<f32> = (0..n).map(|i| x[i * k + j]).collect();
+        let yj = rt.spmv_partial(&val, &col, &row, &xj, 2.0, m).unwrap();
+        for r in 0..m {
+            assert!(
+                (y[r * k + j] - yj[r]).abs() < 1e-3 * (1.0 + yj[r].abs()),
+                "col {j} row {r}: {} vs {}",
+                y[r * k + j],
+                yj[r]
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_spmm_pjrt_matches_cpuref() {
+    let Some(_rt) = runtime() else { return };
+    use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+    use msrep::sim::Platform;
+    let k = msrep::runtime::buckets::SPMM_K;
+    let coo = gen::power_law(800, 800, 15_000, 2.0, 88);
+    let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+    let x = gen::dense_vector(800 * k, 89);
+    let mk = |backend| {
+        Engine::new(RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: 8,
+            mode: Mode::PStarOpt,
+            format: msrep::formats::FormatKind::Csr,
+            backend,
+            numa_aware: None,
+            strategy_override: None,
+        })
+        .unwrap()
+    };
+    let y_pjrt = mk(Backend::Pjrt).spmm(&mat, &x, k, 1.0, 0.0, None).unwrap().y;
+    let y_cpu = mk(Backend::CpuRef).spmm(&mat, &x, k, 1.0, 0.0, None).unwrap().y;
+    assert_eq!(y_pjrt.len(), 800 * k);
+    for (a, b) in y_pjrt.iter().zip(&y_cpu) {
+        assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()));
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = runtime() else { return };
+    let val = vec![1.0f32; 10];
+    let col = vec![0u32; 10];
+    let row = vec![0u32; 10];
+    let x = vec![1.0f32; 10];
+    rt.spmv_partial(&val, &col, &row, &x, 1.0, 10).unwrap();
+    let after_first = rt.compile_count();
+    for _ in 0..5 {
+        rt.spmv_partial(&val, &col, &row, &x, 1.0, 10).unwrap();
+    }
+    assert_eq!(rt.compile_count(), after_first, "same bucket must not recompile");
+    let stats = rt.stats();
+    assert_eq!(stats.spmv_calls, 6);
+    assert!(stats.padding_waste() >= 1.0);
+}
+
+#[test]
+fn oversize_inputs_rejected_with_bucket_error() {
+    let Some(rt) = runtime() else { return };
+    let n = 2_000_000;
+    let val = vec![0.0f32; n];
+    let col = vec![0u32; n];
+    let row = vec![0u32; n];
+    match rt.spmv_partial(&val, &col, &row, &[1.0], 1.0, 1) {
+        Err(msrep::Error::BucketOverflow { axis, .. }) => assert_eq!(axis, "nnz"),
+        other => panic!("expected BucketOverflow, got {other:?}"),
+    }
+}
+
+#[test]
+fn full_engine_pjrt_backend_end_to_end() {
+    let Some(rt) = runtime() else { return };
+    use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+    use msrep::sim::Platform;
+
+    let coo = gen::power_law(600, 600, 12_000, 2.0, 77);
+    let x = gen::dense_vector(600, 78);
+    let y0 = gen::dense_vector(600, 79);
+
+    for format in msrep::formats::FormatKind::ALL {
+        let mat = match format {
+            msrep::formats::FormatKind::Csr => Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
+            msrep::formats::FormatKind::Csc => Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
+            msrep::formats::FormatKind::Coo => Matrix::Coo(coo.clone()),
+        };
+        let mut expect = y0.clone();
+        spmv_matrix(&mat, &x, 2.0, -1.0, &mut expect).unwrap();
+
+        let engine = Engine::with_runtime(
+            RunConfig {
+                platform: Platform::summit(),
+                num_gpus: 6,
+                mode: Mode::PStarOpt,
+                format,
+                backend: Backend::Pjrt,
+                numa_aware: None,
+                strategy_override: None,
+            },
+            Some(SpmvRuntime::new(default_artifact_dir()).unwrap()),
+        )
+        .unwrap();
+        let rep = engine.spmv(&mat, &x, 2.0, -1.0, Some(&y0)).unwrap();
+        assert_close(&rep.y, &expect, 5e-3, &format!("engine/{format:?}"));
+        assert!(rep.metrics.modeled_total > 0.0);
+    }
+    drop(rt);
+}
