@@ -1,0 +1,124 @@
+//! Bench: serving-layer throughput — batched SpMM dispatch vs sequential
+//! per-request SpMV (the ISSUE-1 acceptance experiment).
+//!
+//! A closed burst of requests against one matrix is served at increasing
+//! max batch sizes; throughput is completed requests per **modeled**
+//! second. The sequential reference (batch 1, no plan cache) re-partitions
+//! on every call like the paper's one-shot engine; the batched server
+//! amortizes the partition plan via the cache and the sparse stream via
+//! SpMM coalescing. Expected: >= 2x modeled throughput at batch >= 8 on
+//! the DGX-1 preset, with a plan-cache hit rate > 0.
+//!
+//! Run with `cargo bench --bench serve_throughput`
+//! (`MSREP_BENCH_QUICK=1` shrinks the host-wall measurement).
+
+use msrep::coordinator::{Backend, Mode, RunConfig};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
+use msrep::report::Table;
+use msrep::serve::{ServeConfig, ServeReport, Server, SpmvRequest};
+use msrep::sim::Platform;
+use msrep::util::bench::{black_box, section, Bench};
+
+const M: usize = 4_096;
+const NNZ: usize = 200_000;
+const REQUESTS: usize = 128;
+
+fn base_config(max_batch: usize, cache: usize) -> ServeConfig {
+    ServeConfig {
+        run: RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: 8,
+            mode: Mode::PStarOpt,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: None,
+        },
+        num_engines: 1,
+        max_batch,
+        flush_deadline_s: 50e-6,
+        queue_capacity: REQUESTS,
+        plan_cache_capacity: cache,
+    }
+}
+
+fn run_once(max_batch: usize, cache: usize) -> ServeReport {
+    let mut server = Server::new(base_config(max_batch, cache)).expect("server");
+    let coo = gen::power_law(M, M, NNZ, 2.0, 54);
+    let id = server.register(Matrix::Csr(convert::to_csr(&Matrix::Coo(coo))));
+    let trace: Vec<SpmvRequest> = (0..REQUESTS)
+        .map(|i| SpmvRequest {
+            matrix: id,
+            x: gen::dense_vector(M, 500 + i as u64),
+            alpha: 1.0,
+            arrival_s: 0.0,
+            deadline_s: None,
+        })
+        .collect();
+    server.run(trace).expect("serve run")
+}
+
+fn main() {
+    section("serve throughput — batched SpMM vs sequential per-request SpMV (DGX-1 x8)");
+    println!(
+        "one tenant, {M} x {M} power-law matrix (~{NNZ} nnz), {REQUESTS}-request burst\n"
+    );
+
+    let sequential = run_once(1, 0);
+    let seq_rps = sequential.throughput_rps();
+
+    let mut t = Table::new([
+        "max batch",
+        "mean k",
+        "modeled req/s",
+        "speedup vs sequential",
+        "p50 latency",
+        "p99 latency",
+        "cache hit rate",
+    ]);
+    t.row([
+        "1 (no cache)".to_string(),
+        format!("{:.2}", sequential.mean_batch()),
+        format!("{seq_rps:.0}"),
+        "1.00x".to_string(),
+        msrep::report::format_duration_s(sequential.p50()),
+        msrep::report::format_duration_s(sequential.p99()),
+        "0.0%".to_string(),
+    ]);
+
+    let mut speedup_at_8 = 0.0;
+    for batch in [2usize, 4, 8, 16] {
+        let rep = run_once(batch, 8);
+        assert_eq!(rep.completed, REQUESTS, "burst must fully complete");
+        let speedup = rep.throughput_rps() / seq_rps;
+        if batch == 8 {
+            speedup_at_8 = speedup;
+        }
+        t.row([
+            batch.to_string(),
+            format!("{:.2}", rep.mean_batch()),
+            format!("{:.0}", rep.throughput_rps()),
+            format!("{speedup:.2}x"),
+            msrep::report::format_duration_s(rep.p50()),
+            msrep::report::format_duration_s(rep.p99()),
+            format!("{:.1}%", rep.cache.hit_rate() * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let rep8 = run_once(8, 8);
+    println!(
+        "\nacceptance: batch-8 speedup {speedup_at_8:.2}x (target >= 2x) — {}; \
+         plan-cache hit rate {:.1}% (target > 0) — {}",
+        if speedup_at_8 >= 2.0 { "PASS" } else { "FAIL" },
+        rep8.cache.hit_rate() * 100.0,
+        if rep8.cache.hit_rate() > 0.0 { "PASS" } else { "FAIL" },
+    );
+
+    section("host-side cost of driving the serving simulation (wall time)");
+    let b = Bench::from_env();
+    let r = b.run("serve/run_128_requests_batch8", || {
+        black_box(run_once(8, 8).completed)
+    });
+    println!("{}", r.render());
+}

@@ -7,6 +7,13 @@
 //! format-specific merging (§4.3) — all three §5.3 variants selectable via
 //! [`Mode`].
 //!
+//! Partitioning is factored out into a reusable [`PartitionPlan`]: the
+//! one-shot [`Engine::spmv`] / [`Engine::spmm`] build a fresh plan per call
+//! (exactly the paper's per-call behaviour, Fig. 16), while
+//! [`Engine::spmv_with_plan`] / [`Engine::spmm_with_plan`] replay a
+//! prebuilt plan and charge **no** partitioning time — the hook the
+//! [`crate::serve`] plan cache amortizes repeat-matrix traffic through.
+//!
 //! Numerics are real (the partition kernels actually run, via PJRT or the
 //! CPU reference); multi-GPU *time* comes from [`crate::sim::model`]
 //! (DESIGN.md §3). Every result is verifiable against
@@ -22,7 +29,8 @@ use crate::sim::{model, DeviceMemory};
 use super::config::{Backend, Mode, RunConfig};
 use super::merge;
 use super::metrics::Metrics;
-use super::partitioner::{self, GpuTask, MergeClass};
+use super::partitioner::MergeClass;
+use super::plan::PartitionPlan;
 use super::worker;
 
 /// Result of one engine SpMV: the output vector plus the full breakdown.
@@ -82,8 +90,15 @@ impl Engine {
         self.runtime
     }
 
+    /// Build a reusable [`PartitionPlan`] for `a` under this engine's
+    /// configuration (one CPU thread per GPU, §3.3).
+    pub fn plan(&self, a: &Matrix) -> Result<PartitionPlan> {
+        PartitionPlan::build(a, &self.config)
+    }
+
     /// Multi-GPU SpMV: `y = alpha*A*x + beta*y0` (paper Alg. 1 semantics;
-    /// `y0 = None` means a zero initial vector).
+    /// `y0 = None` means a zero initial vector). Partitions from scratch —
+    /// the paper's one-shot call shape.
     pub fn spmv(
         &self,
         a: &Matrix,
@@ -92,55 +107,44 @@ impl Engine {
         beta: f32,
         y0: Option<&[f32]>,
     ) -> Result<SpmvReport> {
-        let (m, n) = (a.rows(), a.cols());
-        if x.len() != n {
-            return Err(Error::InvalidMatrix(format!("x length {} != n {n}", x.len())));
-        }
-        if let Some(y0) = y0 {
-            if y0.len() != m {
-                return Err(Error::InvalidMatrix(format!("y0 length {} != m {m}", y0.len())));
-            }
-        }
+        // reject malformed calls before paying the O(nnz) partitioning pass
+        check_spmv_dims(a.rows(), a.cols(), x, y0)?;
+        let plan = self.plan(a)?;
+        let mut rep = self.spmv_with_plan(&plan, x, alpha, beta, y0)?;
+        charge_partition(&mut rep.metrics, &plan);
+        Ok(rep)
+    }
+
+    /// Multi-GPU SpMV against a prebuilt plan. Charges **no** partitioning
+    /// time — the plan's build cost is the caller's to attribute (charged
+    /// by [`Engine::spmv`] for fresh plans, amortized away by the serve
+    /// plan cache on repeat traffic).
+    pub fn spmv_with_plan(
+        &self,
+        plan: &PartitionPlan,
+        x: &[f32],
+        alpha: f32,
+        beta: f32,
+        y0: Option<&[f32]>,
+    ) -> Result<SpmvReport> {
+        plan.validate_for(&self.config)?;
+        let (m, n) = (plan.m, plan.n);
+        check_spmv_dims(m, n, x, y0)?;
         let cfg = &self.config;
         let np = cfg.num_gpus;
         let p = &cfg.platform;
         let threaded = cfg.mode != Mode::Baseline;
-        let strategy = cfg.effective_strategy();
+        let tasks = &plan.tasks;
 
-        // ---- 1. partition (one CPU thread per GPU for p*, §3.3) --------
-        let fan = worker::run_per_gpu(np, threaded, |g| {
-            partitioner::build_task(a, np, g, strategy)
-        });
-        let measured_partition = fan.wall;
-        let tasks: Vec<GpuTask> = fan.results.into_iter().collect::<Result<_>>()?;
-        let search_ops = partitioner::search_ops(a, np, strategy);
-        let rewrite_total: u64 = tasks.iter().map(|t| t.rewrite_ops).sum();
-        let rewrite_max: u64 = tasks.iter().map(|t| t.rewrite_ops).max().unwrap_or(0);
-        let t_partition = match cfg.mode {
-            // single thread does everything
-            Mode::Baseline => {
-                model::cpu_search_time(search_ops) + model::cpu_rewrite_time(rewrite_total)
-            }
-            // np threads rewrite concurrently
-            Mode::PStar => {
-                model::cpu_search_time(search_ops) + model::cpu_rewrite_time(rewrite_max)
-            }
-            // rewrite offloaded to the GPUs, hidden under the mandatory H2D
-            // (§4.1) — only the launch remains
-            Mode::PStarOpt => {
-                model::cpu_search_time(search_ops) + model::gpu_pointer_rewrite_time(p)
-            }
-        };
-
-        // ---- 2. device memory accounting --------------------------------
-        for t in &tasks {
+        // ---- 1. device memory accounting --------------------------------
+        for t in tasks {
             let mut mem = DeviceMemory::new(t.gpu, p.gpu_mem_bytes);
             mem.alloc("stream", (t.nnz() * 12) as u64)?;
             mem.alloc("x", (n * 4) as u64)?;
             mem.alloc("y_partial", (t.out_len * 4) as u64)?;
         }
 
-        // ---- 3. host→device uploads -------------------------------------
+        // ---- 2. host→device uploads -------------------------------------
         let h2d: Vec<u64> = tasks.iter().map(|t| t.h2d_bytes(n)).collect();
         let h2d_total: u64 = h2d.iter().sum();
         let src_numa: Vec<usize> = if cfg.effective_numa_aware() {
@@ -156,7 +160,7 @@ impl Engine {
                 .fold(0.0, f64::max)
         };
 
-        // ---- 4. device kernels (model) + real execution (numerics) ------
+        // ---- 3. device kernels (model) + real execution (numerics) ------
         let t_compute = tasks
             .iter()
             .map(|t| {
@@ -189,7 +193,7 @@ impl Engine {
                 let rt = self.runtime.as_ref().expect("checked in with_runtime");
                 let x_buf = rt.upload_x(x)?;
                 let mut out = Vec::with_capacity(np);
-                for t in &tasks {
+                for t in tasks {
                     out.push(rt.spmv_partial_buf(
                         &t.val,
                         &t.col_idx,
@@ -204,9 +208,9 @@ impl Engine {
         };
         let measured_exec = exec_start.elapsed().as_secs_f64();
 
-        // ---- 5. merge (model + real) -------------------------------------
-        let merge_class = partitioner::merge_class(a);
-        let overlaps = merge::overlap_count(&tasks);
+        // ---- 4. merge (model + real) -------------------------------------
+        let merge_class = plan.merge_class;
+        let overlaps = merge::overlap_count(tasks);
         let d2h: Vec<u64> = tasks.iter().map(|t| t.d2h_bytes()).collect();
         let d2h_total: u64 = d2h.iter().sum();
         let t_merge = match (merge_class, cfg.mode) {
@@ -257,7 +261,7 @@ impl Engine {
             None => vec![0.0; m],
         };
         let beta_eff = if y0.is_some() { beta } else { 0.0 };
-        merge::merge(&tasks, &partials, beta_eff, &mut y)?;
+        merge::merge(tasks, &partials, beta_eff, &mut y)?;
         let measured_merge = merge_start.elapsed().as_secs_f64();
 
         let loads: Vec<u64> = tasks.iter().map(|t| t.nnz() as u64).collect();
@@ -265,18 +269,18 @@ impl Engine {
             np,
             imbalance: crate::util::stats::imbalance(&loads),
             loads,
-            t_partition,
+            t_partition: 0.0,
             t_h2d,
             t_compute,
             t_merge,
-            modeled_total: t_partition + t_h2d + t_compute + t_merge,
-            measured_partition,
+            modeled_total: t_h2d + t_compute + t_merge,
+            measured_partition: 0.0,
             measured_exec,
             measured_merge,
             h2d_bytes: h2d_total,
             d2h_bytes: d2h_total,
             overlap_fixups: overlaps,
-            nnz: a.nnz() as u64,
+            nnz: plan.nnz,
         };
         Ok(SpmvReport { y, metrics })
     }
@@ -284,7 +288,8 @@ impl Engine {
 
 impl Engine {
     /// Multi-GPU SpMM (paper §2.3): `Y = alpha*A*X + beta*Y0` with X a
-    /// row-major `(n, k)` block of `k` dense right-hand sides.
+    /// row-major `(n, k)` block of `k` dense right-hand sides. Partitions
+    /// from scratch like [`Engine::spmv`].
     ///
     /// On the PJRT backend with `k == `[`crate::runtime::buckets::SPMM_K`]
     /// and dimensions inside the SpMM bucket grid, partitions execute
@@ -300,52 +305,37 @@ impl Engine {
         beta: f32,
         y0: Option<&[f32]>,
     ) -> Result<SpmvReport> {
-        let (m, n) = (a.rows(), a.cols());
-        if k == 0 {
-            return Err(Error::InvalidMatrix("k must be >= 1".into()));
-        }
-        if x.len() != n * k {
-            return Err(Error::InvalidMatrix(format!(
-                "x length {} != n {n} * k {k}",
-                x.len()
-            )));
-        }
-        if let Some(y0) = y0 {
-            if y0.len() != m * k {
-                return Err(Error::InvalidMatrix(format!(
-                    "y0 length {} != m {m} * k {k}",
-                    y0.len()
-                )));
-            }
-        }
+        // reject malformed calls before paying the O(nnz) partitioning pass
+        check_spmm_dims(a.rows(), a.cols(), k, x, y0)?;
+        let plan = self.plan(a)?;
+        let mut rep = self.spmm_with_plan(&plan, x, k, alpha, beta, y0)?;
+        charge_partition(&mut rep.metrics, &plan);
+        Ok(rep)
+    }
+
+    /// Multi-GPU SpMM against a prebuilt plan (no partitioning charged —
+    /// see [`Engine::spmv_with_plan`]). This is the batched dispatch path
+    /// of the serving layer: `k` coalesced requests share one pass over
+    /// the sparse stream (§2.3's data-reuse argument).
+    pub fn spmm_with_plan(
+        &self,
+        plan: &PartitionPlan,
+        x: &[f32],
+        k: usize,
+        alpha: f32,
+        beta: f32,
+        y0: Option<&[f32]>,
+    ) -> Result<SpmvReport> {
+        plan.validate_for(&self.config)?;
+        let (m, n) = (plan.m, plan.n);
+        check_spmm_dims(m, n, k, x, y0)?;
         let cfg = &self.config;
         let np = cfg.num_gpus;
         let p = &cfg.platform;
         let threaded = cfg.mode != Mode::Baseline;
-        let strategy = cfg.effective_strategy();
-
-        // partition exactly like SpMV (the formats are oblivious to K)
-        let fan = worker::run_per_gpu(np, threaded, |g| {
-            partitioner::build_task(a, np, g, strategy)
-        });
-        let measured_partition = fan.wall;
-        let tasks: Vec<GpuTask> = fan.results.into_iter().collect::<Result<_>>()?;
+        let tasks = &plan.tasks;
 
         // modeled timeline: stream moves once, dense traffic scales with k
-        let search_ops = partitioner::search_ops(a, np, strategy);
-        let rewrite_total: u64 = tasks.iter().map(|t| t.rewrite_ops).sum();
-        let rewrite_max: u64 = tasks.iter().map(|t| t.rewrite_ops).max().unwrap_or(0);
-        let t_partition = match cfg.mode {
-            Mode::Baseline => {
-                model::cpu_search_time(search_ops) + model::cpu_rewrite_time(rewrite_total)
-            }
-            Mode::PStar => {
-                model::cpu_search_time(search_ops) + model::cpu_rewrite_time(rewrite_max)
-            }
-            Mode::PStarOpt => {
-                model::cpu_search_time(search_ops) + model::gpu_pointer_rewrite_time(p)
-            }
-        };
         let h2d: Vec<u64> = tasks
             .iter()
             .map(|t| (t.nnz() * 12 + n * 4 * k) as u64)
@@ -394,7 +384,7 @@ impl Engine {
                     && crate::runtime::buckets::spmm_vec_bucket(n).is_ok()
                     && crate::runtime::buckets::spmm_vec_bucket(m).is_ok();
                 let mut out = Vec::with_capacity(np);
-                for t in &tasks {
+                for t in tasks {
                     if use_native {
                         out.push(rt.spmm_partial(
                             &t.val, &t.col_idx, &t.row_idx, x, n, alpha, t.out_len,
@@ -420,9 +410,9 @@ impl Engine {
         let measured_exec = exec_start.elapsed().as_secs_f64();
 
         // merge (same classes as SpMV, K-wide rows)
-        let overlaps = merge::overlap_count(&tasks);
+        let overlaps = merge::overlap_count(tasks);
         let d2h: Vec<u64> = tasks.iter().map(|t| (t.out_len * 4 * k) as u64).collect();
-        let t_merge = match (partitioner::merge_class(a), cfg.mode) {
+        let t_merge = match (plan.merge_class, cfg.mode) {
             (MergeClass::RowBased, Mode::Baseline) => {
                 d2h.iter().map(|&b| model::lone_transfer_time(p, b)).sum::<f64>()
                     + model::cpu_fixup_time(overlaps * k)
@@ -451,7 +441,7 @@ impl Engine {
             None => vec![0.0; m * k],
         };
         let beta_eff = if y0.is_some() { beta } else { 0.0 };
-        merge::merge_k(&tasks, &partials, beta_eff, &mut y, k)?;
+        merge::merge_k(tasks, &partials, beta_eff, &mut y, k)?;
         let measured_merge = merge_start.elapsed().as_secs_f64();
 
         let loads: Vec<u64> = tasks.iter().map(|t| t.nnz() as u64).collect();
@@ -459,26 +449,69 @@ impl Engine {
             np,
             imbalance: crate::util::stats::imbalance(&loads),
             loads,
-            t_partition,
+            t_partition: 0.0,
             t_h2d,
             t_compute,
             t_merge,
-            modeled_total: t_partition + t_h2d + t_compute + t_merge,
-            measured_partition,
+            modeled_total: t_h2d + t_compute + t_merge,
+            measured_partition: 0.0,
             measured_exec,
             measured_merge,
             h2d_bytes: h2d.iter().sum(),
             d2h_bytes: d2h.iter().sum(),
             overlap_fixups: overlaps,
             // 2 flops per nnz per right-hand side
-            nnz: (a.nnz() * k) as u64,
+            nnz: plan.nnz * k as u64,
         };
         Ok(SpmvReport { y, metrics })
     }
 }
 
+/// SpMV dimension checks, shared by the one-shot and with-plan paths.
+fn check_spmv_dims(m: usize, n: usize, x: &[f32], y0: Option<&[f32]>) -> Result<()> {
+    if x.len() != n {
+        return Err(Error::InvalidMatrix(format!("x length {} != n {n}", x.len())));
+    }
+    if let Some(y0) = y0 {
+        if y0.len() != m {
+            return Err(Error::InvalidMatrix(format!("y0 length {} != m {m}", y0.len())));
+        }
+    }
+    Ok(())
+}
+
+/// SpMM dimension checks, shared by the one-shot and with-plan paths.
+fn check_spmm_dims(m: usize, n: usize, k: usize, x: &[f32], y0: Option<&[f32]>) -> Result<()> {
+    if k == 0 {
+        return Err(Error::InvalidMatrix("k must be >= 1".into()));
+    }
+    if x.len() != n * k {
+        return Err(Error::InvalidMatrix(format!(
+            "x length {} != n {n} * k {k}",
+            x.len()
+        )));
+    }
+    if let Some(y0) = y0 {
+        if y0.len() != m * k {
+            return Err(Error::InvalidMatrix(format!(
+                "y0 length {} != m {m} * k {k}",
+                y0.len()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Fold a fresh plan's partitioning cost into a `*_with_plan` report —
+/// the one-shot `spmv`/`spmm` attribution.
+fn charge_partition(metrics: &mut Metrics, plan: &PartitionPlan) {
+    metrics.t_partition = plan.t_partition;
+    metrics.modeled_total += plan.t_partition;
+    metrics.measured_partition = plan.measured_partition;
+}
+
 /// CPU reference K-wide execution of one task (row-major (out_len, k)).
-fn cpu_partial_k(t: &GpuTask, x: &[f32], k: usize, alpha: f32) -> Vec<f32> {
+fn cpu_partial_k(t: &super::partitioner::GpuTask, x: &[f32], k: usize, alpha: f32) -> Vec<f32> {
     let mut py = vec![0.0f32; t.out_len * k];
     for e in 0..t.nnz() {
         let r = t.row_idx[e] as usize * k;
@@ -499,7 +532,7 @@ fn cpu_partial_k(t: &GpuTask, x: &[f32], k: usize, alpha: f32) -> Vec<f32> {
 /// CPU reference execution of one task's stream (alpha applied, like the
 /// device kernel). Iterator zips elide the three stream bounds checks
 /// (§Perf: ~15% on the 1M-nnz CpuRef path).
-fn cpu_partial(t: &GpuTask, x: &[f32], alpha: f32) -> Vec<f32> {
+fn cpu_partial(t: &super::partitioner::GpuTask, x: &[f32], alpha: f32) -> Vec<f32> {
     let mut py = vec![0.0f32; t.out_len];
     for ((&v, &c), &r) in t.val.iter().zip(&t.col_idx).zip(&t.row_idx) {
         py[r as usize] += v * x[c as usize];
@@ -627,6 +660,34 @@ mod tests {
         assert!(rep.metrics.d2h_bytes >= 500 * 4);
         assert_eq!(rep.metrics.loads.iter().sum::<u64>(), 10_000);
         assert!(rep.metrics.modeled_total > 0.0);
+    }
+
+    #[test]
+    fn with_plan_skips_partition_charge_only() {
+        let coo = gen::power_law(600, 600, 12_000, 2.0, 41);
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let x = gen::dense_vector(600, 42);
+        let eng = engine(Mode::PStarOpt, FormatKind::Csr, 8);
+        let plan = eng.plan(&mat).unwrap();
+        let fresh = eng.spmv(&mat, &x, 1.0, 0.0, None).unwrap();
+        let cached = eng.spmv_with_plan(&plan, &x, 1.0, 0.0, None).unwrap();
+        // identical numerics
+        assert_eq!(fresh.y, cached.y);
+        // identical execution phases; only the partition charge differs
+        assert_eq!(cached.metrics.t_partition, 0.0);
+        assert!(plan.t_partition > 0.0);
+        let diff = fresh.metrics.modeled_total
+            - (cached.metrics.modeled_total + plan.t_partition);
+        assert!(diff.abs() < 1e-15, "totals differ by {diff}");
+    }
+
+    #[test]
+    fn with_plan_rejects_mismatched_engine() {
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::uniform(100, 100, 1_000, 43))));
+        let plan = engine(Mode::PStarOpt, FormatKind::Csr, 4).plan(&mat).unwrap();
+        let other = engine(Mode::PStarOpt, FormatKind::Csr, 8);
+        let x = vec![0.0f32; 100];
+        assert!(other.spmv_with_plan(&plan, &x, 1.0, 0.0, None).is_err());
     }
 
     #[test]

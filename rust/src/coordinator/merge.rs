@@ -211,6 +211,92 @@ mod tests {
     }
 
     #[test]
+    fn merge_k_empty_task_list_only_applies_beta() {
+        // no partitions: y = beta*y (and beta = 0 clears), for any k
+        let mut y = vec![2.0f32; 8];
+        merge_k(&[], &[], 0.5, &mut y, 2).unwrap();
+        assert_eq!(y, vec![1.0f32; 8]);
+        merge_k(&[], &[], 0.0, &mut y, 4).unwrap();
+        assert_eq!(y, vec![0.0f32; 8]);
+        // same degenerate case for the overlap counter
+        assert_eq!(overlap_count(&[]), 0);
+    }
+
+    #[test]
+    fn merge_k_single_gpu_is_identity_plus_beta() {
+        // np = 1: one task owns every row; merge must reduce to
+        // y = partial + beta*y0 element-wise, k-wide
+        let k = 3;
+        // banded: every row non-empty, so the single task spans all 60 rows
+        let coo = gen::banded(60, 60, 3, 14);
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let out = balanced(&mat, 1).unwrap();
+        assert_eq!(out.tasks.len(), 1);
+        assert!(!out.tasks[0].overlaps_prev);
+        assert_eq!(out.tasks[0].out_len, 60);
+        let partial: Vec<f32> = (0..60 * k).map(|i| i as f32 * 0.25).collect();
+        let y0: Vec<f32> = (0..60 * k).map(|i| (i % 7) as f32).collect();
+        let mut y = y0.clone();
+        merge_k(&out.tasks, &[partial.clone()], -0.5, &mut y, k).unwrap();
+        for i in 0..60 * k {
+            let want = partial[i] - 0.5 * y0[i];
+            assert!((y[i] - want).abs() < 1e-6, "elem {i}: {} vs {want}", y[i]);
+        }
+    }
+
+    #[test]
+    fn merge_k_overlapping_rows_with_nonzero_beta() {
+        // nnz-balanced partitions share boundary rows; the k-wide merge
+        // must accumulate the shared rows and apply beta exactly once
+        let k = 2;
+        let coo = gen::power_law(100, 100, 3_000, 1.5, 11);
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let out = balanced(&mat, 6).unwrap();
+        assert!(overlap_count(&out.tasks) > 0, "want overlapping partitions");
+
+        // beta-only: zero partials leave y = beta*y0 even on shared rows
+        let zeros: Vec<Vec<f32>> =
+            out.tasks.iter().map(|t| vec![0.0f32; t.out_len * k]).collect();
+        let mut y = vec![2.0f32; 100 * k];
+        merge_k(&out.tasks, &zeros, 0.5, &mut y, k).unwrap();
+        assert!(y.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+
+        // full check against the per-column SpMV reference with beta != 0
+        let x: Vec<f32> = (0..100 * k).map(|i| ((i * 13) % 10) as f32 * 0.1 - 0.4).collect();
+        let y0: Vec<f32> = (0..100 * k).map(|i| ((i * 7) % 5) as f32 * 0.2).collect();
+        let (alpha, beta) = (1.3f32, -0.7f32);
+        let partials: Vec<Vec<f32>> = out
+            .tasks
+            .iter()
+            .map(|t| {
+                let mut py = vec![0.0f32; t.out_len * k];
+                for e in 0..t.nnz() {
+                    for j in 0..k {
+                        py[t.row_idx[e] as usize * k + j] +=
+                            alpha * t.val[e] * x[t.col_idx[e] as usize * k + j];
+                    }
+                }
+                py
+            })
+            .collect();
+        let mut y = y0.clone();
+        merge_k(&out.tasks, &partials, beta, &mut y, k).unwrap();
+        for j in 0..k {
+            let xj: Vec<f32> = (0..100).map(|i| x[i * k + j]).collect();
+            let mut expect: Vec<f32> = (0..100).map(|i| y0[i * k + j]).collect();
+            spmv_matrix(&mat, &xj, alpha, beta, &mut expect).unwrap();
+            for i in 0..100 {
+                assert!(
+                    (y[i * k + j] - expect[i]).abs() < 2e-3 * (1.0 + expect[i].abs()),
+                    "col {j} row {i}: {} vs {}",
+                    y[i * k + j],
+                    expect[i]
+                );
+            }
+        }
+    }
+
+    #[test]
     fn beta_applied_once_with_overlaps() {
         let coo = gen::power_law(100, 100, 3_000, 1.5, 11);
         let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));

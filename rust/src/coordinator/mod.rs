@@ -4,6 +4,8 @@
 //!   pCSR/pCSC/pCOO partitioning into per-GPU [`GpuTask`]s
 //! * [`worker`]      — one CPU thread per GPU fan-out (§3.3)
 //! * [`merge`]       — row-based / column-based partial-result merging (§4.3)
+//! * [`plan`]        — reusable [`PartitionPlan`]s: one partitioning pass,
+//!   many executions (what the [`crate::serve`] plan cache amortizes)
 //! * [`engine`]      — the assembled mSpMV pipeline with the modeled
 //!   multi-GPU timeline ([`Engine`])
 //! * [`config`]      — the Baseline / p\* / p\*-opt variants of §5.3
@@ -14,6 +16,7 @@ pub mod engine;
 pub mod merge;
 pub mod metrics;
 pub mod partitioner;
+pub mod plan;
 pub mod scaleout;
 pub mod worker;
 
@@ -21,6 +24,7 @@ pub use config::{Backend, Mode, RunConfig};
 pub use engine::{Engine, SpmvReport};
 pub use metrics::Metrics;
 pub use partitioner::{GpuTask, MergeClass, PartitionOutcome, Strategy};
+pub use plan::PartitionPlan;
 
 // Re-export for the documented `RunConfig { format: ... }` ergonomics.
 pub use crate::formats::FormatKind;

@@ -1,0 +1,205 @@
+//! Reusable partition plans — the coordination product of one partitioning
+//! pass, detached from the SpMV call that used to recompute it.
+//!
+//! The paper's Fig. 16 shows partitioning is a non-trivial per-call cost;
+//! a serving deployment (see [`crate::serve`]) amortizes it by building a
+//! [`PartitionPlan`] once per matrix *structure* and replaying it for every
+//! subsequent request. The plan owns the per-GPU [`GpuTask`] streams plus
+//! the modeled/measured cost of building them, so
+//! [`Engine::spmv_with_plan`](super::Engine::spmv_with_plan) /
+//! [`Engine::spmm_with_plan`](super::Engine::spmm_with_plan) can execute
+//! without touching the partitioner, and the caller decides whether the
+//! partitioning cost is charged (fresh plan) or already amortized (cache
+//! hit).
+//!
+//! A plan is a frozen copy of the matrix payload: it embeds the value
+//! streams it was built from, so it is reusable for any number of
+//! requests (`x`, `alpha`, `beta` are per-call) against that matrix, but
+//! a matrix with updated values needs a fresh plan — the serve layer's
+//! fingerprints hash values for exactly that reason.
+
+use crate::error::{Error, Result};
+use crate::formats::{FormatKind, Matrix};
+use crate::sim::model;
+
+use super::config::{Mode, RunConfig};
+use super::partitioner::{self, GpuTask, MergeClass, Strategy};
+use super::worker;
+
+/// A reusable partitioning of one matrix for one engine configuration.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    /// storage format of the matrix the plan was built from
+    pub format: FormatKind,
+    /// partitioning strategy the tasks were built with
+    pub strategy: Strategy,
+    /// number of GPU tasks (== engine `num_gpus` at build time)
+    pub np: usize,
+    /// matrix rows
+    pub m: usize,
+    /// matrix columns
+    pub n: usize,
+    /// matrix non-zeros
+    pub nnz: u64,
+    /// merge class (uniform across tasks)
+    pub merge_class: MergeClass,
+    /// one task per GPU, in GPU order
+    pub tasks: Vec<GpuTask>,
+    /// boundary-search operations of the build (Alg. 2/4/6 cost input)
+    pub search_ops: u64,
+    /// modeled partitioning time under the plan's build mode (§4.1)
+    pub t_partition: f64,
+    /// host wall seconds actually spent building the tasks
+    pub measured_partition: f64,
+}
+
+impl PartitionPlan {
+    /// Build a plan for `a` under `cfg` (one CPU thread per GPU for
+    /// p\*/p\*-opt, exactly like the engine's inline path used to).
+    pub fn build(a: &Matrix, cfg: &RunConfig) -> Result<PartitionPlan> {
+        let np = cfg.num_gpus;
+        let threaded = cfg.mode != Mode::Baseline;
+        let strategy = cfg.effective_strategy();
+        let fan = worker::run_per_gpu(np, threaded, |g| {
+            partitioner::build_task(a, np, g, strategy)
+        });
+        let measured_partition = fan.wall;
+        let tasks: Vec<GpuTask> = fan.results.into_iter().collect::<Result<_>>()?;
+        let search_ops = partitioner::search_ops(a, np, strategy);
+        let rewrite_total: u64 = tasks.iter().map(|t| t.rewrite_ops).sum();
+        let rewrite_max: u64 = tasks.iter().map(|t| t.rewrite_ops).max().unwrap_or(0);
+        let t_partition = match cfg.mode {
+            // single thread does everything
+            Mode::Baseline => {
+                model::cpu_search_time(search_ops) + model::cpu_rewrite_time(rewrite_total)
+            }
+            // np threads rewrite concurrently
+            Mode::PStar => {
+                model::cpu_search_time(search_ops) + model::cpu_rewrite_time(rewrite_max)
+            }
+            // rewrite offloaded to the GPUs, hidden under the mandatory H2D
+            // (§4.1) — only the launch remains
+            Mode::PStarOpt => {
+                model::cpu_search_time(search_ops)
+                    + model::gpu_pointer_rewrite_time(&cfg.platform)
+            }
+        };
+        Ok(PartitionPlan {
+            format: a.kind(),
+            strategy,
+            np,
+            m: a.rows(),
+            n: a.cols(),
+            nnz: a.nnz() as u64,
+            merge_class: partitioner::merge_class(a),
+            tasks,
+            search_ops,
+            t_partition,
+            measured_partition,
+        })
+    }
+
+    /// Per-GPU nnz loads.
+    pub fn loads(&self) -> Vec<u64> {
+        self.tasks.iter().map(|t| t.nnz() as u64).collect()
+    }
+
+    /// max/mean load imbalance (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        crate::util::stats::imbalance(&self.loads())
+    }
+
+    /// Total stream payload bytes the plan would upload (excluding x).
+    pub fn stream_bytes(&self) -> u64 {
+        self.tasks.iter().map(|t| (t.nnz() * 12) as u64).sum()
+    }
+
+    /// Check the plan is executable under `cfg` (same GPU count and
+    /// strategy). A cached plan replayed on a reconfigured engine would
+    /// silently mis-model, so this is an error, not a recompute.
+    pub fn validate_for(&self, cfg: &RunConfig) -> Result<()> {
+        if self.np != cfg.num_gpus {
+            return Err(Error::InvalidPartition(format!(
+                "plan built for np {} but engine runs np {}",
+                self.np, cfg.num_gpus
+            )));
+        }
+        if self.strategy != cfg.effective_strategy() {
+            return Err(Error::InvalidPartition(format!(
+                "plan strategy {:?} does not match engine strategy {:?}",
+                self.strategy,
+                cfg.effective_strategy()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Backend;
+    use crate::formats::{convert, gen};
+    use crate::sim::Platform;
+
+    fn cfg(np: usize) -> RunConfig {
+        RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: np,
+            mode: Mode::PStarOpt,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: None,
+        }
+    }
+
+    fn matrix() -> Matrix {
+        Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::power_law(
+            500, 500, 10_000, 2.0, 3,
+        ))))
+    }
+
+    #[test]
+    fn build_captures_structure_and_costs() {
+        let mat = matrix();
+        let plan = PartitionPlan::build(&mat, &cfg(4)).unwrap();
+        assert_eq!(plan.np, 4);
+        assert_eq!(plan.tasks.len(), 4);
+        assert_eq!((plan.m, plan.n), (500, 500));
+        assert_eq!(plan.nnz, mat.nnz() as u64);
+        assert_eq!(plan.merge_class, MergeClass::RowBased);
+        assert_eq!(plan.loads().iter().sum::<u64>(), mat.nnz() as u64);
+        assert!(plan.imbalance() < 1.01);
+        assert!(plan.t_partition > 0.0);
+        assert_eq!(plan.stream_bytes(), mat.nnz() as u64 * 12);
+    }
+
+    #[test]
+    fn validate_for_rejects_mismatched_config() {
+        let plan = PartitionPlan::build(&matrix(), &cfg(4)).unwrap();
+        plan.validate_for(&cfg(4)).unwrap();
+        assert!(plan.validate_for(&cfg(2)).is_err());
+        let mut other = cfg(4);
+        other.strategy_override = Some(Strategy::Blocks);
+        assert!(plan.validate_for(&other).is_err());
+    }
+
+    #[test]
+    fn baseline_mode_charges_serial_rewrite() {
+        // COO rewrite is O(nnz) (§4.1): the Baseline pays it on the CPU,
+        // p*-opt offloads it to the GPUs and keeps only the launch.
+        let mat = Matrix::Coo(gen::power_law(500, 500, 10_000, 2.0, 3));
+        let mut c = cfg(8);
+        c.mode = Mode::Baseline;
+        let base = PartitionPlan::build(&mat, &c).unwrap();
+        c.mode = Mode::PStarOpt;
+        let opt = PartitionPlan::build(&mat, &c).unwrap();
+        assert!(
+            base.t_partition > opt.t_partition,
+            "baseline {} vs p*-opt {}",
+            base.t_partition,
+            opt.t_partition
+        );
+    }
+}

@@ -1,20 +1,22 @@
 //! Crate-wide error hierarchy.
+//!
+//! `Display`/`Error` are implemented by hand — the usual `thiserror` derive
+//! is unavailable in this offline build (see DESIGN.md §3 on the
+//! dependency policy), and the hand-rolled impls keep the crate
+//! dependency-free beyond the `xla` stub.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for the MSREP crate.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// A matrix or partition failed a structural invariant.
-    #[error("invalid matrix: {0}")]
     InvalidMatrix(String),
 
     /// A partition request was malformed (np = 0, np > nnz budget, ...).
-    #[error("invalid partition spec: {0}")]
     InvalidPartition(String),
 
     /// Problem size exceeds the AOT bucket grid (see DESIGN.md §4).
-    #[error("shape {value} exceeds largest {axis} bucket {max}")]
     BucketOverflow {
         /// which bucketed axis overflowed ("nnz" or "vec")
         axis: &'static str,
@@ -25,19 +27,15 @@ pub enum Error {
     },
 
     /// artifacts/ missing or inconsistent with the compiled-in bucket grid.
-    #[error("artifact manifest error: {0}")]
     Manifest(String),
 
     /// PJRT client / compile / execute failure (wraps the xla crate error).
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// Simulated platform misconfiguration (unknown GPU id, no route, ...).
-    #[error("platform error: {0}")]
     Platform(String),
 
     /// Simulated device out of memory (16 GB V100 budget).
-    #[error("device {gpu} out of memory: need {needed} B, free {free} B")]
     DeviceOom {
         /// simulated GPU ordinal
         gpu: usize,
@@ -48,11 +46,9 @@ pub enum Error {
     },
 
     /// Matrix-market / workload file IO.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Matrix-market parse failure with line context.
-    #[error("matrix market parse error at line {line}: {msg}")]
     MatrixMarket {
         /// 1-based line number
         line: usize,
@@ -61,7 +57,6 @@ pub enum Error {
     },
 
     /// JSON parse failure (artifact manifest).
-    #[error("json parse error at byte {at}: {msg}")]
     Json {
         /// byte offset in the input
         at: usize,
@@ -69,9 +64,51 @@ pub enum Error {
         msg: String,
     },
 
+    /// Serving-layer error (admission, batching, scheduling).
+    Serve(String),
+
     /// CLI usage error.
-    #[error("usage: {0}")]
     Usage(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidMatrix(m) => write!(f, "invalid matrix: {m}"),
+            Error::InvalidPartition(m) => write!(f, "invalid partition spec: {m}"),
+            Error::BucketOverflow { axis, value, max } => {
+                write!(f, "shape {value} exceeds largest {axis} bucket {max}")
+            }
+            Error::Manifest(m) => write!(f, "artifact manifest error: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Platform(m) => write!(f, "platform error: {m}"),
+            Error::DeviceOom { gpu, needed, free } => {
+                write!(f, "device {gpu} out of memory: need {needed} B, free {free} B")
+            }
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::MatrixMarket { line, msg } => {
+                write!(f, "matrix market parse error at line {line}: {msg}")
+            }
+            Error::Json { at, msg } => write!(f, "json parse error at byte {at}: {msg}"),
+            Error::Serve(m) => write!(f, "serve error: {m}"),
+            Error::Usage(m) => write!(f, "usage: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -82,3 +119,32 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_derive_output() {
+        assert_eq!(
+            Error::InvalidMatrix("bad".into()).to_string(),
+            "invalid matrix: bad"
+        );
+        assert_eq!(
+            Error::BucketOverflow { axis: "nnz", value: 9, max: 4 }.to_string(),
+            "shape 9 exceeds largest nnz bucket 4"
+        );
+        assert_eq!(
+            Error::DeviceOom { gpu: 2, needed: 10, free: 3 }.to_string(),
+            "device 2 out of memory: need 10 B, free 3 B"
+        );
+        assert_eq!(Error::Usage("try help".into()).to_string(), "usage: try help");
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

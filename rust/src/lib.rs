@@ -13,6 +13,7 @@
 //! ## Architecture (three layers, python never on the request path)
 //!
 //! ```text
+//!  L4  serve layer        batching / plan cache / scheduling            (rust/src/serve)
 //!  L3  rust coordinator   partitioning / placement / merging / metrics  (this crate)
 //!  L2  JAX graphs         spmv_partial, axpby, reduce_partials          (python/compile, AOT)
 //!  L1  Pallas kernel      tiled gather + segment-reduce SpMV            (python/compile/kernels)
@@ -50,6 +51,7 @@ pub mod error;
 pub mod formats;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod spmv;
 pub mod util;

@@ -7,6 +7,7 @@
 //! msrep partition --matrix m.mtx --np 8    partition + load/imbalance report
 //! msrep run       --matrix m.mtx ...       one mSpMV with full breakdown
 //! msrep suite                              Table-2 analog summary
+//! msrep serve-bench ...                    batched multi-tenant serving sim
 //! ```
 //!
 //! The paper-figure regeneration lives in `cargo bench` /
@@ -46,11 +47,15 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "partition" => cmd_partition(rest),
         "run" => cmd_run(rest),
         "suite" => cmd_suite(),
+        "serve-bench" => cmd_serve_bench(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
         }
-        other => Err(Error::Usage(format!("unknown command '{other}' (try `msrep help`)"))),
+        other => Err(Error::Usage(format!(
+            "unknown command '{other}' (expected info | gen | profile | partition | run | \
+             suite | serve-bench; try `msrep help`)"
+        ))),
     }
 }
 
@@ -63,7 +68,8 @@ fn print_usage() {
          \x20 profile     structural profile of a MatrixMarket file\n\
          \x20 partition   partition a matrix and report per-GPU loads\n\
          \x20 run         run one multi-GPU SpMV with a full breakdown\n\
-         \x20 suite       list the Table-2 evaluation suite analogs\n"
+         \x20 suite       list the Table-2 evaluation suite analogs\n\
+         \x20 serve-bench simulate batched multi-tenant SpMV serving (--help for flags)\n"
     );
 }
 
@@ -327,6 +333,138 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         if max_rel > 1e-2 {
             return Err(Error::InvalidMatrix(format!("verification FAILED ({max_rel})")));
         }
+    }
+    Ok(())
+}
+
+fn serve_parser() -> Parser {
+    Parser::new()
+        .flag("platform", "summit | dgx1", Some("dgx1"))
+        .flag("gpus", "GPUs per engine", None)
+        .flag("mode", "baseline | pstar | popt", Some("popt"))
+        .flag("tenants", "distinct matrices (multi-tenant traffic)", Some("3"))
+        .flag("requests", "total requests in the trace", Some("240"))
+        .flag("rate", "mean arrival rate (requests per modeled second)", Some("200000"))
+        .flag("m", "rows = cols of each tenant matrix", Some("4096"))
+        .flag("nnz", "non-zeros of each tenant matrix", Some("200000"))
+        .flag("batch", "max batch size K", Some("8"))
+        .flag("flush-us", "batch flush deadline (modeled µs)", Some("100"))
+        .flag("engines", "engine pool size", Some("1"))
+        .flag("queue", "per-matrix queue capacity (backpressure)", Some("128"))
+        .flag("deadline-us", "per-request deadline (modeled µs, 0 = none)", Some("0"))
+        .flag("cache", "plan-cache capacity (0 disables)", Some("16"))
+        .flag("seed", "trace PRNG seed", Some("42"))
+        .bool_flag("compare", "also run the sequential no-cache baseline")
+}
+
+/// Build the synthetic multi-tenant trace: exponential inter-arrivals at
+/// `rate`, tenants drawn uniformly, fresh dense x per request.
+fn serve_trace(
+    tenants: &[msrep::serve::MatrixId],
+    n: usize,
+    requests: usize,
+    rate: f64,
+    deadline_s: Option<f64>,
+    seed: u64,
+) -> Vec<msrep::serve::SpmvRequest> {
+    let mut rng = msrep::util::rng::Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..requests)
+        .map(|i| {
+            t += -(1.0 - rng.f64()).ln() / rate;
+            msrep::serve::SpmvRequest {
+                matrix: tenants[rng.usize_below(tenants.len())],
+                x: gen::dense_vector(n, seed.wrapping_add(1000 + i as u64)),
+                alpha: 1.0,
+                arrival_s: t,
+                deadline_s,
+            }
+        })
+        .collect()
+}
+
+fn cmd_serve_bench(argv: Vec<String>) -> Result<()> {
+    let p = serve_parser();
+    if argv.iter().any(|a| a == "--help") {
+        println!("msrep serve-bench — batched multi-tenant SpMV serving simulation\n{}", p.help());
+        return Ok(());
+    }
+    let a = p.parse(argv)?;
+    let platform = Platform::by_name(&a.str_or("platform", "dgx1"))?;
+    let num_gpus = a.usize_or("gpus", platform.num_gpus)?;
+    let mode = Mode::parse(&a.str_or("mode", "popt"))
+        .ok_or_else(|| Error::Usage("bad --mode".into()))?;
+    let tenants = a.usize_or("tenants", 3)?.max(1);
+    let requests = a.usize_or("requests", 240)?;
+    let rate = a.f64_or("rate", 200_000.0)?;
+    let m = a.usize_or("m", 4_096)?;
+    let nnz = a.usize_or("nnz", 200_000)?;
+    let seed = a.u64_or("seed", 42)?;
+    if rate <= 0.0 {
+        return Err(Error::Usage("--rate must be > 0".into()));
+    }
+    let deadline_us = a.f64_or("deadline-us", 0.0)?;
+    let deadline_s = if deadline_us > 0.0 { Some(deadline_us * 1e-6) } else { None };
+    let cfg = msrep::serve::ServeConfig {
+        run: RunConfig {
+            platform,
+            num_gpus,
+            mode,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: None,
+        },
+        num_engines: a.usize_or("engines", 1)?,
+        max_batch: a.usize_or("batch", 8)?,
+        flush_deadline_s: a.f64_or("flush-us", 100.0)? * 1e-6,
+        queue_capacity: a.usize_or("queue", 128)?,
+        plan_cache_capacity: a.usize_or("cache", 16)?,
+    };
+
+    println!(
+        "serve-bench: {} tenants x ({m} x {m}, ~{nnz} nnz power-law), {requests} requests \
+         at ~{rate:.0} req/s (modeled)",
+        tenants
+    );
+    println!(
+        "server: {} x {} GPUs, mode {}, batch {}, flush {:.0} µs, {} engine(s), cache {}\n",
+        cfg.run.platform.name,
+        cfg.run.num_gpus,
+        cfg.run.mode.label(),
+        cfg.max_batch,
+        cfg.flush_deadline_s * 1e6,
+        cfg.num_engines,
+        cfg.plan_cache_capacity,
+    );
+
+    let build = |c: msrep::serve::ServeConfig| -> Result<(msrep::serve::Server, Vec<msrep::serve::SpmvRequest>)> {
+        let mut server = msrep::serve::Server::new(c)?;
+        let ids: Vec<msrep::serve::MatrixId> = (0..tenants)
+            .map(|t| {
+                let coo = gen::power_law(m, m, nnz, 2.0, seed.wrapping_add(t as u64));
+                server.register(Matrix::Csr(convert::to_csr(&Matrix::Coo(coo))))
+            })
+            .collect();
+        let trace = serve_trace(&ids, m, requests, rate, deadline_s, seed);
+        Ok((server, trace))
+    };
+
+    let (mut server, trace) = build(cfg.clone())?;
+    let report = server.run(trace)?;
+    print!("{}", report.render());
+
+    if a.is_set("compare") {
+        let (mut base_server, base_trace) = build(cfg.sequential_baseline())?;
+        let base = base_server.run(base_trace)?;
+        println!("\nsequential per-request baseline (batch 1, no plan cache):");
+        print!("{}", base.render());
+        let speedup = if base.throughput_rps() > 0.0 {
+            report.throughput_rps() / base.throughput_rps()
+        } else {
+            0.0
+        };
+        println!("\nbatched throughput speedup over sequential: {speedup:.2}x");
     }
     Ok(())
 }

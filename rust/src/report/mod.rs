@@ -2,8 +2,10 @@
 //! for the figure-regeneration benches and the e2e driver.
 
 pub mod figures;
+pub mod serve;
 mod table;
 pub mod timeline;
 
+pub use serve::render_serve_report;
 pub use table::{ascii_bar, format_duration_s, format_pct, Series, Table};
 pub use timeline::{render_loads, render_timeline};

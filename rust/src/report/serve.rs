@@ -1,0 +1,103 @@
+//! Report rendering for the serving layer: the latency / throughput /
+//! batching / cache summary of one [`crate::serve::ServeReport`], in the
+//! same table + ASCII-bar style as the paper figures.
+
+use crate::serve::ServeReport;
+
+use super::table::{ascii_bar, format_duration_s, format_pct, Table};
+
+/// Render a serving run as tables + a batch-size histogram.
+pub fn render_serve_report(r: &ServeReport) -> String {
+    let mut out = String::new();
+
+    let mut t = Table::new(["requests", "count", "share"]);
+    let share = |c: usize| {
+        if r.submitted == 0 {
+            "0.0%".to_string()
+        } else {
+            format_pct(c as f64 / r.submitted as f64)
+        }
+    };
+    t.row(["submitted".to_string(), r.submitted.to_string(), "100.0%".to_string()]);
+    t.row(["completed".to_string(), r.completed.to_string(), share(r.completed)]);
+    t.row(["rejected".to_string(), r.rejected.to_string(), share(r.rejected)]);
+    t.row(["expired".to_string(), r.expired.to_string(), share(r.expired)]);
+    t.row([
+        "late (deadline missed)".to_string(),
+        r.deadline_violations.to_string(),
+        share(r.deadline_violations),
+    ]);
+    out.push_str(&t.render());
+
+    let mut t = Table::new(["metric", "value"]);
+    t.row(["modeled p50 latency".to_string(), format_duration_s(r.p50())]);
+    t.row([
+        "modeled p95 latency".to_string(),
+        format_duration_s(r.latency_percentile(0.95)),
+    ]);
+    t.row(["modeled p99 latency".to_string(), format_duration_s(r.p99())]);
+    t.row(["modeled makespan".to_string(), format_duration_s(r.makespan_s)]);
+    t.row([
+        "throughput".to_string(),
+        format!("{:.0} req/s (modeled)", r.throughput_rps()),
+    ]);
+    t.row(["mean batch size".to_string(), format!("{:.2}", r.mean_batch())]);
+    t.row([
+        "engine utilization".to_string(),
+        format!("{} over {} engine(s)", format_pct(r.utilization()), r.num_engines),
+    ]);
+    t.row([
+        "plan-cache hit rate".to_string(),
+        format!(
+            "{} ({} hits / {} misses / {} evictions)",
+            format_pct(r.cache.hit_rate()),
+            r.cache.hits,
+            r.cache.misses,
+            r.cache.evictions
+        ),
+    ]);
+    out.push_str(&t.render());
+
+    let hist = r.batch_histogram();
+    if !hist.is_empty() {
+        out.push_str("batch-size histogram:\n");
+        let max = hist.iter().map(|&(_, c)| c).max().unwrap_or(1).max(1);
+        for (k, count) in hist {
+            out.push_str(&format!(
+                "  k={k:<3} |{}| {count}\n",
+                ascii_bar(count as f64 / max as f64, 30)
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::PlanCacheStats;
+
+    #[test]
+    fn render_contains_headline_numbers() {
+        let r = ServeReport {
+            submitted: 4,
+            completed: 3,
+            rejected: 1,
+            expired: 0,
+            deadline_violations: 0,
+            latencies_s: vec![1e-5, 2e-5, 3e-5],
+            batch_sizes: vec![2, 1],
+            num_engines: 1,
+            makespan_s: 1e-4,
+            engine_busy_s: 6e-5,
+            cache: PlanCacheStats { hits: 1, misses: 1, evictions: 0 },
+            outcomes: vec![],
+        };
+        let s = render_serve_report(&r);
+        assert!(s.contains("submitted"));
+        assert!(s.contains("plan-cache hit rate"));
+        assert!(s.contains("50.0%"), "hit rate percentage missing:\n{s}");
+        assert!(s.contains("batch-size histogram"));
+        assert!(s.contains("k=2"));
+    }
+}

@@ -1,0 +1,283 @@
+//! Request batching: coalesce concurrent SpMV requests against one matrix
+//! into a single k-column SpMM dispatch.
+//!
+//! Batching is the classic sparse-serving throughput lever (Yang, Buluç &
+//! Owens, arXiv:1803.08601): the sparse stream — the dominant traffic of a
+//! memory-bound SpMV — is read **once** for all k coalesced right-hand
+//! sides, so a batch of k requests costs far less than k dispatches
+//! (paper §2.3's SpMM data-reuse argument). The modeled win is exactly
+//! [`crate::sim::model::spmm_kernel_time`] vs k ×
+//! [`crate::sim::model::spmv_kernel_time`] plus the amortized upload.
+//!
+//! A [`Batcher`] is the pending-request window for **one** registered
+//! matrix. Flush policy (checked by the scheduler in
+//! [`super::server`]):
+//!
+//! * **size** — the window reached `max_batch` requests, or
+//! * **deadline** — the oldest pending request has waited
+//!   `flush_deadline_s` of modeled time (bounds the latency a lonely
+//!   request pays for batching).
+//!
+//! Per-request `alpha` is folded into the packed X columns
+//! (`alpha_j·A·x_j == A·(alpha_j·x_j)`), so one SpMM with `alpha = 1`
+//! serves heterogeneous requests.
+
+use crate::coordinator::{Engine, Metrics, PartitionPlan};
+use crate::error::{Error, Result};
+
+/// Flush policy of a batching window.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// maximum requests coalesced into one dispatch (k)
+    pub max_batch: usize,
+    /// modeled seconds the oldest request may wait before a forced flush
+    pub flush_deadline_s: f64,
+}
+
+/// One admitted request waiting in a batching window.
+#[derive(Debug, Clone)]
+pub struct PendingRequest {
+    /// index of the request in the submitted trace (report key)
+    pub req_idx: usize,
+    /// dense right-hand side (length n)
+    pub x: Vec<f32>,
+    /// per-request scale (folded into the packed X)
+    pub alpha: f32,
+    /// modeled arrival time (seconds)
+    pub arrival_s: f64,
+    /// optional end-to-end latency budget (seconds, relative to arrival)
+    pub deadline_s: Option<f64>,
+}
+
+/// Pending-request window for one matrix.
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: Vec<PendingRequest>,
+}
+
+impl Batcher {
+    /// New empty window under `policy`.
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, pending: Vec::new() }
+    }
+
+    /// Pending request count.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True if no requests are pending.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Admit a request into the window.
+    pub fn push(&mut self, req: PendingRequest) {
+        self.pending.push(req);
+    }
+
+    /// True once the window holds a full batch.
+    pub fn is_full(&self) -> bool {
+        self.pending.len() >= self.policy.max_batch
+    }
+
+    /// Modeled time at which the deadline flush fires (oldest arrival +
+    /// flush deadline); `None` while empty.
+    pub fn next_flush_at(&self) -> Option<f64> {
+        self.pending
+            .iter()
+            .map(|r| r.arrival_s)
+            .fold(None, |acc: Option<f64>, t| {
+                Some(acc.map_or(t, |a| a.min(t)))
+            })
+            .map(|oldest| oldest + self.policy.flush_deadline_s)
+    }
+
+    /// Take the whole window (the scheduler dispatches it).
+    pub fn drain(&mut self) -> Vec<PendingRequest> {
+        std::mem::take(&mut self.pending)
+    }
+}
+
+/// Result of one batched dispatch.
+pub struct BatchExecution {
+    /// per-request outputs, in `reqs` order (`y_j = alpha_j * A * x_j`)
+    pub ys: Vec<Vec<f32>>,
+    /// engine breakdown of the dispatch (no partition charge — the plan
+    /// cost is attributed by the scheduler on a cache miss)
+    pub metrics: Metrics,
+}
+
+/// Execute one batch against a prebuilt plan: pack the k right-hand sides
+/// into a row-major `(n, k)` block, run one SpMM (one SpMV for k = 1 —
+/// including the COO conversion-kernel model the SpMV path charges), and
+/// de-interleave the outputs.
+pub fn dispatch(
+    engine: &Engine,
+    plan: &PartitionPlan,
+    reqs: &[PendingRequest],
+) -> Result<BatchExecution> {
+    let k = reqs.len();
+    let n = plan.n;
+    let m = plan.m;
+    // validate every request up front: the packed path would otherwise
+    // panic on an oversized x and silently zero-pad a short one (the
+    // server's admission checks this too, but dispatch is public API)
+    for r in reqs {
+        if r.x.len() != n {
+            return Err(Error::InvalidMatrix(format!(
+                "request {} x length {} != n {n}",
+                r.req_idx,
+                r.x.len()
+            )));
+        }
+    }
+    if k == 1 {
+        let r = &reqs[0];
+        let rep = engine.spmv_with_plan(plan, &r.x, r.alpha, 0.0, None)?;
+        return Ok(BatchExecution { ys: vec![rep.y], metrics: rep.metrics });
+    }
+    // pack: X[i][j] = alpha_j * x_j[i], row-major (n, k)
+    let mut xk = vec![0.0f32; n * k];
+    for (j, r) in reqs.iter().enumerate() {
+        for (i, &v) in r.x.iter().enumerate() {
+            xk[i * k + j] = r.alpha * v;
+        }
+    }
+    let rep = engine.spmm_with_plan(plan, &xk, k, 1.0, 0.0, None)?;
+    // de-interleave: y_j[r] = Y[r][j]
+    let mut ys: Vec<Vec<f32>> = (0..k).map(|_| vec![0.0f32; m]).collect();
+    for (r, row) in rep.y.chunks_exact(k).enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            ys[j][r] = v;
+        }
+    }
+    Ok(BatchExecution { ys, metrics: rep.metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Mode, RunConfig};
+    use crate::formats::{convert, gen, FormatKind, Matrix};
+    use crate::sim::Platform;
+    use crate::spmv::spmv_matrix;
+
+    fn engine() -> Engine {
+        Engine::new(RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: 8,
+            mode: Mode::PStarOpt,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: None,
+        })
+        .unwrap()
+    }
+
+    fn req(idx: usize, x: Vec<f32>, alpha: f32, arrival: f64) -> PendingRequest {
+        PendingRequest { req_idx: idx, x, alpha, arrival_s: arrival, deadline_s: None }
+    }
+
+    #[test]
+    fn window_flush_policy() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, flush_deadline_s: 1e-4 });
+        assert!(b.is_empty());
+        assert_eq!(b.next_flush_at(), None);
+        b.push(req(0, vec![1.0], 1.0, 3.0));
+        assert!(!b.is_full());
+        assert!((b.next_flush_at().unwrap() - 3.0001).abs() < 1e-9);
+        // an older straggler moves the deadline earlier
+        b.push(req(1, vec![1.0], 1.0, 2.0));
+        assert!(b.is_full());
+        assert!((b.next_flush_at().unwrap() - 2.0001).abs() < 1e-9);
+        let drained = b.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn dispatch_matches_per_request_oracle() {
+        let eng = engine();
+        let coo = gen::power_law(400, 400, 8_000, 2.0, 51);
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let plan = eng.plan(&mat).unwrap();
+        let reqs: Vec<PendingRequest> = (0..5)
+            .map(|j| {
+                req(
+                    j,
+                    gen::dense_vector(400, 60 + j as u64),
+                    0.5 + j as f32 * 0.3,
+                    0.0,
+                )
+            })
+            .collect();
+        let out = dispatch(&eng, &plan, &reqs).unwrap();
+        assert_eq!(out.ys.len(), 5);
+        for r in &reqs {
+            let mut expect = vec![0.0f32; 400];
+            spmv_matrix(&mat, &r.x, r.alpha, 0.0, &mut expect).unwrap();
+            for (a, b) in out.ys[r.req_idx].iter().zip(&expect) {
+                assert!(
+                    (a - b).abs() < 3e-3 * (1.0 + b.abs()),
+                    "req {}: {a} vs {b}",
+                    r.req_idx
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_request_batch_uses_spmv_path() {
+        let eng = engine();
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::uniform(200, 200, 3_000, 52))));
+        let plan = eng.plan(&mat).unwrap();
+        let x = gen::dense_vector(200, 53);
+        let out = dispatch(&eng, &plan, &[req(0, x.clone(), 2.0, 0.0)]).unwrap();
+        let direct = eng.spmv_with_plan(&plan, &x, 2.0, 0.0, None).unwrap();
+        assert_eq!(out.ys[0], direct.y);
+        assert_eq!(out.metrics.modeled_total, direct.metrics.modeled_total);
+    }
+
+    #[test]
+    fn dispatch_rejects_wrong_length_x() {
+        let eng = engine();
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::uniform(200, 200, 3_000, 57))));
+        let plan = eng.plan(&mat).unwrap();
+        // oversized x in a 2-request batch must error, not panic/truncate
+        let reqs = [
+            req(0, gen::dense_vector(200, 58), 1.0, 0.0),
+            req(1, gen::dense_vector(300, 59), 1.0, 0.0),
+        ];
+        assert!(dispatch(&eng, &plan, &reqs).is_err());
+        // undersized x likewise (would silently zero-pad otherwise)
+        let reqs = [
+            req(0, gen::dense_vector(100, 58), 1.0, 0.0),
+            req(1, gen::dense_vector(200, 59), 1.0, 0.0),
+        ];
+        assert!(dispatch(&eng, &plan, &reqs).is_err());
+    }
+
+    #[test]
+    fn batched_dispatch_amortizes_modeled_time() {
+        let eng = engine();
+        let coo = gen::power_law(4_096, 4_096, 200_000, 2.0, 54);
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let plan = eng.plan(&mat).unwrap();
+        let one = dispatch(&eng, &plan, &[req(0, gen::dense_vector(4_096, 55), 1.0, 0.0)])
+            .unwrap()
+            .metrics
+            .modeled_total;
+        let k = 8;
+        let reqs: Vec<PendingRequest> = (0..k)
+            .map(|j| req(j, gen::dense_vector(4_096, 56 + j as u64), 1.0, 0.0))
+            .collect();
+        let batch = dispatch(&eng, &plan, &reqs).unwrap().metrics.modeled_total;
+        assert!(
+            batch < 0.5 * k as f64 * one,
+            "batch of {k} cost {batch} vs {k}x single {}",
+            k as f64 * one
+        );
+    }
+}

@@ -1,0 +1,164 @@
+//! Serving metrics: per-request outcomes aggregated into the latency /
+//! throughput / batching / cache report of one [`super::Server::run`].
+//!
+//! Latencies and makespan are **modeled** platform seconds (DESIGN.md §3),
+//! consistent with every other figure in this repo; the host wall time of
+//! driving the simulation is the bench harness's concern.
+
+use crate::util::stats::percentile;
+
+use super::plan_cache::PlanCacheStats;
+use super::server::Outcome;
+
+/// Aggregated result of one serving run.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// requests submitted
+    pub submitted: usize,
+    /// requests completed (possibly past their deadline)
+    pub completed: usize,
+    /// requests rejected at admission (backpressure / validation)
+    pub rejected: usize,
+    /// requests dropped at dispatch because their deadline had passed
+    pub expired: usize,
+    /// completed requests whose latency exceeded their deadline
+    pub deadline_violations: usize,
+    /// modeled end-to-end latency of each completed request, sorted
+    pub latencies_s: Vec<f64>,
+    /// coalesced size of every dispatched batch
+    pub batch_sizes: Vec<usize>,
+    /// engine pool size of the run
+    pub num_engines: usize,
+    /// modeled wall span: last completion − first arrival
+    pub makespan_s: f64,
+    /// summed modeled busy seconds across the engine pool
+    pub engine_busy_s: f64,
+    /// plan-cache counters of the run
+    pub cache: PlanCacheStats,
+    /// per-request outcomes, indexed like the submitted trace
+    pub outcomes: Vec<Outcome>,
+}
+
+impl ServeReport {
+    /// Latency percentile over completed requests (q in [0, 1]); 0.0 when
+    /// nothing completed.
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            0.0
+        } else {
+            percentile(&self.latencies_s, q)
+        }
+    }
+
+    /// Median modeled latency.
+    pub fn p50(&self) -> f64 {
+        self.latency_percentile(0.50)
+    }
+
+    /// 99th-percentile modeled latency.
+    pub fn p99(&self) -> f64 {
+        self.latency_percentile(0.99)
+    }
+
+    /// Mean coalesced batch size; 0.0 with no dispatches.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        }
+    }
+
+    /// Completed requests per modeled second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.makespan_s
+        }
+    }
+
+    /// Mean engine-pool utilization over the makespan (can exceed 1.0 only
+    /// by rounding; 0.0 with no makespan).
+    pub fn utilization(&self) -> f64 {
+        if self.makespan_s <= 0.0 || self.num_engines == 0 {
+            0.0
+        } else {
+            self.engine_busy_s / (self.makespan_s * self.num_engines as f64)
+        }
+    }
+
+    /// Histogram of batch sizes: `(k, count)` sorted by k.
+    pub fn batch_histogram(&self) -> Vec<(usize, usize)> {
+        let mut map = std::collections::BTreeMap::new();
+        for &k in &self.batch_sizes {
+            *map.entry(k).or_insert(0usize) += 1;
+        }
+        map.into_iter().collect()
+    }
+
+    /// Render the report (delegates to [`crate::report::render_serve_report`]).
+    pub fn render(&self) -> String {
+        crate::report::render_serve_report(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> ServeReport {
+        ServeReport {
+            submitted: 10,
+            completed: 8,
+            rejected: 1,
+            expired: 1,
+            deadline_violations: 2,
+            latencies_s: vec![1e-5, 2e-5, 3e-5, 4e-5, 5e-5, 6e-5, 7e-5, 8e-5],
+            batch_sizes: vec![4, 4, 2, 1],
+            num_engines: 2,
+            makespan_s: 4e-4,
+            engine_busy_s: 3e-4,
+            cache: PlanCacheStats { hits: 3, misses: 1, evictions: 0 },
+            outcomes: vec![],
+        }
+    }
+
+    #[test]
+    fn percentiles_and_throughput() {
+        let r = report();
+        assert!((r.p50() - 4.5e-5).abs() < 1e-12);
+        assert!(r.p99() <= 8e-5 && r.p99() > 7e-5);
+        assert!((r.throughput_rps() - 8.0 / 4e-4).abs() < 1e-6);
+        assert!((r.mean_batch() - 2.75).abs() < 1e-12);
+        assert!((r.utilization() - 0.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_groups_sizes() {
+        let r = report();
+        assert_eq!(r.batch_histogram(), vec![(1, 1), (2, 1), (4, 2)]);
+    }
+
+    #[test]
+    fn empty_run_is_all_zeros() {
+        let r = ServeReport {
+            submitted: 0,
+            completed: 0,
+            rejected: 0,
+            expired: 0,
+            deadline_violations: 0,
+            latencies_s: vec![],
+            batch_sizes: vec![],
+            num_engines: 1,
+            makespan_s: 0.0,
+            engine_busy_s: 0.0,
+            cache: PlanCacheStats::default(),
+            outcomes: vec![],
+        };
+        assert_eq!(r.p50(), 0.0);
+        assert_eq!(r.throughput_rps(), 0.0);
+        assert_eq!(r.mean_batch(), 0.0);
+        assert_eq!(r.utilization(), 0.0);
+    }
+}

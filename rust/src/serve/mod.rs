@@ -1,0 +1,36 @@
+//! Request-serving layer: batched, plan-cached, multi-tenant SpMV/SpMM on
+//! top of the one-shot [`crate::coordinator::Engine`].
+//!
+//! MSREP's headline cost is coordination — partitioning, placement and
+//! merging — and the paper's Fig. 16 shows the partitioning share of every
+//! call is non-trivial. A deployment serving heavy repeat-matrix traffic
+//! (PageRank-style iteration, many tenants querying the same graphs) must
+//! amortize that cost across requests instead of re-partitioning per SpMV.
+//! This module adds the three amortization levers:
+//!
+//! * [`plan_cache`] — matrix payload fingerprints keying an LRU cache
+//!   of [`crate::coordinator::PartitionPlan`]s, so repeat requests skip
+//!   the partitioner entirely;
+//! * [`batcher`] — per-matrix windows coalescing concurrent SpMV requests
+//!   into one k-column SpMM dispatch (the sparse stream is read once for
+//!   all k right-hand sides, §2.3);
+//! * [`server`] — a discrete-event scheduler admitting a request trace
+//!   onto a pool of engines over the simulated platform, with admission
+//!   backpressure and per-request deadlines;
+//! * [`metrics`] — p50/p99 modeled latency, throughput, batch-size
+//!   histogram and plan-cache hit rate, rendered through
+//!   [`crate::report`].
+//!
+//! Try it: `msrep serve-bench --compare`, `cargo bench --bench
+//! serve_throughput`, or `cargo run --example serve_demo`. Design notes:
+//! DESIGN.md §7.
+
+pub mod batcher;
+pub mod metrics;
+pub mod plan_cache;
+pub mod server;
+
+pub use batcher::{BatchExecution, BatchPolicy, Batcher, PendingRequest};
+pub use metrics::ServeReport;
+pub use plan_cache::{fingerprint, MatrixFingerprint, PlanCache, PlanCacheStats};
+pub use server::{MatrixId, Outcome, RejectReason, ServeConfig, Server, SpmvRequest};

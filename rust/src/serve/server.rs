@@ -1,0 +1,542 @@
+//! The serving scheduler: admit a stream of [`SpmvRequest`]s onto a pool
+//! of engines over the simulated platform, with batching, plan caching,
+//! backpressure and per-request deadlines.
+//!
+//! The server is a deterministic discrete-event simulation in **modeled**
+//! time (DESIGN.md §3 — the same clock every figure uses). Events are
+//! request arrivals and batch-window deadline flushes, processed in time
+//! order:
+//!
+//! * **admission** — a request for an unknown matrix, with a wrong-length
+//!   `x`, or with a non-finite arrival/deadline is rejected outright; a
+//!   request whose matrix already has `queue_capacity` requests
+//!   outstanding (pending in the window **plus** dispatched but not yet
+//!   completed) is rejected with [`RejectReason::QueueFull`] —
+//!   backpressure sheds load instead of growing an unbounded backlog when
+//!   the arrival rate exceeds the pool's service rate;
+//! * **flush** — a window dispatches when it reaches `max_batch` requests
+//!   or when its oldest request has waited `flush_deadline_s`; the batch
+//!   runs on the earliest-free engine of the pool. Requests whose deadline
+//!   already passed before the dispatch could start are dropped as
+//!   [`Outcome::Expired`] rather than wasting engine time;
+//! * **plan cache** — each dispatch fetches the matrix's partition plan
+//!   from the [`PlanCache`]; only a miss charges the modeled partitioning
+//!   time (paper Fig. 16), so repeat-matrix traffic amortizes it away.
+//!
+//! Simplification (documented in DESIGN.md §7): a full window dispatches
+//! onto the pool immediately and queues *inside* the chosen engine
+//! (`free_at` chaining) rather than waiting for an idle engine before
+//! draining the window; the outstanding-request count above is what
+//! bounds how deep that per-matrix backlog can grow.
+
+use std::collections::HashMap;
+
+use crate::coordinator::{Engine, RunConfig};
+use crate::error::{Error, Result};
+use crate::formats::Matrix;
+
+use super::batcher::{self, BatchPolicy, Batcher, PendingRequest};
+use super::metrics::ServeReport;
+use super::plan_cache::{fingerprint, MatrixFingerprint, PlanCache, PlanCacheStats};
+
+/// Serving-layer configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// per-engine configuration (platform, GPUs, mode, format, backend)
+    pub run: RunConfig,
+    /// engines in the pool (simulated multi-GPU nodes serving batches)
+    pub num_engines: usize,
+    /// maximum requests coalesced into one SpMM dispatch
+    pub max_batch: usize,
+    /// modeled seconds the oldest pending request may wait before a flush
+    pub flush_deadline_s: f64,
+    /// per-matrix outstanding-request cap: pending in the window plus
+    /// dispatched-but-unfinished (admission backpressure)
+    pub queue_capacity: usize,
+    /// partition plans kept by the LRU cache (0 disables caching)
+    pub plan_cache_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            run: RunConfig::default(),
+            num_engines: 1,
+            max_batch: 8,
+            flush_deadline_s: 100e-6,
+            queue_capacity: 64,
+            plan_cache_capacity: 16,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// The unamortized reference configuration: one request per dispatch,
+    /// no plan cache — every SpMV re-partitions, exactly the one-shot
+    /// engine behaviour a serving layer is measured against.
+    pub fn sequential_baseline(&self) -> ServeConfig {
+        ServeConfig {
+            max_batch: 1,
+            plan_cache_capacity: 0,
+            ..self.clone()
+        }
+    }
+}
+
+/// Handle of a registered matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MatrixId(usize);
+
+impl MatrixId {
+    /// Registration index.
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// One SpMV request: `y = alpha * A[matrix] * x`.
+#[derive(Debug, Clone)]
+pub struct SpmvRequest {
+    /// registered matrix to multiply against
+    pub matrix: MatrixId,
+    /// dense right-hand side (length = matrix cols)
+    pub x: Vec<f32>,
+    /// scale factor
+    pub alpha: f32,
+    /// modeled arrival time in seconds (trace timestamp)
+    pub arrival_s: f64,
+    /// optional end-to-end latency budget relative to arrival
+    pub deadline_s: Option<f64>,
+}
+
+/// Why a request was rejected at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// the matrix's pending window was full (backpressure)
+    QueueFull,
+    /// unknown matrix id or wrong-length x
+    BadRequest,
+}
+
+/// Final state of one submitted request.
+#[derive(Debug)]
+pub enum Outcome {
+    /// executed; `y = alpha * A * x`
+    Completed {
+        /// result vector
+        y: Vec<f32>,
+        /// modeled end-to-end latency (completion − arrival)
+        latency_s: f64,
+        /// coalesced batch size the request rode in
+        batch_k: usize,
+        /// latency within the request's deadline (true if none set)
+        deadline_met: bool,
+    },
+    /// rejected at admission
+    Rejected(RejectReason),
+    /// dropped at dispatch: deadline passed before the batch could start
+    Expired,
+}
+
+#[derive(Default)]
+struct Agg {
+    completed: usize,
+    rejected: usize,
+    expired: usize,
+    violations: usize,
+    latencies: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    busy: f64,
+    last_done: f64,
+}
+
+/// The multi-tenant SpMV/SpMM server.
+pub struct Server {
+    cfg: ServeConfig,
+    engines: Vec<Engine>,
+    engine_free_at: Vec<f64>,
+    matrices: Vec<(Matrix, MatrixFingerprint)>,
+    cache: PlanCache,
+}
+
+impl Server {
+    /// Build the engine pool and plan cache.
+    pub fn new(cfg: ServeConfig) -> Result<Server> {
+        if cfg.num_engines == 0 {
+            return Err(Error::Serve("num_engines must be >= 1".into()));
+        }
+        if cfg.max_batch == 0 {
+            return Err(Error::Serve("max_batch must be >= 1".into()));
+        }
+        if cfg.queue_capacity == 0 {
+            return Err(Error::Serve("queue_capacity must be >= 1".into()));
+        }
+        if !cfg.flush_deadline_s.is_finite() || cfg.flush_deadline_s < 0.0 {
+            return Err(Error::Serve("flush_deadline_s must be finite and >= 0".into()));
+        }
+        let engines: Vec<Engine> = (0..cfg.num_engines)
+            .map(|_| Engine::new(cfg.run.clone()))
+            .collect::<Result<_>>()?;
+        let cache = PlanCache::new(cfg.plan_cache_capacity);
+        let engine_free_at = vec![0.0; cfg.num_engines];
+        Ok(Server { cfg, engines, engine_free_at, matrices: Vec::new(), cache })
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Register a tenant matrix; requests reference the returned id.
+    /// Fingerprints cover the full payload, so two tenants registering a
+    /// numerically identical matrix share one cached plan.
+    pub fn register(&mut self, a: Matrix) -> MatrixId {
+        let fp = fingerprint(&a);
+        self.matrices.push((a, fp));
+        MatrixId(self.matrices.len() - 1)
+    }
+
+    /// Registered matrix count.
+    pub fn num_matrices(&self) -> usize {
+        self.matrices.len()
+    }
+
+    /// Plan-cache counters.
+    pub fn cache_stats(&self) -> PlanCacheStats {
+        self.cache.stats()
+    }
+
+    /// Run a trace of requests to completion and aggregate the report.
+    /// Arrival times may be in any order (the scheduler sorts); the engine
+    /// pool state (free times, plan cache) persists across calls, so
+    /// consecutive `run`s model a long-lived server.
+    pub fn run(&mut self, trace: Vec<SpmvRequest>) -> Result<ServeReport> {
+        let submitted = trace.len();
+        let mut outcomes: Vec<Option<Outcome>> = (0..submitted).map(|_| None).collect();
+        let mut agg = Agg::default();
+
+        // reject non-finite timestamps up front (a NaN would poison the
+        // event ordering); everything else is admitted in arrival order
+        let mut order: Vec<usize> = Vec::with_capacity(submitted);
+        for (i, r) in trace.iter().enumerate() {
+            let finite =
+                r.arrival_s.is_finite() && r.deadline_s.map_or(true, |d| d.is_finite());
+            if finite {
+                order.push(i);
+            } else {
+                outcomes[i] = Some(Outcome::Rejected(RejectReason::BadRequest));
+                agg.rejected += 1;
+            }
+        }
+        let first_arrival = order
+            .iter()
+            .map(|&i| trace[i].arrival_s)
+            .fold(f64::INFINITY, f64::min);
+        order.sort_by(|&a, &b| {
+            trace[a]
+                .arrival_s
+                .partial_cmp(&trace[b].arrival_s)
+                .expect("non-finite arrivals were filtered")
+        });
+        let mut slots: Vec<Option<SpmvRequest>> = trace.into_iter().map(Some).collect();
+
+        let policy = BatchPolicy {
+            max_batch: self.cfg.max_batch,
+            flush_deadline_s: self.cfg.flush_deadline_s,
+        };
+        let mut queues: HashMap<usize, Batcher> = HashMap::new();
+        // (completion time, batch size) of dispatched-but-unfinished work,
+        // per matrix — the in-flight half of the backpressure bound
+        let mut in_flight: HashMap<usize, Vec<(f64, usize)>> = HashMap::new();
+
+        let mut next = 0usize;
+        loop {
+            // earliest deadline flush across the non-empty windows; ties
+            // break on the matrix id so the simulation stays deterministic
+            // (HashMap iteration order must not leak into the schedule)
+            let timer: Option<(f64, usize)> = queues
+                .iter()
+                .filter_map(|(&mid, q)| q.next_flush_at().map(|t| (t, mid)))
+                .min_by(|a, b| {
+                    a.0.partial_cmp(&b.0)
+                        .expect("flush times are finite")
+                        .then(a.1.cmp(&b.1))
+                });
+            let arrival_t = if next < order.len() {
+                Some(slots[order[next]].as_ref().expect("unconsumed").arrival_s)
+            } else {
+                None
+            };
+            match (timer, arrival_t) {
+                (None, None) => break,
+                // deadline flush strictly before the next arrival (ties
+                // admit first, giving the window its last chance to fill)
+                (Some((t, mid)), at) if at.map_or(true, |a| t < a) => {
+                    let q = queues.get_mut(&mid).expect("timer points at live queue");
+                    flush_window(
+                        &self.engines,
+                        &mut self.engine_free_at,
+                        &self.matrices,
+                        &mut self.cache,
+                        q,
+                        in_flight.entry(mid).or_default(),
+                        mid,
+                        t,
+                        &mut outcomes,
+                        &mut agg,
+                    )?;
+                }
+                _ => {
+                    let ridx = order[next];
+                    next += 1;
+                    let req = slots[ridx].take().expect("arrivals consumed once");
+                    let now = req.arrival_s;
+                    let mid = req.matrix.0;
+                    let valid = self
+                        .matrices
+                        .get(mid)
+                        .map_or(false, |(m, _)| req.x.len() == m.cols());
+                    if !valid {
+                        outcomes[ridx] = Some(Outcome::Rejected(RejectReason::BadRequest));
+                        agg.rejected += 1;
+                        continue;
+                    }
+                    let q = queues.entry(mid).or_insert_with(|| Batcher::new(policy));
+                    // backpressure: pending window + dispatched-but-unfinished
+                    let fl = in_flight.entry(mid).or_default();
+                    fl.retain(|&(done, _)| done > now);
+                    let outstanding: usize =
+                        q.len() + fl.iter().map(|&(_, k)| k).sum::<usize>();
+                    if outstanding >= self.cfg.queue_capacity {
+                        outcomes[ridx] = Some(Outcome::Rejected(RejectReason::QueueFull));
+                        agg.rejected += 1;
+                        continue;
+                    }
+                    q.push(PendingRequest {
+                        req_idx: ridx,
+                        x: req.x,
+                        alpha: req.alpha,
+                        arrival_s: req.arrival_s,
+                        deadline_s: req.deadline_s,
+                    });
+                    if q.is_full() {
+                        flush_window(
+                            &self.engines,
+                            &mut self.engine_free_at,
+                            &self.matrices,
+                            &mut self.cache,
+                            q,
+                            fl,
+                            mid,
+                            now,
+                            &mut outcomes,
+                            &mut agg,
+                        )?;
+                    }
+                }
+            }
+        }
+
+        let mut latencies = agg.latencies;
+        latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let makespan_s = if agg.completed == 0 || !first_arrival.is_finite() {
+            0.0
+        } else {
+            (agg.last_done - first_arrival).max(0.0)
+        };
+        let outcomes: Vec<Outcome> = outcomes
+            .into_iter()
+            .map(|o| o.expect("every request reaches a terminal outcome"))
+            .collect();
+        Ok(ServeReport {
+            submitted,
+            completed: agg.completed,
+            rejected: agg.rejected,
+            expired: agg.expired,
+            deadline_violations: agg.violations,
+            latencies_s: latencies,
+            batch_sizes: agg.batch_sizes,
+            num_engines: self.cfg.num_engines,
+            makespan_s,
+            engine_busy_s: agg.busy,
+            cache: self.cache.stats(),
+            outcomes,
+        })
+    }
+}
+
+/// Dispatch one window: pick the earliest-free engine, expire stale
+/// requests, fetch/build the plan, execute the batch, record outcomes
+/// and the in-flight (completion, size) pair backpressure counts.
+#[allow(clippy::too_many_arguments)]
+fn flush_window(
+    engines: &[Engine],
+    engine_free_at: &mut [f64],
+    matrices: &[(Matrix, MatrixFingerprint)],
+    cache: &mut PlanCache,
+    q: &mut Batcher,
+    in_flight: &mut Vec<(f64, usize)>,
+    mid: usize,
+    now: f64,
+    outcomes: &mut [Option<Outcome>],
+    agg: &mut Agg,
+) -> Result<()> {
+    let pending = q.drain();
+    if pending.is_empty() {
+        return Ok(());
+    }
+    let e = engine_free_at
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).expect("free times are finite"))
+        .map(|(i, _)| i)
+        .expect("engine pool is non-empty");
+    let start = now.max(engine_free_at[e]);
+    let mut live = Vec::with_capacity(pending.len());
+    for r in pending {
+        let stale = r.deadline_s.map_or(false, |d| start - r.arrival_s > d);
+        if stale {
+            outcomes[r.req_idx] = Some(Outcome::Expired);
+            agg.expired += 1;
+        } else {
+            live.push(r);
+        }
+    }
+    if live.is_empty() {
+        return Ok(());
+    }
+    let (matrix, fp) = &matrices[mid];
+    let (plan, hit) = cache.get_or_build(*fp, matrix, &engines[e])?;
+    // only a miss charges the modeled partitioning time (Fig. 16 amortized)
+    let t_plan = if hit { 0.0 } else { plan.t_partition };
+    let exec = batcher::dispatch(&engines[e], &plan, &live)?;
+    let service = t_plan + exec.metrics.modeled_total;
+    let done = start + service;
+    engine_free_at[e] = done;
+    agg.busy += service;
+    agg.last_done = agg.last_done.max(done);
+    let k = live.len();
+    agg.batch_sizes.push(k);
+    in_flight.push((done, k));
+    for (r, y) in live.into_iter().zip(exec.ys) {
+        let latency_s = done - r.arrival_s;
+        let deadline_met = r.deadline_s.map_or(true, |d| latency_s <= d);
+        if !deadline_met {
+            agg.violations += 1;
+        }
+        agg.latencies.push(latency_s);
+        agg.completed += 1;
+        outcomes[r.req_idx] = Some(Outcome::Completed {
+            y,
+            latency_s,
+            batch_k: k,
+            deadline_met,
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Mode};
+    use crate::formats::{convert, gen, FormatKind};
+    use crate::sim::Platform;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            run: RunConfig {
+                platform: Platform::dgx1(),
+                num_gpus: 8,
+                mode: Mode::PStarOpt,
+                format: FormatKind::Csr,
+                backend: Backend::CpuRef,
+                numa_aware: None,
+                strategy_override: None,
+            },
+            ..ServeConfig::default()
+        }
+    }
+
+    fn csr(seed: u64) -> Matrix {
+        Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::power_law(
+            256, 256, 4_000, 2.0, seed,
+        ))))
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(Server::new(ServeConfig { num_engines: 0, ..cfg() }).is_err());
+        assert!(Server::new(ServeConfig { max_batch: 0, ..cfg() }).is_err());
+        assert!(Server::new(ServeConfig { queue_capacity: 0, ..cfg() }).is_err());
+        assert!(
+            Server::new(ServeConfig { flush_deadline_s: f64::NAN, ..cfg() }).is_err()
+        );
+    }
+
+    #[test]
+    fn empty_trace_is_empty_report() {
+        let mut s = Server::new(cfg()).unwrap();
+        let r = s.run(vec![]).unwrap();
+        assert_eq!(r.submitted, 0);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.makespan_s, 0.0);
+    }
+
+    #[test]
+    fn bad_requests_are_rejected_not_fatal() {
+        let mut s = Server::new(cfg()).unwrap();
+        let id = s.register(csr(1));
+        let r = s
+            .run(vec![
+                // unknown matrix id
+                SpmvRequest {
+                    matrix: MatrixId(7),
+                    x: vec![0.0; 256],
+                    alpha: 1.0,
+                    arrival_s: 0.0,
+                    deadline_s: None,
+                },
+                // wrong x length
+                SpmvRequest {
+                    matrix: id,
+                    x: vec![0.0; 3],
+                    alpha: 1.0,
+                    arrival_s: 0.0,
+                    deadline_s: None,
+                },
+            ])
+            .unwrap();
+        assert_eq!(r.rejected, 2);
+        assert_eq!(r.completed, 0);
+        assert!(matches!(
+            r.outcomes[0],
+            Outcome::Rejected(RejectReason::BadRequest)
+        ));
+    }
+
+    #[test]
+    fn sequential_baseline_disables_amortization() {
+        let base = cfg().sequential_baseline();
+        assert_eq!(base.max_batch, 1);
+        assert_eq!(base.plan_cache_capacity, 0);
+    }
+
+    #[test]
+    fn server_persists_cache_across_runs() {
+        let mut s = Server::new(ServeConfig { max_batch: 2, ..cfg() }).unwrap();
+        let id = s.register(csr(1));
+        let req = |t: f64| SpmvRequest {
+            matrix: id,
+            x: gen::dense_vector(256, 9),
+            alpha: 1.0,
+            arrival_s: t,
+            deadline_s: None,
+        };
+        s.run(vec![req(0.0), req(0.0)]).unwrap();
+        assert_eq!(s.cache_stats().misses, 1);
+        s.run(vec![req(1.0), req(1.0)]).unwrap();
+        assert_eq!(s.cache_stats().misses, 1, "second run must reuse the plan");
+        assert!(s.cache_stats().hits >= 1);
+    }
+}

@@ -24,7 +24,9 @@ fn tmpdir() -> PathBuf {
 fn no_args_prints_usage() {
     let o = msrep(&[]);
     assert!(o.status.success());
-    assert!(stdout(&o).contains("commands:"));
+    let s = stdout(&o);
+    assert!(s.contains("commands:"));
+    assert!(s.contains("serve-bench"), "usage must list serve-bench");
 }
 
 #[test]
@@ -97,6 +99,27 @@ fn run_on_suite_matrix_baseline_mode() {
     ]);
     assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
     assert!(stdout(&o).contains("mode=baseline"));
+}
+
+#[test]
+fn serve_bench_reports_batching_and_cache() {
+    let o = msrep(&[
+        "serve-bench", "--tenants", "2", "--requests", "24", "--m", "512", "--nnz",
+        "8000", "--batch", "4", "--rate", "1000000", "--compare",
+    ]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let s = stdout(&o);
+    assert!(s.contains("plan-cache hit rate"), "missing cache stats:\n{s}");
+    assert!(s.contains("batch-size histogram"), "missing histogram:\n{s}");
+    assert!(s.contains("speedup over sequential"), "missing comparison:\n{s}");
+}
+
+#[test]
+fn serve_bench_help_lists_flags() {
+    let o = msrep(&["serve-bench", "--help"]);
+    assert!(o.status.success());
+    let s = stdout(&o);
+    assert!(s.contains("--batch") && s.contains("--flush-us") && s.contains("--engines"));
 }
 
 #[test]

@@ -1,0 +1,341 @@
+//! Integration tests for the serving layer: batched numerics vs the CPU
+//! oracle, the >= 2x batched-throughput acceptance bar, plan-cache
+//! amortization on repeated-matrix traffic, backpressure, and deadlines.
+
+use msrep::coordinator::{Backend, Mode, RunConfig};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
+use msrep::serve::{
+    fingerprint, MatrixId, Outcome, RejectReason, ServeConfig, Server, SpmvRequest,
+};
+use msrep::sim::Platform;
+use msrep::spmv::spmv_matrix;
+
+fn run_config() -> RunConfig {
+    RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: 8,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    }
+}
+
+fn serve_config(max_batch: usize, cache: usize) -> ServeConfig {
+    ServeConfig {
+        run: run_config(),
+        num_engines: 1,
+        max_batch,
+        flush_deadline_s: 50e-6,
+        queue_capacity: 1024,
+        plan_cache_capacity: cache,
+    }
+}
+
+fn csr_matrix(m: usize, nnz: usize, seed: u64) -> Matrix {
+    Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::power_law(m, m, nnz, 2.0, seed))))
+}
+
+fn burst(id: MatrixId, n: usize, count: usize, seed0: u64) -> Vec<SpmvRequest> {
+    (0..count)
+        .map(|i| SpmvRequest {
+            matrix: id,
+            x: gen::dense_vector(n, seed0 + i as u64),
+            alpha: 1.0 + (i % 3) as f32 * 0.5,
+            arrival_s: 0.0,
+            deadline_s: None,
+        })
+        .collect()
+}
+
+#[test]
+fn batched_results_match_cpu_oracle() {
+    let mut server = Server::new(serve_config(8, 8)).unwrap();
+    let mat_a = csr_matrix(512, 8_000, 1);
+    let mat_b = csr_matrix(512, 8_000, 2);
+    let ida = server.register(mat_a.clone());
+    let idb = server.register(mat_b.clone());
+
+    let mut trace = burst(ida, 512, 12, 100);
+    trace.extend(burst(idb, 512, 12, 200));
+    let inputs: Vec<(MatrixId, Vec<f32>, f32)> = trace
+        .iter()
+        .map(|r| (r.matrix, r.x.clone(), r.alpha))
+        .collect();
+
+    let report = server.run(trace).unwrap();
+    assert_eq!(report.completed, 24);
+    assert_eq!(report.rejected + report.expired, 0);
+
+    for (i, (mid, x, alpha)) in inputs.iter().enumerate() {
+        let mat = if *mid == ida { &mat_a } else { &mat_b };
+        let mut expect = vec![0.0f32; 512];
+        spmv_matrix(mat, x, *alpha, 0.0, &mut expect).unwrap();
+        match &report.outcomes[i] {
+            Outcome::Completed { y, batch_k, .. } => {
+                assert!(*batch_k >= 1 && *batch_k <= 8);
+                for (a, b) in y.iter().zip(&expect) {
+                    assert!(
+                        (a - b).abs() < 3e-3 * (1.0 + b.abs()),
+                        "request {i}: {a} vs {b}"
+                    );
+                }
+            }
+            other => panic!("request {i}: expected Completed, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn batched_throughput_at_least_2x_sequential() {
+    // ISSUE-1 acceptance: batched SpMM path >= 2x modeled throughput over
+    // sequential per-request SpMV at batch >= 8 on Platform::dgx1(), with
+    // a plan-cache hit rate > 0 on repeated-matrix traffic.
+    let run = |cfg: ServeConfig| {
+        let mut server = Server::new(cfg).unwrap();
+        let id = server.register(csr_matrix(4_096, 200_000, 3));
+        let trace = burst(id, 4_096, 64, 300);
+        server.run(trace).unwrap()
+    };
+    let batched = run(serve_config(8, 8));
+    let sequential = run(serve_config(8, 8).sequential_baseline());
+
+    assert_eq!(batched.completed, 64);
+    assert_eq!(sequential.completed, 64);
+    assert!(batched.mean_batch() > 4.0, "batching must engage: {}", batched.mean_batch());
+    assert_eq!(sequential.mean_batch(), 1.0);
+
+    let speedup = batched.throughput_rps() / sequential.throughput_rps();
+    assert!(
+        speedup >= 2.0,
+        "batched {} req/s vs sequential {} req/s = {speedup:.2}x (need >= 2x)",
+        batched.throughput_rps(),
+        sequential.throughput_rps()
+    );
+    assert!(
+        batched.cache.hit_rate() > 0.0,
+        "repeat-matrix traffic must hit the plan cache"
+    );
+    assert_eq!(sequential.cache.hit_rate(), 0.0, "baseline must not cache");
+}
+
+#[test]
+fn plan_cache_amortizes_repeated_matrix_traffic() {
+    let mut server = Server::new(serve_config(4, 8)).unwrap();
+    let id = server.register(csr_matrix(512, 8_000, 4));
+    let report = server.run(burst(id, 512, 32, 400)).unwrap();
+    // 32 requests at batch 4 = 8 dispatches: 1 plan build + 7 hits
+    assert_eq!(report.batch_sizes.len(), 8);
+    assert_eq!(report.cache.misses, 1);
+    assert_eq!(report.cache.hits, 7);
+    assert!((report.cache.hit_rate() - 7.0 / 8.0).abs() < 1e-12);
+}
+
+#[test]
+fn identical_tenant_matrices_share_one_plan() {
+    // two tenants registering a numerically identical matrix share a
+    // single cached plan; same structure with different values must NOT
+    // (cached plans embed the value streams)
+    let mat = csr_matrix(512, 8_000, 5);
+    assert_eq!(fingerprint(&mat), fingerprint(&mat.clone()));
+    if let Matrix::Csr(c) = &mat {
+        let mut scaled = c.clone();
+        for v in &mut scaled.val {
+            *v *= 3.0;
+        }
+        assert_ne!(fingerprint(&mat), fingerprint(&Matrix::Csr(scaled)));
+    }
+    let mut server = Server::new(serve_config(4, 8)).unwrap();
+    let ida = server.register(mat.clone());
+    let idb = server.register(mat);
+    let mut trace = burst(ida, 512, 4, 500);
+    trace.extend(burst(idb, 512, 4, 600));
+    let report = server.run(trace).unwrap();
+    assert_eq!(report.completed, 8);
+    assert_eq!(report.cache.misses, 1, "tenant B must reuse tenant A's plan");
+    assert!(report.cache.hits >= 1);
+}
+
+#[test]
+fn backpressure_rejects_past_queue_capacity() {
+    // max_batch > queue_capacity: a burst can never fill a batch, so the
+    // window only drains on the flush deadline — everything past the
+    // capacity is shed at admission.
+    let cfg = ServeConfig {
+        queue_capacity: 8,
+        max_batch: 16,
+        ..serve_config(16, 8)
+    };
+    let mut server = Server::new(cfg).unwrap();
+    let id = server.register(csr_matrix(512, 8_000, 6));
+    let report = server.run(burst(id, 512, 40, 700)).unwrap();
+    assert_eq!(report.completed, 8);
+    assert_eq!(report.rejected, 32);
+    let queue_full = report
+        .outcomes
+        .iter()
+        .filter(|o| matches!(o, Outcome::Rejected(RejectReason::QueueFull)))
+        .count();
+    assert_eq!(queue_full, 32);
+}
+
+#[test]
+fn backpressure_counts_in_flight_work() {
+    // queue_capacity >= max_batch: dispatched-but-unfinished batches keep
+    // occupying the budget, so a burst beyond the capacity is shed even
+    // though each window drains at max_batch
+    let cfg = ServeConfig { queue_capacity: 8, ..serve_config(4, 8) };
+    let mut server = Server::new(cfg).unwrap();
+    let id = server.register(csr_matrix(512, 8_000, 20));
+    let report = server.run(burst(id, 512, 64, 2000)).unwrap();
+    // burst at t=0: every admitted request stays outstanding (completions
+    // are strictly after t=0), so exactly queue_capacity are admitted
+    assert_eq!(report.completed, 8);
+    assert_eq!(report.rejected, 56);
+    assert_eq!(report.batch_sizes, vec![4, 4]);
+}
+
+#[test]
+fn non_finite_timestamps_rejected_not_fatal() {
+    let mut server = Server::new(serve_config(4, 8)).unwrap();
+    let id = server.register(csr_matrix(512, 8_000, 21));
+    let mut trace = burst(id, 512, 2, 2100);
+    trace[0].arrival_s = f64::NAN;
+    trace.push(SpmvRequest {
+        matrix: id,
+        x: gen::dense_vector(512, 2200),
+        alpha: 1.0,
+        arrival_s: 0.0,
+        deadline_s: Some(f64::INFINITY),
+    });
+    let report = server.run(trace).unwrap();
+    assert!(matches!(
+        report.outcomes[0],
+        Outcome::Rejected(RejectReason::BadRequest)
+    ));
+    assert!(matches!(
+        report.outcomes[2],
+        Outcome::Rejected(RejectReason::BadRequest)
+    ));
+    // the finite request still completes
+    assert!(matches!(report.outcomes[1], Outcome::Completed { .. }));
+    assert_eq!(report.completed, 1);
+    assert_eq!(report.rejected, 2);
+}
+
+#[test]
+fn deadlines_expire_and_flag_late_requests() {
+    // 1) deadline shorter than the flush wait: dropped before execution
+    let cfg = ServeConfig { max_batch: 16, flush_deadline_s: 100e-6, ..serve_config(16, 8) };
+    let mut server = Server::new(cfg).unwrap();
+    let id = server.register(csr_matrix(512, 8_000, 7));
+    let mut trace = burst(id, 512, 4, 800);
+    for r in &mut trace {
+        r.deadline_s = Some(1e-6); // 1 µs budget vs 100 µs flush wait
+    }
+    let report = server.run(trace).unwrap();
+    assert_eq!(report.expired, 4);
+    assert_eq!(report.completed, 0);
+
+    // 2) deadline longer than the wait but shorter than the service time:
+    //    executed, counted as a deadline violation
+    let cfg = ServeConfig { max_batch: 2, ..serve_config(2, 8) };
+    let mut server = Server::new(cfg).unwrap();
+    let id = server.register(csr_matrix(4_096, 200_000, 8));
+    let mut trace = burst(id, 4_096, 2, 900);
+    for r in &mut trace {
+        r.deadline_s = Some(1e-9); // batch flushes instantly at t=0, so the
+                                   // dispatch starts in time but finishes late
+    }
+    let report = server.run(trace).unwrap();
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.deadline_violations, 2);
+    assert!(report
+        .outcomes
+        .iter()
+        .all(|o| matches!(o, Outcome::Completed { deadline_met: false, .. })));
+}
+
+#[test]
+fn lru_eviction_under_tiny_cache() {
+    // capacity-1 cache with alternating tenants: every dispatch misses and
+    // evicts the other tenant's plan
+    let mut server = Server::new(serve_config(2, 1)).unwrap();
+    let ida = server.register(csr_matrix(512, 8_000, 9));
+    let idb = server.register(csr_matrix(512, 8_000, 10));
+    let mut trace = Vec::new();
+    for round in 0..3usize {
+        let t = round as f64 * 1e-3;
+        for (j, id) in [ida, idb].into_iter().enumerate() {
+            for i in 0..2 {
+                trace.push(SpmvRequest {
+                    matrix: id,
+                    x: gen::dense_vector(512, (round * 10 + j * 5 + i) as u64),
+                    alpha: 1.0,
+                    // strictly ordered arrivals keep batches tenant-pure
+                    arrival_s: t + (j * 2 + i) as f64 * 1e-9,
+                    deadline_s: None,
+                });
+            }
+        }
+    }
+    let report = server.run(trace).unwrap();
+    assert_eq!(report.completed, 12);
+    assert_eq!(report.cache.hits, 0, "alternating tenants defeat a size-1 cache");
+    assert_eq!(report.cache.misses, 6);
+    assert!(report.cache.evictions >= 5);
+}
+
+#[test]
+fn flush_deadline_bounds_straggler_latency() {
+    // a lone request never fills the batch; the flush deadline dispatches it
+    let cfg = ServeConfig { max_batch: 8, flush_deadline_s: 20e-6, ..serve_config(8, 8) };
+    let mut server = Server::new(cfg).unwrap();
+    let id = server.register(csr_matrix(512, 8_000, 11));
+    let report = server
+        .run(vec![SpmvRequest {
+            matrix: id,
+            x: gen::dense_vector(512, 12),
+            alpha: 1.0,
+            arrival_s: 0.0,
+            deadline_s: None,
+        }])
+        .unwrap();
+    assert_eq!(report.completed, 1);
+    match &report.outcomes[0] {
+        Outcome::Completed { latency_s, batch_k, .. } => {
+            assert_eq!(*batch_k, 1);
+            assert!(
+                *latency_s >= 20e-6,
+                "latency {latency_s} must include the flush wait"
+            );
+            assert!(*latency_s < 20e-6 + 1e-3, "latency {latency_s} looks unbounded");
+        }
+        other => panic!("expected Completed, got {other:?}"),
+    }
+}
+
+#[test]
+fn engine_pool_overlaps_independent_batches() {
+    // two engines drain a two-tenant burst faster than one
+    let mk = |engines: usize| {
+        let cfg = ServeConfig { num_engines: engines, ..serve_config(8, 8) };
+        let mut server = Server::new(cfg).unwrap();
+        let ida = server.register(csr_matrix(2_048, 100_000, 13));
+        let idb = server.register(csr_matrix(2_048, 100_000, 14));
+        let mut trace = burst(ida, 2_048, 16, 1000);
+        trace.extend(burst(idb, 2_048, 16, 1100));
+        server.run(trace).unwrap()
+    };
+    let one = mk(1);
+    let two = mk(2);
+    assert_eq!(one.completed, 32);
+    assert_eq!(two.completed, 32);
+    assert!(
+        two.makespan_s < one.makespan_s,
+        "2 engines {} vs 1 engine {}",
+        two.makespan_s,
+        one.makespan_s
+    );
+}
