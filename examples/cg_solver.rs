@@ -2,60 +2,27 @@
 //! scientific-computing workload class the paper's introduction cites
 //! (iterative solvers dominated by SpMV).
 //!
-//! Builds the standard 5-point Laplacian on a `G x G` grid (SPD), then
-//! solves `A u = b` with CG, running every `A·p` product through the MSREP
-//! engine on a simulated DGX-1. Converges in O(G) iterations; the residual
-//! check at the end proves the multi-GPU SpMV is exact enough for a real
-//! numerical method.
+//! Builds the standard 5-point Laplacian on a `G x G` grid
+//! (`gen::laplacian_2d`), then solves `A u = b` with a hand-rolled CG
+//! loop, running every `A·p` product through the MSREP engine on a
+//! simulated DGX-1 — the raw engine API, shown step by step. For the
+//! packaged equivalent (one reusable partition plan + the amortization
+//! report) see `msrep::solver::cg` and `examples/cg_demo.rs`. Converges
+//! in O(G) iterations; the residual check at the end proves the
+//! multi-GPU SpMV is exact enough for a real numerical method.
 //!
 //! ```bash
 //! cargo run --release --example cg_solver [--pjrt]
 //! ```
 
 use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
-use msrep::formats::{convert, Coo, FormatKind, Matrix};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
 use msrep::report::format_duration_s;
 use msrep::sim::Platform;
 
 const G: usize = 120; // grid side; N = G*G unknowns
 const MAX_ITERS: usize = 600;
 const TOL: f32 = 1e-4;
-
-/// 5-point 2-D Laplacian stencil on a G x G grid: 4 on the diagonal, -1
-/// for each neighbour — symmetric positive definite.
-fn laplacian_2d(g: usize) -> Coo {
-    let n = g * g;
-    let mut rows = Vec::with_capacity(5 * n);
-    let mut cols = Vec::with_capacity(5 * n);
-    let mut vals = Vec::with_capacity(5 * n);
-    let idx = |r: usize, c: usize| (r * g + c) as u32;
-    for r in 0..g {
-        for c in 0..g {
-            let i = idx(r, c);
-            rows.push(i);
-            cols.push(i);
-            vals.push(4.0);
-            let mut push = |j: u32| {
-                rows.push(i);
-                cols.push(j);
-                vals.push(-1.0);
-            };
-            if r > 0 {
-                push(idx(r - 1, c));
-            }
-            if r + 1 < g {
-                push(idx(r + 1, c));
-            }
-            if c > 0 {
-                push(idx(r, c - 1));
-            }
-            if c + 1 < g {
-                push(idx(r, c + 1));
-            }
-        }
-    }
-    Coo::new(n, n, rows, cols, vals).expect("laplacian is valid")
-}
 
 fn dot(a: &[f32], b: &[f32]) -> f64 {
     a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
@@ -66,7 +33,7 @@ fn main() -> msrep::Result<()> {
     let n = G * G;
 
     println!("building 2-D Poisson system: {G}x{G} grid, {n} unknowns");
-    let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(laplacian_2d(G))));
+    let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::laplacian_2d(G))));
     println!("matrix: {} nnz (5-point stencil)", a.nnz());
 
     let engine = Engine::new(RunConfig {

@@ -5,8 +5,11 @@
 //! Builds a 50K-node power-law web graph, normalizes it into a column-
 //! stochastic transition matrix, and iterates
 //! `r_{k+1} = d·P·r_k + (1-d)/N` through the MSREP engine (simulated
-//! Summit node, p\*-opt). Every SpMV runs through the full engine; the
-//! modeled timeline yields the throughput report at the end.
+//! Summit node, p\*-opt). The matrix is partitioned **once** and the plan
+//! replayed every iteration (`Engine::spmv_with_plan`); the modeled
+//! timeline yields the throughput report at the end. For the packaged
+//! transpose-dispatch variant with the amortization report, see
+//! `msrep::solver::pagerank`.
 //!
 //! ```bash
 //! cargo run --release --example pagerank [--pjrt]
@@ -66,14 +69,23 @@ fn main() -> msrep::Result<()> {
         if use_pjrt { "pjrt" } else { "cpu-ref" }
     );
 
+    // the matrix never changes across iterations: partition once and
+    // replay the plan (the amortization solver::pagerank packages up)
+    let plan = engine.plan(&p_matrix)?;
+    println!(
+        "partition plan built once: {} tasks, imbalance {:.3}",
+        plan.tasks.len(),
+        plan.imbalance()
+    );
+
     let mut rank = vec![1.0f32 / N as f32; N];
     let teleport = vec![(1.0 - DAMPING) / N as f32; N];
-    let mut modeled_total = 0.0f64;
+    let mut modeled_total = plan.t_partition;
     let mut last_delta = f32::INFINITY;
 
     for it in 1..=ITERS {
         // r' = d*P*r + 1*teleport  (alpha = damping, beta = 1, y0 = teleport)
-        let rep = engine.spmv(&p_matrix, &rank, DAMPING, 1.0, Some(&teleport))?;
+        let rep = engine.spmv_with_plan(&plan, &rank, DAMPING, 1.0, Some(&teleport))?;
         modeled_total += rep.metrics.modeled_total;
         last_delta = rep
             .y

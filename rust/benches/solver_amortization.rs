@@ -1,0 +1,82 @@
+//! Bench: solver plan-reuse amortization — planned-SpMV vs cold
+//! re-partitioning per-iteration cost across GPU counts (the DESIGN.md §9
+//! acceptance sweep: planned must beat cold on every preset, and the
+//! amortization factor must grow with the plan's share of an iteration).
+//!
+//! Run with `cargo bench --bench solver_amortization`
+//! (`MSREP_BENCH_QUICK=1` shrinks the system).
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
+use msrep::report::Table;
+use msrep::sim::Platform;
+use msrep::solver::{cg, pagerank, SolverConfig};
+use msrep::spmv::spmv_matrix;
+use msrep::util::bench::section;
+
+fn engine(platform: Platform, np: usize) -> Engine {
+    Engine::new(RunConfig {
+        platform,
+        num_gpus: np,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })
+    .expect("engine")
+}
+
+fn main() {
+    let quick = std::env::var("MSREP_BENCH_QUICK").is_ok();
+    let (m, nnz) = if quick { (2_000, 30_000) } else { (10_000, 200_000) };
+
+    let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::spd(m, nnz, 1.5, 42))));
+    let x_star = gen::dense_vector(m, 43);
+    let mut b = vec![0.0f32; m];
+    spmv_matrix(&a, &x_star, 1.0, 0.0, &mut b).expect("reference rhs");
+
+    section(&format!(
+        "CG plan-reuse amortization — dgx1, {m} unknowns, ~{nnz} nnz (modeled)"
+    ));
+    let mut t =
+        Table::new(["gpus", "iters", "plan build", "spmv/iter", "cold/iter", "amortization"]);
+    for np in [1, 2, 4, 8] {
+        let rep = cg(&engine(Platform::dgx1(), np), &a, &b, &SolverConfig::default())
+            .expect("cg solve");
+        assert!(rep.converged, "np={np}: CG must converge on the certified-SPD system");
+        assert!(
+            rep.planned_iter_cost() < rep.cold_iter_cost(),
+            "np={np}: planned iteration must beat cold re-partitioning"
+        );
+        t.row([
+            np.to_string(),
+            rep.iterations.to_string(),
+            format!("{:.3e} s", rep.t_plan),
+            format!("{:.3e} s", rep.planned_iter_cost()),
+            format!("{:.3e} s", rep.cold_iter_cost()),
+            format!("{:.2}x", rep.amortization()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    section("PageRank through the CSC transpose plan — summit x6 (modeled)");
+    let links = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::power_law(
+        m,
+        m,
+        nnz,
+        2.1,
+        44,
+    ))));
+    let cfg = SolverConfig { tol: 1e-6, max_iters: 200, ..Default::default() };
+    let rep = pagerank(&engine(Platform::summit(), 6), &links, 0.85, &cfg).expect("pagerank");
+    println!(
+        "iters {} converged {} | spmv/iter {:.3e} s vs cold/iter {:.3e} s | amortization {:.2}x",
+        rep.iterations,
+        rep.converged,
+        rep.planned_iter_cost(),
+        rep.cold_iter_cost(),
+        rep.amortization(),
+    );
+    assert!(rep.planned_iter_cost() < rep.cold_iter_cost());
+}

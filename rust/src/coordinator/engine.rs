@@ -96,6 +96,16 @@ impl Engine {
         PartitionPlan::build(a, &self.config)
     }
 
+    /// Build a plan for `Aᵀ` without materializing a re-sorted transpose:
+    /// [`crate::formats::convert::transpose`] reinterprets the storage
+    /// (CSR(A) **is** CSC(Aᵀ)), so a row-major input dispatches through
+    /// the pCSC / column-based-merge path. This is the transpose-SpMV hook
+    /// iterative kernels like PageRank's power iteration replay every
+    /// step: `spmv_with_plan(plan_t, x, ...)` computes `y = alpha·Aᵀx`.
+    pub fn plan_transpose(&self, a: &Matrix) -> Result<PartitionPlan> {
+        PartitionPlan::build(&crate::formats::convert::transpose(a), &self.config)
+    }
+
     /// Multi-GPU SpMV: `y = alpha*A*x + beta*y0` (paper Alg. 1 semantics;
     /// `y0 = None` means a zero initial vector). Partitions from scratch —
     /// the paper's one-shot call shape.
@@ -161,6 +171,9 @@ impl Engine {
         };
 
         // ---- 3. device kernels (model) + real execution (numerics) ------
+        // kernel-time modeling follows the *plan's* storage format, not the
+        // engine default: a transpose-dispatched plan (plan_transpose) runs
+        // CSC streams on an engine configured for CSR input
         let t_compute = tasks
             .iter()
             .map(|t| {
@@ -169,9 +182,9 @@ impl Engine {
                     t.nnz() as u64,
                     t.out_len as u64,
                     n as u64,
-                    cfg.format,
+                    plan.format,
                 );
-                if cfg.format == FormatKind::Coo {
+                if plan.format == FormatKind::Coo {
                     // §5.1: COO inputs run a COO→CSR conversion kernel first
                     kt += model::coo_to_csr_conversion_time(p, t.nnz() as u64);
                 }
@@ -365,7 +378,7 @@ impl Engine {
                     t.out_len as u64,
                     n as u64,
                     k as u64,
-                    cfg.format,
+                    plan.format,
                 )
             })
             .fold(0.0, f64::max);
@@ -679,6 +692,43 @@ mod tests {
         let diff = fresh.metrics.modeled_total
             - (cached.metrics.modeled_total + plan.t_partition);
         assert!(diff.abs() < 1e-15, "totals differ by {diff}");
+    }
+
+    #[test]
+    fn transpose_plan_dispatches_through_csc_merge_path() {
+        // rectangular on purpose: a row/col mix-up cannot cancel out
+        let coo = gen::power_law(300, 200, 5_000, 2.0, 55);
+        let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let eng = engine(Mode::PStarOpt, FormatKind::Csr, 4);
+        let plan = eng.plan_transpose(&a).unwrap();
+        // CSR input -> CSC-of-transpose plan -> column-based merge
+        assert_eq!(plan.format, FormatKind::Csc);
+        assert_eq!(plan.merge_class, super::super::partitioner::MergeClass::ColBased);
+        assert_eq!((plan.m, plan.n), (200, 300));
+
+        let x = gen::dense_vector(300, 56);
+        let y0 = gen::dense_vector(200, 57);
+        let rep = eng.spmv_with_plan(&plan, &x, 1.3, 0.7, Some(&y0)).unwrap();
+        // reference: y = 1.3*Aᵀx + 0.7*y0 on the materialized transpose
+        let t = convert::transpose(&a);
+        let mut expect = y0.clone();
+        crate::spmv::spmv_matrix(&t, &x, 1.3, 0.7, &mut expect).unwrap();
+        for (i, (got, want)) in rep.y.iter().zip(&expect).enumerate() {
+            assert!(
+                (got - want).abs() < 3e-3 * (1.0 + want.abs()),
+                "row {i}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn transpose_plan_balances_like_a_direct_csc_plan() {
+        let coo = gen::two_band(2_000, 2_000, 100_000, 8.0, 59);
+        let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let eng = engine(Mode::PStarOpt, FormatKind::Csr, 8);
+        let plan = eng.plan_transpose(&a).unwrap();
+        assert!(plan.imbalance() < 1.01, "imbalance {}", plan.imbalance());
+        assert_eq!(plan.loads().iter().sum::<u64>(), a.nnz() as u64);
     }
 
     #[test]

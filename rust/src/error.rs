@@ -67,6 +67,10 @@ pub enum Error {
     /// Serving-layer error (admission, batching, scheduling).
     Serve(String),
 
+    /// Iterative-solver error (non-square system, zero diagonal, loss of
+    /// positive-definiteness, bad tolerance/iteration budget).
+    Solver(String),
+
     /// CLI usage error.
     Usage(String),
 }
@@ -91,6 +95,7 @@ impl fmt::Display for Error {
             }
             Error::Json { at, msg } => write!(f, "json parse error at byte {at}: {msg}"),
             Error::Serve(m) => write!(f, "serve error: {m}"),
+            Error::Solver(m) => write!(f, "solver error: {m}"),
             Error::Usage(m) => write!(f, "usage: {m}"),
         }
     }

@@ -35,6 +35,27 @@ pub fn to_coo(a: &Matrix) -> Coo {
     }
 }
 
+/// Transpose as a storage reinterpretation: CSR(A) **is** CSC(Aᵀ) (paper
+/// §2.1.3), so no sort or pointer rebuild happens — a CSR input returns
+/// the CSC of Aᵀ (array clones only), a CSC input returns a CSR, and COO
+/// swaps its index arrays. This is the transpose-SpMV dispatch hook:
+/// [`Engine::plan_transpose`](crate::coordinator::Engine::plan_transpose)
+/// partitions the returned matrix, which routes a row-major input through
+/// the pCSC / column-based-merge path of the coordinator.
+pub fn transpose(a: &Matrix) -> Matrix {
+    match a {
+        Matrix::Csr(x) => Matrix::Csc(
+            Csc::new(x.cols(), x.rows(), x.row_ptr.clone(), x.col_idx.clone(), x.val.clone())
+                .expect("valid CSR arrays are the CSC arrays of the transpose"),
+        ),
+        Matrix::Csc(x) => Matrix::Csr(
+            Csr::new(x.cols(), x.rows(), x.col_ptr.clone(), x.row_idx.clone(), x.val.clone())
+                .expect("valid CSC arrays are the CSR arrays of the transpose"),
+        ),
+        Matrix::Coo(x) => Matrix::Coo(x.transpose()),
+    }
+}
+
 /// Re-assemble a full CSR from consecutive pCSR partitions of `csr`.
 ///
 /// This is the inverse of [`PCsr::partition`] and exercises the paper's
@@ -106,6 +127,53 @@ mod tests {
         let csc_m = Matrix::Csc(to_csc(&a));
         assert_eq!(to_csr(&csc_m).to_dense(), dense);
         assert_eq!(to_coo(&csc_m).to_dense(), dense);
+    }
+
+    #[test]
+    fn transpose_flips_dense_for_every_format() {
+        // rectangular on purpose: shape mistakes can't cancel out
+        let coo = Coo::new(
+            3,
+            5,
+            vec![0, 0, 1, 2, 2],
+            vec![0, 4, 2, 1, 3],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        )
+        .unwrap();
+        let dense = coo.to_dense();
+        for a in [
+            Matrix::Coo(coo.clone()),
+            Matrix::Csr(to_csr(&Matrix::Coo(coo.clone()))),
+            Matrix::Csc(to_csc(&Matrix::Coo(coo.clone()))),
+        ] {
+            let t = transpose(&a);
+            assert_eq!((t.rows(), t.cols()), (5, 3));
+            let td = to_coo(&t).to_dense();
+            for i in 0..3 {
+                for j in 0..5 {
+                    assert_eq!(td[j][i], dense[i][j], "format {:?}", a.kind());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_swaps_storage_format_without_resorting() {
+        // CSR -> CSC of the transpose with the *same* arrays (zero work
+        // beyond the clones), and transposing twice restores the format
+        let csr = to_csr(&paper_matrix());
+        let t = transpose(&Matrix::Csr(csr.clone()));
+        match &t {
+            Matrix::Csc(c) => {
+                assert_eq!(c.col_ptr, csr.row_ptr);
+                assert_eq!(c.row_idx, csr.col_idx);
+                assert_eq!(c.val, csr.val);
+            }
+            other => panic!("CSR transpose should be CSC, got {:?}", other.kind()),
+        }
+        let tt = transpose(&t);
+        assert_eq!(tt.kind(), crate::formats::FormatKind::Csr);
+        assert_eq!(to_csr(&tt).to_dense(), csr.to_dense());
     }
 
     #[test]

@@ -135,6 +135,19 @@ impl Coo {
         Coo::new(m, n, ri, ci, v).expect("from_dense produces valid COO")
     }
 
+    /// Diagonal entries as a dense vector of length `min(m, n)`; duplicate
+    /// `(i, i)` triplets accumulate and absent diagonals read 0 — the
+    /// extraction the Jacobi solver's `D⁻¹` step builds on.
+    pub fn diagonal(&self) -> Vec<f32> {
+        let mut d = vec![0.0f32; self.m.min(self.n)];
+        for k in 0..self.nnz() {
+            if self.row_idx[k] == self.col_idx[k] {
+                d[self.row_idx[k] as usize] += self.val[k];
+            }
+        }
+        d
+    }
+
     /// Transpose: swaps row/column roles (CSC(A) == CSR(Aᵀ), paper §2.1.3).
     pub fn transpose(&self) -> Coo {
         let mut t = Coo {

@@ -103,6 +103,22 @@ impl Csc {
         self.col_ptr[j + 1] - self.col_ptr[j]
     }
 
+    /// Diagonal entries as a dense vector of length `min(m, n)`; duplicate
+    /// `(j, j)` entries accumulate, absent diagonals read 0. One O(nnz)
+    /// pass — the extraction the Jacobi solver's `D⁻¹` step builds on.
+    pub fn diagonal(&self) -> Vec<f32> {
+        let len = self.m.min(self.n);
+        let mut d = vec![0.0f32; len];
+        for (j, dj) in d.iter_mut().enumerate() {
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                if self.row_idx[k] as usize == j {
+                    *dj += self.val[k];
+                }
+            }
+        }
+        d
+    }
+
     /// Payload bytes.
     pub fn storage_bytes(&self) -> u64 {
         (self.nnz() * 8 + (self.n + 1) * 8) as u64

@@ -105,6 +105,22 @@ impl Csr {
         self.row_ptr[i + 1] - self.row_ptr[i]
     }
 
+    /// Diagonal entries as a dense vector of length `min(m, n)`; duplicate
+    /// `(i, i)` entries accumulate, absent diagonals read 0. One O(nnz)
+    /// pass — the extraction the Jacobi solver's `D⁻¹` step builds on.
+    pub fn diagonal(&self) -> Vec<f32> {
+        let len = self.m.min(self.n);
+        let mut d = vec![0.0f32; len];
+        for (i, di) in d.iter_mut().enumerate() {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                if self.col_idx[k] as usize == i {
+                    *di += self.val[k];
+                }
+            }
+        }
+        d
+    }
+
     /// Payload bytes: val + col_idx + row_ptr (8B entries).
     pub fn storage_bytes(&self) -> u64 {
         (self.nnz() * 8 + (self.m + 1) * 8) as u64

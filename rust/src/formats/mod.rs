@@ -117,6 +117,18 @@ impl Matrix {
         }
     }
 
+    /// Diagonal entries as a dense vector of length `min(rows, cols)` —
+    /// duplicates accumulate, absent diagonals read 0. Dispatches to the
+    /// per-format O(nnz) extraction; the [`crate::solver`] Jacobi kernel
+    /// uses this for its `D⁻¹` sweep without converting formats.
+    pub fn diagonal(&self) -> Vec<f32> {
+        match self {
+            Matrix::Csr(a) => a.diagonal(),
+            Matrix::Csc(a) => a.diagonal(),
+            Matrix::Coo(a) => a.diagonal(),
+        }
+    }
+
     /// Bytes of the payload arrays (val + indices + pointers) — the
     /// quantity the memory-bound cost model and the device memory
     /// accounting use.
@@ -187,6 +199,28 @@ mod tests {
         // idx == nnz (one past the end) clamps into the last row; callers
         // only pass idx < nnz but the clamp keeps the helper total.
         assert_eq!(ptr_search(&ptr, 5), 0);
+    }
+
+    #[test]
+    fn diagonal_consistent_across_formats() {
+        // Fig. 1 diagonal: 10, 9, 8, 7, 9, -1
+        let coo = Coo::paper_example();
+        let want = vec![10.0f32, 9.0, 8.0, 7.0, 9.0, -1.0];
+        assert_eq!(Matrix::Coo(coo.clone()).diagonal(), want);
+        assert_eq!(Matrix::Csr(Csr::from_coo(&coo)).diagonal(), want);
+        assert_eq!(Matrix::Csc(Csc::from_coo(&coo)).diagonal(), want);
+    }
+
+    #[test]
+    fn diagonal_accumulates_duplicates_and_handles_rectangles() {
+        // duplicate (1,1) entries sum; length is min(m, n)
+        let coo = Coo::new(3, 2, vec![1, 1, 0], vec![1, 1, 0], vec![2.0, 3.0, 1.0]).unwrap();
+        assert_eq!(Matrix::Coo(coo.clone()).diagonal(), vec![1.0, 5.0]);
+        assert_eq!(Matrix::Csr(Csr::from_coo(&coo)).diagonal(), vec![1.0, 5.0]);
+        assert_eq!(Matrix::Csc(Csc::from_coo(&coo)).diagonal(), vec![1.0, 5.0]);
+        // empty diagonal
+        let off = Coo::new(2, 2, vec![0, 1], vec![1, 0], vec![4.0, 5.0]).unwrap();
+        assert_eq!(Matrix::Coo(off).diagonal(), vec![0.0, 0.0]);
     }
 
     #[test]

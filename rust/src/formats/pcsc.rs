@@ -104,9 +104,14 @@ impl PCsc {
         ids
     }
 
-    /// Shared-column inference (mirror of pCSR's shared-row rule).
+    /// Shared-column inference (mirror of pCSR's shared-row rule): true iff
+    /// this partition and `next` both own non-zeros of the same column.
+    /// An empty partition owns no columns, so it never shares one — its
+    /// `start_col`/`end_col` only record *where* the empty range sits
+    /// (`next.start_flag` already handles the empty-`next` direction,
+    /// since [`PCsc::from_range`] never flags an empty range).
     pub fn shares_last_col_with(&self, next: &PCsc) -> bool {
-        next.start_flag && next.start_col == self.end_col
+        self.nnz() > 0 && next.start_flag && next.start_col == self.end_col
     }
 
     /// Metadata bytes beyond the borrowed parent arrays.
@@ -228,6 +233,91 @@ mod tests {
     fn merge_rejects_short_partials() {
         let mut y = vec![0.0f32; 4];
         assert!(merge_col_partials(&[vec![0.0; 2]], 0.0, &mut y).is_err());
+    }
+
+    /// A single-column matrix: every balanced partition lands inside the
+    /// same column, forming the longest possible overlap chain.
+    fn one_col_csc(nnz: usize) -> Csc {
+        let rows: Vec<u32> = (0..nnz as u32).collect();
+        let coo = Coo::new(nnz, 1, rows, vec![0; nnz], vec![1.0; nnz]).unwrap();
+        Csc::from_coo(&coo)
+    }
+
+    #[test]
+    fn empty_partition_metadata_is_inert() {
+        let csc = paper_csc();
+        for at in [0, 4, 9, 19] {
+            let p = PCsc::from_range(&csc, at, at).unwrap();
+            assert_eq!(p.nnz(), 0);
+            assert_eq!(p.local_cols(), 0, "empty partition spans no columns");
+            assert_eq!(p.col_ptr, vec![0]);
+            assert!(!p.start_flag, "empty partitions are never flagged");
+            assert!(p.local_col_ids().is_empty());
+            assert!(p.val(&csc).is_empty() && p.row_idx(&csc).is_empty());
+        }
+        // a fully empty matrix partitions into all-empty pCSCs
+        let empty = Csc::from_coo(&Coo::empty(3, 3));
+        let parts = PCsc::partition(&empty, 4).unwrap();
+        assert!(parts.iter().all(|p| p.nnz() == 0 && p.local_cols() == 0));
+    }
+
+    #[test]
+    fn single_column_overlap_chain() {
+        let csc = one_col_csc(8);
+        let parts = PCsc::partition(&csc, 4).unwrap();
+        assert_eq!(parts.iter().map(|p| p.nnz()).collect::<Vec<_>>(), vec![2; 4]);
+        for (k, p) in parts.iter().enumerate() {
+            assert_eq!((p.start_col, p.end_col), (0, 0));
+            assert_eq!(p.local_cols(), 1);
+            assert_eq!(p.col_ptr, vec![0, 2]);
+            assert_eq!(p.start_flag, k > 0, "partition {k}");
+        }
+        // every consecutive pair shares the (single) column
+        for w in parts.windows(2) {
+            assert!(w[0].shares_last_col_with(&w[1]));
+        }
+        // the partials still merge to the exact SpMV
+        let x = vec![2.0f32];
+        let partials: Vec<Vec<f32>> = parts
+            .iter()
+            .map(|p| {
+                let mut py = vec![0.0f32; 8];
+                for (r, v) in p.row_idx(&csc).iter().zip(p.val(&csc)) {
+                    py[*r as usize] += v * x[0];
+                }
+                py
+            })
+            .collect();
+        let mut y = vec![0.0f32; 8];
+        merge_col_partials(&partials, 0.0, &mut y).unwrap();
+        assert_eq!(y, vec![2.0f32; 8]);
+    }
+
+    #[test]
+    fn empty_partition_never_claims_a_shared_column() {
+        // np = 4 over 2 nnz in one column: [0,0) [0,1) [1,1) [1,2) — the
+        // empty third partition sits *inside* column 0, between two
+        // partitions that really do share it.
+        let csc = one_col_csc(2);
+        let parts = PCsc::partition(&csc, 4).unwrap();
+        let loads: Vec<usize> = parts.iter().map(|p| p.nnz()).collect();
+        assert_eq!(loads, vec![0, 1, 0, 1]);
+        // an empty partition neither shares forward...
+        assert!(!parts[2].shares_last_col_with(&parts[3]));
+        // ...nor is shared into (empty `next` is never flagged)
+        assert!(!parts[1].shares_last_col_with(&parts[2]));
+        assert!(!parts[0].shares_last_col_with(&parts[1]));
+    }
+
+    #[test]
+    fn merge_with_no_partials_applies_beta_only() {
+        let mut y = vec![2.0f32; 4];
+        merge_col_partials(&[], 0.5, &mut y).unwrap();
+        assert_eq!(y, vec![1.0f32; 4]);
+        // a partial longer than y is accepted (full-length-or-more rule)
+        let mut y = vec![0.0f32; 2];
+        merge_col_partials(&[vec![1.0; 3]], 0.0, &mut y).unwrap();
+        assert_eq!(y, vec![1.0f32; 2]);
     }
 
     #[test]

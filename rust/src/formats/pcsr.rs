@@ -115,9 +115,10 @@ impl PCsr {
 
     /// True iff this partition's last row is shared with `next` (inferred
     /// from the next partition's `start_flag`, as the paper notes — the
-    /// last row needs no flag of its own).
+    /// last row needs no flag of its own). An empty partition owns no
+    /// rows, so it never shares one (mirror of the pCSC rule).
     pub fn shares_last_row_with(&self, next: &PCsr) -> bool {
-        next.start_flag && next.start_row == self.end_row
+        self.nnz() > 0 && next.start_flag && next.start_row == self.end_row
     }
 
     /// Metadata bytes beyond the (borrowed) parent arrays: the O(1) fields

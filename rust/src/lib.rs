@@ -10,10 +10,11 @@
 //! engine ([`coordinator::Engine`]) with NUMA-aware placement and
 //! format-specific partial-result merging.
 //!
-//! ## Architecture (three layers, python never on the request path)
+//! ## Architecture (python never on the request path)
 //!
 //! ```text
 //!  L4  serve layer        batching / plan cache / scheduling            (rust/src/serve)
+//!  L4  solver layer       CG / Jacobi / power iteration, plan reuse     (rust/src/solver)
 //!  L3  rust coordinator   partitioning / placement / merging / metrics  (this crate)
 //!  L2  JAX graphs         spmv_partial, axpby, reduce_partials          (python/compile, AOT)
 //!  L1  Pallas kernel      tiled gather + segment-reduce SpMV            (python/compile/kernels)
@@ -45,6 +46,13 @@
 //! let report = engine.spmv(&csr.into(), &x, 1.0, 0.0, None).unwrap();
 //! println!("modeled time: {:?}", report.metrics.modeled_total);
 //! ```
+//!
+//! Iterative workloads (CG, Jacobi, PageRank) live in [`solver`] and reuse
+//! one [`coordinator::PartitionPlan`] across every SpMV of a solve; the
+//! worked example in `rust/README.md` and `examples/cg_demo.rs` show the
+//! plan-reuse amortization end to end.
+
+#![warn(missing_docs)]
 
 pub mod coordinator;
 pub mod error;
@@ -53,6 +61,7 @@ pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod solver;
 pub mod spmv;
 pub mod util;
 pub mod workload;

@@ -8,6 +8,7 @@
 //! msrep run       --matrix m.mtx ...       one mSpMV with full breakdown
 //! msrep suite                              Table-2 analog summary
 //! msrep serve-bench ...                    batched multi-tenant serving sim
+//! msrep solver-bench ...                   plan-reusing iterative solvers
 //! ```
 //!
 //! The paper-figure regeneration lives in `cargo bench` /
@@ -48,13 +49,14 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "run" => cmd_run(rest),
         "suite" => cmd_suite(),
         "serve-bench" => cmd_serve_bench(rest),
+        "solver-bench" => cmd_solver_bench(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
         }
         other => Err(Error::Usage(format!(
             "unknown command '{other}' (expected info | gen | profile | partition | run | \
-             suite | serve-bench; try `msrep help`)"
+             suite | serve-bench | solver-bench; try `msrep help`)"
         ))),
     }
 }
@@ -69,7 +71,9 @@ fn print_usage() {
          \x20 partition   partition a matrix and report per-GPU loads\n\
          \x20 run         run one multi-GPU SpMV with a full breakdown\n\
          \x20 suite       list the Table-2 evaluation suite analogs\n\
-         \x20 serve-bench simulate batched multi-tenant SpMV serving (--help for flags)\n"
+         \x20 serve-bench simulate batched multi-tenant SpMV serving (--help for flags)\n\
+         \x20 solver-bench run the plan-reusing iterative solvers (CG, Jacobi, PageRank) \
+         with the amortization report (--help for flags)\n"
     );
 }
 
@@ -467,6 +471,193 @@ fn cmd_serve_bench(argv: Vec<String>) -> Result<()> {
         println!("\nbatched throughput speedup over sequential: {speedup:.2}x");
     }
     Ok(())
+}
+
+fn solver_parser() -> Parser {
+    Parser::new()
+        .flag("platform", "summit | dgx1", Some("dgx1"))
+        .flag("gpus", "GPUs to use", None)
+        .flag("mode", "baseline | pstar | popt", Some("popt"))
+        .flag("format", "csr | csc | coo (CG/Jacobi input format)", Some("csr"))
+        .flag("method", "cg | jacobi | power | pagerank | all", Some("all"))
+        .flag("source", "reused (plan once) | cold (re-partition per iteration)", Some("reused"))
+        .flag("m", "rows = cols of the generated system", Some("10000"))
+        .flag("nnz", "non-zeros of the generated system", Some("200000"))
+        .flag("dominance", "SPD diagonal dominance, > 1 (near 1 = harder)", Some("1.5"))
+        .flag("damping", "PageRank damping factor in [0, 1)", Some("0.85"))
+        .flag("tol", "convergence tolerance", Some("1e-6"))
+        .flag("max-iters", "iteration budget", Some("300"))
+        .flag("seed", "generator seed", Some("42"))
+        .bool_flag("scenarios", "run the workload solver scenario set instead")
+}
+
+/// Dispatch one solver method over a prebuilt system matrix (shared by
+/// the flag path and the `--scenarios` path — one copy of the
+/// manufactured-rhs convention). CG/Jacobi solve `A x = b` with
+/// `b = A·x*` for a seeded `x*`; power iteration runs the transpose
+/// (CSC-plan) dispatch like PageRank.
+fn dispatch_solver(
+    engine: &Engine,
+    method: &str,
+    mat: &Matrix,
+    seed: u64,
+    damping: f32,
+    cfg: &msrep::solver::SolverConfig,
+) -> Result<msrep::solver::SolveReport> {
+    match method {
+        "cg" | "jacobi" => {
+            let x_star = gen::dense_vector(mat.rows(), seed.wrapping_add(1));
+            let mut b = vec![0.0f32; mat.rows()];
+            msrep::spmv::spmv_matrix(mat, &x_star, 1.0, 0.0, &mut b)?;
+            if method == "cg" {
+                msrep::solver::cg(engine, mat, &b, cfg)
+            } else {
+                msrep::solver::jacobi(engine, mat, &b, cfg)
+            }
+        }
+        "pagerank" => msrep::solver::pagerank(engine, mat, damping, cfg),
+        "power" => msrep::solver::power_iteration(engine, mat, true, cfg),
+        other => Err(Error::Usage(format!("unknown method '{other}'"))),
+    }
+}
+
+fn cmd_solver_bench(argv: Vec<String>) -> Result<()> {
+    let p = solver_parser();
+    if argv.iter().any(|a| a == "--help") {
+        println!(
+            "msrep solver-bench — plan-reusing iterative solvers + amortization report\n{}",
+            p.help()
+        );
+        return Ok(());
+    }
+    let a = p.parse(argv)?;
+    let platform = Platform::by_name(&a.str_or("platform", "dgx1"))?;
+    let num_gpus = a.usize_or("gpus", platform.num_gpus)?;
+    let mode = Mode::parse(&a.str_or("mode", "popt"))
+        .ok_or_else(|| Error::Usage("bad --mode".into()))?;
+    let format = FormatKind::parse(&a.str_or("format", "csr"))
+        .ok_or_else(|| Error::Usage("bad --format".into()))?;
+    let source = msrep::solver::PlanSource::parse(&a.str_or("source", "reused"))
+        .ok_or_else(|| Error::Usage("bad --source (expected reused | cold)".into()))?;
+    let dominance = a.f64_or("dominance", 1.5)?;
+    if dominance <= 1.0 {
+        return Err(Error::Usage("--dominance must be > 1 (the SPD certificate is strict)".into()));
+    }
+    let damping = a.f64_or("damping", 0.85)? as f32;
+    let engine = Engine::new(RunConfig {
+        platform,
+        num_gpus,
+        mode,
+        format,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })?;
+    println!(
+        "solver-bench: {} x {} GPUs, mode {}, plan source {}\n",
+        engine.config().platform.name,
+        num_gpus,
+        mode.label(),
+        source.label()
+    );
+
+    let mut summary = Table::new([
+        "method", "system", "iters", "converged", "residual", "spmv/iter", "cold/iter",
+        "amortization",
+    ]);
+    let mut reports: Vec<msrep::solver::SolveReport> = vec![];
+
+    if a.is_set("scenarios") {
+        for s in workload::solver_scenarios() {
+            let cfg = msrep::solver::SolverConfig {
+                tol: s.tol,
+                max_iters: s.max_iters,
+                plan_source: source,
+            };
+            let coo = workload::scenario_matrix(&s);
+            let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+            let rep = dispatch_solver(&engine, s.method, &mat, s.seed, damping, &cfg)?;
+            println!("== {} ==", s.name);
+            print!("{}", msrep::report::render_solver_report(&rep));
+            println!();
+            push_summary(&mut summary, &rep, s.name.to_string());
+            reports.push(rep);
+        }
+    } else {
+        let m = a.usize_or("m", 10_000)?;
+        let nnz = a.usize_or("nnz", 200_000)?;
+        let seed = a.u64_or("seed", 42)?;
+        let cfg = msrep::solver::SolverConfig {
+            tol: a.f64_or("tol", 1e-6)?,
+            max_iters: a.usize_or("max-iters", 300)?,
+            plan_source: source,
+        };
+        let method_flag = a.str_or("method", "all");
+        let methods: Vec<&str> = match method_flag.as_str() {
+            "all" => vec!["cg", "jacobi", "pagerank", "power"],
+            other => vec![other],
+        };
+        // validate up front so the lazy generators below never run for a typo
+        for method in &methods {
+            if !matches!(*method, "cg" | "jacobi" | "pagerank" | "power") {
+                return Err(Error::Usage(format!(
+                    "unknown method '{method}' (expected cg | jacobi | power | pagerank | all)"
+                )));
+            }
+        }
+        // one matrix per family: cg/jacobi share the certified-SPD system,
+        // pagerank/power share the power-law web graph
+        let mut spd_mat: Option<Matrix> = None;
+        let mut graph_mat: Option<Matrix> = None;
+        for method in methods {
+            let mat: &Matrix = match method {
+                "cg" | "jacobi" => spd_mat.get_or_insert_with(|| {
+                    to_format(Matrix::Coo(gen::spd(m, nnz, dominance, seed)), format)
+                }),
+                _ => graph_mat.get_or_insert_with(|| {
+                    Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::power_law(
+                        m, m, nnz, 2.1, seed,
+                    ))))
+                }),
+            };
+            let rep = dispatch_solver(&engine, method, mat, seed, damping, &cfg)?;
+            println!("== {method}: {m} x {m}, ~{nnz} nnz ==");
+            print!("{}", msrep::report::render_solver_report(&rep));
+            println!();
+            push_summary(&mut summary, &rep, format!("{m}x{m}/{nnz}"));
+            reports.push(rep);
+        }
+    }
+
+    print!("{}", summary.render());
+    if let Some(best) = reports
+        .iter()
+        .max_by(|a, b| a.amortization().partial_cmp(&b.amortization()).unwrap())
+    {
+        println!(
+            "\nplan reuse: planned-SpMV iteration cost {} < cold-partition iteration cost {} \
+             (best amortization {:.2}x on {})",
+            format_duration_s(best.planned_iter_cost()),
+            format_duration_s(best.cold_iter_cost()),
+            best.amortization(),
+            best.method,
+        );
+    }
+    Ok(())
+}
+
+/// Append one solve's headline numbers to the cross-method summary table.
+fn push_summary(summary: &mut Table, rep: &msrep::solver::SolveReport, system: String) {
+    summary.row([
+        rep.method.to_string(),
+        system,
+        rep.iterations.to_string(),
+        if rep.converged { "yes" } else { "no" }.to_string(),
+        format!("{:.2e}", rep.final_residual),
+        format_duration_s(rep.planned_iter_cost()),
+        format_duration_s(rep.cold_iter_cost()),
+        format!("{:.2}x", rep.amortization()),
+    ]);
 }
 
 fn cmd_suite() -> Result<()> {

@@ -3,9 +3,11 @@
 
 pub mod figures;
 pub mod serve;
+pub mod solver;
 mod table;
 pub mod timeline;
 
 pub use serve::render_serve_report;
+pub use solver::render_solver_report;
 pub use table::{ascii_bar, format_duration_s, format_pct, Series, Table};
 pub use timeline::{render_loads, render_timeline};

@@ -1,0 +1,168 @@
+//! Report rendering for the solver subsystem: outcome + modeled cost
+//! split + amortized-vs-cold partitioning comparison for one
+//! [`crate::solver::SolveReport`], in the same table + ASCII style as the
+//! paper figures.
+
+use crate::solver::SolveReport;
+
+use super::table::{ascii_bar, format_duration_s, Table};
+
+/// How many trace points the convergence plot samples at most.
+const TRACE_POINTS: usize = 14;
+
+/// Render one iterative solve: outcome table, modeled cost table with the
+/// planned-vs-cold per-iteration comparison and the plan-reuse
+/// amortization factor, and a log-scale ASCII convergence trace.
+pub fn render_solver_report(r: &SolveReport) -> String {
+    let mut out = String::new();
+
+    let mut t = Table::new(["solve", "value"]);
+    t.row(["method".to_string(), r.method.to_string()]);
+    t.row([
+        "matrix".to_string(),
+        format!("{} x {}, {} nnz", r.matrix_m, r.matrix_m, r.matrix_nnz),
+    ]);
+    t.row(["plan source".to_string(), r.plan_source.label().to_string()]);
+    t.row([
+        "converged".to_string(),
+        if r.converged {
+            format!("yes, {} iterations", r.iterations)
+        } else {
+            format!("NO ({} iterations exhausted)", r.iterations)
+        },
+    ]);
+    t.row([
+        "final residual".to_string(),
+        format!("{:.3e} (tol {:.1e})", r.final_residual, r.tol),
+    ]);
+    if let Some(lambda) = r.eigenvalue {
+        t.row(["rayleigh lambda".to_string(), format!("{lambda:.6}")]);
+    }
+    out.push_str(&t.render());
+
+    let mut t = Table::new(["modeled cost", "value"]);
+    t.row([
+        "plan build (one partitioning pass)".to_string(),
+        format_duration_s(r.t_plan),
+    ]);
+    t.row([
+        format!("SpMV total ({} products)", r.spmv_count),
+        format_duration_s(r.modeled_spmv_s),
+    ]);
+    t.row([
+        "per-iteration, planned SpMV".to_string(),
+        format_duration_s(r.planned_iter_cost()),
+    ]);
+    t.row([
+        "per-iteration, cold re-partition".to_string(),
+        format_duration_s(r.cold_iter_cost()),
+    ]);
+    t.row([
+        "solve total, plan reused".to_string(),
+        format_duration_s(r.planned_total()),
+    ]);
+    t.row([
+        "solve total, cold re-partition".to_string(),
+        format_duration_s(r.cold_total()),
+    ]);
+    t.row([
+        "charged this run".to_string(),
+        format!("{} ({})", format_duration_s(r.modeled_total_s), r.plan_source.label()),
+    ]);
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "plan-reuse amortization: {:.2}x over {} SpMVs (one partitioning pass \
+         instead of {})\n",
+        r.amortization(),
+        r.spmv_count,
+        r.spmv_count,
+    ));
+
+    if !r.trace.is_empty() {
+        out.push_str("convergence (log-scale residual, bar = distance still to cover):\n");
+        // log range over the sampled window; zero residuals clamp
+        let clamp = |x: f64| x.max(1e-300);
+        let lo = r.trace.iter().map(|s| clamp(s.residual)).fold(f64::INFINITY, f64::min);
+        let hi = r.trace.iter().map(|s| clamp(s.residual)).fold(0.0f64, f64::max);
+        let span = (hi.log10() - lo.log10()).max(1e-9);
+        let step = r.trace.len().div_ceil(TRACE_POINTS).max(1);
+        for (k, s) in r.trace.iter().enumerate() {
+            if k % step != 0 && k + 1 != r.trace.len() {
+                continue;
+            }
+            let frac = (clamp(s.residual).log10() - lo.log10()) / span;
+            out.push_str(&format!(
+                "  iter {:>5} |{}| {:.3e}\n",
+                s.iter,
+                ascii_bar(frac, 30),
+                s.residual
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{IterationStat, PlanSource};
+
+    fn report() -> SolveReport {
+        SolveReport {
+            method: "cg",
+            plan_source: PlanSource::Reused,
+            converged: true,
+            iterations: 3,
+            spmv_count: 3,
+            final_residual: 5e-7,
+            tol: 1e-6,
+            x: vec![1.0; 4],
+            eigenvalue: None,
+            trace: vec![
+                IterationStat { iter: 1, residual: 1e-1, modeled_spmv_s: 1e-5 },
+                IterationStat { iter: 2, residual: 1e-4, modeled_spmv_s: 1e-5 },
+                IterationStat { iter: 3, residual: 5e-7, modeled_spmv_s: 1e-5 },
+            ],
+            t_plan: 2e-5,
+            modeled_spmv_s: 3e-5,
+            modeled_total_s: 5e-5,
+            matrix_m: 100,
+            matrix_nnz: 1_000,
+        }
+    }
+
+    #[test]
+    fn render_contains_outcome_costs_and_amortization() {
+        let s = render_solver_report(&report());
+        assert!(s.contains("method"));
+        assert!(s.contains("yes, 3 iterations"));
+        assert!(s.contains("plan build"));
+        assert!(s.contains("per-iteration, planned SpMV"));
+        assert!(s.contains("per-iteration, cold re-partition"));
+        assert!(s.contains("plan-reuse amortization"));
+        assert!(s.contains("convergence"));
+        // all three trace points fit under the sampling cap
+        assert!(s.contains("iter     1") && s.contains("iter     3"));
+    }
+
+    #[test]
+    fn render_reports_non_convergence_and_eigenvalue() {
+        let mut r = report();
+        r.converged = false;
+        r.eigenvalue = Some(4.618034);
+        let s = render_solver_report(&r);
+        assert!(s.contains("NO (3 iterations exhausted)"));
+        assert!(s.contains("rayleigh lambda"));
+        assert!(s.contains("4.618034"));
+    }
+
+    #[test]
+    fn render_survives_empty_trace() {
+        let mut r = report();
+        r.trace.clear();
+        r.spmv_count = 0;
+        let s = render_solver_report(&r);
+        assert!(!s.contains("convergence ("));
+        assert!(s.contains("amortization"));
+    }
+}

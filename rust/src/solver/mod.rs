@@ -1,0 +1,384 @@
+//! Plan-reusing iterative solvers on the partitioned multi-GPU engine.
+//!
+//! The paper argues its partial formats "can be easily extended to support
+//! other sparse linear algebra kernels" (§7), and iterative solvers are
+//! the workload where the reusable [`PartitionPlan`] pays off most: **one
+//! partitioning pass amortized over hundreds of SpMVs** against the same
+//! matrix. Every kernel here runs its matrix–vector products through
+//! [`Engine::spmv_with_plan`] (plan built once, [`PlanSource::Reused`]) or
+//! through the paper's one-shot [`Engine::spmv`] ([`PlanSource::Cold`],
+//! which re-partitions per call — Fig. 16's overhead, paid every
+//! iteration), so the amortization claim is measurable, not asserted.
+//!
+//! Three kernels, each a distinct dispatch shape through the coordinator:
+//!
+//! * [`cg`] — Conjugate Gradient for symmetric positive-definite systems
+//!   (row-based pCSR dispatch; the sparse-eigensolver/PDE workload class
+//!   the paper's introduction cites);
+//! * [`jacobi`] — damped-free Jacobi for diagonally dominant systems,
+//!   built on the new diagonal-extraction path
+//!   ([`Matrix::diagonal`](crate::formats::Matrix::diagonal));
+//! * [`power_iteration`] / [`pagerank`] — dominant-eigenpair and PageRank
+//!   power iteration; the transpose variant replays a CSC plan over the
+//!   [`convert::transpose`](crate::formats::convert::transpose)
+//!   reinterpretation (the
+//!   [`Engine::plan_transpose`](crate::coordinator::Engine::plan_transpose)
+//!   dispatch path — column-based merge every step).
+//!
+//! Every solve returns a [`SolveReport`] carrying the per-iteration
+//! convergence trace and the modeled cost split (`t_plan` vs SpMV time),
+//! from which the amortized-vs-cold comparison is derived
+//! ([`SolveReport::amortization`]); `report::solver`
+//! ([`crate::report::render_solver_report`]) renders it. See DESIGN.md §9.
+
+mod cg;
+mod jacobi;
+mod power;
+
+pub use cg::cg;
+pub use jacobi::jacobi;
+pub use power::{pagerank, power_iteration};
+
+use crate::coordinator::{Engine, PartitionPlan};
+use crate::error::{Error, Result};
+use crate::formats::Matrix;
+
+/// How each iteration's SpMV obtains its partitioning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanSource {
+    /// Build one [`PartitionPlan`] up front and replay it every iteration
+    /// (partitioning charged once — the plan-cache shape of DESIGN.md §7).
+    Reused,
+    /// Re-partition on every SpMV like the paper's one-shot engine calls
+    /// (partitioning charged per iteration — the Fig. 16 overhead shape).
+    Cold,
+}
+
+impl PlanSource {
+    /// Label used in reports and the CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            PlanSource::Reused => "reused",
+            PlanSource::Cold => "cold",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<PlanSource> {
+        match s.to_ascii_lowercase().as_str() {
+            "reused" | "plan" | "planned" => Some(PlanSource::Reused),
+            "cold" | "fresh" => Some(PlanSource::Cold),
+            _ => None,
+        }
+    }
+}
+
+/// Shared configuration of all iterative kernels.
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    /// Convergence tolerance on the kernel's residual (relative 2-norm for
+    /// [`cg`]/[`jacobi`], Rayleigh residual for [`power_iteration`], L1
+    /// rank delta for [`pagerank`]). Must be finite and > 0.
+    pub tol: f64,
+    /// Iteration budget (>= 1); non-convergence within it is reported, not
+    /// an error.
+    pub max_iters: usize,
+    /// Where each iteration's partitioning comes from.
+    pub plan_source: PlanSource,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig { tol: 1e-6, max_iters: 500, plan_source: PlanSource::Reused }
+    }
+}
+
+/// One point of the convergence trace.
+#[derive(Debug, Clone)]
+pub struct IterationStat {
+    /// 1-based iteration number
+    pub iter: usize,
+    /// the kernel's residual after this iteration
+    pub residual: f64,
+    /// modeled engine time of this iteration's SpMV (no partitioning)
+    pub modeled_spmv_s: f64,
+}
+
+/// Result of one iterative solve: solution, convergence trace, and the
+/// modeled cost split the amortization report is derived from.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    /// kernel name: `"cg"`, `"jacobi"`, `"power"` (`"power-t"` for the
+    /// transpose dispatch) or `"pagerank"`
+    pub method: &'static str,
+    /// plan source the solve ran under
+    pub plan_source: PlanSource,
+    /// true iff the residual reached `tol` within `max_iters`
+    pub converged: bool,
+    /// iterations executed (== `trace.len()`)
+    pub iterations: usize,
+    /// engine SpMVs executed (one per iteration for all current kernels)
+    pub spmv_count: usize,
+    /// residual at exit (see [`SolverConfig::tol`] for the per-kernel norm)
+    pub final_residual: f64,
+    /// the tolerance the solve ran against
+    pub tol: f64,
+    /// solution vector (`x` for cg/jacobi, the dominant eigenvector for
+    /// power iteration, the rank vector for pagerank)
+    pub x: Vec<f32>,
+    /// Rayleigh estimate of the dominant eigenvalue (power iteration only)
+    pub eigenvalue: Option<f64>,
+    /// per-iteration convergence trace, in iteration order
+    pub trace: Vec<IterationStat>,
+    /// modeled cost of one partitioning pass (the plan build)
+    pub t_plan: f64,
+    /// total modeled SpMV time across all iterations (no partitioning)
+    pub modeled_spmv_s: f64,
+    /// total modeled time actually charged under `plan_source`
+    /// (`t_plan + modeled_spmv_s` reused; per-iteration plan charges cold)
+    pub modeled_total_s: f64,
+    /// rows of the dispatched (possibly transposed) matrix
+    pub matrix_m: usize,
+    /// non-zeros of the dispatched matrix
+    pub matrix_nnz: u64,
+}
+
+impl SolveReport {
+    /// Modeled SpMV cost per iteration with a reused plan (no
+    /// partitioning) — the *planned* iteration cost.
+    pub fn planned_iter_cost(&self) -> f64 {
+        self.modeled_spmv_s / self.spmv_count.max(1) as f64
+    }
+
+    /// Modeled per-iteration cost when every SpMV re-partitions (the
+    /// paper's one-shot call shape): SpMV plus one plan build.
+    pub fn cold_iter_cost(&self) -> f64 {
+        self.planned_iter_cost() + self.t_plan
+    }
+
+    /// Total modeled time of the whole solve with one up-front plan.
+    pub fn planned_total(&self) -> f64 {
+        self.t_plan + self.modeled_spmv_s
+    }
+
+    /// Total modeled time of the whole solve re-partitioning per iteration.
+    pub fn cold_total(&self) -> f64 {
+        self.modeled_spmv_s + self.t_plan * self.spmv_count as f64
+    }
+
+    /// Plan-reuse amortization factor: cold total over planned total
+    /// (>= 1; grows with iteration count as the single plan build is
+    /// spread across more SpMVs). A solve that needed no SpMV at all
+    /// (zero right-hand side) amortizes nothing and reports 1.
+    pub fn amortization(&self) -> f64 {
+        let planned = self.planned_total();
+        if self.spmv_count == 0 || planned <= 0.0 {
+            return 1.0;
+        }
+        self.cold_total() / planned
+    }
+}
+
+/// f64-accumulated dot product of f32 vectors (the engine's partials are
+/// f32; accumulating the scalars in f64 keeps CG/Jacobi stable to 1e-6).
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+/// f64-accumulated 2-norm.
+fn norm2(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Reject bad tolerances / iteration budgets before touching the engine.
+fn check_config(cfg: &SolverConfig) -> Result<()> {
+    if !cfg.tol.is_finite() || cfg.tol <= 0.0 {
+        return Err(Error::Solver(format!(
+            "tolerance must be finite and > 0, got {}",
+            cfg.tol
+        )));
+    }
+    if cfg.max_iters == 0 {
+        return Err(Error::Solver("max_iters must be >= 1".into()));
+    }
+    Ok(())
+}
+
+/// Reject non-square systems and mismatched right-hand sides.
+fn check_square_system(a: &Matrix, b: Option<&[f32]>) -> Result<()> {
+    if a.rows() == 0 || a.cols() == 0 {
+        return Err(Error::Solver("empty matrix".into()));
+    }
+    if a.rows() != a.cols() {
+        return Err(Error::Solver(format!(
+            "iterative kernels need a square matrix, got {}x{}",
+            a.rows(),
+            a.cols()
+        )));
+    }
+    if let Some(b) = b {
+        if b.len() != a.rows() {
+            return Err(Error::Solver(format!(
+                "right-hand side length {} != n {}",
+                b.len(),
+                a.rows()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The kernels' SpMV step: owns the plan-source dispatch and the modeled
+/// cost bookkeeping, so each kernel is just its recurrence.
+struct PlannedSpmv<'a> {
+    engine: &'a Engine,
+    matrix: &'a Matrix,
+    /// `Some` iff the source is [`PlanSource::Reused`]
+    plan: Option<PartitionPlan>,
+    source: PlanSource,
+    /// modeled cost of one plan build (probed up front for both sources)
+    t_plan: f64,
+    /// accumulated modeled SpMV time, partitioning excluded
+    spmv_modeled: f64,
+    /// modeled SpMV time of the most recent `apply`
+    last_spmv_s: f64,
+    /// SpMVs executed
+    count: usize,
+}
+
+impl<'a> PlannedSpmv<'a> {
+    fn new(engine: &'a Engine, matrix: &'a Matrix, source: PlanSource) -> Result<Self> {
+        // built even for Cold: t_plan anchors the amortization report
+        let plan = engine.plan(matrix)?;
+        let t_plan = plan.t_partition;
+        Ok(PlannedSpmv {
+            engine,
+            matrix,
+            plan: match source {
+                PlanSource::Reused => Some(plan),
+                PlanSource::Cold => None,
+            },
+            source,
+            t_plan,
+            spmv_modeled: 0.0,
+            last_spmv_s: 0.0,
+            count: 0,
+        })
+    }
+
+    /// `y = alpha*A*x + beta*y0` through the configured plan source.
+    fn apply(&mut self, x: &[f32], alpha: f32, beta: f32, y0: Option<&[f32]>) -> Result<Vec<f32>> {
+        let rep = match &self.plan {
+            Some(plan) => self.engine.spmv_with_plan(plan, x, alpha, beta, y0)?,
+            None => self.engine.spmv(self.matrix, x, alpha, beta, y0)?,
+        };
+        // SpMV-only share: the with-plan path charges no partitioning, the
+        // cold path's per-call charge is subtracted back out here and
+        // re-attributed by charged_total()
+        self.last_spmv_s = rep.metrics.modeled_total - rep.metrics.t_partition;
+        self.spmv_modeled += self.last_spmv_s;
+        self.count += 1;
+        Ok(rep.y)
+    }
+
+    /// Total modeled time actually charged under the chosen source.
+    fn charged_total(&self) -> f64 {
+        match self.source {
+            PlanSource::Reused => self.t_plan + self.spmv_modeled,
+            PlanSource::Cold => self.spmv_modeled + self.t_plan * self.count as f64,
+        }
+    }
+
+    /// Assemble the final report (consumes the bookkeeping).
+    fn finish(
+        self,
+        method: &'static str,
+        cfg: &SolverConfig,
+        converged: bool,
+        final_residual: f64,
+        x: Vec<f32>,
+        eigenvalue: Option<f64>,
+        trace: Vec<IterationStat>,
+    ) -> SolveReport {
+        SolveReport {
+            method,
+            plan_source: self.source,
+            converged,
+            iterations: trace.len(),
+            spmv_count: self.count,
+            final_residual,
+            tol: cfg.tol,
+            x,
+            eigenvalue,
+            trace,
+            t_plan: self.t_plan,
+            modeled_spmv_s: self.spmv_modeled,
+            modeled_total_s: self.charged_total(),
+            matrix_m: self.matrix.rows(),
+            matrix_nnz: self.matrix.nnz() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        let bad_tol = SolverConfig { tol: 0.0, ..Default::default() };
+        assert!(check_config(&bad_tol).is_err());
+        let nan_tol = SolverConfig { tol: f64::NAN, ..Default::default() };
+        assert!(check_config(&nan_tol).is_err());
+        let no_iters = SolverConfig { max_iters: 0, ..Default::default() };
+        assert!(check_config(&no_iters).is_err());
+        assert!(check_config(&SolverConfig::default()).is_ok());
+    }
+
+    #[test]
+    fn square_system_validation() {
+        use crate::formats::gen;
+        let rect = Matrix::Coo(gen::uniform(3, 4, 5, 1));
+        assert!(check_square_system(&rect, None).is_err());
+        let sq = Matrix::Coo(gen::uniform(4, 4, 5, 1));
+        assert!(check_square_system(&sq, Some(&[0.0; 3])).is_err());
+        assert!(check_square_system(&sq, Some(&[0.0; 4])).is_ok());
+        assert!(check_square_system(&sq, None).is_ok());
+    }
+
+    #[test]
+    fn plan_source_labels_and_parse() {
+        assert_eq!(PlanSource::parse("reused"), Some(PlanSource::Reused));
+        assert_eq!(PlanSource::parse("COLD"), Some(PlanSource::Cold));
+        assert_eq!(PlanSource::parse("nope"), None);
+        assert_eq!(PlanSource::Reused.label(), "reused");
+        assert_eq!(PlanSource::Cold.label(), "cold");
+    }
+
+    #[test]
+    fn report_amortization_math() {
+        let r = SolveReport {
+            method: "cg",
+            plan_source: PlanSource::Reused,
+            converged: true,
+            iterations: 10,
+            spmv_count: 10,
+            final_residual: 1e-7,
+            tol: 1e-6,
+            x: vec![],
+            eigenvalue: None,
+            trace: vec![],
+            t_plan: 2.0,
+            modeled_spmv_s: 10.0,
+            modeled_total_s: 12.0,
+            matrix_m: 100,
+            matrix_nnz: 1_000,
+        };
+        assert!((r.planned_iter_cost() - 1.0).abs() < 1e-12);
+        assert!((r.cold_iter_cost() - 3.0).abs() < 1e-12);
+        assert!((r.planned_total() - 12.0).abs() < 1e-12);
+        assert!((r.cold_total() - 30.0).abs() < 1e-12);
+        assert!((r.amortization() - 2.5).abs() < 1e-12);
+        assert!(r.planned_iter_cost() < r.cold_iter_cost());
+    }
+}

@@ -1,0 +1,275 @@
+//! Power iteration — dominant eigenpairs and PageRank, the graph-mining
+//! workload the paper's SpMV framing targets (Yang et al.'s PageRank loop
+//! *is* power iteration).
+//!
+//! The transpose variant is the new coordinator dispatch shape this
+//! subsystem introduces: PageRank iterates `r' = d·Pᵀr + (1−d)/N` over a
+//! row-normalized link matrix, and
+//! [`Engine::plan_transpose`](crate::coordinator::Engine::plan_transpose)
+//! partitions `Pᵀ` as a free storage reinterpretation (CSR(P) is
+//! CSC(Pᵀ)), so every iteration replays a pCSC plan through the
+//! column-based merge — no transpose materialization, no re-sort, one
+//! partitioning pass for the whole solve.
+
+use crate::coordinator::Engine;
+use crate::error::{Error, Result};
+use crate::formats::{convert, gen, Coo, Csr, Matrix};
+
+use super::{
+    check_config, check_square_system, dot, norm2, IterationStat, PlannedSpmv, SolveReport,
+    SolverConfig,
+};
+
+/// Dominant eigenpair of a square `A` (or of `Aᵀ` when `transpose`) by
+/// power iteration with Rayleigh-quotient estimates.
+///
+/// Starts from a fixed seeded random unit vector (deterministic replays).
+/// Per iteration: `y = Op·x`, `λ = xᵀy` (the Rayleigh quotient — `x` is
+/// kept unit-length), residual `= ||y − λx|| / |λ|`; converged when the
+/// residual reaches `cfg.tol`, at which point [`SolveReport::x`] holds the
+/// unit eigenvector estimate and [`SolveReport::eigenvalue`] the Rayleigh
+/// `λ`. The transpose variant dispatches through the coordinator's CSC
+/// plan path (see the module docs). Convergence requires a dominant
+/// eigenvalue gap; without one the iteration honestly reports
+/// `converged: false` after `max_iters`.
+pub fn power_iteration(
+    engine: &Engine,
+    a: &Matrix,
+    transpose: bool,
+    cfg: &SolverConfig,
+) -> Result<SolveReport> {
+    check_config(cfg)?;
+    check_square_system(a, None)?;
+    let storage;
+    let dispatch: &Matrix = if transpose {
+        storage = convert::transpose(a);
+        &storage
+    } else {
+        a
+    };
+    let n = dispatch.rows();
+    // `dispatch` already is the transpose reinterpretation, so planning it
+    // directly is the `Engine::plan_transpose` CSC path without paying a
+    // second O(nnz) transpose copy
+    let mut spmv = PlannedSpmv::new(engine, dispatch, cfg.plan_source)?;
+    let method: &'static str = if transpose { "power-t" } else { "power" };
+
+    // deterministic start vector; the fixed seed makes solves replayable
+    let mut x = gen::dense_vector(n, 0x5EED);
+    let nx = norm2(&x);
+    if nx == 0.0 {
+        x[0] = 1.0;
+    } else {
+        let inv = (1.0 / nx) as f32;
+        x.iter_mut().for_each(|v| *v *= inv);
+    }
+
+    let mut lambda = 0.0f64;
+    let mut residual = f64::INFINITY;
+    let mut trace = Vec::new();
+    let mut converged = false;
+
+    for it in 1..=cfg.max_iters {
+        let y = spmv.apply(&x, 1.0, 0.0, None)?;
+        lambda = dot(&x, &y);
+        let rnorm: f64 = y
+            .iter()
+            .zip(&x)
+            .map(|(yi, xi)| {
+                let d = *yi as f64 - lambda * *xi as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt();
+        residual = rnorm / lambda.abs().max(f64::MIN_POSITIVE);
+        trace.push(IterationStat { iter: it, residual, modeled_spmv_s: spmv.last_spmv_s });
+        if residual <= cfg.tol {
+            // x (still unit) and lambda form a consistent eigenpair
+            converged = true;
+            break;
+        }
+        let yn = norm2(&y);
+        if yn == 0.0 {
+            return Err(Error::Solver(
+                "iterate collapsed to zero (start vector lies in the null space)".into(),
+            ));
+        }
+        let inv = (1.0 / yn) as f32;
+        x = y;
+        x.iter_mut().for_each(|v| *v *= inv);
+    }
+
+    Ok(spmv.finish(method, cfg, converged, residual, x, Some(lambda), trace))
+}
+
+/// PageRank over a row-oriented link matrix (an edge `i → j` is a non-zero
+/// at `links[i][j]`; weights are taken by absolute value), iterated as
+/// `r' = d·Pᵀr + (1−d)/N` through the CSC transpose-plan dispatch.
+///
+/// `P = D⁻¹|links|` is the row-stochastic transition matrix; rows with no
+/// out-edges (dangling nodes) redistribute their rank mass uniformly each
+/// step, so total mass stays 1. The residual is the L1 rank delta
+/// `||r' − r||₁`; converged when it reaches `cfg.tol` (the damping factor
+/// `d` contracts the iteration, so convergence is guaranteed). `damping`
+/// must lie in `[0, 1)`.
+pub fn pagerank(
+    engine: &Engine,
+    links: &Matrix,
+    damping: f32,
+    cfg: &SolverConfig,
+) -> Result<SolveReport> {
+    check_config(cfg)?;
+    check_square_system(links, None)?;
+    if !(0.0..1.0).contains(&damping) {
+        return Err(Error::Solver(format!(
+            "damping must be in [0, 1), got {damping}"
+        )));
+    }
+    let n = links.rows();
+
+    // row-stochastic normalization on |weights|, one O(nnz) pass
+    let coo = convert::to_coo(links);
+    let mut rowsum = vec![0.0f64; n];
+    for k in 0..coo.nnz() {
+        rowsum[coo.row_idx[k] as usize] += coo.val[k].abs() as f64;
+    }
+    let val: Vec<f32> = (0..coo.nnz())
+        .map(|k| {
+            let rs = rowsum[coo.row_idx[k] as usize];
+            if rs > 0.0 {
+                (coo.val[k].abs() as f64 / rs) as f32
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let dangling: Vec<usize> = (0..n).filter(|&i| rowsum[i] == 0.0).collect();
+    let norm = Coo::new(n, n, coo.row_idx.clone(), coo.col_idx.clone(), val)
+        .expect("normalization preserves the index structure");
+    // CSR(P) reinterpreted as CSC(Pᵀ): the `Engine::plan_transpose` pCSC
+    // dispatch path, with the reinterpretation done once up front
+    let p_t = convert::transpose(&Matrix::Csr(Csr::from_coo(&norm)));
+    let mut spmv = PlannedSpmv::new(engine, &p_t, cfg.plan_source)?;
+
+    let teleport = vec![(1.0 - damping) / n as f32; n];
+    let mut r = vec![1.0 / n as f32; n];
+    let mut residual = f64::INFINITY;
+    let mut trace = Vec::new();
+    let mut converged = false;
+
+    for it in 1..=cfg.max_iters {
+        // r' = d·Pᵀr + teleport  (alpha = damping, beta = 1, y0 = teleport)
+        let mut y = spmv.apply(&r, damping, 1.0, Some(&teleport))?;
+        let dangling_mass: f64 = dangling.iter().map(|&i| r[i] as f64).sum();
+        let add = (damping as f64 * dangling_mass / n as f64) as f32;
+        if add != 0.0 {
+            y.iter_mut().for_each(|v| *v += add);
+        }
+        residual = y.iter().zip(&r).map(|(a, b)| (*a - *b).abs() as f64).sum();
+        r = y;
+        trace.push(IterationStat { iter: it, residual, modeled_spmv_s: spmv.last_spmv_s });
+        if residual <= cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    Ok(spmv.finish("pagerank", cfg, converged, residual, r, None, trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Mode, RunConfig};
+    use crate::formats::FormatKind;
+    use crate::sim::Platform;
+
+    fn engine(np: usize) -> Engine {
+        Engine::new(RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: np,
+            mode: Mode::PStarOpt,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: None,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn recovers_known_dominant_eigenvalue() {
+        // [[4,1],[1,3]]: eigenvalues (7 ± √5)/2, dominant ~4.618034
+        let coo = Coo::new(2, 2, vec![0, 0, 1, 1], vec![0, 1, 0, 1], vec![4.0, 1.0, 1.0, 3.0])
+            .unwrap();
+        let a = Matrix::Csr(Csr::from_coo(&coo));
+        let cfg = SolverConfig { tol: 1e-6, max_iters: 200, ..Default::default() };
+        let rep = power_iteration(&engine(1), &a, false, &cfg).unwrap();
+        assert!(rep.converged, "residual {}", rep.final_residual);
+        let lambda = rep.eigenvalue.unwrap();
+        assert!((lambda - 4.618034).abs() < 1e-3, "lambda {lambda}");
+        // unit eigenvector
+        let norm: f64 = rep.x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn transpose_dispatch_finds_the_same_spectrum() {
+        // A and Aᵀ share eigenvalues; the transpose path must agree. A
+        // nonnegative matrix keeps the dominant eigenvalue real (Perron).
+        let coo = Coo::new(
+            3,
+            3,
+            vec![0, 0, 1, 1, 2, 2],
+            vec![0, 1, 1, 2, 0, 2],
+            vec![5.0, 1.0, 4.0, 1.0, 2.0, 3.0],
+        )
+        .unwrap();
+        let a = Matrix::Csr(Csr::from_coo(&coo));
+        let cfg = SolverConfig { tol: 1e-6, max_iters: 500, ..Default::default() };
+        let plain = power_iteration(&engine(2), &a, false, &cfg).unwrap();
+        let transposed = power_iteration(&engine(2), &a, true, &cfg).unwrap();
+        assert!(plain.converged && transposed.converged);
+        assert_eq!(transposed.method, "power-t");
+        let (l1, l2) = (plain.eigenvalue.unwrap(), transposed.eigenvalue.unwrap());
+        assert!((l1 - l2).abs() < 1e-3 * l1.abs().max(1.0), "{l1} vs {l2}");
+    }
+
+    #[test]
+    fn pagerank_conserves_mass_and_converges() {
+        let links = Matrix::Coo(gen::power_law(2_000, 2_000, 24_000, 2.1, 77));
+        let cfg = SolverConfig { tol: 1e-6, max_iters: 200, ..Default::default() };
+        let rep = pagerank(&engine(4), &links, 0.85, &cfg).unwrap();
+        assert!(rep.converged, "delta {}", rep.final_residual);
+        let mass: f64 = rep.x.iter().map(|&v| v as f64).sum();
+        assert!((mass - 1.0).abs() < 1e-3, "rank mass {mass}");
+        assert!(rep.x.iter().all(|&v| v > 0.0), "ranks must be positive");
+        // damping contracts at 0.85 per step: well under the budget
+        assert!(rep.iterations < 150, "iterations {}", rep.iterations);
+    }
+
+    #[test]
+    fn pagerank_uniform_on_a_cycle() {
+        // a directed 4-cycle is rank-uniform by symmetry
+        let coo = Coo::new(4, 4, vec![0, 1, 2, 3], vec![1, 2, 3, 0], vec![1.0; 4]).unwrap();
+        let rep = pagerank(
+            &engine(1),
+            &Matrix::Coo(coo),
+            0.85,
+            &SolverConfig { tol: 1e-9, max_iters: 500, ..Default::default() },
+        )
+        .unwrap();
+        assert!(rep.converged);
+        for &v in &rep.x {
+            assert!((v - 0.25).abs() < 1e-4, "rank {v}");
+        }
+    }
+
+    #[test]
+    fn pagerank_rejects_bad_damping() {
+        let links = Matrix::Coo(gen::uniform(10, 10, 30, 3));
+        let cfg = SolverConfig::default();
+        assert!(pagerank(&engine(1), &links, 1.0, &cfg).is_err());
+        assert!(pagerank(&engine(1), &links, -0.1, &cfg).is_err());
+    }
+}

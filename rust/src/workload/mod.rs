@@ -1,6 +1,10 @@
 //! Evaluation workloads: the Table-2 matrix suite (scaled synthetic
-//! analogs) and the Fig. 6 imbalance sweep inputs.
+//! analogs), the Fig. 6 imbalance sweep inputs, and the solver scenario
+//! set (`msrep solver-bench --scenarios`).
 
 mod suite;
 
-pub use suite::{by_name, fig6_ratios, suite, suite_matrix, SuiteEntry};
+pub use suite::{
+    by_name, fig6_ratios, scenario_matrix, solver_scenario_by_name, solver_scenarios, suite,
+    suite_matrix, SolverScenario, SuiteEntry,
+};

@@ -27,6 +27,48 @@ fn no_args_prints_usage() {
     let s = stdout(&o);
     assert!(s.contains("commands:"));
     assert!(s.contains("serve-bench"), "usage must list serve-bench");
+    assert!(s.contains("solver-bench"), "usage must list solver-bench");
+}
+
+#[test]
+fn solver_bench_reports_amortization() {
+    let o = msrep(&[
+        "solver-bench",
+        "--method",
+        "cg",
+        "--m",
+        "2000",
+        "--nnz",
+        "30000",
+        "--max-iters",
+        "100",
+    ]);
+    assert!(
+        o.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&o.stderr)
+    );
+    let s = stdout(&o);
+    assert!(s.contains("per-iteration, planned SpMV"), "missing planned cost:\n{s}");
+    assert!(s.contains("per-iteration, cold re-partition"), "missing cold cost:\n{s}");
+    assert!(s.contains("plan-reuse amortization"), "missing amortization:\n{s}");
+    assert!(
+        s.contains("plan reuse: planned-SpMV iteration cost"),
+        "missing summary line:\n{s}"
+    );
+    assert!(s.contains("yes"), "CG must converge in the summary:\n{s}");
+}
+
+#[test]
+fn solver_bench_help_and_bad_flags() {
+    let o = msrep(&["solver-bench", "--help"]);
+    assert!(o.status.success());
+    let s = stdout(&o);
+    assert!(s.contains("--dominance") && s.contains("--source"));
+    let o = msrep(&["solver-bench", "--method", "frobnicate"]);
+    assert!(!o.status.success());
+    let o = msrep(&["solver-bench", "--dominance", "0.5"]);
+    assert!(!o.status.success());
 }
 
 #[test]

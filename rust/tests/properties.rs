@@ -10,6 +10,8 @@
 //!  * partition → execute → merge reproduces the exact SpMV for every
 //!    format × strategy × np (routing/batching/state correctness)
 //!  * pCSR merge metadata is self-sufficient (merge back to the original CSR)
+//!  * CG on generated SPD systems converges to the dense reference
+//!    solution in every partitioned format (solver-over-plan correctness)
 
 use msrep::coordinator::partitioner::{balanced, baseline};
 use msrep::coordinator::{merge, Engine, Mode, RunConfig};
@@ -218,6 +220,90 @@ fn prop_merge_row_partials_linear_in_beta() {
         for i in 0..csr.rows() {
             let want = y_b0[i] + 2.0 * y0[i];
             assert!((y_b2[i] - want).abs() < 1e-4 * (1.0 + want.abs()));
+        }
+    });
+}
+
+/// Dense Gaussian elimination with partial pivoting in f64 — the exact
+/// reference the CG property compares against.
+fn dense_solve(a: &[Vec<f32>], b: &[f32]) -> Vec<f64> {
+    let n = b.len();
+    let mut m: Vec<Vec<f64>> =
+        a.iter().map(|row| row.iter().map(|&v| v as f64).collect()).collect();
+    let mut rhs: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+    for col in 0..n {
+        let piv = (col..n)
+            .max_by(|&i, &j| m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap())
+            .unwrap();
+        m.swap(col, piv);
+        rhs.swap(col, piv);
+        let pivot_row = m[col].clone();
+        let pivot_rhs = rhs[col];
+        let d = pivot_row[col];
+        for row in col + 1..n {
+            let f = m[row][col] / d;
+            if f != 0.0 {
+                for (mk, pk) in m[row].iter_mut().zip(&pivot_row).skip(col) {
+                    *mk -= f * pk;
+                }
+                rhs[row] -= f * pivot_rhs;
+            }
+        }
+    }
+    let mut x = vec![0.0f64; n];
+    for row in (0..n).rev() {
+        let mut s = rhs[row];
+        for (k, xk) in x.iter().enumerate().skip(row + 1) {
+            s -= m[row][k] * xk;
+        }
+        x[row] = s / m[row][row];
+    }
+    x
+}
+
+#[test]
+fn prop_cg_matches_dense_solution_across_formats() {
+    check("cg == dense solve, all formats", 12, |g| {
+        let n = g.usize_in(2..20 + g.size());
+        let coo = gen::spd(n, n * (2 + g.usize_in(0..4)), 2.0, g.rng().next_u64());
+        let dense = coo.to_dense();
+        let x_star = g.vec_f32(n);
+        // rhs rounded to f32 so CG and the reference solve the same system
+        let b: Vec<f32> = dense
+            .iter()
+            .map(|row| {
+                row.iter().zip(&x_star).map(|(a, x)| *a as f64 * *x as f64).sum::<f64>() as f32
+            })
+            .collect();
+        let x_ref = dense_solve(&dense, &b);
+        let np = g.usize_in(1..9);
+        let cfg = msrep::solver::SolverConfig { tol: 1e-7, max_iters: 400, ..Default::default() };
+        for format in FormatKind::ALL {
+            let mat = match format {
+                FormatKind::Csr => Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
+                FormatKind::Csc => Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
+                FormatKind::Coo => Matrix::Coo(coo.clone()),
+            };
+            let eng = Engine::new(RunConfig {
+                platform: Platform::dgx1(),
+                num_gpus: np,
+                mode: Mode::PStarOpt,
+                format,
+                backend: Backend::CpuRef,
+                numa_aware: None,
+                strategy_override: None,
+            })
+            .unwrap();
+            let rep = msrep::solver::cg(&eng, &mat, &b, &cfg).unwrap();
+            assert!(rep.converged, "{format:?} np={np} residual {}", rep.final_residual);
+            for i in 0..n {
+                assert!(
+                    (rep.x[i] as f64 - x_ref[i]).abs() < 1e-3 * (1.0 + x_ref[i].abs()),
+                    "{format:?} np={np} x[{i}]: {} vs {}",
+                    rep.x[i],
+                    x_ref[i]
+                );
+            }
         }
     });
 }

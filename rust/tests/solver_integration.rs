@@ -1,0 +1,126 @@
+//! Solver integration: the acceptance criteria end to end — CG to 1e-6 on
+//! a 10k-row SPD system, plan-reuse amortization visible on the DGX-1
+//! preset (planned-SpMV iteration cost < cold-partition iteration cost),
+//! and the PageRank transpose (pCSC) dispatch path.
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
+use msrep::report::render_solver_report;
+use msrep::sim::Platform;
+use msrep::solver::{cg, jacobi, pagerank, PlanSource, SolverConfig};
+use msrep::spmv::spmv_matrix;
+use msrep::workload;
+
+fn dgx1(np: usize) -> Engine {
+    Engine::new(RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: np,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })
+    .expect("engine")
+}
+
+/// 10k-row certified-SPD system with a manufactured solution.
+fn spd_10k() -> (Matrix, Vec<f32>, Vec<f32>) {
+    let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::spd(10_000, 200_000, 2.0, 7))));
+    let x_star = gen::dense_vector(10_000, 8);
+    let mut b = vec![0.0f32; 10_000];
+    spmv_matrix(&a, &x_star, 1.0, 0.0, &mut b).unwrap();
+    (a, x_star, b)
+}
+
+#[test]
+fn cg_solves_10k_row_spd_system_to_1e6() {
+    let (a, x_star, b) = spd_10k();
+    let rep = cg(&dgx1(8), &a, &b, &SolverConfig::default()).unwrap();
+    assert!(rep.converged, "residual {}", rep.final_residual);
+    assert!(rep.final_residual <= 1e-6);
+    assert!(rep.iterations <= 60, "iterations {}", rep.iterations);
+    // the recurrence residual is honest: recompute b - A·x from scratch
+    let mut ax = vec![0.0f32; 10_000];
+    spmv_matrix(&a, &rep.x, 1.0, 0.0, &mut ax).unwrap();
+    let b_norm: f64 = b.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+    let true_res: f64 = b
+        .iter()
+        .zip(&ax)
+        .map(|(bi, axi)| ((bi - axi) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+        / b_norm;
+    assert!(true_res <= 1e-5, "recomputed residual {true_res}");
+    for (i, (got, want)) in rep.x.iter().zip(&x_star).enumerate() {
+        assert!((got - want).abs() < 1e-2, "x[{i}]: {got} vs {want}");
+    }
+}
+
+#[test]
+fn plan_reuse_amortization_visible_on_dgx1_preset() {
+    let (a, _, b) = spd_10k();
+    let rep = cg(&dgx1(8), &a, &b, &SolverConfig::default()).unwrap();
+    // the acceptance inequality: planned-SpMV iteration cost strictly
+    // below the cold re-partitioning iteration cost
+    assert!(rep.t_plan > 0.0);
+    assert!(
+        rep.planned_iter_cost() < rep.cold_iter_cost(),
+        "planned {} vs cold {}",
+        rep.planned_iter_cost(),
+        rep.cold_iter_cost()
+    );
+    assert!(rep.amortization() > 1.0);
+    // and it is visible in the rendered report
+    let text = render_solver_report(&rep);
+    assert!(text.contains("per-iteration, planned SpMV"));
+    assert!(text.contains("per-iteration, cold re-partition"));
+    assert!(text.contains("plan-reuse amortization"));
+
+    // a genuinely cold run charges what the reused run projects
+    let cold_cfg = SolverConfig { plan_source: PlanSource::Cold, ..Default::default() };
+    let cold = cg(&dgx1(8), &a, &b, &cold_cfg).unwrap();
+    assert_eq!(cold.x, rep.x, "plan source must not change numerics");
+    assert!((cold.modeled_total_s - rep.cold_total()).abs() < 1e-9);
+    assert!(rep.modeled_total_s < cold.modeled_total_s);
+}
+
+#[test]
+fn jacobi_agrees_with_cg_on_the_same_system() {
+    let (a, _, b) = spd_10k();
+    let cg_rep = cg(&dgx1(8), &a, &b, &SolverConfig::default()).unwrap();
+    let j_rep = jacobi(&dgx1(8), &a, &b, &SolverConfig::default()).unwrap();
+    assert!(j_rep.converged, "residual {}", j_rep.final_residual);
+    for (i, (cgx, jx)) in cg_rep.x.iter().zip(&j_rep.x).enumerate() {
+        assert!((cgx - jx).abs() < 1e-3, "x[{i}]: cg {cgx} vs jacobi {jx}");
+    }
+}
+
+#[test]
+fn pagerank_runs_through_the_transpose_plan() {
+    let links = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::power_law(
+        5_000, 5_000, 60_000, 2.1, 9,
+    ))));
+    let cfg = SolverConfig { tol: 1e-6, max_iters: 200, ..Default::default() };
+    let rep = pagerank(&dgx1(8), &links, 0.85, &cfg).unwrap();
+    assert!(rep.converged, "delta {}", rep.final_residual);
+    let mass: f64 = rep.x.iter().map(|&v| v as f64).sum();
+    assert!((mass - 1.0).abs() < 1e-3, "rank mass {mass}");
+    // transpose dispatch reuses one CSC plan: amortization holds here too
+    assert!(rep.planned_iter_cost() < rep.cold_iter_cost());
+}
+
+#[test]
+fn poisson_scenario_from_the_workload_suite_converges() {
+    let s = workload::solver_scenario_by_name("poisson2d-cg").unwrap();
+    let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(workload::scenario_matrix(&s))));
+    let u_star = vec![1.0f32; s.m];
+    let mut b = vec![0.0f32; s.m];
+    spmv_matrix(&a, &u_star, 1.0, 0.0, &mut b).unwrap();
+    let cfg = SolverConfig { tol: s.tol, max_iters: s.max_iters, ..Default::default() };
+    let rep = cg(&dgx1(8), &a, &b, &cfg).unwrap();
+    assert!(rep.converged, "residual {}", rep.final_residual);
+    for (i, got) in rep.x.iter().enumerate() {
+        assert!((got - 1.0).abs() < 1e-2, "u[{i}] = {got}");
+    }
+}
