@@ -1,0 +1,66 @@
+//! Worked SpGEMM example — the rust/README.md walk-through, runnable.
+//!
+//! Squares a heavy-tailed power-law graph (`C = A²`, the graph-analytics
+//! two-hop matrix) through the multi-GPU engine twice: once with the
+//! classic nnz-balanced plan and once with the SpGEMM flop-balanced plan
+//! (`WorkModel::SpgemmFlops`), verifies both against the single-threaded
+//! reference product, and prints the per-GPU flop loads showing why
+//! nnz-balance breaks for sparse×sparse work.
+//!
+//! ```bash
+//! cargo run --release --example spgemm_demo
+//! ```
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
+use msrep::report::render_spgemm_report;
+use msrep::sim::Platform;
+use msrep::spgemm::spgemm_csr;
+
+const N: usize = 4_000;
+const NNZ: usize = 60_000;
+const R: f64 = 1.6;
+
+fn main() -> msrep::Result<()> {
+    println!("generating power-law graph: {N} nodes, ~{NNZ} edges, R = {R}");
+    let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::power_law(N, N, NNZ, R, 42))));
+
+    let engine = Engine::new(RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: 8,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })?;
+    println!("engine: dgx1 x8 GPUs, p*-opt, two-phase symbolic/numeric SpGEMM\n");
+
+    println!("-- nnz-balanced plan (what SpMV planning would do) --");
+    let nnz_plan = engine.plan(&a)?;
+    let by_nnz = engine.spgemm_with_plan(&nnz_plan, &a)?;
+    print!("{}", render_spgemm_report(&by_nnz.metrics));
+
+    println!("\n-- flop-balanced plan (WorkModel::SpgemmFlops) --");
+    let flop_plan = engine.plan_spgemm(&a, &a)?;
+    let by_flops = engine.spgemm_with_plan(&flop_plan, &a)?;
+    print!("{}", render_spgemm_report(&by_flops.metrics));
+
+    // identical product either way
+    let oracle = spgemm_csr(&convert::to_csr(&a), &convert::to_csr(&a))?;
+    assert_eq!(by_nnz.c.row_ptr, oracle.row_ptr, "nnz-plan structure drifted");
+    assert_eq!(by_flops.c.row_ptr, oracle.row_ptr, "flop-plan structure drifted");
+
+    let speedup = by_nnz.metrics.t_numeric / by_flops.metrics.t_numeric;
+    println!(
+        "\nnumeric phase (max over GPUs): nnz plan {:.3e} s vs flop plan {:.3e} s \
+         => {speedup:.2}x from rebalancing alone",
+        by_nnz.metrics.t_numeric, by_flops.metrics.t_numeric,
+    );
+    assert!(
+        by_flops.metrics.t_numeric < by_nnz.metrics.t_numeric,
+        "flop-balanced planning must beat nnz-balanced planning on a skewed square"
+    );
+    println!("spgemm_demo OK");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Bench: SpGEMM planning balance — nnz-balanced vs flop-balanced plans
+//! on skewed sparse×sparse products (the DESIGN.md §10 acceptance sweep:
+//! the flop plan's max-GPU numeric time must beat the nnz plan's on every
+//! skewed square, and the win must grow with the tail weight).
+//!
+//! Run with `cargo bench --bench spgemm_balance`
+//! (`MSREP_BENCH_QUICK=1` shrinks the inputs).
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
+use msrep::report::Table;
+use msrep::sim::{model, Platform};
+use msrep::util::bench::section;
+use msrep::workload;
+
+fn engine(np: usize) -> Engine {
+    Engine::new(RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: np,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })
+    .expect("engine")
+}
+
+fn main() {
+    let quick = std::env::var("MSREP_BENCH_QUICK").is_ok();
+    let (m, nnz) = if quick { (1_500, 25_000) } else { (6_000, 120_000) };
+
+    section(&format!(
+        "A·A flop-vs-nnz planning — dgx1, {m} nodes, ~{nnz} edges, exponent sweep (modeled)"
+    ));
+    let mut t = Table::new([
+        "R",
+        "gpus",
+        "flop imb (nnz)",
+        "flop imb (flops)",
+        "numeric (nnz)",
+        "numeric (flops)",
+        "speedup",
+    ]);
+    let mut heavier_wins: Vec<f64> = vec![];
+    for &r in &[2.4f64, 1.6] {
+        let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::power_law(m, m, nnz, r, 42))));
+        let mut best = 0.0f64;
+        for np in [2usize, 4, 8] {
+            let eng = engine(np);
+            let by_nnz = eng
+                .spgemm_with_plan(&eng.plan(&a).expect("nnz plan"), &a)
+                .expect("nnz-plan product");
+            let by_flops = eng
+                .spgemm_with_plan(&eng.plan_spgemm(&a, &a).expect("flop plan"), &a)
+                .expect("flop-plan product");
+            assert!(
+                by_flops.metrics.t_numeric < by_nnz.metrics.t_numeric,
+                "R={r} np={np}: flop plan must beat nnz plan"
+            );
+            let speedup = model::speedup(by_nnz.metrics.t_numeric, by_flops.metrics.t_numeric);
+            best = best.max(speedup);
+            t.row([
+                format!("{r:.1}"),
+                np.to_string(),
+                format!("{:.3}", by_nnz.metrics.flop_imbalance),
+                format!("{:.3}", by_flops.metrics.flop_imbalance),
+                format!("{:.3e} s", by_nnz.metrics.t_numeric),
+                format!("{:.3e} s", by_flops.metrics.t_numeric),
+                format!("{speedup:.2}x"),
+            ]);
+        }
+        heavier_wins.push(best);
+    }
+    print!("{}", t.render());
+    assert!(
+        heavier_wins[1] >= heavier_wins[0],
+        "heavier tail (R=1.6) should gain at least as much as R=2.4: {heavier_wins:?}"
+    );
+
+    section("scenario chains — flop-balanced execution (modeled)");
+    let mut t = Table::new(["scenario", "stages", "flops", "nnz(C)", "compression", "total"]);
+    for s in workload::spgemm_scenarios() {
+        let chain = workload::spgemm_scenario_chain(&s);
+        let eng = engine(8);
+        let mut acc = chain[0].clone();
+        let (mut flops, mut c_nnz, mut total, mut stages) = (0u64, 0u64, 0.0f64, 0usize);
+        for b in &chain[1..] {
+            let rep = eng.spgemm(&acc, b).expect("scenario product");
+            flops += rep.metrics.flops;
+            c_nnz = rep.metrics.c_nnz;
+            total += rep.metrics.modeled_total;
+            stages += 1;
+            acc = Matrix::Csr(rep.c);
+        }
+        t.row([
+            s.name.to_string(),
+            stages.to_string(),
+            flops.to_string(),
+            c_nnz.to_string(),
+            format!("{:.3}", if flops == 0 { 1.0 } else { c_nnz as f64 / flops as f64 }),
+            format!("{total:.3e} s"),
+        ]);
+    }
+    print!("{}", t.render());
+}

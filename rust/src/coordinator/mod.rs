@@ -23,7 +23,7 @@ pub mod worker;
 pub use config::{Backend, Mode, RunConfig};
 pub use engine::{Engine, SpmvReport};
 pub use metrics::Metrics;
-pub use partitioner::{GpuTask, MergeClass, PartitionOutcome, Strategy};
+pub use partitioner::{GpuTask, MergeClass, PartitionOutcome, Strategy, WorkModel};
 pub use plan::PartitionPlan;
 
 // Re-export for the documented `RunConfig { format: ... }` ergonomics.

@@ -100,6 +100,76 @@ pub enum Strategy {
     NnzBalanced,
 }
 
+/// What a balanced partition equalizes across GPUs — the pluggable work
+/// weight of the planner.
+///
+/// `Nnz` is the paper's SpMV model: 2 flops per stored element, so nnz ≡
+/// work. `SpgemmFlops` weights element `(i, j)` of A by `nnz(B[j, :])`,
+/// the multiply-adds it triggers in `C = A·B` — SpGEMM per-row work is
+/// `Σ_{j ∈ A[i,:]} nnz(B[j,:])`, not `nnz(A[i,:])`, which is exactly what
+/// breaks nnz-balanced planning on skewed products (Yang/Buluç/Owens).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkModel {
+    /// weight 1 per stored non-zero (SpMV/SpMM)
+    Nnz,
+    /// weight `nnz(B[col, :]) + 1` per stored non-zero (SpGEMM `C = A·B`;
+    /// the `+1` keeps elements hitting empty B rows from being free, since
+    /// their stream bytes still move over the host link)
+    SpgemmFlops,
+}
+
+impl WorkModel {
+    /// Short name for reports and CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            WorkModel::Nnz => "nnz",
+            WorkModel::SpgemmFlops => "flops",
+        }
+    }
+}
+
+/// Per-element SpGEMM work weights in `matrix`'s storage order: the
+/// element in column `j` of A weighs `b_row_nnz[j] + 1` (see
+/// [`WorkModel::SpgemmFlops`]). `b_row_nnz` must have one entry per row
+/// of B, i.e. `matrix.cols()` entries.
+pub fn spgemm_element_weights(matrix: &Matrix, b_row_nnz: &[u64]) -> Vec<u64> {
+    debug_assert_eq!(b_row_nnz.len(), matrix.cols());
+    match matrix {
+        Matrix::Csr(a) => a.col_idx.iter().map(|&j| b_row_nnz[j as usize] + 1).collect(),
+        Matrix::Coo(a) => a.col_idx.iter().map(|&j| b_row_nnz[j as usize] + 1).collect(),
+        // CSC stores elements column-major: expand the pointer runs
+        Matrix::Csc(a) => {
+            let mut w = Vec::with_capacity(a.nnz());
+            for j in 0..a.cols() {
+                let cnt = a.col_ptr[j + 1] - a.col_ptr[j];
+                w.extend(std::iter::repeat(b_row_nnz[j] + 1).take(cnt));
+            }
+            w
+        }
+    }
+}
+
+/// `np + 1` element boundaries splitting `[0, len)` into `np` contiguous
+/// ranges of near-equal total weight — the weighted generalization of the
+/// `⌊g·nnz/np⌋` boundaries (with unit weights the two are identical).
+/// Boundaries are non-decreasing, start at 0 and end at `weights.len()`.
+pub fn weighted_boundaries(weights: &[u64], np: usize) -> Vec<usize> {
+    assert!(np >= 1, "np must be >= 1");
+    let mut prefix = Vec::with_capacity(weights.len() + 1);
+    prefix.push(0u64);
+    for &w in weights {
+        prefix.push(prefix.last().unwrap() + w);
+    }
+    let total = *prefix.last().unwrap() as u128;
+    (0..=np)
+        .map(|g| {
+            let target = (total * g as u128 / np as u128) as u64;
+            // first element index whose prefix reaches the target
+            prefix.partition_point(|&p| p < target).min(weights.len())
+        })
+        .collect()
+}
+
 /// Merge class a matrix's partitions will use.
 pub fn merge_class(matrix: &Matrix) -> MergeClass {
     match matrix {
@@ -125,13 +195,24 @@ pub fn build_task(matrix: &Matrix, np: usize, g: usize, strategy: Strategy) -> R
     if g >= np {
         return Err(Error::InvalidPartition(format!("gpu {g} >= np {np}")));
     }
+    let nnz = matrix.nnz();
     match (strategy, matrix) {
-        (Strategy::NnzBalanced, Matrix::Csr(csr)) => balanced_csr_task(csr, np, g),
-        (Strategy::NnzBalanced, Matrix::Csc(csc)) => balanced_csc_task(csc, np, g),
-        (Strategy::NnzBalanced, Matrix::Coo(coo)) => balanced_coo_task(coo, np, g),
+        (Strategy::NnzBalanced, _) => build_task_range(matrix, g * nnz / np, (g + 1) * nnz / np, g),
         (Strategy::Blocks, Matrix::Csr(csr)) => Ok(baseline_csr_task(csr, np, g)),
         (Strategy::Blocks, Matrix::Csc(csc)) => Ok(baseline_csc_task(csc, np, g)),
         (Strategy::Blocks, Matrix::Coo(coo)) => baseline_coo_task(coo, np, g),
+    }
+}
+
+/// Build GPU `g`'s task over an explicit contiguous element range
+/// `[lo, hi)` — the weighted-planning entry point: [`weighted_boundaries`]
+/// replaces the `⌊g·nnz/np⌋` split and everything downstream (partial
+/// formats, streams, merge metadata) is unchanged.
+pub fn build_task_range(matrix: &Matrix, lo: usize, hi: usize, g: usize) -> Result<GpuTask> {
+    match matrix {
+        Matrix::Csr(csr) => balanced_csr_task(csr, lo, hi, g),
+        Matrix::Csc(csc) => balanced_csc_task(csc, lo, hi, g),
+        Matrix::Coo(coo) => balanced_coo_task(coo, lo, hi, g),
     }
 }
 
@@ -185,9 +266,8 @@ fn check_np(np: usize) -> Result<()> {
     Ok(())
 }
 
-fn balanced_csr_task(csr: &Csr, np: usize, g: usize) -> Result<GpuTask> {
-    let nnz = csr.nnz();
-    let p = PCsr::from_range(csr, g * nnz / np, (g + 1) * nnz / np)?;
+fn balanced_csr_task(csr: &Csr, lo: usize, hi: usize, g: usize) -> Result<GpuTask> {
+    let p = PCsr::from_range(csr, lo, hi)?;
     Ok(GpuTask {
         gpu: g,
         val: p.val(csr).to_vec(),
@@ -201,9 +281,8 @@ fn balanced_csr_task(csr: &Csr, np: usize, g: usize) -> Result<GpuTask> {
     })
 }
 
-fn balanced_csc_task(csc: &Csc, np: usize, g: usize) -> Result<GpuTask> {
-    let nnz = csc.nnz();
-    let p = PCsc::from_range(csc, g * nnz / np, (g + 1) * nnz / np)?;
+fn balanced_csc_task(csc: &Csc, lo: usize, hi: usize, g: usize) -> Result<GpuTask> {
+    let p = PCsc::from_range(csc, lo, hi)?;
     // global column ids: rebase the local expansion
     let col_idx: Vec<u32> = p
         .local_col_ids()
@@ -223,9 +302,8 @@ fn balanced_csc_task(csc: &Csc, np: usize, g: usize) -> Result<GpuTask> {
     })
 }
 
-fn balanced_coo_task(coo: &Coo, np: usize, g: usize) -> Result<GpuTask> {
-    let nnz = coo.nnz();
-    let p = PCoo::from_range(coo, g * nnz / np, (g + 1) * nnz / np)?;
+fn balanced_coo_task(coo: &Coo, lo: usize, hi: usize, g: usize) -> Result<GpuTask> {
+    let p = PCoo::from_range(coo, lo, hi)?;
     if coo.sort_order() == SortOrder::Row {
         Ok(GpuTask {
             gpu: g,
@@ -452,5 +530,76 @@ mod tests {
     fn zero_np_rejected() {
         assert!(balanced(&skewed(), 0).is_err());
         assert!(baseline(&skewed(), 0).is_err());
+    }
+
+    #[test]
+    fn weighted_boundaries_unit_weights_match_nnz_split() {
+        let w = vec![1u64; 19];
+        for np in [1, 3, 4, 8] {
+            let b = weighted_boundaries(&w, np);
+            let expect: Vec<usize> = (0..=np).map(|g| g * 19 / np).collect();
+            assert_eq!(b, expect, "np={np}");
+        }
+    }
+
+    #[test]
+    fn weighted_boundaries_equalize_weight_not_count() {
+        // one heavy element at the front: the first range should hold it
+        // alone (weight 90 ≈ half of 180), not half the element count
+        let mut w = vec![10u64; 10];
+        w[0] = 90;
+        let b = weighted_boundaries(&w, 2);
+        assert_eq!(b, vec![0, 1, 10]);
+        // boundaries are monotone and cover the range
+        let b = weighted_boundaries(&w, 4);
+        assert_eq!((b[0], b[4]), (0, 10));
+        assert!(b.windows(2).all(|x| x[0] <= x[1]));
+    }
+
+    #[test]
+    fn spgemm_weights_follow_storage_order() {
+        // A = paper example in all three formats; B row nnz = row index + 1
+        let coo = crate::formats::Coo::paper_example();
+        let b_row_nnz: Vec<u64> = (1..=6).collect();
+        for mat in [
+            Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
+            Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
+            Matrix::Coo(coo.clone()),
+        ] {
+            let w = spgemm_element_weights(&mat, &b_row_nnz);
+            assert_eq!(w.len(), mat.nnz(), "{:?}", mat.kind());
+            // total weight is storage-order independent
+            assert_eq!(
+                w.iter().sum::<u64>(),
+                coo.col_idx.iter().map(|&j| b_row_nnz[j as usize] + 1).sum::<u64>(),
+                "{:?}",
+                mat.kind()
+            );
+        }
+        // CSR order: weight of element k is b_row_nnz[col_idx[k]] + 1
+        let csr = convert::to_csr(&Matrix::Coo(coo));
+        let w = spgemm_element_weights(&Matrix::Csr(csr.clone()), &b_row_nnz);
+        for (k, &c) in csr.col_idx.iter().enumerate() {
+            assert_eq!(w[k], b_row_nnz[c as usize] + 1);
+        }
+    }
+
+    #[test]
+    fn build_task_range_tiles_like_build_task() {
+        let mat = skewed();
+        let nnz = mat.nnz();
+        for g in 0..4 {
+            let a = build_task(&mat, 4, g, Strategy::NnzBalanced).unwrap();
+            let b = build_task_range(&mat, g * nnz / 4, (g + 1) * nnz / 4, g).unwrap();
+            assert_eq!(a.val, b.val);
+            assert_eq!(a.out_offset, b.out_offset);
+            assert_eq!(a.out_len, b.out_len);
+        }
+    }
+
+    #[test]
+    fn work_model_labels() {
+        assert_eq!(WorkModel::Nnz.label(), "nnz");
+        assert_eq!(WorkModel::SpgemmFlops.label(), "flops");
     }
 }

@@ -23,7 +23,7 @@ use crate::formats::{FormatKind, Matrix};
 use crate::sim::model;
 
 use super::config::{Mode, RunConfig};
-use super::partitioner::{self, GpuTask, MergeClass, Strategy};
+use super::partitioner::{self, GpuTask, MergeClass, Strategy, WorkModel};
 use super::worker;
 
 /// A reusable partitioning of one matrix for one engine configuration.
@@ -33,6 +33,9 @@ pub struct PartitionPlan {
     pub format: FormatKind,
     /// partitioning strategy the tasks were built with
     pub strategy: Strategy,
+    /// work model the balanced boundaries equalize (nnz for SpMV plans,
+    /// SpGEMM flops for [`PartitionPlan::build_spgemm`] plans)
+    pub work: WorkModel,
     /// number of GPU tasks (== engine `num_gpus` at build time)
     pub np: usize,
     /// matrix rows
@@ -45,7 +48,12 @@ pub struct PartitionPlan {
     pub merge_class: MergeClass,
     /// one task per GPU, in GPU order
     pub tasks: Vec<GpuTask>,
-    /// boundary-search operations of the build (Alg. 2/4/6 cost input)
+    /// per-GPU modeled work under [`PartitionPlan::work`] (== nnz loads
+    /// for `Nnz`, weighted flop loads for `SpgemmFlops`)
+    pub work_loads: Vec<u64>,
+    /// boundary-search operations of the build (Alg. 2/4/6 cost input);
+    /// 0 for weighted plans, whose prefix-sum boundary scan replaces the
+    /// binary searches
     pub search_ops: u64,
     /// modeled partitioning time under the plan's build mode (§4.1)
     pub t_partition: f64,
@@ -57,42 +65,103 @@ impl PartitionPlan {
     /// Build a plan for `a` under `cfg` (one CPU thread per GPU for
     /// p\*/p\*-opt, exactly like the engine's inline path used to).
     pub fn build(a: &Matrix, cfg: &RunConfig) -> Result<PartitionPlan> {
+        PartitionPlan::build_with_work(a, cfg, WorkModel::Nnz, &[])
+    }
+
+    /// Build a plan whose balanced boundaries equalize **SpGEMM flops**
+    /// instead of nnz: element `(i, j)` of `a` is weighted by
+    /// `b_row_nnz[j] + 1` (`b_row_nnz` = per-row nnz of the right factor
+    /// B). Under the Baseline's block strategy the boundaries are
+    /// row/column blocks either way; the weights then only feed the
+    /// plan's `work_loads` report.
+    pub fn build_spgemm(a: &Matrix, cfg: &RunConfig, b_row_nnz: &[u64]) -> Result<PartitionPlan> {
+        if b_row_nnz.len() != a.cols() {
+            return Err(Error::InvalidPartition(format!(
+                "b_row_nnz has {} entries but A has {} columns",
+                b_row_nnz.len(),
+                a.cols()
+            )));
+        }
+        PartitionPlan::build_with_work(a, cfg, WorkModel::SpgemmFlops, b_row_nnz)
+    }
+
+    fn build_with_work(
+        a: &Matrix,
+        cfg: &RunConfig,
+        work: WorkModel,
+        b_row_nnz: &[u64],
+    ) -> Result<PartitionPlan> {
         let np = cfg.num_gpus;
         let threaded = cfg.mode != Mode::Baseline;
         let strategy = cfg.effective_strategy();
-        let fan = worker::run_per_gpu(np, threaded, |g| {
-            partitioner::build_task(a, np, g, strategy)
+        // element weights drive both the (balanced) boundaries and the
+        // per-GPU work report
+        let weights: Option<Vec<u64>> = match work {
+            WorkModel::Nnz => None,
+            WorkModel::SpgemmFlops => Some(partitioner::spgemm_element_weights(a, b_row_nnz)),
+        };
+        let bounds: Option<Vec<usize>> = match (&weights, strategy) {
+            (Some(w), Strategy::NnzBalanced) => Some(partitioner::weighted_boundaries(w, np)),
+            _ => None,
+        };
+        let fan = worker::run_per_gpu(np, threaded, |g| match &bounds {
+            Some(b) => partitioner::build_task_range(a, b[g], b[g + 1], g),
+            None => partitioner::build_task(a, np, g, strategy),
         });
         let measured_partition = fan.wall;
         let tasks: Vec<GpuTask> = fan.results.into_iter().collect::<Result<_>>()?;
-        let search_ops = partitioner::search_ops(a, np, strategy);
+        // boundary-finding cost: weighted boundaries REPLACE the
+        // O(np·log·) pointer searches with one streaming prefix-sum pass
+        // over the element weights (so weighted plans report zero search
+        // ops); under the block strategy any block searches still happen,
+        // and a weight scan on top of blocks (Baseline spgemm plans) is
+        // charged in addition since both passes really run
+        let search_ops =
+            if bounds.is_some() { 0 } else { partitioner::search_ops(a, np, strategy) };
+        let t_boundary = model::cpu_search_time(search_ops)
+            + if weights.is_some() {
+                model::cpu_rewrite_time(a.nnz() as u64)
+            } else {
+                0.0
+            };
         let rewrite_total: u64 = tasks.iter().map(|t| t.rewrite_ops).sum();
         let rewrite_max: u64 = tasks.iter().map(|t| t.rewrite_ops).max().unwrap_or(0);
         let t_partition = match cfg.mode {
             // single thread does everything
-            Mode::Baseline => {
-                model::cpu_search_time(search_ops) + model::cpu_rewrite_time(rewrite_total)
-            }
+            Mode::Baseline => t_boundary + model::cpu_rewrite_time(rewrite_total),
             // np threads rewrite concurrently
-            Mode::PStar => {
-                model::cpu_search_time(search_ops) + model::cpu_rewrite_time(rewrite_max)
-            }
+            Mode::PStar => t_boundary + model::cpu_rewrite_time(rewrite_max),
             // rewrite offloaded to the GPUs, hidden under the mandatory H2D
             // (§4.1) — only the launch remains
-            Mode::PStarOpt => {
-                model::cpu_search_time(search_ops)
-                    + model::gpu_pointer_rewrite_time(&cfg.platform)
-            }
+            Mode::PStarOpt => t_boundary + model::gpu_pointer_rewrite_time(&cfg.platform),
+        };
+        let work_loads: Vec<u64> = match &weights {
+            None => tasks.iter().map(|t| t.nnz() as u64).collect(),
+            Some(w) => match &bounds {
+                Some(b) => (0..np).map(|g| w[b[g]..b[g + 1]].iter().sum()).collect(),
+                // block strategy: sum weights over each task's stream range
+                None => {
+                    let mut loads = Vec::with_capacity(np);
+                    let mut at = 0usize;
+                    for t in &tasks {
+                        loads.push(w[at..at + t.nnz()].iter().sum());
+                        at += t.nnz();
+                    }
+                    loads
+                }
+            },
         };
         Ok(PartitionPlan {
             format: a.kind(),
             strategy,
+            work,
             np,
             m: a.rows(),
             n: a.cols(),
             nnz: a.nnz() as u64,
             merge_class: partitioner::merge_class(a),
             tasks,
+            work_loads,
             search_ops,
             t_partition,
             measured_partition,
@@ -107,6 +176,13 @@ impl PartitionPlan {
     /// max/mean load imbalance (1.0 = perfect).
     pub fn imbalance(&self) -> f64 {
         crate::util::stats::imbalance(&self.loads())
+    }
+
+    /// max/mean imbalance of the plan's *work* loads — the quantity the
+    /// plan's [`WorkModel`] actually equalizes (== [`Self::imbalance`] for
+    /// nnz plans).
+    pub fn work_imbalance(&self) -> f64 {
+        crate::util::stats::imbalance(&self.work_loads)
     }
 
     /// Total stream payload bytes the plan would upload (excluding x).
@@ -183,6 +259,71 @@ mod tests {
         let mut other = cfg(4);
         other.strategy_override = Some(Strategy::Blocks);
         assert!(plan.validate_for(&other).is_err());
+    }
+
+    #[test]
+    fn nnz_build_has_nnz_work_model() {
+        let plan = PartitionPlan::build(&matrix(), &cfg(4)).unwrap();
+        assert_eq!(plan.work, WorkModel::Nnz);
+        assert_eq!(plan.work_loads, plan.loads());
+        assert_eq!(plan.work_imbalance(), plan.imbalance());
+    }
+
+    #[test]
+    fn spgemm_build_balances_flops_not_nnz() {
+        // A·A on a skewed matrix: columns with heavy B rows make some
+        // elements far more expensive than others
+        let mat = matrix();
+        let csr = convert::to_csr(&mat);
+        let b_row_nnz: Vec<u64> = (0..csr.rows()).map(|i| csr.row_nnz(i) as u64).collect();
+        let plan = PartitionPlan::build_spgemm(&mat, &cfg(8), &b_row_nnz).unwrap();
+        assert_eq!(plan.work, WorkModel::SpgemmFlops);
+        assert_eq!(plan.tasks.len(), 8);
+        // the stream still tiles [0, nnz)
+        assert_eq!(plan.loads().iter().sum::<u64>(), mat.nnz() as u64);
+        // work loads account for every element weight
+        let total_w: u64 =
+            csr.col_idx.iter().map(|&j| b_row_nnz[j as usize] + 1).sum::<u64>();
+        assert_eq!(plan.work_loads.iter().sum::<u64>(), total_w);
+        // flop balance is near-perfect while nnz loads are free to skew
+        assert!(plan.work_imbalance() < 1.05, "work imbalance {}", plan.work_imbalance());
+        // a plain nnz plan on the same input leaves flops unbalanced
+        let nnz_plan = PartitionPlan::build(&mat, &cfg(8)).unwrap();
+        let w = crate::coordinator::partitioner::spgemm_element_weights(&mat, &b_row_nnz);
+        let mut at = 0usize;
+        let mut nnz_plan_flops = Vec::new();
+        for t in &nnz_plan.tasks {
+            nnz_plan_flops.push(w[at..at + t.nnz()].iter().sum::<u64>());
+            at += t.nnz();
+        }
+        let nnz_flop_imb = crate::util::stats::imbalance(&nnz_plan_flops);
+        assert!(
+            plan.work_imbalance() <= nnz_flop_imb + 1e-9,
+            "flop plan {} vs nnz plan {}",
+            plan.work_imbalance(),
+            nnz_flop_imb
+        );
+    }
+
+    #[test]
+    fn spgemm_build_rejects_wrong_weight_length() {
+        assert!(PartitionPlan::build_spgemm(&matrix(), &cfg(4), &[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn weighted_build_replaces_searches_with_prefix_scan() {
+        let mat = matrix();
+        let b_row_nnz = vec![2u64; 500];
+        let nnz_plan = PartitionPlan::build(&mat, &cfg(4)).unwrap();
+        let flop_plan = PartitionPlan::build_spgemm(&mat, &cfg(4), &b_row_nnz).unwrap();
+        // the prefix scan replaces the binary searches, it does not stack
+        // on top of them
+        assert!(nnz_plan.search_ops > 0);
+        assert_eq!(flop_plan.search_ops, 0);
+        let scan = model::cpu_rewrite_time(mat.nnz() as u64);
+        let searches = model::cpu_search_time(nnz_plan.search_ops);
+        let diff = flop_plan.t_partition - (nnz_plan.t_partition - searches + scan);
+        assert!(diff.abs() < 1e-15, "weighted charge off by {diff}");
     }
 
     #[test]

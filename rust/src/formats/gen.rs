@@ -242,6 +242,28 @@ pub fn laplacian_2d(g: usize) -> Coo {
     coo
 }
 
+/// Piecewise-constant 2-D aggregation (prolongation) matrix `P` for a
+/// `g × g` grid coarsened by 2×2 blocks: `g²` fine unknowns ×
+/// `⌈g/2⌉²` coarse unknowns, one unit entry per fine row mapping it to
+/// its aggregate. `R = Pᵀ` restricts, and the AMG two-grid Galerkin
+/// coarse operator is the triple product `R·A·P` — the SpGEMM chain of
+/// `workload::spgemm_scenarios`.
+pub fn aggregation_2d(g: usize) -> Coo {
+    assert!(g > 0, "empty grid");
+    let gc = g.div_ceil(2);
+    let n_fine = g * g;
+    let mut rows = Vec::with_capacity(n_fine);
+    let mut cols = Vec::with_capacity(n_fine);
+    for r in 0..g {
+        for c in 0..g {
+            rows.push((r * g + c) as u32);
+            cols.push(((r / 2) * gc + c / 2) as u32);
+        }
+    }
+    Coo::new(n_fine, gc * gc, rows, cols, vec![1.0; n_fine])
+        .expect("aggregation is valid")
+}
+
 /// Diagonal identity-like matrix (smoke tests: SpMV(I, x) == x).
 pub fn identity(n: usize) -> Coo {
     let idx: Vec<u32> = (0..n as u32).collect();
@@ -386,6 +408,23 @@ mod tests {
             }
         }
         assert_eq!(a.diagonal(), vec![4.0f32; 16]);
+    }
+
+    #[test]
+    fn aggregation_2d_partitions_the_fine_grid() {
+        let p = aggregation_2d(5); // 25 fine, 3x3 = 9 coarse
+        assert_eq!((p.rows(), p.cols(), p.nnz()), (25, 9, 25));
+        assert_eq!(p.sort_order(), crate::formats::SortOrder::Row);
+        // each fine point maps to exactly one aggregate, each aggregate
+        // holds at most 4 fine points
+        let d = p.to_dense();
+        for row in &d {
+            assert_eq!(row.iter().filter(|&&v| v == 1.0).count(), 1);
+        }
+        for j in 0..9 {
+            let col_sum: f32 = (0..25).map(|i| d[i][j]).sum();
+            assert!((1.0..=4.0).contains(&col_sum), "aggregate {j}: {col_sum}");
+        }
     }
 
     #[test]

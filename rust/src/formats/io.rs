@@ -5,6 +5,7 @@
 //! download (paper §5.2) when one is available, and to round-trip the
 //! synthetic suite for external tools.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
@@ -12,18 +13,53 @@ use crate::error::{Error, Result};
 
 use super::Coo;
 
+/// Value field of a Matrix Market coordinate file.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Field {
+pub enum MmField {
+    /// floating-point values
     Real,
+    /// integer values (the writer refuses non-integral entries)
     Integer,
+    /// structure only — all values are 1 (the writer refuses anything
+    /// else, so a round-trip is lossless)
     Pattern,
 }
 
+impl MmField {
+    /// Header token.
+    pub fn name(self) -> &'static str {
+        match self {
+            MmField::Real => "real",
+            MmField::Integer => "integer",
+            MmField::Pattern => "pattern",
+        }
+    }
+}
+
+/// Symmetry of a Matrix Market coordinate file.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Symmetry {
+pub enum MmSymmetry {
+    /// all entries stored explicitly
     General,
+    /// only the lower triangle (incl. the diagonal) is stored; the reader
+    /// mirrors off-diagonal entries back (the writer verifies symmetry
+    /// first, so write→read round-trips)
     Symmetric,
 }
+
+impl MmSymmetry {
+    /// Header token.
+    pub fn name(self) -> &'static str {
+        match self {
+            MmSymmetry::General => "general",
+            MmSymmetry::Symmetric => "symmetric",
+        }
+    }
+}
+
+// Reader-internal aliases (the reader accepts the same set).
+type Field = MmField;
+type Symmetry = MmSymmetry;
 
 /// Read a Matrix Market coordinate file into COO (1-based -> 0-based).
 pub fn read_matrix_market<R: Read>(reader: R) -> Result<Coo> {
@@ -127,20 +163,120 @@ pub fn read_matrix_market_file<P: AsRef<Path>>(path: P) -> Result<Coo> {
     read_matrix_market(std::fs::File::open(path)?)
 }
 
-/// Write COO as a `real general` coordinate Matrix Market file.
+/// Write COO as a `real general` coordinate Matrix Market file
+/// (shorthand for [`write_matrix_market_with`]).
 pub fn write_matrix_market<W: Write>(writer: W, coo: &Coo) -> Result<()> {
-    let mut w = BufWriter::new(writer);
-    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
-    writeln!(w, "% generated by msrep")?;
-    writeln!(w, "{} {} {}", coo.rows(), coo.cols(), coo.nnz())?;
+    write_matrix_market_with(writer, coo, MmField::Real, MmSymmetry::General)
+}
+
+/// Write COO as a coordinate Matrix Market file with an explicit field
+/// and symmetry — the writer-side mirror of everything the reader
+/// accepts, so any supported header round-trips losslessly:
+///
+/// * `real general` (the historical default) streams the triplets in
+///   input order, exactly as before;
+/// * every other combination canonicalizes first (coordinates sorted,
+///   duplicates summed — the reader accumulates them in dense form
+///   anyway);
+/// * `symmetric` stores only the lower triangle and **verifies** the
+///   matrix is square with exactly mirrored entries — previously a
+///   symmetric matrix could only be written `general`, and re-reading a
+///   symmetric file then re-writing it silently changed the declared
+///   structure;
+/// * `integer`/`pattern` refuse values they cannot represent instead of
+///   corrupting them.
+pub fn write_matrix_market_with<W: Write>(
+    writer: W,
+    coo: &Coo,
+    field: MmField,
+    symmetry: MmSymmetry,
+) -> Result<()> {
+    if field == MmField::Real && symmetry == MmSymmetry::General {
+        // fast path: nothing to validate or merge, stream in input order
+        let mut w = BufWriter::new(writer);
+        writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+        writeln!(w, "% generated by msrep")?;
+        writeln!(w, "{} {} {}", coo.rows(), coo.cols(), coo.nnz())?;
+        for k in 0..coo.nnz() {
+            writeln!(w, "{} {} {}", coo.row_idx[k] + 1, coo.col_idx[k] + 1, coo.val[k])?;
+        }
+        w.flush()?;
+        return Ok(());
+    }
+    // canonical entry set: coordinates sorted, duplicates summed
+    let mut entries: BTreeMap<(u32, u32), f32> = BTreeMap::new();
     for k in 0..coo.nnz() {
-        writeln!(
-            w,
-            "{} {} {}",
-            coo.row_idx[k] + 1,
-            coo.col_idx[k] + 1,
-            coo.val[k]
-        )?;
+        *entries.entry((coo.row_idx[k], coo.col_idx[k])).or_insert(0.0) += coo.val[k];
+    }
+    for (&(r, c), &v) in &entries {
+        match field {
+            MmField::Pattern if v != 1.0 => {
+                return Err(Error::InvalidMatrix(format!(
+                    "pattern write would drop value {v} at ({}, {})",
+                    r + 1,
+                    c + 1
+                )));
+            }
+            MmField::Integer if v.fract() != 0.0 => {
+                return Err(Error::InvalidMatrix(format!(
+                    "integer write would truncate value {v} at ({}, {})",
+                    r + 1,
+                    c + 1
+                )));
+            }
+            _ => {}
+        }
+    }
+    let stored: Vec<((u32, u32), f32)> = match symmetry {
+        MmSymmetry::General => entries.iter().map(|(&k, &v)| (k, v)).collect(),
+        MmSymmetry::Symmetric => {
+            if coo.rows() != coo.cols() {
+                return Err(Error::InvalidMatrix(format!(
+                    "symmetric write needs a square matrix, got {}x{}",
+                    coo.rows(),
+                    coo.cols()
+                )));
+            }
+            let mut lower = Vec::new();
+            for (&(r, c), &v) in &entries {
+                if r >= c {
+                    // lower triangle + diagonal is what gets stored; its
+                    // mirror must exist and match
+                    if r > c && entries.get(&(c, r)) != Some(&v) {
+                        return Err(Error::InvalidMatrix(format!(
+                            "asymmetric entry ({}, {}) = {v}",
+                            r + 1,
+                            c + 1
+                        )));
+                    }
+                    lower.push(((r, c), v));
+                } else if entries.get(&(c, r)).is_none() {
+                    // upper-triangle entry with no mirror would be lost
+                    return Err(Error::InvalidMatrix(format!(
+                        "asymmetric entry ({}, {}) = {v}",
+                        r + 1,
+                        c + 1
+                    )));
+                }
+            }
+            lower
+        }
+    };
+    let mut w = BufWriter::new(writer);
+    writeln!(
+        w,
+        "%%MatrixMarket matrix coordinate {} {}",
+        field.name(),
+        symmetry.name()
+    )?;
+    writeln!(w, "% generated by msrep")?;
+    writeln!(w, "{} {} {}", coo.rows(), coo.cols(), stored.len())?;
+    for ((r, c), v) in stored {
+        match field {
+            MmField::Pattern => writeln!(w, "{} {}", r + 1, c + 1)?,
+            MmField::Integer => writeln!(w, "{} {} {}", r + 1, c + 1, v as i64)?,
+            MmField::Real => writeln!(w, "{} {} {}", r + 1, c + 1, v)?,
+        }
     }
     w.flush()?;
     Ok(())
@@ -223,6 +359,147 @@ mod tests {
             Err(Error::MatrixMarket { line, .. }) => assert_eq!(line, 3),
             other => panic!("expected MatrixMarket error, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn symmetric_write_stores_lower_triangle_and_roundtrips() {
+        // paper_example is not symmetric; build a symmetric matrix instead
+        let coo = Coo::new(
+            3,
+            3,
+            vec![0, 1, 0, 2, 1, 2, 2],
+            vec![1, 0, 2, 0, 2, 1, 2],
+            vec![5.0, 5.0, -2.0, -2.0, 7.5, 7.5, 1.0],
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        write_matrix_market_with(&mut buf, &coo, MmField::Real, MmSymmetry::Symmetric).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.contains("coordinate real symmetric"));
+        // only the 3 lower off-diagonal entries + 1 diagonal are stored
+        assert!(text.contains("3 3 4"), "size line wrong:\n{text}");
+        let back = read_matrix_market(buf.as_slice()).unwrap();
+        assert_eq!(back.to_dense(), coo.to_dense());
+    }
+
+    #[test]
+    fn symmetric_write_rejects_asymmetry_and_rectangles() {
+        let asym = Coo::new(2, 2, vec![0], vec![1], vec![3.0]).unwrap();
+        let mut buf = Vec::new();
+        assert!(
+            write_matrix_market_with(&mut buf, &asym, MmField::Real, MmSymmetry::Symmetric)
+                .is_err()
+        );
+        let mismatched = Coo::new(2, 2, vec![0, 1], vec![1, 0], vec![3.0, 4.0]).unwrap();
+        assert!(write_matrix_market_with(
+            &mut Vec::new(),
+            &mismatched,
+            MmField::Real,
+            MmSymmetry::Symmetric
+        )
+        .is_err());
+        let rect = Coo::new(2, 3, vec![0], vec![0], vec![1.0]).unwrap();
+        assert!(write_matrix_market_with(
+            &mut Vec::new(),
+            &rect,
+            MmField::Real,
+            MmSymmetry::Symmetric
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn lossy_field_writes_are_refused() {
+        let frac = Coo::new(2, 2, vec![0], vec![0], vec![1.5]).unwrap();
+        assert!(write_matrix_market_with(
+            &mut Vec::new(),
+            &frac,
+            MmField::Integer,
+            MmSymmetry::General
+        )
+        .is_err());
+        assert!(write_matrix_market_with(
+            &mut Vec::new(),
+            &frac,
+            MmField::Pattern,
+            MmSymmetry::General
+        )
+        .is_err());
+        // a summed duplicate that lands on 2.0 is not representable as
+        // pattern either
+        let dup = Coo::new(2, 2, vec![0, 0], vec![0, 0], vec![1.0, 1.0]).unwrap();
+        assert!(write_matrix_market_with(
+            &mut Vec::new(),
+            &dup,
+            MmField::Pattern,
+            MmSymmetry::General
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn integer_write_emits_integer_tokens() {
+        let coo = Coo::new(2, 2, vec![0, 1], vec![1, 0], vec![-3.0, 4.0]).unwrap();
+        let mut buf = Vec::new();
+        write_matrix_market_with(&mut buf, &coo, MmField::Integer, MmSymmetry::General).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.contains("coordinate integer general"));
+        assert!(text.contains("1 2 -3"), "{text}");
+        assert!(!text.contains("-3.0"), "{text}");
+        let back = read_matrix_market(buf.as_slice()).unwrap();
+        assert_eq!(back.to_dense(), coo.to_dense());
+    }
+
+    #[test]
+    fn roundtrip_property_all_fields_and_symmetries() {
+        use crate::util::prop::check;
+        let combos = [
+            (MmField::Real, MmSymmetry::General),
+            (MmField::Real, MmSymmetry::Symmetric),
+            (MmField::Integer, MmSymmetry::General),
+            (MmField::Integer, MmSymmetry::Symmetric),
+            (MmField::Pattern, MmSymmetry::General),
+            (MmField::Pattern, MmSymmetry::Symmetric),
+        ];
+        check("matrix market round-trip", 48, |g| {
+            let (field, symmetry) = *g.choose(&combos);
+            let m = g.usize_in(1..g.size() + 2);
+            let n = if symmetry == MmSymmetry::Symmetric {
+                m
+            } else {
+                g.usize_in(1..g.size() + 2)
+            };
+            let draws = g.usize_in(0..2 * g.size() + 1);
+            // distinct coordinates keep pattern writes representable
+            let mut coords = std::collections::BTreeSet::new();
+            let (mut ri, mut ci, mut vals) = (vec![], vec![], vec![]);
+            for _ in 0..draws {
+                let i = g.usize_in(0..m) as u32;
+                let j = g.usize_in(0..n) as u32;
+                if !coords.insert((i, j)) {
+                    continue;
+                }
+                let v = match field {
+                    MmField::Pattern => 1.0f32,
+                    MmField::Integer => g.usize_in(0..9) as f32 - 4.0,
+                    MmField::Real => g.f32_in(-2.0, 2.0),
+                };
+                ri.push(i);
+                ci.push(j);
+                vals.push(v);
+                if symmetry == MmSymmetry::Symmetric && i != j && coords.insert((j, i)) {
+                    ri.push(j);
+                    ci.push(i);
+                    vals.push(v);
+                }
+            }
+            let coo = Coo::new(m, n, ri, ci, vals).unwrap();
+            let mut buf = Vec::new();
+            write_matrix_market_with(&mut buf, &coo, field, symmetry).unwrap();
+            let back = read_matrix_market(buf.as_slice()).unwrap();
+            assert_eq!((back.rows(), back.cols()), (m, n), "{field:?}/{symmetry:?}");
+            assert_eq!(back.to_dense(), coo.to_dense(), "{field:?}/{symmetry:?}");
+        });
     }
 
     #[test]

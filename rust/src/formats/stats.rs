@@ -1,5 +1,7 @@
 //! Matrix structure statistics, including the power-law exponent estimator
-//! used to report Table 2's R column for the synthetic analogs.
+//! used to report Table 2's R column for the synthetic analogs and to
+//! quantify per-row SpGEMM flop skew in
+//! [`crate::report::render_flop_skew`].
 
 use super::{Coo, Csc, Csr};
 
@@ -116,6 +118,39 @@ mod tests {
         assert_eq!(fit_power_law(&[]), None);
         assert_eq!(fit_power_law(&[3, 3, 3]), None); // single degree
         assert_eq!(fit_power_law(&[0, 0, 0]), None); // all zero
+    }
+
+    #[test]
+    fn fit_uniform_degree_sequence_returns_none() {
+        // a uniform (constant-degree) sequence has one distinct positive
+        // degree — no tail exists, so the estimator must refuse to fit,
+        // at any sample size and degree value
+        assert_eq!(fit_power_law(&vec![7usize; 10_000]), None);
+        assert_eq!(fit_power_law(&vec![1usize; 500]), None);
+        // zeros mixed in do not create a fittable tail either
+        let mut mixed = vec![0usize; 100];
+        mixed.extend(std::iter::repeat(42usize).take(100));
+        assert_eq!(fit_power_law(&mixed), None);
+    }
+
+    #[test]
+    fn fit_recovers_synthetic_exponent_within_tolerance() {
+        // deterministic sample with counts(k) ∝ k^-R over k in [8, 512]:
+        // kmin is large enough that the Clauset–Shalizi–Newman
+        // half-integer correction is accurate (the known xmin ≳ 6 regime)
+        for r_true in [1.8f64, 2.5, 3.2] {
+            let mut degrees: Vec<usize> = Vec::new();
+            for k in 8usize..=2048 {
+                let count = (1.0e6 * (k as f64).powf(-r_true)).round() as usize;
+                degrees.extend(std::iter::repeat(k).take(count));
+            }
+            let r = fit_power_law(&degrees).expect("synthetic tail must fit");
+            assert!(
+                (r - r_true).abs() < 0.2,
+                "true R {r_true}, fitted {r} on {} samples",
+                degrees.len()
+            );
+        }
     }
 
     #[test]

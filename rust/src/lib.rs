@@ -51,6 +51,13 @@
 //! one [`coordinator::PartitionPlan`] across every SpMV of a solve; the
 //! worked example in `rust/README.md` and `examples/cg_demo.rs` show the
 //! plan-reuse amortization end to end.
+//!
+//! Sparse×sparse products (`C = A·B`: graph A², AMG Galerkin triple
+//! products, Markov chains) live in [`spgemm`]: the same partitioned
+//! formats and engine, but planned with a **flop** work weight
+//! ([`coordinator::WorkModel::SpgemmFlops`]) because SpGEMM row work is
+//! `Σ nnz(B[j,:])` over the row's column set, not nnz — see DESIGN.md §10
+//! and `examples/spgemm_demo.rs`.
 
 #![warn(missing_docs)]
 
@@ -62,6 +69,7 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod solver;
+pub mod spgemm;
 pub mod spmv;
 pub mod util;
 pub mod workload;

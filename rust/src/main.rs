@@ -9,6 +9,7 @@
 //! msrep suite                              Table-2 analog summary
 //! msrep serve-bench ...                    batched multi-tenant serving sim
 //! msrep solver-bench ...                   plan-reusing iterative solvers
+//! msrep spgemm-bench ...                   flop-balanced multi-GPU SpGEMM
 //! ```
 //!
 //! The paper-figure regeneration lives in `cargo bench` /
@@ -50,13 +51,14 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "suite" => cmd_suite(),
         "serve-bench" => cmd_serve_bench(rest),
         "solver-bench" => cmd_solver_bench(rest),
+        "spgemm-bench" => cmd_spgemm_bench(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
         }
         other => Err(Error::Usage(format!(
             "unknown command '{other}' (expected info | gen | profile | partition | run | \
-             suite | serve-bench | solver-bench; try `msrep help`)"
+             suite | serve-bench | solver-bench | spgemm-bench; try `msrep help`)"
         ))),
     }
 }
@@ -73,7 +75,9 @@ fn print_usage() {
          \x20 suite       list the Table-2 evaluation suite analogs\n\
          \x20 serve-bench simulate batched multi-tenant SpMV serving (--help for flags)\n\
          \x20 solver-bench run the plan-reusing iterative solvers (CG, Jacobi, PageRank) \
-         with the amortization report (--help for flags)\n"
+         with the amortization report (--help for flags)\n\
+         \x20 spgemm-bench run the SpGEMM scenario chains (A², Galerkin R·A·P, Markov) \
+         comparing nnz- vs flop-balanced planning (--help for flags)\n"
     );
 }
 
@@ -163,7 +167,8 @@ fn to_format(mat: Matrix, format: FormatKind) -> Matrix {
 fn cmd_profile(argv: Vec<String>) -> Result<()> {
     let p = Parser::new()
         .flag("matrix", "MatrixMarket file", None)
-        .flag("suite", "suite matrix name", None);
+        .flag("suite", "suite matrix name", None)
+        .bool_flag("no-spgemm", "skip the per-row SpGEMM flop histogram");
     let a = p.parse(argv)?;
     let mat = load_matrix(&a)?;
     let coo = convert::to_coo(&mat);
@@ -181,6 +186,24 @@ fn cmd_profile(argv: Vec<String>) -> Result<()> {
         prof.r_exponent.map_or("n/a".to_string(), |r| format!("{r:.2}")),
     ]);
     print!("{}", t.render());
+    if !a.is_set("no-spgemm") {
+        println!();
+        if mat.rows() == mat.cols() {
+            // SpGEMM work preview for C = A·A: where nnz-balanced planning
+            // would land before any plan is built
+            let csr = convert::to_csr(&mat);
+            let brn = msrep::spgemm::b_row_nnz(&mat);
+            let rf = msrep::spgemm::row_flops(&csr, &brn);
+            print!("{}", msrep::report::render_flop_skew(&rf));
+        } else {
+            println!(
+                "(per-row SpGEMM flop histogram skipped: A·A needs a square matrix, \
+                 got {}x{})",
+                mat.rows(),
+                mat.cols()
+            );
+        }
+    }
     Ok(())
 }
 
@@ -658,6 +681,106 @@ fn push_summary(summary: &mut Table, rep: &msrep::solver::SolveReport, system: S
         format_duration_s(rep.cold_iter_cost()),
         format!("{:.2}x", rep.amortization()),
     ]);
+}
+
+fn spgemm_parser() -> Parser {
+    Parser::new()
+        .flag("platform", "summit | dgx1", Some("dgx1"))
+        .flag("gpus", "GPUs to use", None)
+        .flag("mode", "baseline | pstar | popt", Some("popt"))
+        .flag(
+            "scenario",
+            "scenario name (powerlaw-square | webgraph-square | galerkin-rap | markov-square) \
+             or 'all'",
+            Some("all"),
+        )
+        .bool_flag("no-compare", "skip the nnz-balanced planning comparison")
+}
+
+fn cmd_spgemm_bench(argv: Vec<String>) -> Result<()> {
+    let p = spgemm_parser();
+    if argv.iter().any(|a| a == "--help") {
+        println!(
+            "msrep spgemm-bench — flop-balanced multi-GPU SpGEMM over the scenario chains\n{}",
+            p.help()
+        );
+        return Ok(());
+    }
+    let a = p.parse(argv)?;
+    let platform = Platform::by_name(&a.str_or("platform", "dgx1"))?;
+    let num_gpus = a.usize_or("gpus", platform.num_gpus)?;
+    let mode = Mode::parse(&a.str_or("mode", "popt"))
+        .ok_or_else(|| Error::Usage("bad --mode".into()))?;
+    let engine = Engine::new(RunConfig {
+        platform,
+        num_gpus,
+        mode,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })?;
+    let which = a.str_or("scenario", "all");
+    let scenarios: Vec<workload::SpgemmScenario> = if which == "all" {
+        workload::spgemm_scenarios()
+    } else {
+        vec![workload::spgemm_scenario_by_name(&which)
+            .ok_or_else(|| Error::Usage(format!("unknown spgemm scenario '{which}'")))?]
+    };
+    let compare = !a.is_set("no-compare");
+    println!(
+        "spgemm-bench: {} x {} GPUs, mode {}\n",
+        engine.config().platform.name,
+        num_gpus,
+        mode.label()
+    );
+    let mut summary = Table::new([
+        "scenario",
+        "stage",
+        "flop imb (nnz plan)",
+        "flop imb (flop plan)",
+        "numeric (nnz)",
+        "numeric (flops)",
+        "numeric speedup",
+    ]);
+    for s in &scenarios {
+        let chain = workload::spgemm_scenario_chain(s);
+        println!("== {} ({}) ==", s.name, s.kind);
+        let mut acc = chain[0].clone();
+        for (stage, b) in chain[1..].iter().enumerate() {
+            let flop_plan = engine.plan_spgemm(&acc, b)?;
+            let rep = engine.spgemm_with_plan(&flop_plan, b)?;
+            print!("{}", msrep::report::render_spgemm_report(&rep.metrics));
+            if compare {
+                let nnz_plan = engine.plan(&acc)?;
+                let nnz_rep = engine.spgemm_with_plan(&nnz_plan, b)?;
+                summary.row([
+                    s.name.to_string(),
+                    stage.to_string(),
+                    format!("{:.3}", nnz_rep.metrics.flop_imbalance),
+                    format!("{:.3}", rep.metrics.flop_imbalance),
+                    format_duration_s(nnz_rep.metrics.t_numeric),
+                    format_duration_s(rep.metrics.t_numeric),
+                    format!(
+                        "{:.2}x",
+                        msrep::sim::model::speedup(
+                            nnz_rep.metrics.t_numeric,
+                            rep.metrics.t_numeric
+                        )
+                    ),
+                ]);
+            }
+            acc = Matrix::Csr(rep.c);
+            println!();
+        }
+    }
+    if compare {
+        println!(
+            "nnz-balanced vs flop-balanced planning (modeled numeric phase = max over GPUs):"
+        );
+        print!("{}", summary.render());
+    }
+    Ok(())
 }
 
 fn cmd_suite() -> Result<()> {

@@ -1,0 +1,194 @@
+//! Report rendering for the SpGEMM subsystem: product summary, the
+//! symbolic-vs-numeric phase split, per-GPU flop/nnz imbalance, and the
+//! per-row flop-skew histogram (with the power-law exponent fitted by
+//! [`crate::formats::stats::fit_power_law`]) that predicts whether
+//! nnz-balanced planning will break before any plan is built.
+
+use std::fmt::Write as _;
+
+use crate::formats::stats;
+use crate::spgemm::SpgemmMetrics;
+
+use super::table::{ascii_bar, format_duration_s, format_pct, Table};
+
+/// Render one multi-GPU SpGEMM: product shape/compression summary, the
+/// modeled phase timeline (partition / h2d / symbolic / numeric / merge)
+/// and the per-GPU nnz-vs-flop load table with both imbalance factors.
+pub fn render_spgemm_report(mm: &SpgemmMetrics) -> String {
+    let mut out = String::new();
+
+    let mut t = Table::new(["product", "value"]);
+    t.row(["C shape".to_string(), format!("{} x {}", mm.m, mm.n)]);
+    t.row(["nnz(A) / nnz(B)".to_string(), format!("{} / {}", mm.a_nnz, mm.b_nnz)]);
+    t.row(["nnz(C)".to_string(), mm.c_nnz.to_string()]);
+    t.row(["flops (MACs)".to_string(), mm.flops.to_string()]);
+    t.row([
+        "compression nnz(C)/flops".to_string(),
+        format!("{:.3}", mm.compression()),
+    ]);
+    t.row(["modeled GFLOP/s".to_string(), format!("{:.2}", mm.gflops())]);
+    out.push_str(&t.render());
+
+    let mut t = Table::new(["phase", "modeled", "share"]);
+    let share = |x: f64| {
+        if mm.modeled_total > 0.0 {
+            format_pct(x / mm.modeled_total)
+        } else {
+            "-".to_string()
+        }
+    };
+    t.row([
+        "partition".to_string(),
+        format_duration_s(mm.t_partition),
+        share(mm.t_partition),
+    ]);
+    t.row(["h2d".to_string(), format_duration_s(mm.t_h2d), share(mm.t_h2d)]);
+    t.row([
+        "symbolic".to_string(),
+        format_duration_s(mm.t_symbolic),
+        share(mm.t_symbolic),
+    ]);
+    t.row([
+        "numeric".to_string(),
+        format_duration_s(mm.t_numeric),
+        share(mm.t_numeric),
+    ]);
+    t.row(["merge".to_string(), format_duration_s(mm.t_merge), share(mm.t_merge)]);
+    t.row([
+        "TOTAL".to_string(),
+        format_duration_s(mm.modeled_total),
+        "100.0%".to_string(),
+    ]);
+    out.push_str(&t.render());
+
+    let mut t = Table::new(["gpu", "a-nnz", "flops", "flop share"]);
+    let total_flops = mm.flops.max(1);
+    for g in 0..mm.np {
+        t.row([
+            g.to_string(),
+            mm.nnz_loads.get(g).copied().unwrap_or(0).to_string(),
+            mm.flop_loads.get(g).copied().unwrap_or(0).to_string(),
+            format_pct(mm.flop_loads.get(g).copied().unwrap_or(0) as f64 / total_flops as f64),
+        ]);
+    }
+    out.push_str(&t.render());
+    let _ = writeln!(
+        out,
+        "imbalance: nnz {:.3} | flops {:.3} (what the SpgemmFlops work model drives to 1)",
+        mm.nnz_imbalance, mm.flop_imbalance
+    );
+    out
+}
+
+/// Render the per-row SpGEMM flop histogram for a planned product: log2
+/// buckets of `flops(i) = Σ_{j ∈ A[i,:]} nnz(B[j,:])`, the max/mean row
+/// skew, and the power-law exponent fitted to the row-flop sample (reusing
+/// the Table-2 R estimator). A heavy tail here means nnz-balanced
+/// partitions will be flop-imbalanced — plan with `WorkModel::SpgemmFlops`.
+pub fn render_flop_skew(row_flops: &[u64]) -> String {
+    let mut out = String::new();
+    let total: u64 = row_flops.iter().sum();
+    let zero_rows = row_flops.iter().filter(|&&f| f == 0).count();
+    let _ = writeln!(
+        out,
+        "per-row SpGEMM flop histogram ({} rows, {} total MACs, {} zero-flop rows):",
+        row_flops.len(),
+        total,
+        zero_rows
+    );
+    // log2 buckets over the positive rows
+    let mut buckets: Vec<usize> = Vec::new();
+    for &f in row_flops {
+        if f == 0 {
+            continue;
+        }
+        let b = 63 - f.leading_zeros() as usize; // floor(log2 f)
+        if b >= buckets.len() {
+            buckets.resize(b + 1, 0);
+        }
+        buckets[b] += 1;
+    }
+    let peak = buckets.iter().copied().max().unwrap_or(0).max(1);
+    for (b, &count) in buckets.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "  flops 2^{b:<2} |{}| {count}",
+            ascii_bar(count as f64 / peak as f64, 30)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "row-flop imbalance (max/mean): {:.3}",
+        crate::util::stats::imbalance(row_flops)
+    );
+    let sample: Vec<usize> = row_flops.iter().map(|&f| f as usize).collect();
+    match stats::fit_power_law(&sample) {
+        Some(r) => {
+            let _ = writeln!(out, "fitted row-flop power-law exponent R: {r:.2}");
+        }
+        None => {
+            let _ = writeln!(out, "fitted row-flop power-law exponent R: n/a (degenerate sample)");
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics() -> SpgemmMetrics {
+        SpgemmMetrics {
+            np: 2,
+            m: 10,
+            n: 10,
+            a_nnz: 40,
+            b_nnz: 40,
+            c_nnz: 90,
+            flops: 200,
+            nnz_loads: vec![20, 20],
+            flop_loads: vec![150, 50],
+            nnz_imbalance: 1.0,
+            flop_imbalance: 1.5,
+            t_partition: 1e-6,
+            t_h2d: 2e-6,
+            t_symbolic: 1e-6,
+            t_numeric: 4e-6,
+            t_merge: 2e-6,
+            modeled_total: 1e-5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn report_contains_phases_loads_and_compression() {
+        let s = render_spgemm_report(&metrics());
+        assert!(s.contains("symbolic"));
+        assert!(s.contains("numeric"));
+        assert!(s.contains("compression nnz(C)/flops"));
+        assert!(s.contains("0.450")); // 90/200
+        assert!(s.contains("flop share"));
+        assert!(s.contains("imbalance: nnz 1.000 | flops 1.500"));
+    }
+
+    #[test]
+    fn flop_skew_histogram_bins_and_fit() {
+        // rows: 1x flops=1, 2x flops=2..3, rest heavy
+        let rows = vec![0u64, 1, 2, 3, 8, 8, 9, 64];
+        let s = render_flop_skew(&rows);
+        assert!(s.contains("8 rows"));
+        assert!(s.contains("1 zero-flop rows"));
+        assert!(s.contains("flops 2^0"));
+        assert!(s.contains("flops 2^6"));
+        assert!(s.contains("row-flop imbalance"));
+        assert!(s.contains("power-law exponent"));
+    }
+
+    #[test]
+    fn flop_skew_survives_degenerate_input() {
+        let s = render_flop_skew(&[5, 5, 5, 5]);
+        assert!(s.contains("n/a"), "uniform rows have no tail to fit:\n{s}");
+        let s = render_flop_skew(&[]);
+        assert!(s.contains("0 rows"));
+    }
+}

@@ -71,6 +71,54 @@ pub fn spmm_kernel_time(
     p.launch_latency + bytes / (p.hbm_bw * kernel_efficiency(format))
 }
 
+/// Effective fraction of HBM bandwidth a hash-based SpGEMM kernel
+/// achieves: roughly half of the streaming SpMV efficiency, because the
+/// accumulator traffic is scattered (Yang/Buluç/Owens report hash SpGEMM
+/// well below the streaming roofline).
+pub const SPGEMM_EFFICIENCY: f64 = 0.35;
+
+/// Upload payload bytes for one GPU's SpGEMM partition: its A stream
+/// (per-nnz val + col + row, as marshalled for SpMV) plus a full copy of B
+/// in CSR form — B plays the role x plays in SpMV and is replicated to
+/// every device (paper's design keeps the dense operand resident
+/// per-GPU; same choice here for the sparse right factor).
+pub fn spgemm_partition_bytes(a_nnz: u64, b_nnz: u64, b_rows: u64) -> u64 {
+    a_nnz * 12 + b_nnz * 8 + b_rows * 8
+}
+
+/// Symbolic-phase kernel time for one partition: count `nnz(C[i,:])` per
+/// owned row before allocating the numeric accumulators. The pass streams
+/// the A partition and touches one B column index per candidate MAC
+/// (`flops` = Σ over owned elements of `nnz(B[col,:])`), inserting into a
+/// per-row hash set.
+pub fn spgemm_symbolic_time(p: &Platform, a_nnz: u64, flops: u64) -> f64 {
+    let bytes = (a_nnz * 12 + flops * 4) as f64;
+    p.launch_latency + bytes / (p.hbm_bw * SPGEMM_EFFICIENCY)
+}
+
+/// Numeric-phase kernel time for one partition: re-stream A, read one B
+/// (col, val) pair per MAC, hash-accumulate, and write the partial C rows.
+///
+/// The **compression factor** `cf = nnz(C)/flops ∈ (0, 1]` drives the
+/// accumulator term: at `cf → 1` almost every MAC inserts a *fresh* entry
+/// (key + value write per op), while at `cf → 0` MACs hit hot, already-
+/// resident entries — so accumulator traffic is modeled as
+/// `8·flops·(1 + cf)` bytes.
+pub fn spgemm_numeric_time(p: &Platform, a_nnz: u64, flops: u64, c_nnz: u64) -> f64 {
+    let cf = if flops == 0 { 1.0 } else { c_nnz as f64 / flops as f64 };
+    let stream = (a_nnz * 12 + flops * 8 + c_nnz * 8) as f64;
+    let accumulator = flops as f64 * 8.0 * (1.0 + cf);
+    p.launch_latency + (stream + accumulator) / (p.hbm_bw * SPGEMM_EFFICIENCY)
+}
+
+/// CPU-side merge of sparse partial-C blocks (the column-split /
+/// element-split partial-sum path): one streaming pass over all partial
+/// bytes plus the write of the merged result, at the same 1/4-socket
+/// single-thread bandwidth as [`cpu_vector_sum_time`].
+pub fn cpu_sparse_sum_time(p: &Platform, partial_bytes_total: u64, out_bytes: u64) -> f64 {
+    (partial_bytes_total + out_bytes) as f64 / (p.host_mem_bw / 4.0)
+}
+
 /// COO→CSR conversion kernel the paper runs before cuSparse for COO inputs
 /// (§5.1): a device-side sort-free row-counting pass, ~3 sweeps of the
 /// stream.
@@ -316,5 +364,40 @@ mod tests {
     fn speedup_helper() {
         assert_eq!(speedup(10.0, 2.0), 5.0);
         assert_eq!(speedup(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn spgemm_numeric_time_grows_with_flops() {
+        let p = Platform::dgx1();
+        let t1 = spgemm_numeric_time(&p, 100_000, 1_000_000, 400_000);
+        let t2 = spgemm_numeric_time(&p, 100_000, 2_000_000, 800_000);
+        assert!(t2 > t1);
+        // symbolic is strictly cheaper than numeric at equal shape
+        assert!(spgemm_symbolic_time(&p, 100_000, 1_000_000) < t1);
+    }
+
+    #[test]
+    fn spgemm_compression_drives_accumulator_cost() {
+        // same flops, denser C (cf -> 1) must cost more than a compressing
+        // product (cf -> 0): fresh inserts vs hot updates
+        let p = Platform::dgx1();
+        let dense_c = spgemm_numeric_time(&p, 100_000, 1_000_000, 1_000_000);
+        let compressing = spgemm_numeric_time(&p, 100_000, 1_000_000, 50_000);
+        assert!(dense_c > compressing);
+    }
+
+    #[test]
+    fn spgemm_partition_bytes_accounting() {
+        // A stream at 12 B/nnz + B payload at 8 B/nnz + 8 B/row
+        assert_eq!(spgemm_partition_bytes(10, 100, 20), 120 + 800 + 160);
+    }
+
+    #[test]
+    fn cpu_sparse_sum_scales_with_bytes() {
+        let p = Platform::summit();
+        let t1 = cpu_sparse_sum_time(&p, 1 << 20, 1 << 18);
+        let t2 = cpu_sparse_sum_time(&p, 1 << 21, 1 << 18);
+        assert!(t2 > t1);
+        assert_eq!(cpu_sparse_sum_time(&p, 0, 0), 0.0);
     }
 }

@@ -1,0 +1,154 @@
+//! Per-task SpGEMM execution: the symbolic (structure-counting) and
+//! numeric (hash-accumulating) phases one simulated GPU runs over its
+//! partition of A with a full local copy of B.
+//!
+//! Both phases consume the same [`GpuTask`] stream the SpMV kernels do —
+//! `(val, global col, local-or-global row)` per owned element — so every
+//! partitioned format (pCSR, pCSC, row-/col-sorted pCOO) dispatches
+//! through one code path:
+//!
+//! * **row-split** tasks (pCSR, row-sorted pCOO) index their accumulator
+//!   rows locally at `out_offset`;
+//! * **column-split / element-split** tasks (pCSC, col-sorted pCOO) carry
+//!   global row ids and a full-length (`out_len == m`) accumulator — the
+//!   outer-product formulation: column `j` of A times row `j` of B emits
+//!   rank-1 partial C contributions.
+//!
+//! The numeric accumulator is a per-row hash map (the row-merge hash
+//! accumulation of Yang/Buluç/Owens); the modeled cost of both phases
+//! lives in [`crate::sim::model`].
+
+use std::collections::{HashMap, HashSet};
+
+use crate::coordinator::GpuTask;
+use crate::formats::Csr;
+
+/// Symbolic-phase output for one task: exact structure counts, no values.
+#[derive(Debug, Clone)]
+pub(crate) struct TaskSymbolic {
+    /// multiply-add count: Σ over owned elements of `nnz(B[col, :])`
+    pub flops: u64,
+    /// nnz of this task's partial C block (pre-merge, boundary rows
+    /// counted per task)
+    pub c_nnz: u64,
+}
+
+/// Symbolic phase: count each owned output row's distinct column set and
+/// the task's total flops. Runs before the numeric phase so the engine
+/// can size accumulators and the cost model can price both phases.
+pub(crate) fn task_symbolic(t: &GpuTask, b: &Csr) -> TaskSymbolic {
+    let mut seen: Vec<HashSet<u32>> = vec![HashSet::new(); t.out_len];
+    let mut flops = 0u64;
+    for e in 0..t.nnz() {
+        let r = t.row_idx[e] as usize;
+        let j = t.col_idx[e] as usize;
+        flops += (b.row_ptr[j + 1] - b.row_ptr[j]) as u64;
+        for k in b.row_ptr[j]..b.row_ptr[j + 1] {
+            seen[r].insert(b.col_idx[k]);
+        }
+    }
+    TaskSymbolic { flops, c_nnz: seen.iter().map(|s| s.len() as u64).sum() }
+}
+
+/// Numeric phase: hash-accumulate `a_e · B[col(e), :]` into the task's
+/// partial C rows. Returns one sorted `(col, val)` row per local output
+/// row — the deterministic form the merge concatenates/sums.
+pub(crate) fn task_numeric(t: &GpuTask, b: &Csr) -> Vec<Vec<(u32, f32)>> {
+    let mut rows: Vec<HashMap<u32, f32>> = vec![HashMap::new(); t.out_len];
+    for e in 0..t.nnz() {
+        let r = t.row_idx[e] as usize;
+        let j = t.col_idx[e] as usize;
+        let v = t.val[e];
+        for k in b.row_ptr[j]..b.row_ptr[j + 1] {
+            *rows[r].entry(b.col_idx[k]).or_insert(0.0) += v * b.val[k];
+        }
+    }
+    rows.into_iter()
+        .map(|h| {
+            let mut row: Vec<(u32, f32)> = h.into_iter().collect();
+            row.sort_unstable_by_key(|&(c, _)| c);
+            row
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partitioner::{balanced, baseline};
+    use crate::formats::{convert, Coo, Matrix};
+
+    fn paper() -> (Matrix, Csr) {
+        let coo = Coo::paper_example();
+        let csr = convert::to_csr(&Matrix::Coo(coo.clone()));
+        (Matrix::Csr(csr.clone()), csr)
+    }
+
+    /// Dense reference of A·B over the task set.
+    fn dense_product(a: &Csr, b: &Csr) -> Vec<Vec<f32>> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let (da, db) = (a.to_dense(), b.to_dense());
+        let mut c = vec![vec![0.0f32; n]; m];
+        for i in 0..m {
+            for j in 0..k {
+                if da[i][j] != 0.0 {
+                    for (cj, crow) in c[i].iter_mut().enumerate() {
+                        *crow += da[i][j] * db[j][cj];
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn symbolic_counts_match_numeric_structure() {
+        let (mat, b) = paper();
+        for np in [1, 2, 4] {
+            for out in [balanced(&mat, np).unwrap(), baseline(&mat, np).unwrap()] {
+                for t in &out.tasks {
+                    let sym = task_symbolic(t, &b);
+                    let num = task_numeric(t, &b);
+                    let num_nnz: u64 = num.iter().map(|r| r.len() as u64).sum();
+                    assert_eq!(sym.c_nnz, num_nnz, "np={np}");
+                    let flops: u64 = (0..t.nnz())
+                        .map(|e| b.row_nnz(t.col_idx[e] as usize) as u64)
+                        .sum();
+                    assert_eq!(sym.flops, flops);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_task_product_matches_dense() {
+        let (mat, b) = paper();
+        let out = balanced(&mat, 1).unwrap();
+        let rows = task_numeric(&out.tasks[0], &b);
+        let expect = dense_product(&b, &b);
+        for (i, row) in rows.iter().enumerate() {
+            let mut dense_row = vec![0.0f32; b.cols()];
+            for &(c, v) in row {
+                dense_row[c as usize] = v;
+            }
+            for j in 0..b.cols() {
+                assert!(
+                    (dense_row[j] - expect[i][j]).abs() < 1e-3,
+                    "({i},{j}): {} vs {}",
+                    dense_row[j],
+                    expect[i][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn numeric_rows_are_sorted_by_column() {
+        let (mat, b) = paper();
+        for t in balanced(&mat, 3).unwrap().tasks {
+            for row in task_numeric(&t, &b) {
+                assert!(row.windows(2).all(|w| w[0].0 < w[1].0));
+            }
+        }
+    }
+}

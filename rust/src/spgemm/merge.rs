@@ -1,0 +1,153 @@
+//! Merging per-GPU partial C blocks into one CSR result.
+//!
+//! Row-split partials (pCSR, row-sorted pCOO) are consecutive row blocks —
+//! merging is concatenation, with the `np`-bounded boundary rows (a row
+//! split across two GPUs) summed like the SpMV overlap fix-up (§4.3).
+//! Column-split partials (pCSC, col-sorted pCOO) are full-length sparse
+//! matrices — merging is a sparse partial **sum**. Both reduce to the same
+//! accumulate-then-compact pass here because every task addresses its rows
+//! at `out_offset` (0 for column-split).
+
+use crate::coordinator::partitioner::GpuTask;
+use crate::error::{Error, Result};
+use crate::formats::Csr;
+
+/// Merge each task's sorted partial rows into the final `m × n` CSR.
+/// `parts[g]` must hold exactly `tasks[g].out_len` rows; rows contributed
+/// by several tasks (boundary rows, column-split partials) accumulate.
+pub(crate) fn merge_partials(
+    tasks: &[GpuTask],
+    parts: Vec<Vec<Vec<(u32, f32)>>>,
+    m: usize,
+    n: usize,
+) -> Result<Csr> {
+    if tasks.len() != parts.len() {
+        return Err(Error::InvalidPartition(format!(
+            "{} tasks but {} partial C blocks",
+            tasks.len(),
+            parts.len()
+        )));
+    }
+    let mut global: Vec<Vec<(u32, f32)>> = vec![Vec::new(); m];
+    for (t, rows) in tasks.iter().zip(parts) {
+        if rows.len() != t.out_len {
+            return Err(Error::InvalidPartition(format!(
+                "gpu {} produced {} C rows but owns {}",
+                t.gpu,
+                rows.len(),
+                t.out_len
+            )));
+        }
+        for (j, row) in rows.into_iter().enumerate() {
+            let g = t.out_offset + j;
+            if g >= m {
+                return Err(Error::InvalidPartition(format!(
+                    "gpu {} writes C row {g} past m {m}",
+                    t.gpu
+                )));
+            }
+            if global[g].is_empty() {
+                // exclusive row: plain move (the concatenation fast path)
+                global[g] = row;
+            } else {
+                global[g].extend(row);
+            }
+        }
+    }
+    // compact: sum duplicate columns on rows touched by several tasks
+    let mut row_ptr = Vec::with_capacity(m + 1);
+    row_ptr.push(0usize);
+    let mut col_idx: Vec<u32> = Vec::new();
+    let mut val: Vec<f32> = Vec::new();
+    for row in &mut global {
+        row.sort_unstable_by_key(|&(c, _)| c);
+        let mut i = 0;
+        while i < row.len() {
+            let c = row[i].0;
+            let mut s = 0.0f32;
+            while i < row.len() && row[i].0 == c {
+                s += row[i].1;
+                i += 1;
+            }
+            col_idx.push(c);
+            val.push(s);
+        }
+        row_ptr.push(col_idx.len());
+    }
+    Csr::new(m, n, row_ptr, col_idx, val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partitioner::MergeClass;
+
+    fn task(gpu: usize, out_offset: usize, out_len: usize, merge: MergeClass) -> GpuTask {
+        GpuTask {
+            gpu,
+            val: vec![],
+            col_idx: vec![],
+            row_idx: vec![],
+            out_len,
+            out_offset,
+            overlaps_prev: false,
+            merge,
+            rewrite_ops: 0,
+        }
+    }
+
+    #[test]
+    fn concatenates_disjoint_row_blocks() {
+        let tasks = vec![
+            task(0, 0, 2, MergeClass::RowBased),
+            task(1, 2, 1, MergeClass::RowBased),
+        ];
+        let parts = vec![
+            vec![vec![(0, 1.0)], vec![(1, 2.0), (2, 3.0)]],
+            vec![vec![(0, 4.0)]],
+        ];
+        let c = merge_partials(&tasks, parts, 3, 3).unwrap();
+        assert_eq!(c.row_ptr, vec![0, 1, 3, 4]);
+        assert_eq!(c.col_idx, vec![0, 1, 2, 0]);
+        assert_eq!(c.val, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn sums_shared_boundary_rows() {
+        // both tasks contribute to global row 1 (split mid-row)
+        let tasks = vec![
+            task(0, 0, 2, MergeClass::RowBased),
+            task(1, 1, 1, MergeClass::RowBased),
+        ];
+        let parts = vec![
+            vec![vec![(0, 1.0)], vec![(1, 2.0)]],
+            vec![vec![(1, 3.0), (2, 1.0)]],
+        ];
+        let c = merge_partials(&tasks, parts, 2, 3).unwrap();
+        assert_eq!(c.to_dense()[1], vec![0.0, 5.0, 1.0]);
+    }
+
+    #[test]
+    fn sums_full_length_column_partials() {
+        let tasks = vec![
+            task(0, 0, 2, MergeClass::ColBased),
+            task(1, 0, 2, MergeClass::ColBased),
+        ];
+        let parts = vec![
+            vec![vec![(0, 1.0)], vec![(1, -1.0)]],
+            vec![vec![(0, 2.0), (1, 5.0)], vec![]],
+        ];
+        let c = merge_partials(&tasks, parts, 2, 2).unwrap();
+        assert_eq!(c.to_dense(), vec![vec![3.0, 5.0], vec![0.0, -1.0]]);
+    }
+
+    #[test]
+    fn rejects_inconsistent_shapes() {
+        let tasks = vec![task(0, 0, 2, MergeClass::RowBased)];
+        assert!(merge_partials(&tasks, vec![], 2, 2).is_err());
+        assert!(merge_partials(&tasks, vec![vec![vec![]]], 2, 2).is_err());
+        // rows past m
+        let far = vec![task(0, 3, 1, MergeClass::RowBased)];
+        assert!(merge_partials(&far, vec![vec![vec![(0, 1.0)]]], 2, 2).is_err());
+    }
+}

@@ -1,0 +1,517 @@
+//! spgemm — flop-balanced multi-GPU sparse×sparse multiplication
+//! (`C = A·B`) with symbolic/numeric phases.
+//!
+//! SpGEMM is the canonical kernel that breaks nnz-balanced planning: the
+//! work of row `i` of A is `Σ_{j ∈ A[i,:]} nnz(B[j,:])` — a function of
+//! *B's* structure — so two equally-sized A partitions can differ in
+//! multiply-adds by orders of magnitude on power-law products (A², AMG
+//! Galerkin triple products). This module reuses the whole partitioned-
+//! format engine, swapping only the planner's work weight:
+//!
+//! * [`Engine::plan_spgemm`] builds a [`PartitionPlan`] whose balanced
+//!   boundaries equalize **flops**
+//!   ([`WorkModel::SpgemmFlops`](crate::coordinator::WorkModel)) instead
+//!   of nnz — same pCSR/pCSC/pCOO machinery, different boundaries;
+//! * [`Engine::spgemm_with_plan`] executes the two-phase product
+//!   (symbolic structure counting, then numeric hash accumulation — the
+//!   row-merge design of Yang/Buluç/Owens) over the plan's per-GPU tasks
+//!   with B replicated per device, and merges the partial C blocks
+//!   (row-split: concatenation + boundary-row sums; column-split:
+//!   sparse partial sums) into one CSR;
+//! * [`Engine::spgemm`] is the one-shot shape: fresh flop-balanced plan,
+//!   partitioning cost charged to the report.
+//!
+//! Numerics are real (host-side reference kernels — SpGEMM has no AOT
+//! artifact, so even `Pjrt` engines execute the CPU path); multi-GPU
+//! *time* comes from [`crate::sim::model`]'s
+//! `spgemm_symbolic_time`/`spgemm_numeric_time` entries, where the
+//! compression factor `nnz(C)/flops` drives the accumulator term.
+
+mod kernels;
+mod merge;
+pub mod reference;
+
+pub use reference::{b_row_nnz, row_flops, spgemm_csr};
+
+use std::time::Instant;
+
+use crate::coordinator::merge::overlap_count;
+use crate::coordinator::worker;
+use crate::coordinator::{Engine, MergeClass, Mode, PartitionPlan};
+use crate::error::{Error, Result};
+use crate::formats::{convert, Csr, Matrix};
+use crate::sim::{model, DeviceMemory};
+
+/// Timing/traffic breakdown of one multi-GPU SpGEMM.
+#[derive(Debug, Clone, Default)]
+pub struct SpgemmMetrics {
+    /// GPUs used
+    pub np: usize,
+    /// C rows (== A rows)
+    pub m: usize,
+    /// C columns (== B columns)
+    pub n: usize,
+    /// nnz of A
+    pub a_nnz: u64,
+    /// nnz of B
+    pub b_nnz: u64,
+    /// nnz of the merged C
+    pub c_nnz: u64,
+    /// total multiply-adds (Σ over A elements of `nnz(B[col,:])`)
+    pub flops: u64,
+    /// per-GPU A-element loads (what nnz planning equalizes)
+    pub nnz_loads: Vec<u64>,
+    /// per-GPU flop loads (what flop planning equalizes)
+    pub flop_loads: Vec<u64>,
+    /// max/mean imbalance of `nnz_loads`
+    pub nnz_imbalance: f64,
+    /// max/mean imbalance of `flop_loads`
+    pub flop_imbalance: f64,
+
+    // ---- modeled timeline (seconds, simulated platform) ----
+    /// planning: boundary search / weighted prefix scan + rewrites (§4.1)
+    pub t_partition: f64,
+    /// host→device uploads (A streams + a B replica per GPU)
+    pub t_h2d: f64,
+    /// symbolic phase (max over GPUs; serial sum for the Baseline)
+    pub t_symbolic: f64,
+    /// numeric phase (max over GPUs; serial sum for the Baseline)
+    pub t_numeric: f64,
+    /// partial-C merging (downloads + concatenation/sparse sum)
+    pub t_merge: f64,
+    /// end-to-end modeled time
+    pub modeled_total: f64,
+
+    // ---- real host measurements (this container) ----
+    /// wall seconds building the plan
+    pub measured_partition: f64,
+    /// wall seconds in the symbolic fan-out
+    pub measured_symbolic: f64,
+    /// wall seconds in the numeric fan-out
+    pub measured_numeric: f64,
+    /// wall seconds merging partial C blocks
+    pub measured_merge: f64,
+
+    // ---- traffic ----
+    /// total host→device bytes
+    pub h2d_bytes: u64,
+    /// total device→host bytes (partial C blocks)
+    pub d2h_bytes: u64,
+    /// boundary rows requiring accumulation during the row merge
+    pub overlap_fixups: usize,
+}
+
+impl SpgemmMetrics {
+    /// Compression factor `nnz(C)/flops` — 1 means every multiply-add
+    /// created a fresh output entry, small values mean heavy accumulation.
+    pub fn compression(&self) -> f64 {
+        if self.flops == 0 {
+            1.0
+        } else {
+            self.c_nnz as f64 / self.flops as f64
+        }
+    }
+
+    /// Modeled throughput in GFLOP/s (2 flops per multiply-add).
+    pub fn gflops(&self) -> f64 {
+        if self.modeled_total <= 0.0 {
+            0.0
+        } else {
+            2.0 * self.flops as f64 / self.modeled_total / 1e9
+        }
+    }
+}
+
+/// Result of one engine SpGEMM: the product in CSR plus the breakdown.
+#[derive(Debug)]
+pub struct SpgemmReport {
+    /// `C = A·B` as CSR (rows sorted, columns sorted within each row)
+    pub c: Csr,
+    /// timing/traffic breakdown
+    pub metrics: SpgemmMetrics,
+}
+
+impl Engine {
+    /// Build a flop-balanced [`PartitionPlan`] for `C = A·B`: element
+    /// `(i, j)` of `a` weighs `nnz(B[j,:]) + 1`, so the balanced
+    /// boundaries equalize multiply-adds across GPUs instead of stored
+    /// elements. The plan partitions `a` only — it is reusable for any
+    /// right factor with the same row-nnz profile, and
+    /// [`Engine::spgemm_with_plan`] also accepts plain nnz plans from
+    /// [`Engine::plan`] (that is the planning ablation the reports
+    /// compare).
+    pub fn plan_spgemm(&self, a: &Matrix, b: &Matrix) -> Result<PartitionPlan> {
+        check_product_dims(a, b)?;
+        PartitionPlan::build_spgemm(a, self.config(), &b_row_nnz(b))
+    }
+
+    /// One-shot multi-GPU SpGEMM: fresh flop-balanced plan, partitioning
+    /// cost charged to the report (the paper's per-call shape).
+    pub fn spgemm(&self, a: &Matrix, b: &Matrix) -> Result<SpgemmReport> {
+        let plan = self.plan_spgemm(a, b)?;
+        let mut rep = self.spgemm_with_plan(&plan, b)?;
+        rep.metrics.t_partition = plan.t_partition;
+        rep.metrics.modeled_total += plan.t_partition;
+        rep.metrics.measured_partition = plan.measured_partition;
+        Ok(rep)
+    }
+
+    /// Multi-GPU SpGEMM against a prebuilt plan of A (no partitioning
+    /// charged). Dispatches the plan's storage format: pCSR row-split
+    /// (hash row-merge), pCSC column-split (outer-product partials) or
+    /// pCOO element-split, each with a full B replica per GPU, then
+    /// merges the per-GPU partial C blocks into one CSR.
+    pub fn spgemm_with_plan(&self, plan: &PartitionPlan, b: &Matrix) -> Result<SpgemmReport> {
+        plan.validate_for(self.config())?;
+        if plan.n != b.rows() {
+            return Err(Error::InvalidMatrix(format!(
+                "A has {} columns but B has {} rows",
+                plan.n,
+                b.rows()
+            )));
+        }
+        let cfg = self.config();
+        let np = cfg.num_gpus;
+        let p = &cfg.platform;
+        let threaded = cfg.mode != Mode::Baseline;
+        let tasks = &plan.tasks;
+        let m = plan.m;
+        let nc = b.cols();
+        // B is broadcast to every GPU in CSR row-access form (it plays
+        // the role x plays in SpMV)
+        let b_csr = convert::to_csr(b);
+        let b_nnz = b_csr.nnz() as u64;
+        let b_rows = b_csr.rows() as u64;
+
+        // ---- 1. symbolic phase: structure counts (real + model) --------
+        let sym_start = Instant::now();
+        let sym_fan =
+            worker::run_per_gpu(np, threaded, |g| kernels::task_symbolic(&tasks[g], &b_csr));
+        let measured_symbolic = sym_start.elapsed().as_secs_f64();
+        let sym = sym_fan.results;
+        let flop_loads: Vec<u64> = sym.iter().map(|s| s.flops).collect();
+        let partial_nnz: Vec<u64> = sym.iter().map(|s| s.c_nnz).collect();
+
+        // ---- 2. device memory accounting (symbolic sizes the numeric
+        //         accumulators — that is why the phase order matters) ----
+        for (t, s) in tasks.iter().zip(&sym) {
+            let mut mem = DeviceMemory::new(t.gpu, p.gpu_mem_bytes);
+            mem.alloc("a_stream", (t.nnz() * 12) as u64)?;
+            mem.alloc("b_replica", b_nnz * 8 + b_rows * 8)?;
+            mem.alloc("c_partial", s.c_nnz * 8)?;
+        }
+
+        // ---- 3. uploads ------------------------------------------------
+        let h2d: Vec<u64> = tasks
+            .iter()
+            .map(|t| model::spgemm_partition_bytes(t.nnz() as u64, b_nnz, b_rows))
+            .collect();
+        let src_numa: Vec<usize> = if cfg.effective_numa_aware() {
+            (0..np).map(|g| p.gpu_numa[g]).collect()
+        } else {
+            vec![0; np]
+        };
+        let t_h2d = if cfg.mode == Mode::Baseline {
+            model::serial_h2d_time(p, &h2d)
+        } else {
+            model::concurrent_h2d_times(
+                p,
+                &pad_to_gpus(&h2d, p.num_gpus),
+                &pad_to_gpus(&src_numa, p.num_gpus),
+            )
+            .into_iter()
+            .fold(0.0, f64::max)
+        };
+
+        // ---- 4. kernel phases (model) ----------------------------------
+        let sym_times: Vec<f64> = tasks
+            .iter()
+            .zip(&flop_loads)
+            .map(|(t, &f)| model::spgemm_symbolic_time(p, t.nnz() as u64, f))
+            .collect();
+        let num_times: Vec<f64> = tasks
+            .iter()
+            .zip(flop_loads.iter().zip(&partial_nnz))
+            .map(|(t, (&f, &cn))| model::spgemm_numeric_time(p, t.nnz() as u64, f, cn))
+            .collect();
+        let (t_symbolic, t_numeric) = if cfg.mode == Mode::Baseline {
+            (sym_times.iter().sum(), num_times.iter().sum())
+        } else {
+            (
+                sym_times.iter().cloned().fold(0.0, f64::max),
+                num_times.iter().cloned().fold(0.0, f64::max),
+            )
+        };
+
+        // ---- 5. numeric phase (real) -----------------------------------
+        let num_start = Instant::now();
+        let num_fan =
+            worker::run_per_gpu(np, threaded, |g| kernels::task_numeric(&tasks[g], &b_csr));
+        let measured_numeric = num_start.elapsed().as_secs_f64();
+        let partials = num_fan.results;
+
+        // ---- 6. merge (model + real) -----------------------------------
+        let d2h: Vec<u64> = tasks
+            .iter()
+            .zip(&partial_nnz)
+            .map(|(t, &cn)| cn * 8 + t.out_len as u64 * 8)
+            .collect();
+        let d2h_total: u64 = d2h.iter().sum();
+        let overlaps = overlap_count(tasks);
+        // pre-merge union estimate: the sparse-sum and tree-reduce costs
+        // move at most the concatenation of all partials
+        let c_bytes_est = partial_nnz.iter().sum::<u64>() * 8 + m as u64 * 8;
+        let t_merge = match (plan.merge_class, cfg.mode) {
+            (MergeClass::RowBased, Mode::Baseline) => {
+                d2h.iter().map(|&bs| model::lone_transfer_time(p, bs)).sum::<f64>()
+                    + model::cpu_fixup_time(overlaps)
+            }
+            (MergeClass::RowBased, _) => {
+                model::concurrent_d2h_times(
+                    p,
+                    &pad_to_gpus(&d2h, p.num_gpus),
+                    &pad_to_gpus(&src_numa, p.num_gpus),
+                )
+                .into_iter()
+                .fold(0.0, f64::max)
+                    + model::cpu_fixup_time(overlaps)
+            }
+            (MergeClass::ColBased, Mode::PStarOpt) => {
+                // gather-reduce the sparse partials on the GPUs, then one
+                // download of the merged result (§4.3's column path)
+                model::gpu_tree_reduce_time(p, np, c_bytes_est)
+                    + model::lone_transfer_time(p, c_bytes_est)
+            }
+            (MergeClass::ColBased, Mode::Baseline) => {
+                d2h.iter().map(|&bs| model::lone_transfer_time(p, bs)).sum::<f64>()
+                    + model::cpu_sparse_sum_time(p, d2h_total, c_bytes_est)
+            }
+            (MergeClass::ColBased, Mode::PStar) => {
+                model::concurrent_d2h_times(
+                    p,
+                    &pad_to_gpus(&d2h, p.num_gpus),
+                    &pad_to_gpus(&src_numa, p.num_gpus),
+                )
+                .into_iter()
+                .fold(0.0, f64::max)
+                    + model::cpu_sparse_sum_time(p, d2h_total, c_bytes_est)
+            }
+        };
+
+        let merge_start = Instant::now();
+        let c = merge::merge_partials(tasks, partials, m, nc)?;
+        let measured_merge = merge_start.elapsed().as_secs_f64();
+
+        let nnz_loads: Vec<u64> = tasks.iter().map(|t| t.nnz() as u64).collect();
+        let metrics = SpgemmMetrics {
+            np,
+            m,
+            n: nc,
+            a_nnz: plan.nnz,
+            b_nnz,
+            c_nnz: c.nnz() as u64,
+            flops: flop_loads.iter().sum(),
+            nnz_imbalance: crate::util::stats::imbalance(&nnz_loads),
+            flop_imbalance: crate::util::stats::imbalance(&flop_loads),
+            nnz_loads,
+            flop_loads,
+            t_partition: 0.0,
+            t_h2d,
+            t_symbolic,
+            t_numeric,
+            t_merge,
+            modeled_total: t_h2d + t_symbolic + t_numeric + t_merge,
+            measured_partition: 0.0,
+            measured_symbolic,
+            measured_numeric,
+            measured_merge,
+            h2d_bytes: h2d.iter().sum(),
+            d2h_bytes: d2h_total,
+            overlap_fixups: overlaps,
+        };
+        Ok(SpgemmReport { c, metrics })
+    }
+}
+
+/// Shared `A·B` conformance check.
+fn check_product_dims(a: &Matrix, b: &Matrix) -> Result<()> {
+    if a.cols() != b.rows() {
+        return Err(Error::InvalidMatrix(format!(
+            "A is {}x{} but B is {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    Ok(())
+}
+
+/// The cost-model entry points expect `platform.num_gpus`-length arrays;
+/// a run restricted to fewer GPUs pads with zero-byte transfers.
+fn pad_to_gpus<T: Clone + Default>(xs: &[T], total: usize) -> Vec<T> {
+    let mut v = xs.to_vec();
+    v.resize(total, T::default());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, RunConfig, WorkModel};
+    use crate::formats::{gen, Coo, FormatKind};
+    use crate::sim::Platform;
+
+    fn engine(mode: Mode, format: FormatKind, np: usize) -> Engine {
+        Engine::new(RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: np,
+            mode,
+            format,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: None,
+        })
+        .unwrap()
+    }
+
+    fn matrix_in(format: FormatKind, coo: &Coo) -> Matrix {
+        let m = Matrix::Coo(coo.clone());
+        match format {
+            FormatKind::Csr => Matrix::Csr(convert::to_csr(&m)),
+            FormatKind::Csc => Matrix::Csc(convert::to_csc(&m)),
+            FormatKind::Coo => m,
+        }
+    }
+
+    fn assert_dense_close(got: &Csr, want: &Csr) {
+        let (dg, dw) = (got.to_dense(), want.to_dense());
+        assert_eq!(dg.len(), dw.len());
+        for (i, (rg, rw)) in dg.iter().zip(&dw).enumerate() {
+            for (j, (a, b)) in rg.iter().zip(rw).enumerate() {
+                assert!(
+                    (a - b).abs() < 3e-3 * (1.0 + b.abs()),
+                    "({i},{j}): {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spgemm_matches_reference_all_modes_formats_and_np() {
+        let coo = gen::power_law(150, 150, 1_200, 2.0, 31);
+        let b = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone())));
+        let expect = spgemm_csr(&convert::to_csr(&b), &convert::to_csr(&b)).unwrap();
+        for format in FormatKind::ALL {
+            let a = matrix_in(format, &coo);
+            for mode in Mode::ALL {
+                for np in [1, 3, 8] {
+                    let rep = engine(mode, format, np).spgemm(&a, &b).unwrap();
+                    assert_dense_close(&rep.c, &expect);
+                    assert_eq!(rep.metrics.np, np);
+                    assert!(rep.metrics.modeled_total > 0.0, "{format:?}/{mode:?}/np{np}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_sorted_coo_dispatches_column_split() {
+        let mut coo = gen::uniform(80, 80, 600, 7);
+        coo.sort_by_col();
+        let a = Matrix::Coo(coo.clone());
+        let b = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let eng = engine(Mode::PStarOpt, FormatKind::Coo, 4);
+        let plan = eng.plan_spgemm(&a, &b).unwrap();
+        assert_eq!(plan.merge_class, MergeClass::ColBased);
+        let rep = eng.spgemm_with_plan(&plan, &b).unwrap();
+        let expect = spgemm_csr(&convert::to_csr(&b), &convert::to_csr(&b)).unwrap();
+        assert_dense_close(&rep.c, &expect);
+    }
+
+    #[test]
+    fn rectangular_chain_and_dim_checks() {
+        let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::uniform(40, 60, 400, 11))));
+        let b = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::uniform(60, 25, 300, 12))));
+        let eng = engine(Mode::PStarOpt, FormatKind::Csr, 4);
+        let rep = eng.spgemm(&a, &b).unwrap();
+        assert_eq!((rep.c.rows(), rep.c.cols()), (40, 25));
+        assert_dense_close(
+            &rep.c,
+            &spgemm_csr(&convert::to_csr(&a), &convert::to_csr(&b)).unwrap(),
+        );
+        // B·A does not conform
+        assert!(eng.spgemm(&b, &a).is_err());
+        assert!(eng.plan_spgemm(&b, &a).is_err());
+    }
+
+    #[test]
+    fn one_shot_charges_partitioning_with_plan_does_not() {
+        let coo = gen::power_law(200, 200, 2_000, 2.0, 41);
+        let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let eng = engine(Mode::PStarOpt, FormatKind::Csr, 8);
+        let plan = eng.plan_spgemm(&a, &a).unwrap();
+        assert_eq!(plan.work, WorkModel::SpgemmFlops);
+        let fresh = eng.spgemm(&a, &a).unwrap();
+        let cached = eng.spgemm_with_plan(&plan, &a).unwrap();
+        assert_eq!(fresh.c.val, cached.c.val);
+        assert_eq!(cached.metrics.t_partition, 0.0);
+        assert!(fresh.metrics.t_partition > 0.0);
+        let diff = fresh.metrics.modeled_total - (cached.metrics.modeled_total + plan.t_partition);
+        assert!(diff.abs() < 1e-15, "totals differ by {diff}");
+    }
+
+    #[test]
+    fn flop_plan_beats_nnz_plan_on_skewed_square() {
+        // heavy-tailed A·A: nnz-balanced partitions leave flops skewed
+        let coo = gen::power_law(1_500, 1_500, 25_000, 1.6, 57);
+        let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let eng = engine(Mode::PStarOpt, FormatKind::Csr, 8);
+        let flop_plan = eng.plan_spgemm(&a, &a).unwrap();
+        let nnz_plan = eng.plan(&a).unwrap();
+        let by_flops = eng.spgemm_with_plan(&flop_plan, &a).unwrap();
+        let by_nnz = eng.spgemm_with_plan(&nnz_plan, &a).unwrap();
+        // identical numerics either way
+        assert_eq!(by_flops.c.val.len(), by_nnz.c.val.len());
+        assert!(
+            by_flops.metrics.flop_imbalance < by_nnz.metrics.flop_imbalance,
+            "flop imbalance {} vs {}",
+            by_flops.metrics.flop_imbalance,
+            by_nnz.metrics.flop_imbalance
+        );
+        assert!(
+            by_flops.metrics.t_numeric < by_nnz.metrics.t_numeric,
+            "numeric {} vs {}",
+            by_flops.metrics.t_numeric,
+            by_nnz.metrics.t_numeric
+        );
+    }
+
+    #[test]
+    fn metrics_accounting_is_consistent() {
+        let coo = gen::power_law(300, 300, 3_000, 2.0, 77);
+        let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let eng = engine(Mode::PStar, FormatKind::Csr, 4);
+        let rep = eng.spgemm(&a, &a).unwrap();
+        let mm = &rep.metrics;
+        assert_eq!(mm.nnz_loads.iter().sum::<u64>(), mm.a_nnz);
+        assert_eq!(mm.flop_loads.iter().sum::<u64>(), mm.flops);
+        assert_eq!(mm.c_nnz, rep.c.nnz() as u64);
+        assert!(mm.compression() > 0.0 && mm.compression() <= 1.0);
+        assert!(mm.gflops() > 0.0);
+        // every GPU uploads its A share plus a full B replica
+        assert_eq!(
+            mm.h2d_bytes,
+            mm.a_nnz * 12 + 4 * (mm.b_nnz * 8 + 300 * 8)
+        );
+        assert!(mm.d2h_bytes >= mm.c_nnz * 8);
+    }
+
+    #[test]
+    fn mismatched_engine_rejected() {
+        let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::uniform(50, 50, 400, 3))));
+        let plan = engine(Mode::PStarOpt, FormatKind::Csr, 4).plan_spgemm(&a, &a).unwrap();
+        let other = engine(Mode::PStarOpt, FormatKind::Csr, 8);
+        assert!(other.spgemm_with_plan(&plan, &a).is_err());
+    }
+}

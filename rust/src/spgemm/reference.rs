@@ -1,0 +1,145 @@
+//! Exact single-threaded SpGEMM oracle: the dense-accumulator (SPA)
+//! CSR×CSR product every multi-GPU result verifies against, plus the
+//! flop-counting helpers the planner and reports share.
+
+use crate::error::{Error, Result};
+use crate::formats::{Csr, Matrix};
+
+/// Exact CSR×CSR product via a dense sparse-accumulator (Gustavson's
+/// row-by-row algorithm): for each row `i` of A, scatter
+/// `a_ik · B[k, :]` into a stamped dense row, then gather the touched
+/// columns in sorted order. O(flops + nnz(C)·log) time, O(n) extra space.
+pub fn spgemm_csr(a: &Csr, b: &Csr) -> Result<Csr> {
+    if a.cols() != b.rows() {
+        return Err(Error::InvalidMatrix(format!(
+            "A is {}x{} but B is {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    let m = a.rows();
+    let n = b.cols();
+    let mut row_ptr = Vec::with_capacity(m + 1);
+    row_ptr.push(0usize);
+    let mut col_idx: Vec<u32> = Vec::new();
+    let mut val: Vec<f32> = Vec::new();
+    // stamp[c] == i+1 marks column c as touched by row i (0 = never)
+    let mut stamp = vec![0usize; n];
+    let mut acc = vec![0.0f32; n];
+    let mut touched: Vec<u32> = Vec::new();
+    for i in 0..m {
+        touched.clear();
+        for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+            let j = a.col_idx[k] as usize;
+            let va = a.val[k];
+            for kb in b.row_ptr[j]..b.row_ptr[j + 1] {
+                let c = b.col_idx[kb] as usize;
+                if stamp[c] != i + 1 {
+                    stamp[c] = i + 1;
+                    acc[c] = 0.0;
+                    touched.push(c as u32);
+                }
+                acc[c] += va * b.val[kb];
+            }
+        }
+        touched.sort_unstable();
+        for &c in &touched {
+            col_idx.push(c);
+            val.push(acc[c as usize]);
+        }
+        row_ptr.push(col_idx.len());
+    }
+    Csr::new(m, n, row_ptr, col_idx, val)
+}
+
+/// Per-row nnz of `b` — the SpGEMM work-weight input (one entry per row
+/// of B, whatever B's storage format).
+pub fn b_row_nnz(b: &Matrix) -> Vec<u64> {
+    match b {
+        Matrix::Csr(x) => (0..x.rows()).map(|i| x.row_nnz(i) as u64).collect(),
+        Matrix::Csc(x) => {
+            let mut h = vec![0u64; x.rows()];
+            for &r in &x.row_idx {
+                h[r as usize] += 1;
+            }
+            h
+        }
+        Matrix::Coo(x) => {
+            let mut h = vec![0u64; x.rows()];
+            for &r in &x.row_idx {
+                h[r as usize] += 1;
+            }
+            h
+        }
+    }
+}
+
+/// Per-row SpGEMM flop counts of `C = A·B`:
+/// `flops(i) = Σ_{j ∈ A[i,:]} nnz(B[j,:])` — the per-row work the
+/// flop-balanced planner equalizes and the `profile` histogram plots.
+pub fn row_flops(a: &Csr, b_row_nnz: &[u64]) -> Vec<u64> {
+    (0..a.rows())
+        .map(|i| {
+            a.col_idx[a.row_ptr[i]..a.row_ptr[i + 1]]
+                .iter()
+                .map(|&j| b_row_nnz[j as usize])
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{convert, gen, Coo};
+
+    #[test]
+    fn paper_example_squared_matches_dense() {
+        let a = convert::to_csr(&Matrix::Coo(Coo::paper_example()));
+        let c = spgemm_csr(&a, &a).unwrap();
+        let (da, dc) = (a.to_dense(), c.to_dense());
+        for i in 0..6 {
+            for j in 0..6 {
+                let want: f32 = (0..6).map(|k| da[i][k] * da[k][j]).sum();
+                assert!((dc[i][j] - want).abs() < 1e-3, "({i},{j}): {} vs {want}", dc[i][j]);
+            }
+        }
+    }
+
+    #[test]
+    fn rectangular_product_shapes() {
+        let a = convert::to_csr(&Matrix::Coo(gen::uniform(20, 30, 100, 3)));
+        let b = convert::to_csr(&Matrix::Coo(gen::uniform(30, 10, 80, 4)));
+        let c = spgemm_csr(&a, &b).unwrap();
+        assert_eq!((c.rows(), c.cols()), (20, 10));
+        assert!(spgemm_csr(&b, &a).is_err()); // 10 != 20
+    }
+
+    #[test]
+    fn flop_helpers_are_consistent() {
+        let coo = gen::power_law(200, 200, 2_000, 2.0, 9);
+        let a = convert::to_csr(&Matrix::Coo(coo.clone()));
+        let brn = b_row_nnz(&Matrix::Csr(a.clone()));
+        assert_eq!(brn.iter().sum::<u64>(), a.nnz() as u64);
+        // same counts from CSC and COO storage
+        assert_eq!(brn, b_row_nnz(&Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone())))));
+        assert_eq!(brn, b_row_nnz(&Matrix::Coo(coo)));
+        let rf = row_flops(&a, &brn);
+        assert_eq!(rf.len(), 200);
+        // total flops == Σ over elements of nnz(B row)
+        let total: u64 = a.col_idx.iter().map(|&j| brn[j as usize]).sum();
+        assert_eq!(rf.iter().sum::<u64>(), total);
+    }
+
+    #[test]
+    fn empty_rows_produce_empty_output_rows() {
+        let coo = Coo::new(3, 3, vec![0, 2], vec![1, 2], vec![2.0, 3.0]).unwrap();
+        let a = Csr::from_coo(&coo);
+        let c = spgemm_csr(&a, &a).unwrap();
+        // row 0 references column 1 (empty row of A) => empty C row
+        assert_eq!(c.row_nnz(0), 0);
+        assert_eq!(c.to_dense()[2][2], 9.0);
+    }
+}

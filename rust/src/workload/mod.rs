@@ -1,10 +1,12 @@
 //! Evaluation workloads: the Table-2 matrix suite (scaled synthetic
-//! analogs), the Fig. 6 imbalance sweep inputs, and the solver scenario
-//! set (`msrep solver-bench --scenarios`).
+//! analogs), the Fig. 6 imbalance sweep inputs, the solver scenario set
+//! (`msrep solver-bench --scenarios`), and the SpGEMM product-chain
+//! scenarios (`msrep spgemm-bench`).
 
 mod suite;
 
 pub use suite::{
-    by_name, fig6_ratios, scenario_matrix, solver_scenario_by_name, solver_scenarios, suite,
-    suite_matrix, SolverScenario, SuiteEntry,
+    by_name, fig6_ratios, row_stochastic, scenario_matrix, solver_scenario_by_name,
+    solver_scenarios, spgemm_scenario_by_name, spgemm_scenario_chain, spgemm_scenarios, suite,
+    suite_matrix, SolverScenario, SpgemmScenario, SuiteEntry,
 };

@@ -165,6 +165,64 @@ fn serve_bench_help_lists_flags() {
 }
 
 #[test]
+fn spgemm_bench_compares_planning_models() {
+    let o = msrep(&["spgemm-bench", "--scenario", "galerkin-rap", "--gpus", "4"]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let s = stdout(&o);
+    assert!(s.contains("galerkin-rap"), "missing scenario header:\n{s}");
+    assert!(s.contains("symbolic"), "missing phase split:\n{s}");
+    assert!(s.contains("compression nnz(C)/flops"), "missing compression:\n{s}");
+    assert!(
+        s.contains("nnz-balanced vs flop-balanced planning"),
+        "missing comparison summary:\n{s}"
+    );
+}
+
+#[test]
+fn spgemm_bench_help_and_bad_scenario() {
+    let o = msrep(&["spgemm-bench", "--help"]);
+    assert!(o.status.success());
+    let s = stdout(&o);
+    assert!(s.contains("--scenario") && s.contains("--no-compare"));
+    assert!(!msrep(&["spgemm-bench", "--scenario", "frobnicate"]).status.success());
+}
+
+#[test]
+fn profile_prints_spgemm_flop_histogram() {
+    let dir = tmpdir();
+    let mtx = dir.join("cli_spgemm_profile.mtx");
+    let mtx_s = mtx.to_str().unwrap();
+    let o = msrep(&[
+        "gen", "--out", mtx_s, "--kind", "power-law", "--m", "400", "--nnz", "4000",
+        "--r", "1.8", "--seed", "2",
+    ]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let o = msrep(&["profile", "--matrix", mtx_s]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let s = stdout(&o);
+    assert!(s.contains("per-row SpGEMM flop histogram"), "missing histogram:\n{s}");
+    assert!(s.contains("row-flop imbalance"), "missing imbalance line:\n{s}");
+    // opt-out flag suppresses it
+    let o = msrep(&["profile", "--matrix", mtx_s, "--no-spgemm"]);
+    assert!(o.status.success());
+    assert!(!stdout(&o).contains("flop histogram"));
+    // rectangular matrices skip the A·A preview instead of panicking
+    let rect = dir.join("cli_spgemm_profile_rect.mtx");
+    let rect_s = rect.to_str().unwrap();
+    let o = msrep(&[
+        "gen", "--out", rect_s, "--kind", "uniform", "--m", "100", "--n", "250", "--nnz",
+        "1000", "--seed", "3",
+    ]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let o = msrep(&["profile", "--matrix", rect_s]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let s = stdout(&o);
+    assert!(s.contains("histogram skipped"), "missing skip note:\n{s}");
+    std::fs::remove_file(mtx).ok();
+    std::fs::remove_file(rect).ok();
+}
+
+#[test]
 fn bad_flags_are_rejected() {
     assert!(!msrep(&["run", "--platform", "cray"]).status.success());
     assert!(!msrep(&["run", "--suite", "nope", "--backend", "cpu"]).status.success());

@@ -1,0 +1,189 @@
+//! SpGEMM integration: the multi-GPU `C = A·B` matches the dense
+//! reference product across all three partitioned formats (property
+//! test), the Galerkin triple product works as a chain, and — the
+//! planning acceptance — flop-balanced plans beat nnz-balanced plans on
+//! a skewed power-law A·A under the sim cost model.
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig, WorkModel};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
+use msrep::sim::Platform;
+use msrep::spgemm::spgemm_csr;
+use msrep::util::prop::check;
+use msrep::workload;
+
+fn engine(np: usize) -> Engine {
+    Engine::new(RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: np,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })
+    .expect("engine")
+}
+
+/// f64 dense reference of A·B.
+fn dense_product(a: &Matrix, b: &Matrix) -> Vec<Vec<f64>> {
+    let da = convert::to_coo(a).to_dense();
+    let db = convert::to_coo(b).to_dense();
+    let (m, kk, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = vec![vec![0.0f64; n]; m];
+    for i in 0..m {
+        for k in 0..kk {
+            let v = da[i][k] as f64;
+            if v != 0.0 {
+                for (j, cij) in c[i].iter_mut().enumerate() {
+                    *cij += v * db[k][j] as f64;
+                }
+            }
+        }
+    }
+    c
+}
+
+fn assert_matches_dense(got: &msrep::formats::Csr, want: &[Vec<f64>], ctx: &str) {
+    let dg = got.to_dense();
+    assert_eq!(dg.len(), want.len(), "{ctx}: row count");
+    for (i, (rg, rw)) in dg.iter().zip(want).enumerate() {
+        assert_eq!(rg.len(), rw.len(), "{ctx}: col count");
+        for (j, (a, b)) in rg.iter().zip(rw).enumerate() {
+            assert!(
+                (*a as f64 - b).abs() < 3e-3 * (1.0 + b.abs()),
+                "{ctx}: ({i},{j}): {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn spgemm_matches_dense_reference_property_all_formats() {
+    check("spgemm == dense A·B", 24, |g| {
+        let m = g.usize_in(2..4 + g.size() * 3);
+        let kk = g.usize_in(2..4 + g.size() * 3);
+        let n = g.usize_in(2..4 + g.size() * 3);
+        let seed = g.usize_in(0..1_000_000) as u64;
+        let nnz_a = g.usize_in(1..2 + m * kk / 2);
+        let nnz_b = g.usize_in(1..2 + kk * n / 2);
+        let a_coo = gen::uniform(m, kk, nnz_a, seed);
+        let b = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::uniform(kk, n, nnz_b, seed + 1))));
+        let expect = dense_product(&Matrix::Coo(a_coo.clone()), &b);
+        let np = *g.choose(&[1usize, 2, 4, 8]);
+        for format in FormatKind::ALL {
+            let a = match format {
+                FormatKind::Csr => Matrix::Csr(convert::to_csr(&Matrix::Coo(a_coo.clone()))),
+                FormatKind::Csc => Matrix::Csc(convert::to_csc(&Matrix::Coo(a_coo.clone()))),
+                FormatKind::Coo => Matrix::Coo(a_coo.clone()),
+            };
+            let rep = engine(np).spgemm(&a, &b).expect("spgemm");
+            assert_matches_dense(&rep.c, &expect, &format!("{format:?}/np{np}/seed{seed}"));
+        }
+        // col-sorted COO exercises the element-split / column-merge path
+        let mut col_sorted = a_coo.clone();
+        col_sorted.sort_by_col();
+        let rep = engine(np).spgemm(&Matrix::Coo(col_sorted), &b).expect("col-sorted spgemm");
+        assert_matches_dense(&rep.c, &expect, &format!("coo-col/np{np}/seed{seed}"));
+    });
+}
+
+#[test]
+fn spgemm_agrees_with_reference_oracle() {
+    let a = convert::to_csr(&Matrix::Coo(gen::power_law(400, 400, 6_000, 2.0, 17)));
+    let oracle = spgemm_csr(&a, &a).unwrap();
+    let rep = engine(8).spgemm(&Matrix::Csr(a.clone()), &Matrix::Csr(a)).unwrap();
+    // identical structure, near-identical values
+    assert_eq!(rep.c.row_ptr, oracle.row_ptr);
+    assert_eq!(rep.c.col_idx, oracle.col_idx);
+    for (x, y) in rep.c.val.iter().zip(&oracle.val) {
+        assert!((x - y).abs() < 3e-3 * (1.0 + y.abs()), "{x} vs {y}");
+    }
+}
+
+#[test]
+fn galerkin_triple_product_matches_dense_and_stays_symmetric() {
+    // two-grid AMG setup on an 8x8 Poisson stencil: C = R·A·P
+    let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::laplacian_2d(8))));
+    let p_coo = gen::aggregation_2d(8);
+    let p = Matrix::Csr(convert::to_csr(&Matrix::Coo(p_coo.clone())));
+    let r = Matrix::Csr(convert::to_csr(&Matrix::Coo(p_coo.transpose())));
+    let eng = engine(4);
+    let ra = eng.spgemm(&r, &a).unwrap();
+    let rap = eng.spgemm(&Matrix::Csr(ra.c), &p).unwrap();
+    assert_eq!((rap.c.rows(), rap.c.cols()), (16, 16));
+    // dense f64 reference of the full chain
+    let ra_dense = dense_product(&r, &a);
+    let dp = convert::to_coo(&p).to_dense();
+    let mut expect = vec![vec![0.0f64; 16]; 16];
+    for i in 0..16 {
+        for k in 0..64 {
+            if ra_dense[i][k] != 0.0 {
+                for (j, e) in expect[i].iter_mut().enumerate() {
+                    *e += ra_dense[i][k] * dp[k][j] as f64;
+                }
+            }
+        }
+    }
+    assert_matches_dense(&rap.c, &expect, "galerkin");
+    // the Galerkin coarse operator of an SPD stencil is symmetric
+    let d = rap.c.to_dense();
+    for i in 0..16 {
+        for j in 0..16 {
+            assert!((d[i][j] - d[j][i]).abs() < 1e-3, "asymmetry at ({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn workload_chains_run_end_to_end() {
+    // smallest scenario end to end through the engine (the full set runs
+    // in benches/spgemm_balance.rs and the CLI)
+    let s = workload::spgemm_scenario_by_name("galerkin-rap").unwrap();
+    let chain = workload::spgemm_scenario_chain(&s);
+    let eng = engine(8);
+    let mut acc = chain[0].clone();
+    for b in &chain[1..] {
+        let rep = eng.spgemm(&acc, b).unwrap();
+        assert!(rep.metrics.modeled_total > 0.0);
+        acc = Matrix::Csr(rep.c);
+    }
+    assert_eq!((acc.rows(), acc.cols()), (256, 256));
+}
+
+#[test]
+fn flop_balanced_planning_beats_nnz_balanced_on_skewed_square() {
+    // the acceptance scenario: heavy-tailed A·A, where per-row flops
+    // decouple from per-row nnz
+    let coo = gen::power_law(2_000, 2_000, 30_000, 1.6, 91);
+    let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+    let eng = engine(8);
+    let nnz_plan = eng.plan(&a).unwrap();
+    let flop_plan = eng.plan_spgemm(&a, &a).unwrap();
+    assert_eq!(nnz_plan.work, WorkModel::Nnz);
+    assert_eq!(flop_plan.work, WorkModel::SpgemmFlops);
+    let by_nnz = eng.spgemm_with_plan(&nnz_plan, &a).unwrap();
+    let by_flops = eng.spgemm_with_plan(&flop_plan, &a).unwrap();
+    // planning must not change the numerics
+    assert_eq!(by_nnz.c.row_ptr, by_flops.c.row_ptr);
+    assert_eq!(by_nnz.c.col_idx, by_flops.c.col_idx);
+    // nnz-balanced partitions are flop-imbalanced on this input...
+    assert!(
+        by_nnz.metrics.flop_imbalance > 1.15,
+        "input not skewed enough: {}",
+        by_nnz.metrics.flop_imbalance
+    );
+    assert!(
+        by_flops.metrics.flop_imbalance < by_nnz.metrics.flop_imbalance,
+        "flop plan {} vs nnz plan {}",
+        by_flops.metrics.flop_imbalance,
+        by_nnz.metrics.flop_imbalance
+    );
+    // ...so the flop-balanced plan's max-GPU numeric time is strictly
+    // lower under the sim cost model (the acceptance criterion)
+    assert!(
+        by_flops.metrics.t_numeric < by_nnz.metrics.t_numeric,
+        "numeric phase: flops {} vs nnz {}",
+        by_flops.metrics.t_numeric,
+        by_nnz.metrics.t_numeric
+    );
+}
