@@ -5,6 +5,10 @@
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
+//!
+//! Without the AOT artifacts (fresh clone, CI) the demo falls back to the
+//! CpuRef backend — identical partition/merge/model logic, same
+//! verification — and says so, instead of failing.
 
 use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
 use msrep::formats::{convert, gen, FormatKind, Matrix};
@@ -20,16 +24,24 @@ fn main() -> msrep::Result<()> {
     println!("matrix: {}x{}, {} nnz (power-law R=2.0)", a.rows(), a.cols(), a.nnz());
 
     // 2. An engine simulating the paper's DGX-1 (8x V100), running the
-    //    fully-optimized MSREP variant with real kernels via PJRT.
-    let engine = Engine::new(RunConfig {
+    //    fully-optimized MSREP variant with real kernels via PJRT when the
+    //    AOT artifacts exist, the CpuRef reference kernels otherwise.
+    let cfg = |backend| RunConfig {
         platform: Platform::dgx1(),
         num_gpus: 8,
         mode: Mode::PStarOpt,
         format: FormatKind::Csr,
-        backend: Backend::Pjrt,
+        backend,
         numa_aware: None,
         strategy_override: None,
-    })?;
+    };
+    let engine = match Engine::new(cfg(Backend::Pjrt)) {
+        Ok(e) => e,
+        Err(err) => {
+            println!("PJRT artifacts unavailable ({err}); falling back to the CpuRef backend");
+            Engine::new(cfg(Backend::CpuRef))?
+        }
+    };
 
     // 3. y = 2*A*x + 0.5*y0
     let x = gen::dense_vector(a.cols(), 1);

@@ -1,0 +1,112 @@
+//! Bench: level-scheduled SpTRSV — level-balanced wavefront split vs
+//! naive row blocks across GPU counts (the DESIGN.md §11 acceptance
+//! sweep: the level split's modeled kernel time — Σ over levels of the
+//! max-GPU wavefront — must beat the row-block split on a skewed factor),
+//! plus the deep-vs-wide factor regime where the inter-level sync term
+//! takes over.
+//!
+//! Run with `cargo bench --bench sptrsv_levels`
+//! (`MSREP_BENCH_QUICK=1` shrinks the factors).
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+use msrep::formats::{gen, FormatKind, Matrix};
+use msrep::report::Table;
+use msrep::sim::Platform;
+use msrep::sptrsv::{triangular_of, SptrsvSplit, Triangle};
+use msrep::util::bench::section;
+
+fn engine(np: usize) -> Engine {
+    Engine::new(RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: np,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })
+    .expect("engine")
+}
+
+fn main() {
+    let quick = std::env::var("MSREP_BENCH_QUICK").is_ok();
+    let (m, nnz) = if quick { (1_000, 15_000) } else { (4_000, 60_000) };
+
+    // heavy-tailed lower factor: the skew that concentrates whole
+    // wavefronts on few GPUs under naive row-block ownership
+    let skewed = Matrix::Csr(triangular_of(
+        &Matrix::Coo(gen::power_law(m, m, nnz, 1.5, 42)),
+        Triangle::Lower,
+        1.0,
+    ));
+    let b = gen::dense_vector(m, 43);
+
+    section(&format!(
+        "SpTRSV wavefront split — dgx1, skewed lower factor, {m} rows, ~{} nnz (modeled)",
+        skewed.nnz()
+    ));
+    let mut t = Table::new([
+        "gpus",
+        "levels",
+        "kernels (rows)",
+        "kernels (levels)",
+        "speedup",
+        "sync share (levels)",
+    ]);
+    for np in [2, 4, 8] {
+        let eng = engine(np);
+        let lvl_plan = eng.plan_sptrsv(&skewed, Triangle::Lower).expect("level plan");
+        let row_plan = eng
+            .plan_sptrsv_with_split(&skewed, Triangle::Lower, SptrsvSplit::RowBlocks)
+            .expect("row plan");
+        let by_level = eng.sptrsv_with_plan(&lvl_plan, &b).expect("level solve");
+        let by_rows = eng.sptrsv_with_plan(&row_plan, &b).expect("row solve");
+        assert_eq!(by_level.x, by_rows.x, "np={np}: split policy must not change numerics");
+        assert!(
+            by_level.metrics.t_levels < by_rows.metrics.t_levels,
+            "np={np}: level-balanced kernels must beat naive row blocks \
+             ({} vs {})",
+            by_level.metrics.t_levels,
+            by_rows.metrics.t_levels
+        );
+        t.row([
+            np.to_string(),
+            by_level.metrics.levels.to_string(),
+            format!("{:.3e} s", by_rows.metrics.t_levels),
+            format!("{:.3e} s", by_level.metrics.t_levels),
+            format!("{:.2}x", by_rows.metrics.t_levels / by_level.metrics.t_levels),
+            format!(
+                "{:.1}%",
+                100.0 * by_level.metrics.t_sync / by_level.metrics.modeled_total
+            ),
+        ]);
+    }
+    print!("{}", t.render());
+
+    section("deep vs wide factors — where the inter-level sync term takes over (dgx1 x8)");
+    let band = if quick { 300 } else { 1_200 };
+    let deep = Matrix::Csr(triangular_of(
+        &Matrix::Coo(gen::banded(band, band, 5, 44)),
+        Triangle::Lower,
+        1.0,
+    ));
+    let wide = Matrix::Csr(triangular_of(
+        &Matrix::Coo(gen::uniform(band, band, 3 * band, 45)),
+        Triangle::Lower,
+        1.0,
+    ));
+    let eng = engine(8);
+    let bb = gen::dense_vector(band, 46);
+    for (name, factor) in [("banded (deep)", &deep), ("uniform (wide)", &wide)] {
+        let rep = eng.sptrsv(factor, &bb, Triangle::Lower).expect("solve");
+        println!(
+            "{name:<16} levels {:>5} | mean par {:>8.1} | kernels {:.3e} s | sync {:.3e} s \
+             ({:.1}% of total)",
+            rep.metrics.levels,
+            rep.metrics.mean_parallelism,
+            rep.metrics.t_levels,
+            rep.metrics.t_sync,
+            100.0 * rep.metrics.t_sync / rep.metrics.modeled_total,
+        );
+    }
+}

@@ -24,6 +24,7 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 use crate::formats::{FormatKind, Matrix};
 use crate::runtime::SpmvRuntime;
+use crate::sim::model::pad_to_gpus;
 use crate::sim::{model, DeviceMemory};
 
 use super::config::{Backend, Mode, RunConfig};
@@ -556,14 +557,6 @@ fn cpu_partial(t: &super::partitioner::GpuTask, x: &[f32], alpha: f32) -> Vec<f3
         }
     }
     py
-}
-
-/// The cost-model entry points expect `platform.num_gpus`-length arrays;
-/// a run restricted to fewer GPUs pads with zero-byte transfers.
-fn pad_to_gpus<T: Clone + Default>(xs: &[T], total: usize) -> Vec<T> {
-    let mut v = xs.to_vec();
-    v.resize(total, T::default());
-    v
 }
 
 #[cfg(test)]

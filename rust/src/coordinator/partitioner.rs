@@ -116,6 +116,15 @@ pub enum WorkModel {
     /// the `+1` keeps elements hitting empty B rows from being free, since
     /// their stream bytes still move over the host link)
     SpgemmFlops,
+    /// level-scheduled triangular-solve work: rows are grouped into
+    /// dependency wavefronts and each wavefront is split across GPUs by
+    /// row nnz, with inter-level barriers charged by the sim cost model
+    /// (`sptrsv_level_time` / `sptrsv_sync_time`). Plans of this kind are
+    /// built by [`Engine::plan_sptrsv`](crate::coordinator::Engine::plan_sptrsv),
+    /// not by the contiguous-range [`PartitionPlan`](super::PartitionPlan)
+    /// builder — a triangular solve has no single contiguous nnz split
+    /// that respects its row dependencies.
+    TrsvLevels,
 }
 
 impl WorkModel {
@@ -124,6 +133,7 @@ impl WorkModel {
         match self {
             WorkModel::Nnz => "nnz",
             WorkModel::SpgemmFlops => "flops",
+            WorkModel::TrsvLevels => "levels",
         }
     }
 }
@@ -153,6 +163,15 @@ pub fn spgemm_element_weights(matrix: &Matrix, b_row_nnz: &[u64]) -> Vec<u64> {
 /// ranges of near-equal total weight — the weighted generalization of the
 /// `⌊g·nnz/np⌋` boundaries (with unit weights the two are identical).
 /// Boundaries are non-decreasing, start at 0 and end at `weights.len()`.
+///
+/// Two totality guarantees the callers lean on:
+/// * **zero total work** (all-empty matrix, an empty wavefront of a
+///   level-scheduled plan, all-zero weights): falls back to an even
+///   element split so every range is still in-bounds and the ranges tile
+///   `[0, len)` — no GPU ever receives an out-of-range task range;
+/// * **trailing zero-weight elements** stay covered: the last boundary is
+///   pinned to `weights.len()` rather than the first prefix that reaches
+///   the total, so weightless tail elements are not silently dropped.
 pub fn weighted_boundaries(weights: &[u64], np: usize) -> Vec<usize> {
     assert!(np >= 1, "np must be >= 1");
     let mut prefix = Vec::with_capacity(weights.len() + 1);
@@ -161,8 +180,18 @@ pub fn weighted_boundaries(weights: &[u64], np: usize) -> Vec<usize> {
         prefix.push(prefix.last().unwrap() + w);
     }
     let total = *prefix.last().unwrap() as u128;
+    if total == 0 {
+        // no work to equalize: an even element split keeps the ranges
+        // tiling [0, len) (matches the unit-weight boundaries on an
+        // all-zero vector, where every split is equally balanced)
+        return (0..=np).map(|g| g * weights.len() / np).collect();
+    }
     (0..=np)
         .map(|g| {
+            if g == np {
+                // pin the end so trailing zero-weight elements stay covered
+                return weights.len();
+            }
             let target = (total * g as u128 / np as u128) as u64;
             // first element index whose prefix reaches the target
             prefix.partition_point(|&p| p < target).min(weights.len())
@@ -601,5 +630,64 @@ mod tests {
     fn work_model_labels() {
         assert_eq!(WorkModel::Nnz.label(), "nnz");
         assert_eq!(WorkModel::SpgemmFlops.label(), "flops");
+        assert_eq!(WorkModel::TrsvLevels.label(), "levels");
+    }
+
+    #[test]
+    fn weighted_boundaries_zero_total_work_still_tiles() {
+        // all-zero weights (an empty wavefront's rows): ranges must stay
+        // in-bounds and tile [0, len) — no out-of-range task ranges
+        for len in [0usize, 1, 5, 17] {
+            let w = vec![0u64; len];
+            for np in [1, 2, 4, 8] {
+                let b = weighted_boundaries(&w, np);
+                assert_eq!(b.len(), np + 1);
+                assert_eq!((b[0], b[np]), (0, len), "len={len} np={np}");
+                assert!(b.windows(2).all(|x| x[0] <= x[1]), "len={len} np={np}");
+                assert!(b.iter().all(|&x| x <= len), "len={len} np={np}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_boundaries_cover_trailing_zero_weights() {
+        // weightless tail elements must land in the last range, not be
+        // dropped at the first prefix that reaches the total
+        let w = vec![3u64, 2, 0, 0, 0];
+        for np in [1, 2, 3] {
+            let b = weighted_boundaries(&w, np);
+            assert_eq!(*b.last().unwrap(), 5, "np={np}: tail dropped ({b:?})");
+        }
+    }
+
+    #[test]
+    fn empty_matrix_partitions_have_valid_task_ranges() {
+        // all-empty matrix through every format and both strategies: tasks
+        // must exist, carry zero nnz, and keep out_offset/out_len in range
+        let coo = crate::formats::Coo::empty(7, 9);
+        for mat in [
+            Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
+            Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
+            Matrix::Coo(coo),
+        ] {
+            for np in [1, 3, 8] {
+                for out in [balanced(&mat, np).unwrap(), baseline(&mat, np).unwrap()] {
+                    assert_eq!(out.tasks.len(), np, "{:?}", mat.kind());
+                    for t in &out.tasks {
+                        assert_eq!(t.nnz(), 0);
+                        assert!(
+                            t.out_offset + t.out_len <= mat.rows(),
+                            "{:?} np={np}: out range {}..{} exceeds m {}",
+                            mat.kind(),
+                            t.out_offset,
+                            t.out_offset + t.out_len,
+                            mat.rows()
+                        );
+                    }
+                    // imbalance of an all-zero load vector is defined (1.0)
+                    assert!(out.imbalance().is_finite());
+                }
+            }
+        }
     }
 }

@@ -99,6 +99,15 @@ impl PartitionPlan {
         let weights: Option<Vec<u64>> = match work {
             WorkModel::Nnz => None,
             WorkModel::SpgemmFlops => Some(partitioner::spgemm_element_weights(a, b_row_nnz)),
+            // a triangular solve has no contiguous nnz split that respects
+            // its row dependencies — level-aware plans are a different
+            // shape (per-wavefront splits) built by Engine::plan_sptrsv
+            WorkModel::TrsvLevels => {
+                return Err(Error::InvalidPartition(
+                    "TrsvLevels plans are built by Engine::plan_sptrsv, not PartitionPlan::build"
+                        .into(),
+                ))
+            }
         };
         let bounds: Option<Vec<usize>> = match (&weights, strategy) {
             (Some(w), Strategy::NnzBalanced) => Some(partitioner::weighted_boundaries(w, np)),
@@ -324,6 +333,38 @@ mod tests {
         let searches = model::cpu_search_time(nnz_plan.search_ops);
         let diff = flop_plan.t_partition - (nnz_plan.t_partition - searches + scan);
         assert!(diff.abs() < 1e-15, "weighted charge off by {diff}");
+    }
+
+    #[test]
+    fn zero_work_plans_are_valid_for_every_format() {
+        // all-empty matrix: plans must build, tile [0, 0), and keep every
+        // task range in bounds (the weighted_boundaries zero-total fast
+        // path feeding build_task_range)
+        let coo = crate::formats::Coo::empty(11, 5);
+        for mat in [
+            Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
+            Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
+            Matrix::Coo(coo.clone()),
+        ] {
+            let plan = PartitionPlan::build(&mat, &cfg(4)).unwrap();
+            assert_eq!(plan.tasks.len(), 4);
+            assert_eq!(plan.nnz, 0);
+            assert!(plan.tasks.iter().all(|t| t.nnz() == 0));
+            assert!(plan.tasks.iter().all(|t| t.out_offset + t.out_len <= mat.rows()));
+            assert_eq!(plan.work_loads, vec![0; 4]);
+            assert!(plan.imbalance().is_finite());
+        }
+        // a zero-work spgemm plan (empty A) exercises the weighted path
+        let empty = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        let plan = PartitionPlan::build_spgemm(&empty, &cfg(4), &[3; 5]).unwrap();
+        assert_eq!(plan.work_loads.iter().sum::<u64>(), 0);
+        assert!(plan.tasks.iter().all(|t| t.nnz() == 0));
+    }
+
+    #[test]
+    fn trsv_levels_work_model_is_rejected_by_range_builder() {
+        let err = PartitionPlan::build_with_work(&matrix(), &cfg(4), WorkModel::TrsvLevels, &[]);
+        assert!(err.is_err(), "TrsvLevels must not build a contiguous-range plan");
     }
 
     #[test]

@@ -58,6 +58,15 @@
 //! ([`coordinator::WorkModel::SpgemmFlops`]) because SpGEMM row work is
 //! `Σ nnz(B[j,:])` over the row's column set, not nnz — see DESIGN.md §10
 //! and `examples/spgemm_demo.rs`.
+//!
+//! Triangular solves (`L x = b` / `U x = b`) live in [`sptrsv`]: row
+//! dependencies defeat any contiguous nnz split, so the planner groups
+//! rows into dependency **wavefronts** and splits each wavefront by nnz
+//! ([`coordinator::WorkModel::TrsvLevels`]), with inter-level barriers
+//! charged by the sim cost model. On top of it, [`solver::ilu0`] +
+//! [`solver::pcg`] give ILU(0)-preconditioned CG whose two triangular
+//! solves per iteration replay cached [`sptrsv::SptrsvPlan`]s — see
+//! DESIGN.md §11 and `examples/pcg_demo.rs`.
 
 #![warn(missing_docs)]
 
@@ -71,6 +80,7 @@ pub mod sim;
 pub mod solver;
 pub mod spgemm;
 pub mod spmv;
+pub mod sptrsv;
 pub mod util;
 pub mod workload;
 

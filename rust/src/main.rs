@@ -10,6 +10,7 @@
 //! msrep serve-bench ...                    batched multi-tenant serving sim
 //! msrep solver-bench ...                   plan-reusing iterative solvers
 //! msrep spgemm-bench ...                   flop-balanced multi-GPU SpGEMM
+//! msrep sptrsv-bench ...                   level-scheduled triangular solves
 //! ```
 //!
 //! The paper-figure regeneration lives in `cargo bench` /
@@ -52,13 +53,14 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "serve-bench" => cmd_serve_bench(rest),
         "solver-bench" => cmd_solver_bench(rest),
         "spgemm-bench" => cmd_spgemm_bench(rest),
+        "sptrsv-bench" => cmd_sptrsv_bench(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
         }
         other => Err(Error::Usage(format!(
             "unknown command '{other}' (expected info | gen | profile | partition | run | \
-             suite | serve-bench | solver-bench | spgemm-bench; try `msrep help`)"
+             suite | serve-bench | solver-bench | spgemm-bench | sptrsv-bench; try `msrep help`)"
         ))),
     }
 }
@@ -77,7 +79,10 @@ fn print_usage() {
          \x20 solver-bench run the plan-reusing iterative solvers (CG, Jacobi, PageRank) \
          with the amortization report (--help for flags)\n\
          \x20 spgemm-bench run the SpGEMM scenario chains (A², Galerkin R·A·P, Markov) \
-         comparing nnz- vs flop-balanced planning (--help for flags)\n"
+         comparing nnz- vs flop-balanced planning (--help for flags)\n\
+         \x20 sptrsv-bench run the level-scheduled triangular-solve scenarios \
+         comparing the level-balanced wavefront split against naive row blocks \
+         (--help for flags)\n"
     );
 }
 
@@ -502,7 +507,11 @@ fn solver_parser() -> Parser {
         .flag("gpus", "GPUs to use", None)
         .flag("mode", "baseline | pstar | popt", Some("popt"))
         .flag("format", "csr | csc | coo (CG/Jacobi input format)", Some("csr"))
-        .flag("method", "cg | jacobi | power | pagerank | all", Some("all"))
+        .flag(
+            "method",
+            "cg | pcg (ILU(0) on the Poisson stencil) | jacobi | power | pagerank | all",
+            Some("all"),
+        )
         .flag("source", "reused (plan once) | cold (re-partition per iteration)", Some("reused"))
         .flag("m", "rows = cols of the generated system", Some("10000"))
         .flag("nnz", "non-zeros of the generated system", Some("200000"))
@@ -516,9 +525,9 @@ fn solver_parser() -> Parser {
 
 /// Dispatch one solver method over a prebuilt system matrix (shared by
 /// the flag path and the `--scenarios` path — one copy of the
-/// manufactured-rhs convention). CG/Jacobi solve `A x = b` with
-/// `b = A·x*` for a seeded `x*`; power iteration runs the transpose
-/// (CSC-plan) dispatch like PageRank.
+/// manufactured-rhs convention). CG/Jacobi/PCG solve `A x = b` with
+/// `b = A·x*` for a seeded `x*` (PCG with the ILU(0) preconditioner);
+/// power iteration runs the transpose (CSC-plan) dispatch like PageRank.
 fn dispatch_solver(
     engine: &Engine,
     method: &str,
@@ -528,14 +537,20 @@ fn dispatch_solver(
     cfg: &msrep::solver::SolverConfig,
 ) -> Result<msrep::solver::SolveReport> {
     match method {
-        "cg" | "jacobi" => {
+        "cg" | "jacobi" | "pcg" => {
             let x_star = gen::dense_vector(mat.rows(), seed.wrapping_add(1));
             let mut b = vec![0.0f32; mat.rows()];
             msrep::spmv::spmv_matrix(mat, &x_star, 1.0, 0.0, &mut b)?;
-            if method == "cg" {
-                msrep::solver::cg(engine, mat, &b, cfg)
-            } else {
-                msrep::solver::jacobi(engine, mat, &b, cfg)
+            match method {
+                "cg" => msrep::solver::cg(engine, mat, &b, cfg),
+                "pcg" => msrep::solver::pcg(
+                    engine,
+                    mat,
+                    &b,
+                    msrep::solver::Preconditioner::Ilu0,
+                    cfg,
+                ),
+                _ => msrep::solver::jacobi(engine, mat, &b, cfg),
             }
         }
         "pagerank" => msrep::solver::pagerank(engine, mat, damping, cfg),
@@ -617,25 +632,34 @@ fn cmd_solver_bench(argv: Vec<String>) -> Result<()> {
         };
         let method_flag = a.str_or("method", "all");
         let methods: Vec<&str> = match method_flag.as_str() {
-            "all" => vec!["cg", "jacobi", "pagerank", "power"],
+            "all" => vec!["cg", "pcg", "jacobi", "pagerank", "power"],
             other => vec![other],
         };
         // validate up front so the lazy generators below never run for a typo
         for method in &methods {
-            if !matches!(*method, "cg" | "jacobi" | "pagerank" | "power") {
+            if !matches!(*method, "cg" | "pcg" | "jacobi" | "pagerank" | "power") {
                 return Err(Error::Usage(format!(
-                    "unknown method '{method}' (expected cg | jacobi | power | pagerank | all)"
+                    "unknown method '{method}' (expected cg | pcg | jacobi | power | pagerank \
+                     | all)"
                 )));
             }
         }
         // one matrix per family: cg/jacobi share the certified-SPD system,
+        // pcg runs the Poisson stencil its ILU(0) factors are built for
+        // (the certified-SPD generator may draw duplicate coordinates,
+        // which the zero-fill factorization rejects by contract),
         // pagerank/power share the power-law web graph
         let mut spd_mat: Option<Matrix> = None;
+        let mut lap_mat: Option<Matrix> = None;
         let mut graph_mat: Option<Matrix> = None;
         for method in methods {
             let mat: &Matrix = match method {
                 "cg" | "jacobi" => spd_mat.get_or_insert_with(|| {
                     to_format(Matrix::Coo(gen::spd(m, nnz, dominance, seed)), format)
+                }),
+                "pcg" => lap_mat.get_or_insert_with(|| {
+                    let grid = (m as f64).sqrt().round().max(2.0) as usize;
+                    Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::laplacian_2d(grid))))
                 }),
                 _ => graph_mat.get_or_insert_with(|| {
                     Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::power_law(
@@ -643,11 +667,12 @@ fn cmd_solver_bench(argv: Vec<String>) -> Result<()> {
                     ))))
                 }),
             };
+            let (mm, mnnz) = (mat.rows(), mat.nnz());
             let rep = dispatch_solver(&engine, method, mat, seed, damping, &cfg)?;
-            println!("== {method}: {m} x {m}, ~{nnz} nnz ==");
+            println!("== {method}: {mm} x {mm}, ~{mnnz} nnz ==");
             print!("{}", msrep::report::render_solver_report(&rep));
             println!();
-            push_summary(&mut summary, &rep, format!("{m}x{m}/{nnz}"));
+            push_summary(&mut summary, &rep, format!("{mm}x{mm}/{mnnz}"));
             reports.push(rep);
         }
     }
@@ -777,6 +802,136 @@ fn cmd_spgemm_bench(argv: Vec<String>) -> Result<()> {
     if compare {
         println!(
             "nnz-balanced vs flop-balanced planning (modeled numeric phase = max over GPUs):"
+        );
+        print!("{}", summary.render());
+    }
+    Ok(())
+}
+
+fn sptrsv_parser() -> Parser {
+    Parser::new()
+        .flag("platform", "summit | dgx1", Some("dgx1"))
+        .flag("gpus", "GPUs to use", None)
+        .flag("mode", "baseline | pstar | popt", Some("popt"))
+        .flag(
+            "scenario",
+            "scenario name (ilu0-poisson | powerlaw-lower | banded-lower) or 'all'",
+            Some("all"),
+        )
+        .flag("seed", "right-hand-side seed", Some("42"))
+        .bool_flag("no-compare", "skip the naive row-block split comparison")
+        .bool_flag("upper", "solve U x = b on the transposed factor instead")
+}
+
+fn cmd_sptrsv_bench(argv: Vec<String>) -> Result<()> {
+    let p = sptrsv_parser();
+    if argv.iter().any(|a| a == "--help") {
+        println!(
+            "msrep sptrsv-bench — level-scheduled multi-GPU triangular solves over the \
+             scenario factors\n{}",
+            p.help()
+        );
+        return Ok(());
+    }
+    let a = p.parse(argv)?;
+    let platform = Platform::by_name(&a.str_or("platform", "dgx1"))?;
+    let num_gpus = a.usize_or("gpus", platform.num_gpus)?;
+    let mode = Mode::parse(&a.str_or("mode", "popt"))
+        .ok_or_else(|| Error::Usage("bad --mode".into()))?;
+    let seed = a.u64_or("seed", 42)?;
+    let engine = Engine::new(RunConfig {
+        platform,
+        num_gpus,
+        mode,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })?;
+    let which = a.str_or("scenario", "all");
+    let scenarios: Vec<workload::SptrsvScenario> = if which == "all" {
+        workload::sptrsv_scenarios()
+    } else {
+        vec![workload::sptrsv_scenario_by_name(&which)
+            .ok_or_else(|| Error::Usage(format!("unknown sptrsv scenario '{which}'")))?]
+    };
+    let compare = !a.is_set("no-compare");
+    let triangle = if a.is_set("upper") {
+        msrep::sptrsv::Triangle::Upper
+    } else {
+        msrep::sptrsv::Triangle::Lower
+    };
+    println!(
+        "sptrsv-bench: {} x {} GPUs, mode {}, {} solve\n",
+        engine.config().platform.name,
+        num_gpus,
+        mode.label(),
+        triangle.label()
+    );
+    let mut summary = Table::new([
+        "scenario",
+        "levels",
+        "mean par",
+        "kernels (rows)",
+        "kernels (levels)",
+        "speedup",
+    ]);
+    for s in &scenarios {
+        let l = workload::sptrsv_scenario_factor(s);
+        let factor = match triangle {
+            msrep::sptrsv::Triangle::Lower => Matrix::Csr(l),
+            // U = Lᵀ: the same structure solved backward
+            msrep::sptrsv::Triangle::Upper => {
+                Matrix::Csr(convert::to_csr(&convert::transpose(&Matrix::Csr(l))))
+            }
+        };
+        let b = gen::dense_vector(factor.rows(), seed);
+        println!("== {} ({}) ==", s.name, s.kind);
+        let plan = engine.plan_sptrsv(&factor, triangle)?;
+        let mut rep = engine.sptrsv_with_plan(&plan, &b)?;
+        // one-shot attribution: the bench just paid the symbolic pass, so
+        // the rendered phase split must charge it (mirrors Engine::sptrsv)
+        rep.metrics.t_partition = plan.t_partition;
+        rep.metrics.modeled_total += plan.t_partition;
+        rep.metrics.measured_partition = plan.measured_partition;
+        print!("{}", msrep::report::render_sptrsv_report(&rep.metrics));
+        // verify against the sequential sparse oracle
+        let expect = msrep::sptrsv::trsv_csr(&convert::to_csr(&factor), &b, triangle)?;
+        let max_rel = rep
+            .x
+            .iter()
+            .zip(&expect)
+            .map(|(g, w)| (g - w).abs() / (1.0 + w.abs()))
+            .fold(0.0f32, f32::max);
+        println!("verify: max relative error vs sequential oracle = {max_rel:.2e}");
+        if max_rel > 1e-3 {
+            return Err(Error::InvalidMatrix(format!("verification FAILED ({max_rel})")));
+        }
+        if compare {
+            let row_plan = engine.plan_sptrsv_with_split(
+                &factor,
+                triangle,
+                msrep::sptrsv::SptrsvSplit::RowBlocks,
+            )?;
+            let row_rep = engine.sptrsv_with_plan(&row_plan, &b)?;
+            summary.row([
+                s.name.to_string(),
+                rep.metrics.levels.to_string(),
+                format!("{:.1}", rep.metrics.mean_parallelism),
+                format_duration_s(row_rep.metrics.t_levels),
+                format_duration_s(rep.metrics.t_levels),
+                format!(
+                    "{:.2}x",
+                    msrep::sim::model::speedup(row_rep.metrics.t_levels, rep.metrics.t_levels)
+                ),
+            ]);
+        }
+        println!();
+    }
+    if compare {
+        println!(
+            "level-balanced vs naive row-block wavefront split \
+             (modeled kernel time = Σ levels, max over GPUs):"
         );
         print!("{}", summary.render());
     }

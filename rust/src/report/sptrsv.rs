@@ -1,0 +1,137 @@
+//! Report rendering for the sptrsv subsystem: factor structure, the
+//! level-count / parallelism histogram, the modeled phase split and the
+//! per-GPU loads for one [`crate::sptrsv::SptrsvReport`], in the same
+//! table + ASCII style as the paper figures.
+
+use crate::sptrsv::SptrsvMetrics;
+
+use super::table::{ascii_bar, format_duration_s, format_pct, Table};
+
+/// How many histogram rows the level-parallelism plot samples at most.
+const HIST_POINTS: usize = 12;
+
+/// Render one multi-GPU triangular solve: structure table (levels, peak
+/// and mean wavefront parallelism), the modeled phase breakdown with
+/// shares, the per-level parallelism histogram and the per-GPU loads.
+pub fn render_sptrsv_report(m: &SptrsvMetrics) -> String {
+    let mut out = String::new();
+
+    let mut t = Table::new(["solve", "value"]);
+    t.row(["factor".to_string(), format!("{} x {}, {} nnz", m.n, m.n, m.nnz)]);
+    t.row(["triangle".to_string(), m.triangle.label().to_string()]);
+    t.row(["wavefront split".to_string(), m.split.label().to_string()]);
+    t.row(["levels (critical path)".to_string(), m.levels.to_string()]);
+    t.row(["peak parallelism".to_string(), format!("{} rows/level", m.max_parallelism)]);
+    t.row(["mean parallelism".to_string(), format!("{:.1} rows/level", m.mean_parallelism)]);
+    t.row(["per-GPU nnz imbalance".to_string(), format!("{:.3}", m.imbalance)]);
+    out.push_str(&t.render());
+
+    let total = m.modeled_total.max(1e-300);
+    let mut t = Table::new(["phase", "modeled", "share"]);
+    t.row([
+        "symbolic (levels + split)".to_string(),
+        format_duration_s(m.t_partition),
+        format_pct(m.t_partition / total),
+    ]);
+    t.row(["h2d".to_string(), format_duration_s(m.t_h2d), format_pct(m.t_h2d / total)]);
+    t.row([
+        "wavefront kernels".to_string(),
+        format_duration_s(m.t_levels),
+        format_pct(m.t_levels / total),
+    ]);
+    t.row([
+        "inter-level sync".to_string(),
+        format_duration_s(m.t_sync),
+        format_pct(m.t_sync / total),
+    ]);
+    t.row(["d2h".to_string(), format_duration_s(m.t_d2h), format_pct(m.t_d2h / total)]);
+    t.row(["TOTAL".to_string(), format_duration_s(m.modeled_total), "100.0%".to_string()]);
+    out.push_str(&t.render());
+
+    if !m.level_sizes.is_empty() {
+        let peak = m.max_parallelism.max(1) as f64;
+        out.push_str("parallelism histogram (rows per wavefront, bar = share of peak):\n");
+        let step = m.level_sizes.len().div_ceil(HIST_POINTS).max(1);
+        for (lvl, &rows) in m.level_sizes.iter().enumerate() {
+            if lvl % step != 0 && lvl + 1 != m.level_sizes.len() {
+                continue;
+            }
+            out.push_str(&format!(
+                "  level {:>5} |{}| {} rows\n",
+                lvl,
+                ascii_bar(rows as f64 / peak, 30),
+                rows
+            ));
+        }
+    }
+
+    if !m.nnz_loads.is_empty() {
+        let peak = m.nnz_loads.iter().copied().max().unwrap_or(0).max(1) as f64;
+        out.push_str("per-GPU nnz loads:\n");
+        for (g, &l) in m.nnz_loads.iter().enumerate() {
+            out.push_str(&format!(
+                "  gpu {g} |{}| {l}\n",
+                ascii_bar(l as f64 / peak, 30)
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sptrsv::{SptrsvSplit, Triangle};
+
+    fn metrics() -> SptrsvMetrics {
+        SptrsvMetrics {
+            np: 2,
+            n: 6,
+            nnz: 10,
+            triangle: Triangle::Lower,
+            split: SptrsvSplit::LevelBalanced,
+            levels: 3,
+            max_parallelism: 3,
+            mean_parallelism: 2.0,
+            level_sizes: vec![3, 2, 1],
+            nnz_loads: vec![6, 4],
+            imbalance: 1.2,
+            t_partition: 1e-6,
+            t_h2d: 2e-6,
+            t_levels: 3e-6,
+            t_sync: 1e-6,
+            t_d2h: 1e-6,
+            modeled_total: 8e-6,
+            measured_partition: 0.0,
+            measured_exec: 0.0,
+            h2d_bytes: 120,
+            d2h_bytes: 24,
+        }
+    }
+
+    #[test]
+    fn render_contains_structure_phases_and_histograms() {
+        let s = render_sptrsv_report(&metrics());
+        assert!(s.contains("levels (critical path)"));
+        assert!(s.contains("peak parallelism"));
+        assert!(s.contains("wavefront kernels"));
+        assert!(s.contains("inter-level sync"));
+        assert!(s.contains("parallelism histogram"));
+        assert!(s.contains("per-GPU nnz loads"));
+        assert!(s.contains("level     0"));
+        assert!(s.contains("3 rows"));
+        assert!(s.contains("TOTAL"));
+    }
+
+    #[test]
+    fn render_survives_empty_schedule() {
+        let mut m = metrics();
+        m.level_sizes.clear();
+        m.nnz_loads.clear();
+        m.levels = 0;
+        let s = render_sptrsv_report(&m);
+        assert!(!s.contains("parallelism histogram"));
+        assert!(!s.contains("per-GPU nnz loads"));
+        assert!(s.contains("TOTAL"));
+    }
+}

@@ -119,6 +119,37 @@ pub fn cpu_sparse_sum_time(p: &Platform, partial_bytes_total: u64, out_bytes: u6
     (partial_bytes_total + out_bytes) as f64 / (p.host_mem_bw / 4.0)
 }
 
+/// Effective fraction of HBM bandwidth a level-scheduled SpTRSV wavefront
+/// kernel achieves: below SpMV because every multiply gathers an x entry
+/// written by an *earlier* wavefront (dependent, scattered reads) and the
+/// per-row division serializes the tail of each row.
+pub const SPTRSV_EFFICIENCY: f64 = 0.40;
+
+/// One SpTRSV wavefront's kernel time on one GPU: stream the level's rows
+/// (12 B per stored element: val + col + row id) plus the per-row solve
+/// metadata (diagonal value + x write, 8 B/row). A GPU with no rows in
+/// the level launches nothing and costs nothing.
+pub fn sptrsv_level_time(p: &Platform, nnz: u64, rows: u64) -> f64 {
+    if nnz == 0 && rows == 0 {
+        return 0.0;
+    }
+    let bytes = (nnz * 12 + rows * 8) as f64;
+    p.launch_latency + bytes / (p.hbm_bw * SPTRSV_EFFICIENCY)
+}
+
+/// Inter-level barrier of the level-scheduled solve: the wavefront's newly
+/// computed x fragment (`frag_bytes`) must reach every other GPU before
+/// the next wavefront may launch — ⌈log2(np)⌉ broadcast rounds over the
+/// GPU–GPU links. This is the term that makes *deep* level graphs (banded
+/// factors, levels ≈ n) latency-bound no matter how the rows are split.
+pub fn sptrsv_sync_time(p: &Platform, np: usize, frag_bytes: u64) -> f64 {
+    if np <= 1 {
+        return 0.0;
+    }
+    let rounds = (np as f64).log2().ceil();
+    rounds * (p.transfer_latency + frag_bytes as f64 / p.gpu_gpu_bw)
+}
+
 /// COO→CSR conversion kernel the paper runs before cuSparse for COO inputs
 /// (§5.1): a device-side sort-free row-counting pass, ~3 sweeps of the
 /// stream.
@@ -246,6 +277,17 @@ pub fn cpu_rewrite_time(ops: u64) -> f64 {
 /// Modeled CPU time for the `np`-bounded merge overlap fix-ups (§4.3).
 pub fn cpu_fixup_time(overlaps: usize) -> f64 {
     overlaps as f64 * CPU_FIXUP_OP_S
+}
+
+/// Pad a per-used-GPU array out to the platform's full GPU count with
+/// default (zero-byte / socket-0) entries: the transfer-model entry
+/// points above expect `platform.num_gpus`-length arrays, while a run
+/// restricted to fewer GPUs only materializes entries for the GPUs it
+/// uses. One shared helper so every subsystem pads identically.
+pub fn pad_to_gpus<T: Clone + Default>(xs: &[T], total: usize) -> Vec<T> {
+    let mut v = xs.to_vec();
+    v.resize(total, T::default());
+    v
 }
 
 /// Speedup helper: serial_time / parallel_time.
@@ -390,6 +432,121 @@ mod tests {
     fn spgemm_partition_bytes_accounting() {
         // A stream at 12 B/nnz + B payload at 8 B/nnz + 8 B/row
         assert_eq!(spgemm_partition_bytes(10, 100, 20), 120 + 800 + 160);
+    }
+
+    #[test]
+    fn sptrsv_level_time_scales_and_idle_gpu_is_free() {
+        let p = Platform::dgx1();
+        assert_eq!(sptrsv_level_time(&p, 0, 0), 0.0);
+        let t1 = sptrsv_level_time(&p, 10_000, 1_000);
+        let t2 = sptrsv_level_time(&p, 20_000, 1_000);
+        assert!(t1 > 0.0 && t2 > t1);
+        // an active-but-tiny wavefront still pays the launch
+        assert!(sptrsv_level_time(&p, 1, 1) >= p.launch_latency);
+    }
+
+    #[test]
+    fn sptrsv_sync_rounds_are_logarithmic_and_single_gpu_free() {
+        let p = Platform::dgx1();
+        assert_eq!(sptrsv_sync_time(&p, 1, 1 << 20), 0.0);
+        let t2 = sptrsv_sync_time(&p, 2, 1 << 20);
+        let t8 = sptrsv_sync_time(&p, 8, 1 << 20);
+        assert!((t8 / t2 - 3.0).abs() < 1e-9); // log2(8)/log2(2)
+    }
+
+    // ---- cost-model invariant sweep: every modeled time/byte count is ----
+    // ---- non-negative and monotone non-decreasing in nnz ----------------
+
+    #[test]
+    fn times_and_bytes_non_negative_and_monotone_in_nnz() {
+        for p in [Platform::summit(), Platform::dgx1()] {
+            let nnzs = [0u64, 1, 10, 1_000, 1_000_000, 50_000_000];
+            for fmt in FormatKind::ALL {
+                let mut prev_b = 0u64;
+                let mut prev_kt = 0.0f64;
+                let mut prev_mt = 0.0f64;
+                for &nnz in &nnzs {
+                    let b = spmv_partition_bytes(nnz, 1_000, 1_000, fmt);
+                    let kt = spmv_kernel_time(&p, nnz, 1_000, 1_000, fmt);
+                    let mt = spmm_kernel_time(&p, nnz, 1_000, 1_000, 8, fmt);
+                    assert!(kt >= 0.0 && mt >= 0.0, "{fmt:?} nnz {nnz}");
+                    assert!(b >= prev_b && kt >= prev_kt && mt >= prev_mt, "{fmt:?} nnz {nnz}");
+                    (prev_b, prev_kt, prev_mt) = (b, kt, mt);
+                }
+            }
+            let mut prev = (0u64, 0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for &nnz in &nnzs {
+                let pb = spgemm_partition_bytes(nnz, nnz, 1_000);
+                let sy = spgemm_symbolic_time(&p, nnz, 4 * nnz);
+                let nu = spgemm_numeric_time(&p, nnz, 4 * nnz, 2 * nnz);
+                let tr = sptrsv_level_time(&p, nnz, 1_000);
+                let cv = coo_to_csr_conversion_time(&p, nnz);
+                for t in [sy, nu, tr, cv] {
+                    assert!(t >= 0.0, "nnz {nnz}");
+                }
+                assert!(
+                    pb >= prev.0 && sy >= prev.1 && nu >= prev.2 && tr >= prev.3 && cv >= prev.4,
+                    "nnz {nnz}"
+                );
+                prev = (pb, sy, nu, tr, cv);
+            }
+            // transfer/merge terms: non-negative, monotone in bytes
+            for &bytes in &[0u64, 1, 1 << 10, 1 << 30] {
+                assert!(lone_transfer_time(&p, bytes) >= 0.0);
+                assert!(gpu_tree_reduce_time(&p, 4, bytes) >= 0.0);
+                assert!(cpu_vector_sum_time(&p, 4, bytes) >= 0.0);
+                assert!(cpu_sparse_sum_time(&p, bytes, bytes) >= 0.0);
+                assert!(sptrsv_sync_time(&p, 4, bytes) >= 0.0);
+            }
+            assert!(lone_transfer_time(&p, 2 << 20) > lone_transfer_time(&p, 1 << 20));
+        }
+    }
+
+    #[test]
+    fn spgemm_compression_factor_stays_in_unit_interval() {
+        // cf = nnz(C)/flops ∈ (0, 1] drives the accumulator term as
+        // 8·flops·(1 + cf): observable as strict monotonicity in c_nnz,
+        // a bounded cf=1 vs cf→0 surcharge, and affinity in c_nnz
+        let p = Platform::dgx1();
+        let (a_nnz, flops) = (1_000u64, 1_000_000u64);
+        let empty_c = spgemm_numeric_time(&p, a_nnz, flops, 0);
+        let full_c = spgemm_numeric_time(&p, a_nnz, flops, flops);
+        assert!(full_c > empty_c, "fresh inserts (cf = 1) must cost more than hot updates");
+        // surcharge at cf = 1 over cf -> 0: the extra accumulator bytes
+        // (8·flops) plus the C write-out (8·flops) — exactly this, no more
+        let want = (8.0 * flops as f64 + 8.0 * flops as f64) / (p.hbm_bw * SPGEMM_EFFICIENCY);
+        assert!(
+            (full_c - empty_c - want).abs() < 1e-12,
+            "cf surcharge {} vs expected {}",
+            full_c - empty_c,
+            want
+        );
+        // affine in c_nnz: equal c_nnz steps cost equal extra time (the
+        // linear (1 + cf) model, not some re-clamped nonlinearity)
+        let quarter = spgemm_numeric_time(&p, a_nnz, flops, flops / 4);
+        let half = spgemm_numeric_time(&p, a_nnz, flops, flops / 2);
+        assert!((half - quarter - (quarter - empty_c)).abs() < 1e-12);
+        // flops == 0 pins cf to 1 and stays finite: only launch + A stream
+        let degenerate = spgemm_numeric_time(&p, a_nnz, 0, 0);
+        let want = p.launch_latency + (a_nnz * 12) as f64 / (p.hbm_bw * SPGEMM_EFFICIENCY);
+        assert!((degenerate - want).abs() < 1e-12);
+        assert!(degenerate.is_finite());
+    }
+
+    #[test]
+    fn per_gpu_loads_sum_to_total_work() {
+        use crate::coordinator::partitioner::weighted_boundaries;
+        // the planner's boundary scan must conserve work: for any weight
+        // vector and np, the per-range sums add up to the total
+        let weights: Vec<u64> = (0..997u64).map(|i| (i * 7919) % 23).collect();
+        let total: u64 = weights.iter().sum();
+        for np in [1, 2, 5, 8, 16] {
+            let b = weighted_boundaries(&weights, np);
+            let loads: Vec<u64> =
+                (0..np).map(|g| weights[b[g]..b[g + 1]].iter().sum()).collect();
+            assert_eq!(loads.iter().sum::<u64>(), total, "np={np}");
+            assert!(loads.iter().all(|&l| l <= total));
+        }
     }
 
     #[test]

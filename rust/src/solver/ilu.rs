@@ -1,0 +1,219 @@
+//! ILU(0) — incomplete LU factorization with zero fill-in.
+//!
+//! The classic preconditioner construction (Saad, *Iterative Methods*,
+//! §10.3): run Gaussian elimination but keep **only** the entries already
+//! present in A's sparsity pattern, so `L` and `U` together cost exactly
+//! `nnz(A)` storage. The factors satisfy `(L·U)[i,j] = A[i,j]` on the
+//! pattern; off-pattern fill is dropped, which is what makes `M = L·U` an
+//! *incomplete* (approximate) factorization — good enough to cluster the
+//! spectrum for [`super::pcg`], cheap enough to apply as two
+//! level-scheduled triangular solves per iteration
+//! ([`crate::sptrsv`], DESIGN.md §11).
+//!
+//! Implementation: the standard IKJ sweep on CSR with sorted column
+//! indices, f64 working precision (the factors are returned in f32 like
+//! every other payload).
+
+use crate::error::{Error, Result};
+use crate::formats::Csr;
+
+/// Factor `A ≈ L·U` with zero fill-in on A's sparsity pattern.
+///
+/// Returns `(L, U)`: `L` unit-lower-triangular (explicit 1.0 diagonal so
+/// it is directly solvable by [`crate::sptrsv`]), `U` upper-triangular
+/// carrying the pivots. Requires a square `A` whose rows have sorted,
+/// duplicate-free column indices (what [`Csr::from_coo`] produces for
+/// duplicate-free input) and a structurally present, non-zero pivot in
+/// every row — a zero pivot fails with [`Error::Solver`] rather than
+/// propagating NaNs into the preconditioner.
+pub fn ilu0(a: &Csr) -> Result<(Csr, Csr)> {
+    let n = a.rows();
+    if n != a.cols() {
+        return Err(Error::Solver(format!(
+            "ILU(0) needs a square matrix, got {}x{}",
+            n,
+            a.cols()
+        )));
+    }
+    // diag_at[i] = stream index of A[i,i]; every pivot must exist, and
+    // columns must be strictly sorted (the elimination's two-pointer
+    // merge and the pivot lookup both assume it — duplicate coordinates
+    // would silently corrupt the factors, so they are rejected here)
+    let mut diag_at = vec![usize::MAX; n];
+    for i in 0..n {
+        for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+            if k > a.row_ptr[i] && a.col_idx[k] <= a.col_idx[k - 1] {
+                return Err(Error::Solver(format!(
+                    "ILU(0) needs strictly sorted, duplicate-free columns (row {i})"
+                )));
+            }
+            if a.col_idx[k] as usize == i {
+                diag_at[i] = k;
+            }
+        }
+        if diag_at[i] == usize::MAX {
+            return Err(Error::Solver(format!(
+                "ILU(0) pivot missing: row {i} has no structural diagonal"
+            )));
+        }
+    }
+
+    let mut val: Vec<f64> = a.val.iter().map(|&v| v as f64).collect();
+    for i in 0..n {
+        // eliminate with every earlier row k present in row i (ascending k
+        // — columns are sorted, so the factored multipliers are final)
+        for kk in a.row_ptr[i]..diag_at[i] {
+            let k = a.col_idx[kk] as usize;
+            let pivot = val[diag_at[k]];
+            if pivot == 0.0 {
+                return Err(Error::Solver(format!(
+                    "ILU(0) zero pivot at row {k}: factorization broke down"
+                )));
+            }
+            let mult = val[kk] / pivot;
+            val[kk] = mult;
+            // row_i[j] -= mult * row_k[j] wherever (i, j) is in the
+            // pattern and j > k — a sorted two-pointer merge of the tails
+            let mut ik = kk + 1;
+            let mut kj = diag_at[k] + 1;
+            while ik < a.row_ptr[i + 1] && kj < a.row_ptr[k + 1] {
+                match a.col_idx[ik].cmp(&a.col_idx[kj]) {
+                    std::cmp::Ordering::Less => ik += 1,
+                    std::cmp::Ordering::Greater => kj += 1,
+                    std::cmp::Ordering::Equal => {
+                        val[ik] -= mult * val[kj];
+                        ik += 1;
+                        kj += 1;
+                    }
+                }
+            }
+        }
+        if val[diag_at[i]] == 0.0 {
+            return Err(Error::Solver(format!(
+                "ILU(0) zero pivot at row {i}: factorization broke down"
+            )));
+        }
+    }
+
+    // split the factored values: strict lower -> L (plus unit diagonal),
+    // diagonal + strict upper -> U
+    let mut l_ptr = vec![0usize; n + 1];
+    let mut u_ptr = vec![0usize; n + 1];
+    for i in 0..n {
+        l_ptr[i + 1] = l_ptr[i] + (diag_at[i] - a.row_ptr[i]) + 1;
+        u_ptr[i + 1] = u_ptr[i] + (a.row_ptr[i + 1] - diag_at[i]);
+    }
+    let mut l_col = Vec::with_capacity(l_ptr[n]);
+    let mut l_val = Vec::with_capacity(l_ptr[n]);
+    let mut u_col = Vec::with_capacity(u_ptr[n]);
+    let mut u_val = Vec::with_capacity(u_ptr[n]);
+    for i in 0..n {
+        for k in a.row_ptr[i]..diag_at[i] {
+            l_col.push(a.col_idx[k]);
+            l_val.push(val[k] as f32);
+        }
+        l_col.push(i as u32);
+        l_val.push(1.0);
+        for k in diag_at[i]..a.row_ptr[i + 1] {
+            u_col.push(a.col_idx[k]);
+            u_val.push(val[k] as f32);
+        }
+    }
+    Ok((
+        Csr::new(n, n, l_ptr, l_col, l_val)?,
+        Csr::new(n, n, u_ptr, u_col, u_val)?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{convert, gen, Coo, Matrix};
+    use crate::spgemm::spgemm_csr;
+
+    fn csr(m: &Matrix) -> Csr {
+        convert::to_csr(m)
+    }
+
+    #[test]
+    fn dense_pattern_ilu0_is_exact_lu() {
+        // on a full pattern there is nothing to drop: L·U == A exactly
+        let dense = vec![
+            vec![4.0, -1.0, 0.5],
+            vec![-1.0, 4.0, -1.0],
+            vec![0.5, -1.0, 4.0],
+        ];
+        let a = csr(&Matrix::Coo(Coo::from_dense(&dense)));
+        let (l, u) = ilu0(&a).unwrap();
+        let lu = spgemm_csr(&l, &u).unwrap();
+        let got = lu.to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!(
+                    (got[i][j] - dense[i][j]).abs() < 1e-5,
+                    "({i},{j}): {} vs {}",
+                    got[i][j],
+                    dense[i][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn factors_are_triangular_with_unit_l_diagonal() {
+        let a = csr(&Matrix::Coo(gen::laplacian_2d(8)));
+        let (l, u) = ilu0(&a).unwrap();
+        assert_eq!(l.nnz() + u.nnz(), a.nnz() + a.rows()); // pattern + unit diag
+        for i in 0..l.rows() {
+            for k in l.row_ptr[i]..l.row_ptr[i + 1] {
+                assert!(l.col_idx[k] as usize <= i, "L not lower at row {i}");
+            }
+            let last = l.row_ptr[i + 1] - 1;
+            assert_eq!(l.col_idx[last] as usize, i);
+            assert_eq!(l.val[last], 1.0, "L diagonal must be unit");
+            for k in u.row_ptr[i]..u.row_ptr[i + 1] {
+                assert!(u.col_idx[k] as usize >= i, "U not upper at row {i}");
+            }
+            assert_eq!(u.col_idx[u.row_ptr[i]] as usize, i, "U missing pivot at {i}");
+            assert!(u.val[u.row_ptr[i]] != 0.0);
+        }
+    }
+
+    #[test]
+    fn lu_matches_a_on_the_pattern() {
+        // the defining ILU(0) property: (L·U)[i,j] == A[i,j] wherever A
+        // has an entry (off-pattern fill may differ)
+        let a = csr(&Matrix::Coo(gen::laplacian_2d(10)));
+        let (l, u) = ilu0(&a).unwrap();
+        let lu = spgemm_csr(&l, &u).unwrap().to_dense();
+        let ad = a.to_dense();
+        for i in 0..a.rows() {
+            for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+                let j = a.col_idx[k] as usize;
+                assert!(
+                    (lu[i][j] - ad[i][j]).abs() < 1e-4 * (1.0 + ad[i][j].abs()),
+                    "pattern entry ({i},{j}): {} vs {}",
+                    lu[i][j],
+                    ad[i][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn missing_or_zero_pivot_is_rejected() {
+        // structurally missing diagonal
+        let no_diag = Csr::new(2, 2, vec![0, 1, 2], vec![1, 0], vec![1.0, 1.0]).unwrap();
+        assert!(ilu0(&no_diag).is_err());
+        // present but zero diagonal
+        let zero_diag =
+            Csr::new(2, 2, vec![0, 2, 4], vec![0, 1, 0, 1], vec![0.0, 1.0, 1.0, 1.0]).unwrap();
+        assert!(ilu0(&zero_diag).is_err());
+        // rectangular
+        let rect = csr(&Matrix::Coo(gen::uniform(3, 4, 5, 1)));
+        assert!(ilu0(&rect).is_err());
+        // duplicate coordinates (two (0,0) entries survive from_coo)
+        let dup = Coo::new(2, 2, vec![0, 0, 1], vec![0, 0, 1], vec![1.0, 2.0, 3.0]).unwrap();
+        assert!(ilu0(&Csr::from_coo(&dup)).is_err());
+    }
+}

@@ -23,7 +23,12 @@
 //!   [`convert::transpose`](crate::formats::convert::transpose)
 //!   reinterpretation (the
 //!   [`Engine::plan_transpose`](crate::coordinator::Engine::plan_transpose)
-//!   dispatch path — column-based merge every step).
+//!   dispatch path — column-based merge every step);
+//! * [`pcg`] — ILU(0)-preconditioned CG ([`ilu0`] zero-fill factors,
+//!   [`Preconditioner`]): each iteration applies `z = U⁻¹(L⁻¹ r)` as two
+//!   level-scheduled triangular solves through cached
+//!   [`crate::sptrsv::SptrsvPlan`]s — three plans (A, L, U) amortized
+//!   over the whole solve (DESIGN.md §11).
 //!
 //! Every solve returns a [`SolveReport`] carrying the per-iteration
 //! convergence trace and the modeled cost split (`t_plan` vs SpMV time),
@@ -32,11 +37,15 @@
 //! ([`crate::report::render_solver_report`]) renders it. See DESIGN.md §9.
 
 mod cg;
+mod ilu;
 mod jacobi;
+mod pcg;
 mod power;
 
 pub use cg::cg;
+pub use ilu::ilu0;
 pub use jacobi::jacobi;
+pub use pcg::{pcg, Preconditioner};
 pub use power::{pagerank, power_iteration};
 
 use crate::coordinator::{Engine, PartitionPlan};
@@ -279,6 +288,22 @@ impl<'a> PlannedSpmv<'a> {
         self.spmv_modeled += self.last_spmv_s;
         self.count += 1;
         Ok(rep.y)
+    }
+
+    /// Fold additional plan-build cost into `t_plan` — the hook
+    /// [`pcg`] uses to make its L/U sptrsv plan builds part of the
+    /// amortized-vs-cold comparison (all plans rebuild together under
+    /// [`PlanSource::Cold`]).
+    fn add_plan_cost(&mut self, s: f64) {
+        self.t_plan += s;
+    }
+
+    /// Charge modeled kernel time that rode along with the last SpMV
+    /// (the preconditioner's triangular solves): joins both the
+    /// accumulated total and the most recent iteration's stat.
+    fn charge_side(&mut self, s: f64) {
+        self.spmv_modeled += s;
+        self.last_spmv_s += s;
     }
 
     /// Total modeled time actually charged under the chosen source.

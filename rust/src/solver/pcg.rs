@@ -1,0 +1,281 @@
+//! Preconditioned Conjugate Gradient — CG with an `M⁻¹` solve per
+//! iteration, `M = L·U` from [`super::ilu0`].
+//!
+//! Plain CG needs `O(√κ)` iterations; ILU(0) clusters the spectrum of
+//! `M⁻¹A` so κ drops and the iteration count with it (on the 2-D Poisson
+//! stencil, roughly by half — the acceptance bar of DESIGN.md §11). The
+//! price is one extra `z = U⁻¹(L⁻¹ r)` application per iteration: two
+//! **level-scheduled triangular solves** through the multi-GPU
+//! [`crate::sptrsv`] engine, each replaying a cached
+//! [`SptrsvPlan`](crate::sptrsv::SptrsvPlan) — the same
+//! plan-built-once-replayed-per-iteration shape CG already uses for its
+//! SpMV, now three plans deep (A, L, U). All three plan builds are
+//! charged to the report's `t_plan`, so the amortized-vs-cold comparison
+//! stays honest for the preconditioned solve.
+
+use crate::coordinator::Engine;
+use crate::error::{Error, Result};
+use crate::formats::{convert, Matrix};
+use crate::sptrsv::{SptrsvPlan, Triangle};
+
+use super::{
+    check_config, check_square_system, dot, ilu0, norm2, IterationStat, PlannedSpmv, SolveReport,
+    SolverConfig,
+};
+
+/// Which preconditioner [`pcg`] applies each iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preconditioner {
+    /// `M = I`: PCG degenerates to plain CG (the control arm of the
+    /// PCG-vs-CG comparison — same code path, no triangular solves).
+    Identity,
+    /// `M = L·U` from [`super::ilu0`]: two level-scheduled triangular
+    /// solves per iteration through the sptrsv engine.
+    Ilu0,
+}
+
+impl Preconditioner {
+    /// Short name for reports and the CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            Preconditioner::Identity => "identity",
+            Preconditioner::Ilu0 => "ilu0",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Preconditioner> {
+        match s.to_ascii_lowercase().as_str() {
+            "identity" | "none" | "i" => Some(Preconditioner::Identity),
+            "ilu0" | "ilu" => Some(Preconditioner::Ilu0),
+            _ => None,
+        }
+    }
+}
+
+/// The ILU(0) application state: both factors' sptrsv plans, built once.
+struct IluApply {
+    l_plan: SptrsvPlan,
+    u_plan: SptrsvPlan,
+}
+
+impl IluApply {
+    fn build(engine: &Engine, a: &Matrix) -> Result<IluApply> {
+        let (l, u) = ilu0(&convert::to_csr(a))?;
+        Ok(IluApply {
+            l_plan: engine.plan_sptrsv(&Matrix::Csr(l), Triangle::Lower)?,
+            u_plan: engine.plan_sptrsv(&Matrix::Csr(u), Triangle::Upper)?,
+        })
+    }
+
+    /// `z = U⁻¹ (L⁻¹ r)`; returns `(z, modeled seconds)` of the two
+    /// triangular solves.
+    fn apply(&self, engine: &Engine, r: &[f32]) -> Result<(Vec<f32>, f64)> {
+        let fwd = engine.sptrsv_with_plan(&self.l_plan, r)?;
+        let bwd = engine.sptrsv_with_plan(&self.u_plan, &fwd.x)?;
+        Ok((bwd.x, fwd.metrics.modeled_total + bwd.metrics.modeled_total))
+    }
+}
+
+/// Solve `A x = b` for symmetric positive-definite `A` by preconditioned
+/// Conjugate Gradient, starting from `x = 0`.
+///
+/// Semantics match [`super::cg`] (relative residual `||r||/||b||`, zero
+/// rhs converges immediately, `pᵀAp <= 0` rejects the matrix as not
+/// positive definite); with [`Preconditioner::Ilu0`] every iteration
+/// additionally applies `z = U⁻¹(L⁻¹ r)` through two reused sptrsv plans,
+/// whose modeled time is charged into the iteration cost and whose build
+/// joins the plan cost `t_plan`.
+pub fn pcg(
+    engine: &Engine,
+    a: &Matrix,
+    b: &[f32],
+    precond: Preconditioner,
+    cfg: &SolverConfig,
+) -> Result<SolveReport> {
+    check_config(cfg)?;
+    check_square_system(a, Some(b))?;
+    let n = a.rows();
+    let mut spmv = PlannedSpmv::new(engine, a, cfg.plan_source)?;
+    let ilu = match precond {
+        Preconditioner::Identity => None,
+        Preconditioner::Ilu0 => {
+            let apply = IluApply::build(engine, a)?;
+            // all three plan builds amortize (or re-run, cold) together
+            spmv.add_plan_cost(apply.l_plan.t_partition + apply.u_plan.t_partition);
+            Some(apply)
+        }
+    };
+
+    let b_norm = norm2(b);
+    if b_norm == 0.0 {
+        return Ok(spmv.finish("pcg", cfg, true, 0.0, vec![0.0; n], None, vec![]));
+    }
+
+    // z = M⁻¹ r under the chosen preconditioner; trsv kernel time joins
+    // the iteration's modeled cost through the spmv bookkeeping
+    fn apply_m(
+        engine: &Engine,
+        ilu: &Option<IluApply>,
+        spmv: &mut PlannedSpmv<'_>,
+        r: &[f32],
+    ) -> Result<Vec<f32>> {
+        match ilu {
+            None => Ok(r.to_vec()),
+            Some(ap) => {
+                let (z, modeled) = ap.apply(engine, r)?;
+                spmv.charge_side(modeled);
+                Ok(z)
+            }
+        }
+    }
+
+    let mut x = vec![0.0f32; n];
+    let mut r = b.to_vec(); // r = b - A*0
+    let mut z = apply_m(engine, &ilu, &mut spmv, &r)?;
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let mut residual = norm2(&r) / b_norm;
+    let mut trace = Vec::new();
+    let mut converged = false;
+
+    for it in 1..=cfg.max_iters {
+        let ap = spmv.apply(&p, 1.0, 0.0, None)?;
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 {
+            return Err(Error::Solver(format!(
+                "matrix is not positive definite (pᵀAp = {pap:.3e} at iteration {it})"
+            )));
+        }
+        let alpha = (rz / pap) as f32;
+        for (xi, pi) in x.iter_mut().zip(&p) {
+            *xi += alpha * pi;
+        }
+        for (ri, api) in r.iter_mut().zip(&ap) {
+            *ri -= alpha * api;
+        }
+        residual = norm2(&r) / b_norm;
+        if residual <= cfg.tol || it == cfg.max_iters {
+            // converged, or budget exhausted — either way the next z/p
+            // would be discarded, so skip the preconditioner application
+            trace.push(IterationStat { iter: it, residual, modeled_spmv_s: spmv.last_spmv_s });
+            converged = residual <= cfg.tol;
+            break;
+        }
+        z = apply_m(engine, &ilu, &mut spmv, &r)?;
+        trace.push(IterationStat { iter: it, residual, modeled_spmv_s: spmv.last_spmv_s });
+        let rz_new = dot(&r, &z);
+        let beta = (rz_new / rz) as f32;
+        for (pi, zi) in p.iter_mut().zip(&z) {
+            *pi = zi + beta * *pi;
+        }
+        rz = rz_new;
+    }
+
+    Ok(spmv.finish("pcg", cfg, converged, residual, x, None, trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Mode, RunConfig};
+    use crate::formats::{convert, gen, FormatKind};
+    use crate::sim::Platform;
+    use crate::solver::cg;
+    use crate::spmv::spmv_matrix;
+
+    fn engine(np: usize) -> Engine {
+        Engine::new(RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: np,
+            mode: Mode::PStarOpt,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: None,
+        })
+        .unwrap()
+    }
+
+    fn poisson(grid: usize) -> (Matrix, Vec<f32>) {
+        let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::laplacian_2d(grid))));
+        let n = a.rows();
+        let u_star = gen::dense_vector(n, 7);
+        let mut b = vec![0.0f32; n];
+        spmv_matrix(&a, &u_star, 1.0, 0.0, &mut b).unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn ilu0_pcg_beats_plain_cg_on_the_poisson_stencil() {
+        // the acceptance bar: same system, same tolerance, strictly
+        // fewer iterations with the ILU(0) preconditioner
+        let (a, b) = poisson(32);
+        let cfg = SolverConfig { tol: 1e-6, max_iters: 500, ..Default::default() };
+        let plain = cg(&engine(8), &a, &b, &cfg).unwrap();
+        let pre = pcg(&engine(8), &a, &b, Preconditioner::Ilu0, &cfg).unwrap();
+        assert!(plain.converged && pre.converged);
+        assert!(
+            pre.iterations < plain.iterations,
+            "pcg {} vs cg {} iterations",
+            pre.iterations,
+            plain.iterations
+        );
+        // both reach the same solution
+        for (i, (p1, p2)) in pre.x.iter().zip(&plain.x).enumerate() {
+            assert!((p1 - p2).abs() < 1e-2 * (1.0 + p2.abs()), "x[{i}]: {p1} vs {p2}");
+        }
+    }
+
+    #[test]
+    fn identity_preconditioner_matches_cg_exactly() {
+        let (a, b) = poisson(16);
+        let cfg = SolverConfig::default();
+        let plain = cg(&engine(4), &a, &b, &cfg).unwrap();
+        let ident = pcg(&engine(4), &a, &b, Preconditioner::Identity, &cfg).unwrap();
+        assert_eq!(plain.x, ident.x);
+        assert_eq!(plain.iterations, ident.iterations);
+        assert_eq!(ident.method, "pcg");
+    }
+
+    #[test]
+    fn ilu_plan_costs_join_t_plan() {
+        let (a, b) = poisson(12);
+        let cfg = SolverConfig::default();
+        let ident = pcg(&engine(4), &a, &b, Preconditioner::Identity, &cfg).unwrap();
+        let pre = pcg(&engine(4), &a, &b, Preconditioner::Ilu0, &cfg).unwrap();
+        // three plans (A, L, U) cost strictly more than one
+        assert!(pre.t_plan > ident.t_plan);
+        // and the preconditioned iteration carries the trsv time
+        assert!(pre.planned_iter_cost() > ident.planned_iter_cost());
+        assert!(pre.cold_iter_cost() > pre.planned_iter_cost());
+    }
+
+    #[test]
+    fn zero_rhs_and_bad_shapes() {
+        let (a, _) = poisson(8);
+        let zero = vec![0.0f32; a.rows()];
+        let rep =
+            pcg(&engine(2), &a, &zero, Preconditioner::Ilu0, &SolverConfig::default()).unwrap();
+        assert!(rep.converged);
+        assert_eq!(rep.spmv_count, 0);
+        let rect = Matrix::Coo(gen::uniform(4, 5, 6, 1));
+        assert!(pcg(
+            &engine(1),
+            &rect,
+            &[0.0; 4],
+            Preconditioner::Identity,
+            &SolverConfig::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn preconditioner_labels_and_parse() {
+        assert_eq!(Preconditioner::parse("ilu0"), Some(Preconditioner::Ilu0));
+        assert_eq!(Preconditioner::parse("NONE"), Some(Preconditioner::Identity));
+        assert_eq!(Preconditioner::parse("nope"), None);
+        assert_eq!(Preconditioner::Ilu0.label(), "ilu0");
+        assert_eq!(Preconditioner::Identity.label(), "identity");
+    }
+}

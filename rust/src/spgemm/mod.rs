@@ -40,6 +40,7 @@ use crate::coordinator::worker;
 use crate::coordinator::{Engine, MergeClass, Mode, PartitionPlan};
 use crate::error::{Error, Result};
 use crate::formats::{convert, Csr, Matrix};
+use crate::sim::model::pad_to_gpus;
 use crate::sim::{model, DeviceMemory};
 
 /// Timing/traffic breakdown of one multi-GPU SpGEMM.
@@ -345,14 +346,6 @@ fn check_product_dims(a: &Matrix, b: &Matrix) -> Result<()> {
         )));
     }
     Ok(())
-}
-
-/// The cost-model entry points expect `platform.num_gpus`-length arrays;
-/// a run restricted to fewer GPUs pads with zero-byte transfers.
-fn pad_to_gpus<T: Clone + Default>(xs: &[T], total: usize) -> Vec<T> {
-    let mut v = xs.to_vec();
-    v.resize(total, T::default());
-    v
 }
 
 #[cfg(test)]

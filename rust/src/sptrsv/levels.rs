@@ -1,0 +1,217 @@
+//! Level-set (wavefront) construction for the triangular solve.
+//!
+//! A triangular solve's row `i` depends on every row `j` its off-diagonal
+//! entries reference (`j < i` for a lower factor, `j > i` for an upper
+//! factor), so rows cannot be split by contiguous nnz ranges the way SpMV
+//! rows can — the split has to respect the dependency DAG. The classic
+//! answer (Anderson/Saad wavefronts, cuSparse's `csrsv2` analysis phase)
+//! is to group rows into **levels**: level 0 holds rows with no
+//! off-diagonal dependencies, level `ℓ` holds rows whose deepest
+//! dependency sits in level `ℓ − 1`. All rows of one level are mutually
+//! independent and solve in parallel; levels execute in order with a
+//! barrier in between.
+//!
+//! The construction is one O(nnz) sweep in dependency order (ascending
+//! rows for lower factors, descending for upper):
+//! `level[i] = 1 + max(level[j] for j in deps(i))`, `0` if no deps.
+//! The resulting [`LevelSchedule`] is the symbolic product the sptrsv
+//! plan layer splits across GPUs (DESIGN.md §11).
+
+use crate::formats::Csr;
+
+/// Which triangle a factor stores — selects forward vs backward
+/// substitution and the dependency direction of the level construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Triangle {
+    /// Lower-triangular `L` (entries at `col <= row`): forward
+    /// substitution, rows depend on earlier rows.
+    Lower,
+    /// Upper-triangular `U` (entries at `col >= row`): backward
+    /// substitution, rows depend on later rows.
+    Upper,
+}
+
+impl Triangle {
+    /// Short name for reports and the CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            Triangle::Lower => "lower",
+            Triangle::Upper => "upper",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Triangle> {
+        match s.to_ascii_lowercase().as_str() {
+            "lower" | "l" => Some(Triangle::Lower),
+            "upper" | "u" => Some(Triangle::Upper),
+            _ => None,
+        }
+    }
+}
+
+/// The wavefront decomposition of one triangular factor: every row's
+/// level plus the rows of each level in ascending row order.
+#[derive(Debug, Clone)]
+pub struct LevelSchedule {
+    /// level of each row (0-based; level 0 has no off-diagonal deps)
+    pub row_level: Vec<u32>,
+    /// rows per level, each level's rows in ascending row order
+    pub levels: Vec<Vec<u32>>,
+}
+
+impl LevelSchedule {
+    /// Number of wavefronts (the solve's critical-path length).
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Rows of the widest wavefront — the peak parallelism the factor
+    /// exposes.
+    pub fn max_parallelism(&self) -> usize {
+        self.levels.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Mean rows per wavefront (`n / num_levels`): the average parallelism
+    /// a level-scheduled executor can exploit. 0 for an empty factor.
+    pub fn mean_parallelism(&self) -> f64 {
+        if self.levels.is_empty() {
+            0.0
+        } else {
+            self.row_level.len() as f64 / self.levels.len() as f64
+        }
+    }
+
+    /// Rows per level, in level order (the parallelism histogram the
+    /// report renders).
+    pub fn level_sizes(&self) -> Vec<u32> {
+        self.levels.iter().map(|l| l.len() as u32).collect()
+    }
+}
+
+/// Build the level schedule of a triangular factor stored in CSR.
+///
+/// Only off-diagonal entries on the factor's own side induce
+/// dependencies; the diagonal is the solve's divisor, not a dependency.
+/// Entries on the *wrong* side are the caller's to reject (the plan layer
+/// validates triangularity before calling this).
+pub fn level_schedule(a: &Csr, triangle: Triangle) -> LevelSchedule {
+    let n = a.rows();
+    let mut row_level = vec![0u32; n];
+    let mut max_level = 0u32;
+    // dependency order: ascending rows for Lower, descending for Upper
+    let order: Box<dyn Iterator<Item = usize>> = match triangle {
+        Triangle::Lower => Box::new(0..n),
+        Triangle::Upper => Box::new((0..n).rev()),
+    };
+    for i in order {
+        let mut lvl = 0u32;
+        for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+            let j = a.col_idx[k] as usize;
+            let is_dep = match triangle {
+                Triangle::Lower => j < i,
+                Triangle::Upper => j > i,
+            };
+            if is_dep {
+                lvl = lvl.max(row_level[j] + 1);
+            }
+        }
+        row_level[i] = lvl;
+        max_level = max_level.max(lvl);
+    }
+    let num_levels = if n == 0 { 0 } else { max_level as usize + 1 };
+    let mut levels: Vec<Vec<u32>> = vec![Vec::new(); num_levels];
+    for (i, &lvl) in row_level.iter().enumerate() {
+        levels[lvl as usize].push(i as u32);
+    }
+    LevelSchedule { row_level, levels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{convert, Coo, Matrix};
+
+    fn csr_of(m: usize, n: usize, rows: Vec<u32>, cols: Vec<u32>, vals: Vec<f32>) -> Csr {
+        convert::to_csr(&Matrix::Coo(Coo::new(m, n, rows, cols, vals).unwrap()))
+    }
+
+    #[test]
+    fn diagonal_factor_is_one_level() {
+        let a = csr_of(4, 4, vec![0, 1, 2, 3], vec![0, 1, 2, 3], vec![1.0; 4]);
+        let s = level_schedule(&a, Triangle::Lower);
+        assert_eq!(s.num_levels(), 1);
+        assert_eq!(s.max_parallelism(), 4);
+        assert_eq!(s.levels[0], vec![0, 1, 2, 3]);
+        assert_eq!(s.mean_parallelism(), 4.0);
+    }
+
+    #[test]
+    fn bidiagonal_factor_is_fully_sequential() {
+        // L[i][i-1] chains every row to the previous one: n levels
+        let mut rows = vec![0u32];
+        let mut cols = vec![0u32];
+        for i in 1..5u32 {
+            rows.extend([i, i]);
+            cols.extend([i - 1, i]);
+        }
+        let a = csr_of(5, 5, rows, cols, vec![1.0; 9]);
+        let s = level_schedule(&a, Triangle::Lower);
+        assert_eq!(s.num_levels(), 5);
+        assert_eq!(s.max_parallelism(), 1);
+        assert_eq!(s.row_level, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn transpose_preserves_critical_path_and_dependency_order() {
+        // U = Lᵀ reverses the dependency DAG: per-row levels change, but
+        // the longest path (= number of wavefronts) is reversal-invariant,
+        // and every dependency must still cross strictly increasing levels
+        let rows = vec![0u32, 1, 1, 2, 2, 3, 3];
+        let cols = vec![0u32, 0, 1, 0, 2, 2, 3];
+        let l = csr_of(4, 4, rows, cols, vec![1.0; 7]);
+        let u = convert::to_csr(&convert::transpose(&Matrix::Csr(l.clone())));
+        let sl = level_schedule(&l, Triangle::Lower);
+        let su = level_schedule(&u, Triangle::Upper);
+        assert_eq!(sl.row_level, vec![0, 1, 1, 2]);
+        assert_eq!(sl.num_levels(), su.num_levels());
+        for i in 0..u.rows() {
+            for k in u.row_ptr[i]..u.row_ptr[i + 1] {
+                let j = u.col_idx[k] as usize;
+                if j > i {
+                    assert!(
+                        su.row_level[j] < su.row_level[i],
+                        "dep ({i} <- {j}) does not cross levels"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rows_land_in_level_zero() {
+        // a row with only its diagonal (or nothing) has no deps
+        let a = csr_of(3, 3, vec![0, 2], vec![0, 2], vec![1.0, 1.0]);
+        let s = level_schedule(&a, Triangle::Lower);
+        assert_eq!(s.row_level, vec![0, 0, 0]);
+        assert_eq!(s.num_levels(), 1);
+    }
+
+    #[test]
+    fn zero_row_factor_is_empty_schedule() {
+        let a = csr_of(0, 0, vec![], vec![], vec![]);
+        let s = level_schedule(&a, Triangle::Lower);
+        assert_eq!(s.num_levels(), 0);
+        assert_eq!(s.mean_parallelism(), 0.0);
+        assert_eq!(s.max_parallelism(), 0);
+    }
+
+    #[test]
+    fn triangle_labels_and_parse() {
+        assert_eq!(Triangle::parse("lower"), Some(Triangle::Lower));
+        assert_eq!(Triangle::parse("U"), Some(Triangle::Upper));
+        assert_eq!(Triangle::parse("nope"), None);
+        assert_eq!(Triangle::Lower.label(), "lower");
+        assert_eq!(Triangle::Upper.label(), "upper");
+    }
+}

@@ -1,0 +1,702 @@
+//! sptrsv — level-scheduled multi-GPU sparse triangular solve
+//! (`L x = b` / `U x = b`).
+//!
+//! SpTRSV is the canonical kernel the nnz-balanced contiguous split cannot
+//! serve: row `i` needs `x[j]` for every off-diagonal `j` its row
+//! references, so any contiguous range split either deadlocks or
+//! serializes. The answer (DESIGN.md §11) keeps the whole partitioned-
+//! format machinery but changes the *shape* of the plan:
+//!
+//! * a symbolic phase groups rows into dependency **wavefronts**
+//!   ([`levels::level_schedule`]) — all rows of one level are mutually
+//!   independent;
+//! * each wavefront is split across GPUs by row nnz through the same
+//!   [`weighted_boundaries`](crate::coordinator::partitioner::weighted_boundaries)
+//!   scan the SpGEMM planner uses (work model
+//!   [`WorkModel::TrsvLevels`](crate::coordinator::WorkModel)), or by the
+//!   naive global row-block ownership ([`SptrsvSplit::RowBlocks`]) the
+//!   ablation compares against;
+//! * the modeled timeline charges one kernel per GPU per level
+//!   (`sptrsv_level_time`) plus an inter-level x-fragment broadcast
+//!   (`sptrsv_sync_time`) — the barrier cost that makes deep level graphs
+//!   latency-bound.
+//!
+//! [`Engine::plan_sptrsv`] builds the reusable [`SptrsvPlan`] (one
+//! symbolic pass, many solves — the plan-reuse shape ILU-preconditioned CG
+//! replays twice per iteration), [`Engine::sptrsv_with_plan`] executes it,
+//! and [`Engine::sptrsv`] is the one-shot form. Numerics are real
+//! (per-GPU tasks execute on the CPU reference path); multi-GPU *time*
+//! comes from [`crate::sim::model`]. The dense substitution oracle lives
+//! in [`reference`].
+
+pub mod levels;
+pub mod reference;
+
+pub use levels::{level_schedule, LevelSchedule, Triangle};
+pub use reference::{dense_trsv, diagonally_dominant, triangular_of, trsv_csr};
+
+use std::time::Instant;
+
+use crate::coordinator::partitioner::weighted_boundaries;
+use crate::coordinator::{worker, Engine, Mode, RunConfig, WorkModel};
+use crate::error::{Error, Result};
+use crate::formats::{convert, Csr, FormatKind, Matrix};
+use crate::sim::model::pad_to_gpus;
+use crate::sim::{model, DeviceMemory};
+
+/// How a wavefront's rows are distributed across GPUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SptrsvSplit {
+    /// Split every wavefront by row nnz (the MSREP-style balanced path:
+    /// each level's rows are partitioned by a weighted-boundary scan so
+    /// per-GPU work is flat *within* every level).
+    LevelBalanced,
+    /// Global equal-row blocks: GPU `g` owns rows `[g·n/np, (g+1)·n/np)`
+    /// and solves whatever subset of each wavefront falls in its block —
+    /// the naive split a row-partitioned SpMV layout would inherit, and
+    /// the baseline the level-aware plan is measured against.
+    RowBlocks,
+}
+
+impl SptrsvSplit {
+    /// Short name for reports and the CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            SptrsvSplit::LevelBalanced => "levels",
+            SptrsvSplit::RowBlocks => "rows",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<SptrsvSplit> {
+        match s.to_ascii_lowercase().as_str() {
+            "levels" | "level" | "balanced" => Some(SptrsvSplit::LevelBalanced),
+            "rows" | "blocks" | "row-blocks" => Some(SptrsvSplit::RowBlocks),
+            _ => None,
+        }
+    }
+}
+
+/// One GPU's share of one wavefront.
+#[derive(Debug, Clone)]
+pub struct LevelTask {
+    /// GPU ordinal
+    pub gpu: usize,
+    /// global rows this GPU solves in this wavefront (ascending)
+    pub rows: Vec<u32>,
+    /// stored elements of those rows (diagonal included)
+    pub nnz: u64,
+}
+
+/// A reusable level-scheduled partitioning of one triangular factor —
+/// the SpTRSV analog of [`crate::coordinator::PartitionPlan`]: built once
+/// per factor *structure+values*, replayed for every right-hand side
+/// (what [`crate::solver::pcg`] does twice per iteration).
+#[derive(Debug, Clone)]
+pub struct SptrsvPlan {
+    /// storage format of the matrix the plan was built from
+    pub format: FormatKind,
+    /// which triangle the factor stores
+    pub triangle: Triangle,
+    /// wavefront-split policy the tasks were built with
+    pub split: SptrsvSplit,
+    /// work model (always [`WorkModel::TrsvLevels`]; kept for report
+    /// symmetry with [`crate::coordinator::PartitionPlan::work`])
+    pub work: WorkModel,
+    /// number of GPU tasks per level (== engine `num_gpus` at build time)
+    pub np: usize,
+    /// rows == cols of the factor
+    pub n: usize,
+    /// stored elements of the factor
+    pub nnz: u64,
+    /// the wavefront decomposition (symbolic product)
+    pub schedule: LevelSchedule,
+    /// per-level, per-GPU tasks: `tasks[level][gpu]`
+    pub tasks: Vec<Vec<LevelTask>>,
+    /// per-GPU stored elements across all levels (what the balanced split
+    /// equalizes within each level)
+    pub work_loads: Vec<u64>,
+    /// modeled symbolic+planning time (level sweep + boundary scans, §4.1
+    /// cost style)
+    pub t_partition: f64,
+    /// host wall seconds actually spent building the plan
+    pub measured_partition: f64,
+    // frozen solve payload: the factor in CSR plus its extracted diagonal
+    // (the divisor — skipped during the off-diagonal accumulation)
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    val: Vec<f32>,
+    diag: Vec<f32>,
+}
+
+impl SptrsvPlan {
+    /// Per-GPU nnz loads (== `work_loads` for SpTRSV plans).
+    pub fn loads(&self) -> Vec<u64> {
+        self.work_loads.clone()
+    }
+
+    /// max/mean imbalance of the per-GPU loads (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        crate::util::stats::imbalance(&self.work_loads)
+    }
+
+    /// Check the plan is executable under `cfg` (same GPU count). A plan
+    /// replayed on a reconfigured engine would silently mis-model.
+    pub fn validate_for(&self, cfg: &RunConfig) -> Result<()> {
+        if self.np != cfg.num_gpus {
+            return Err(Error::InvalidPartition(format!(
+                "sptrsv plan built for np {} but engine runs np {}",
+                self.np, cfg.num_gpus
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Timing/traffic breakdown of one multi-GPU triangular solve.
+#[derive(Debug, Clone)]
+pub struct SptrsvMetrics {
+    /// GPUs used
+    pub np: usize,
+    /// rows == cols of the factor
+    pub n: usize,
+    /// stored elements of the factor
+    pub nnz: u64,
+    /// which triangle was solved
+    pub triangle: Triangle,
+    /// wavefront-split policy the solve ran under
+    pub split: SptrsvSplit,
+    /// number of wavefronts (critical-path length)
+    pub levels: usize,
+    /// rows of the widest wavefront
+    pub max_parallelism: usize,
+    /// mean rows per wavefront (`n / levels`)
+    pub mean_parallelism: f64,
+    /// rows per level, in level order (the parallelism histogram)
+    pub level_sizes: Vec<u32>,
+    /// per-GPU stored elements across all levels
+    pub nnz_loads: Vec<u64>,
+    /// max/mean imbalance of `nnz_loads`
+    pub imbalance: f64,
+
+    // ---- modeled timeline (seconds, simulated platform) ----
+    /// symbolic level sweep + boundary scans
+    pub t_partition: f64,
+    /// host→device uploads (factor streams + the b/x buffer)
+    pub t_h2d: f64,
+    /// Σ over levels of the per-level kernel time (max over GPUs;
+    /// serial sum for the Baseline) — the term the level-balanced split
+    /// minimizes
+    pub t_levels: f64,
+    /// Σ of the inter-level x-fragment broadcasts
+    pub t_sync: f64,
+    /// final download of the per-GPU x fragments
+    pub t_d2h: f64,
+    /// end-to-end modeled time
+    pub modeled_total: f64,
+
+    // ---- real host measurements (this container) ----
+    /// wall seconds building the plan
+    pub measured_partition: f64,
+    /// wall seconds in the level-loop execution
+    pub measured_exec: f64,
+
+    // ---- traffic ----
+    /// total host→device bytes
+    pub h2d_bytes: u64,
+    /// total device→host bytes (x fragments)
+    pub d2h_bytes: u64,
+}
+
+/// Result of one engine SpTRSV: the solution plus the breakdown.
+#[derive(Debug)]
+pub struct SptrsvReport {
+    /// solution of `T x = b`
+    pub x: Vec<f32>,
+    /// timing/traffic breakdown
+    pub metrics: SptrsvMetrics,
+}
+
+impl Engine {
+    /// Build a level-balanced [`SptrsvPlan`] for `a` (which must be
+    /// square, triangular on `triangle`'s side, and carry a non-zero
+    /// diagonal in every row). One symbolic pass — wavefront construction
+    /// plus per-level weighted splits — reusable for any number of
+    /// right-hand sides.
+    pub fn plan_sptrsv(&self, a: &Matrix, triangle: Triangle) -> Result<SptrsvPlan> {
+        self.plan_sptrsv_with_split(a, triangle, SptrsvSplit::LevelBalanced)
+    }
+
+    /// Build an [`SptrsvPlan`] with an explicit wavefront-split policy —
+    /// [`SptrsvSplit::RowBlocks`] is the naive-ownership ablation the
+    /// reports and `sptrsv-bench` compare the balanced split against.
+    pub fn plan_sptrsv_with_split(
+        &self,
+        a: &Matrix,
+        triangle: Triangle,
+        split: SptrsvSplit,
+    ) -> Result<SptrsvPlan> {
+        let cfg = self.config();
+        let np = cfg.num_gpus;
+        let build_start = Instant::now();
+        let csr = convert::to_csr(a);
+        let diag = validate_factor(&csr, triangle)?;
+        let schedule = level_schedule(&csr, triangle);
+        let n = csr.rows();
+        let row_nnz = |i: usize| (csr.row_ptr[i + 1] - csr.row_ptr[i]) as u64;
+
+        let mut tasks: Vec<Vec<LevelTask>> = Vec::with_capacity(schedule.num_levels());
+        let mut work_loads = vec![0u64; np];
+        for level in &schedule.levels {
+            let mut per_gpu: Vec<LevelTask> = (0..np)
+                .map(|g| LevelTask { gpu: g, rows: Vec::new(), nnz: 0 })
+                .collect();
+            match split {
+                SptrsvSplit::LevelBalanced => {
+                    // split this wavefront's rows by nnz weight
+                    let weights: Vec<u64> = level.iter().map(|&r| row_nnz(r as usize)).collect();
+                    let bounds = weighted_boundaries(&weights, np);
+                    for (g, t) in per_gpu.iter_mut().enumerate() {
+                        t.rows = level[bounds[g]..bounds[g + 1]].to_vec();
+                        t.nnz = weights[bounds[g]..bounds[g + 1]].iter().sum();
+                    }
+                }
+                SptrsvSplit::RowBlocks => {
+                    // global equal-row ownership, oblivious to the levels
+                    for &r in level {
+                        let g = (r as usize * np / n.max(1)).min(np - 1);
+                        per_gpu[g].rows.push(r);
+                        per_gpu[g].nnz += row_nnz(r as usize);
+                    }
+                }
+            }
+            for t in &per_gpu {
+                work_loads[t.gpu] += t.nnz;
+            }
+            tasks.push(per_gpu);
+        }
+
+        // modeled symbolic cost: the level sweep streams every stored
+        // element once (O(nnz)); the balanced split adds one weight scan
+        // per row (O(n)) — both sequential sweeps, so the rewrite rate
+        // applies (§4.1 cost style)
+        let t_partition = match split {
+            SptrsvSplit::LevelBalanced => {
+                model::cpu_rewrite_time(csr.nnz() as u64) + model::cpu_rewrite_time(n as u64)
+            }
+            SptrsvSplit::RowBlocks => model::cpu_rewrite_time(csr.nnz() as u64),
+        };
+
+        Ok(SptrsvPlan {
+            format: a.kind(),
+            triangle,
+            split,
+            work: WorkModel::TrsvLevels,
+            np,
+            n,
+            nnz: csr.nnz() as u64,
+            schedule,
+            tasks,
+            work_loads,
+            t_partition,
+            measured_partition: build_start.elapsed().as_secs_f64(),
+            row_ptr: csr.row_ptr,
+            col_idx: csr.col_idx,
+            val: csr.val,
+            diag,
+        })
+    }
+
+    /// One-shot multi-GPU triangular solve: fresh level-balanced plan,
+    /// symbolic cost charged to the report (the per-call shape).
+    pub fn sptrsv(&self, a: &Matrix, b: &[f32], triangle: Triangle) -> Result<SptrsvReport> {
+        let plan = self.plan_sptrsv(a, triangle)?;
+        let mut rep = self.sptrsv_with_plan(&plan, b)?;
+        rep.metrics.t_partition = plan.t_partition;
+        rep.metrics.modeled_total += plan.t_partition;
+        rep.metrics.measured_partition = plan.measured_partition;
+        Ok(rep)
+    }
+
+    /// Multi-GPU triangular solve against a prebuilt plan (no symbolic
+    /// cost charged — the plan's build is the caller's to attribute,
+    /// amortized across right-hand sides by the preconditioned solvers).
+    pub fn sptrsv_with_plan(&self, plan: &SptrsvPlan, b: &[f32]) -> Result<SptrsvReport> {
+        plan.validate_for(self.config())?;
+        if b.len() != plan.n {
+            return Err(Error::InvalidMatrix(format!(
+                "b length {} != n {}",
+                b.len(),
+                plan.n
+            )));
+        }
+        let cfg = self.config();
+        let np = cfg.num_gpus;
+        let p = &cfg.platform;
+
+        // ---- 1. device memory accounting --------------------------------
+        for g in 0..np {
+            let mut mem = DeviceMemory::new(g, p.gpu_mem_bytes);
+            mem.alloc("factor_stream", plan.work_loads[g] * 12)?;
+            mem.alloc("x", (plan.n * 4) as u64)?;
+            mem.alloc("b", (plan.n * 4) as u64)?;
+        }
+
+        // ---- 2. uploads: factor stream + the full b vector per GPU ------
+        let h2d: Vec<u64> =
+            (0..np).map(|g| plan.work_loads[g] * 12 + (plan.n * 4) as u64).collect();
+        let src_numa: Vec<usize> = if cfg.effective_numa_aware() {
+            (0..np).map(|g| p.gpu_numa[g]).collect()
+        } else {
+            vec![0; np]
+        };
+        let t_h2d = if cfg.mode == Mode::Baseline {
+            model::serial_h2d_time(p, &h2d)
+        } else {
+            model::concurrent_h2d_times(
+                p,
+                &pad_to_gpus(&h2d, p.num_gpus),
+                &pad_to_gpus(&src_numa, p.num_gpus),
+            )
+            .into_iter()
+            .fold(0.0, f64::max)
+        };
+
+        // ---- 3. level loop: model + real execution ----------------------
+        // modeled: per level, every active GPU launches one wavefront
+        // kernel (max across GPUs; serial sum for the Baseline), then the
+        // level's freshly computed x fragment broadcasts before the next
+        // level may start (charged for every level but the last)
+        let mut t_levels = 0.0f64;
+        let mut t_sync = 0.0f64;
+        for (lvl, per_gpu) in plan.tasks.iter().enumerate() {
+            let times = per_gpu
+                .iter()
+                .map(|t| model::sptrsv_level_time(p, t.nnz, t.rows.len() as u64));
+            t_levels += if cfg.mode == Mode::Baseline {
+                times.sum::<f64>()
+            } else {
+                times.fold(0.0, f64::max)
+            };
+            if lvl + 1 < plan.tasks.len() {
+                let frag_bytes = plan.schedule.levels[lvl].len() as u64 * 4;
+                t_sync += model::sptrsv_sync_time(p, np, frag_bytes);
+            }
+        }
+
+        let exec_start = Instant::now();
+        let mut x = vec![0.0f32; plan.n];
+        for per_gpu in &plan.tasks {
+            // tiny wavefronts don't amortize a thread fan-out (exactly as
+            // tiny levels are driven from one stream on real hardware);
+            // the per-GPU decomposition still executes either way
+            let level_rows: usize = per_gpu.iter().map(|t| t.rows.len()).sum();
+            let threaded = cfg.mode != Mode::Baseline && level_rows >= np * 8;
+            let fan = worker::run_per_gpu(np, threaded, |g| solve_task(plan, &per_gpu[g], b, &x));
+            for (t, vals) in per_gpu.iter().zip(fan.results) {
+                for (&r, v) in t.rows.iter().zip(vals) {
+                    x[r as usize] = v;
+                }
+            }
+        }
+        let measured_exec = exec_start.elapsed().as_secs_f64();
+
+        // ---- 4. download the per-GPU x fragments ------------------------
+        let d2h: Vec<u64> = {
+            let mut rows_owned = vec![0u64; np];
+            for per_gpu in &plan.tasks {
+                for t in per_gpu {
+                    rows_owned[t.gpu] += t.rows.len() as u64;
+                }
+            }
+            rows_owned.iter().map(|&r| r * 4).collect()
+        };
+        let t_d2h = if cfg.mode == Mode::Baseline {
+            d2h.iter()
+                .filter(|&&bs| bs > 0)
+                .map(|&bs| model::lone_transfer_time(p, bs))
+                .sum::<f64>()
+        } else {
+            model::concurrent_d2h_times(
+                p,
+                &pad_to_gpus(&d2h, p.num_gpus),
+                &pad_to_gpus(&src_numa, p.num_gpus),
+            )
+            .into_iter()
+            .fold(0.0, f64::max)
+        };
+
+        let metrics = SptrsvMetrics {
+            np,
+            n: plan.n,
+            nnz: plan.nnz,
+            triangle: plan.triangle,
+            split: plan.split,
+            levels: plan.schedule.num_levels(),
+            max_parallelism: plan.schedule.max_parallelism(),
+            mean_parallelism: plan.schedule.mean_parallelism(),
+            level_sizes: plan.schedule.level_sizes(),
+            imbalance: crate::util::stats::imbalance(&plan.work_loads),
+            nnz_loads: plan.work_loads.clone(),
+            t_partition: 0.0,
+            t_h2d,
+            t_levels,
+            t_sync,
+            t_d2h,
+            modeled_total: t_h2d + t_levels + t_sync + t_d2h,
+            measured_partition: 0.0,
+            measured_exec,
+            h2d_bytes: h2d.iter().sum(),
+            d2h_bytes: d2h.iter().sum(),
+        };
+        Ok(SptrsvReport { x, metrics })
+    }
+}
+
+/// Solve one GPU's rows of one wavefront: for each owned row,
+/// `x[i] = (b[i] − Σ_{j≠i} T[i,j]·x[j]) / T[i,i]` with f64 accumulation.
+/// Reads only x entries written by earlier wavefronts (the level
+/// construction guarantees it), so the shared borrow is race-free.
+fn solve_task(plan: &SptrsvPlan, t: &LevelTask, b: &[f32], x: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(t.rows.len());
+    for &r in &t.rows {
+        let i = r as usize;
+        let mut s = b[i] as f64;
+        for k in plan.row_ptr[i]..plan.row_ptr[i + 1] {
+            let j = plan.col_idx[k] as usize;
+            if j != i {
+                s -= plan.val[k] as f64 * x[j] as f64;
+            }
+        }
+        out.push((s / plan.diag[i] as f64) as f32);
+    }
+    out
+}
+
+/// Validate a triangular factor: square, every entry on `triangle`'s
+/// side, non-zero diagonal in every row. Returns the extracted diagonal
+/// (duplicates accumulated) — the solve's divisor vector.
+fn validate_factor(a: &Csr, triangle: Triangle) -> Result<Vec<f32>> {
+    if a.rows() != a.cols() {
+        return Err(Error::InvalidMatrix(format!(
+            "triangular solve needs a square factor, got {}x{}",
+            a.rows(),
+            a.cols()
+        )));
+    }
+    for i in 0..a.rows() {
+        for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+            let j = a.col_idx[k] as usize;
+            let wrong_side = match triangle {
+                Triangle::Lower => j > i,
+                Triangle::Upper => j < i,
+            };
+            if wrong_side {
+                return Err(Error::InvalidMatrix(format!(
+                    "entry ({i}, {j}) sits outside the {} triangle",
+                    triangle.label()
+                )));
+            }
+        }
+    }
+    let diag = a.diagonal();
+    for (i, &d) in diag.iter().enumerate() {
+        if d == 0.0 {
+            return Err(Error::Solver(format!(
+                "zero diagonal at row {i}: the triangular factor is singular"
+            )));
+        }
+    }
+    Ok(diag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Backend;
+    use crate::formats::{gen, Coo};
+    use crate::sim::Platform;
+
+    fn engine(mode: Mode, np: usize) -> Engine {
+        Engine::new(RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: np,
+            mode,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: None,
+        })
+        .unwrap()
+    }
+
+    fn skewed_lower(seed: u64) -> Csr {
+        triangular_of(
+            &Matrix::Coo(gen::power_law(400, 400, 6_000, 1.6, seed)),
+            Triangle::Lower,
+            1.0,
+        )
+    }
+
+    #[test]
+    fn solve_matches_sequential_reference_all_modes_and_np() {
+        let l = skewed_lower(11);
+        let b = gen::dense_vector(400, 12);
+        let expect = trsv_csr(&l, &b, Triangle::Lower).unwrap();
+        for mode in Mode::ALL {
+            for np in [1, 3, 8] {
+                let rep = engine(mode, np)
+                    .sptrsv(&Matrix::Csr(l.clone()), &b, Triangle::Lower)
+                    .unwrap();
+                for (i, (got, want)) in rep.x.iter().zip(&expect).enumerate() {
+                    assert!(
+                        (got - want).abs() < 1e-4 * (1.0 + want.abs()),
+                        "{mode:?}/np{np} x[{i}]: {got} vs {want}"
+                    );
+                }
+                assert!(rep.metrics.modeled_total > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn upper_solve_through_the_transpose() {
+        let l = skewed_lower(21);
+        let u = convert::to_csr(&convert::transpose(&Matrix::Csr(l)));
+        let b = gen::dense_vector(400, 22);
+        let expect = trsv_csr(&u, &b, Triangle::Upper).unwrap();
+        let rep = engine(Mode::PStarOpt, 4)
+            .sptrsv(&Matrix::Csr(u), &b, Triangle::Upper)
+            .unwrap();
+        for (i, (got, want)) in rep.x.iter().zip(&expect).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-4 * (1.0 + want.abs()),
+                "x[{i}]: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn with_plan_skips_partition_charge_only() {
+        let l = Matrix::Csr(skewed_lower(31));
+        let b = gen::dense_vector(400, 32);
+        let eng = engine(Mode::PStarOpt, 8);
+        let plan = eng.plan_sptrsv(&l, Triangle::Lower).unwrap();
+        assert_eq!(plan.work, WorkModel::TrsvLevels);
+        let fresh = eng.sptrsv(&l, &b, Triangle::Lower).unwrap();
+        let cached = eng.sptrsv_with_plan(&plan, &b).unwrap();
+        assert_eq!(fresh.x, cached.x);
+        assert_eq!(cached.metrics.t_partition, 0.0);
+        assert!(plan.t_partition > 0.0);
+        let diff = fresh.metrics.modeled_total - (cached.metrics.modeled_total + plan.t_partition);
+        assert!(diff.abs() < 1e-15, "totals differ by {diff}");
+    }
+
+    #[test]
+    fn level_split_beats_row_blocks_on_skewed_factor() {
+        // heavy-tailed factor: row-block ownership concentrates whole
+        // wavefronts on few GPUs, the level split spreads each wavefront
+        let l = Matrix::Csr(triangular_of(
+            &Matrix::Coo(gen::power_law(2_000, 2_000, 40_000, 1.5, 41)),
+            Triangle::Lower,
+            1.0,
+        ));
+        let b = gen::dense_vector(2_000, 42);
+        let eng = engine(Mode::PStarOpt, 8);
+        let lvl_plan = eng.plan_sptrsv(&l, Triangle::Lower).unwrap();
+        let row_plan =
+            eng.plan_sptrsv_with_split(&l, Triangle::Lower, SptrsvSplit::RowBlocks).unwrap();
+        let by_level = eng.sptrsv_with_plan(&lvl_plan, &b).unwrap();
+        let by_rows = eng.sptrsv_with_plan(&row_plan, &b).unwrap();
+        assert_eq!(by_level.x, by_rows.x, "split policy must not change numerics");
+        assert!(
+            by_level.metrics.t_levels < by_rows.metrics.t_levels,
+            "level split {} vs row blocks {}",
+            by_level.metrics.t_levels,
+            by_rows.metrics.t_levels
+        );
+    }
+
+    #[test]
+    fn plan_metadata_is_consistent() {
+        let l = Matrix::Csr(skewed_lower(51));
+        let plan = engine(Mode::PStarOpt, 4).plan_sptrsv(&l, Triangle::Lower).unwrap();
+        assert_eq!(plan.n, 400);
+        assert_eq!(plan.work_loads.iter().sum::<u64>(), plan.nnz);
+        assert_eq!(plan.tasks.len(), plan.schedule.num_levels());
+        // every row appears in exactly one task of its level
+        let mut seen = vec![false; plan.n];
+        for per_gpu in &plan.tasks {
+            for t in per_gpu {
+                for &r in &t.rows {
+                    assert!(!seen[r as usize], "row {r} assigned twice");
+                    seen[r as usize] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every row must be assigned");
+        assert!(plan.imbalance().is_finite());
+    }
+
+    #[test]
+    fn sync_cost_dominates_on_deep_level_graphs() {
+        // a bidiagonal factor is fully sequential: n levels of one row
+        // each — the modeled sync share must dwarf a wide factor's
+        let n = 300;
+        let mut rows = vec![0u32];
+        let mut cols = vec![0u32];
+        for i in 1..n as u32 {
+            rows.extend([i, i]);
+            cols.extend([i - 1, i]);
+        }
+        let deep = Matrix::Csr(convert::to_csr(&Matrix::Coo(
+            Coo::new(n, n, rows, cols, vec![1.0; 2 * n - 1]).unwrap(),
+        )));
+        let wide = Matrix::Csr(triangular_of(
+            &Matrix::Coo(gen::uniform(n, n, 2 * n, 5)),
+            Triangle::Lower,
+            1.0,
+        ));
+        let eng = engine(Mode::PStarOpt, 4);
+        let b = gen::dense_vector(n, 6);
+        let d = eng.sptrsv(&deep, &b, Triangle::Lower).unwrap();
+        let w = eng.sptrsv(&wide, &b, Triangle::Lower).unwrap();
+        assert_eq!(d.metrics.levels, n);
+        assert!(
+            d.metrics.levels > 5 * w.metrics.levels,
+            "deep {} vs wide {}",
+            d.metrics.levels,
+            w.metrics.levels
+        );
+        assert!(d.metrics.t_sync > w.metrics.t_sync);
+    }
+
+    #[test]
+    fn rejects_bad_factors_and_shapes() {
+        let eng = engine(Mode::PStarOpt, 2);
+        // non-triangular input
+        let full = Matrix::Coo(gen::uniform(20, 20, 100, 7));
+        assert!(eng.plan_sptrsv(&full, Triangle::Lower).is_err());
+        // rectangular input
+        let rect = Matrix::Coo(gen::uniform(4, 5, 6, 8));
+        assert!(eng.plan_sptrsv(&rect, Triangle::Lower).is_err());
+        // zero diagonal
+        let sing = Matrix::Coo(Coo::new(2, 2, vec![0, 1], vec![0, 0], vec![1.0, 2.0]).unwrap());
+        assert!(eng.plan_sptrsv(&sing, Triangle::Lower).is_err());
+        // wrong b length
+        let l = Matrix::Csr(skewed_lower(9));
+        let plan = eng.plan_sptrsv(&l, Triangle::Lower).unwrap();
+        assert!(eng.sptrsv_with_plan(&plan, &[0.0; 10]).is_err());
+        // mismatched engine np
+        assert!(engine(Mode::PStarOpt, 4).sptrsv_with_plan(&plan, &[0.0; 400]).is_err());
+    }
+
+    #[test]
+    fn split_labels_and_parse() {
+        assert_eq!(SptrsvSplit::parse("levels"), Some(SptrsvSplit::LevelBalanced));
+        assert_eq!(SptrsvSplit::parse("ROWS"), Some(SptrsvSplit::RowBlocks));
+        assert_eq!(SptrsvSplit::parse("nope"), None);
+        assert_eq!(SptrsvSplit::LevelBalanced.label(), "levels");
+        assert_eq!(SptrsvSplit::RowBlocks.label(), "rows");
+    }
+}

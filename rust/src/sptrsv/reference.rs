@@ -1,0 +1,252 @@
+//! Reference kernels and factor builders for the triangular solve.
+//!
+//! Two oracles — a dense forward/backward-substitution solve (the property
+//! tests' ground truth) and a sequential sparse CSR substitution (the
+//! cheap O(nnz) verifier the CLI uses at scale) — plus the
+//! triangle-extraction helpers the workloads and tests build factors with.
+
+use crate::error::{Error, Result};
+use crate::formats::{convert, Coo, Csr, Matrix};
+
+use super::Triangle;
+
+/// Dense substitution oracle: solve `T x = b` for a dense triangular `T`
+/// (row-major `dense[i][j]`), forward for [`Triangle::Lower`], backward
+/// for [`Triangle::Upper`]. f64 accumulation throughout — this is the
+/// exact reference the multi-GPU solve is compared against.
+///
+/// Errors on a zero diagonal (the system is singular).
+pub fn dense_trsv(dense: &[Vec<f32>], b: &[f32], triangle: Triangle) -> Result<Vec<f64>> {
+    let n = b.len();
+    let mut x = vec![0.0f64; n];
+    let order: Box<dyn Iterator<Item = usize>> = match triangle {
+        Triangle::Lower => Box::new(0..n),
+        Triangle::Upper => Box::new((0..n).rev()),
+    };
+    for i in order {
+        let mut s = b[i] as f64;
+        for (j, xj) in x.iter().enumerate() {
+            if j != i {
+                s -= dense[i][j] as f64 * xj;
+            }
+        }
+        let d = dense[i][i] as f64;
+        if d == 0.0 {
+            return Err(Error::Solver(format!("zero diagonal at row {i}")));
+        }
+        x[i] = s / d;
+    }
+    Ok(x)
+}
+
+/// Sequential sparse substitution on a CSR factor: the single-device
+/// O(nnz) reference (what cuSparse's non-analyzed `csrsv` does). Same
+/// numerics contract as [`dense_trsv`] but linear in nnz — the verifier
+/// for factors too large to densify.
+pub fn trsv_csr(a: &Csr, b: &[f32], triangle: Triangle) -> Result<Vec<f32>> {
+    if a.rows() != a.cols() || a.rows() != b.len() {
+        return Err(Error::Solver(format!(
+            "triangular solve needs a square system matching b: {}x{} vs b {}",
+            a.rows(),
+            a.cols(),
+            b.len()
+        )));
+    }
+    let n = a.rows();
+    let mut x = vec![0.0f32; n];
+    let order: Box<dyn Iterator<Item = usize>> = match triangle {
+        Triangle::Lower => Box::new(0..n),
+        Triangle::Upper => Box::new((0..n).rev()),
+    };
+    for i in order {
+        let mut s = b[i] as f64;
+        let mut diag = 0.0f64;
+        for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+            let j = a.col_idx[k] as usize;
+            if j == i {
+                diag += a.val[k] as f64;
+            } else {
+                s -= a.val[k] as f64 * x[j] as f64;
+            }
+        }
+        if diag == 0.0 {
+            return Err(Error::Solver(format!("zero diagonal at row {i}")));
+        }
+        x[i] = (s / diag) as f32;
+    }
+    Ok(x)
+}
+
+/// Extract the triangular part of any matrix as a CSR factor with a
+/// guaranteed non-zero diagonal: keeps entries on `triangle`'s side
+/// (including the diagonal), and any row whose diagonal is absent or zero
+/// gets `fill_diag` instead — the factor builder the sptrsv workloads and
+/// tests use to turn a generated (skewed, banded, …) matrix into a
+/// solvable triangular system.
+pub fn triangular_of(a: &Matrix, triangle: Triangle, fill_diag: f32) -> Csr {
+    assert!(fill_diag != 0.0, "fill_diag must be non-zero (singular factor otherwise)");
+    let coo = convert::to_coo(a);
+    let n = coo.rows().min(coo.cols());
+    let mut rows = Vec::new();
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    let mut diag = vec![0.0f32; n];
+    for k in 0..coo.nnz() {
+        let (i, j) = (coo.row_idx[k] as usize, coo.col_idx[k] as usize);
+        if i >= n || j >= n {
+            continue;
+        }
+        if i == j {
+            diag[i] += coo.val[k]; // duplicates accumulate, like Matrix::diagonal
+        } else {
+            let keep = match triangle {
+                Triangle::Lower => j < i,
+                Triangle::Upper => j > i,
+            };
+            if keep {
+                rows.push(i as u32);
+                cols.push(j as u32);
+                vals.push(coo.val[k]);
+            }
+        }
+    }
+    for (i, &d) in diag.iter().enumerate() {
+        rows.push(i as u32);
+        cols.push(i as u32);
+        vals.push(if d != 0.0 { d } else { fill_diag });
+    }
+    Csr::from_coo(&Coo::new(n, n, rows, cols, vals).expect("triangle extraction stays valid"))
+}
+
+/// Rescale a triangular factor's off-diagonals so every row's absolute
+/// off-diagonal sum is at most `ratio · |diag|` (`0 < ratio < 1`). The
+/// substitution recurrence then contracts (`|x|∞ ≤ |b|∞ / ((1−ratio)·
+/// min|diag|)`), which keeps the f32 solve within a provable distance of
+/// the f64 oracle — the conditioning the oracle-comparison tests need, as
+/// raw heavy-tailed factors can amplify rounding exponentially along the
+/// dependency chain.
+pub fn diagonally_dominant(a: &Csr, ratio: f32) -> Csr {
+    assert!(ratio > 0.0 && ratio < 1.0, "ratio must be in (0, 1)");
+    let mut val = a.val.clone();
+    for i in 0..a.rows() {
+        let mut diag = 0.0f32;
+        let mut off = 0.0f32;
+        for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+            if a.col_idx[k] as usize == i {
+                diag += a.val[k];
+            } else {
+                off += a.val[k].abs();
+            }
+        }
+        let cap = ratio * diag.abs();
+        if off > cap && off > 0.0 {
+            let scale = cap / off;
+            for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+                if a.col_idx[k] as usize != i {
+                    val[k] *= scale;
+                }
+            }
+        }
+    }
+    Csr::new(a.rows(), a.cols(), a.row_ptr.clone(), a.col_idx.clone(), val)
+        .expect("rescaled factor stays valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::gen;
+
+    #[test]
+    fn dense_and_sparse_oracles_agree() {
+        let a = diagonally_dominant(
+            &triangular_of(&Matrix::Coo(gen::power_law(60, 60, 500, 2.0, 7)), Triangle::Lower, 1.0),
+            0.5,
+        );
+        let b = gen::dense_vector(60, 8);
+        let xd = dense_trsv(&a.to_dense(), &b, Triangle::Lower).unwrap();
+        let xs = trsv_csr(&a, &b, Triangle::Lower).unwrap();
+        for i in 0..60 {
+            assert!(
+                (xs[i] as f64 - xd[i]).abs() < 1e-3 * (1.0 + xd[i].abs()),
+                "x[{i}]: {} vs {}",
+                xs[i],
+                xd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn forward_solve_small_known_system() {
+        // L = [[2,0],[1,4]], b = [2, 9] => x = [1, 2]
+        let l = Csr::new(2, 2, vec![0, 1, 3], vec![0, 0, 1], vec![2.0, 1.0, 4.0]).unwrap();
+        let x = trsv_csr(&l, &[2.0, 9.0], Triangle::Lower).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-6 && (x[1] - 2.0).abs() < 1e-6);
+        // U = Lᵀ backward: U x = b with b = [4, 8] => x[1]=2, x[0]=(4-1*2)/2=1
+        let u = Csr::new(2, 2, vec![0, 2, 3], vec![0, 1, 1], vec![2.0, 1.0, 4.0]).unwrap();
+        let x = trsv_csr(&u, &[4.0, 8.0], Triangle::Upper).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-6 && (x[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_diagonal_is_rejected() {
+        let l = Csr::new(2, 2, vec![0, 1, 2], vec![0, 0], vec![1.0, 5.0]).unwrap();
+        assert!(trsv_csr(&l, &[1.0, 1.0], Triangle::Lower).is_err());
+        let dense = vec![vec![1.0, 0.0], vec![5.0, 0.0]];
+        assert!(dense_trsv(&dense, &[1.0, 1.0], Triangle::Lower).is_err());
+    }
+
+    #[test]
+    fn triangular_of_keeps_only_one_side_and_fills_diag() {
+        let a = Matrix::Coo(gen::uniform(30, 30, 300, 3));
+        let l = triangular_of(&a, Triangle::Lower, 2.5);
+        let u = triangular_of(&a, Triangle::Upper, 2.5);
+        for (i, row) in l.to_dense().iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                if j > i {
+                    assert_eq!(v, 0.0, "L has upper entry at ({i},{j})");
+                }
+                if j == i {
+                    assert!(v != 0.0, "L missing diagonal at {i}");
+                }
+            }
+        }
+        for (i, row) in u.to_dense().iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                if j < i {
+                    assert_eq!(v, 0.0, "U has lower entry at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_of_rectangular_input_clips_to_square() {
+        let a = Matrix::Coo(gen::uniform(10, 4, 30, 5));
+        let l = triangular_of(&a, Triangle::Lower, 1.0);
+        assert_eq!((l.rows(), l.cols()), (4, 4));
+    }
+
+    #[test]
+    fn diagonally_dominant_caps_every_row() {
+        let l = triangular_of(
+            &Matrix::Coo(gen::power_law(80, 80, 900, 1.5, 9)),
+            Triangle::Lower,
+            1.0,
+        );
+        let d = diagonally_dominant(&l, 0.5);
+        assert_eq!(d.nnz(), l.nnz(), "rescaling must not change the pattern");
+        for i in 0..d.rows() {
+            let mut diag = 0.0f32;
+            let mut off = 0.0f32;
+            for k in d.row_ptr[i]..d.row_ptr[i + 1] {
+                if d.col_idx[k] as usize == i {
+                    diag += d.val[k];
+                } else {
+                    off += d.val[k].abs();
+                }
+            }
+            assert!(off <= 0.5 * diag.abs() + 1e-5, "row {i}: off {off} vs diag {diag}");
+        }
+    }
+}

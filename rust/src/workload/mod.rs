@@ -1,12 +1,14 @@
 //! Evaluation workloads: the Table-2 matrix suite (scaled synthetic
 //! analogs), the Fig. 6 imbalance sweep inputs, the solver scenario set
-//! (`msrep solver-bench --scenarios`), and the SpGEMM product-chain
-//! scenarios (`msrep spgemm-bench`).
+//! (`msrep solver-bench --scenarios`), the SpGEMM product-chain scenarios
+//! (`msrep spgemm-bench`), and the SpTRSV triangular-factor scenarios
+//! (`msrep sptrsv-bench`).
 
 mod suite;
 
 pub use suite::{
     by_name, fig6_ratios, row_stochastic, scenario_matrix, solver_scenario_by_name,
-    solver_scenarios, spgemm_scenario_by_name, spgemm_scenario_chain, spgemm_scenarios, suite,
-    suite_matrix, SolverScenario, SpgemmScenario, SuiteEntry,
+    solver_scenarios, spgemm_scenario_by_name, spgemm_scenario_chain, spgemm_scenarios,
+    sptrsv_scenario_by_name, sptrsv_scenario_factor, sptrsv_scenarios, suite, suite_matrix,
+    SolverScenario, SpgemmScenario, SptrsvScenario, SuiteEntry,
 };

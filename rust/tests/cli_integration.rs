@@ -179,6 +179,43 @@ fn spgemm_bench_compares_planning_models() {
 }
 
 #[test]
+fn sptrsv_bench_compares_wavefront_splits() {
+    let o = msrep(&["sptrsv-bench", "--scenario", "powerlaw-lower", "--gpus", "4"]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let s = stdout(&o);
+    assert!(s.contains("powerlaw-lower"), "missing scenario header:\n{s}");
+    assert!(s.contains("levels (critical path)"), "missing structure table:\n{s}");
+    assert!(s.contains("parallelism histogram"), "missing histogram:\n{s}");
+    assert!(
+        s.contains("verify: max relative error vs sequential oracle"),
+        "missing verification line:\n{s}"
+    );
+    assert!(
+        s.contains("level-balanced vs naive row-block wavefront split"),
+        "missing comparison summary:\n{s}"
+    );
+}
+
+#[test]
+fn sptrsv_bench_help_and_bad_scenario() {
+    let o = msrep(&["sptrsv-bench", "--help"]);
+    assert!(o.status.success());
+    let s = stdout(&o);
+    assert!(s.contains("--scenario") && s.contains("--no-compare") && s.contains("--upper"));
+    assert!(!msrep(&["sptrsv-bench", "--scenario", "frobnicate"]).status.success());
+}
+
+#[test]
+fn solver_bench_runs_pcg_with_ilu0() {
+    let o = msrep(&["solver-bench", "--method", "pcg", "--m", "1024", "--max-iters", "400"]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let s = stdout(&o);
+    assert!(s.contains("== pcg:"), "missing pcg header:\n{s}");
+    assert!(s.contains("plan-reuse amortization"), "missing amortization:\n{s}");
+    assert!(s.contains("yes"), "PCG must converge in the summary:\n{s}");
+}
+
+#[test]
 fn spgemm_bench_help_and_bad_scenario() {
     let o = msrep(&["spgemm-bench", "--help"]);
     assert!(o.status.success());

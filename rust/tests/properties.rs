@@ -12,6 +12,11 @@
 //!  * pCSR merge metadata is self-sufficient (merge back to the original CSR)
 //!  * CG on generated SPD systems converges to the dense reference
 //!    solution in every partitioned format (solver-over-plan correctness)
+//!  * CSR↔CSC↔COO conversion round-trips and `transpose(transpose(A)) ==
+//!    A` hold on adversarial shapes — empty rows/cols, fully empty
+//!    matrices, duplicate COO entries, 1×n and n×1
+//!  * the level-scheduled SpTRSV matches the dense substitution oracle
+//!    in every partitioned format, both triangles
 
 use msrep::coordinator::partitioner::{balanced, baseline};
 use msrep::coordinator::{merge, Engine, Mode, RunConfig};
@@ -302,6 +307,138 @@ fn prop_cg_matches_dense_solution_across_formats() {
                     "{format:?} np={np} x[{i}]: {} vs {}",
                     rep.x[i],
                     x_ref[i]
+                );
+            }
+        }
+    });
+}
+
+/// Adversarial matrix generator for the conversion properties: draws
+/// degenerate shapes (1×n, n×1, empty matrices) and structures (empty
+/// rows/cols, duplicate coordinates) far more often than `arb_coo` does.
+fn arb_adversarial_coo(g: &mut Gen) -> Coo {
+    let (m, n) = match g.usize_in(0..5) {
+        0 => (1, g.usize_in(1..10 + g.size())), // 1×n
+        1 => (g.usize_in(1..10 + g.size()), 1), // n×1
+        _ => (g.usize_in(1..10 + g.size()), g.usize_in(1..10 + g.size())),
+    };
+    if g.prob(0.25) {
+        return Coo::empty(m, n); // fully empty
+    }
+    // cluster coordinates into few rows/cols so empty rows/cols AND
+    // duplicate entries both appear with high probability
+    let nnz = g.usize_in(0..2 * (m + n));
+    let rows: Vec<u32> = (0..nnz).map(|_| (g.usize_in(0..m) / 2 * 2 % m) as u32).collect();
+    let cols: Vec<u32> = (0..nnz).map(|_| (g.usize_in(0..n) / 2 * 2 % n) as u32).collect();
+    let vals = g.vec_f32(nnz);
+    Coo::new(m, n, rows, cols, vals).unwrap()
+}
+
+#[test]
+fn prop_conversion_roundtrips_on_adversarial_shapes() {
+    check("format round-trips on adversarial shapes", 80, |g| {
+        let coo = arb_adversarial_coo(g);
+        let dense = coo.to_dense();
+        let as_mat = Matrix::Coo(coo.clone());
+        // CSR↔CSC↔COO: every conversion chain lands on the same dense
+        let csr = convert::to_csr(&as_mat);
+        let csc = convert::to_csc(&as_mat);
+        assert_eq!(csr.to_dense(), dense, "COO->CSR");
+        assert_eq!(csc.to_dense(), dense, "COO->CSC");
+        assert_eq!(convert::to_csc(&Matrix::Csr(csr.clone())).to_dense(), dense, "CSR->CSC");
+        assert_eq!(convert::to_csr(&Matrix::Csc(csc.clone())).to_dense(), dense, "CSC->CSR");
+        assert_eq!(convert::to_coo(&Matrix::Csr(csr.clone())).to_dense(), dense, "CSR->COO");
+        assert_eq!(convert::to_coo(&Matrix::Csc(csc.clone())).to_dense(), dense, "CSC->COO");
+        // nnz is conserved even with duplicates (conversions never merge)
+        assert_eq!(csr.nnz(), coo.nnz());
+        assert_eq!(csc.nnz(), coo.nnz());
+
+        // transpose(transpose(A)) == A: exact array equality — transpose
+        // is a storage reinterpretation, so the double application must
+        // restore the original arrays, not just the same dense content
+        let tt_csr = convert::transpose(&convert::transpose(&Matrix::Csr(csr.clone())));
+        match tt_csr {
+            Matrix::Csr(back) => {
+                assert_eq!(back.row_ptr, csr.row_ptr);
+                assert_eq!(back.col_idx, csr.col_idx);
+                assert_eq!(back.val, csr.val);
+            }
+            other => panic!("CSR double transpose changed format to {:?}", other.kind()),
+        }
+        let tt_csc = convert::transpose(&convert::transpose(&Matrix::Csc(csc.clone())));
+        match tt_csc {
+            Matrix::Csc(back) => {
+                assert_eq!(back.col_ptr, csc.col_ptr);
+                assert_eq!(back.row_idx, csc.row_idx);
+                assert_eq!(back.val, csc.val);
+            }
+            other => panic!("CSC double transpose changed format to {:?}", other.kind()),
+        }
+        let tt_coo = convert::transpose(&convert::transpose(&as_mat));
+        match tt_coo {
+            Matrix::Coo(back) => {
+                assert_eq!(back.row_idx, coo.row_idx);
+                assert_eq!(back.col_idx, coo.col_idx);
+                assert_eq!(back.val, coo.val);
+            }
+            other => panic!("COO double transpose changed format to {:?}", other.kind()),
+        }
+        // single transpose flips shape and dense content
+        let t = convert::transpose(&as_mat);
+        assert_eq!((t.rows(), t.cols()), (coo.cols(), coo.rows()));
+        let td = convert::to_coo(&t).to_dense();
+        for i in 0..coo.rows() {
+            for j in 0..coo.cols() {
+                assert_eq!(td[j][i], dense[i][j], "transpose content at ({i},{j})");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sptrsv_matches_dense_oracle_across_formats() {
+    use msrep::sptrsv::{dense_trsv, diagonally_dominant, triangular_of, Triangle};
+    check("sptrsv == dense substitution, all formats", 25, |g| {
+        let n = g.usize_in(2..25 + g.size());
+        let base = gen::power_law(
+            n,
+            n,
+            g.usize_in(n..4 * n + 1),
+            1.2 + 2.0 * g.rng().f64(),
+            g.rng().next_u64(),
+        );
+        let triangle = if g.prob(0.5) { Triangle::Lower } else { Triangle::Upper };
+        // dominance keeps the f32 solve provably close to the f64 oracle
+        let factor = diagonally_dominant(
+            &triangular_of(&Matrix::Coo(base), triangle, 1.0 + g.f32_in(0.0, 2.0)),
+            0.5,
+        );
+        let b = g.vec_f32(n);
+        let expect = dense_trsv(&factor.to_dense(), &b, triangle).unwrap();
+        let np = g.usize_in(1..9);
+        for format in FormatKind::ALL {
+            let mat = match format {
+                FormatKind::Csr => Matrix::Csr(factor.clone()),
+                FormatKind::Csc => Matrix::Csc(convert::to_csc(&Matrix::Csr(factor.clone()))),
+                FormatKind::Coo => Matrix::Coo(factor.to_coo()),
+            };
+            let eng = Engine::new(RunConfig {
+                platform: Platform::dgx1(),
+                num_gpus: np,
+                mode: Mode::PStarOpt,
+                format,
+                backend: Backend::CpuRef,
+                numa_aware: None,
+                strategy_override: None,
+            })
+            .unwrap();
+            let rep = eng.sptrsv(&mat, &b, triangle).unwrap();
+            for i in 0..n {
+                assert!(
+                    (rep.x[i] as f64 - expect[i]).abs() < 1e-3 * (1.0 + expect[i].abs()),
+                    "{triangle:?} {format:?} np={np} x[{i}]: {} vs {}",
+                    rep.x[i],
+                    expect[i]
                 );
             }
         }
