@@ -1,0 +1,92 @@
+//! Bench: format auto-tuning on the selection scenario suite — the
+//! DESIGN.md §12 acceptance sweep. For every scenario the tuner's pick is
+//! compared against all three fixed formats through the shared acceptance
+//! surface (`autoplan::compare_fixed_formats` — the same definition the
+//! `msrep autoplan-bench` CI gate uses); the auto-selected plan's modeled
+//! SpMV time must never be worse than the worst fixed format, must match
+//! the best one (shared pricing core ⇒ the argmin cannot be missed), and
+//! must strictly beat the *median* fixed format in aggregate (geomean
+//! over the suite) — i.e. the tuner has to actually route, not just
+//! dodge disasters. (The executed-path equality of the pricing core is
+//! separately property-tested in `tests/autoplan_integration.rs`.)
+//!
+//! Run with `cargo bench --bench autoplan_selection`
+//! (`MSREP_BENCH_QUICK=1` shrinks the matrices).
+
+use msrep::autoplan::{compare_fixed_formats, plan_auto, AutoPlanOptions};
+use msrep::coordinator::{Engine, RunConfig};
+use msrep::formats::{gen, Matrix};
+use msrep::report::Table;
+use msrep::util::bench::section;
+use msrep::util::stats::geomean;
+use msrep::workload;
+
+const REUSE: usize = 32;
+
+fn main() {
+    let quick = std::env::var("MSREP_BENCH_QUICK").is_ok();
+    let cfg = RunConfig::default();
+    let engine = Engine::new(cfg.clone()).expect("engine");
+
+    section("autoplan format selection — dgx1 x 8, p*-opt, reuse 32 (modeled)");
+    let mut t = Table::new([
+        "scenario", "chosen", "auto", "best", "median", "worst", "vs median",
+    ]);
+    let mut ratios: Vec<f64> = Vec::new();
+    for s in workload::autoplan_scenarios() {
+        let mut coo = workload::autoplan_scenario_matrix(&s);
+        if quick {
+            // quarter-scale regeneration of the same structure
+            coo = match s.kind {
+                "banded" => gen::banded(s.m / 4, s.n / 4, s.band, s.seed),
+                "block-diagonal" => {
+                    gen::block_diagonal(s.m / 4, s.blocks, s.nnz / 4, s.seed)
+                }
+                _ => gen::power_law(s.m / 4, s.n / 4, s.nnz / 4, s.r, s.seed),
+            };
+        }
+        let input = Matrix::Coo(coo);
+
+        let opts = AutoPlanOptions::for_config(&cfg).with_reuse(REUSE);
+        let auto = plan_auto(&cfg, &input, &opts).expect("tuner runs");
+        let cmp = compare_fixed_formats(&engine, &input, &auto).expect("comparison prices");
+
+        // acceptance 1: never worse than the worst fixed format
+        assert!(
+            cmp.never_worse_than_worst(),
+            "{}: auto {:.3e} worse than worst fixed {:.3e}",
+            s.name,
+            cmp.auto_s,
+            cmp.worst()
+        );
+        // acceptance 2: the tuner prices with the engine's own model, so
+        // its pick must BE the best fixed format, not merely close
+        assert!(
+            cmp.matches_best(),
+            "{}: auto {:.3e} missed the best fixed {:.3e}",
+            s.name,
+            cmp.auto_s,
+            cmp.best()
+        );
+        ratios.push(cmp.vs_median());
+        t.row([
+            s.name.to_string(),
+            auto.choice().candidate.label(),
+            format!("{:.3e} s", cmp.auto_s),
+            format!("{:.3e} s", cmp.best()),
+            format!("{:.3e} s", cmp.median()),
+            format!("{:.3e} s", cmp.worst()),
+            format!("{:.2}x", cmp.vs_median()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let g = geomean(&ratios);
+    println!("tuner vs median fixed format: geomean {g:.3}x over {} scenarios", ratios.len());
+    // acceptance 3: strictly beats the median fixed format in aggregate
+    assert!(
+        g > 1.0,
+        "tuner must beat the median fixed format in aggregate (geomean {g:.3})"
+    );
+    println!("autoplan selection acceptance OK");
+}

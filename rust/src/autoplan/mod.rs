@@ -1,0 +1,544 @@
+//! Profile-driven format auto-tuning: pick `(format, strategy, np)` per
+//! matrix instead of hardcoding it in [`RunConfig`].
+//!
+//! MSREP's premise is that pCSR/pCSC/pCOO each win on different sparsity
+//! structures (paper §2.1, §5.5) — yet every caller used to pin one format
+//! for the whole run. Structure-driven selection is the standard answer
+//! (Yang et al. pick the format per matrix structure; Kreutzer et al.
+//! choose storage by the row-length distribution), and this module is its
+//! MSREP instantiation:
+//!
+//! 1. **profile** — [`stats::profile`] extracts cheap structural features
+//!    (density, row/col CV, bandwidth, power-law R) in one O(nnz) pass;
+//! 2. **enumerate** — every `(format, strategy, np)` combination of an
+//!    [`AutoPlanOptions`] candidate set is materialized as a real
+//!    [`PartitionPlan`] (candidates that cannot build, e.g. block
+//!    partitioning of col-sorted COO, are skipped);
+//! 3. **price** — each candidate is charged by the *same* cost model the
+//!    engine executes under:
+//!    [`model_spmv_phases`](crate::coordinator::model_spmv_phases) for the
+//!    replay cost, the plan's own `t_partition` for the build, amortized
+//!    over [`AutoPlanOptions::reuse`] expected SpMVs;
+//! 4. **rank** — candidates sort by amortized cost with a deterministic
+//!    structural tie-break, and the winner's plan ships in the returned
+//!    [`AutoPlan`] together with the full rationale table
+//!    ([`crate::report::render_autoplan_report`] renders it).
+//!
+//! Because step 3 reuses the engine's own pricing function, the tuner's
+//! predicted cost of a candidate **is** the `modeled_total` that
+//! [`Engine::spmv_with_plan`](crate::coordinator::Engine::spmv_with_plan)
+//! reports when the plan is replayed — the `plan_auto`-equals-brute-force
+//! property test in `tests/autoplan_integration.rs` holds by construction
+//! and guards the shared core against drift.
+//!
+//! Entry points: [`Engine::plan_auto`](crate::coordinator::Engine::plan_auto)
+//! (candidates restricted to plans executable on that engine),
+//! [`plan_auto`] with [`AutoPlanOptions::full_sweep`] (the full
+//! `(format, strategy, np)` grid), serve-side per-tenant routing via
+//! [`Server::register_auto`](crate::serve::Server::register_auto), and the
+//! `PlanSource::Auto` arm of [`crate::solver::SolverConfig`]. See
+//! DESIGN.md §12.
+
+use crate::coordinator::{model_spmv_phases, Engine, PartitionPlan, RunConfig, SpmvPhases, Strategy};
+use crate::error::{Error, Result};
+use crate::formats::stats::{self, Profile};
+use crate::formats::{convert, FormatKind, Matrix};
+use crate::sim::model;
+
+/// One point of the tuner's search space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    /// storage format the matrix would be converted into
+    pub format: FormatKind,
+    /// partitioning strategy
+    pub strategy: Strategy,
+    /// GPU count
+    pub np: usize,
+}
+
+impl Candidate {
+    /// `csr/balanced/np8`-style label for reports.
+    pub fn label(&self) -> String {
+        format!("{}/{}/np{}", self.format.name(), self.strategy.label(), self.np)
+    }
+}
+
+/// A candidate with its modeled price tag.
+#[derive(Debug, Clone)]
+pub struct CandidateCost {
+    /// the configuration point
+    pub candidate: Candidate,
+    /// modeled one-off partitioning cost of building the plan (§4.1)
+    pub t_partition: f64,
+    /// modeled per-SpMV replay phases (h2d / compute / merge)
+    pub phases: SpmvPhases,
+    /// per-GPU work imbalance of the candidate plan (max/mean)
+    pub imbalance: f64,
+}
+
+impl CandidateCost {
+    /// Modeled cost of one SpMV replay (`phases.total()`).
+    pub fn spmv_s(&self) -> f64 {
+        self.phases.total()
+    }
+
+    /// The ranking objective: one SpMV replay plus the build cost
+    /// amortized over `reuse` expected replays.
+    pub fn amortized_s(&self, reuse: usize) -> f64 {
+        self.spmv_s() + self.t_partition / reuse.max(1) as f64
+    }
+}
+
+/// The tuner's candidate set and amortization horizon.
+#[derive(Debug, Clone)]
+pub struct AutoPlanOptions {
+    /// storage formats to enumerate
+    pub formats: Vec<FormatKind>,
+    /// partitioning strategies to enumerate
+    pub strategies: Vec<Strategy>,
+    /// GPU counts to enumerate (each `>= 1` and `<=` the platform's GPUs)
+    pub np_choices: Vec<usize>,
+    /// expected SpMV replays per plan build — the amortization horizon the
+    /// build cost is spread over (1 = the paper's one-shot call shape,
+    /// larger = serving / iterative-solver traffic). Default 32.
+    pub reuse: usize,
+}
+
+impl AutoPlanOptions {
+    /// Candidates executable on an engine running `cfg`: formats free
+    /// (the engine follows the plan's format), strategy and GPU count
+    /// pinned to the engine's — the restriction
+    /// [`Engine::plan_auto`](crate::coordinator::Engine::plan_auto) and
+    /// the serving layer use so the winning plan replays without
+    /// reconfiguring anything.
+    pub fn for_config(cfg: &RunConfig) -> AutoPlanOptions {
+        AutoPlanOptions {
+            formats: FormatKind::ALL.to_vec(),
+            strategies: vec![cfg.effective_strategy()],
+            np_choices: vec![cfg.num_gpus],
+            reuse: 32,
+        }
+    }
+
+    /// The full `(format, strategy, np)` grid under `cfg`'s platform:
+    /// all three formats, both strategies, and power-of-two GPU counts up
+    /// to `cfg.num_gpus` (plus `cfg.num_gpus` itself). The winner of this
+    /// sweep may need a reconfigured engine — [`AutoPlan::config`] is the
+    /// ready-made [`RunConfig`] for it.
+    pub fn full_sweep(cfg: &RunConfig) -> AutoPlanOptions {
+        let mut np_choices = Vec::new();
+        let mut np = 1usize;
+        while np < cfg.num_gpus {
+            np_choices.push(np);
+            np *= 2;
+        }
+        np_choices.push(cfg.num_gpus);
+        AutoPlanOptions {
+            formats: FormatKind::ALL.to_vec(),
+            strategies: vec![Strategy::NnzBalanced, Strategy::Blocks],
+            np_choices,
+            reuse: 32,
+        }
+    }
+
+    /// Replace the amortization horizon (builder-style).
+    pub fn with_reuse(mut self, reuse: usize) -> AutoPlanOptions {
+        self.reuse = reuse;
+        self
+    }
+
+    fn validate(&self, cfg: &RunConfig) -> Result<()> {
+        if self.formats.is_empty() || self.strategies.is_empty() || self.np_choices.is_empty() {
+            return Err(Error::Autoplan("empty candidate axis".into()));
+        }
+        if self.reuse == 0 {
+            return Err(Error::Autoplan("reuse horizon must be >= 1".into()));
+        }
+        for &np in &self.np_choices {
+            if np == 0 || np > cfg.platform.num_gpus {
+                return Err(Error::Autoplan(format!(
+                    "np {np} out of range for {} ({} GPUs)",
+                    cfg.platform.name, cfg.platform.num_gpus
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The tuner's verdict: the winning plan plus the full ranked rationale.
+#[derive(Debug)]
+pub struct AutoPlan {
+    /// structural features the selection was derived from
+    pub profile: Profile,
+    /// every buildable candidate with its price, best (rank 0) first
+    pub ranked: Vec<CandidateCost>,
+    /// the winning candidate's ready-to-replay plan
+    pub plan: PartitionPlan,
+    /// the base configuration specialized to the winner (format, GPU
+    /// count, strategy override) — build an
+    /// [`Engine`](crate::coordinator::Engine) from it to execute the plan
+    /// when the winner differs from the base engine's shape
+    pub config: RunConfig,
+    /// amortization horizon the ranking used
+    pub reuse: usize,
+    /// modeled cost of the tuner's *search*: the profiling pass (two
+    /// streaming O(nnz) degree counts) plus the losing candidates' plan
+    /// builds — everything the selection did except the winner's own
+    /// build, which is charged as the plan's `t_partition`. Charged by
+    /// `PlanSource::Auto` solves so the tuner is never modeled as free.
+    pub t_tune: f64,
+}
+
+impl AutoPlan {
+    /// The winning candidate's price line.
+    pub fn choice(&self) -> &CandidateCost {
+        &self.ranked[0]
+    }
+
+    /// The second-best candidate, if more than one candidate built.
+    pub fn runner_up(&self) -> Option<&CandidateCost> {
+        self.ranked.get(1)
+    }
+
+    /// Modeled amortized speedup of the winner over the worst candidate
+    /// (>= 1; how much picking formats blindly could cost).
+    pub fn worst_case_gain(&self) -> f64 {
+        let worst = self.ranked.last().expect("ranked is non-empty");
+        let best = self.choice().amortized_s(self.reuse);
+        if best <= 0.0 {
+            1.0
+        } else {
+            worst.amortized_s(self.reuse) / best
+        }
+    }
+}
+
+/// Deterministic tie-break rank so equal-cost candidates sort stably
+/// (format order CSR < CSC < COO, balanced before blocks, small np first).
+fn structural_rank(c: &Candidate) -> (usize, usize, usize) {
+    let f = match c.format {
+        FormatKind::Csr => 0,
+        FormatKind::Csc => 1,
+        FormatKind::Coo => 2,
+    };
+    let s = match c.strategy {
+        Strategy::NnzBalanced => 0,
+        Strategy::Blocks => 1,
+    };
+    (f, s, c.np)
+}
+
+/// Run the tuner: profile `a`, build + price every candidate of `opts`
+/// under `cfg`'s platform/mode, and return the ranked [`AutoPlan`].
+///
+/// `cfg.format`, `cfg.num_gpus` and `cfg.strategy_override` act only as
+/// the *base* the candidates specialize; `cfg.platform`, `cfg.mode` and
+/// `cfg.numa_aware` are shared by every candidate. Candidates that cannot
+/// build are skipped; an empty surviving set is an error.
+pub fn plan_auto(cfg: &RunConfig, a: &Matrix, opts: &AutoPlanOptions) -> Result<AutoPlan> {
+    opts.validate(cfg)?;
+    let profile = match a {
+        // COO inputs (the CLI and scenario paths) profile in place
+        Matrix::Coo(c) => stats::profile(c),
+        _ => stats::profile(&convert::to_coo(a)),
+    };
+    // the profile pass: two streaming degree counts over the nnz stream
+    // (row + column), priced like any other CPU sweep; the losing
+    // candidates' builds join it below so the search is charged honestly
+    let t_profile = model::cpu_rewrite_time(2 * a.nnz() as u64);
+    let mut builds_total = 0.0f64;
+
+    // only the running winner's plan is kept alive — every candidate plan
+    // embeds a full copy of the matrix streams, so holding all of a
+    // full_sweep's plans until the end would peak at ~#candidates copies
+    // of the payload for no benefit (the ranking only needs the costs)
+    let mut ranked: Vec<CandidateCost> = Vec::new();
+    let mut winner: Option<(f64, (usize, usize, usize), PartitionPlan, RunConfig)> = None;
+    for &format in &opts.formats {
+        // a candidate in the input's own format borrows it — only the
+        // other formats pay a conversion copy
+        let converted;
+        let mat: &Matrix = if format == a.kind() {
+            a
+        } else {
+            converted = convert::to_format(a, format);
+            &converted
+        };
+        for &strategy in &opts.strategies {
+            for &np in &opts.np_choices {
+                let ccfg = RunConfig {
+                    format,
+                    num_gpus: np,
+                    strategy_override: Some(strategy),
+                    ..cfg.clone()
+                };
+                // infeasible combinations (e.g. block partitioning of
+                // col-sorted COO) are skipped, not fatal
+                let Ok(plan) = PartitionPlan::build(mat, &ccfg) else {
+                    continue;
+                };
+                let phases = model_spmv_phases(&ccfg, &plan);
+                let cost = CandidateCost {
+                    candidate: Candidate { format, strategy, np },
+                    t_partition: plan.t_partition,
+                    phases,
+                    imbalance: plan.work_imbalance(),
+                };
+                builds_total += plan.t_partition;
+                let amortized = cost.amortized_s(opts.reuse);
+                let rank_key = structural_rank(&cost.candidate);
+                // same (cost, structural) order as the ranking sort below,
+                // so the kept plan is exactly ranked[0]'s
+                let better = winner.as_ref().map_or(true, |&(best_s, best_rank, _, _)| {
+                    amortized < best_s || (amortized == best_s && rank_key < best_rank)
+                });
+                if better {
+                    winner = Some((amortized, rank_key, plan, ccfg));
+                }
+                ranked.push(cost);
+            }
+        }
+    }
+    let Some((_, _, plan, config)) = winner else {
+        return Err(Error::Autoplan(format!(
+            "no candidate could build for a {}x{} {} matrix",
+            a.rows(),
+            a.cols(),
+            a.kind().name()
+        )));
+    };
+    ranked.sort_by(|x, y| {
+        x.amortized_s(opts.reuse)
+            .partial_cmp(&y.amortized_s(opts.reuse))
+            .expect("modeled costs are finite")
+            .then_with(|| structural_rank(&x.candidate).cmp(&structural_rank(&y.candidate)))
+    });
+    // search cost = profiling + every build except the winner's (that one
+    // is the plan's own t_partition, charged by whoever replays the plan)
+    let t_tune = t_profile + (builds_total - plan.t_partition).max(0.0);
+    Ok(AutoPlan { profile, ranked, plan, config, reuse: opts.reuse, t_tune })
+}
+
+/// Comparison of the tuner's pick against every fixed format, priced by
+/// the engine's own pricing core and amortized over the tuner's reuse
+/// horizon — the acceptance surface shared by `msrep autoplan-bench` and
+/// `benches/autoplan_selection.rs`, so the two CI gates cannot drift
+/// apart.
+#[derive(Debug, Clone)]
+pub struct FixedFormatComparison {
+    /// the tuner's winner: modeled replay + build cost over the horizon
+    pub auto_s: f64,
+    /// every fixed format's amortized total, in [`FormatKind::ALL`] order
+    pub per_format: Vec<(FormatKind, f64)>,
+}
+
+impl FixedFormatComparison {
+    fn sorted(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self.per_format.iter().map(|&(_, t)| t).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("modeled totals are finite"));
+        v
+    }
+
+    /// Cheapest fixed format's amortized total.
+    pub fn best(&self) -> f64 {
+        self.sorted()[0]
+    }
+
+    /// Median fixed format's amortized total.
+    pub fn median(&self) -> f64 {
+        let s = self.sorted();
+        s[s.len() / 2]
+    }
+
+    /// Most expensive fixed format's amortized total.
+    pub fn worst(&self) -> f64 {
+        *self.sorted().last().expect("at least one format")
+    }
+
+    /// Modeled speedup of the tuner over the median fixed format.
+    pub fn vs_median(&self) -> f64 {
+        self.median() / self.auto_s
+    }
+
+    /// Acceptance gate 1: never worse than the worst fixed format.
+    pub fn never_worse_than_worst(&self) -> bool {
+        self.auto_s <= self.worst() * (1.0 + 1e-9)
+    }
+
+    /// Acceptance gate 2: the tuner's pick *is* the best fixed format —
+    /// with the shared pricing core the argmin cannot be missed.
+    pub fn matches_best(&self) -> bool {
+        self.auto_s <= self.best() * (1.0 + 1e-9)
+    }
+}
+
+/// Build the fixed-format comparison for `auto` on `engine`: every fixed
+/// format's amortized total at the engine's GPU count and strategy,
+/// priced by the same shared core as the tuner itself. Formats the tuner
+/// already ranked (a [`AutoPlanOptions::for_config`] run covers all
+/// three) are read straight from `auto.ranked` — no rebuild; formats the
+/// tuner's candidate set skipped (restricted sets, `full_sweep` results
+/// for a different engine shape) are built and priced on the spot.
+pub fn compare_fixed_formats(
+    engine: &Engine,
+    a: &Matrix,
+    auto: &AutoPlan,
+) -> Result<FixedFormatComparison> {
+    let reuse = auto.reuse.max(1);
+    let np = engine.config().num_gpus;
+    let strategy = engine.config().effective_strategy();
+    let mut per_format = Vec::with_capacity(FormatKind::ALL.len());
+    for &format in &FormatKind::ALL {
+        let ranked_row = auto.ranked.iter().find(|r| {
+            r.candidate.format == format
+                && r.candidate.np == np
+                && r.candidate.strategy == strategy
+        });
+        let total = match ranked_row {
+            // the tuner already built and priced this exact candidate
+            Some(r) => r.amortized_s(reuse),
+            None => {
+                let mat = convert::to_format(a, format);
+                let ccfg = RunConfig {
+                    format,
+                    num_gpus: np,
+                    strategy_override: Some(strategy),
+                    ..engine.config().clone()
+                };
+                // unbuildable formats are skipped, matching plan_auto's
+                // skip-not-fatal candidate semantics — the comparison
+                // ranks whatever does build
+                let Ok(plan) = PartitionPlan::build(&mat, &ccfg) else {
+                    continue;
+                };
+                model_spmv_phases(&ccfg, &plan).total() + plan.t_partition / reuse as f64
+            }
+        };
+        per_format.push((format, total));
+    }
+    if per_format.is_empty() {
+        return Err(Error::Autoplan("no fixed format could build for the comparison".into()));
+    }
+    let auto_s = auto.choice().amortized_s(reuse);
+    Ok(FixedFormatComparison { auto_s, per_format })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Mode};
+    use crate::formats::gen;
+    use crate::sim::Platform;
+
+    fn cfg(np: usize) -> RunConfig {
+        RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: np,
+            mode: Mode::PStarOpt,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: None,
+        }
+    }
+
+    #[test]
+    fn options_validation() {
+        let c = cfg(8);
+        let base = AutoPlanOptions::for_config(&c);
+        let a = Matrix::Coo(gen::uniform(50, 50, 400, 1));
+        assert!(plan_auto(&c, &a, &base).is_ok());
+        let empty = AutoPlanOptions { formats: vec![], ..base.clone() };
+        assert!(plan_auto(&c, &a, &empty).is_err());
+        let zero_reuse = AutoPlanOptions { reuse: 0, ..base.clone() };
+        assert!(plan_auto(&c, &a, &zero_reuse).is_err());
+        let bad_np = AutoPlanOptions { np_choices: vec![9], ..base };
+        assert!(plan_auto(&c, &a, &bad_np).is_err());
+    }
+
+    #[test]
+    fn ranked_is_sorted_and_covers_all_formats() {
+        let c = cfg(8);
+        let a = Matrix::Coo(gen::power_law(800, 800, 15_000, 2.0, 2));
+        let auto = plan_auto(&c, &a, &AutoPlanOptions::for_config(&c)).unwrap();
+        assert_eq!(auto.ranked.len(), 3, "one candidate per format");
+        for w in auto.ranked.windows(2) {
+            assert!(
+                w[0].amortized_s(auto.reuse) <= w[1].amortized_s(auto.reuse) + 1e-18,
+                "ranking out of order"
+            );
+        }
+        // the winner's plan matches its own rank-0 row
+        assert_eq!(auto.plan.format, auto.choice().candidate.format);
+        assert_eq!(auto.plan.np, 8);
+        assert!(auto.worst_case_gain() >= 1.0);
+        assert!(auto.t_tune > 0.0);
+        // the specialized config really is executable
+        crate::coordinator::Engine::new(auto.config.clone()).unwrap();
+    }
+
+    #[test]
+    fn full_sweep_enumerates_np_and_strategies() {
+        let c = cfg(8);
+        let a = Matrix::Coo(gen::uniform(400, 400, 6_000, 3));
+        let auto = plan_auto(&c, &a, &AutoPlanOptions::full_sweep(&c)).unwrap();
+        // 3 formats x 2 strategies x np {1,2,4,8}, minus unbuildable
+        // combinations — at least the balanced grid must survive
+        assert!(auto.ranked.len() >= 12, "only {} candidates", auto.ranked.len());
+        let nps: std::collections::BTreeSet<usize> =
+            auto.ranked.iter().map(|r| r.candidate.np).collect();
+        assert!(nps.contains(&1) && nps.contains(&8));
+        assert!(auto
+            .ranked
+            .iter()
+            .any(|r| r.candidate.strategy == Strategy::Blocks));
+    }
+
+    #[test]
+    fn wide_matrix_routes_to_csc_tall_to_csr() {
+        let c = cfg(8);
+        let wide = Matrix::Coo(gen::power_law(512, 20_000, 150_000, 2.0, 4));
+        let auto = plan_auto(&c, &wide, &AutoPlanOptions::for_config(&c)).unwrap();
+        assert_eq!(auto.choice().candidate.format, FormatKind::Csc, "wide input");
+        let tall = Matrix::Coo(gen::power_law(20_000, 512, 150_000, 2.0, 5));
+        let auto = plan_auto(&c, &tall, &AutoPlanOptions::for_config(&c)).unwrap();
+        assert_eq!(auto.choice().candidate.format, FormatKind::Csr, "tall input");
+    }
+
+    #[test]
+    fn fixed_format_comparison_matches_ranked_costs() {
+        let c = cfg(8);
+        let engine = Engine::new(c.clone()).unwrap();
+        let a = Matrix::Coo(gen::power_law(400, 1_200, 10_000, 2.0, 7));
+        let auto = plan_auto(&c, &a, &AutoPlanOptions::for_config(&c)).unwrap();
+        let cmp = compare_fixed_formats(&engine, &a, &auto).unwrap();
+        assert!(cmp.matches_best() && cmp.never_worse_than_worst());
+        // the comparison's totals are the tuner's own ranked costs — one
+        // pricing core, no second definition to drift
+        for &(f, t) in &cmp.per_format {
+            let row = auto.ranked.iter().find(|r| r.candidate.format == f).unwrap();
+            assert_eq!(t, row.amortized_s(auto.reuse), "{f:?}");
+        }
+        assert_eq!(cmp.auto_s, auto.choice().amortized_s(auto.reuse));
+        assert!(cmp.vs_median() >= 1.0);
+    }
+
+    #[test]
+    fn reuse_horizon_can_flip_the_choice_toward_cheap_builds() {
+        // at reuse = 1 the build cost dominates the objective; at large
+        // reuse it vanishes — the two objectives must at least order
+        // amortized costs differently when t_partition differs
+        let c = cfg(8);
+        let a = Matrix::Coo(gen::uniform(2_000, 2_000, 40_000, 6));
+        let one = plan_auto(&c, &a, &AutoPlanOptions::for_config(&c).with_reuse(1)).unwrap();
+        let many =
+            plan_auto(&c, &a, &AutoPlanOptions::for_config(&c).with_reuse(10_000)).unwrap();
+        for r in one.ranked.iter().chain(many.ranked.iter()) {
+            assert!(r.amortized_s(1) >= r.spmv_s());
+        }
+        // large-horizon objective converges to the bare replay cost
+        let best = many.choice();
+        assert!((best.amortized_s(10_000) - best.spmv_s()) < best.spmv_s() * 0.05);
+    }
+}

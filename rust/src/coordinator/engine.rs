@@ -43,6 +43,141 @@ pub struct SpmvReport {
     pub metrics: Metrics,
 }
 
+/// Modeled phase times of replaying one [`PartitionPlan`] (no partitioning
+/// — the replay cost a cached plan pays per SpMV).
+///
+/// Produced by [`model_spmv_phases`], the single pricing core shared by
+/// [`Engine::spmv_with_plan`] and the [`crate::autoplan`] candidate
+/// ranking — one source of truth, so the tuner's predicted cost *is* the
+/// executed plan's modeled cost by construction, not by approximation.
+#[derive(Debug, Clone, Copy)]
+pub struct SpmvPhases {
+    /// host→device uploads (max over GPUs for concurrent modes, serial
+    /// sum for the Baseline)
+    pub t_h2d: f64,
+    /// device kernel time (max over GPUs; includes the COO→CSR
+    /// conversion pass for COO-format plans, §5.1)
+    pub t_compute: f64,
+    /// partial-result merge (row fix-ups or column reduction, §4.3)
+    pub t_merge: f64,
+}
+
+impl SpmvPhases {
+    /// h2d + compute + merge — the full replay cost of one SpMV.
+    pub fn total(&self) -> f64 {
+        self.t_h2d + self.t_compute + self.t_merge
+    }
+}
+
+/// Price one SpMV replay of `plan` under `cfg` without executing anything
+/// (DESIGN.md §3 timeline, §12 pricing). `cfg.num_gpus` must equal
+/// `plan.np`; `cfg.format` is ignored — kernel times follow the *plan's*
+/// storage format, exactly as [`Engine::spmv_with_plan`] executes it.
+pub fn model_spmv_phases(cfg: &RunConfig, plan: &PartitionPlan) -> SpmvPhases {
+    debug_assert_eq!(cfg.num_gpus, plan.np, "phases priced for a foreign GPU count");
+    let p = &cfg.platform;
+    let np = plan.np;
+    let tasks = &plan.tasks;
+    let m = plan.m;
+
+    // host→device uploads
+    let h2d: Vec<u64> = tasks.iter().map(|t| t.h2d_bytes()).collect();
+    let src_numa: Vec<usize> = if cfg.effective_numa_aware() {
+        (0..np).map(|g| p.gpu_numa[g]).collect()
+    } else {
+        vec![0; np] // naive: everything staged on socket 0
+    };
+    let t_h2d = if cfg.mode == Mode::Baseline {
+        model::serial_h2d_time(p, &h2d)
+    } else {
+        model::concurrent_h2d_times(
+            p,
+            &pad_to_gpus(&h2d, p.num_gpus),
+            &pad_to_gpus(&src_numa, p.num_gpus),
+        )
+        .into_iter()
+        .fold(0.0, f64::max)
+    };
+
+    // device kernels: kernel-time modeling follows the *plan's* storage
+    // format, not the engine default — a transpose-dispatched plan
+    // (plan_transpose) runs CSC streams on an engine configured for CSR
+    // input. `x_len` is the x segment the task actually reads: full n for
+    // row-based tasks, the owned column range for column-based ones.
+    let t_compute = tasks
+        .iter()
+        .map(|t| {
+            let mut kt = model::spmv_kernel_time(
+                p,
+                t.nnz() as u64,
+                t.out_len as u64,
+                t.x_len as u64,
+                plan.format,
+            );
+            if plan.format == FormatKind::Coo {
+                // §5.1: COO inputs run a COO→CSR conversion kernel first
+                kt += model::coo_to_csr_conversion_time(p, t.nnz() as u64);
+            }
+            kt
+        })
+        .fold(0.0, f64::max);
+
+    // merge
+    let overlaps = merge::overlap_count(tasks);
+    let d2h: Vec<u64> = tasks.iter().map(|t| t.d2h_bytes()).collect();
+    let t_merge = match (plan.merge_class, cfg.mode) {
+        (MergeClass::RowBased, Mode::Baseline) => {
+            d2h.iter().map(|&b| model::lone_transfer_time(p, b)).sum::<f64>()
+                + model::cpu_fixup_time(overlaps)
+        }
+        (MergeClass::RowBased, _) => {
+            model::concurrent_d2h_times(
+                p,
+                &pad_to_gpus(&d2h, p.num_gpus),
+                &pad_to_gpus(&src_numa, p.num_gpus),
+            )
+            .into_iter()
+            .fold(0.0, f64::max)
+                + model::cpu_fixup_time(overlaps)
+        }
+        (MergeClass::ColBased, Mode::Baseline) => {
+            d2h.iter().map(|&b| model::lone_transfer_time(p, b)).sum::<f64>()
+                + model::cpu_vector_sum_time(p, np, (m * 4) as u64)
+        }
+        (MergeClass::ColBased, Mode::PStar) => {
+            model::concurrent_d2h_times(
+                p,
+                &pad_to_gpus(&d2h, p.num_gpus),
+                &pad_to_gpus(&src_numa, p.num_gpus),
+            )
+            .into_iter()
+            .fold(0.0, f64::max)
+                + model::cpu_vector_sum_time(p, np, (m * 4) as u64)
+        }
+        (MergeClass::ColBased, Mode::PStarOpt) => {
+            // gather-reduce on the GPUs, then one download (§4.3).
+            // The optimized engine picks the cheaper of the on-GPU tree
+            // and the concurrent-download + CPU-sum path: the paper's
+            // GPU reduce wins at their 1M+-row scale, while tiny
+            // vectors favour the CPU path (the ablations bench plots
+            // the crossover).
+            let tree = model::gpu_tree_reduce_time(p, np, (m * 4) as u64)
+                + model::lone_transfer_time(p, (m * 4) as u64);
+            let cpu = model::concurrent_d2h_times(
+                p,
+                &pad_to_gpus(&d2h, p.num_gpus),
+                &pad_to_gpus(&src_numa, p.num_gpus),
+            )
+            .into_iter()
+            .fold(0.0, f64::max)
+                + model::cpu_vector_sum_time(p, np, (m * 4) as u64);
+            tree.min(cpu)
+        }
+    };
+
+    SpmvPhases { t_h2d, t_compute, t_merge }
+}
+
 /// The multi-GPU SpMV engine.
 pub struct Engine {
     config: RunConfig,
@@ -107,6 +242,31 @@ impl Engine {
         PartitionPlan::build(&crate::formats::convert::transpose(a), &self.config)
     }
 
+    /// Auto-select the storage format for `a` and build the winning plan:
+    /// profiles the matrix, prices every candidate format with the sim
+    /// cost model ([`model_spmv_phases`]) and returns the ranked
+    /// [`AutoPlan`](crate::autoplan::AutoPlan). Candidates are restricted
+    /// to plans *executable on this engine* (this engine's GPU count and
+    /// strategy; formats free — [`Engine::spmv_with_plan`] follows the
+    /// plan's format), so `plan_auto(a)?.plan` feeds straight into
+    /// [`Engine::spmv_with_plan`]. For the full `(format, strategy, np)`
+    /// sweep use [`crate::autoplan::plan_auto`] with
+    /// [`crate::autoplan::AutoPlanOptions::full_sweep`].
+    pub fn plan_auto(&self, a: &Matrix) -> Result<crate::autoplan::AutoPlan> {
+        crate::autoplan::plan_auto(
+            &self.config,
+            a,
+            &crate::autoplan::AutoPlanOptions::for_config(&self.config),
+        )
+    }
+
+    /// Price one SpMV replay of `plan` under this engine's configuration
+    /// without executing it (see [`model_spmv_phases`]).
+    pub fn model_spmv(&self, plan: &PartitionPlan) -> Result<SpmvPhases> {
+        plan.validate_for(&self.config)?;
+        Ok(model_spmv_phases(&self.config, plan))
+    }
+
     /// Multi-GPU SpMV: `y = alpha*A*x + beta*y0` (paper Alg. 1 semantics;
     /// `y0 = None` means a zero initial vector). Partitions from scratch —
     /// the paper's one-shot call shape.
@@ -151,48 +311,15 @@ impl Engine {
         for t in tasks {
             let mut mem = DeviceMemory::new(t.gpu, p.gpu_mem_bytes);
             mem.alloc("stream", (t.nnz() * 12) as u64)?;
-            mem.alloc("x", (n * 4) as u64)?;
+            mem.alloc("x", (t.x_len * 4) as u64)?;
             mem.alloc("y_partial", (t.out_len * 4) as u64)?;
         }
 
-        // ---- 2. host→device uploads -------------------------------------
-        let h2d: Vec<u64> = tasks.iter().map(|t| t.h2d_bytes(n)).collect();
-        let h2d_total: u64 = h2d.iter().sum();
-        let src_numa: Vec<usize> = if cfg.effective_numa_aware() {
-            (0..np).map(|g| p.gpu_numa[g]).collect()
-        } else {
-            vec![0; np] // naive: everything staged on socket 0
-        };
-        let t_h2d = if cfg.mode == Mode::Baseline {
-            model::serial_h2d_time(p, &h2d)
-        } else {
-            model::concurrent_h2d_times(p, &pad_to_gpus(&h2d, p.num_gpus), &pad_to_gpus(&src_numa, p.num_gpus))
-                .into_iter()
-                .fold(0.0, f64::max)
-        };
+        // ---- 2+3+4 modeled timeline (shared with the autoplan pricer) ---
+        let phases = model_spmv_phases(cfg, plan);
+        let h2d_total: u64 = tasks.iter().map(|t| t.h2d_bytes()).sum();
 
-        // ---- 3. device kernels (model) + real execution (numerics) ------
-        // kernel-time modeling follows the *plan's* storage format, not the
-        // engine default: a transpose-dispatched plan (plan_transpose) runs
-        // CSC streams on an engine configured for CSR input
-        let t_compute = tasks
-            .iter()
-            .map(|t| {
-                let mut kt = model::spmv_kernel_time(
-                    p,
-                    t.nnz() as u64,
-                    t.out_len as u64,
-                    n as u64,
-                    plan.format,
-                );
-                if plan.format == FormatKind::Coo {
-                    // §5.1: COO inputs run a COO→CSR conversion kernel first
-                    kt += model::coo_to_csr_conversion_time(p, t.nnz() as u64);
-                }
-                kt
-            })
-            .fold(0.0, f64::max);
-
+        // ---- 3. real execution (numerics) -------------------------------
         let exec_start = Instant::now();
         let partials: Vec<Vec<f32>> = match cfg.backend {
             Backend::CpuRef => {
@@ -222,52 +349,9 @@ impl Engine {
         };
         let measured_exec = exec_start.elapsed().as_secs_f64();
 
-        // ---- 4. merge (model + real) -------------------------------------
-        let merge_class = plan.merge_class;
+        // ---- 4. merge (real; model already priced in `phases`) ----------
         let overlaps = merge::overlap_count(tasks);
-        let d2h: Vec<u64> = tasks.iter().map(|t| t.d2h_bytes()).collect();
-        let d2h_total: u64 = d2h.iter().sum();
-        let t_merge = match (merge_class, cfg.mode) {
-            (MergeClass::RowBased, Mode::Baseline) => {
-                d2h.iter().map(|&b| model::lone_transfer_time(p, b)).sum::<f64>()
-                    + model::cpu_fixup_time(overlaps)
-            }
-            (MergeClass::RowBased, _) => {
-                model::concurrent_d2h_times(p, &pad_to_gpus(&d2h, p.num_gpus), &pad_to_gpus(&src_numa, p.num_gpus))
-                    .into_iter()
-                    .fold(0.0, f64::max)
-                    + model::cpu_fixup_time(overlaps)
-            }
-            (MergeClass::ColBased, Mode::Baseline) => {
-                d2h.iter().map(|&b| model::lone_transfer_time(p, b)).sum::<f64>()
-                    + model::cpu_vector_sum_time(p, np, (m * 4) as u64)
-            }
-            (MergeClass::ColBased, Mode::PStar) => {
-                model::concurrent_d2h_times(p, &pad_to_gpus(&d2h, p.num_gpus), &pad_to_gpus(&src_numa, p.num_gpus))
-                    .into_iter()
-                    .fold(0.0, f64::max)
-                    + model::cpu_vector_sum_time(p, np, (m * 4) as u64)
-            }
-            (MergeClass::ColBased, Mode::PStarOpt) => {
-                // gather-reduce on the GPUs, then one download (§4.3).
-                // The optimized engine picks the cheaper of the on-GPU tree
-                // and the concurrent-download + CPU-sum path: the paper's
-                // GPU reduce wins at their 1M+-row scale, while tiny
-                // vectors favour the CPU path (the ablations bench plots
-                // the crossover).
-                let tree = model::gpu_tree_reduce_time(p, np, (m * 4) as u64)
-                    + model::lone_transfer_time(p, (m * 4) as u64);
-                let cpu = model::concurrent_d2h_times(
-                    p,
-                    &pad_to_gpus(&d2h, p.num_gpus),
-                    &pad_to_gpus(&src_numa, p.num_gpus),
-                )
-                .into_iter()
-                .fold(0.0, f64::max)
-                    + model::cpu_vector_sum_time(p, np, (m * 4) as u64);
-                tree.min(cpu)
-            }
-        };
+        let d2h_total: u64 = tasks.iter().map(|t| t.d2h_bytes()).sum();
 
         let merge_start = Instant::now();
         let mut y = match y0 {
@@ -284,10 +368,10 @@ impl Engine {
             imbalance: crate::util::stats::imbalance(&loads),
             loads,
             t_partition: 0.0,
-            t_h2d,
-            t_compute,
-            t_merge,
-            modeled_total: t_h2d + t_compute + t_merge,
+            t_h2d: phases.t_h2d,
+            t_compute: phases.t_compute,
+            t_merge: phases.t_merge,
+            modeled_total: phases.total(),
             measured_partition: 0.0,
             measured_exec,
             measured_merge,
@@ -350,9 +434,11 @@ impl Engine {
         let tasks = &plan.tasks;
 
         // modeled timeline: stream moves once, dense traffic scales with k
+        // (x_len = the X rows this task reads: n for row-based tasks, the
+        // owned column range for column-based ones — see GpuTask::x_len)
         let h2d: Vec<u64> = tasks
             .iter()
-            .map(|t| (t.nnz() * 12 + n * 4 * k) as u64)
+            .map(|t| (t.nnz() * 12 + t.x_len * 4 * k) as u64)
             .collect();
         let src_numa: Vec<usize> = if cfg.effective_numa_aware() {
             (0..np).map(|g| p.gpu_numa[g]).collect()
@@ -377,7 +463,7 @@ impl Engine {
                     p,
                     t.nnz() as u64,
                     t.out_len as u64,
-                    n as u64,
+                    t.x_len as u64,
                     k as u64,
                     plan.format,
                 )
@@ -722,6 +808,49 @@ mod tests {
         let plan = eng.plan_transpose(&a).unwrap();
         assert!(plan.imbalance() < 1.01, "imbalance {}", plan.imbalance());
         assert_eq!(plan.loads().iter().sum::<u64>(), a.nnz() as u64);
+    }
+
+    #[test]
+    fn model_spmv_phases_match_executed_modeled_numbers() {
+        // the pricing core and the execution path must agree bitwise —
+        // the autoplan ranking depends on it
+        let coo = gen::power_law(500, 400, 9_000, 2.0, 71);
+        let x = gen::dense_vector(400, 72);
+        for format in FormatKind::ALL {
+            let mat = matrix_in(format, &coo);
+            for mode in Mode::ALL {
+                let eng = engine(mode, format, 4);
+                let plan = eng.plan(&mat).unwrap();
+                let phases = eng.model_spmv(&plan).unwrap();
+                let rep = eng.spmv_with_plan(&plan, &x, 1.0, 0.0, None).unwrap();
+                assert_eq!(phases.t_h2d, rep.metrics.t_h2d, "{format:?}/{mode:?} h2d");
+                assert_eq!(phases.t_compute, rep.metrics.t_compute, "{format:?}/{mode:?} compute");
+                assert_eq!(phases.t_merge, rep.metrics.t_merge, "{format:?}/{mode:?} merge");
+                assert_eq!(phases.total(), rep.metrics.modeled_total, "{format:?}/{mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn csc_plan_wins_on_wide_matrices_and_loses_on_tall() {
+        // wide (m << n): row-based tasks replicate all of x while pCSC
+        // tasks stage only their owned column slice — CSC must price
+        // cheaper; tall (m >> n) flips it (full-length column partials
+        // make the CSC merge dominate)
+        let eng = engine(Mode::PStarOpt, FormatKind::Csr, 8);
+        let total = |coo: &Coo, format: FormatKind| {
+            let mat = matrix_in(format, coo);
+            let plan = eng.plan(&mat).unwrap();
+            eng.model_spmv(&plan).unwrap().total()
+        };
+        let wide = gen::power_law(512, 20_000, 150_000, 2.0, 73);
+        let w_csr = total(&wide, FormatKind::Csr);
+        let w_csc = total(&wide, FormatKind::Csc);
+        assert!(w_csc < w_csr, "wide: csc {w_csc} vs csr {w_csr}");
+        let tall = gen::power_law(20_000, 512, 150_000, 2.0, 74);
+        let t_csr = total(&tall, FormatKind::Csr);
+        let t_csc = total(&tall, FormatKind::Csc);
+        assert!(t_csr < t_csc, "tall: csr {t_csr} vs csc {t_csc}");
     }
 
     #[test]

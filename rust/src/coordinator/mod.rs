@@ -21,7 +21,7 @@ pub mod scaleout;
 pub mod worker;
 
 pub use config::{Backend, Mode, RunConfig};
-pub use engine::{Engine, SpmvReport};
+pub use engine::{model_spmv_phases, Engine, SpmvPhases, SpmvReport};
 pub use metrics::Metrics;
 pub use partitioner::{GpuTask, MergeClass, PartitionOutcome, Strategy, WorkModel};
 pub use plan::PartitionPlan;

@@ -41,6 +41,11 @@ pub struct GpuTask {
     pub out_len: usize,
     /// global row of partial[0] (0 for col-based)
     pub out_offset: usize,
+    /// length of the x segment this task's kernel reads: the full `n` for
+    /// row-based tasks (their column gathers are unrestricted), the owned
+    /// column count for column-based tasks (a pCSC/pCOO column range only
+    /// ever touches its own x slice — see DESIGN.md §12)
+    pub x_len: usize,
     /// first row shared with the previous task (row-based only)
     pub overlaps_prev: bool,
     /// merge strategy
@@ -56,10 +61,13 @@ impl GpuTask {
         self.val.len()
     }
 
-    /// Upload payload bytes: the stream + the x vector (each GPU holds a
-    /// full copy of x, as in the paper's design).
-    pub fn h2d_bytes(&self, n: usize) -> u64 {
-        (self.nnz() * 12 + n * 4) as u64
+    /// Upload payload bytes: the stream + the x segment the kernel reads.
+    /// Row-based tasks stage a full copy of x (the paper's design — CSR
+    /// column gathers are unrestricted); column-based tasks stage only
+    /// their owned x slice, the refinement that makes pCSC competitive on
+    /// wide matrices (DESIGN.md §12).
+    pub fn h2d_bytes(&self) -> u64 {
+        (self.nnz() * 12 + self.x_len * 4) as u64
     }
 
     /// Partial-result download bytes.
@@ -98,6 +106,16 @@ pub enum Strategy {
     Blocks,
     /// nnz-balanced pCSR/pCSC/pCOO (the MSREP path)
     NnzBalanced,
+}
+
+impl Strategy {
+    /// Short name for reports and CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            Strategy::Blocks => "blocks",
+            Strategy::NnzBalanced => "balanced",
+        }
+    }
 }
 
 /// What a balanced partition equalizes across GPUs — the pluggable work
@@ -174,12 +192,17 @@ pub fn spgemm_element_weights(matrix: &Matrix, b_row_nnz: &[u64]) -> Vec<u64> {
 ///   the total, so weightless tail elements are not silently dropped.
 pub fn weighted_boundaries(weights: &[u64], np: usize) -> Vec<usize> {
     assert!(np >= 1, "np must be >= 1");
+    // The prefix sum accumulates in u128, not the element type: SpGEMM
+    // flop weights are full-range u64 values, so a u64 (or usize) running
+    // sum can wrap on adversarial inputs — and a wrapped prefix is no
+    // longer sorted, which silently breaks the partition_point scan below
+    // into non-monotone, work-losing boundaries.
     let mut prefix = Vec::with_capacity(weights.len() + 1);
-    prefix.push(0u64);
+    prefix.push(0u128);
     for &w in weights {
-        prefix.push(prefix.last().unwrap() + w);
+        prefix.push(prefix.last().unwrap() + w as u128);
     }
-    let total = *prefix.last().unwrap() as u128;
+    let total = *prefix.last().unwrap();
     if total == 0 {
         // no work to equalize: an even element split keeps the ranges
         // tiling [0, len) (matches the unit-weight boundaries on an
@@ -192,7 +215,7 @@ pub fn weighted_boundaries(weights: &[u64], np: usize) -> Vec<usize> {
                 // pin the end so trailing zero-weight elements stay covered
                 return weights.len();
             }
-            let target = (total * g as u128 / np as u128) as u64;
+            let target = total * g as u128 / np as u128;
             // first element index whose prefix reaches the target
             prefix.partition_point(|&p| p < target).min(weights.len())
         })
@@ -304,6 +327,7 @@ fn balanced_csr_task(csr: &Csr, lo: usize, hi: usize, g: usize) -> Result<GpuTas
         row_idx: p.local_row_ids(),
         out_len: p.local_rows(),
         out_offset: p.start_row,
+        x_len: csr.cols(),
         overlaps_prev: p.start_flag,
         merge: MergeClass::RowBased,
         rewrite_ops: p.local_rows() as u64,
@@ -325,6 +349,7 @@ fn balanced_csc_task(csc: &Csc, lo: usize, hi: usize, g: usize) -> Result<GpuTas
         row_idx: p.row_idx(csc).to_vec(),
         out_len: csc.rows(),
         out_offset: 0,
+        x_len: p.local_cols(),
         overlaps_prev: p.start_flag,
         merge: MergeClass::ColBased,
         rewrite_ops: p.local_cols() as u64,
@@ -341,6 +366,7 @@ fn balanced_coo_task(coo: &Coo, lo: usize, hi: usize, g: usize) -> Result<GpuTas
             row_idx: p.local_key_ids(coo),
             out_len: p.local_keys(),
             out_offset: p.start_key,
+            x_len: coo.cols(),
             overlaps_prev: p.start_flag,
             merge: MergeClass::RowBased,
             // COO rewrite touches every nnz (§4.1, §5.4)
@@ -354,6 +380,9 @@ fn balanced_coo_task(coo: &Coo, lo: usize, hi: usize, g: usize) -> Result<GpuTas
             row_idx: p.row_idx(coo).to_vec(),
             out_len: coo.rows(),
             out_offset: 0,
+            // col-sorted pCOO keys are columns: the owned key range is
+            // exactly the x slice the element stream can reference
+            x_len: p.local_keys(),
             overlaps_prev: p.start_flag,
             merge: MergeClass::ColBased,
             rewrite_ops: p.nnz() as u64,
@@ -379,6 +408,7 @@ fn baseline_csr_task(csr: &Csr, np: usize, g: usize) -> GpuTask {
         row_idx,
         out_len: row_hi - row_lo,
         out_offset: row_lo,
+        x_len: csr.cols(),
         overlaps_prev: false, // blocks never share rows
         merge: MergeClass::RowBased,
         rewrite_ops: (row_hi - row_lo) as u64,
@@ -403,6 +433,7 @@ fn baseline_csc_task(csc: &Csc, np: usize, g: usize) -> GpuTask {
         row_idx: csc.row_idx[lo..hi].to_vec(),
         out_len: csc.rows(),
         out_offset: 0,
+        x_len: col_hi - col_lo,
         overlaps_prev: false,
         merge: MergeClass::ColBased,
         rewrite_ops: (col_hi - col_lo) as u64,
@@ -429,6 +460,7 @@ fn baseline_coo_task(coo: &Coo, np: usize, g: usize) -> Result<GpuTask> {
         row_idx,
         out_len: (row_hi - row_lo) as usize,
         out_offset: row_lo as usize,
+        x_len: coo.cols(),
         overlaps_prev: false,
         merge: MergeClass::RowBased,
         rewrite_ops: (hi - lo) as u64,
@@ -547,12 +579,37 @@ mod tests {
             row_idx: vec![0; 100],
             out_len: 10,
             out_offset: 0,
+            x_len: 1000,
             overlaps_prev: false,
             merge: MergeClass::RowBased,
             rewrite_ops: 0,
         };
-        assert_eq!(t.h2d_bytes(1000), 100 * 12 + 4000);
+        assert_eq!(t.h2d_bytes(), 100 * 12 + 4000);
         assert_eq!(t.d2h_bytes(), 40);
+    }
+
+    #[test]
+    fn x_len_is_full_for_row_based_and_local_for_col_based() {
+        let coo = gen::uniform(200, 600, 5_000, 21);
+        // row-based tasks gather arbitrary columns: full x
+        let csr = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone())));
+        for out in [balanced(&csr, 4).unwrap(), baseline(&csr, 4).unwrap()] {
+            assert!(out.tasks.iter().all(|t| t.x_len == 600));
+        }
+        // col-based tasks read only their owned column range: the x slices
+        // tile [0, n) up to the shared boundary columns
+        let csc = Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone())));
+        for out in [balanced(&csc, 4).unwrap(), baseline(&csc, 4).unwrap()] {
+            let total: usize = out.tasks.iter().map(|t| t.x_len).sum();
+            assert!((600..600 + 4).contains(&total), "x slices total {total}");
+            assert!(out.tasks.iter().all(|t| t.x_len <= 600));
+        }
+        // col-sorted COO behaves like CSC
+        let mut col_coo = coo;
+        col_coo.sort_by_col();
+        let out = balanced(&Matrix::Coo(col_coo), 4).unwrap();
+        let total: usize = out.tasks.iter().map(|t| t.x_len).sum();
+        assert!((600..600 + 4).contains(&total), "pCOO x slices total {total}");
     }
 
     #[test]
@@ -647,6 +704,32 @@ mod tests {
                 assert!(b.iter().all(|&x| x <= len), "len={len} np={np}");
             }
         }
+    }
+
+    #[test]
+    fn weighted_boundaries_survive_near_max_weights() {
+        // adversarial SpGEMM flop weights: the running prefix sum passes
+        // u64::MAX long before the last element, which the old
+        // machine-word accumulation wrapped into an unsorted prefix (and
+        // partition_point over unsorted data returns garbage boundaries)
+        let w = vec![u64::MAX / 2; 8];
+        for np in [1usize, 2, 4] {
+            let b = weighted_boundaries(&w, np);
+            assert_eq!(b.len(), np + 1);
+            assert_eq!((b[0], b[np]), (0, 8), "np={np}");
+            assert!(b.windows(2).all(|x| x[0] <= x[1]), "np={np}: {b:?}");
+            // equal weights must reproduce the unit-weight split exactly
+            let expect: Vec<usize> = (0..=np).map(|g| g * 8 / np).collect();
+            assert_eq!(b, expect, "np={np}");
+        }
+        // a single near-max weight among unit weights: the huge element
+        // must sit alone at the midpoint boundary, everything in range
+        let mut w = vec![1u64; 10];
+        w[5] = u64::MAX;
+        let b = weighted_boundaries(&w, 2);
+        assert!(b.windows(2).all(|x| x[0] <= x[1]), "{b:?}");
+        assert_eq!((b[0], b[2]), (0, 10));
+        assert_eq!(b[1], 6, "{b:?}: the max-weight element decides the split");
     }
 
     #[test]

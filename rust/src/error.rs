@@ -71,6 +71,10 @@ pub enum Error {
     /// positive-definiteness, bad tolerance/iteration budget).
     Solver(String),
 
+    /// Format auto-tuner error (empty candidate set, no buildable
+    /// candidate, bad options).
+    Autoplan(String),
+
     /// CLI usage error.
     Usage(String),
 }
@@ -96,6 +100,7 @@ impl fmt::Display for Error {
             Error::Json { at, msg } => write!(f, "json parse error at byte {at}: {msg}"),
             Error::Serve(m) => write!(f, "serve error: {m}"),
             Error::Solver(m) => write!(f, "solver error: {m}"),
+            Error::Autoplan(m) => write!(f, "autoplan error: {m}"),
             Error::Usage(m) => write!(f, "usage: {m}"),
         }
     }

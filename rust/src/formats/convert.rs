@@ -26,6 +26,17 @@ pub fn to_csc(a: &Matrix) -> Csc {
     }
 }
 
+/// Convert any matrix into the named storage format — the dispatch the
+/// CLI and the [`crate::autoplan`] tuner use to materialize a candidate
+/// (or chosen) format. A matrix already in `kind` is cloned as-is.
+pub fn to_format(a: &Matrix, kind: super::FormatKind) -> Matrix {
+    match kind {
+        super::FormatKind::Csr => Matrix::Csr(to_csr(a)),
+        super::FormatKind::Csc => Matrix::Csc(to_csc(a)),
+        super::FormatKind::Coo => Matrix::Coo(to_coo(a)),
+    }
+}
+
 /// Convert any matrix to COO (row-sorted for CSR, col-sorted for CSC).
 pub fn to_coo(a: &Matrix) -> Coo {
     match a {

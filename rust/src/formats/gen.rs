@@ -264,6 +264,33 @@ pub fn aggregation_2d(g: usize) -> Coo {
         .expect("aggregation is valid")
 }
 
+/// Block-diagonal matrix: `blocks` square diagonal blocks of `m /
+/// blocks` rows each (the last block absorbs the remainder), with
+/// `~nnz_target / blocks` uniform entries per block — the decoupled
+/// multi-physics / arrow-free structure where every non-zero sits near
+/// the diagonal band of its block. Row-sorted.
+pub fn block_diagonal(m: usize, blocks: usize, nnz_target: usize, seed: u64) -> Coo {
+    assert!(m > 0 && blocks > 0 && blocks <= m, "need 1 <= blocks <= m");
+    let mut rng = Rng::new(seed);
+    let mut row_idx = Vec::with_capacity(nnz_target);
+    let mut col_idx = Vec::with_capacity(nnz_target);
+    let mut val = Vec::with_capacity(nnz_target);
+    let per_block = nnz_target / blocks;
+    for b in 0..blocks {
+        let lo = b * m / blocks;
+        let hi = (b + 1) * m / blocks;
+        let side = hi - lo;
+        for _ in 0..per_block {
+            row_idx.push((lo + rng.usize_below(side)) as u32);
+            col_idx.push((lo + rng.usize_below(side)) as u32);
+            val.push(rng.f32_range(-1.0, 1.0));
+        }
+    }
+    let mut coo = Coo::new(m, m, row_idx, col_idx, val).expect("blocks stay in range");
+    coo.sort_by_row();
+    coo
+}
+
 /// Diagonal identity-like matrix (smoke tests: SpMV(I, x) == x).
 pub fn identity(n: usize) -> Coo {
     let idx: Vec<u32> = (0..n as u32).collect();
@@ -425,6 +452,25 @@ mod tests {
             let col_sum: f32 = (0..25).map(|i| d[i][j]).sum();
             assert!((1.0..=4.0).contains(&col_sum), "aggregate {j}: {col_sum}");
         }
+    }
+
+    #[test]
+    fn block_diagonal_entries_stay_inside_their_block() {
+        let blocks = 4;
+        let a = block_diagonal(100, blocks, 2_000, 12);
+        assert_eq!((a.rows(), a.cols(), a.nnz()), (100, 100, 2_000));
+        assert_eq!(a.sort_order(), crate::formats::SortOrder::Row);
+        for (&r, &c) in a.row_idx.iter().zip(&a.col_idx) {
+            assert_eq!(
+                r as usize * blocks / 100,
+                c as usize * blocks / 100,
+                "entry ({r},{c}) crosses a block boundary"
+            );
+        }
+        // deterministic
+        let b = block_diagonal(100, blocks, 2_000, 12);
+        assert_eq!(a.val, b.val);
+        assert_eq!(a.row_idx, b.row_idx);
     }
 
     #[test]

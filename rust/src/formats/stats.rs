@@ -1,7 +1,8 @@
 //! Matrix structure statistics, including the power-law exponent estimator
-//! used to report Table 2's R column for the synthetic analogs and to
+//! used to report Table 2's R column for the synthetic analogs, to
 //! quantify per-row SpGEMM flop skew in
-//! [`crate::report::render_flop_skew`].
+//! [`crate::report::render_flop_skew`], and to feed the
+//! [`crate::autoplan`] format tuner's feature vector.
 
 use super::{Coo, Csc, Csr};
 
@@ -22,9 +23,34 @@ pub struct Profile {
     pub max_row_nnz: usize,
     /// max nnz of any column
     pub max_col_nnz: usize,
+    /// coefficient of variation (std/mean) of the per-row nnz counts —
+    /// 0 for perfectly uniform rows, large under heavy row skew (the
+    /// Kreutzer-style row-length-distribution feature the autoplan
+    /// tuner reports)
+    pub row_cv: f64,
+    /// coefficient of variation of the per-column nnz counts
+    pub col_cv: f64,
+    /// matrix bandwidth: max |i − j| over stored entries (0 when empty) —
+    /// small for banded/stencil structures, ~max(m, n) for scattered ones
+    pub bandwidth: usize,
     /// fitted power-law exponent R of the column-degree distribution
     /// (paper §5.2: P(k) ~ k^-R), or None if the fit is degenerate
     pub r_exponent: Option<f64>,
+}
+
+/// Coefficient of variation (population std over mean) of a count vector;
+/// 0.0 when the vector is empty or sums to zero.
+fn coeff_of_variation(xs: &[usize]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() / mean
 }
 
 /// Compute the profile of a COO matrix.
@@ -34,9 +60,17 @@ pub fn profile(coo: &Coo) -> Profile {
     let m = coo.rows();
     let n = coo.cols();
     let nnz = coo.nnz();
-    let max_row_nnz = (0..m).map(|i| csr.row_nnz(i)).max().unwrap_or(0);
-    let max_col_nnz = (0..n).map(|j| csc.col_nnz(j)).max().unwrap_or(0);
+    let row_degrees: Vec<usize> = (0..m).map(|i| csr.row_nnz(i)).collect();
     let col_degrees: Vec<usize> = (0..n).map(|j| csc.col_nnz(j)).collect();
+    let max_row_nnz = row_degrees.iter().copied().max().unwrap_or(0);
+    let max_col_nnz = col_degrees.iter().copied().max().unwrap_or(0);
+    let bandwidth = coo
+        .row_idx
+        .iter()
+        .zip(&coo.col_idx)
+        .map(|(&r, &c)| (r as i64 - c as i64).unsigned_abs() as usize)
+        .max()
+        .unwrap_or(0);
     Profile {
         m,
         n,
@@ -45,16 +79,32 @@ pub fn profile(coo: &Coo) -> Profile {
         mean_row_nnz: if m == 0 { 0.0 } else { nnz as f64 / m as f64 },
         max_row_nnz,
         max_col_nnz,
+        row_cv: coeff_of_variation(&row_degrees),
+        col_cv: coeff_of_variation(&col_degrees),
+        bandwidth,
         r_exponent: fit_power_law(&col_degrees),
     }
 }
 
+/// `k_min` cutoffs scanned by [`fit_power_law`]: the smallest distinct
+/// positive degrees, in ascending order. Clauset–Shalizi–Newman §3.3 scans
+/// every distinct value; capping the scan bounds the fit at
+/// O(cap · samples) on degree sequences with very many distinct values
+/// without moving realistic fits, whose KS minimum sits at small `k_min`.
+const KMIN_CANDIDATES: usize = 32;
+
 /// Fit the exponent R of P(k) ~ k^-R to a degree sample via the maximum-
-/// likelihood (Hill) estimator with the discrete half-integer correction of
-/// Clauset–Shalizi–Newman: `R = 1 + n / Σ ln(k_i / (k_min − ½))`, with
-/// `k_min` taken as the smallest observed positive degree (power laws are
-/// scale-free, so a distribution supported on `[k_min, k_max]` fits the
-/// same exponent as one on `[1, k_max/k_min]`).
+/// likelihood (Hill) estimator with the discrete half-integer correction
+/// of Clauset–Shalizi–Newman: `R = 1 + n / Σ ln(k_i / (k_min − ½))` over
+/// the tail `k_i ≥ k_min`.
+///
+/// `k_min` is chosen by minimizing the Kolmogorov–Smirnov distance between
+/// the empirical tail and the fitted law over candidate cutoffs (CSN
+/// §3.3). Taking the smallest observed positive degree instead — the old
+/// behaviour, still reachable by passing that degree to
+/// [`fit_power_law_with_kmin`] — lets a single low-degree outlier (one
+/// degree-1 column in an otherwise heavy-tailed sample) drag the whole
+/// estimate toward 1.
 ///
 /// The paper reports R fitted on the column-degree distribution (§5.2,
 /// citing Newman [29]); MLE is the standard unbiased choice — log-log
@@ -63,21 +113,77 @@ pub fn profile(coo: &Coo) -> Profile {
 /// Returns None when fewer than 3 distinct positive degrees exist (a
 /// degenerate sample has no tail to fit).
 pub fn fit_power_law(degrees: &[usize]) -> Option<f64> {
-    let positive: Vec<usize> = degrees.iter().copied().filter(|&k| k > 0).collect();
-    let distinct: std::collections::BTreeSet<usize> = positive.iter().copied().collect();
+    let mut positive: Vec<usize> = degrees.iter().copied().filter(|&k| k > 0).collect();
+    positive.sort_unstable();
+    let mut distinct = positive.clone();
+    distinct.dedup();
     if distinct.len() < 3 {
         return None;
     }
-    let kmin = *distinct.iter().next().unwrap() as f64;
-    let n = positive.len() as f64;
-    let log_sum: f64 = positive
-        .iter()
-        .map(|&k| (k as f64 / (kmin - 0.5)).ln())
-        .sum();
+    let mut best: Option<(f64, f64)> = None; // (ks distance, fitted R)
+    for (i, &kmin) in distinct.iter().take(KMIN_CANDIDATES).enumerate() {
+        // the tail must keep >= 3 distinct degrees to constrain a fit;
+        // distinct is sorted, so later candidates only shrink the tail
+        if distinct.len() - i < 3 {
+            break;
+        }
+        let tail = &positive[positive.partition_point(|&k| k < kmin)..];
+        let Some(r) = hill_estimate(tail, kmin) else { continue };
+        let ks = ks_distance(tail, kmin, r);
+        if best.map_or(true, |(best_ks, _)| ks < best_ks) {
+            best = Some((ks, r));
+        }
+    }
+    best.map(|(_, r)| r)
+}
+
+/// [`fit_power_law`] with an explicit cutoff: the Hill estimate over the
+/// tail `k ≥ k_min` only. Passing the sample's smallest positive degree
+/// reproduces the pre-KS behaviour (which used exactly that cutoff).
+/// Returns None when the tail has fewer than 3 distinct degrees or is
+/// not heavy at all.
+pub fn fit_power_law_with_kmin(degrees: &[usize], k_min: usize) -> Option<f64> {
+    let k_min = k_min.max(1);
+    let mut tail: Vec<usize> = degrees.iter().copied().filter(|&k| k >= k_min).collect();
+    tail.sort_unstable();
+    let mut distinct = tail.clone();
+    distinct.dedup();
+    if distinct.len() < 3 {
+        return None;
+    }
+    hill_estimate(&tail, k_min)
+}
+
+/// Hill MLE over a tail supported on `[kmin, ∞)` with the CSN
+/// half-integer correction; None when the tail carries no spread.
+fn hill_estimate(tail: &[usize], kmin: usize) -> Option<f64> {
+    let km = kmin as f64 - 0.5;
+    let n = tail.len() as f64;
+    let log_sum: f64 = tail.iter().map(|&k| (k as f64 / km).ln()).sum();
     if log_sum <= 0.0 {
         return None;
     }
     Some(1.0 + n / log_sum)
+}
+
+/// Kolmogorov–Smirnov distance between the empirical tail survival
+/// function and the fitted one, `S(k) = ((k − ½)/(k_min − ½))^(1−R)`,
+/// evaluated at every distinct tail degree. `tail` must be sorted.
+fn ks_distance(tail: &[usize], kmin: usize, r: f64) -> f64 {
+    let n = tail.len() as f64;
+    let km = kmin as f64 - 0.5;
+    let mut ks = 0.0f64;
+    let mut i = 0usize;
+    while i < tail.len() {
+        let k = tail[i];
+        let s_emp = (tail.len() - i) as f64 / n; // empirical P(K >= k)
+        let s_model = ((k as f64 - 0.5) / km).powf(1.0 - r);
+        ks = ks.max((s_emp - s_model).abs());
+        while i < tail.len() && tail[i] == k {
+            i += 1; // skip duplicates of k
+        }
+    }
+    ks
 }
 
 #[cfg(test)]
@@ -133,17 +239,22 @@ mod tests {
         assert_eq!(fit_power_law(&mixed), None);
     }
 
+    /// Deterministic sample with counts(k) ∝ k^-R over `[k_lo, k_hi]`.
+    fn synthetic_tail(r_true: f64, k_lo: usize, k_hi: usize, scale: f64) -> Vec<usize> {
+        let mut degrees: Vec<usize> = Vec::new();
+        for k in k_lo..=k_hi {
+            let count = (scale * (k as f64).powf(-r_true)).round() as usize;
+            degrees.extend(std::iter::repeat(k).take(count));
+        }
+        degrees
+    }
+
     #[test]
     fn fit_recovers_synthetic_exponent_within_tolerance() {
-        // deterministic sample with counts(k) ∝ k^-R over k in [8, 512]:
         // kmin is large enough that the Clauset–Shalizi–Newman
         // half-integer correction is accurate (the known xmin ≳ 6 regime)
         for r_true in [1.8f64, 2.5, 3.2] {
-            let mut degrees: Vec<usize> = Vec::new();
-            for k in 8usize..=2048 {
-                let count = (1.0e6 * (k as f64).powf(-r_true)).round() as usize;
-                degrees.extend(std::iter::repeat(k).take(count));
-            }
+            let degrees = synthetic_tail(r_true, 8, 2048, 1.0e6);
             let r = fit_power_law(&degrees).expect("synthetic tail must fit");
             assert!(
                 (r - r_true).abs() < 0.2,
@@ -154,7 +265,52 @@ mod tests {
     }
 
     #[test]
-    fn uniform_matrix_fits_poorly_or_steep(){
+    fn single_low_degree_outlier_does_not_drag_the_fit() {
+        // a clean heavy tail on [8, 512] plus ONE degree-1 outlier: the
+        // old estimator took k_min = 1 (smallest observed degree) and the
+        // huge ln(k/0.5) terms collapsed the estimate toward ~1.3; the
+        // KS-minimizing cutoff must step over the outlier
+        let r_true = 2.5;
+        let clean = synthetic_tail(r_true, 8, 512, 2.0e6);
+        let r_clean = fit_power_law(&clean).expect("clean tail fits");
+        assert!((r_clean - r_true).abs() < 0.2, "clean fit {r_clean}");
+        let mut polluted = clean.clone();
+        polluted.push(1);
+        let r_polluted = fit_power_law(&polluted).expect("polluted tail fits");
+        assert!(
+            (r_polluted - r_true).abs() < 0.25,
+            "outlier dragged the fit to {r_polluted}"
+        );
+        assert!(
+            (r_polluted - r_clean).abs() < 0.05,
+            "one outlier moved the fit {r_clean} -> {r_polluted}"
+        );
+        // forcing the outlier as the cutoff reproduces the old damage
+        let r_dragged = fit_power_law_with_kmin(&polluted, 1).expect("full-sample fit");
+        assert!(
+            r_dragged < r_clean - 0.5,
+            "k_min = 1 must visibly underfit: {r_dragged} vs {r_clean}"
+        );
+    }
+
+    #[test]
+    fn explicit_kmin_matches_auto_choice_on_clean_tails() {
+        let degrees = synthetic_tail(2.2, 16, 1024, 5.0e5);
+        let auto = fit_power_law(&degrees).unwrap();
+        let pinned = fit_power_law_with_kmin(&degrees, 16).unwrap();
+        // on a tail with no outliers both estimates sit near the truth
+        assert!((auto - 2.2).abs() < 0.2, "auto {auto}");
+        assert!((pinned - 2.2).abs() < 0.2, "pinned {pinned}");
+        // and an over-aggressive cutoff still fits the (truncated) tail
+        let truncated = fit_power_law_with_kmin(&degrees, 64).unwrap();
+        assert!(truncated > 1.0);
+        // degenerate cutoffs refuse
+        assert_eq!(fit_power_law_with_kmin(&degrees, 100_000), None);
+        assert_eq!(fit_power_law_with_kmin(&[], 1), None);
+    }
+
+    #[test]
+    fn uniform_matrix_fits_poorly_or_steep() {
         // a uniform matrix's degree histogram is narrow; if a fit exists it
         // should not look like a heavy tail (R stays well above 1)
         let a = gen::uniform(5000, 5000, 50_000, 16);
@@ -162,5 +318,26 @@ mod tests {
         if let Some(r) = p.r_exponent {
             assert!(r > 1.0, "uniform fitted R = {r}");
         }
+    }
+
+    #[test]
+    fn profile_features_separate_structures() {
+        // banded: tiny bandwidth, near-zero row CV
+        let banded = profile(&gen::banded(2_000, 2_000, 5, 17));
+        assert!(banded.bandwidth <= 5, "bandwidth {}", banded.bandwidth);
+        assert!(banded.row_cv < 0.3, "banded row_cv {}", banded.row_cv);
+        // power-law: scattered and column-skewed
+        let skewed = profile(&gen::power_law(2_000, 2_000, 40_000, 1.6, 18));
+        assert!(skewed.bandwidth > 1_000, "bandwidth {}", skewed.bandwidth);
+        assert!(
+            skewed.col_cv > banded.col_cv + 0.5,
+            "power-law col_cv {} vs banded {}",
+            skewed.col_cv,
+            banded.col_cv
+        );
+        // empty matrix: everything defined, nothing NaN
+        let empty = profile(&Coo::empty(4, 7));
+        assert_eq!((empty.bandwidth, empty.nnz), (0, 0));
+        assert_eq!((empty.row_cv, empty.col_cv), (0.0, 0.0));
     }
 }

@@ -68,8 +68,17 @@
 //! solves per iteration replay cached [`sptrsv::SptrsvPlan`]s — see
 //! DESIGN.md §11 and `examples/pcg_demo.rs`.
 
+//! Format selection is automated by [`autoplan`]: a profile-driven tuner
+//! that extracts cheap structural features ([`formats::stats::Profile`]),
+//! prices every candidate `(format, strategy, np)` with the engine's own
+//! cost model, and returns the ranked winner — wired through
+//! [`coordinator::Engine::plan_auto`], the solver's `PlanSource::Auto`,
+//! and per-tenant serve routing ([`serve::Server::register_auto`]). See
+//! DESIGN.md §12 and `examples/autoplan_demo.rs`.
+
 #![warn(missing_docs)]
 
+pub mod autoplan;
 pub mod coordinator;
 pub mod error;
 pub mod formats;

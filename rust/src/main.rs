@@ -54,13 +54,15 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "solver-bench" => cmd_solver_bench(rest),
         "spgemm-bench" => cmd_spgemm_bench(rest),
         "sptrsv-bench" => cmd_sptrsv_bench(rest),
+        "autoplan-bench" => cmd_autoplan_bench(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
         }
         other => Err(Error::Usage(format!(
             "unknown command '{other}' (expected info | gen | profile | partition | run | \
-             suite | serve-bench | solver-bench | spgemm-bench | sptrsv-bench; try `msrep help`)"
+             suite | serve-bench | solver-bench | spgemm-bench | sptrsv-bench | \
+             autoplan-bench; try `msrep help`)"
         ))),
     }
 }
@@ -82,6 +84,9 @@ fn print_usage() {
          comparing nnz- vs flop-balanced planning (--help for flags)\n\
          \x20 sptrsv-bench run the level-scheduled triangular-solve scenarios \
          comparing the level-balanced wavefront split against naive row blocks \
+         (--help for flags)\n\
+         \x20 autoplan-bench run the profile-driven format tuner over the \
+         format-selection scenarios and check it against every fixed format \
          (--help for flags)\n"
     );
 }
@@ -162,11 +167,7 @@ fn load_matrix(a: &Args) -> Result<Matrix> {
 }
 
 fn to_format(mat: Matrix, format: FormatKind) -> Matrix {
-    match format {
-        FormatKind::Csr => Matrix::Csr(convert::to_csr(&mat)),
-        FormatKind::Csc => Matrix::Csc(convert::to_csc(&mat)),
-        FormatKind::Coo => Matrix::Coo(convert::to_coo(&mat)),
-    }
+    convert::to_format(&mat, format)
 }
 
 fn cmd_profile(argv: Vec<String>) -> Result<()> {
@@ -934,6 +935,135 @@ fn cmd_sptrsv_bench(argv: Vec<String>) -> Result<()> {
              (modeled kernel time = Σ levels, max over GPUs):"
         );
         print!("{}", summary.render());
+    }
+    Ok(())
+}
+
+fn autoplan_parser() -> Parser {
+    Parser::new()
+        .flag("platform", "summit | dgx1", Some("dgx1"))
+        .flag("gpus", "GPUs to use", None)
+        .flag("mode", "baseline | pstar | popt", Some("popt"))
+        .flag(
+            "scenario",
+            "scenario name (banded-stencil | powerlaw-square | tall-skinny | short-wide | \
+             block-diagonal) or 'all'",
+            Some("all"),
+        )
+        .flag("reuse", "amortization horizon (expected SpMVs per plan build)", Some("32"))
+        .flag("matrix", "MatrixMarket file (tune one matrix instead of the scenarios)", None)
+        .flag("suite", "suite matrix name (tune one analog instead of the scenarios)", None)
+        .bool_flag("full", "sweep strategies and GPU counts too, not just formats")
+}
+
+fn cmd_autoplan_bench(argv: Vec<String>) -> Result<()> {
+    let p = autoplan_parser();
+    if argv.iter().any(|a| a == "--help") {
+        println!(
+            "msrep autoplan-bench — profile-driven format auto-tuning vs every fixed format\n{}",
+            p.help()
+        );
+        return Ok(());
+    }
+    let a = p.parse(argv)?;
+    let platform = Platform::by_name(&a.str_or("platform", "dgx1"))?;
+    let num_gpus = a.usize_or("gpus", platform.num_gpus)?;
+    let mode = Mode::parse(&a.str_or("mode", "popt"))
+        .ok_or_else(|| Error::Usage("bad --mode".into()))?;
+    let reuse = a.usize_or("reuse", 32)?.max(1);
+    let cfg = RunConfig {
+        platform,
+        num_gpus,
+        mode,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    };
+    let engine = Engine::new(cfg.clone())?;
+    println!(
+        "autoplan-bench: {} x {} GPUs, mode {}, reuse horizon {}\n",
+        cfg.platform.name,
+        num_gpus,
+        mode.label(),
+        reuse
+    );
+
+    // one ad-hoc matrix, or the whole scenario suite
+    let inputs: Vec<(String, Matrix)> = if a.get("matrix").is_some() || a.get("suite").is_some() {
+        vec![("input".to_string(), load_matrix(&a)?)]
+    } else {
+        let which = a.str_or("scenario", "all");
+        let scenarios: Vec<workload::AutoplanScenario> = if which == "all" {
+            workload::autoplan_scenarios()
+        } else {
+            vec![workload::autoplan_scenario_by_name(&which)
+                .ok_or_else(|| Error::Usage(format!("unknown autoplan scenario '{which}'")))?]
+        };
+        scenarios
+            .iter()
+            .map(|s| (s.name.to_string(), Matrix::Coo(workload::autoplan_scenario_matrix(s))))
+            .collect()
+    };
+
+    if a.is_set("full") {
+        // the full sweep is a report, not an acceptance gate: its winners
+        // may need a reconfigured engine (np/strategy)
+        for (name, mat) in &inputs {
+            let opts = msrep::autoplan::AutoPlanOptions::full_sweep(&cfg).with_reuse(reuse);
+            let auto = msrep::autoplan::plan_auto(&cfg, mat, &opts)?;
+            println!("== {name} (full sweep) ==");
+            print!("{}", msrep::report::render_autoplan_report(&auto));
+            println!();
+        }
+        return Ok(());
+    }
+
+    let mut summary = Table::new([
+        "scenario", "chosen", "auto", "best fixed", "median fixed", "worst fixed",
+        "vs median",
+    ]);
+    let mut median_over_auto: Vec<f64> = Vec::new();
+    for (name, mat) in &inputs {
+        let opts = msrep::autoplan::AutoPlanOptions::for_config(&cfg).with_reuse(reuse);
+        let auto = msrep::autoplan::plan_auto(&cfg, mat, &opts)?;
+        println!("== {name} ==");
+        print!("{}", msrep::report::render_autoplan_report(&auto));
+        println!();
+
+        // the shared acceptance surface (also asserted by
+        // benches/autoplan_selection.rs — one definition, two gates)
+        let cmp = msrep::autoplan::compare_fixed_formats(&engine, mat, &auto)?;
+        summary.row([
+            name.clone(),
+            auto.choice().candidate.label(),
+            format_duration_s(cmp.auto_s),
+            format_duration_s(cmp.best()),
+            format_duration_s(cmp.median()),
+            format_duration_s(cmp.worst()),
+            format!("{:.2}x", cmp.vs_median()),
+        ]);
+        if !cmp.never_worse_than_worst() {
+            return Err(Error::Autoplan(format!(
+                "ACCEPTANCE FAILED: {name}: auto {:.3e}s worse than the worst fixed \
+                 format {:.3e}s",
+                cmp.auto_s,
+                cmp.worst()
+            )));
+        }
+        median_over_auto.push(cmp.vs_median());
+    }
+    print!("{}", summary.render());
+    let geomean = msrep::util::stats::geomean(&median_over_auto);
+    println!(
+        "\ntuner vs median fixed format (geomean over {} scenario(s)): {geomean:.2}x",
+        median_over_auto.len()
+    );
+    if median_over_auto.len() > 1 && geomean <= 1.0 {
+        return Err(Error::Autoplan(format!(
+            "ACCEPTANCE FAILED: tuner does not beat the median fixed format in aggregate \
+             (geomean {geomean:.3})"
+        )));
     }
     Ok(())
 }

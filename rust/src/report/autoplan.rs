@@ -1,0 +1,99 @@
+//! Report rendering for the format auto-tuner: the structural profile the
+//! decision was derived from, plus the chosen-vs-runner-up cost table over
+//! every candidate the tuner priced (DESIGN.md §12).
+
+use crate::autoplan::AutoPlan;
+
+use super::table::{format_duration_s, Table};
+
+/// Render one [`AutoPlan`]: profile features, the ranked candidate table
+/// (chosen plan first), and a one-line rationale.
+pub fn render_autoplan_report(auto: &AutoPlan) -> String {
+    let mut out = String::new();
+    let p = &auto.profile;
+
+    let mut t = Table::new(["feature", "value"]);
+    t.row(["shape".to_string(), format!("{} x {}", p.m, p.n)]);
+    t.row(["nnz".to_string(), p.nnz.to_string()]);
+    t.row(["density".to_string(), format!("{:.3e}", p.density)]);
+    t.row(["row-length CV".to_string(), format!("{:.3}", p.row_cv)]);
+    t.row(["col-length CV".to_string(), format!("{:.3}", p.col_cv)]);
+    t.row(["bandwidth".to_string(), p.bandwidth.to_string()]);
+    t.row([
+        "power-law R".to_string(),
+        p.r_exponent.map_or("n/a".to_string(), |r| format!("{r:.2}")),
+    ]);
+    out.push_str(&t.render());
+    out.push('\n');
+
+    let mut t = Table::new([
+        "candidate",
+        "partition",
+        "h2d",
+        "compute",
+        "merge",
+        "spmv",
+        "amortized",
+        "",
+    ]);
+    for (rank, c) in auto.ranked.iter().enumerate() {
+        t.row([
+            c.candidate.label(),
+            format_duration_s(c.t_partition),
+            format_duration_s(c.phases.t_h2d),
+            format_duration_s(c.phases.t_compute),
+            format_duration_s(c.phases.t_merge),
+            format_duration_s(c.spmv_s()),
+            format_duration_s(c.amortized_s(auto.reuse)),
+            if rank == 0 { "<- chosen".to_string() } else { String::new() },
+        ]);
+    }
+    out.push_str(&t.render());
+
+    let choice = auto.choice();
+    match auto.runner_up() {
+        Some(next) => {
+            let gain = if choice.amortized_s(auto.reuse) > 0.0 {
+                next.amortized_s(auto.reuse) / choice.amortized_s(auto.reuse)
+            } else {
+                1.0
+            };
+            out.push_str(&format!(
+                "chosen {} beats runner-up {} by {:.2}x (worst candidate by {:.2}x) \
+                 at reuse horizon {}\n",
+                choice.candidate.label(),
+                next.candidate.label(),
+                gain,
+                auto.worst_case_gain(),
+                auto.reuse,
+            ));
+        }
+        None => out.push_str(&format!(
+            "single candidate {} (nothing to rank against)\n",
+            choice.candidate.label()
+        )),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoplan::{plan_auto, AutoPlanOptions};
+    use crate::coordinator::RunConfig;
+    use crate::formats::{gen, Matrix};
+
+    #[test]
+    fn render_contains_profile_candidates_and_choice() {
+        let cfg = RunConfig::default();
+        let a = Matrix::Coo(gen::power_law(400, 2_000, 20_000, 2.0, 1));
+        let auto = plan_auto(&cfg, &a, &AutoPlanOptions::for_config(&cfg)).unwrap();
+        let s = render_autoplan_report(&auto);
+        assert!(s.contains("row-length CV"), "profile missing:\n{s}");
+        assert!(s.contains("<- chosen"), "choice marker missing:\n{s}");
+        for fmt in ["csr/", "csc/", "coo/"] {
+            assert!(s.contains(fmt), "candidate row {fmt} missing:\n{s}");
+        }
+        assert!(s.contains("beats runner-up"), "rationale missing:\n{s}");
+    }
+}

@@ -1,6 +1,7 @@
 //! Paper-style output formatting: ASCII/markdown tables and series plots
 //! for the figure-regeneration benches and the e2e driver.
 
+pub mod autoplan;
 pub mod figures;
 pub mod serve;
 pub mod solver;
@@ -9,6 +10,7 @@ pub mod sptrsv;
 mod table;
 pub mod timeline;
 
+pub use autoplan::render_autoplan_report;
 pub use serve::render_serve_report;
 pub use solver::render_solver_report;
 pub use spgemm::{render_flop_skew, render_spgemm_report};

@@ -32,5 +32,8 @@ pub mod server;
 
 pub use batcher::{BatchExecution, BatchPolicy, Batcher, PendingRequest};
 pub use metrics::ServeReport;
-pub use plan_cache::{fingerprint, MatrixFingerprint, PlanCache, PlanCacheStats};
+pub use plan_cache::{
+    config_fingerprint, fingerprint, ConfigFingerprint, MatrixFingerprint, PlanCache,
+    PlanCacheStats, PlanKey,
+};
 pub use server::{MatrixId, Outcome, RejectReason, ServeConfig, Server, SpmvRequest};

@@ -17,11 +17,23 @@
 //! fingerprints (and partitions) fresh. Two different matrices colliding
 //! on the full 64-bit FNV-1a hash *and* dims *and* nnz *and* format is
 //! not a realistic failure mode for a serving cache.
+//!
+//! Entries are keyed by the matrix fingerprint **plus** a
+//! [`ConfigFingerprint`] of the engine configuration the plan was built
+//! under (platform, GPU count, mode, effective strategy). Keying on the
+//! matrix alone — the original design — silently replayed a plan built
+//! under one `RunConfig` as a hit under another: a different GPU count or
+//! strategy would at best error in `validate_for`, and a different mode
+//! or platform would *mis-model* without any error at all. The engine's
+//! input-`format` field is deliberately excluded: a plan is built from
+//! the matrix's own storage (and replayed by plan format), so the same
+//! registered matrix under engines differing only in `cfg.format` shares
+//! one correct plan.
 
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use crate::coordinator::{Engine, PartitionPlan};
+use crate::coordinator::{Engine, Mode, PartitionPlan, RunConfig, Strategy};
 use crate::error::Result;
 use crate::formats::{FormatKind, Matrix};
 
@@ -79,6 +91,45 @@ impl Fnv {
             self.u64(x.to_bits() as u64);
         }
     }
+}
+
+/// Identity of the engine configuration a plan was built under (see the
+/// module docs for what is — and is deliberately not — covered).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConfigFingerprint {
+    /// FNV-1a 64 over platform name, GPU count, mode and effective
+    /// strategy
+    pub config_hash: u64,
+}
+
+/// Fingerprint the plan-shaping parts of a [`RunConfig`]: platform, GPU
+/// count, mode and effective strategy. Two configurations with equal
+/// fingerprints build interchangeable plans.
+pub fn config_fingerprint(cfg: &RunConfig) -> ConfigFingerprint {
+    let mut h = Fnv::new();
+    for &b in cfg.platform.name.as_bytes() {
+        h.byte(b);
+    }
+    h.u64(cfg.num_gpus as u64);
+    h.u64(match cfg.mode {
+        Mode::Baseline => 0,
+        Mode::PStar => 1,
+        Mode::PStarOpt => 2,
+    });
+    h.u64(match cfg.effective_strategy() {
+        Strategy::Blocks => 0,
+        Strategy::NnzBalanced => 1,
+    });
+    ConfigFingerprint { config_hash: h.0 }
+}
+
+/// Full cache key: matrix payload + build configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// the matrix's payload identity
+    pub matrix: MatrixFingerprint,
+    /// the building engine's configuration identity
+    pub config: ConfigFingerprint,
 }
 
 /// Fingerprint a matrix's payload (structure and values). O(nnz) —
@@ -139,7 +190,8 @@ struct CacheEntry {
     last_used: u64,
 }
 
-/// LRU cache of partition plans keyed by matrix fingerprint.
+/// LRU cache of partition plans keyed by matrix fingerprint + build
+/// configuration ([`PlanKey`]).
 ///
 /// Capacity 0 disables caching (every lookup is a miss and nothing is
 /// stored) — the configuration the sequential no-amortization baseline
@@ -147,7 +199,7 @@ struct CacheEntry {
 pub struct PlanCache {
     capacity: usize,
     tick: u64,
-    entries: HashMap<MatrixFingerprint, CacheEntry>,
+    entries: HashMap<PlanKey, CacheEntry>,
     stats: PlanCacheStats,
 }
 
@@ -177,16 +229,20 @@ impl PlanCache {
         self.stats
     }
 
-    /// Return the plan for `fp`, building one via `engine.plan(matrix)` on
-    /// a miss. The boolean is `true` for a hit (partitioning amortized).
+    /// Return the plan for `fp` built under `engine`'s configuration,
+    /// building one via `engine.plan(matrix)` on a miss. The boolean is
+    /// `true` for a hit (partitioning amortized). The lookup key folds in
+    /// [`config_fingerprint`], so the same matrix under a different
+    /// configuration rebuilds instead of replaying a stale plan.
     pub fn get_or_build(
         &mut self,
         fp: MatrixFingerprint,
         matrix: &Matrix,
         engine: &Engine,
     ) -> Result<(Rc<PartitionPlan>, bool)> {
+        let key = PlanKey { matrix: fp, config: config_fingerprint(engine.config()) };
         self.tick += 1;
-        if let Some(e) = self.entries.get_mut(&fp) {
+        if let Some(e) = self.entries.get_mut(&key) {
             e.last_used = self.tick;
             self.stats.hits += 1;
             return Ok((e.plan.clone(), true));
@@ -198,11 +254,30 @@ impl PlanCache {
                 self.evict_lru();
             }
             self.entries.insert(
-                fp,
+                key,
                 CacheEntry { plan: plan.clone(), last_used: self.tick },
             );
         }
         Ok((plan, false))
+    }
+
+    /// Insert a prebuilt plan for `fp` under `cfg`'s fingerprint without
+    /// counting a hit or miss — the registration-time seeding path
+    /// ([`Server::register_auto`](crate::serve::Server::register_auto)
+    /// already built the winning plan while ranking candidates, so the
+    /// tenant's first request should not rebuild it). Respects capacity
+    /// and LRU like any other insertion; a capacity-0 cache ignores the
+    /// seed.
+    pub fn seed(&mut self, fp: MatrixFingerprint, cfg: &RunConfig, plan: Rc<PartitionPlan>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let key = PlanKey { matrix: fp, config: config_fingerprint(cfg) };
+        self.tick += 1;
+        if self.entries.len() >= self.capacity && !self.entries.contains_key(&key) {
+            self.evict_lru();
+        }
+        self.entries.insert(key, CacheEntry { plan, last_used: self.tick });
     }
 
     fn evict_lru(&mut self) {
@@ -299,6 +374,103 @@ mod tests {
         assert!(hit_a, "a must have survived");
         let (_, hit_b) = cache.get_or_build(fb, &b, &eng).unwrap();
         assert!(!hit_b, "b must have been evicted");
+    }
+
+    #[test]
+    fn config_flip_between_lookups_is_a_miss_not_a_stale_hit() {
+        // THE regression this key exists for: under the old
+        // fingerprint-only key, a plan built by one engine configuration
+        // was returned as a hit to a differently configured engine — a
+        // flipped strategy/np at best exploded in validate_for, a flipped
+        // mode or platform silently mis-modeled
+        let a = csr(1);
+        let fa = fingerprint(&a);
+        let mut cache = PlanCache::new(8);
+        let eng_balanced = engine();
+        let mut blocks_cfg = eng_balanced.config().clone();
+        blocks_cfg.strategy_override = Some(Strategy::Blocks);
+        let eng_blocks = Engine::new(blocks_cfg).unwrap();
+
+        let (p_bal, h1) = cache.get_or_build(fa, &a, &eng_balanced).unwrap();
+        assert!(!h1);
+        let (p_blk, h2) = cache.get_or_build(fa, &a, &eng_blocks).unwrap();
+        assert!(!h2, "a config flip must rebuild, not replay the stale plan");
+        // each plan is valid for its own engine; the stale cross-serve
+        // would not have been
+        p_bal.validate_for(eng_balanced.config()).unwrap();
+        p_blk.validate_for(eng_blocks.config()).unwrap();
+        assert!(p_bal.validate_for(eng_blocks.config()).is_err());
+        // both live under distinct keys: repeats hit per configuration
+        let (_, h3) = cache.get_or_build(fa, &a, &eng_balanced).unwrap();
+        let (_, h4) = cache.get_or_build(fa, &a, &eng_blocks).unwrap();
+        assert!(h3 && h4);
+        assert_eq!(cache.len(), 2);
+
+        // np and mode flips split keys the same way
+        let mut np2_cfg = eng_balanced.config().clone();
+        np2_cfg.num_gpus = 2;
+        let eng_np2 = Engine::new(np2_cfg).unwrap();
+        let (p_np2, h5) = cache.get_or_build(fa, &a, &eng_np2).unwrap();
+        assert!(!h5, "np flip must miss");
+        assert_eq!(p_np2.np, 2);
+        let mut base_cfg = eng_balanced.config().clone();
+        base_cfg.mode = Mode::Baseline;
+        let eng_base = Engine::new(base_cfg).unwrap();
+        let (p_base, h6) = cache.get_or_build(fa, &a, &eng_base).unwrap();
+        assert!(!h6, "mode flip must miss (t_partition attribution differs)");
+        assert!(p_base.t_partition != p_bal.t_partition);
+        assert_eq!(cache.len(), 4);
+    }
+
+    #[test]
+    fn config_fingerprint_covers_plan_shaping_fields_only() {
+        let base = engine().config().clone();
+        let fp = config_fingerprint(&base);
+        // format does NOT shape a plan (plans follow the matrix's own
+        // storage): same fingerprint, plans shared across format configs
+        let mut fmt = base.clone();
+        fmt.format = FormatKind::Coo;
+        assert_eq!(fp, config_fingerprint(&fmt));
+        // np, mode, strategy and platform all do
+        let mut np = base.clone();
+        np.num_gpus = 2;
+        assert_ne!(fp, config_fingerprint(&np));
+        let mut mode = base.clone();
+        mode.mode = Mode::Baseline;
+        assert_ne!(fp, config_fingerprint(&mode));
+        let mut strat = base.clone();
+        strat.strategy_override = Some(Strategy::Blocks);
+        assert_ne!(fp, config_fingerprint(&strat));
+        let mut plat = base;
+        plat.platform = Platform::summit();
+        plat.num_gpus = 4;
+        let mut plat_base = engine().config().clone();
+        plat_base.num_gpus = 4;
+        assert_ne!(config_fingerprint(&plat), config_fingerprint(&plat_base));
+    }
+
+    #[test]
+    fn seeded_plans_serve_hits_and_respect_capacity() {
+        let eng = engine();
+        let a = csr(1);
+        let fa = fingerprint(&a);
+        let mut cache = PlanCache::new(1);
+        let plan = Rc::new(eng.plan(&a).unwrap());
+        cache.seed(fa, eng.config(), plan.clone());
+        let (got, hit) = cache.get_or_build(fa, &a, &eng).unwrap();
+        assert!(hit, "seeded entry must hit");
+        assert!(Rc::ptr_eq(&got, &plan), "the seeded plan itself must be served");
+        assert_eq!(cache.stats().misses, 0, "seeding counts neither hit nor miss");
+        // seeding past capacity evicts the LRU like any insertion
+        let b = csr(2);
+        let fb = fingerprint(&b);
+        cache.seed(fb, eng.config(), Rc::new(eng.plan(&b).unwrap()));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().evictions, 1);
+        // a capacity-0 cache ignores seeds entirely
+        let mut off = PlanCache::new(0);
+        off.seed(fa, eng.config(), plan);
+        assert!(off.is_empty());
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! bounds how deep that per-matrix backlog can grow.
 
 use std::collections::HashMap;
+use std::rc::Rc;
 
 use crate::coordinator::{Engine, RunConfig};
 use crate::error::{Error, Result};
@@ -194,6 +195,35 @@ impl Server {
         let fp = fingerprint(&a);
         self.matrices.push((a, fp));
         MatrixId(self.matrices.len() - 1)
+    }
+
+    /// Register a tenant matrix after auto-selecting its storage format:
+    /// the profile-driven tuner ([`crate::autoplan`]) prices every format
+    /// under this server's engine configuration and the matrix is stored
+    /// — and every later request dispatched — in the winning format.
+    /// Heterogeneous multi-tenant traffic thereby auto-routes per tenant
+    /// (a wide bipartite graph serves through pCSC while a square web
+    /// graph stays on pCSR) with no per-request cost: selection happens
+    /// once, here. Returns the tenant id plus the ranked [`AutoPlan`]
+    /// (render it with [`crate::report::render_autoplan_report`]).
+    ///
+    /// The winning plan the tuner already built seeds the plan cache, so
+    /// the tenant's very first request is a hit — no duplicate O(nnz)
+    /// partitioning pass. Its build cost is registration-time work,
+    /// deliberately outside the serving trace's modeled clock.
+    ///
+    /// [`AutoPlan`]: crate::autoplan::AutoPlan
+    pub fn register_auto(&mut self, a: Matrix) -> Result<(MatrixId, crate::autoplan::AutoPlan)> {
+        let opts = crate::autoplan::AutoPlanOptions::for_config(&self.cfg.run);
+        let auto = crate::autoplan::plan_auto(&self.cfg.run, &a, &opts)?;
+        let chosen = crate::formats::convert::to_format(&a, auto.choice().candidate.format);
+        let id = self.register(chosen);
+        let fp = self.matrices[id.0].1;
+        // the cache takes its own copy of the winning plan; the returned
+        // AutoPlan keeps the original for reporting — the doubled plan
+        // memory is transient, gone as soon as the caller drops the report
+        self.cache.seed(fp, &self.cfg.run, Rc::new(auto.plan.clone()));
+        Ok((id, auto))
     }
 
     /// Registered matrix count.
@@ -520,6 +550,46 @@ mod tests {
         let base = cfg().sequential_baseline();
         assert_eq!(base.max_batch, 1);
         assert_eq!(base.plan_cache_capacity, 0);
+    }
+
+    #[test]
+    fn register_auto_routes_wide_tenants_to_csc() {
+        let mut s = Server::new(cfg()).unwrap();
+        // wide bipartite tenant: full-x replication makes pCSR pay n*4
+        // bytes per GPU while pCSC stages only its column slice
+        let wide = Matrix::Coo(gen::power_law(256, 8_000, 60_000, 2.0, 31));
+        let (id, auto) = s.register_auto(wide.clone()).unwrap();
+        assert_eq!(auto.choice().candidate.format, FormatKind::Csc);
+        assert_eq!(auto.ranked.len(), 3);
+        // a square web-graph tenant on the same server stays on pCSR
+        let square = Matrix::Coo(gen::power_law(2_048, 2_048, 60_000, 2.0, 33));
+        let (_, auto_sq) = s.register_auto(square).unwrap();
+        assert_eq!(auto_sq.choice().candidate.format, FormatKind::Csr);
+        // requests against the auto-routed tenant still compute correctly
+        let x = gen::dense_vector(8_000, 32);
+        let mut expect = vec![0.0f32; 256];
+        crate::spmv::spmv_matrix(&wide, &x, 1.0, 0.0, &mut expect).unwrap();
+        let rep = s
+            .run(vec![SpmvRequest {
+                matrix: id,
+                x,
+                alpha: 1.0,
+                arrival_s: 0.0,
+                deadline_s: None,
+            }])
+            .unwrap();
+        assert_eq!(rep.completed, 1);
+        match &rep.outcomes[0] {
+            Outcome::Completed { y, .. } => {
+                for (i, (a, b)) in y.iter().zip(&expect).enumerate() {
+                    assert!(
+                        (a - b).abs() < 3e-3 * (1.0 + b.abs()),
+                        "row {i}: {a} vs {b}"
+                    );
+                }
+            }
+            other => panic!("expected completion, got {other:?}"),
+        }
     }
 
     #[test]

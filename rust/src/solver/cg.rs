@@ -31,7 +31,7 @@ pub fn cg(engine: &Engine, a: &Matrix, b: &[f32], cfg: &SolverConfig) -> Result<
     check_config(cfg)?;
     check_square_system(a, Some(b))?;
     let n = a.rows();
-    let mut spmv = PlannedSpmv::new(engine, a, cfg.plan_source)?;
+    let mut spmv = PlannedSpmv::new(engine, a, cfg)?;
 
     let b_norm = norm2(b);
     if b_norm == 0.0 {

@@ -43,7 +43,7 @@ pub fn jacobi(engine: &Engine, a: &Matrix, b: &[f32], cfg: &SolverConfig) -> Res
     }
     let inv_d: Vec<f32> = d.iter().map(|&v| 1.0 / v).collect();
 
-    let mut spmv = PlannedSpmv::new(engine, a, cfg.plan_source)?;
+    let mut spmv = PlannedSpmv::new(engine, a, cfg)?;
     let b_norm = norm2(b);
     if b_norm == 0.0 {
         return Ok(spmv.finish("jacobi", cfg, true, 0.0, vec![0.0; n], None, vec![]));

@@ -61,6 +61,16 @@ pub enum PlanSource {
     /// Re-partition on every SpMV like the paper's one-shot engine calls
     /// (partitioning charged per iteration — the Fig. 16 overhead shape).
     Cold,
+    /// Run the [`crate::autoplan`] tuner up front: profile the matrix,
+    /// pick the cheapest storage format executable on this engine, and
+    /// replay the winning plan every iteration. Charged like [`Reused`]
+    /// plus the tuner's own search cost
+    /// ([`AutoPlan::t_tune`](crate::autoplan::AutoPlan::t_tune): the
+    /// profiling pass and the losing candidates' builds) — the selection
+    /// is never modeled as free. (DESIGN.md §12.)
+    ///
+    /// [`Reused`]: PlanSource::Reused
+    Auto,
 }
 
 impl PlanSource {
@@ -69,6 +79,7 @@ impl PlanSource {
         match self {
             PlanSource::Reused => "reused",
             PlanSource::Cold => "cold",
+            PlanSource::Auto => "auto",
         }
     }
 
@@ -77,6 +88,7 @@ impl PlanSource {
         match s.to_ascii_lowercase().as_str() {
             "reused" | "plan" | "planned" => Some(PlanSource::Reused),
             "cold" | "fresh" => Some(PlanSource::Cold),
+            "auto" | "tuned" => Some(PlanSource::Auto),
             _ => None,
         }
     }
@@ -242,7 +254,9 @@ fn check_square_system(a: &Matrix, b: Option<&[f32]>) -> Result<()> {
 struct PlannedSpmv<'a> {
     engine: &'a Engine,
     matrix: &'a Matrix,
-    /// `Some` iff the source is [`PlanSource::Reused`]
+    /// `Some` for [`PlanSource::Reused`] (the engine-built plan) and
+    /// [`PlanSource::Auto`] (the tuner's winner); `None` for
+    /// [`PlanSource::Cold`], which re-partitions per apply
     plan: Option<PartitionPlan>,
     source: PlanSource,
     /// modeled cost of one plan build (probed up front for both sources)
@@ -256,17 +270,34 @@ struct PlannedSpmv<'a> {
 }
 
 impl<'a> PlannedSpmv<'a> {
-    fn new(engine: &'a Engine, matrix: &'a Matrix, source: PlanSource) -> Result<Self> {
-        // built even for Cold: t_plan anchors the amortization report
-        let plan = engine.plan(matrix)?;
-        let t_plan = plan.t_partition;
+    fn new(engine: &'a Engine, matrix: &'a Matrix, cfg: &SolverConfig) -> Result<Self> {
+        let source = cfg.plan_source;
+        let (plan, t_plan) = match source {
+            // the tuner picks the format; its plan replays like Reused and
+            // the profiling pass is charged on top of the build. The
+            // amortization horizon is the solve's own iteration budget —
+            // ranking with a foreign horizon could pick a format whose
+            // build-vs-replay trade-off is wrong for this very solve.
+            PlanSource::Auto => {
+                let opts = crate::autoplan::AutoPlanOptions::for_config(engine.config())
+                    .with_reuse(cfg.max_iters.max(1));
+                let auto = crate::autoplan::plan_auto(engine.config(), matrix, &opts)?;
+                let t_plan = auto.t_tune + auto.plan.t_partition;
+                (Some(auto.plan), t_plan)
+            }
+            PlanSource::Reused | PlanSource::Cold => {
+                // built even for Cold: t_plan anchors the amortization
+                // report
+                let plan = engine.plan(matrix)?;
+                let t_plan = plan.t_partition;
+                let kept = if source == PlanSource::Reused { Some(plan) } else { None };
+                (kept, t_plan)
+            }
+        };
         Ok(PlannedSpmv {
             engine,
             matrix,
-            plan: match source {
-                PlanSource::Reused => Some(plan),
-                PlanSource::Cold => None,
-            },
+            plan,
             source,
             t_plan,
             spmv_modeled: 0.0,
@@ -309,7 +340,7 @@ impl<'a> PlannedSpmv<'a> {
     /// Total modeled time actually charged under the chosen source.
     fn charged_total(&self) -> f64 {
         match self.source {
-            PlanSource::Reused => self.t_plan + self.spmv_modeled,
+            PlanSource::Reused | PlanSource::Auto => self.t_plan + self.spmv_modeled,
             PlanSource::Cold => self.spmv_modeled + self.t_plan * self.count as f64,
         }
     }
@@ -375,9 +406,12 @@ mod tests {
     fn plan_source_labels_and_parse() {
         assert_eq!(PlanSource::parse("reused"), Some(PlanSource::Reused));
         assert_eq!(PlanSource::parse("COLD"), Some(PlanSource::Cold));
+        assert_eq!(PlanSource::parse("auto"), Some(PlanSource::Auto));
+        assert_eq!(PlanSource::parse("tuned"), Some(PlanSource::Auto));
         assert_eq!(PlanSource::parse("nope"), None);
         assert_eq!(PlanSource::Reused.label(), "reused");
         assert_eq!(PlanSource::Cold.label(), "cold");
+        assert_eq!(PlanSource::Auto.label(), "auto");
     }
 
     #[test]

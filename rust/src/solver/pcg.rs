@@ -96,7 +96,7 @@ pub fn pcg(
     check_config(cfg)?;
     check_square_system(a, Some(b))?;
     let n = a.rows();
-    let mut spmv = PlannedSpmv::new(engine, a, cfg.plan_source)?;
+    let mut spmv = PlannedSpmv::new(engine, a, cfg)?;
     let ilu = match precond {
         Preconditioner::Identity => None,
         Preconditioner::Ilu0 => {

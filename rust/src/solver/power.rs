@@ -51,7 +51,7 @@ pub fn power_iteration(
     // `dispatch` already is the transpose reinterpretation, so planning it
     // directly is the `Engine::plan_transpose` CSC path without paying a
     // second O(nnz) transpose copy
-    let mut spmv = PlannedSpmv::new(engine, dispatch, cfg.plan_source)?;
+    let mut spmv = PlannedSpmv::new(engine, dispatch, cfg)?;
     let method: &'static str = if transpose { "power-t" } else { "power" };
 
     // deterministic start vector; the fixed seed makes solves replayable
@@ -149,7 +149,7 @@ pub fn pagerank(
     // CSR(P) reinterpreted as CSC(Pᵀ): the `Engine::plan_transpose` pCSC
     // dispatch path, with the reinterpretation done once up front
     let p_t = convert::transpose(&Matrix::Csr(Csr::from_coo(&norm)));
-    let mut spmv = PlannedSpmv::new(engine, &p_t, cfg.plan_source)?;
+    let mut spmv = PlannedSpmv::new(engine, &p_t, cfg)?;
 
     let teleport = vec![(1.0 - damping) / n as f32; n];
     let mut r = vec![1.0 / n as f32; n];

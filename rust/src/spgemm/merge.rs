@@ -90,6 +90,7 @@ mod tests {
             row_idx: vec![],
             out_len,
             out_offset,
+            x_len: 0,
             overlaps_prev: false,
             merge,
             rewrite_ops: 0,

@@ -1,14 +1,16 @@
 //! Evaluation workloads: the Table-2 matrix suite (scaled synthetic
 //! analogs), the Fig. 6 imbalance sweep inputs, the solver scenario set
 //! (`msrep solver-bench --scenarios`), the SpGEMM product-chain scenarios
-//! (`msrep spgemm-bench`), and the SpTRSV triangular-factor scenarios
-//! (`msrep sptrsv-bench`).
+//! (`msrep spgemm-bench`), the SpTRSV triangular-factor scenarios
+//! (`msrep sptrsv-bench`), and the format-selection scenarios
+//! (`msrep autoplan-bench`) where different storage formats must win.
 
 mod suite;
 
 pub use suite::{
-    by_name, fig6_ratios, row_stochastic, scenario_matrix, solver_scenario_by_name,
-    solver_scenarios, spgemm_scenario_by_name, spgemm_scenario_chain, spgemm_scenarios,
-    sptrsv_scenario_by_name, sptrsv_scenario_factor, sptrsv_scenarios, suite, suite_matrix,
+    autoplan_scenario_by_name, autoplan_scenario_matrix, autoplan_scenarios, by_name,
+    fig6_ratios, row_stochastic, scenario_matrix, solver_scenario_by_name, solver_scenarios,
+    spgemm_scenario_by_name, spgemm_scenario_chain, spgemm_scenarios, sptrsv_scenario_by_name,
+    sptrsv_scenario_factor, sptrsv_scenarios, suite, suite_matrix, AutoplanScenario,
     SolverScenario, SpgemmScenario, SptrsvScenario, SuiteEntry,
 };

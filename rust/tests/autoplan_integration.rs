@@ -1,0 +1,185 @@
+//! Autoplan integration tests: the brute-force-minimum property of the
+//! tuner's ranking, end-to-end execution of auto-selected plans through
+//! engine / solver / serve, and the scenario-suite routing table.
+
+use msrep::autoplan::{plan_auto, AutoPlanOptions};
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
+use msrep::sim::Platform;
+use msrep::util::prop::check;
+use msrep::workload;
+
+fn cfg(np: usize) -> RunConfig {
+    RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: np,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    }
+}
+
+#[test]
+fn auto_choice_equals_brute_force_minimum_over_candidates() {
+    // property: for random matrices, the tuner's modeled cost equals the
+    // brute-force minimum over the candidate set, where the brute force
+    // runs every candidate plan through the REAL engine and reads the
+    // executed modeled total — an independent path through the code
+    check("plan_auto == brute force", 24, |g| {
+        let m = g.usize_in(8..200) * 4;
+        let n = g.usize_in(8..200) * 4;
+        let nnz = (m * n / 50).clamp(64, 40_000);
+        let seed = g.usize_in(0..1_000_000) as u64;
+        let a = if g.prob(0.5) {
+            Matrix::Coo(gen::power_law(m, n, nnz, 1.5 + seed as f64 % 2.0, seed))
+        } else {
+            Matrix::Coo(gen::uniform(m, n, nnz, seed))
+        };
+        let np = [1, 2, 4, 8][g.usize_in(0..4)];
+        let c = cfg(np);
+        let engine = Engine::new(c.clone()).unwrap();
+        let reuse = [1usize, 32, 1000][g.usize_in(0..3)];
+        let opts = AutoPlanOptions::for_config(&c).with_reuse(reuse);
+        let auto = plan_auto(&c, &a, &opts).unwrap();
+
+        let x = gen::dense_vector(n, seed ^ 1);
+        let brute: Vec<(FormatKind, f64)> = FormatKind::ALL
+            .iter()
+            .map(|&f| {
+                let mat = convert::to_format(&a, f);
+                let plan = engine.plan(&mat).unwrap();
+                let rep = engine.spmv_with_plan(&plan, &x, 1.0, 0.0, None).unwrap();
+                (f, rep.metrics.modeled_total + plan.t_partition / reuse as f64)
+            })
+            .collect();
+        let min = brute.iter().map(|&(_, t)| t).fold(f64::INFINITY, f64::min);
+        let auto_exec = engine.spmv_with_plan(&auto.plan, &x, 1.0, 0.0, None).unwrap();
+        let auto_total =
+            auto_exec.metrics.modeled_total + auto.plan.t_partition / reuse as f64;
+        // the tuner's pick IS the argmin (shared pricing core, zero drift)
+        assert!(
+            auto_total <= min + 1e-18,
+            "auto {auto_total:.6e} vs brute-force min {min:.6e} ({m}x{n}, np {np})"
+        );
+        // and its own predicted amortized cost matches what executed
+        let predicted = auto.choice().amortized_s(reuse);
+        assert!(
+            (predicted - auto_total).abs() <= 1e-18,
+            "predicted {predicted:.6e} vs executed {auto_total:.6e}"
+        );
+    });
+}
+
+#[test]
+fn ranking_covers_every_brute_force_candidate_cost() {
+    // each ranked row's cost must match the brute-force cost of the same
+    // format exactly — not just the winner
+    let c = cfg(4);
+    let engine = Engine::new(c.clone()).unwrap();
+    let a = Matrix::Coo(gen::power_law(300, 900, 12_000, 2.0, 5));
+    let auto = plan_auto(&c, &a, &AutoPlanOptions::for_config(&c)).unwrap();
+    let x = gen::dense_vector(900, 6);
+    for row in &auto.ranked {
+        let mat = convert::to_format(&a, row.candidate.format);
+        let plan = engine.plan(&mat).unwrap();
+        let rep = engine.spmv_with_plan(&plan, &x, 1.0, 0.0, None).unwrap();
+        assert_eq!(
+            row.spmv_s(),
+            rep.metrics.modeled_total,
+            "{:?} ranked cost drifted from execution",
+            row.candidate.format
+        );
+        assert_eq!(row.t_partition, plan.t_partition);
+    }
+}
+
+#[test]
+fn scenario_suite_routes_wide_to_csc_and_keeps_csr_elsewhere() {
+    let c = cfg(8);
+    for s in workload::autoplan_scenarios() {
+        let a = Matrix::Coo(workload::autoplan_scenario_matrix(&s));
+        let auto = plan_auto(&c, &a, &AutoPlanOptions::for_config(&c)).unwrap();
+        let chosen = auto.choice().candidate.format;
+        match s.kind {
+            "short-wide" => assert_eq!(
+                chosen,
+                FormatKind::Csc,
+                "{}: wide structures are the pCSC regime",
+                s.name
+            ),
+            "tall-skinny" => assert_eq!(chosen, FormatKind::Csr, "{}", s.name),
+            // square structural families: the pCSR default must survive
+            // the tuner (it wins or ties here, never loses)
+            _ => assert_eq!(chosen, FormatKind::Csr, "{}", s.name),
+        }
+        assert!(auto.worst_case_gain() >= 1.0, "{}", s.name);
+    }
+}
+
+#[test]
+fn solver_auto_source_converges_like_reused() {
+    use msrep::solver::{cg, PlanSource, SolverConfig};
+    let engine = Engine::new(cfg(8)).unwrap();
+    // CSR input: square SPD systems are the pCSR regime, so the tuner
+    // lands on the same plan Reused builds — the traces must agree exactly
+    let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::spd(2_000, 30_000, 2.0, 7))));
+    let x_star = gen::dense_vector(2_000, 8);
+    let mut b = vec![0.0f32; 2_000];
+    msrep::spmv::spmv_matrix(&a, &x_star, 1.0, 0.0, &mut b).unwrap();
+
+    let reused = cg(
+        &engine,
+        &a,
+        &b,
+        &SolverConfig { plan_source: PlanSource::Reused, ..Default::default() },
+    )
+    .unwrap();
+    let auto = cg(
+        &engine,
+        &a,
+        &b,
+        &SolverConfig { plan_source: PlanSource::Auto, ..Default::default() },
+    )
+    .unwrap();
+    assert!(auto.converged, "auto-planned CG must converge");
+    assert_eq!(auto.plan_source, PlanSource::Auto);
+    assert_eq!(auto.iterations, reused.iterations, "same math, same trace length");
+    // the tuner never picks a plan whose per-iteration cost exceeds the
+    // default's, and its t_plan includes the (tiny but non-zero) tune pass
+    assert!(auto.planned_iter_cost() <= reused.planned_iter_cost() + 1e-18);
+    assert!(auto.t_plan > 0.0);
+    assert!(auto.amortization() >= 1.0);
+}
+
+#[test]
+fn serve_end_to_end_with_auto_registration_hits_cache() {
+    use msrep::serve::{ServeConfig, Server, SpmvRequest};
+    let mut server = Server::new(ServeConfig {
+        run: cfg(8),
+        max_batch: 4,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    // wide tenant auto-routes to CSC; traffic must amortize through the
+    // (config-aware) plan cache exactly as for manual registration
+    let wide = Matrix::Coo(gen::power_law(128, 4_096, 30_000, 2.0, 9));
+    let (id, auto) = server.register_auto(wide).unwrap();
+    assert_eq!(auto.choice().candidate.format, FormatKind::Csc);
+    let reqs: Vec<SpmvRequest> = (0..6)
+        .map(|i| SpmvRequest {
+            matrix: id,
+            x: gen::dense_vector(4_096, 20 + i),
+            alpha: 1.0,
+            arrival_s: i as f64 * 1e-3,
+            deadline_s: None,
+        })
+        .collect();
+    let rep = server.run(reqs).unwrap();
+    assert_eq!(rep.completed, 6);
+    let stats = server.cache_stats();
+    // registration seeded the tuner-built plan: no request ever rebuilds
+    assert_eq!(stats.misses, 0, "the seeded plan must serve every request");
+    assert_eq!(stats.hits, 6, "all traffic must hit the registration-seeded plan");
+}

@@ -266,3 +266,33 @@ fn bad_flags_are_rejected() {
     assert!(!msrep(&["gen", "--m", "abc"]).status.success());
     assert!(!msrep(&["partition", "--np", "4"]).status.success()); // no matrix
 }
+
+#[test]
+fn autoplan_bench_routes_and_passes_acceptance() {
+    // one wide scenario: the tuner must pick pCSC and pass the
+    // never-worse-than-worst acceptance gate
+    let o = msrep(&["autoplan-bench", "--scenario", "short-wide"]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let s = stdout(&o);
+    assert!(s.contains("== short-wide =="), "missing scenario header:\n{s}");
+    assert!(s.contains("<- chosen"), "missing choice marker:\n{s}");
+    assert!(s.contains("csc/balanced/np8"), "wide must route to pCSC:\n{s}");
+    assert!(s.contains("vs median"), "missing comparison column:\n{s}");
+    assert!(s.contains("tuner vs median fixed format"), "missing aggregate line:\n{s}");
+}
+
+#[test]
+fn autoplan_bench_help_full_sweep_and_bad_scenario() {
+    let o = msrep(&["autoplan-bench", "--help"]);
+    assert!(o.status.success());
+    let s = stdout(&o);
+    assert!(s.contains("--scenario") && s.contains("--reuse") && s.contains("--full"));
+    assert!(!msrep(&["autoplan-bench", "--scenario", "frobnicate"]).status.success());
+    // the full sweep enumerates strategies and GPU counts
+    let o = msrep(&["autoplan-bench", "--scenario", "banded-stencil", "--full", "--gpus", "4"]);
+    assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+    let s = stdout(&o);
+    assert!(s.contains("full sweep"), "missing sweep header:\n{s}");
+    assert!(s.contains("/blocks/"), "sweep must price the blocks strategy:\n{s}");
+    assert!(s.contains("np1") && s.contains("np4"), "sweep must price GPU counts:\n{s}");
+}

@@ -48,6 +48,11 @@ fn every_generator_is_byte_identical_across_runs() {
             "two_band",
         );
         assert_identical(&gen::spd(120, 1_500, 2.0, seed), &gen::spd(120, 1_500, 2.0, seed), "spd");
+        assert_identical(
+            &gen::block_diagonal(160, 8, 2_000, seed),
+            &gen::block_diagonal(160, 8, 2_000, seed),
+            "block_diagonal",
+        );
         let va = gen::dense_vector(500, seed);
         let vb = gen::dense_vector(500, seed);
         assert_eq!(
@@ -145,5 +150,58 @@ fn workload_scenario_factories_are_deterministic() {
             "{}",
             s.name
         );
+    }
+    for s in msrep::workload::autoplan_scenarios() {
+        assert_identical(
+            &msrep::workload::autoplan_scenario_matrix(&s),
+            &msrep::workload::autoplan_scenario_matrix(&s),
+            s.name,
+        );
+    }
+}
+
+#[test]
+fn auto_selection_is_deterministic_across_runs() {
+    // the tuner's whole verdict — winner, ranking order, and every
+    // modeled number — must be bit-identical across two runs on the same
+    // input (HashMap iteration order or wall-clock noise must not leak
+    // into the decision)
+    let cfg = RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: 8,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    };
+    for s in msrep::workload::autoplan_scenarios() {
+        let a = Matrix::Coo(msrep::workload::autoplan_scenario_matrix(&s));
+        let opts = msrep::autoplan::AutoPlanOptions::for_config(&cfg);
+        let first = msrep::autoplan::plan_auto(&cfg, &a, &opts).unwrap();
+        let second = msrep::autoplan::plan_auto(&cfg, &a, &opts).unwrap();
+        assert_eq!(
+            first.choice().candidate,
+            second.choice().candidate,
+            "{}: winner changed between runs",
+            s.name
+        );
+        assert_eq!(first.ranked.len(), second.ranked.len(), "{}", s.name);
+        for (x, y) in first.ranked.iter().zip(&second.ranked) {
+            assert_eq!(x.candidate, y.candidate, "{}: ranking order changed", s.name);
+            assert_eq!(
+                x.spmv_s().to_bits(),
+                y.spmv_s().to_bits(),
+                "{}: modeled replay cost drifted",
+                s.name
+            );
+            assert_eq!(
+                x.t_partition.to_bits(),
+                y.t_partition.to_bits(),
+                "{}: modeled build cost drifted",
+                s.name
+            );
+        }
+        assert_eq!(first.t_tune.to_bits(), second.t_tune.to_bits(), "{}", s.name);
     }
 }
