@@ -23,6 +23,7 @@ use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::formats::{FormatKind, Matrix};
+use crate::obs::{SpanKind, Track, TraceRecorder};
 use crate::runtime::SpmvRuntime;
 use crate::sim::model::pad_to_gpus;
 use crate::sim::{model, DeviceMemory};
@@ -182,6 +183,7 @@ pub fn model_spmv_phases(cfg: &RunConfig, plan: &PartitionPlan) -> SpmvPhases {
 pub struct Engine {
     config: RunConfig,
     runtime: Option<SpmvRuntime>,
+    recorder: TraceRecorder,
 }
 
 impl Engine {
@@ -207,7 +209,20 @@ impl Engine {
         if config.backend == Backend::Pjrt && runtime.is_none() {
             return Err(Error::Manifest("Pjrt backend needs a runtime".into()));
         }
-        Ok(Engine { config, runtime })
+        Ok(Engine { config, runtime, recorder: TraceRecorder::default() })
+    }
+
+    /// Install a span recorder: subsequent engine ops emit their modeled
+    /// per-GPU timeline into it (DESIGN.md §13). The default recorder is
+    /// disabled and costs nothing on the hot path.
+    pub fn set_recorder(&mut self, recorder: TraceRecorder) {
+        self.recorder = recorder;
+    }
+
+    /// The installed span recorder (disabled unless [`Engine::set_recorder`]
+    /// was called with an enabled one).
+    pub fn recorder(&self) -> &TraceRecorder {
+        &self.recorder
     }
 
     /// The active configuration.
@@ -281,9 +296,48 @@ impl Engine {
         // reject malformed calls before paying the O(nnz) partitioning pass
         check_spmv_dims(a.rows(), a.cols(), x, y0)?;
         let plan = self.plan(a)?;
+        self.emit_partition_span(&plan);
         let mut rep = self.spmv_with_plan(&plan, x, alpha, beta, y0)?;
         charge_partition(&mut rep.metrics, &plan);
         Ok(rep)
+    }
+
+    /// Trace the one-shot partitioning phase (modeled host span plus the
+    /// honest wall-clock span) and move the cursor to its end, so the
+    /// replay spans that follow start where partitioning finished. Shared
+    /// with the [`crate::spgemm`] one-shot path.
+    pub(crate) fn emit_partition_span(&self, plan: &PartitionPlan) {
+        self.emit_partition_span_raw(plan.t_partition, plan.measured_partition, plan.np);
+    }
+
+    /// [`Engine::emit_partition_span`] for plan types that are not a
+    /// [`PartitionPlan`] (the [`crate::sptrsv`] level plan).
+    pub(crate) fn emit_partition_span_raw(
+        &self,
+        t_partition: f64,
+        measured_partition: f64,
+        np: usize,
+    ) {
+        if !self.recorder.is_enabled() {
+            return;
+        }
+        let t0 = self.recorder.cursor();
+        self.recorder.span_with(
+            Track::Host,
+            "partition",
+            SpanKind::Phase,
+            t0,
+            t0 + t_partition,
+            &[("np", np as f64)],
+        );
+        self.recorder.span(
+            Track::Measured,
+            "partition (measured)",
+            SpanKind::Measured,
+            t0,
+            t0 + measured_partition,
+        );
+        self.recorder.set_cursor(t0 + t_partition);
     }
 
     /// Multi-GPU SpMV against a prebuilt plan. Charges **no** partitioning
@@ -380,6 +434,42 @@ impl Engine {
             overlap_fixups: overlaps,
             nnz: plan.nnz,
         };
+
+        // ---- 5. trace emission (only when a recorder is installed) ------
+        if self.recorder.is_enabled() {
+            let h2d: Vec<u64> = tasks.iter().map(|t| t.h2d_bytes()).collect();
+            let d2h: Vec<u64> = tasks.iter().map(|t| t.d2h_bytes()).collect();
+            let src_numa: Vec<usize> = if cfg.effective_numa_aware() {
+                (0..np).map(|g| p.gpu_numa[g]).collect()
+            } else {
+                vec![0; np]
+            };
+            let per_compute: Vec<f64> = tasks
+                .iter()
+                .map(|t| {
+                    let mut kt = model::spmv_kernel_time(
+                        p,
+                        t.nnz() as u64,
+                        t.out_len as u64,
+                        t.x_len as u64,
+                        plan.format,
+                    );
+                    if plan.format == FormatKind::Coo {
+                        kt += model::coo_to_csr_conversion_time(p, t.nnz() as u64);
+                    }
+                    kt
+                })
+                .collect();
+            emit_engine_spans(
+                &self.recorder,
+                cfg.mode == Mode::Baseline,
+                &per_transfer_times(cfg, &h2d, &src_numa),
+                &per_compute,
+                &per_transfer_times(cfg, &d2h, &src_numa),
+                &phases,
+                &metrics,
+            );
+        }
         Ok(SpmvReport { y, metrics })
     }
 }
@@ -406,6 +496,7 @@ impl Engine {
         // reject malformed calls before paying the O(nnz) partitioning pass
         check_spmm_dims(a.rows(), a.cols(), k, x, y0)?;
         let plan = self.plan(a)?;
+        self.emit_partition_span(&plan);
         let mut rep = self.spmm_with_plan(&plan, x, k, alpha, beta, y0)?;
         charge_partition(&mut rep.metrics, &plan);
         Ok(rep)
@@ -563,6 +654,32 @@ impl Engine {
             // 2 flops per nnz per right-hand side
             nnz: plan.nnz * k as u64,
         };
+
+        // trace emission (only when a recorder is installed)
+        if self.recorder.is_enabled() {
+            let per_compute: Vec<f64> = tasks
+                .iter()
+                .map(|t| {
+                    model::spmm_kernel_time(
+                        p,
+                        t.nnz() as u64,
+                        t.out_len as u64,
+                        t.x_len as u64,
+                        k as u64,
+                        plan.format,
+                    )
+                })
+                .collect();
+            emit_engine_spans(
+                &self.recorder,
+                cfg.mode == Mode::Baseline,
+                &per_transfer_times(cfg, &h2d, &src_numa),
+                &per_compute,
+                &per_transfer_times(cfg, &d2h, &src_numa),
+                &SpmvPhases { t_h2d, t_compute, t_merge },
+                &metrics,
+            );
+        }
         Ok(SpmvReport { y, metrics })
     }
 }
@@ -600,6 +717,102 @@ fn check_spmm_dims(m: usize, n: usize, k: usize, x: &[f32], y0: Option<&[f32]>) 
         }
     }
     Ok(())
+}
+
+/// Per-GPU transfer durations for tracing: lone transfers for the serial
+/// Baseline, the contention-aware concurrent model otherwise (truncated
+/// back from the padded platform width to the active GPU count).
+fn per_transfer_times(cfg: &RunConfig, bytes: &[u64], src_numa: &[usize]) -> Vec<f64> {
+    let p = &cfg.platform;
+    if cfg.mode == Mode::Baseline {
+        // zero-byte transfers are skipped, exactly as serial_h2d_time sums
+        bytes
+            .iter()
+            .map(|&b| if b == 0 { 0.0 } else { model::lone_transfer_time(p, b) })
+            .collect()
+    } else {
+        model::concurrent_h2d_times(
+            p,
+            &pad_to_gpus(bytes, p.num_gpus),
+            &pad_to_gpus(src_numa, p.num_gpus),
+        )
+        .into_iter()
+        .take(bytes.len())
+        .collect()
+    }
+}
+
+/// Emit the modeled per-GPU timeline of one engine op (SpMV or SpMM replay)
+/// onto `rec`, then park the cursor at the op's end.
+///
+/// The phase barriers are accumulated cumulatively in the same
+/// left-associated order the op sums `modeled_total` (`(h2d + compute) +
+/// merge`), so on a fresh recorder the trace envelope reproduces the
+/// report's `modeled_total` *bitwise* — the invariant
+/// `tests/obs_integration.rs` property-checks and DESIGN.md §13 documents.
+/// Per-GPU sub-spans are clamped into their phase window; on the serial
+/// Baseline transfers chain one after another, otherwise they start
+/// together at the barrier.
+fn emit_engine_spans(
+    rec: &TraceRecorder,
+    baseline: bool,
+    per_h2d: &[f64],
+    per_compute: &[f64],
+    per_d2h: &[f64],
+    phases: &SpmvPhases,
+    metrics: &Metrics,
+) {
+    let t0 = rec.cursor();
+    let b1 = t0 + phases.t_h2d;
+    let b2 = b1 + phases.t_compute;
+    let b3 = b2 + phases.t_merge;
+    let mut at = t0;
+    for (g, &d) in per_h2d.iter().enumerate() {
+        let start = if baseline { at } else { t0 };
+        let end = (start + d).min(b1);
+        rec.span(rec.gpu(g), "h2d", SpanKind::Phase, start, end);
+        at = end;
+    }
+    for (g, &d) in per_compute.iter().enumerate() {
+        let nnz = metrics.loads.get(g).copied().unwrap_or(0) as f64;
+        rec.span_with(
+            rec.gpu(g),
+            "compute",
+            SpanKind::Phase,
+            b1,
+            (b1 + d).min(b2),
+            &[("nnz", nnz)],
+        );
+    }
+    // downloads open the merge window; the host-side fix-up / reduction
+    // closes it exactly at the op's modeled end
+    let mut at = b2;
+    for (g, &d) in per_d2h.iter().enumerate() {
+        let start = if baseline { at } else { b2 };
+        let end = (start + d).min(b3);
+        rec.span(rec.gpu(g), "d2h", SpanKind::Phase, start, end);
+        at = end;
+    }
+    rec.span_with(
+        Track::Host,
+        "merge",
+        SpanKind::Phase,
+        b2,
+        b3,
+        &[("imbalance", metrics.imbalance)],
+    );
+    // honest wall-clock phases ride the parallel measured lane; they never
+    // move the modeled cursor
+    let m1 = t0 + metrics.measured_exec;
+    rec.span(Track::Measured, "exec (measured)", SpanKind::Measured, t0, m1);
+    rec.span(
+        Track::Measured,
+        "merge (measured)",
+        SpanKind::Measured,
+        m1,
+        m1 + metrics.measured_merge,
+    );
+    rec.set_cursor(b3);
 }
 
 /// Fold a fresh plan's partitioning cost into a `*_with_plan` report —

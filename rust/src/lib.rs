@@ -76,12 +76,19 @@
 //! and per-tenant serve routing ([`serve::Server::register_auto`]). See
 //! DESIGN.md §12 and `examples/autoplan_demo.rs`.
 
+//! Observability lives in [`obs`]: a span recorder (zero-allocation no-op
+//! when disabled) threaded through every execution path, Chrome
+//! trace-event / JSONL exporters, a counters/gauges/histograms registry,
+//! and a per-GPU ASCII Gantt view — see DESIGN.md §13 and the
+//! `msrep trace` subcommand.
+
 #![warn(missing_docs)]
 
 pub mod autoplan;
 pub mod coordinator;
 pub mod error;
 pub mod formats;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serve;

@@ -11,6 +11,7 @@
 //! msrep solver-bench ...                   plan-reusing iterative solvers
 //! msrep spgemm-bench ...                   flop-balanced multi-GPU SpGEMM
 //! msrep sptrsv-bench ...                   level-scheduled triangular solves
+//! msrep trace --scenario small ...         traced tour of every subsystem
 //! ```
 //!
 //! The paper-figure regeneration lives in `cargo bench` /
@@ -55,6 +56,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "spgemm-bench" => cmd_spgemm_bench(rest),
         "sptrsv-bench" => cmd_sptrsv_bench(rest),
         "autoplan-bench" => cmd_autoplan_bench(rest),
+        "trace" => cmd_trace(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -62,7 +64,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         other => Err(Error::Usage(format!(
             "unknown command '{other}' (expected info | gen | profile | partition | run | \
              suite | serve-bench | solver-bench | spgemm-bench | sptrsv-bench | \
-             autoplan-bench; try `msrep help`)"
+             autoplan-bench | trace; try `msrep help`)"
         ))),
     }
 }
@@ -87,7 +89,10 @@ fn print_usage() {
          (--help for flags)\n\
          \x20 autoplan-bench run the profile-driven format tuner over the \
          format-selection scenarios and check it against every fixed format \
-         (--help for flags)\n"
+         (--help for flags)\n\
+         \x20 trace       run a traced tour of every subsystem (SpMV, SpGEMM, \
+         SpTRSV, CG, serving) and export the span timeline as Chrome \
+         trace-event JSON + an ASCII Gantt (--help for flags)\n"
     );
 }
 
@@ -260,6 +265,7 @@ fn run_parser() -> Parser {
         .bool_flag("no-numa", "disable NUMA-aware placement")
         .bool_flag("verify", "check against the CPU oracle")
         .bool_flag("timeline", "render the modeled phase timeline + per-GPU loads")
+        .flag("trace", "export the span timeline as Chrome trace-event JSON", None)
 }
 
 fn cmd_run(argv: Vec<String>) -> Result<()> {
@@ -285,7 +291,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
     let beta = a.f64_or("beta", 0.0)? as f32;
     let iters = a.usize_or("iters", 1)?;
 
-    let engine = Engine::new(RunConfig {
+    let mut engine = Engine::new(RunConfig {
         platform,
         num_gpus,
         mode,
@@ -294,6 +300,10 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         numa_aware: if a.is_set("no-numa") { Some(false) } else { None },
         strategy_override: None,
     })?;
+    let recorder = msrep::obs::TraceRecorder::enabled();
+    if a.get("trace").is_some() {
+        engine.set_recorder(recorder.clone());
+    }
 
     let x = gen::dense_vector(mat.cols(), 7);
     let y0 = gen::dense_vector(mat.rows(), 8);
@@ -367,6 +377,9 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
             return Err(Error::InvalidMatrix(format!("verification FAILED ({max_rel})")));
         }
     }
+    if let Some(path) = a.get("trace") {
+        export_trace(&recorder, path)?;
+    }
     Ok(())
 }
 
@@ -388,6 +401,7 @@ fn serve_parser() -> Parser {
         .flag("cache", "plan-cache capacity (0 disables)", Some("16"))
         .flag("seed", "trace PRNG seed", Some("42"))
         .bool_flag("compare", "also run the sequential no-cache baseline")
+        .flag("trace", "export the span timeline as Chrome trace-event JSON", None)
 }
 
 /// Build the synthetic multi-tenant trace: exponential inter-arrivals at
@@ -484,8 +498,15 @@ fn cmd_serve_bench(argv: Vec<String>) -> Result<()> {
     };
 
     let (mut server, trace) = build(cfg.clone())?;
+    let recorder = msrep::obs::TraceRecorder::enabled();
+    if a.get("trace").is_some() {
+        server.set_recorder(&recorder);
+    }
     let report = server.run(trace)?;
     print!("{}", report.render());
+    if let Some(path) = a.get("trace") {
+        export_trace(&recorder, path)?;
+    }
 
     if a.is_set("compare") {
         let (mut base_server, base_trace) = build(cfg.sequential_baseline())?;
@@ -522,6 +543,7 @@ fn solver_parser() -> Parser {
         .flag("max-iters", "iteration budget", Some("300"))
         .flag("seed", "generator seed", Some("42"))
         .bool_flag("scenarios", "run the workload solver scenario set instead")
+        .flag("trace", "export the span timeline as Chrome trace-event JSON", None)
 }
 
 /// Dispatch one solver method over a prebuilt system matrix (shared by
@@ -583,7 +605,7 @@ fn cmd_solver_bench(argv: Vec<String>) -> Result<()> {
         return Err(Error::Usage("--dominance must be > 1 (the SPD certificate is strict)".into()));
     }
     let damping = a.f64_or("damping", 0.85)? as f32;
-    let engine = Engine::new(RunConfig {
+    let mut engine = Engine::new(RunConfig {
         platform,
         num_gpus,
         mode,
@@ -592,6 +614,10 @@ fn cmd_solver_bench(argv: Vec<String>) -> Result<()> {
         numa_aware: None,
         strategy_override: None,
     })?;
+    let recorder = msrep::obs::TraceRecorder::enabled();
+    if a.get("trace").is_some() {
+        engine.set_recorder(recorder.clone());
+    }
     println!(
         "solver-bench: {} x {} GPUs, mode {}, plan source {}\n",
         engine.config().platform.name,
@@ -692,6 +718,9 @@ fn cmd_solver_bench(argv: Vec<String>) -> Result<()> {
             best.method,
         );
     }
+    if let Some(path) = a.get("trace") {
+        export_trace(&recorder, path)?;
+    }
     Ok(())
 }
 
@@ -721,6 +750,7 @@ fn spgemm_parser() -> Parser {
             Some("all"),
         )
         .bool_flag("no-compare", "skip the nnz-balanced planning comparison")
+        .flag("trace", "export the span timeline as Chrome trace-event JSON", None)
 }
 
 fn cmd_spgemm_bench(argv: Vec<String>) -> Result<()> {
@@ -737,7 +767,7 @@ fn cmd_spgemm_bench(argv: Vec<String>) -> Result<()> {
     let num_gpus = a.usize_or("gpus", platform.num_gpus)?;
     let mode = Mode::parse(&a.str_or("mode", "popt"))
         .ok_or_else(|| Error::Usage("bad --mode".into()))?;
-    let engine = Engine::new(RunConfig {
+    let mut engine = Engine::new(RunConfig {
         platform,
         num_gpus,
         mode,
@@ -746,6 +776,10 @@ fn cmd_spgemm_bench(argv: Vec<String>) -> Result<()> {
         numa_aware: None,
         strategy_override: None,
     })?;
+    let recorder = msrep::obs::TraceRecorder::enabled();
+    if a.get("trace").is_some() {
+        engine.set_recorder(recorder.clone());
+    }
     let which = a.str_or("scenario", "all");
     let scenarios: Vec<workload::SpgemmScenario> = if which == "all" {
         workload::spgemm_scenarios()
@@ -806,6 +840,9 @@ fn cmd_spgemm_bench(argv: Vec<String>) -> Result<()> {
         );
         print!("{}", summary.render());
     }
+    if let Some(path) = a.get("trace") {
+        export_trace(&recorder, path)?;
+    }
     Ok(())
 }
 
@@ -822,6 +859,7 @@ fn sptrsv_parser() -> Parser {
         .flag("seed", "right-hand-side seed", Some("42"))
         .bool_flag("no-compare", "skip the naive row-block split comparison")
         .bool_flag("upper", "solve U x = b on the transposed factor instead")
+        .flag("trace", "export the span timeline as Chrome trace-event JSON", None)
 }
 
 fn cmd_sptrsv_bench(argv: Vec<String>) -> Result<()> {
@@ -840,7 +878,7 @@ fn cmd_sptrsv_bench(argv: Vec<String>) -> Result<()> {
     let mode = Mode::parse(&a.str_or("mode", "popt"))
         .ok_or_else(|| Error::Usage("bad --mode".into()))?;
     let seed = a.u64_or("seed", 42)?;
-    let engine = Engine::new(RunConfig {
+    let mut engine = Engine::new(RunConfig {
         platform,
         num_gpus,
         mode,
@@ -849,6 +887,10 @@ fn cmd_sptrsv_bench(argv: Vec<String>) -> Result<()> {
         numa_aware: None,
         strategy_override: None,
     })?;
+    let recorder = msrep::obs::TraceRecorder::enabled();
+    if a.get("trace").is_some() {
+        engine.set_recorder(recorder.clone());
+    }
     let which = a.str_or("scenario", "all");
     let scenarios: Vec<workload::SptrsvScenario> = if which == "all" {
         workload::sptrsv_scenarios()
@@ -935,6 +977,9 @@ fn cmd_sptrsv_bench(argv: Vec<String>) -> Result<()> {
              (modeled kernel time = Σ levels, max over GPUs):"
         );
         print!("{}", summary.render());
+    }
+    if let Some(path) = a.get("trace") {
+        export_trace(&recorder, path)?;
     }
     Ok(())
 }
@@ -1065,6 +1110,160 @@ fn cmd_autoplan_bench(argv: Vec<String>) -> Result<()> {
              (geomean {geomean:.3})"
         )));
     }
+    Ok(())
+}
+
+fn trace_parser() -> Parser {
+    Parser::new()
+        .flag("scenario", "small | medium (sizes every stage of the traced tour)", Some("small"))
+        .flag("platform", "summit | dgx1", Some("dgx1"))
+        .flag("gpus", "GPUs to use", None)
+        .flag("mode", "baseline | pstar | popt", Some("popt"))
+        .flag("out", "Chrome trace-event JSON output path", Some("trace.json"))
+        .flag("jsonl", "also write the span stream as JSONL to this path", None)
+        .flag("bench-out", "write the metrics registry as a bench-trajectory JSON", None)
+        .flag("width", "ASCII Gantt width in cells", Some("72"))
+        .flag("seed", "generator seed", Some("42"))
+}
+
+fn cmd_trace(argv: Vec<String>) -> Result<()> {
+    let p = trace_parser();
+    if argv.iter().any(|a| a == "--help") {
+        println!(
+            "msrep trace — traced tour of every subsystem with span-timeline export\n{}",
+            p.help()
+        );
+        return Ok(());
+    }
+    let a = p.parse(argv)?;
+    let platform = Platform::by_name(&a.str_or("platform", "dgx1"))?;
+    let num_gpus = a.usize_or("gpus", platform.num_gpus)?;
+    let mode = Mode::parse(&a.str_or("mode", "popt"))
+        .ok_or_else(|| Error::Usage("bad --mode".into()))?;
+    let seed = a.u64_or("seed", 42)?;
+    let width = a.usize_or("width", 72)?;
+    let scenario = a.str_or("scenario", "small");
+    let (m, nnz, requests) = match scenario.as_str() {
+        "small" => (512usize, 6_000usize, 32usize),
+        "medium" => (2_048, 40_000, 96),
+        other => {
+            return Err(Error::Usage(format!(
+                "unknown trace scenario '{other}' (expected small | medium)"
+            )))
+        }
+    };
+    let cfg = RunConfig {
+        platform,
+        num_gpus,
+        mode,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    };
+    println!(
+        "trace: scenario {scenario} ({m} x {m}, ~{nnz} nnz), {} x {num_gpus} GPUs, mode {}\n",
+        cfg.platform.name,
+        mode.label()
+    );
+
+    let recorder = msrep::obs::TraceRecorder::enabled();
+    let mut registry = msrep::obs::MetricsRegistry::new();
+    let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::power_law(m, m, nnz, 2.0, seed))));
+
+    // 1. serving first: its spans sit on the modeled arrival clock starting
+    // at zero, and the shared cursor then carries the one-shot ops past the
+    // last dispatch so the lanes stay disjoint in time
+    let serve_cfg = msrep::serve::ServeConfig {
+        run: cfg.clone(),
+        num_engines: 2,
+        max_batch: 4,
+        flush_deadline_s: 100e-6,
+        queue_capacity: 64,
+        plan_cache_capacity: 8,
+    };
+    let mut server = msrep::serve::Server::new(serve_cfg)?;
+    server.set_recorder(&recorder);
+    let tenants = vec![server.register(mat.clone())];
+    let reqs = serve_trace(&tenants, m, requests, 200_000.0, None, seed);
+    let serve_rep = server.run(reqs)?;
+    registry.record_serve("serve", &serve_rep);
+
+    // 2. the one-shot engine ops, on device lanes past the serve pool's
+    let mut engine = Engine::new(cfg.clone())?;
+    engine.set_recorder(recorder.with_gpu_base(2 * num_gpus));
+    let x = gen::dense_vector(m, 7);
+    let spmv_rep = engine.spmv(&mat, &x, 1.0, 0.0, None)?;
+    registry.record_spmv("spmv", &spmv_rep.metrics);
+    let spgemm_rep = engine.spgemm(&mat, &mat)?;
+    registry.record_spgemm("spgemm", &spgemm_rep.metrics);
+    let lower = Matrix::Csr(msrep::sptrsv::triangular_of(
+        &mat,
+        msrep::sptrsv::Triangle::Lower,
+        1.0,
+    ));
+    let b = gen::dense_vector(m, 11);
+    let sptrsv_rep = engine.sptrsv(&lower, &b, msrep::sptrsv::Triangle::Lower)?;
+    registry.record_sptrsv("sptrsv", &sptrsv_rep.metrics);
+
+    // 3. one plan-reusing CG solve (iteration spans over the engine spans)
+    let spd = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::spd(m, nnz, 2.0, seed))));
+    let x_star = gen::dense_vector(m, 13);
+    let mut rhs = vec![0.0f32; m];
+    msrep::spmv::spmv_matrix(&spd, &x_star, 1.0, 0.0, &mut rhs)?;
+    let solver_cfg = msrep::solver::SolverConfig {
+        tol: 1e-6,
+        max_iters: 60,
+        plan_source: msrep::solver::PlanSource::Reused,
+    };
+    let solve_rep = msrep::solver::cg(&engine, &spd, &rhs, &solver_cfg)?;
+    registry.record_solve("solver.cg", &solve_rep);
+
+    let trace = recorder.take();
+    print!("{}", msrep::obs::render_gantt(&trace, width));
+    println!();
+    print!("{}", registry.render());
+
+    let out = a.str_or("out", "trace.json");
+    msrep::obs::write_chrome_trace(&trace, &out)?;
+    println!(
+        "\nwrote Chrome trace ({} spans, {} tracks, envelope {}) to {out}",
+        trace.len(),
+        trace.tracks().len(),
+        format_duration_s(trace.envelope()),
+    );
+    if let Some(path) = a.get("jsonl") {
+        msrep::obs::write_jsonl(&trace, path)?;
+        println!("wrote JSONL span stream to {path}");
+    }
+    if let Some(path) = a.get("bench-out") {
+        use msrep::util::json::Value;
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("schema".to_string(), Value::Str("msrep-bench-v1".to_string()));
+        root.insert("bench".to_string(), Value::Str("obs_baseline".to_string()));
+        root.insert("scenario".to_string(), Value::Str(scenario.clone()));
+        root.insert("platform".to_string(), Value::Str(cfg.platform.name.to_string()));
+        root.insert("gpus".to_string(), Value::Num(num_gpus as f64));
+        root.insert("mode".to_string(), Value::Str(mode.label().to_string()));
+        root.insert("spans".to_string(), Value::Num(trace.len() as f64));
+        root.insert("envelope_s".to_string(), Value::Num(trace.envelope()));
+        root.insert("metrics".to_string(), registry.to_json());
+        std::fs::write(path, Value::Obj(root).to_json())?;
+        println!("wrote bench trajectory to {path}");
+    }
+    Ok(())
+}
+
+/// Drain a recorder and export its trace as Chrome trace-event JSON — the
+/// shared tail of every bench subcommand's `--trace` flag.
+fn export_trace(recorder: &msrep::obs::TraceRecorder, path: &str) -> Result<()> {
+    let trace = recorder.take();
+    msrep::obs::write_chrome_trace(&trace, path)?;
+    println!(
+        "wrote Chrome trace ({} spans, {} tracks) to {path}",
+        trace.len(),
+        trace.tracks().len()
+    );
     Ok(())
 }
 

@@ -1,0 +1,179 @@
+//! Trace exporters: Chrome trace-event JSON and a JSONL event stream.
+//!
+//! The Chrome format (`{"traceEvents": [...]}` with `"X"` complete events
+//! and `"M"` thread-name metadata) loads directly into Perfetto or
+//! `chrome://tracing`. Timestamps are microseconds, so modeled seconds are
+//! scaled by 1e6. Serialization rides on [`crate::util::json`], which keeps
+//! output deterministic (object keys are BTreeMap-sorted) and gives the
+//! round-trip parser the tests use.
+
+use std::collections::BTreeMap;
+
+use super::{Trace, Track};
+use crate::error::Result;
+use crate::util::json::Value;
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Convert a trace to a Chrome trace-event JSON document.
+///
+/// Each distinct track becomes one tid (first-seen order) named via a
+/// `thread_name` metadata event; each span becomes one `"X"` complete
+/// event with its kind as `cat` and its attributes under `args`.
+pub fn to_chrome_json(trace: &Trace) -> Value {
+    let tracks = trace.tracks();
+    let tid_of = |t: Track| tracks.iter().position(|x| *x == t).unwrap_or(0);
+    let mut events = Vec::with_capacity(tracks.len() + trace.len());
+    for (tid, track) in tracks.iter().enumerate() {
+        events.push(obj(vec![
+            ("ph", Value::Str("M".to_string())),
+            ("name", Value::Str("thread_name".to_string())),
+            ("pid", Value::Num(1.0)),
+            ("tid", Value::Num(tid as f64)),
+            ("args", obj(vec![("name", Value::Str(track.label()))])),
+        ]));
+    }
+    for s in trace.spans() {
+        let args: BTreeMap<String, Value> = s
+            .attrs
+            .iter()
+            .map(|(k, v)| (k.to_string(), Value::Num(*v)))
+            .collect();
+        events.push(obj(vec![
+            ("ph", Value::Str("X".to_string())),
+            ("name", Value::Str(s.name.to_string())),
+            ("cat", Value::Str(s.kind.label().to_string())),
+            ("pid", Value::Num(1.0)),
+            ("tid", Value::Num(tid_of(s.track) as f64)),
+            ("ts", Value::Num(s.t_start * 1e6)),
+            ("dur", Value::Num(s.duration() * 1e6)),
+            ("args", Value::Obj(args)),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", Value::Arr(events)),
+        ("displayTimeUnit", Value::Str("ms".to_string())),
+    ])
+}
+
+/// Write a trace as Chrome trace-event JSON to `path`.
+pub fn write_chrome_trace(trace: &Trace, path: &str) -> Result<()> {
+    std::fs::write(path, to_chrome_json(trace).to_json())?;
+    Ok(())
+}
+
+/// Render a trace as a JSONL event stream: one JSON object per span per
+/// line, in emission order, with attributes inlined under `"attrs"`.
+pub fn to_jsonl(trace: &Trace) -> String {
+    let mut out = String::new();
+    for s in trace.spans() {
+        let attrs: BTreeMap<String, Value> = s
+            .attrs
+            .iter()
+            .map(|(k, v)| (k.to_string(), Value::Num(*v)))
+            .collect();
+        let line = obj(vec![
+            ("track", Value::Str(s.track.label())),
+            ("name", Value::Str(s.name.to_string())),
+            ("kind", Value::Str(s.kind.label().to_string())),
+            ("t_start", Value::Num(s.t_start)),
+            ("t_end", Value::Num(s.t_end)),
+            ("attrs", Value::Obj(attrs)),
+        ]);
+        out.push_str(&line.to_json());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a trace as a JSONL event stream to `path`.
+pub fn write_jsonl(trace: &Trace, path: &str) -> Result<()> {
+    std::fs::write(path, to_jsonl(trace))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{SpanKind, TraceRecorder};
+    use crate::util::json::parse;
+
+    fn sample_trace() -> Trace {
+        let r = TraceRecorder::enabled();
+        r.span(Track::Gpu(0), "h2d", SpanKind::Phase, 0.0, 1.5e-3);
+        r.span_with(
+            Track::Gpu(1),
+            "compute",
+            SpanKind::Phase,
+            1.5e-3,
+            4.0e-3,
+            &[("nnz", 1234.0)],
+        );
+        r.span(Track::Host, "merge", SpanKind::Phase, 4.0e-3, 5.0e-3);
+        r.take()
+    }
+
+    #[test]
+    fn chrome_json_round_trips() {
+        let t = sample_trace();
+        let doc = parse(&to_chrome_json(&t).to_json()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 distinct tracks -> 3 metadata events, plus 3 complete events.
+        assert_eq!(events.len(), 6);
+        let metas: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+            .collect();
+        assert_eq!(metas.len(), 3);
+        assert_eq!(
+            metas[0].get("args").unwrap().get("name").unwrap().as_str(),
+            Some("gpu 0")
+        );
+        let xs: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 3);
+        // span 1: ts in microseconds, attrs carried through args.
+        assert_eq!(xs[1].get("ts").unwrap().as_f64(), Some(1.5e-3 * 1e6));
+        assert_eq!(xs[1].get("args").unwrap().get("nnz").unwrap().as_f64(), Some(1234.0));
+        assert_eq!(xs[2].get("cat").unwrap().as_str(), Some("phase"));
+    }
+
+    #[test]
+    fn tids_follow_first_seen_track_order() {
+        let t = sample_trace();
+        let doc = parse(&to_chrome_json(&t).to_json()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let xs: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(xs[0].get("tid").unwrap().as_usize(), Some(0));
+        assert_eq!(xs[1].get("tid").unwrap().as_usize(), Some(1));
+        assert_eq!(xs[2].get("tid").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn empty_trace_is_valid_chrome_json() {
+        let doc = parse(&to_chrome_json(&Trace::default()).to_json()).unwrap();
+        assert_eq!(doc.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn jsonl_lines_each_parse() {
+        let t = sample_trace();
+        let jsonl = to_jsonl(&t);
+        let lines: Vec<_> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            let v = parse(line).unwrap();
+            assert!(v.get("track").is_some());
+            assert!(v.get("t_end").unwrap().as_f64().is_some());
+        }
+        let v1 = parse(lines[1]).unwrap();
+        assert_eq!(v1.get("attrs").unwrap().get("nnz").unwrap().as_f64(), Some(1234.0));
+    }
+}

@@ -1,0 +1,161 @@
+//! Per-GPU ASCII Gantt renderer: `np × phase` swimlanes over modeled time.
+//!
+//! Generalizes [`crate::report::render_timeline`]'s four aggregate phase
+//! bars into one row per [`Track`], so load imbalance is visible *over
+//! time* instead of only as a max/mean scalar. Each span paints its cell
+//! range with a character derived from its name; a legend maps characters
+//! back to span names.
+
+use std::collections::BTreeMap;
+
+use super::Trace;
+use crate::report::format_duration_s;
+
+/// Assign each span name a stable single-character glyph, first-seen order.
+fn glyphs(trace: &Trace) -> BTreeMap<&'static str, char> {
+    let mut map: BTreeMap<&'static str, char> = BTreeMap::new();
+    let mut used: Vec<char> = Vec::new();
+    for s in trace.spans() {
+        if map.contains_key(s.name) {
+            continue;
+        }
+        let first = s.name.chars().find(|c| c.is_ascii_alphanumeric()).unwrap_or('*');
+        let mut pick = first.to_ascii_lowercase();
+        if used.contains(&pick) {
+            pick = first.to_ascii_uppercase();
+        }
+        if used.contains(&pick) {
+            pick = "0123456789*"
+                .chars()
+                .find(|c| !used.contains(c))
+                .unwrap_or('*');
+        }
+        used.push(pick);
+        map.insert(s.name, pick);
+    }
+    map
+}
+
+/// Render the trace as an ASCII Gantt chart, `width` cells wide.
+///
+/// Rows are ordered devices-first (the [`Track`] ordering); the time axis
+/// spans the earliest span start to the trace envelope. Zero-width markers
+/// paint a single cell.
+pub fn render_gantt(trace: &Trace, width: usize) -> String {
+    let width = width.max(1);
+    if trace.is_empty() {
+        return "gantt: (empty trace)\n".to_string();
+    }
+    let t0 = trace
+        .spans()
+        .iter()
+        .fold(f64::INFINITY, |acc, s| acc.min(s.t_start));
+    // Layout max is over ALL spans (unlike `Trace::envelope`, which skips
+    // the measured overlay) so wall-clock bars never paint out of range.
+    let t1 = trace.spans().iter().fold(0.0, |acc: f64, s| acc.max(s.t_end));
+    let range = (t1 - t0).max(f64::MIN_POSITIVE);
+    let glyph = glyphs(trace);
+
+    let mut tracks = trace.tracks();
+    tracks.sort();
+    let label_w = tracks
+        .iter()
+        .map(|t| t.label().len())
+        .max()
+        .unwrap_or(0)
+        .max(4);
+
+    let mut out = format!(
+        "gantt: {} spans over [{}, {}]\n",
+        trace.len(),
+        format_duration_s(0.0),
+        format_duration_s(range),
+    );
+    for track in &tracks {
+        let mut cells = vec!['.'; width];
+        for s in trace.spans().iter().filter(|s| s.track == *track) {
+            let c0 = (((s.t_start - t0) / range) * width as f64).floor() as usize;
+            let c1 = (((s.t_end - t0) / range) * width as f64).ceil() as usize;
+            let c0 = c0.min(width - 1);
+            let c1 = c1.clamp(c0 + 1, width);
+            let g = *glyph.get(s.name).unwrap_or(&'*');
+            for cell in cells.iter_mut().take(c1).skip(c0) {
+                *cell = g;
+            }
+        }
+        let row: String = cells.into_iter().collect();
+        out.push_str(&format!("{:<label_w$} |{row}|\n", track.label()));
+    }
+    // Legend in glyph order for a stable, readable footer.
+    let mut pairs: Vec<(char, &str)> = glyph.iter().map(|(n, c)| (*c, *n)).collect();
+    pairs.sort();
+    let legend: Vec<String> = pairs.iter().map(|(c, n)| format!("{c}={n}")).collect();
+    out.push_str(&format!("{:<label_w$} |{}\n", "legend", legend.join(" ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{SpanKind, Track, TraceRecorder};
+
+    fn two_gpu_trace() -> Trace {
+        let r = TraceRecorder::enabled();
+        r.span(Track::Gpu(0), "h2d", SpanKind::Phase, 0.0, 0.5);
+        r.span(Track::Gpu(1), "h2d", SpanKind::Phase, 0.0, 0.25);
+        r.span(Track::Gpu(0), "compute", SpanKind::Phase, 0.5, 1.0);
+        r.span(Track::Gpu(1), "compute", SpanKind::Phase, 0.5, 0.75);
+        r.span(Track::Host, "merge", SpanKind::Phase, 1.0, 1.25);
+        r.take()
+    }
+
+    #[test]
+    fn renders_one_row_per_track_devices_first() {
+        let g = render_gantt(&two_gpu_trace(), 40);
+        let lines: Vec<_> = g.lines().collect();
+        assert!(lines[1].starts_with("gpu 0"));
+        assert!(lines[2].starts_with("gpu 1"));
+        assert!(lines[3].starts_with("host"));
+        assert!(lines[4].starts_with("legend"));
+    }
+
+    #[test]
+    fn imbalance_is_visible_as_shorter_fill() {
+        let g = render_gantt(&two_gpu_trace(), 40);
+        let count = |row: &str, ch: char| row.chars().filter(|c| *c == ch).count();
+        let lines: Vec<_> = g.lines().collect();
+        // gpu 0's h2d is twice as long as gpu 1's.
+        assert!(count(lines[1], 'h') > count(lines[2], 'h'));
+        assert!(count(lines[1], 'c') > count(lines[2], 'c'));
+        // merge appears only on the host lane.
+        assert_eq!(count(lines[1], 'm'), 0);
+        assert!(count(lines[3], 'm') > 0);
+    }
+
+    #[test]
+    fn legend_maps_glyphs_to_names() {
+        let g = render_gantt(&two_gpu_trace(), 40);
+        assert!(g.contains("h=h2d"));
+        assert!(g.contains("c=compute"));
+        assert!(g.contains("m=merge"));
+    }
+
+    #[test]
+    fn glyph_collisions_fall_back_deterministically() {
+        let r = TraceRecorder::enabled();
+        r.span(Track::Host, "merge", SpanKind::Phase, 0.0, 1.0);
+        r.span(Track::Host, "measured", SpanKind::Measured, 1.0, 2.0);
+        let map = glyphs(&r.take());
+        assert_eq!(map["merge"], 'm');
+        assert_eq!(map["measured"], 'M');
+    }
+
+    #[test]
+    fn empty_and_degenerate_traces_do_not_panic() {
+        assert!(render_gantt(&Trace::default(), 40).contains("empty"));
+        let r = TraceRecorder::enabled();
+        r.marker(Track::Host, "tick", 1.0); // zero time range
+        let g = render_gantt(&r.take(), 40);
+        assert!(g.contains("host"));
+    }
+}

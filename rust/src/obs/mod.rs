@@ -1,0 +1,403 @@
+//! Observability substrate: structured span tracing over the modeled
+//! multi-GPU timeline, a metrics registry, and trace exporters.
+//!
+//! Every execution path — [`crate::coordinator::Engine`] SpMV/SpMM,
+//! [`crate::spgemm`], [`crate::sptrsv`], the solver iteration loops and the
+//! serve scheduler — emits typed [`Span`]s into a shared [`TraceRecorder`].
+//! The recorder is a zero-allocation no-op when disabled (the default), so
+//! instrumentation never taxes the hot path. On top of the raw span stream
+//! sit three consumers:
+//!
+//! * [`chrome`] — Chrome trace-event JSON (Perfetto / `chrome://tracing`
+//!   loadable) and a JSONL event stream, built on [`crate::util::json`];
+//! * [`registry`] — named counters / gauges / histograms with percentile
+//!   summaries ([`MetricsRegistry`]), the source for `BENCH_*.json`
+//!   trajectory files;
+//! * [`gantt`] — a per-GPU ASCII Gantt view generalizing
+//!   [`crate::report::render_timeline`] from 4 aggregate bars to
+//!   `np × phase` swimlanes.
+//!
+//! Span times are *modeled* seconds on the simulated platform clock; the
+//! parallel [`Track::Measured`] lane carries honest host wall-clock phase
+//! times so modeled-vs-measured drift is visible per phase. Invariants
+//! (span containment, the bitwise envelope == `modeled_total` contract)
+//! are documented in DESIGN.md §13.
+
+pub mod chrome;
+pub mod gantt;
+pub mod registry;
+
+pub use chrome::{to_chrome_json, to_jsonl, write_chrome_trace, write_jsonl};
+pub use gantt::render_gantt;
+pub use registry::MetricsRegistry;
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Timeline lane a span belongs to.
+///
+/// The derived `Ord` is the Gantt display order: device lanes first (sorted
+/// by global ordinal), then serve engine lanes, the host lane, named
+/// logical lanes, and last the measured wall-clock lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Track {
+    /// A physical device lane. The ordinal is *global*: serve installs a
+    /// per-engine GPU base so multi-engine traces keep device lanes unique
+    /// (see [`TraceRecorder::with_gpu_base`]).
+    Gpu(usize),
+    /// A serve engine lane carrying batched dispatch spans.
+    Engine(usize),
+    /// Host-side aggregate lane (partition, merge fix-up, reductions).
+    Host,
+    /// A named logical lane (solver iterations, serve queue, plan cache).
+    Lane(&'static str),
+    /// Honest host wall-clock phase timings, parallel to the modeled lanes.
+    /// Spans on this lane may overlap — wall times are not on the modeled
+    /// clock — so the non-overlap invariant is scoped to [`Track::Gpu`].
+    Measured,
+}
+
+impl Track {
+    /// Human-readable lane label, used by the exporters and the Gantt view.
+    pub fn label(&self) -> String {
+        match self {
+            Track::Gpu(g) => format!("gpu {g}"),
+            Track::Engine(e) => format!("engine {e}"),
+            Track::Host => "host".to_string(),
+            Track::Lane(name) => (*name).to_string(),
+            Track::Measured => "measured".to_string(),
+        }
+    }
+}
+
+/// Category of a span (the Chrome trace `cat` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// A modeled execution phase (partition, h2d, compute, merge, ...).
+    Phase,
+    /// Time a serve request spent queued before dispatch.
+    Queue,
+    /// A batched dispatch occupying a serve engine.
+    Dispatch,
+    /// One solver iteration.
+    Iteration,
+    /// Host wall-clock measurement parallel to a modeled phase.
+    Measured,
+    /// Zero-width event marker (request expiry, plan-cache miss, ...).
+    Marker,
+}
+
+impl SpanKind {
+    /// Short category label (the Chrome trace `cat` field).
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpanKind::Phase => "phase",
+            SpanKind::Queue => "queue",
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::Iteration => "iteration",
+            SpanKind::Measured => "measured",
+            SpanKind::Marker => "marker",
+        }
+    }
+}
+
+/// One closed span on the timeline. Times are in seconds; `t_end >=
+/// t_start` is enforced at recording time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// lane this span belongs to
+    pub track: Track,
+    /// span name ("h2d", "compute", "merge", "level", ...)
+    pub name: &'static str,
+    /// start time (s)
+    pub t_start: f64,
+    /// end time (s), >= `t_start`
+    pub t_end: f64,
+    /// category
+    pub kind: SpanKind,
+    /// numeric attributes (bytes, nnz, batch size, ...)
+    pub attrs: Vec<(&'static str, f64)>,
+}
+
+impl Span {
+    /// Span duration in seconds.
+    pub fn duration(&self) -> f64 {
+        self.t_end - self.t_start
+    }
+}
+
+/// A finished recording: the ordered span list drained from a recorder.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    spans: Vec<Span>,
+}
+
+impl Trace {
+    /// All spans in emission order.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Number of recorded spans.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Distinct tracks in first-seen order (the exporters' tid order).
+    pub fn tracks(&self) -> Vec<Track> {
+        let mut seen: Vec<Track> = Vec::new();
+        for s in &self.spans {
+            if !seen.contains(&s.track) {
+                seen.push(s.track);
+            }
+        }
+        seen
+    }
+
+    /// Latest *modeled* span end — the timeline envelope. 0.0 when empty.
+    ///
+    /// Spans on the measured wall-clock overlay ([`SpanKind::Measured`])
+    /// ride a parallel lane and are excluded: real elapsed host time has a
+    /// different scale from the modeled clock and must not stretch the
+    /// modeled envelope. For a single `*_with_plan` call recorded on a
+    /// fresh recorder this equals the report's `modeled_total` *bitwise*
+    /// (DESIGN.md §13).
+    pub fn envelope(&self) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.kind != SpanKind::Measured)
+            .fold(0.0, |acc: f64, s| acc.max(s.t_end))
+    }
+}
+
+/// Shared buffer behind an enabled recorder.
+#[derive(Debug, Default)]
+struct TraceBuf {
+    spans: Vec<Span>,
+    cursor: f64,
+}
+
+/// Thread-safe span sink with a timeline cursor.
+///
+/// The default (disabled) recorder holds no buffer: every method
+/// early-returns before touching the allocator, so threading a disabled
+/// recorder through the hot path costs a branch and nothing else (asserted
+/// by `tests/obs_integration.rs`). Clones share the same buffer, so one
+/// enabled recorder can be installed into many engines and drained once.
+#[derive(Debug, Clone, Default)]
+pub struct TraceRecorder {
+    inner: Option<Arc<Mutex<TraceBuf>>>,
+    gpu_base: usize,
+}
+
+impl TraceRecorder {
+    /// A recording recorder: spans append to a fresh shared buffer.
+    pub fn enabled() -> Self {
+        TraceRecorder {
+            inner: Some(Arc::new(Mutex::new(TraceBuf::default()))),
+            gpu_base: 0,
+        }
+    }
+
+    /// The no-op recorder (same as `Default`): records nothing, allocates
+    /// nothing.
+    pub fn disabled() -> Self {
+        TraceRecorder::default()
+    }
+
+    /// True when spans are actually recorded.
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// A clone sharing this recorder's buffer whose [`Track::Gpu`] lanes
+    /// are offset by `base`. The serve layer installs
+    /// `with_gpu_base(e * num_gpus)` into engine `e` so multi-engine
+    /// traces keep device lanes globally unique.
+    pub fn with_gpu_base(&self, base: usize) -> Self {
+        TraceRecorder { inner: self.inner.clone(), gpu_base: base }
+    }
+
+    /// The device track for *local* device `g`, offset by the GPU base.
+    pub fn gpu(&self, g: usize) -> Track {
+        Track::Gpu(self.gpu_base + g)
+    }
+
+    fn lock(buf: &Arc<Mutex<TraceBuf>>) -> MutexGuard<'_, TraceBuf> {
+        buf.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Current timeline cursor in seconds (0.0 when disabled).
+    pub fn cursor(&self) -> f64 {
+        match &self.inner {
+            Some(b) => Self::lock(b).cursor,
+            None => 0.0,
+        }
+    }
+
+    /// Move the cursor to an absolute time.
+    pub fn set_cursor(&self, t: f64) {
+        if let Some(b) = &self.inner {
+            Self::lock(b).cursor = t;
+        }
+    }
+
+    /// Advance the cursor by `dt` seconds.
+    pub fn advance(&self, dt: f64) {
+        if let Some(b) = &self.inner {
+            Self::lock(b).cursor += dt;
+        }
+    }
+
+    /// Record a span. No-op when disabled.
+    pub fn span(&self, track: Track, name: &'static str, kind: SpanKind, t_start: f64, t_end: f64) {
+        self.span_with(track, name, kind, t_start, t_end, &[]);
+    }
+
+    /// Record a span with numeric attributes. No-op — and allocation-free —
+    /// when disabled; `attrs` stays a borrowed stack slice until then.
+    pub fn span_with(
+        &self,
+        track: Track,
+        name: &'static str,
+        kind: SpanKind,
+        t_start: f64,
+        t_end: f64,
+        attrs: &[(&'static str, f64)],
+    ) {
+        let Some(b) = &self.inner else { return };
+        let mut buf = Self::lock(b);
+        buf.spans.push(Span {
+            track,
+            name,
+            t_start,
+            t_end: t_end.max(t_start),
+            kind,
+            attrs: attrs.to_vec(),
+        });
+    }
+
+    /// Record a zero-width marker event.
+    pub fn marker(&self, track: Track, name: &'static str, t: f64) {
+        self.span(track, name, SpanKind::Marker, t, t);
+    }
+
+    /// Drain all recorded spans into a [`Trace`]. The cursor is preserved,
+    /// so a long-running session can be drained incrementally.
+    pub fn take(&self) -> Trace {
+        match &self.inner {
+            Some(b) => Trace { spans: std::mem::take(&mut Self::lock(b).spans) },
+            None => Trace::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let r = TraceRecorder::disabled();
+        assert!(!r.is_enabled());
+        assert_eq!(r.cursor(), 0.0);
+        r.advance(5.0);
+        r.set_cursor(9.0);
+        assert_eq!(r.cursor(), 0.0);
+        r.span(Track::Host, "x", SpanKind::Phase, 0.0, 1.0);
+        assert!(r.take().is_empty());
+    }
+
+    #[test]
+    fn enabled_recorder_records_and_drains() {
+        let r = TraceRecorder::enabled();
+        assert!(r.is_enabled());
+        r.advance(1.5);
+        assert_eq!(r.cursor(), 1.5);
+        r.span(Track::Gpu(0), "h2d", SpanKind::Phase, 0.0, 1.0);
+        r.span_with(Track::Host, "merge", SpanKind::Phase, 1.0, 2.0, &[("bytes", 64.0)]);
+        let t = r.take();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.spans()[1].attrs, vec![("bytes", 64.0)]);
+        assert_eq!(r.cursor(), 1.5, "take preserves the cursor");
+        assert!(r.take().is_empty(), "take drains");
+    }
+
+    #[test]
+    fn clones_share_the_buffer_and_cursor() {
+        let r = TraceRecorder::enabled();
+        let c = r.clone();
+        c.span(Track::Host, "a", SpanKind::Phase, 0.0, 1.0);
+        c.set_cursor(3.0);
+        assert_eq!(r.cursor(), 3.0);
+        assert_eq!(r.take().len(), 1);
+    }
+
+    #[test]
+    fn gpu_base_offsets_device_lanes() {
+        let r = TraceRecorder::enabled();
+        let e1 = r.with_gpu_base(4);
+        assert_eq!(e1.gpu(2), Track::Gpu(6));
+        assert_eq!(r.gpu(2), Track::Gpu(2));
+        e1.span(e1.gpu(0), "k", SpanKind::Phase, 0.0, 1.0);
+        assert_eq!(r.take().spans()[0].track, Track::Gpu(4), "clone shares buffer");
+    }
+
+    #[test]
+    fn span_end_is_clamped_to_start() {
+        let r = TraceRecorder::enabled();
+        r.span(Track::Host, "neg", SpanKind::Phase, 2.0, 1.0);
+        let t = r.take();
+        assert_eq!(t.spans()[0].t_end, 2.0);
+        assert_eq!(t.spans()[0].duration(), 0.0);
+    }
+
+    #[test]
+    fn envelope_and_tracks() {
+        let r = TraceRecorder::enabled();
+        r.span(Track::Gpu(1), "a", SpanKind::Phase, 0.0, 2.0);
+        r.span(Track::Gpu(0), "b", SpanKind::Phase, 0.0, 0.5);
+        r.span(Track::Gpu(1), "c", SpanKind::Phase, 2.0, 3.25);
+        r.span(Track::Measured, "wall", SpanKind::Measured, 0.0, 99.0);
+        let t = r.take();
+        assert_eq!(t.envelope(), 3.25, "measured overlay must not stretch the envelope");
+        assert_eq!(t.tracks(), vec![Track::Gpu(1), Track::Gpu(0)], "first-seen order");
+    }
+
+    #[test]
+    fn track_display_order_puts_devices_first() {
+        let mut tracks = vec![
+            Track::Measured,
+            Track::Lane("solver"),
+            Track::Host,
+            Track::Engine(0),
+            Track::Gpu(1),
+            Track::Gpu(0),
+        ];
+        tracks.sort();
+        assert_eq!(
+            tracks,
+            vec![
+                Track::Gpu(0),
+                Track::Gpu(1),
+                Track::Engine(0),
+                Track::Host,
+                Track::Lane("solver"),
+                Track::Measured,
+            ]
+        );
+    }
+
+    #[test]
+    fn marker_is_zero_width() {
+        let r = TraceRecorder::enabled();
+        r.marker(Track::Lane("serve"), "expired", 4.0);
+        let t = r.take();
+        assert_eq!(t.spans()[0].kind, SpanKind::Marker);
+        assert_eq!(t.spans()[0].duration(), 0.0);
+    }
+}

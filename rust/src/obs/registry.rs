@@ -1,0 +1,321 @@
+//! Named counters / gauges / histograms with percentile summaries.
+//!
+//! The registry is the aggregation side of the observability substrate:
+//! where the [`super::TraceRecorder`] keeps *when* things happened, the
+//! registry keeps *how much* — run counts, byte totals, phase-time
+//! histograms — under stable dotted names (`"spmv.t_h2d_s"`). Histograms
+//! summarize through [`crate::util::stats::Summary`], and
+//! [`MetricsRegistry::to_json`] is what the `BENCH_*.json` trajectory
+//! emitter serializes.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::coordinator::Metrics;
+use crate::serve::ServeReport;
+use crate::solver::SolveReport;
+use crate::spgemm::SpgemmMetrics;
+use crate::sptrsv::SptrsvMetrics;
+use crate::util::json::Value;
+use crate::util::stats::Summary;
+
+/// Registry of named counters (monotone u64), gauges (last-write f64) and
+/// histograms (f64 sample sets with percentile summaries).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Vec<f64>>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Increment a counter by `by` (creating it at 0).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Append one sample to a histogram.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_default().push(v);
+    }
+
+    /// Current counter value (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Latest gauge value.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Percentile summary of a histogram. `None` when the histogram is
+    /// absent or holds no finite sample.
+    pub fn summary(&self, name: &str) -> Option<Summary> {
+        let samples = self.hists.get(name)?;
+        if samples.iter().any(|x| x.is_finite()) {
+            Some(Summary::of(samples))
+        } else {
+            None
+        }
+    }
+
+    /// Fold one SpMV/SpMM breakdown under `scope` (e.g. `"spmv"`).
+    pub fn record_spmv(&mut self, scope: &str, m: &Metrics) {
+        self.inc(&format!("{scope}.runs"), 1);
+        self.inc(&format!("{scope}.nnz"), m.nnz);
+        self.inc(&format!("{scope}.h2d_bytes"), m.h2d_bytes);
+        self.inc(&format!("{scope}.d2h_bytes"), m.d2h_bytes);
+        self.observe(&format!("{scope}.t_partition_s"), m.t_partition);
+        self.observe(&format!("{scope}.t_h2d_s"), m.t_h2d);
+        self.observe(&format!("{scope}.t_compute_s"), m.t_compute);
+        self.observe(&format!("{scope}.t_merge_s"), m.t_merge);
+        self.observe(&format!("{scope}.modeled_total_s"), m.modeled_total);
+        self.observe(&format!("{scope}.measured_partition_s"), m.measured_partition);
+        self.observe(&format!("{scope}.measured_exec_s"), m.measured_exec);
+        self.observe(&format!("{scope}.measured_merge_s"), m.measured_merge);
+        self.set_gauge(&format!("{scope}.imbalance"), m.imbalance);
+        self.set_gauge(&format!("{scope}.gflops"), m.gflops());
+    }
+
+    /// Fold one SpGEMM breakdown under `scope`.
+    pub fn record_spgemm(&mut self, scope: &str, m: &SpgemmMetrics) {
+        self.inc(&format!("{scope}.runs"), 1);
+        self.inc(&format!("{scope}.flops"), m.flops);
+        self.inc(&format!("{scope}.c_nnz"), m.c_nnz);
+        self.observe(&format!("{scope}.t_partition_s"), m.t_partition);
+        self.observe(&format!("{scope}.t_h2d_s"), m.t_h2d);
+        self.observe(&format!("{scope}.t_symbolic_s"), m.t_symbolic);
+        self.observe(&format!("{scope}.t_numeric_s"), m.t_numeric);
+        self.observe(&format!("{scope}.t_merge_s"), m.t_merge);
+        self.observe(&format!("{scope}.modeled_total_s"), m.modeled_total);
+        self.observe(&format!("{scope}.measured_symbolic_s"), m.measured_symbolic);
+        self.observe(&format!("{scope}.measured_numeric_s"), m.measured_numeric);
+        self.observe(&format!("{scope}.measured_merge_s"), m.measured_merge);
+        self.set_gauge(&format!("{scope}.flop_imbalance"), m.flop_imbalance);
+        self.set_gauge(&format!("{scope}.compression"), m.compression());
+    }
+
+    /// Fold one SpTRSV breakdown under `scope`.
+    pub fn record_sptrsv(&mut self, scope: &str, m: &SptrsvMetrics) {
+        self.inc(&format!("{scope}.runs"), 1);
+        self.inc(&format!("{scope}.nnz"), m.nnz);
+        self.observe(&format!("{scope}.t_partition_s"), m.t_partition);
+        self.observe(&format!("{scope}.t_h2d_s"), m.t_h2d);
+        self.observe(&format!("{scope}.t_levels_s"), m.t_levels);
+        self.observe(&format!("{scope}.t_sync_s"), m.t_sync);
+        self.observe(&format!("{scope}.t_d2h_s"), m.t_d2h);
+        self.observe(&format!("{scope}.modeled_total_s"), m.modeled_total);
+        self.observe(&format!("{scope}.measured_exec_s"), m.measured_exec);
+        self.set_gauge(&format!("{scope}.levels"), m.levels as f64);
+        self.set_gauge(&format!("{scope}.imbalance"), m.imbalance);
+    }
+
+    /// Fold one iterative-solve report under `scope`.
+    pub fn record_solve(&mut self, scope: &str, r: &SolveReport) {
+        self.inc(&format!("{scope}.solves"), 1);
+        self.inc(&format!("{scope}.iterations"), r.iterations as u64);
+        self.inc(&format!("{scope}.spmvs"), r.spmv_count as u64);
+        for s in &r.trace {
+            self.observe(&format!("{scope}.iter_modeled_s"), s.modeled_spmv_s);
+        }
+        self.set_gauge(&format!("{scope}.converged"), if r.converged { 1.0 } else { 0.0 });
+        self.set_gauge(&format!("{scope}.final_residual"), r.final_residual);
+        self.set_gauge(&format!("{scope}.t_plan_s"), r.t_plan);
+        self.set_gauge(&format!("{scope}.modeled_total_s"), r.modeled_total_s);
+        self.set_gauge(&format!("{scope}.amortization"), r.amortization());
+    }
+
+    /// Fold one serving run under `scope`.
+    pub fn record_serve(&mut self, scope: &str, r: &ServeReport) {
+        self.inc(&format!("{scope}.submitted"), r.submitted as u64);
+        self.inc(&format!("{scope}.completed"), r.completed as u64);
+        self.inc(&format!("{scope}.rejected"), r.rejected as u64);
+        self.inc(&format!("{scope}.expired"), r.expired as u64);
+        self.inc(&format!("{scope}.deadline_violations"), r.deadline_violations as u64);
+        self.inc(&format!("{scope}.cache_hits"), r.cache.hits as u64);
+        self.inc(&format!("{scope}.cache_misses"), r.cache.misses as u64);
+        for &l in &r.latencies_s {
+            self.observe(&format!("{scope}.latency_s"), l);
+        }
+        for &k in &r.batch_sizes {
+            self.observe(&format!("{scope}.batch_k"), k as f64);
+        }
+        self.set_gauge(&format!("{scope}.throughput_rps"), r.throughput_rps());
+        self.set_gauge(&format!("{scope}.utilization"), r.utilization());
+        self.set_gauge(&format!("{scope}.makespan_s"), r.makespan_s);
+    }
+
+    /// Render the registry as text: counters, gauges, then histogram
+    /// percentile summaries.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if !self.counters.is_empty() {
+            out.push_str("counters:\n");
+            for (k, v) in &self.counters {
+                let _ = writeln!(out, "  {k:<40} {v}");
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str("gauges:\n");
+            for (k, v) in &self.gauges {
+                let _ = writeln!(out, "  {k:<40} {v:.6e}");
+            }
+        }
+        if !self.hists.is_empty() {
+            out.push_str("histograms:\n");
+            for k in self.hists.keys() {
+                match self.summary(k) {
+                    Some(s) => {
+                        let _ = writeln!(
+                            out,
+                            "  {k:<40} n={:<5} mean={:.3e} p50={:.3e} p95={:.3e} max={:.3e}",
+                            s.n, s.mean, s.median, s.p95, s.max
+                        );
+                    }
+                    None => {
+                        let _ = writeln!(out, "  {k:<40} (no finite samples)");
+                    }
+                }
+            }
+        }
+        if out.is_empty() {
+            out.push_str("(empty registry)\n");
+        }
+        out
+    }
+
+    /// Serialize to JSON: counters and gauges verbatim, histograms as
+    /// `{n, mean, min, max, p50, p95}` summary objects.
+    pub fn to_json(&self) -> Value {
+        let counters: BTreeMap<String, Value> = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Value::Num(*v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Value> = self
+            .gauges
+            .iter()
+            .map(|(k, v)| (k.clone(), Value::Num(*v)))
+            .collect();
+        let hists: BTreeMap<String, Value> = self
+            .hists
+            .keys()
+            .map(|k| {
+                let v = match self.summary(k) {
+                    Some(s) => {
+                        let mut m = BTreeMap::new();
+                        m.insert("n".to_string(), Value::Num(s.n as f64));
+                        m.insert("mean".to_string(), Value::Num(s.mean));
+                        m.insert("min".to_string(), Value::Num(s.min));
+                        m.insert("max".to_string(), Value::Num(s.max));
+                        m.insert("p50".to_string(), Value::Num(s.median));
+                        m.insert("p95".to_string(), Value::Num(s.p95));
+                        Value::Obj(m)
+                    }
+                    None => Value::Null,
+                };
+                (k.clone(), v)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("counters".to_string(), Value::Obj(counters));
+        root.insert("gauges".to_string(), Value::Obj(gauges));
+        root.insert("histograms".to_string(), Value::Obj(hists));
+        Value::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn counters_gauges_histograms_round_trip() {
+        let mut r = MetricsRegistry::new();
+        assert!(r.is_empty());
+        r.inc("spmv.runs", 1);
+        r.inc("spmv.runs", 2);
+        r.set_gauge("spmv.imbalance", 1.25);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            r.observe("spmv.t_h2d_s", v);
+        }
+        assert_eq!(r.counter("spmv.runs"), 3);
+        assert_eq!(r.counter("missing"), 0);
+        assert_eq!(r.gauge("spmv.imbalance"), Some(1.25));
+        let s = r.summary("spmv.t_h2d_s").unwrap();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.mean, 2.5);
+        assert!(r.summary("missing").is_none());
+    }
+
+    #[test]
+    fn record_spmv_populates_scoped_names() {
+        let mut r = MetricsRegistry::new();
+        let m = Metrics {
+            np: 4,
+            nnz: 100,
+            t_h2d: 1e-4,
+            t_compute: 2e-4,
+            t_merge: 5e-5,
+            modeled_total: 3.5e-4,
+            imbalance: 1.1,
+            h2d_bytes: 1200,
+            ..Default::default()
+        };
+        r.record_spmv("spmv", &m);
+        r.record_spmv("spmv", &m);
+        assert_eq!(r.counter("spmv.runs"), 2);
+        assert_eq!(r.counter("spmv.nnz"), 200);
+        assert_eq!(r.summary("spmv.modeled_total_s").unwrap().n, 2);
+        assert_eq!(r.gauge("spmv.imbalance"), Some(1.1));
+    }
+
+    #[test]
+    fn render_and_json_are_consistent() {
+        let mut r = MetricsRegistry::new();
+        r.inc("x.runs", 7);
+        r.set_gauge("x.g", 0.5);
+        r.observe("x.h", 2.0);
+        let text = r.render();
+        assert!(text.contains("x.runs"));
+        assert!(text.contains("histograms:"));
+        let doc = parse(&r.to_json().to_json()).unwrap();
+        assert_eq!(doc.get("counters").unwrap().get("x.runs").unwrap().as_usize(), Some(7));
+        assert_eq!(
+            doc.get("histograms").unwrap().get("x.h").unwrap().get("n").unwrap().as_usize(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn all_nan_histogram_summarizes_as_null() {
+        let mut r = MetricsRegistry::new();
+        r.observe("bad", f64::NAN);
+        assert!(r.summary("bad").is_none());
+        assert!(r.render().contains("no finite samples"));
+        let doc = parse(&r.to_json().to_json()).unwrap();
+        assert_eq!(doc.get("histograms").unwrap().get("bad"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn empty_registry_renders_placeholder() {
+        assert!(MetricsRegistry::new().render().contains("empty"));
+    }
+}

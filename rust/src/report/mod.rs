@@ -15,5 +15,5 @@ pub use serve::render_serve_report;
 pub use solver::render_solver_report;
 pub use spgemm::{render_flop_skew, render_spgemm_report};
 pub use sptrsv::render_sptrsv_report;
-pub use table::{ascii_bar, format_duration_s, format_pct, Series, Table};
+pub use table::{ascii_bar, bar_line, format_duration_s, format_pct, Series, Table};
 pub use timeline::{render_loads, render_timeline};

@@ -4,7 +4,7 @@
 
 use crate::serve::ServeReport;
 
-use super::table::{ascii_bar, format_duration_s, format_pct, Table};
+use super::table::{bar_line, format_duration_s, format_pct, Table};
 
 /// Render a serving run as tables + a batch-size histogram.
 pub fn render_serve_report(r: &ServeReport) -> String {
@@ -63,9 +63,11 @@ pub fn render_serve_report(r: &ServeReport) -> String {
         out.push_str("batch-size histogram:\n");
         let max = hist.iter().map(|&(_, c)| c).max().unwrap_or(1).max(1);
         for (k, count) in hist {
-            out.push_str(&format!(
-                "  k={k:<3} |{}| {count}\n",
-                ascii_bar(count as f64 / max as f64, 30)
+            out.push_str(&bar_line(
+                &format!("  k={k:<3}"),
+                count as f64 / max as f64,
+                30,
+                &count.to_string(),
             ));
         }
     }

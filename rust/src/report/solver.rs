@@ -5,7 +5,7 @@
 
 use crate::solver::SolveReport;
 
-use super::table::{ascii_bar, format_duration_s, Table};
+use super::table::{bar_line, format_duration_s, Table};
 
 /// How many trace points the convergence plot samples at most.
 const TRACE_POINTS: usize = 14;
@@ -91,11 +91,11 @@ pub fn render_solver_report(r: &SolveReport) -> String {
                 continue;
             }
             let frac = (clamp(s.residual).log10() - lo.log10()) / span;
-            out.push_str(&format!(
-                "  iter {:>5} |{}| {:.3e}\n",
-                s.iter,
-                ascii_bar(frac, 30),
-                s.residual
+            out.push_str(&bar_line(
+                &format!("  iter {:>5}", s.iter),
+                frac,
+                30,
+                &format!("{:.3e}", s.residual),
             ));
         }
     }

@@ -9,7 +9,7 @@ use std::fmt::Write as _;
 use crate::formats::stats;
 use crate::spgemm::SpgemmMetrics;
 
-use super::table::{ascii_bar, format_duration_s, format_pct, Table};
+use super::table::{bar_line, format_duration_s, format_pct, Table};
 
 /// Render one multi-GPU SpGEMM: product shape/compression summary, the
 /// modeled phase timeline (partition / h2d / symbolic / numeric / merge)
@@ -110,11 +110,12 @@ pub fn render_flop_skew(row_flops: &[u64]) -> String {
     }
     let peak = buckets.iter().copied().max().unwrap_or(0).max(1);
     for (b, &count) in buckets.iter().enumerate() {
-        let _ = writeln!(
-            out,
-            "  flops 2^{b:<2} |{}| {count}",
-            ascii_bar(count as f64 / peak as f64, 30)
-        );
+        out.push_str(&bar_line(
+            &format!("  flops 2^{b:<2}"),
+            count as f64 / peak as f64,
+            30,
+            &count.to_string(),
+        ));
     }
     let _ = writeln!(
         out,

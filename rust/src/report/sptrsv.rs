@@ -5,7 +5,7 @@
 
 use crate::sptrsv::SptrsvMetrics;
 
-use super::table::{ascii_bar, format_duration_s, format_pct, Table};
+use super::table::{bar_line, format_duration_s, format_pct, Table};
 
 /// How many histogram rows the level-parallelism plot samples at most.
 const HIST_POINTS: usize = 12;
@@ -56,11 +56,11 @@ pub fn render_sptrsv_report(m: &SptrsvMetrics) -> String {
             if lvl % step != 0 && lvl + 1 != m.level_sizes.len() {
                 continue;
             }
-            out.push_str(&format!(
-                "  level {:>5} |{}| {} rows\n",
-                lvl,
-                ascii_bar(rows as f64 / peak, 30),
-                rows
+            out.push_str(&bar_line(
+                &format!("  level {lvl:>5}"),
+                rows as f64 / peak,
+                30,
+                &format!("{rows} rows"),
             ));
         }
     }
@@ -69,10 +69,7 @@ pub fn render_sptrsv_report(m: &SptrsvMetrics) -> String {
         let peak = m.nnz_loads.iter().copied().max().unwrap_or(0).max(1) as f64;
         out.push_str("per-GPU nnz loads:\n");
         for (g, &l) in m.nnz_loads.iter().enumerate() {
-            out.push_str(&format!(
-                "  gpu {g} |{}| {l}\n",
-                ascii_bar(l as f64 / peak, 30)
-            ));
+            out.push_str(&bar_line(&format!("  gpu {g}"), l as f64 / peak, 30, &l.to_string()));
         }
     }
     out

@@ -111,6 +111,13 @@ pub fn ascii_bar(frac: f64, width: usize) -> String {
     format!("{}{}", "#".repeat(filled), ".".repeat(width - filled))
 }
 
+/// One `label |####....| value` line (newline-terminated) — the shared
+/// row shape of every report histogram, load plot and phase timeline.
+/// Callers pre-pad `label` for column alignment.
+pub fn bar_line(label: &str, frac: f64, width: usize, value: &str) -> String {
+    format!("{label} |{}| {value}\n", ascii_bar(frac, width))
+}
+
 /// Human duration from seconds: ns/µs/ms/s ranges.
 pub fn format_duration_s(secs: f64) -> String {
     if secs < 1e-6 {
@@ -163,6 +170,12 @@ mod tests {
         let s = Series::render_table(&[a, b], "gpus");
         assert!(s.contains("baseline") && s.contains("p*-opt"));
         assert!(s.contains("1.900"));
+    }
+
+    #[test]
+    fn bar_line_is_label_bar_value() {
+        assert_eq!(bar_line("gpu 0", 0.5, 4, "7 nnz"), "gpu 0 |##..| 7 nnz\n");
+        assert_eq!(bar_line("x", 0.0, 2, "0"), "x |..| 0\n");
     }
 
     #[test]

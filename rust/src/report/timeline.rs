@@ -3,7 +3,7 @@
 
 use crate::coordinator::Metrics;
 
-use super::table::format_duration_s;
+use super::table::{bar_line, format_duration_s};
 
 /// Render the modeled phase timeline of one SpMV as proportional bars.
 ///
@@ -23,13 +23,11 @@ pub fn render_timeline(m: &Metrics, width: usize) -> String {
     let mut out = String::new();
     for (name, t) in phases {
         let frac = t / total;
-        let filled = (frac * width as f64).round() as usize;
-        out.push_str(&format!(
-            "{name:<10}|{}{}| {:>10}  {:>5.1}%\n",
-            "#".repeat(filled.min(width)),
-            " ".repeat(width.saturating_sub(filled)),
-            format_duration_s(t),
-            frac * 100.0,
+        out.push_str(&bar_line(
+            &format!("{name:<9}"),
+            frac,
+            width,
+            &format!("{:>10}  {:>5.1}%", format_duration_s(t), frac * 100.0),
         ));
     }
     out.push_str(&format!(
@@ -48,11 +46,11 @@ pub fn render_loads(m: &Metrics, width: usize) -> String {
     let max = m.loads.iter().copied().max().unwrap_or(1).max(1);
     let mut out = String::new();
     for (g, &l) in m.loads.iter().enumerate() {
-        let filled = (l as f64 / max as f64 * width as f64).round() as usize;
-        out.push_str(&format!(
-            "gpu {g:<2} |{}{}| {l} nnz\n",
-            "#".repeat(filled.min(width)),
-            " ".repeat(width.saturating_sub(filled)),
+        out.push_str(&bar_line(
+            &format!("gpu {g:<2}"),
+            l as f64 / max as f64,
+            width,
+            &format!("{l} nnz"),
         ));
     }
     out

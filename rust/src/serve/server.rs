@@ -35,6 +35,7 @@ use std::rc::Rc;
 use crate::coordinator::{Engine, RunConfig};
 use crate::error::{Error, Result};
 use crate::formats::Matrix;
+use crate::obs::{SpanKind, Track, TraceRecorder};
 
 use super::batcher::{self, BatchPolicy, Batcher, PendingRequest};
 use super::metrics::ServeReport;
@@ -231,6 +232,19 @@ impl Server {
         self.matrices.len()
     }
 
+    /// Install a trace recorder on every engine of the pool. Engine `e`'s
+    /// device lanes are offset to start at `e * num_gpus`, so the whole
+    /// pool renders as disjoint GPU rows in one Gantt chart; all engine
+    /// clones share the caller's span buffer, so one [`TraceRecorder::take`]
+    /// drains the full serving trace. The scheduler itself adds queue,
+    /// plan and dispatch spans on top (DESIGN.md §13).
+    pub fn set_recorder(&mut self, recorder: &TraceRecorder) {
+        let np = self.cfg.run.num_gpus;
+        for (e, engine) in self.engines.iter_mut().enumerate() {
+            engine.set_recorder(recorder.with_gpu_base(e * np));
+        }
+    }
+
     /// Plan-cache counters.
     pub fn cache_stats(&self) -> PlanCacheStats {
         self.cache.stats()
@@ -367,8 +381,10 @@ impl Server {
             }
         }
 
+        // total_cmp: the sortedness `latencies_s` documents (and percentile
+        // debug-asserts) must hold even if a NaN ever slipped in upstream
         let mut latencies = agg.latencies;
-        latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        latencies.sort_by(f64::total_cmp);
         let makespan_s = if agg.completed == 0 || !first_arrival.is_finite() {
             0.0
         } else {
@@ -422,12 +438,14 @@ fn flush_window(
         .map(|(i, _)| i)
         .expect("engine pool is non-empty");
     let start = now.max(engine_free_at[e]);
+    let rec = engines[e].recorder();
     let mut live = Vec::with_capacity(pending.len());
     for r in pending {
         let stale = r.deadline_s.map_or(false, |d| start - r.arrival_s > d);
         if stale {
             outcomes[r.req_idx] = Some(Outcome::Expired);
             agg.expired += 1;
+            rec.marker(Track::Lane("serve queue"), "expired", start);
         } else {
             live.push(r);
         }
@@ -439,9 +457,29 @@ fn flush_window(
     let (plan, hit) = cache.get_or_build(*fp, matrix, &engines[e])?;
     // only a miss charges the modeled partitioning time (Fig. 16 amortized)
     let t_plan = if hit { 0.0 } else { plan.t_partition };
+    if rec.is_enabled() {
+        // queue spans run from each request's arrival to batch start; a
+        // plan-cache miss occupies the engine before the batch executes
+        for r in &live {
+            rec.span(Track::Lane("serve queue"), "queue", SpanKind::Queue, r.arrival_s, start);
+        }
+        if !hit {
+            rec.span(Track::Engine(e), "plan", SpanKind::Phase, start, start + t_plan);
+        }
+        // anchor the engine's per-GPU spans inside this dispatch window
+        rec.set_cursor(start + t_plan);
+    }
     let exec = batcher::dispatch(&engines[e], &plan, &live)?;
     let service = t_plan + exec.metrics.modeled_total;
     let done = start + service;
+    rec.span_with(
+        Track::Engine(e),
+        "dispatch",
+        SpanKind::Dispatch,
+        start,
+        done,
+        &[("batch_k", live.len() as f64)],
+    );
     engine_free_at[e] = done;
     agg.busy += service;
     agg.last_done = agg.last_done.max(done);

@@ -51,6 +51,7 @@ pub use power::{pagerank, power_iteration};
 use crate::coordinator::{Engine, PartitionPlan};
 use crate::error::{Error, Result};
 use crate::formats::Matrix;
+use crate::obs::{SpanKind, Track};
 
 /// How each iteration's SpMV obtains its partitioning.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -267,6 +268,9 @@ struct PlannedSpmv<'a> {
     last_spmv_s: f64,
     /// SpMVs executed
     count: usize,
+    /// recorder cursor when the solve started — anchors the iteration
+    /// spans `finish` overlays on the solver lane
+    run_start: f64,
 }
 
 impl<'a> PlannedSpmv<'a> {
@@ -294,6 +298,22 @@ impl<'a> PlannedSpmv<'a> {
                 (kept, t_plan)
             }
         };
+        // the up-front plan build is a solve-level phase: trace it on the
+        // solver lane and move the shared cursor past it so the first
+        // iteration's engine spans start where planning ended (Cold plans
+        // rebuild inside every engine one-shot, which traces them itself)
+        let rec = engine.recorder();
+        let run_start = rec.cursor();
+        if rec.is_enabled() && matches!(source, PlanSource::Reused | PlanSource::Auto) {
+            rec.span(
+                Track::Lane("solver"),
+                "plan",
+                SpanKind::Phase,
+                run_start,
+                run_start + t_plan,
+            );
+            rec.set_cursor(run_start + t_plan);
+        }
         Ok(PlannedSpmv {
             engine,
             matrix,
@@ -303,6 +323,7 @@ impl<'a> PlannedSpmv<'a> {
             spmv_modeled: 0.0,
             last_spmv_s: 0.0,
             count: 0,
+            run_start,
         })
     }
 
@@ -356,6 +377,27 @@ impl<'a> PlannedSpmv<'a> {
         eigenvalue: Option<f64>,
         trace: Vec<IterationStat>,
     ) -> SolveReport {
+        // overlay the convergence trace on the solver lane: one span per
+        // iteration, chained from where planning ended (Cold iterations
+        // also carry their per-call rebuild, like the engine charged them)
+        let rec = self.engine.recorder();
+        if rec.is_enabled() {
+            let cold = self.source == PlanSource::Cold;
+            let per_iter_plan = if cold { self.t_plan } else { 0.0 };
+            let mut at = self.run_start + if cold { 0.0 } else { self.t_plan };
+            for stat in &trace {
+                let end = at + stat.modeled_spmv_s + per_iter_plan;
+                rec.span_with(
+                    Track::Lane("solver"),
+                    "iteration",
+                    SpanKind::Iteration,
+                    at,
+                    end,
+                    &[("iter", stat.iter as f64), ("residual", stat.residual)],
+                );
+                at = end;
+            }
+        }
         SolveReport {
             method,
             plan_source: self.source,

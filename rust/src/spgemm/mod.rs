@@ -40,6 +40,7 @@ use crate::coordinator::worker;
 use crate::coordinator::{Engine, MergeClass, Mode, PartitionPlan};
 use crate::error::{Error, Result};
 use crate::formats::{convert, Csr, Matrix};
+use crate::obs::{SpanKind, Track};
 use crate::sim::model::pad_to_gpus;
 use crate::sim::{model, DeviceMemory};
 
@@ -150,6 +151,7 @@ impl Engine {
     /// cost charged to the report (the paper's per-call shape).
     pub fn spgemm(&self, a: &Matrix, b: &Matrix) -> Result<SpgemmReport> {
         let plan = self.plan_spgemm(a, b)?;
+        self.emit_partition_span(&plan);
         let mut rep = self.spgemm_with_plan(&plan, b)?;
         rep.metrics.t_partition = plan.t_partition;
         rep.metrics.modeled_total += plan.t_partition;
@@ -330,6 +332,112 @@ impl Engine {
             d2h_bytes: d2h_total,
             overlap_fixups: overlaps,
         };
+
+        // ---- 7. trace emission (only when a recorder is installed) ------
+        // Barriers accumulate in the same left-associated order as the
+        // `modeled_total` sum above, so on a fresh recorder the trace
+        // envelope reproduces it bitwise (DESIGN.md §13).
+        let rec = self.recorder();
+        if rec.is_enabled() {
+            let baseline = cfg.mode == Mode::Baseline;
+            let t0 = rec.cursor();
+            let b1 = t0 + t_h2d;
+            let b2 = b1 + t_symbolic;
+            let b3 = b2 + t_numeric;
+            let b4 = b3 + t_merge;
+            let per_h2d: Vec<f64> = if baseline {
+                h2d.iter()
+                    .map(|&bs| if bs == 0 { 0.0 } else { model::lone_transfer_time(p, bs) })
+                    .collect()
+            } else {
+                model::concurrent_h2d_times(
+                    p,
+                    &pad_to_gpus(&h2d, p.num_gpus),
+                    &pad_to_gpus(&src_numa, p.num_gpus),
+                )
+                .into_iter()
+                .take(np)
+                .collect()
+            };
+            let mut at = t0;
+            for (g, &d) in per_h2d.iter().enumerate() {
+                let start = if baseline { at } else { t0 };
+                let end = (start + d).min(b1);
+                rec.span(rec.gpu(g), "h2d", SpanKind::Phase, start, end);
+                at = end;
+            }
+            // kernel phases: chained on the serial Baseline (the phase
+            // totals are sums), concurrent from the barrier otherwise
+            let mut at = b1;
+            for (g, (&st, &f)) in sym_times.iter().zip(&flop_loads).enumerate() {
+                let start = if baseline { at } else { b1 };
+                let end = (start + st).min(b2);
+                rec.span_with(
+                    rec.gpu(g),
+                    "symbolic",
+                    SpanKind::Phase,
+                    start,
+                    end,
+                    &[("flops", f as f64)],
+                );
+                at = end;
+            }
+            let mut at = b2;
+            for (g, (&nt, &cn)) in num_times.iter().zip(&partial_nnz).enumerate() {
+                let start = if baseline { at } else { b2 };
+                let end = (start + nt).min(b3);
+                rec.span_with(
+                    rec.gpu(g),
+                    "numeric",
+                    SpanKind::Phase,
+                    start,
+                    end,
+                    &[("c_nnz", cn as f64)],
+                );
+                at = end;
+            }
+            // (unlike h2d, the Baseline merge model sums lone transfers
+            // without skipping empty partials — mirror it exactly)
+            let per_d2h: Vec<f64> = if baseline {
+                d2h.iter().map(|&bs| model::lone_transfer_time(p, bs)).collect()
+            } else {
+                model::concurrent_d2h_times(
+                    p,
+                    &pad_to_gpus(&d2h, p.num_gpus),
+                    &pad_to_gpus(&src_numa, p.num_gpus),
+                )
+                .into_iter()
+                .take(np)
+                .collect()
+            };
+            let mut at = b3;
+            for (g, &d) in per_d2h.iter().enumerate() {
+                let start = if baseline { at } else { b3 };
+                let end = (start + d).min(b4);
+                rec.span(rec.gpu(g), "d2h", SpanKind::Phase, start, end);
+                at = end;
+            }
+            rec.span_with(
+                Track::Host,
+                "merge",
+                SpanKind::Phase,
+                b3,
+                b4,
+                &[("c_nnz", metrics.c_nnz as f64)],
+            );
+            let m1 = t0 + measured_symbolic;
+            let m2 = m1 + measured_numeric;
+            rec.span(Track::Measured, "symbolic (measured)", SpanKind::Measured, t0, m1);
+            rec.span(Track::Measured, "numeric (measured)", SpanKind::Measured, m1, m2);
+            rec.span(
+                Track::Measured,
+                "merge (measured)",
+                SpanKind::Measured,
+                m2,
+                m2 + measured_merge,
+            );
+            rec.set_cursor(b4);
+        }
         Ok(SpgemmReport { c, metrics })
     }
 }

@@ -41,6 +41,7 @@ use crate::coordinator::partitioner::weighted_boundaries;
 use crate::coordinator::{worker, Engine, Mode, RunConfig, WorkModel};
 use crate::error::{Error, Result};
 use crate::formats::{convert, Csr, FormatKind, Matrix};
+use crate::obs::{SpanKind, Track};
 use crate::sim::model::pad_to_gpus;
 use crate::sim::{model, DeviceMemory};
 
@@ -311,6 +312,7 @@ impl Engine {
     /// symbolic cost charged to the report (the per-call shape).
     pub fn sptrsv(&self, a: &Matrix, b: &[f32], triangle: Triangle) -> Result<SptrsvReport> {
         let plan = self.plan_sptrsv(a, triangle)?;
+        self.emit_partition_span_raw(plan.t_partition, plan.measured_partition, plan.np);
         let mut rep = self.sptrsv_with_plan(&plan, b)?;
         rep.metrics.t_partition = plan.t_partition;
         rep.metrics.modeled_total += plan.t_partition;
@@ -449,6 +451,116 @@ impl Engine {
             h2d_bytes: h2d.iter().sum(),
             d2h_bytes: d2h.iter().sum(),
         };
+
+        // ---- 5. trace emission (only when a recorder is installed) ------
+        // Barriers accumulate in the same left-associated order as the
+        // `modeled_total` sum above — and the per-level positions replay
+        // the exact `t_levels += ...` accumulation — so on a fresh
+        // recorder the trace envelope reproduces `modeled_total` bitwise
+        // (DESIGN.md §13).
+        let rec = self.recorder();
+        if rec.is_enabled() {
+            let baseline = cfg.mode == Mode::Baseline;
+            let t0 = rec.cursor();
+            let b1 = t0 + t_h2d;
+            let per_h2d: Vec<f64> = if baseline {
+                h2d.iter()
+                    .map(|&bs| if bs == 0 { 0.0 } else { model::lone_transfer_time(p, bs) })
+                    .collect()
+            } else {
+                model::concurrent_h2d_times(
+                    p,
+                    &pad_to_gpus(&h2d, p.num_gpus),
+                    &pad_to_gpus(&src_numa, p.num_gpus),
+                )
+                .into_iter()
+                .take(np)
+                .collect()
+            };
+            let mut at = t0;
+            for (g, &d) in per_h2d.iter().enumerate() {
+                let start = if baseline { at } else { t0 };
+                let end = (start + d).min(b1);
+                rec.span(rec.gpu(g), "h2d", SpanKind::Phase, start, end);
+                at = end;
+            }
+            // wavefront kernels: replay the level accumulation so the last
+            // level ends exactly at b1 + t_levels
+            let mut acc = 0.0f64;
+            for (lvl, per_gpu) in plan.tasks.iter().enumerate() {
+                let level_start = b1 + acc;
+                let times: Vec<f64> = per_gpu
+                    .iter()
+                    .map(|t| model::sptrsv_level_time(p, t.nnz, t.rows.len() as u64))
+                    .collect();
+                acc += if baseline {
+                    times.iter().sum::<f64>()
+                } else {
+                    times.iter().copied().fold(0.0, f64::max)
+                };
+                let level_end = b1 + acc;
+                let mut at = level_start;
+                for (g, &lt) in times.iter().enumerate() {
+                    if per_gpu[g].rows.is_empty() {
+                        continue;
+                    }
+                    let start = if baseline { at } else { level_start };
+                    let end = (start + lt).min(level_end);
+                    rec.span_with(
+                        rec.gpu(g),
+                        "level",
+                        SpanKind::Phase,
+                        start,
+                        end,
+                        &[("level", lvl as f64), ("rows", per_gpu[g].rows.len() as f64)],
+                    );
+                    at = end;
+                }
+            }
+            let levels_end = b1 + t_levels;
+            let sync_end = levels_end + t_sync;
+            let d2h_end = sync_end + t_d2h;
+            rec.span_with(
+                Track::Host,
+                "sync",
+                SpanKind::Phase,
+                levels_end,
+                sync_end,
+                &[("levels", metrics.levels as f64)],
+            );
+            let per_d2h: Vec<f64> = if baseline {
+                d2h.iter()
+                    .map(|&bs| if bs == 0 { 0.0 } else { model::lone_transfer_time(p, bs) })
+                    .collect()
+            } else {
+                model::concurrent_d2h_times(
+                    p,
+                    &pad_to_gpus(&d2h, p.num_gpus),
+                    &pad_to_gpus(&src_numa, p.num_gpus),
+                )
+                .into_iter()
+                .take(np)
+                .collect()
+            };
+            let mut at = sync_end;
+            for (g, &d) in per_d2h.iter().enumerate() {
+                let start = if baseline { at } else { sync_end };
+                let end = (start + d).min(d2h_end);
+                rec.span(rec.gpu(g), "d2h", SpanKind::Phase, start, end);
+                at = end;
+            }
+            // the host-side fragment gather closes the op exactly at its
+            // modeled end
+            rec.span(Track::Host, "gather", SpanKind::Phase, sync_end, d2h_end);
+            rec.span(
+                Track::Measured,
+                "exec (measured)",
+                SpanKind::Measured,
+                t0,
+                t0 + measured_exec,
+            );
+            rec.set_cursor(d2h_end);
+        }
         Ok(SptrsvReport { x, metrics })
     }
 }

@@ -22,18 +22,23 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute a summary of the samples. Panics on empty input.
+    /// Compute a summary of the samples. Non-finite samples (NaN, ±inf)
+    /// are dropped before aggregation — a single poisoned timing must not
+    /// corrupt the sort order or the moments — and `n` counts the finite
+    /// samples actually summarized. Panics (with a clear message) when the
+    /// input is empty or no sample is finite.
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary::of on empty samples");
-        let n = samples.len();
-        let mean = samples.iter().sum::<f64>() / n as f64;
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+        assert!(!sorted.is_empty(), "Summary::of: no finite samples");
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
-            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+            sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
         } else {
             0.0
         };
-        let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Summary {
             n,
             mean,
@@ -62,8 +67,16 @@ impl Summary {
 }
 
 /// Linear-interpolated percentile of a pre-sorted slice, q in [0, 1].
+///
+/// The input **must** be sorted ascending — unsorted input silently
+/// returns garbage, so debug builds assert the invariant instead of
+/// trusting the caller's documentation.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     assert!(!sorted.is_empty());
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "percentile requires sorted input"
+    );
     let pos = q * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -162,5 +175,39 @@ mod tests {
     fn of_durations_converts() {
         let s = Summary::of_durations(&[Duration::from_millis(100), Duration::from_millis(300)]);
         assert!((s.mean - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_drops_nan_and_infinite_samples() {
+        let s = Summary::of(&[2.0, f64::NAN, 4.0, f64::INFINITY, f64::NEG_INFINITY]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!((s.min, s.max), (2.0, 4.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "no finite samples")]
+    fn summary_of_all_nan_panics_cleanly() {
+        Summary::of(&[f64::NAN, f64::NAN]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty samples")]
+    fn summary_of_empty_panics_cleanly() {
+        Summary::of(&[]);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "sorted input")]
+    fn percentile_rejects_unsorted_in_debug() {
+        percentile(&[3.0, 1.0, 2.0], 0.5);
+    }
+
+    #[test]
+    fn percentile_single_sample_is_that_sample() {
+        assert_eq!(percentile(&[7.5], 0.0), 7.5);
+        assert_eq!(percentile(&[7.5], 0.33), 7.5);
+        assert_eq!(percentile(&[7.5], 1.0), 7.5);
     }
 }

@@ -1,0 +1,405 @@
+//! Observability integration tests: the zero-allocation contract of a
+//! disabled recorder, the bitwise `envelope == modeled_total` barrier
+//! contract of `*_with_plan` traces, per-lane span containment, Chrome
+//! trace-event round-tripping through the home-grown JSON layer, and the
+//! serve/solver span lifecycles (DESIGN.md §13).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+use msrep::formats::{convert, gen, FormatKind, Matrix};
+use msrep::obs::{to_chrome_json, SpanKind, Trace, Track, TraceRecorder};
+use msrep::serve::{ServeConfig, Server, SpmvRequest};
+use msrep::sim::Platform;
+use msrep::solver::{PlanSource, SolverConfig};
+use msrep::sptrsv::{triangular_of, Triangle};
+use msrep::util::prop::check;
+use msrep::util::{json, stats};
+
+// ---------------------------------------------------------------------------
+// Counting allocator: proves the disabled recorder's no-op fast path.
+// Only allocation *count* is tracked (per thread, so parallel tests don't
+// interfere); frees are irrelevant to the zero-overhead contract.
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: defers all memory operations to `System`; the counter update is a
+// plain thread-local Cell write and cannot itself allocate (const-init TLS).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn disabled_recorder_allocates_nothing() {
+    let rec = TraceRecorder::disabled();
+    assert!(!rec.is_enabled());
+    // Warm anything lazy (TLS slot, panic machinery) before measuring.
+    rec.span(Track::Host, "warmup", SpanKind::Phase, 0.0, 1.0);
+    let _ = rec.cursor();
+
+    let before = allocations();
+    for i in 0..1_000u32 {
+        let t = f64::from(i);
+        rec.span(Track::Host, "noop", SpanKind::Phase, t, t + 1.0);
+        rec.span_with(
+            rec.gpu(i as usize % 4),
+            "noop",
+            SpanKind::Dispatch,
+            t,
+            t + 1.0,
+            &[("batch_k", 4.0)],
+        );
+        rec.marker(Track::Lane("serve queue"), "expired", t);
+        rec.advance(1.0);
+        rec.set_cursor(t);
+        let _ = rec.cursor();
+        let _ = rec.is_enabled();
+    }
+    let after = allocations();
+    assert_eq!(
+        after - before,
+        0,
+        "a disabled recorder must not allocate on any hot-path method"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Shared builders.
+
+fn engine_on(np: usize, mode: Mode, format: FormatKind) -> Engine {
+    Engine::new(RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: np,
+        mode,
+        format,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    })
+    .unwrap()
+}
+
+fn matrix_in(format: FormatKind, m: usize, nnz: usize, seed: u64) -> Matrix {
+    let coo = gen::power_law(m, m, nnz, 2.0, seed);
+    match format {
+        FormatKind::Csr => Matrix::Csr(convert::to_csr(&Matrix::Coo(coo))),
+        FormatKind::Csc => Matrix::Csc(convert::to_csc(&Matrix::Coo(coo))),
+        FormatKind::Coo => Matrix::Coo(coo),
+    }
+}
+
+/// Within every device lane, spans must tile without overlap: sorted by
+/// start, each span ends no later than the next begins (barriers are
+/// shared, so containment is exact, not approximate).
+fn assert_gpu_lanes_sequential(trace: &Trace) {
+    for track in trace.tracks() {
+        if !matches!(track, Track::Gpu(_)) {
+            continue;
+        }
+        let mut lane: Vec<(f64, f64)> = trace
+            .spans()
+            .iter()
+            .filter(|s| s.track == track)
+            .map(|s| (s.t_start, s.t_end))
+            .collect();
+        lane.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        for w in lane.windows(2) {
+            assert!(
+                w[0].1 <= w[1].0,
+                "{track:?}: span ending at {} overlaps next starting at {}",
+                w[0].1,
+                w[1].0
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Barrier contract: envelope == modeled_total, bitwise, for planned calls.
+
+#[test]
+fn spmv_with_plan_envelope_is_modeled_total_bitwise() {
+    check("spmv planned envelope", 24, |g| {
+        let m = 16 + g.size() * 13;
+        let nnz = m * (2 + g.usize_in(0..6));
+        let format = *g.choose(&FormatKind::ALL);
+        let mode = *g.choose(&[Mode::Baseline, Mode::PStar, Mode::PStarOpt]);
+        let np = 1 + g.usize_in(0..8);
+        let seed = g.usize_in(0..1_000_000) as u64;
+
+        let mat = matrix_in(format, m, nnz, seed);
+        let x = gen::dense_vector(m, seed + 1);
+        let mut engine = engine_on(np, mode, format);
+        engine.set_recorder(TraceRecorder::enabled());
+        let plan = engine.plan(&mat).unwrap();
+        let rep = engine.spmv_with_plan(&plan, &x, 1.0, 0.0, None).unwrap();
+        let trace = engine.recorder().take();
+
+        assert!(!trace.is_empty());
+        assert_eq!(
+            trace.envelope(),
+            rep.metrics.modeled_total,
+            "{format:?} {mode:?} np={np}: planned-call envelope must be bitwise equal"
+        );
+        assert_gpu_lanes_sequential(&trace);
+    });
+}
+
+#[test]
+fn spgemm_with_plan_envelope_is_modeled_total_bitwise() {
+    check("spgemm planned envelope", 10, |g| {
+        let m = 24 + g.size() * 11;
+        let nnz = m * (2 + g.usize_in(0..4));
+        let np = 1 + g.usize_in(0..8);
+        let seed = g.usize_in(0..1_000_000) as u64;
+
+        let a = matrix_in(FormatKind::Csr, m, nnz, seed);
+        let b = matrix_in(FormatKind::Csr, m, nnz, seed + 7);
+        let mut engine = engine_on(np, Mode::PStarOpt, FormatKind::Csr);
+        engine.set_recorder(TraceRecorder::enabled());
+        let plan = engine.plan_spgemm(&a, &b).unwrap();
+        let rep = engine.spgemm_with_plan(&plan, &b).unwrap();
+        let trace = engine.recorder().take();
+
+        assert_eq!(trace.envelope(), rep.metrics.modeled_total, "np={np}");
+        assert_gpu_lanes_sequential(&trace);
+    });
+}
+
+#[test]
+fn sptrsv_with_plan_envelope_is_modeled_total_bitwise() {
+    check("sptrsv planned envelope", 10, |g| {
+        let m = 24 + g.size() * 11;
+        let nnz = m * (2 + g.usize_in(0..4));
+        let np = 1 + g.usize_in(0..8);
+        let triangle = *g.choose(&[Triangle::Lower, Triangle::Upper]);
+        let seed = g.usize_in(0..1_000_000) as u64;
+
+        let base = matrix_in(FormatKind::Csr, m, nnz, seed);
+        let factor = Matrix::Csr(triangular_of(&base, triangle, 1.0));
+        let b = gen::dense_vector(m, seed + 3);
+        let mut engine = engine_on(np, Mode::PStarOpt, FormatKind::Csr);
+        engine.set_recorder(TraceRecorder::enabled());
+        let plan = engine.plan_sptrsv(&factor, triangle).unwrap();
+        let rep = engine.sptrsv_with_plan(&plan, &b).unwrap();
+        let trace = engine.recorder().take();
+
+        assert_eq!(trace.envelope(), rep.metrics.modeled_total, "np={np} {triangle:?}");
+        assert_gpu_lanes_sequential(&trace);
+    });
+}
+
+#[test]
+fn one_shot_envelope_matches_modeled_total_approximately() {
+    // One-shot calls prepend the partition span, which re-associates the
+    // sum — equality holds only to rounding, not bitwise (DESIGN.md §13).
+    let mat = matrix_in(FormatKind::Csr, 300, 3_000, 41);
+    let x = gen::dense_vector(300, 42);
+    let mut engine = engine_on(4, Mode::PStarOpt, FormatKind::Csr);
+    engine.set_recorder(TraceRecorder::enabled());
+    let rep = engine.spmv(&mat, &x, 1.0, 0.0, None).unwrap();
+    let trace = engine.recorder().take();
+    let total = rep.metrics.modeled_total;
+    assert!(
+        (trace.envelope() - total).abs() <= 1e-12 * total.abs(),
+        "one-shot envelope {} vs modeled_total {total}",
+        trace.envelope()
+    );
+    // The partition phase must actually be in the trace.
+    assert!(trace.spans().iter().any(|s| s.name == "partition"));
+}
+
+#[test]
+fn engine_recorder_is_disabled_by_default() {
+    let mat = matrix_in(FormatKind::Csr, 64, 300, 5);
+    let x = gen::dense_vector(64, 6);
+    let engine = engine_on(2, Mode::PStarOpt, FormatKind::Csr);
+    assert!(!engine.recorder().is_enabled());
+    engine.spmv(&mat, &x, 1.0, 0.0, None).unwrap();
+    assert!(engine.recorder().take().is_empty(), "no recorder, no spans");
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export round-trip.
+
+#[test]
+fn chrome_trace_round_trips_through_json() {
+    let mat = matrix_in(FormatKind::Csr, 200, 2_000, 17);
+    let x = gen::dense_vector(200, 18);
+    let mut engine = engine_on(3, Mode::PStarOpt, FormatKind::Csr);
+    engine.set_recorder(TraceRecorder::enabled());
+    engine.spmv(&mat, &x, 1.0, 0.0, None).unwrap();
+    let trace = engine.recorder().take();
+
+    let text = to_chrome_json(&trace).to_json();
+    let parsed = json::parse(&text).unwrap();
+    assert_eq!(parsed.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+
+    let events = parsed.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+    let phase = |e: &json::Value| e.get("ph").and_then(|v| v.as_str()).map(str::to_string);
+    let metadata = events.iter().filter(|e| phase(e).as_deref() == Some("M")).count();
+    let complete: Vec<&json::Value> =
+        events.iter().filter(|e| phase(e).as_deref() == Some("X")).collect();
+    assert_eq!(metadata, trace.tracks().len(), "one thread_name record per track");
+    assert_eq!(complete.len(), trace.len(), "one complete event per span");
+
+    // Reconstructing the envelope from ts+dur (microseconds) must agree
+    // with the in-memory modeled envelope up to fp rounding. Skip the
+    // measured overlay, which envelope() deliberately excludes.
+    let measured: Vec<bool> = trace
+        .spans()
+        .iter()
+        .map(|s| s.kind == SpanKind::Measured)
+        .collect();
+    let mut rebuilt: f64 = 0.0;
+    for (e, skip) in complete.iter().zip(&measured) {
+        if *skip {
+            continue;
+        }
+        let ts = e.get("ts").and_then(|v| v.as_f64()).unwrap();
+        let dur = e.get("dur").and_then(|v| v.as_f64()).unwrap();
+        rebuilt = rebuilt.max((ts + dur) / 1e6);
+    }
+    let envelope = trace.envelope();
+    assert!(
+        (rebuilt - envelope).abs() <= 1e-9 * envelope.max(1e-12),
+        "rebuilt {rebuilt} vs envelope {envelope}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Serve + solver span lifecycles.
+
+#[test]
+fn serve_run_emits_queue_dispatch_and_device_spans() {
+    let cfg = ServeConfig {
+        run: RunConfig {
+            platform: Platform::dgx1(),
+            num_gpus: 4,
+            mode: Mode::PStarOpt,
+            format: FormatKind::Csr,
+            backend: Backend::CpuRef,
+            numa_aware: None,
+            strategy_override: None,
+        },
+        num_engines: 2,
+        max_batch: 4,
+        flush_deadline_s: 50e-6,
+        queue_capacity: 64,
+        plan_cache_capacity: 4,
+    };
+    let mut server = Server::new(cfg).unwrap();
+    let mat = matrix_in(FormatKind::Csr, 256, 3_000, 23);
+    let id = server.register(mat);
+    let recorder = TraceRecorder::enabled();
+    server.set_recorder(&recorder);
+
+    let reqs: Vec<SpmvRequest> = (0..12)
+        .map(|i| SpmvRequest {
+            matrix: id,
+            x: gen::dense_vector(256, 100 + i),
+            alpha: 1.0,
+            arrival_s: i as f64 * 20e-6,
+            deadline_s: None,
+        })
+        .collect();
+    let report = server.run(reqs).unwrap();
+    assert_eq!(report.completed, 12);
+
+    let trace = recorder.take();
+    let has = |pred: &dyn Fn(&msrep::obs::Span) -> bool| trace.spans().iter().any(pred);
+    assert!(has(&|s| s.kind == SpanKind::Queue && s.track == Track::Lane("serve queue")));
+    assert!(has(&|s| s.kind == SpanKind::Dispatch && matches!(s.track, Track::Engine(_))));
+    assert!(
+        has(&|s| matches!(s.track, Track::Gpu(_))),
+        "dispatched batches must surface the engines' device spans"
+    );
+    // Every device lane carries a *global* ordinal: engine e's GPUs start
+    // at e*num_gpus, so no lane index can reach past the pool.
+    assert!(
+        trace
+            .spans()
+            .iter()
+            .all(|s| !matches!(s.track, Track::Gpu(g) if g >= 8)),
+        "device lane ordinals must stay inside the 2-engine x 4-GPU pool"
+    );
+}
+
+#[test]
+fn solver_trace_overlays_iterations_on_the_solver_lane() {
+    let m = 200;
+    let spd = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::spd(m, 2_000, 2.0, 31))));
+    let rhs = gen::dense_vector(m, 32);
+    let mut engine = engine_on(2, Mode::PStarOpt, FormatKind::Csr);
+    engine.set_recorder(TraceRecorder::enabled());
+    let cfg = SolverConfig { tol: 1e-5, max_iters: 50, plan_source: PlanSource::Reused };
+    let report = msrep::solver::cg(&engine, &spd, &rhs, &cfg).unwrap();
+    let trace = engine.recorder().take();
+
+    let iters = trace
+        .spans()
+        .iter()
+        .filter(|s| s.kind == SpanKind::Iteration && s.track == Track::Lane("solver"))
+        .count();
+    assert_eq!(iters, report.iterations, "one iteration span per CG iteration");
+    assert!(
+        trace
+            .spans()
+            .iter()
+            .any(|s| s.track == Track::Lane("solver") && s.name == "plan"),
+        "reused-plan solves trace the one-time planning cost"
+    );
+    assert_gpu_lanes_sequential(&trace);
+}
+
+// ---------------------------------------------------------------------------
+// Stats satellites: NaN hygiene and the sortedness contract.
+
+#[test]
+fn summary_drops_non_finite_samples() {
+    let s = stats::Summary::of(&[3.0, f64::NAN, 1.0, f64::INFINITY, 2.0]);
+    assert_eq!(s.n, 3, "only finite samples count");
+    assert_eq!(s.mean, 2.0);
+    assert_eq!(s.min, 1.0);
+    assert_eq!(s.max, 3.0);
+    assert_eq!(s.median, 2.0);
+}
+
+#[test]
+#[should_panic(expected = "no finite samples")]
+fn summary_rejects_all_nan_input() {
+    let _ = stats::Summary::of(&[f64::NAN, f64::NEG_INFINITY]);
+}
+
+#[test]
+fn percentile_interpolates_on_sorted_input() {
+    let sorted = [1.0, 2.0, 3.0, 4.0];
+    assert_eq!(stats::percentile(&sorted, 0.0), 1.0);
+    assert_eq!(stats::percentile(&sorted, 0.5), 2.5);
+    assert_eq!(stats::percentile(&sorted, 1.0), 4.0);
+    assert_eq!(stats::percentile(&[7.0], 0.95), 7.0);
+}
