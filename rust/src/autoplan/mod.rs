@@ -246,7 +246,7 @@ pub fn plan_auto(cfg: &RunConfig, a: &Matrix, opts: &AutoPlanOptions) -> Result<
     // the profile pass: two streaming degree counts over the nnz stream
     // (row + column), priced like any other CPU sweep; the losing
     // candidates' builds join it below so the search is charged honestly
-    let t_profile = model::cpu_rewrite_time(2 * a.nnz() as u64);
+    let t_profile = model::cpu_rewrite_time(&cfg.platform, 2 * a.nnz() as u64);
     let mut builds_total = 0.0f64;
 
     // only the running winner's plan is kept alive — every candidate plan

@@ -46,6 +46,12 @@ impl Mode {
 }
 
 /// How partition kernels are actually executed for numerics.
+///
+/// `Pjrt` and `CpuRef` are *modeled* backends: numerics are real, but all
+/// reported phase times come from the [`crate::sim::model`] analytic cost
+/// model. `Measured` additionally drives one worker thread per simulated
+/// GPU through [`crate::exec`] and reports honest per-phase wall-clock
+/// times next to the modeled ones (DESIGN.md §14).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
     /// AOT HLO artifacts through the PJRT CPU client — the real three-layer
@@ -56,6 +62,34 @@ pub enum Backend {
     /// PJRT round-trips would dominate wall time without changing any
     /// modeled number.
     CpuRef,
+    /// Measured multi-threaded execution ([`crate::exec`]): the same
+    /// reference kernels as `CpuRef`, fanned out one std thread per
+    /// simulated GPU, with per-phase wall-clock timers feeding the
+    /// [`crate::obs::Track::Measured`] lane. Results are byte-identical
+    /// to `CpuRef` by contract (`tests/exec_integration.rs`).
+    Measured,
+}
+
+impl Backend {
+    /// Label used by the CLI and the calibration report.
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::CpuRef => "cpu",
+            Backend::Measured => "measured",
+        }
+    }
+
+    /// Parse a CLI name (`modeled` is an alias for the `cpu` reference
+    /// backend — phase times come from the model either way).
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "pjrt" => Some(Backend::Pjrt),
+            "cpu" | "cpuref" | "modeled" => Some(Backend::CpuRef),
+            "measured" => Some(Backend::Measured),
+            _ => None,
+        }
+    }
 }
 
 /// Full engine configuration.
@@ -126,6 +160,16 @@ mod tests {
         assert_eq!(Mode::parse("pstar"), Some(Mode::PStar));
         assert_eq!(Mode::parse("P*-OPT"), Some(Mode::PStarOpt));
         assert_eq!(Mode::parse("nope"), None);
+    }
+
+    #[test]
+    fn backend_parse_and_label() {
+        assert_eq!(Backend::parse("measured"), Some(Backend::Measured));
+        assert_eq!(Backend::parse("cpu"), Some(Backend::CpuRef));
+        assert_eq!(Backend::parse("modeled"), Some(Backend::CpuRef));
+        assert_eq!(Backend::parse("PJRT"), Some(Backend::Pjrt));
+        assert_eq!(Backend::parse("gpu"), None);
+        assert_eq!(Backend::Measured.label(), "measured");
     }
 
     #[test]

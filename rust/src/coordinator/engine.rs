@@ -22,6 +22,7 @@
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::exec;
 use crate::formats::{FormatKind, Matrix};
 use crate::obs::{SpanKind, Track, TraceRecorder};
 use crate::runtime::SpmvRuntime;
@@ -129,7 +130,7 @@ pub fn model_spmv_phases(cfg: &RunConfig, plan: &PartitionPlan) -> SpmvPhases {
     let t_merge = match (plan.merge_class, cfg.mode) {
         (MergeClass::RowBased, Mode::Baseline) => {
             d2h.iter().map(|&b| model::lone_transfer_time(p, b)).sum::<f64>()
-                + model::cpu_fixup_time(overlaps)
+                + model::cpu_fixup_time(p, overlaps)
         }
         (MergeClass::RowBased, _) => {
             model::concurrent_d2h_times(
@@ -139,7 +140,7 @@ pub fn model_spmv_phases(cfg: &RunConfig, plan: &PartitionPlan) -> SpmvPhases {
             )
             .into_iter()
             .fold(0.0, f64::max)
-                + model::cpu_fixup_time(overlaps)
+                + model::cpu_fixup_time(p, overlaps)
         }
         (MergeClass::ColBased, Mode::Baseline) => {
             d2h.iter().map(|&b| model::lone_transfer_time(p, b)).sum::<f64>()
@@ -191,7 +192,7 @@ impl Engine {
     pub fn new(config: RunConfig) -> Result<Engine> {
         let runtime = match config.backend {
             Backend::Pjrt => Some(SpmvRuntime::with_default_artifacts()?),
-            Backend::CpuRef => None,
+            Backend::CpuRef | Backend::Measured => None,
         };
         Engine::with_runtime(config, runtime)
     }
@@ -374,11 +375,19 @@ impl Engine {
         let h2d_total: u64 = tasks.iter().map(|t| t.h2d_bytes()).sum();
 
         // ---- 3. real execution (numerics) -------------------------------
+        // CpuRef and Measured run the *same* kernel through the same
+        // fan-out; Measured additionally keeps the per-worker walls for
+        // the Measured trace lane and the calibration harness (§14).
         let exec_start = Instant::now();
-        let partials: Vec<Vec<f32>> = match cfg.backend {
+        let (partials, measured_busy): (Vec<Vec<f32>>, Vec<f64>) = match cfg.backend {
             Backend::CpuRef => {
-                let fan = worker::run_per_gpu(np, threaded, |g| cpu_partial(&tasks[g], x, alpha));
-                fan.results
+                let fan =
+                    worker::run_per_gpu(np, threaded, |g| exec::cpu_partial(&tasks[g], x, alpha));
+                (fan.results, Vec::new())
+            }
+            Backend::Measured => {
+                let fan = exec::run_spmv(tasks, x, alpha, threaded);
+                (fan.partials, fan.busy)
             }
             Backend::Pjrt => {
                 // PJRT executes on the engine thread: simulated-GPU time is
@@ -398,7 +407,7 @@ impl Engine {
                         t.out_len,
                     )?);
                 }
-                out
+                (out, Vec::new())
             }
         };
         let measured_exec = exec_start.elapsed().as_secs_f64();
@@ -429,6 +438,7 @@ impl Engine {
             measured_partition: 0.0,
             measured_exec,
             measured_merge,
+            measured_busy,
             h2d_bytes: h2d_total,
             d2h_bytes: d2h_total,
             overlap_fixups: overlaps,
@@ -561,13 +571,18 @@ impl Engine {
             })
             .fold(0.0, f64::max);
 
-        // real execution
+        // real execution (same backend split as spmv_with_plan)
         let exec_start = Instant::now();
-        let partials: Vec<Vec<f32>> = match cfg.backend {
+        let (partials, measured_busy): (Vec<Vec<f32>>, Vec<f64>) = match cfg.backend {
             Backend::CpuRef => {
-                let fan =
-                    worker::run_per_gpu(np, threaded, |g| cpu_partial_k(&tasks[g], x, k, alpha));
-                fan.results
+                let fan = worker::run_per_gpu(np, threaded, |g| {
+                    exec::cpu_partial_k(&tasks[g], x, k, alpha)
+                });
+                (fan.results, Vec::new())
+            }
+            Backend::Measured => {
+                let fan = exec::run_spmm(tasks, x, k, alpha, threaded);
+                (fan.partials, fan.busy)
             }
             Backend::Pjrt => {
                 let rt = self.runtime.as_ref().expect("checked in with_runtime");
@@ -595,7 +610,7 @@ impl Engine {
                         out.push(py);
                     }
                 }
-                out
+                (out, Vec::new())
             }
         };
         let measured_exec = exec_start.elapsed().as_secs_f64();
@@ -606,7 +621,7 @@ impl Engine {
         let t_merge = match (plan.merge_class, cfg.mode) {
             (MergeClass::RowBased, Mode::Baseline) => {
                 d2h.iter().map(|&b| model::lone_transfer_time(p, b)).sum::<f64>()
-                    + model::cpu_fixup_time(overlaps * k)
+                    + model::cpu_fixup_time(p, overlaps * k)
             }
             (MergeClass::RowBased, _) => model::concurrent_d2h_times(
                 p,
@@ -615,7 +630,7 @@ impl Engine {
             )
             .into_iter()
             .fold(0.0, f64::max)
-                + model::cpu_fixup_time(overlaps * k),
+                + model::cpu_fixup_time(p, overlaps * k),
             (MergeClass::ColBased, Mode::PStarOpt) => {
                 model::gpu_tree_reduce_time(p, np, (m * 4 * k) as u64)
                     + model::lone_transfer_time(p, (m * 4 * k) as u64)
@@ -648,6 +663,7 @@ impl Engine {
             measured_partition: 0.0,
             measured_exec,
             measured_merge,
+            measured_busy,
             h2d_bytes: h2d.iter().sum(),
             d2h_bytes: d2h.iter().sum(),
             overlap_fixups: overlaps,
@@ -812,6 +828,18 @@ fn emit_engine_spans(
         m1,
         m1 + metrics.measured_merge,
     );
+    // per-worker kernel walls (Measured backend only — empty otherwise):
+    // each simulated GPU's own thread, overlapping from the op start
+    for (g, &d) in metrics.measured_busy.iter().enumerate() {
+        rec.span_with(
+            Track::Measured,
+            "kernel (measured)",
+            SpanKind::Measured,
+            t0,
+            t0 + d,
+            &[("gpu", g as f64)],
+        );
+    }
     rec.set_cursor(b3);
 }
 
@@ -821,41 +849,6 @@ fn charge_partition(metrics: &mut Metrics, plan: &PartitionPlan) {
     metrics.t_partition = plan.t_partition;
     metrics.modeled_total += plan.t_partition;
     metrics.measured_partition = plan.measured_partition;
-}
-
-/// CPU reference K-wide execution of one task (row-major (out_len, k)).
-fn cpu_partial_k(t: &super::partitioner::GpuTask, x: &[f32], k: usize, alpha: f32) -> Vec<f32> {
-    let mut py = vec![0.0f32; t.out_len * k];
-    for e in 0..t.nnz() {
-        let r = t.row_idx[e] as usize * k;
-        let c = t.col_idx[e] as usize * k;
-        let v = t.val[e];
-        for j in 0..k {
-            py[r + j] += v * x[c + j];
-        }
-    }
-    if alpha != 1.0 {
-        for v in &mut py {
-            *v *= alpha;
-        }
-    }
-    py
-}
-
-/// CPU reference execution of one task's stream (alpha applied, like the
-/// device kernel). Iterator zips elide the three stream bounds checks
-/// (§Perf: ~15% on the 1M-nnz CpuRef path).
-fn cpu_partial(t: &super::partitioner::GpuTask, x: &[f32], alpha: f32) -> Vec<f32> {
-    let mut py = vec![0.0f32; t.out_len];
-    for ((&v, &c), &r) in t.val.iter().zip(&t.col_idx).zip(&t.row_idx) {
-        py[r as usize] += v * x[c as usize];
-    }
-    if alpha != 1.0 {
-        for v in &mut py {
-            *v *= alpha;
-        }
-    }
-    py
 }
 
 #[cfg(test)]

@@ -296,6 +296,61 @@ mod tests {
         }
     }
 
+    /// A bare task that owns rows `[off, off+len)` — only the fields
+    /// [`merge`]/[`merge_k`] actually read are meaningful.
+    fn stub_task(gpu: usize, off: usize, len: usize, class: MergeClass, overlaps: bool) -> GpuTask {
+        GpuTask {
+            gpu,
+            val: vec![],
+            col_idx: vec![],
+            row_idx: vec![],
+            out_len: len,
+            out_offset: off,
+            x_len: 0,
+            overlaps_prev: overlaps,
+            merge: class,
+            rewrite_ops: 0,
+        }
+    }
+
+    #[test]
+    fn merge_accumulation_order_is_pinned_left_associated_ascending() {
+        // f32 addition is not associative: (1e8 + -1e8) + 1 == 1, but
+        // 1e8 + (-1e8 + 1) == 0 (−1e8+1 rounds back to −1e8 at f32
+        // precision). The merge contract — relied on by the determinism
+        // suite and the measured backend's bitwise-equality guarantee —
+        // is a LEFT-ASSOCIATED fold in ascending task (GPU) order,
+        // whatever order the worker threads finished in. Pin it.
+        let (a, b, c) = (1e8f32, -1e8f32, 1.0f32);
+        let left = (a + b) + c;
+        let right = a + (b + c);
+        assert_ne!(left.to_bits(), right.to_bits(), "triple no longer discriminates orderings");
+
+        // column-based: three full-length partials summed into y
+        let tasks: Vec<GpuTask> =
+            (0..3).map(|g| stub_task(g, 0, 1, MergeClass::ColBased, false)).collect();
+        let partials = vec![vec![a], vec![b], vec![c]];
+        let mut y = vec![0.0f32; 1];
+        merge(&tasks, &partials, 0.0, &mut y).unwrap();
+        assert_eq!(y[0].to_bits(), left.to_bits(), "col-based merge broke the pinned order");
+
+        // row-based: three tasks sharing one boundary row accumulate in
+        // the same pinned order
+        let tasks: Vec<GpuTask> =
+            (0..3).map(|g| stub_task(g, 0, 1, MergeClass::RowBased, g > 0)).collect();
+        let mut y = vec![0.0f32; 1];
+        merge(&tasks, &partials, 0.0, &mut y).unwrap();
+        assert_eq!(y[0].to_bits(), left.to_bits(), "row-based merge broke the pinned order");
+
+        // k-wide path follows the same contract, per column
+        let k = 2;
+        let partials_k = vec![vec![a, c], vec![b, b], vec![c, a]];
+        let mut y = vec![0.0f32; k];
+        merge_k(&tasks, &partials_k, 0.0, &mut y, k).unwrap();
+        assert_eq!(y[0].to_bits(), ((a + b) + c).to_bits());
+        assert_eq!(y[1].to_bits(), ((c + b) + a).to_bits());
+    }
+
     #[test]
     fn beta_applied_once_with_overlaps() {
         let coo = gen::power_law(100, 100, 3_000, 1.5, 11);

@@ -30,6 +30,10 @@ pub struct Metrics {
     pub measured_exec: f64,
     /// wall seconds spent merging
     pub measured_merge: f64,
+    /// per-GPU kernel wall seconds from the measured backend's worker
+    /// threads ([`crate::exec`], DESIGN.md §14) — empty on the modeled
+    /// backends, one entry per simulated GPU otherwise
+    pub measured_busy: Vec<f64>,
 
     // ---- traffic ----
     /// total host→device bytes

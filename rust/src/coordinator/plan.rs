@@ -127,9 +127,9 @@ impl PartitionPlan {
         // charged in addition since both passes really run
         let search_ops =
             if bounds.is_some() { 0 } else { partitioner::search_ops(a, np, strategy) };
-        let t_boundary = model::cpu_search_time(search_ops)
+        let t_boundary = model::cpu_search_time(&cfg.platform, search_ops)
             + if weights.is_some() {
-                model::cpu_rewrite_time(a.nnz() as u64)
+                model::cpu_rewrite_time(&cfg.platform, a.nnz() as u64)
             } else {
                 0.0
             };
@@ -137,9 +137,9 @@ impl PartitionPlan {
         let rewrite_max: u64 = tasks.iter().map(|t| t.rewrite_ops).max().unwrap_or(0);
         let t_partition = match cfg.mode {
             // single thread does everything
-            Mode::Baseline => t_boundary + model::cpu_rewrite_time(rewrite_total),
+            Mode::Baseline => t_boundary + model::cpu_rewrite_time(&cfg.platform, rewrite_total),
             // np threads rewrite concurrently
-            Mode::PStar => t_boundary + model::cpu_rewrite_time(rewrite_max),
+            Mode::PStar => t_boundary + model::cpu_rewrite_time(&cfg.platform, rewrite_max),
             // rewrite offloaded to the GPUs, hidden under the mandatory H2D
             // (§4.1) — only the launch remains
             Mode::PStarOpt => t_boundary + model::gpu_pointer_rewrite_time(&cfg.platform),
@@ -329,8 +329,9 @@ mod tests {
         // on top of them
         assert!(nnz_plan.search_ops > 0);
         assert_eq!(flop_plan.search_ops, 0);
-        let scan = model::cpu_rewrite_time(mat.nnz() as u64);
-        let searches = model::cpu_search_time(nnz_plan.search_ops);
+        let p = &cfg(4).platform;
+        let scan = model::cpu_rewrite_time(p, mat.nnz() as u64);
+        let searches = model::cpu_search_time(p, nnz_plan.search_ops);
         let diff = flop_plan.t_partition - (nnz_plan.t_partition - searches + scan);
         assert!(diff.abs() < 1e-15, "weighted charge off by {diff}");
     }

@@ -105,6 +105,7 @@ pub fn scaleout_spmv(cluster: &Cluster, csr: &Csr, scheme: ScaleOutScheme) -> Re
             let per_gpu_nnz = node_nnz.div_ceil(gpus as u64);
             let per_gpu_rows = rows.div_ceil(gpus as u64);
             let t_part = model::cpu_search_time(
+                p,
                 2 * gpus as u64 * (rows.max(2) as f64).log2().ceil() as u64,
             ) + model::gpu_pointer_rewrite_time(p);
             let h2d: Vec<u64> = (0..gpus)
@@ -125,7 +126,7 @@ pub fn scaleout_spmv(cluster: &Cluster, csr: &Csr, scheme: ScaleOutScheme) -> Re
             let t_merge = model::concurrent_d2h_times(p, &d2h, &src)
                 .into_iter()
                 .fold(0.0, f64::max)
-                + model::cpu_fixup_time(gpus);
+                + model::cpu_fixup_time(p, gpus);
             t_part + t_h2d + t_kernel + t_merge
         })
         .fold(0.0, f64::max);

@@ -1,0 +1,167 @@
+//! Measured multi-threaded execution backend (DESIGN.md §14).
+//!
+//! [`Backend::Measured`](crate::coordinator::Backend) runs the engine's
+//! partitioned kernels on one worker thread per simulated GPU (the same
+//! [`crate::coordinator::worker::run_per_gpu`] fan-out the modeled CpuRef
+//! path uses, §3.3) and keeps the **per-worker wall-clock** alongside the
+//! results. The modeled timeline still prices the simulated platform; the
+//! measured walls ride the parallel `Measured` observability lane
+//! ([`crate::obs::Track::Measured`]) and the
+//! [`Metrics::measured_busy`](crate::coordinator::Metrics::measured_busy)
+//! field, where the calibration harness ([`calibrate`]) fits the sim
+//! constants ([`crate::sim::SimConstants`]) against them.
+//!
+//! The kernels themselves live here — [`cpu_partial`] / [`cpu_partial_k`]
+//! — and are shared by *both* CPU backends, so the measured and modeled
+//! paths are numerically byte-identical by construction: same kernel, same
+//! per-GPU fan-out, same fixed-order merge
+//! ([`crate::coordinator::merge::merge`]). The differential suite
+//! (`tests/exec_integration.rs`) pins that equality bitwise.
+
+pub mod calibrate;
+
+use crate::coordinator::partitioner::GpuTask;
+use crate::coordinator::worker;
+
+/// Results of one measured per-GPU kernel fan-out: partials in GPU order
+/// plus the honest per-worker and whole-fan wall times.
+#[derive(Debug)]
+pub struct MeasuredFan {
+    /// per-GPU partial results, in GPU order (thread-schedule independent)
+    pub partials: Vec<Vec<f32>>,
+    /// per-GPU busy seconds (each worker's own kernel wall)
+    pub busy: Vec<f64>,
+    /// wall seconds for the whole fan-out (spawn → last join)
+    pub wall: f64,
+}
+
+/// Reference execution of one task's element stream: `py[r] += v * x[c]`
+/// over the task's (val, col, row) triples, then alpha applied once, like
+/// the device kernel. Iterator zips elide the three stream bounds checks
+/// (§Perf: ~15% on the 1M-nnz CPU path).
+pub fn cpu_partial(t: &GpuTask, x: &[f32], alpha: f32) -> Vec<f32> {
+    let mut py = vec![0.0f32; t.out_len];
+    for ((&v, &c), &r) in t.val.iter().zip(&t.col_idx).zip(&t.row_idx) {
+        py[r as usize] += v * x[c as usize];
+    }
+    if alpha != 1.0 {
+        for v in &mut py {
+            *v *= alpha;
+        }
+    }
+    py
+}
+
+/// Reference K-wide execution of one task (row-major `(out_len, k)`
+/// partial): the SpMM kernel the engine decomposes batched requests into.
+pub fn cpu_partial_k(t: &GpuTask, x: &[f32], k: usize, alpha: f32) -> Vec<f32> {
+    let mut py = vec![0.0f32; t.out_len * k];
+    for e in 0..t.nnz() {
+        let r = t.row_idx[e] as usize * k;
+        let c = t.col_idx[e] as usize * k;
+        let v = t.val[e];
+        for j in 0..k {
+            py[r + j] += v * x[c + j];
+        }
+    }
+    if alpha != 1.0 {
+        for v in &mut py {
+            *v *= alpha;
+        }
+    }
+    py
+}
+
+/// Execute every task's SpMV kernel on the per-GPU fan-out and measure it.
+///
+/// `threaded == true` spawns one scoped std thread per task (p\*'s
+/// one-CPU-thread-per-GPU management); `false` runs them back-to-back on
+/// the caller (the Baseline's single managing thread). Either way the
+/// partials come back in GPU order, so downstream merging is independent
+/// of the thread schedule.
+pub fn run_spmv(tasks: &[GpuTask], x: &[f32], alpha: f32, threaded: bool) -> MeasuredFan {
+    let fan = worker::run_per_gpu(tasks.len(), threaded, |g| cpu_partial(&tasks[g], x, alpha));
+    MeasuredFan { partials: fan.results, busy: fan.busy, wall: fan.wall }
+}
+
+/// Execute every task's K-wide SpMM kernel on the per-GPU fan-out and
+/// measure it (see [`run_spmv`]).
+pub fn run_spmm(tasks: &[GpuTask], x: &[f32], k: usize, alpha: f32, threaded: bool) -> MeasuredFan {
+    let fan = worker::run_per_gpu(tasks.len(), threaded, |g| cpu_partial_k(&tasks[g], x, k, alpha));
+    MeasuredFan { partials: fan.results, busy: fan.busy, wall: fan.wall }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partitioner::balanced;
+    use crate::formats::{convert, gen, Matrix};
+
+    fn tasks_for(np: usize) -> Vec<GpuTask> {
+        let coo = gen::power_law(400, 400, 8_000, 2.0, 91);
+        let mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)));
+        balanced(&mat, np).unwrap().tasks
+    }
+
+    #[test]
+    fn threaded_and_serial_fans_agree_bitwise() {
+        let tasks = tasks_for(4);
+        let x = gen::dense_vector(400, 92);
+        let serial = run_spmv(&tasks, &x, 1.3, false);
+        let threaded = run_spmv(&tasks, &x, 1.3, true);
+        assert_eq!(serial.partials, threaded.partials);
+        assert_eq!(serial.busy.len(), 4);
+        assert_eq!(threaded.busy.len(), 4);
+        assert!(serial.wall >= 0.0 && threaded.wall >= 0.0);
+    }
+
+    #[test]
+    fn fan_partials_match_direct_kernel_calls() {
+        let tasks = tasks_for(3);
+        let x = gen::dense_vector(400, 93);
+        let fan = run_spmv(&tasks, &x, 0.7, true);
+        for (t, p) in tasks.iter().zip(&fan.partials) {
+            assert_eq!(p, &cpu_partial(t, &x, 0.7));
+        }
+    }
+
+    #[test]
+    fn k_wide_fan_matches_k_stacked_spmv_columns() {
+        let k = 3;
+        let tasks = tasks_for(2);
+        let x: Vec<f32> = (0..400 * k).map(|i| ((i * 31) % 17) as f32 * 0.1 - 0.8).collect();
+        let fan = run_spmm(&tasks, &x, k, 1.1, true);
+        for (t, p) in tasks.iter().zip(&fan.partials) {
+            assert_eq!(p.len(), t.out_len * k);
+            for j in 0..k {
+                let xj: Vec<f32> = (0..400).map(|i| x[i * k + j]).collect();
+                let col = cpu_partial(t, &xj, 1.1);
+                for r in 0..t.out_len {
+                    assert_eq!(p[r * k + j], col[r], "gpu {} row {r} col {j}", t.gpu);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn busy_times_are_finite_and_nonnegative() {
+        let tasks = tasks_for(8);
+        let x = gen::dense_vector(400, 94);
+        for threaded in [false, true] {
+            let fan = run_spmv(&tasks, &x, 1.0, threaded);
+            assert!(fan.busy.iter().all(|b| b.is_finite() && *b >= 0.0));
+            assert!(fan.wall.is_finite() && fan.wall >= 0.0);
+        }
+    }
+
+    #[test]
+    fn alpha_one_skips_scaling_but_matches_scaled_path() {
+        let tasks = tasks_for(1);
+        let x = gen::dense_vector(400, 95);
+        let base = cpu_partial(&tasks[0], &x, 1.0);
+        let doubled = cpu_partial(&tasks[0], &x, 2.0);
+        for (a, b) in base.iter().zip(&doubled) {
+            assert_eq!(*b, *a * 2.0);
+        }
+    }
+}

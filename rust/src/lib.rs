@@ -82,11 +82,19 @@
 //! and a per-GPU ASCII Gantt view — see DESIGN.md §13 and the
 //! `msrep trace` subcommand.
 
+//! The modeled clock is kept honest by [`exec`]: a measured multi-threaded
+//! execution backend (`--backend measured`) that runs the partitioned
+//! kernels on one worker thread per simulated GPU and records real
+//! wall-clock phases, plus a calibration harness ([`exec::calibrate`],
+//! `msrep calibrate`) that refits the cost-model constants
+//! ([`sim::SimConstants`]) against those measurements — see DESIGN.md §14.
+
 #![warn(missing_docs)]
 
 pub mod autoplan;
 pub mod coordinator;
 pub mod error;
+pub mod exec;
 pub mod formats;
 pub mod obs;
 pub mod report;

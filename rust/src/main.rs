@@ -12,6 +12,7 @@
 //! msrep spgemm-bench ...                   flop-balanced multi-GPU SpGEMM
 //! msrep sptrsv-bench ...                   level-scheduled triangular solves
 //! msrep trace --scenario small ...         traced tour of every subsystem
+//! msrep calibrate --quick ...              fit sim constants to measured walls
 //! ```
 //!
 //! The paper-figure regeneration lives in `cargo bench` /
@@ -57,6 +58,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "sptrsv-bench" => cmd_sptrsv_bench(rest),
         "autoplan-bench" => cmd_autoplan_bench(rest),
         "trace" => cmd_trace(rest),
+        "calibrate" => cmd_calibrate(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -64,7 +66,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         other => Err(Error::Usage(format!(
             "unknown command '{other}' (expected info | gen | profile | partition | run | \
              suite | serve-bench | solver-bench | spgemm-bench | sptrsv-bench | \
-             autoplan-bench | trace; try `msrep help`)"
+             autoplan-bench | trace | calibrate; try `msrep help`)"
         ))),
     }
 }
@@ -92,7 +94,10 @@ fn print_usage() {
          (--help for flags)\n\
          \x20 trace       run a traced tour of every subsystem (SpMV, SpGEMM, \
          SpTRSV, CG, serving) and export the span timeline as Chrome \
-         trace-event JSON + an ASCII Gantt (--help for flags)\n"
+         trace-event JSON + an ASCII Gantt (--help for flags)\n\
+         \x20 calibrate   replay the workload suites on the measured backend \
+         and least-squares fit the sim constants against the recorded walls, \
+         emitting BENCH_calibration.json (--help for flags)\n"
     );
 }
 
@@ -258,7 +263,7 @@ fn run_parser() -> Parser {
         .flag("gpus", "GPUs to use", None)
         .flag("mode", "baseline | pstar | popt", Some("popt"))
         .flag("format", "csr | csc | coo", Some("csr"))
-        .flag("backend", "pjrt | cpu", Some("pjrt"))
+        .flag("backend", "pjrt | cpu | measured", Some("pjrt"))
         .flag("alpha", "alpha scalar", Some("1.0"))
         .flag("beta", "beta scalar", Some("0.0"))
         .flag("iters", "SpMV iterations", Some("1"))
@@ -281,11 +286,8 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         .ok_or_else(|| Error::Usage("bad --mode".into()))?;
     let format = FormatKind::parse(&a.str_or("format", "csr"))
         .ok_or_else(|| Error::Usage("bad --format".into()))?;
-    let backend = match a.str_or("backend", "pjrt").as_str() {
-        "pjrt" => Backend::Pjrt,
-        "cpu" => Backend::CpuRef,
-        other => return Err(Error::Usage(format!("unknown backend '{other}'"))),
-    };
+    let backend = Backend::parse(&a.str_or("backend", "pjrt"))
+        .ok_or_else(|| Error::Usage("bad --backend (expected pjrt | cpu | measured)".into()))?;
     let mat = to_format(load_matrix(&a)?, format);
     let alpha = a.f64_or("alpha", 1.0)? as f32;
     let beta = a.f64_or("beta", 0.0)? as f32;
@@ -355,6 +357,15 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         format_duration_s(mm.measured_exec),
         format_duration_s(mm.measured_merge),
     );
+    if !mm.measured_busy.is_empty() {
+        let busy: Vec<String> = mm
+            .measured_busy
+            .iter()
+            .enumerate()
+            .map(|(g, &b)| format!("gpu{g} {}", format_duration_s(b)))
+            .collect();
+        println!("measured per-GPU kernel walls: {}", busy.join(" | "));
+    }
 
     if a.is_set("timeline") {
         println!();
@@ -529,6 +540,7 @@ fn solver_parser() -> Parser {
         .flag("gpus", "GPUs to use", None)
         .flag("mode", "baseline | pstar | popt", Some("popt"))
         .flag("format", "csr | csc | coo (CG/Jacobi input format)", Some("csr"))
+        .flag("backend", "cpu | measured (identical numerics, measured adds walls)", Some("cpu"))
         .flag(
             "method",
             "cg | pcg (ILU(0) on the Poisson stencil) | jacobi | power | pagerank | all",
@@ -605,12 +617,14 @@ fn cmd_solver_bench(argv: Vec<String>) -> Result<()> {
         return Err(Error::Usage("--dominance must be > 1 (the SPD certificate is strict)".into()));
     }
     let damping = a.f64_or("damping", 0.85)? as f32;
+    let backend = Backend::parse(&a.str_or("backend", "cpu"))
+        .ok_or_else(|| Error::Usage("bad --backend (expected cpu | measured)".into()))?;
     let mut engine = Engine::new(RunConfig {
         platform,
         num_gpus,
         mode,
         format,
-        backend: Backend::CpuRef,
+        backend,
         numa_aware: None,
         strategy_override: None,
     })?;
@@ -619,11 +633,12 @@ fn cmd_solver_bench(argv: Vec<String>) -> Result<()> {
         engine.set_recorder(recorder.clone());
     }
     println!(
-        "solver-bench: {} x {} GPUs, mode {}, plan source {}\n",
+        "solver-bench: {} x {} GPUs, mode {}, plan source {}, backend {}\n",
         engine.config().platform.name,
         num_gpus,
         mode.label(),
-        source.label()
+        source.label(),
+        backend.label()
     );
 
     let mut summary = Table::new([
@@ -1264,6 +1279,55 @@ fn export_trace(recorder: &msrep::obs::TraceRecorder, path: &str) -> Result<()> 
         trace.len(),
         trace.tracks().len()
     );
+    Ok(())
+}
+
+fn calibrate_parser() -> Parser {
+    Parser::new()
+        .flag("np", "comma-separated GPU counts to replay", Some("1,2,4,8"))
+        .flag("k", "SpMM right-hand sides", Some("8"))
+        .flag("out", "calibration report JSON path", Some("BENCH_calibration.json"))
+        .bool_flag("quick", "smoke grid: 2 SpMV suite entries, 1 SpMM entry")
+}
+
+fn cmd_calibrate(argv: Vec<String>) -> Result<()> {
+    let p = calibrate_parser();
+    if argv.iter().any(|a| a == "--help") {
+        println!(
+            "msrep calibrate — fit the sim constants against measured-backend walls\n{}",
+            p.help()
+        );
+        return Ok(());
+    }
+    let a = p.parse(argv)?;
+    let np_grid: Vec<usize> = a
+        .str_or("np", "1,2,4,8")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| Error::Usage(format!("bad --np entry '{s}'")))
+        })
+        .collect::<Result<_>>()?;
+    if np_grid.is_empty() {
+        return Err(Error::Usage("--np needs at least one GPU count".into()));
+    }
+    let opts = msrep::exec::calibrate::CalibrationOptions {
+        np_grid,
+        quick: a.is_set("quick"),
+        spmm_k: a.usize_or("k", 8)?.max(1),
+        nnz_scale: 1.0,
+    };
+    println!(
+        "calibrate: dgx1, mode p*, measured backend, np {:?}{}\n",
+        opts.np_grid,
+        if opts.quick { " (quick grid)" } else { "" }
+    );
+    let report = msrep::exec::calibrate::calibrate(&opts)?;
+    print!("{}", report.render());
+    let out = a.str_or("out", "BENCH_calibration.json");
+    std::fs::write(&out, report.to_json())?;
+    println!("wrote calibration report to {out}");
     Ok(())
 }
 

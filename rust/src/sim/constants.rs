@@ -1,0 +1,151 @@
+//! Calibratable cost-model constants (DESIGN.md §14).
+//!
+//! The analytic model of [`super::model`] used to hard-code its efficiency
+//! and per-op cost constants. They now live in one [`SimConstants`] struct
+//! embedded in every [`super::Platform`], so the calibration harness
+//! ([`crate::exec::calibrate`]) can fit them against measured wall-clock
+//! phases and re-price the same scenarios without touching any call site.
+//! `SimConstants::default()` reproduces the historical constants bitwise —
+//! every modeled number in the repo is unchanged until a calibration is
+//! explicitly applied.
+
+use crate::error::{Error, Result};
+use crate::formats::FormatKind;
+
+/// Default fraction of host memory bandwidth divisor for single-threaded
+/// CPU merge streams (read `np` vectors + write one at `host_mem_bw / 4`).
+pub const DEFAULT_MERGE_BW_DIVISOR: f64 = 4.0;
+
+/// Default multiplier on the SpTRSV inter-level broadcast barrier
+/// ([`super::model::sptrsv_sync_time`]); 1.0 = the uncalibrated model.
+pub const DEFAULT_SPTRSV_SYNC_SCALE: f64 = 1.0;
+
+/// The calibratable constants of the analytic cost model.
+///
+/// Kernel efficiencies are fractions of HBM bandwidth in `(0, 1]`;
+/// per-op costs are seconds per operation; scale factors are positive
+/// multipliers. [`SimConstants::validate`] enforces those bounds — the
+/// calibration fitter clamps into them before a fit is ever applied.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConstants {
+    /// HBM efficiency of the CSR SpMV kernel (cuSparse csrmv class).
+    pub csr_efficiency: f64,
+    /// HBM efficiency of the CSC (transposed-CSR) SpMV kernel.
+    pub csc_efficiency: f64,
+    /// HBM efficiency of the COO SpMV kernel (scattered atomics).
+    pub coo_efficiency: f64,
+    /// HBM efficiency of the hash-based SpGEMM kernels.
+    pub spgemm_efficiency: f64,
+    /// HBM efficiency of the level-scheduled SpTRSV wavefront kernel.
+    pub sptrsv_efficiency: f64,
+    /// Multiplier on the SpTRSV inter-level broadcast barrier.
+    pub sptrsv_sync_scale: f64,
+    /// Host merge streams run at `host_mem_bw / merge_bw_divisor`
+    /// (single-threaded share of the socket bandwidth).
+    pub merge_bw_divisor: f64,
+    /// CPU cost of one binary-search step during boundary finding (s).
+    pub cpu_search_op_s: f64,
+    /// CPU cost per element of a sequential pointer/index rewrite (s).
+    pub cpu_rewrite_op_s: f64,
+    /// CPU cost of one boundary-row overlap fix-up during the row merge (s).
+    pub cpu_fixup_op_s: f64,
+}
+
+impl Default for SimConstants {
+    fn default() -> Self {
+        SimConstants {
+            csr_efficiency: super::model::kernel_efficiency(FormatKind::Csr),
+            csc_efficiency: super::model::kernel_efficiency(FormatKind::Csc),
+            coo_efficiency: super::model::kernel_efficiency(FormatKind::Coo),
+            spgemm_efficiency: super::model::SPGEMM_EFFICIENCY,
+            sptrsv_efficiency: super::model::SPTRSV_EFFICIENCY,
+            sptrsv_sync_scale: DEFAULT_SPTRSV_SYNC_SCALE,
+            merge_bw_divisor: DEFAULT_MERGE_BW_DIVISOR,
+            cpu_search_op_s: super::model::CPU_SEARCH_OP_S,
+            cpu_rewrite_op_s: super::model::CPU_REWRITE_OP_S,
+            cpu_fixup_op_s: super::model::CPU_FIXUP_OP_S,
+        }
+    }
+}
+
+impl SimConstants {
+    /// Per-format SpMV/SpMM kernel efficiency.
+    pub fn kernel_efficiency(&self, format: FormatKind) -> f64 {
+        match format {
+            FormatKind::Csr => self.csr_efficiency,
+            FormatKind::Csc => self.csc_efficiency,
+            FormatKind::Coo => self.coo_efficiency,
+        }
+    }
+
+    /// Enforce the documented bounds: efficiencies in `(0, 1]`, everything
+    /// else strictly positive and finite.
+    pub fn validate(&self) -> Result<()> {
+        let efficiencies = [
+            ("csr_efficiency", self.csr_efficiency),
+            ("csc_efficiency", self.csc_efficiency),
+            ("coo_efficiency", self.coo_efficiency),
+            ("spgemm_efficiency", self.spgemm_efficiency),
+            ("sptrsv_efficiency", self.sptrsv_efficiency),
+        ];
+        for (name, e) in efficiencies {
+            if !(e > 0.0 && e <= 1.0) {
+                return Err(Error::Platform(format!(
+                    "{name} must be in (0, 1], got {e}"
+                )));
+            }
+        }
+        let positives = [
+            ("sptrsv_sync_scale", self.sptrsv_sync_scale),
+            ("merge_bw_divisor", self.merge_bw_divisor),
+            ("cpu_search_op_s", self.cpu_search_op_s),
+            ("cpu_rewrite_op_s", self.cpu_rewrite_op_s),
+            ("cpu_fixup_op_s", self.cpu_fixup_op_s),
+        ];
+        for (name, v) in positives {
+            if !(v > 0.0 && v.is_finite()) {
+                return Err(Error::Platform(format!(
+                    "{name} must be positive and finite, got {v}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_reproduce_historical_constants() {
+        let c = SimConstants::default();
+        assert_eq!(c.kernel_efficiency(FormatKind::Csr), 0.65);
+        assert_eq!(c.kernel_efficiency(FormatKind::Csc), 0.55);
+        assert_eq!(c.kernel_efficiency(FormatKind::Coo), 0.50);
+        assert_eq!(c.spgemm_efficiency, 0.35);
+        assert_eq!(c.sptrsv_efficiency, 0.40);
+        assert_eq!(c.sptrsv_sync_scale, 1.0);
+        assert_eq!(c.merge_bw_divisor, 4.0);
+        assert_eq!(c.cpu_search_op_s, 25e-9);
+        assert_eq!(c.cpu_rewrite_op_s, 1.5e-9);
+        assert_eq!(c.cpu_fixup_op_s, 50e-9);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_out_of_bound_constants() {
+        let mut c = SimConstants::default();
+        c.csr_efficiency = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = SimConstants::default();
+        c.coo_efficiency = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = SimConstants::default();
+        c.merge_bw_divisor = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = SimConstants::default();
+        c.cpu_fixup_op_s = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+}

@@ -20,10 +20,12 @@
 //! outputs are seconds (f64).
 
 pub mod cluster;
+pub mod constants;
 pub mod memory;
 pub mod model;
 mod platform;
 
 pub use cluster::Cluster;
+pub use constants::SimConstants;
 pub use memory::DeviceMemory;
 pub use platform::{HostLink, Platform};

@@ -15,14 +15,22 @@
 //!    per GPU and transfers proceed concurrently (§3.3).
 //!
 //! All functions take bytes and return seconds.
+//!
+//! Every tunable constant below is a **default**: the live value comes
+//! from the platform's embedded [`crate::sim::SimConstants`]
+//! (`p.consts`), which the calibration harness
+//! ([`crate::exec::calibrate`]) can refit against measured wall-clock
+//! phases (DESIGN.md §14). `SimConstants::default()` reproduces these
+//! values bitwise.
 
 use super::platform::Platform;
 use crate::formats::FormatKind;
 
-/// Effective fraction of HBM bandwidth a tuned single-GPU SpMV kernel
-/// achieves per format. CSR (cuSparse csrmv) is the best case; CSC is run
-/// as transposed CSR (paper §5.1) with a small penalty; COO pays scattered
-/// atomics.
+/// Default effective fraction of HBM bandwidth a tuned single-GPU SpMV
+/// kernel achieves per format. CSR (cuSparse csrmv) is the best case; CSC
+/// is run as transposed CSR (paper §5.1) with a small penalty; COO pays
+/// scattered atomics. The live per-platform value is
+/// `p.consts.kernel_efficiency(format)`.
 pub fn kernel_efficiency(format: FormatKind) -> f64 {
     match format {
         FormatKind::Csr => 0.65,
@@ -48,7 +56,7 @@ pub fn spmv_partition_bytes(nnz: u64, rows: u64, cols: u64, format: FormatKind) 
 /// Device SpMV kernel time for one partition (V100, memory-bound model).
 pub fn spmv_kernel_time(p: &Platform, nnz: u64, rows: u64, cols: u64, format: FormatKind) -> f64 {
     let bytes = spmv_partition_bytes(nnz, rows, cols, format) as f64;
-    p.launch_latency + bytes / (p.hbm_bw * kernel_efficiency(format))
+    p.launch_latency + bytes / (p.hbm_bw * p.consts.kernel_efficiency(format))
 }
 
 /// Device SpMM kernel time: the sparse stream is read once; the dense
@@ -68,13 +76,13 @@ pub fn spmm_kernel_time(
         FormatKind::Coo => nnz * 12,
     };
     let bytes = (stream + (cols * 4 + rows * 4) * k) as f64;
-    p.launch_latency + bytes / (p.hbm_bw * kernel_efficiency(format))
+    p.launch_latency + bytes / (p.hbm_bw * p.consts.kernel_efficiency(format))
 }
 
-/// Effective fraction of HBM bandwidth a hash-based SpGEMM kernel
+/// Default effective fraction of HBM bandwidth a hash-based SpGEMM kernel
 /// achieves: roughly half of the streaming SpMV efficiency, because the
 /// accumulator traffic is scattered (Yang/Buluç/Owens report hash SpGEMM
-/// well below the streaming roofline).
+/// well below the streaming roofline). Live value: `p.consts.spgemm_efficiency`.
 pub const SPGEMM_EFFICIENCY: f64 = 0.35;
 
 /// Upload payload bytes for one GPU's SpGEMM partition: its A stream
@@ -93,7 +101,7 @@ pub fn spgemm_partition_bytes(a_nnz: u64, b_nnz: u64, b_rows: u64) -> u64 {
 /// per-row hash set.
 pub fn spgemm_symbolic_time(p: &Platform, a_nnz: u64, flops: u64) -> f64 {
     let bytes = (a_nnz * 12 + flops * 4) as f64;
-    p.launch_latency + bytes / (p.hbm_bw * SPGEMM_EFFICIENCY)
+    p.launch_latency + bytes / (p.hbm_bw * p.consts.spgemm_efficiency)
 }
 
 /// Numeric-phase kernel time for one partition: re-stream A, read one B
@@ -108,7 +116,7 @@ pub fn spgemm_numeric_time(p: &Platform, a_nnz: u64, flops: u64, c_nnz: u64) -> 
     let cf = if flops == 0 { 1.0 } else { c_nnz as f64 / flops as f64 };
     let stream = (a_nnz * 12 + flops * 8 + c_nnz * 8) as f64;
     let accumulator = flops as f64 * 8.0 * (1.0 + cf);
-    p.launch_latency + (stream + accumulator) / (p.hbm_bw * SPGEMM_EFFICIENCY)
+    p.launch_latency + (stream + accumulator) / (p.hbm_bw * p.consts.spgemm_efficiency)
 }
 
 /// CPU-side merge of sparse partial-C blocks (the column-split /
@@ -116,13 +124,14 @@ pub fn spgemm_numeric_time(p: &Platform, a_nnz: u64, flops: u64, c_nnz: u64) -> 
 /// bytes plus the write of the merged result, at the same 1/4-socket
 /// single-thread bandwidth as [`cpu_vector_sum_time`].
 pub fn cpu_sparse_sum_time(p: &Platform, partial_bytes_total: u64, out_bytes: u64) -> f64 {
-    (partial_bytes_total + out_bytes) as f64 / (p.host_mem_bw / 4.0)
+    (partial_bytes_total + out_bytes) as f64 / (p.host_mem_bw / p.consts.merge_bw_divisor)
 }
 
-/// Effective fraction of HBM bandwidth a level-scheduled SpTRSV wavefront
-/// kernel achieves: below SpMV because every multiply gathers an x entry
-/// written by an *earlier* wavefront (dependent, scattered reads) and the
-/// per-row division serializes the tail of each row.
+/// Default effective fraction of HBM bandwidth a level-scheduled SpTRSV
+/// wavefront kernel achieves: below SpMV because every multiply gathers an
+/// x entry written by an *earlier* wavefront (dependent, scattered reads)
+/// and the per-row division serializes the tail of each row. Live value:
+/// `p.consts.sptrsv_efficiency`.
 pub const SPTRSV_EFFICIENCY: f64 = 0.40;
 
 /// One SpTRSV wavefront's kernel time on one GPU: stream the level's rows
@@ -134,7 +143,7 @@ pub fn sptrsv_level_time(p: &Platform, nnz: u64, rows: u64) -> f64 {
         return 0.0;
     }
     let bytes = (nnz * 12 + rows * 8) as f64;
-    p.launch_latency + bytes / (p.hbm_bw * SPTRSV_EFFICIENCY)
+    p.launch_latency + bytes / (p.hbm_bw * p.consts.sptrsv_efficiency)
 }
 
 /// Inter-level barrier of the level-scheduled solve: the wavefront's newly
@@ -147,7 +156,7 @@ pub fn sptrsv_sync_time(p: &Platform, np: usize, frag_bytes: u64) -> f64 {
         return 0.0;
     }
     let rounds = (np as f64).log2().ceil();
-    rounds * (p.transfer_latency + frag_bytes as f64 / p.gpu_gpu_bw)
+    p.consts.sptrsv_sync_scale * (rounds * (p.transfer_latency + frag_bytes as f64 / p.gpu_gpu_bw))
 }
 
 /// COO→CSR conversion kernel the paper runs before cuSparse for COO inputs
@@ -248,35 +257,38 @@ pub fn gpu_tree_reduce_time(p: &Platform, np: usize, vec_bytes: u64) -> f64 {
 /// partitions"): np passes over the vector at host memory bandwidth.
 pub fn cpu_vector_sum_time(p: &Platform, np: usize, vec_bytes: u64) -> f64 {
     // read np vectors + write one, single-threaded stream ~ 1/4 of socket bw
-    ((np as u64 + 1) * vec_bytes) as f64 / (p.host_mem_bw / 4.0)
+    ((np as u64 + 1) * vec_bytes) as f64 / (p.host_mem_bw / p.consts.merge_bw_divisor)
 }
 
-/// Single-thread CPU cost of one binary-search step (pointer-chasing,
-/// cache-missy). Calibrated to ~POWER9/Xeon class cores.
+/// Default single-thread CPU cost of one binary-search step
+/// (pointer-chasing, cache-missy). Calibrated to ~POWER9/Xeon class cores.
+/// Live value: `p.consts.cpu_search_op_s`.
 pub const CPU_SEARCH_OP_S: f64 = 25e-9;
 
-/// Single-thread CPU cost per element of a sequential pointer/index
-/// rewrite (streaming subtract/copy — memory-bandwidth bound).
+/// Default single-thread CPU cost per element of a sequential pointer/index
+/// rewrite (streaming subtract/copy — memory-bandwidth bound). Live value:
+/// `p.consts.cpu_rewrite_op_s`.
 pub const CPU_REWRITE_OP_S: f64 = 1.5e-9;
 
-/// CPU cost of one boundary-row overlap fix-up during the row merge
-/// (a read-modify-write plus bookkeeping, §4.3).
+/// Default CPU cost of one boundary-row overlap fix-up during the row merge
+/// (a read-modify-write plus bookkeeping, §4.3). Live value:
+/// `p.consts.cpu_fixup_op_s`.
 pub const CPU_FIXUP_OP_S: f64 = 50e-9;
 
 /// Modeled CPU time for `ops` binary-search steps (Alg. 2/4/6 line 4–5).
-pub fn cpu_search_time(ops: u64) -> f64 {
-    ops as f64 * CPU_SEARCH_OP_S
+pub fn cpu_search_time(p: &Platform, ops: u64) -> f64 {
+    ops as f64 * p.consts.cpu_search_op_s
 }
 
 /// Modeled CPU time for `ops` pointer/index-rewrite elements (Alg. 2/4/6
 /// line 11–13 — the part p\*-opt offloads to the GPUs, §4.1).
-pub fn cpu_rewrite_time(ops: u64) -> f64 {
-    ops as f64 * CPU_REWRITE_OP_S
+pub fn cpu_rewrite_time(p: &Platform, ops: u64) -> f64 {
+    ops as f64 * p.consts.cpu_rewrite_op_s
 }
 
 /// Modeled CPU time for the `np`-bounded merge overlap fix-ups (§4.3).
-pub fn cpu_fixup_time(overlaps: usize) -> f64 {
-    overlaps as f64 * CPU_FIXUP_OP_S
+pub fn cpu_fixup_time(p: &Platform, overlaps: usize) -> f64 {
+    overlaps as f64 * p.consts.cpu_fixup_op_s
 }
 
 /// Pad a per-used-GPU array out to the platform's full GPU count with
@@ -547,6 +559,50 @@ mod tests {
             assert_eq!(loads.iter().sum::<u64>(), total, "np={np}");
             assert!(loads.iter().all(|&l| l <= total));
         }
+    }
+
+    #[test]
+    fn calibrated_constants_flow_through_every_priced_path() {
+        // the SimConstants embedded in the platform must be the live
+        // values: halving an efficiency doubles the bandwidth term, and
+        // the defaults reproduce the historical numbers bitwise
+        let p = Platform::dgx1();
+        let mut c = p.consts.clone();
+        c.csr_efficiency /= 2.0;
+        c.spgemm_efficiency /= 2.0;
+        c.sptrsv_efficiency /= 2.0;
+        c.sptrsv_sync_scale = 3.0;
+        c.merge_bw_divisor *= 2.0;
+        c.cpu_search_op_s *= 2.0;
+        c.cpu_rewrite_op_s *= 2.0;
+        c.cpu_fixup_op_s *= 2.0;
+        let q = p.with_consts(c);
+        assert!(
+            spmv_kernel_time(&q, 1 << 20, 1 << 10, 1 << 10, FormatKind::Csr)
+                > spmv_kernel_time(&p, 1 << 20, 1 << 10, 1 << 10, FormatKind::Csr)
+        );
+        assert!(
+            spmm_kernel_time(&q, 1 << 20, 1 << 10, 1 << 10, 8, FormatKind::Csc)
+                > spmm_kernel_time(&p, 1 << 20, 1 << 10, 1 << 10, 8, FormatKind::Csc)
+        );
+        assert!(spgemm_symbolic_time(&q, 1 << 20, 1 << 22) > spgemm_symbolic_time(&p, 1 << 20, 1 << 22));
+        assert!(
+            spgemm_numeric_time(&q, 1 << 20, 1 << 22, 1 << 21)
+                > spgemm_numeric_time(&p, 1 << 20, 1 << 22, 1 << 21)
+        );
+        assert!(sptrsv_level_time(&q, 1 << 16, 1 << 10) > sptrsv_level_time(&p, 1 << 16, 1 << 10));
+        let sync_p = sptrsv_sync_time(&p, 4, 1 << 12);
+        let sync_q = sptrsv_sync_time(&q, 4, 1 << 12);
+        assert!((sync_q / sync_p - 3.0).abs() < 1e-12, "sync scale is a pure multiplier");
+        assert_eq!(cpu_vector_sum_time(&q, 4, 1 << 20), 2.0 * cpu_vector_sum_time(&p, 4, 1 << 20));
+        assert_eq!(cpu_sparse_sum_time(&q, 1 << 20, 1 << 18), 2.0 * cpu_sparse_sum_time(&p, 1 << 20, 1 << 18));
+        assert_eq!(cpu_search_time(&q, 1000), 2.0 * cpu_search_time(&p, 1000));
+        assert_eq!(cpu_rewrite_time(&q, 1000), 2.0 * cpu_rewrite_time(&p, 1000));
+        assert_eq!(cpu_fixup_time(&q, 7), 2.0 * cpu_fixup_time(&p, 7));
+        // defaults reproduce the historical constants exactly
+        assert_eq!(cpu_search_time(&p, 1000), 1000.0 * CPU_SEARCH_OP_S);
+        assert_eq!(cpu_rewrite_time(&p, 1000), 1000.0 * CPU_REWRITE_OP_S);
+        assert_eq!(cpu_fixup_time(&p, 7), 7.0 * CPU_FIXUP_OP_S);
     }
 
     #[test]

@@ -2,6 +2,8 @@
 
 use crate::error::{Error, Result};
 
+use super::constants::SimConstants;
+
 /// How CPUs reach GPUs on this platform.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum HostLink {
@@ -45,6 +47,9 @@ pub struct Platform {
     pub launch_latency: f64,
     /// DMA transfer setup latency (s)
     pub transfer_latency: f64,
+    /// calibratable cost-model constants (defaults = the historical
+    /// hard-coded values; see [`SimConstants`] and DESIGN.md §14)
+    pub consts: SimConstants,
 }
 
 impl Platform {
@@ -72,6 +77,7 @@ impl Platform {
             // speedup shapes at reduced scale.
             launch_latency: 30e-9,
             transfer_latency: 40e-9,
+            consts: SimConstants::default(),
         }
     }
 
@@ -94,6 +100,7 @@ impl Platform {
             // scaled like the Summit preset (see comment there)
             launch_latency: 30e-9,
             transfer_latency: 45e-9,
+            consts: SimConstants::default(),
         }
     }
 
@@ -137,7 +144,15 @@ impl Platform {
         if positive.iter().any(|&b| b <= 0.0) {
             return Err(Error::Platform("bandwidths must be positive".into()));
         }
-        Ok(())
+        self.consts.validate()
+    }
+
+    /// A clone of this platform with different cost-model constants (the
+    /// calibration harness re-prices scenarios through this).
+    pub fn with_consts(&self, consts: SimConstants) -> Platform {
+        let mut p = self.clone();
+        p.consts = consts;
+        p
     }
 
     /// GPUs attached to a NUMA domain.
@@ -214,5 +229,18 @@ mod tests {
         let mut p = Platform::summit();
         p.hbm_bw = 0.0;
         assert!(p.validate().is_err());
+        let mut p = Platform::summit();
+        p.consts.csr_efficiency = 2.0;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn with_consts_swaps_only_the_constants() {
+        let mut c = SimConstants::default();
+        c.csr_efficiency = 0.5;
+        let p = Platform::dgx1().with_consts(c.clone());
+        assert_eq!(p.consts, c);
+        assert_eq!(p.num_gpus, 8);
+        p.validate().unwrap();
     }
 }

@@ -267,7 +267,7 @@ impl Engine {
         let t_merge = match (plan.merge_class, cfg.mode) {
             (MergeClass::RowBased, Mode::Baseline) => {
                 d2h.iter().map(|&bs| model::lone_transfer_time(p, bs)).sum::<f64>()
-                    + model::cpu_fixup_time(overlaps)
+                    + model::cpu_fixup_time(p, overlaps)
             }
             (MergeClass::RowBased, _) => {
                 model::concurrent_d2h_times(
@@ -277,7 +277,7 @@ impl Engine {
                 )
                 .into_iter()
                 .fold(0.0, f64::max)
-                    + model::cpu_fixup_time(overlaps)
+                    + model::cpu_fixup_time(p, overlaps)
             }
             (MergeClass::ColBased, Mode::PStarOpt) => {
                 // gather-reduce the sparse partials on the GPUs, then one

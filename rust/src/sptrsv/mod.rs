@@ -201,6 +201,14 @@ pub struct SptrsvMetrics {
     pub measured_partition: f64,
     /// wall seconds in the level-loop execution
     pub measured_exec: f64,
+    /// wall seconds inside the per-level kernel fan-outs (the share of
+    /// `measured_exec` the wavefront kernels account for) — the
+    /// `sptrsv_efficiency` fit target of [`crate::exec::calibrate`]
+    pub measured_levels: f64,
+    /// wall seconds in the inter-level x writebacks (the host-side
+    /// stand-in for the broadcast barrier) — the `sptrsv_sync_scale` fit
+    /// target of [`crate::exec::calibrate`]
+    pub measured_sync: f64,
 
     // ---- traffic ----
     /// total host→device bytes
@@ -283,9 +291,10 @@ impl Engine {
         // applies (§4.1 cost style)
         let t_partition = match split {
             SptrsvSplit::LevelBalanced => {
-                model::cpu_rewrite_time(csr.nnz() as u64) + model::cpu_rewrite_time(n as u64)
+                model::cpu_rewrite_time(&cfg.platform, csr.nnz() as u64)
+                    + model::cpu_rewrite_time(&cfg.platform, n as u64)
             }
-            SptrsvSplit::RowBlocks => model::cpu_rewrite_time(csr.nnz() as u64),
+            SptrsvSplit::RowBlocks => model::cpu_rewrite_time(&cfg.platform, csr.nnz() as u64),
         };
 
         Ok(SptrsvPlan {
@@ -387,6 +396,8 @@ impl Engine {
         }
 
         let exec_start = Instant::now();
+        let mut measured_levels = 0.0f64;
+        let mut measured_sync = 0.0f64;
         let mut x = vec![0.0f32; plan.n];
         for per_gpu in &plan.tasks {
             // tiny wavefronts don't amortize a thread fan-out (exactly as
@@ -395,11 +406,17 @@ impl Engine {
             let level_rows: usize = per_gpu.iter().map(|t| t.rows.len()).sum();
             let threaded = cfg.mode != Mode::Baseline && level_rows >= np * 8;
             let fan = worker::run_per_gpu(np, threaded, |g| solve_task(plan, &per_gpu[g], b, &x));
+            measured_levels += fan.wall;
+            // the x writeback is the host-side stand-in for the inter-level
+            // fragment broadcast — timed separately so the calibration
+            // harness can fit the kernel and sync constants independently
+            let sync_start = Instant::now();
             for (t, vals) in per_gpu.iter().zip(fan.results) {
                 for (&r, v) in t.rows.iter().zip(vals) {
                     x[r as usize] = v;
                 }
             }
+            measured_sync += sync_start.elapsed().as_secs_f64();
         }
         let measured_exec = exec_start.elapsed().as_secs_f64();
 
@@ -448,6 +465,8 @@ impl Engine {
             modeled_total: t_h2d + t_levels + t_sync + t_d2h,
             measured_partition: 0.0,
             measured_exec,
+            measured_levels,
+            measured_sync,
             h2d_bytes: h2d.iter().sum(),
             d2h_bytes: d2h.iter().sum(),
         };
@@ -558,6 +577,15 @@ impl Engine {
                 SpanKind::Measured,
                 t0,
                 t0 + measured_exec,
+            );
+            let ml = t0 + measured_levels;
+            rec.span(Track::Measured, "levels (measured)", SpanKind::Measured, t0, ml);
+            rec.span(
+                Track::Measured,
+                "sync (measured)",
+                SpanKind::Measured,
+                ml,
+                ml + measured_sync,
             );
             rec.set_cursor(d2h_end);
         }

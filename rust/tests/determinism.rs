@@ -160,6 +160,72 @@ fn workload_scenario_factories_are_deterministic() {
     }
 }
 
+/// One measured-backend run: the y vector's exact bit pattern plus the
+/// modeled metrics the contract covers (wall-clock fields excluded —
+/// those are honest measurements and may differ run to run).
+fn measured_run(mode: Mode, fmt: FormatKind, np: usize) -> (Vec<u32>, u64, u64) {
+    let eng = Engine::new(RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: np,
+        mode,
+        format: fmt,
+        backend: Backend::Measured,
+        numa_aware: None,
+        strategy_override: None,
+    })
+    .unwrap();
+    let mat = convert::to_format(&Matrix::Coo(gen::power_law(500, 500, 7_000, 1.8, 77)), fmt);
+    let x = gen::dense_vector(500, 78);
+    let rep = eng.spmv(&mat, &x, 1.1, 0.3, Some(&gen::dense_vector(500, 79))).unwrap();
+    assert_eq!(rep.metrics.measured_busy.len(), np);
+    let bits = rep.y.iter().map(|v| v.to_bits()).collect();
+    (bits, rep.metrics.modeled_total.to_bits(), rep.metrics.t_merge.to_bits())
+}
+
+#[test]
+fn measured_backend_is_byte_identical_across_runs() {
+    // thread scheduling must never leak into numerics: the worker fan-out
+    // collects partials in GPU order, so two executions — whatever order
+    // the OS ran the threads in — produce the same bytes
+    for fmt in FormatKind::ALL {
+        for np in [1usize, 4, 8] {
+            let a = measured_run(Mode::PStarOpt, fmt, np);
+            let b = measured_run(Mode::PStarOpt, fmt, np);
+            assert_eq!(a, b, "{} np{np}: measured run diverged across executions", fmt.name());
+        }
+    }
+}
+
+#[test]
+fn measured_backend_is_schedule_independent() {
+    // Baseline runs the kernels serially on the driver thread; p* fans
+    // them out one thread per GPU. Same partitions (strategy pinned to
+    // the baseline's blocks split), same merge order — the y bytes must
+    // not depend on which schedule executed them.
+    for fmt in FormatKind::ALL {
+        let run = |mode: Mode| {
+            let eng = Engine::new(RunConfig {
+                platform: Platform::dgx1(),
+                num_gpus: 8,
+                mode,
+                format: fmt,
+                backend: Backend::Measured,
+                numa_aware: None,
+                strategy_override: Some(msrep::coordinator::partitioner::Strategy::NnzBalanced),
+            })
+            .unwrap();
+            let mat =
+                convert::to_format(&Matrix::Coo(gen::power_law(400, 400, 6_000, 1.9, 88)), fmt);
+            let x = gen::dense_vector(400, 89);
+            let rep = eng.spmv(&mat, &x, 1.0, 0.0, None).unwrap();
+            rep.y.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+        };
+        let serial = run(Mode::Baseline);
+        let threaded = run(Mode::PStar);
+        assert_eq!(serial, threaded, "{}: serial vs threaded schedule diverged", fmt.name());
+    }
+}
+
 #[test]
 fn auto_selection_is_deterministic_across_runs() {
     // the tuner's whole verdict — winner, ranking order, and every

@@ -1,0 +1,238 @@
+//! Differential tests for the measured execution backend (DESIGN.md §14):
+//! the measured and modeled CPU backends must agree **bitwise** — same
+//! kernels, same per-GPU fan-out, same fixed-order merge — and both must
+//! agree with the sequential reference oracle, across every format ×
+//! GPU count × op (SpMV, K-wide SpMM, level-scheduled SpTRSV), including
+//! the adversarial shapes of `tests/properties.rs`. Solver runs (CG,
+//! ILU(0)-PCG) must produce the same iterate trace on both backends.
+
+use msrep::coordinator::{Backend, Engine, Mode, RunConfig};
+use msrep::formats::{convert, gen, Coo, FormatKind, Matrix};
+use msrep::sim::Platform;
+use msrep::spmv::spmv_matrix;
+use msrep::sptrsv::{trsv_csr, triangular_of, Triangle};
+use msrep::util::prop::{check, Gen};
+
+const NP_GRID: [usize; 4] = [1, 2, 4, 8];
+
+fn engine(backend: Backend, mode: Mode, format: FormatKind, np: usize) -> Engine {
+    Engine::new(RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: np,
+        mode,
+        format,
+        backend,
+        numa_aware: None,
+        strategy_override: None,
+    })
+    .unwrap()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_close_to_reference(got: &[f32], expect: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), expect.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(expect).enumerate() {
+        let rel = (g - w).abs() / (1.0 + w.abs());
+        assert!(rel <= tol, "{what}: row {i}: {g} vs {w} (rel {rel:.2e})");
+    }
+}
+
+#[test]
+fn spmv_measured_equals_modeled_equals_reference_across_grid() {
+    let coo = gen::power_law(600, 600, 9_000, 1.9, 7);
+    let x = gen::dense_vector(600, 8);
+    let y0 = gen::dense_vector(600, 9);
+    let (alpha, beta) = (1.3f32, 0.4f32);
+    let mut expect = y0.clone();
+    spmv_matrix(&Matrix::Coo(coo.clone()), &x, alpha, beta, &mut expect).unwrap();
+    for fmt in FormatKind::ALL {
+        let mat = convert::to_format(&Matrix::Coo(coo.clone()), fmt);
+        for np in NP_GRID {
+            let modeled = engine(Backend::CpuRef, Mode::PStarOpt, fmt, np);
+            let measured = engine(Backend::Measured, Mode::PStarOpt, fmt, np);
+            let a = modeled.spmv(&mat, &x, alpha, beta, Some(&y0)).unwrap();
+            let b = measured.spmv(&mat, &x, alpha, beta, Some(&y0)).unwrap();
+            let tag = format!("spmv {} np{np}", fmt.name());
+            assert_eq!(bits(&a.y), bits(&b.y), "{tag}: backends diverged");
+            assert_close_to_reference(&b.y, &expect, 1e-3, &tag);
+            // the modeled timeline is backend-independent, bitwise
+            assert_eq!(a.metrics.modeled_total.to_bits(), b.metrics.modeled_total.to_bits());
+            assert_eq!(a.metrics.t_compute.to_bits(), b.metrics.t_compute.to_bits());
+            assert_eq!(a.metrics.t_merge.to_bits(), b.metrics.t_merge.to_bits());
+            // only the measured backend reports per-GPU kernel walls
+            assert!(a.metrics.measured_busy.is_empty(), "{tag}: cpuref has no busy walls");
+            assert_eq!(b.metrics.measured_busy.len(), np, "{tag}: one wall per GPU");
+            assert!(b.metrics.measured_busy.iter().all(|w| w.is_finite() && *w >= 0.0));
+        }
+    }
+}
+
+#[test]
+fn spmm_measured_equals_modeled_for_k_1_and_8() {
+    let coo = gen::power_law(300, 300, 5_000, 2.0, 17);
+    for fmt in FormatKind::ALL {
+        let mat = convert::to_format(&Matrix::Coo(coo.clone()), fmt);
+        for np in NP_GRID {
+            for k in [1usize, 8] {
+                let x = gen::dense_vector(300 * k, 18 + k as u64);
+                let y0 = gen::dense_vector(300 * k, 19 + k as u64);
+                let modeled = engine(Backend::CpuRef, Mode::PStar, fmt, np);
+                let measured = engine(Backend::Measured, Mode::PStar, fmt, np);
+                let a = modeled.spmm(&mat, &x, k, 0.9, 0.2, Some(&y0)).unwrap();
+                let b = measured.spmm(&mat, &x, k, 0.9, 0.2, Some(&y0)).unwrap();
+                let tag = format!("spmm {} np{np} k{k}", fmt.name());
+                assert_eq!(bits(&a.y), bits(&b.y), "{tag}: backends diverged");
+                assert_eq!(b.metrics.measured_busy.len(), np, "{tag}");
+                // k-wide SpMM == k stacked SpMVs, column by column
+                for j in 0..k {
+                    let xj: Vec<f32> = (0..300).map(|i| x[i * k + j]).collect();
+                    let yj: Vec<f32> = (0..300).map(|i| y0[i * k + j]).collect();
+                    let mut expect = yj.clone();
+                    spmv_matrix(&mat, &xj, 0.9, 0.2, &mut expect).unwrap();
+                    let col: Vec<f32> = (0..300).map(|i| b.y[i * k + j]).collect();
+                    assert_close_to_reference(&col, &expect, 1e-3, &format!("{tag} col{j}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sptrsv_measured_equals_modeled_and_oracle() {
+    let base = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::power_law(500, 500, 6_000, 1.8, 23))));
+    let lower = triangular_of(&base, Triangle::Lower, 1.0);
+    let b = gen::dense_vector(500, 24);
+    let expect = trsv_csr(&lower, &b, Triangle::Lower).unwrap();
+    for np in NP_GRID {
+        let modeled = engine(Backend::CpuRef, Mode::PStarOpt, FormatKind::Csr, np);
+        let measured = engine(Backend::Measured, Mode::PStarOpt, FormatKind::Csr, np);
+        let mat = Matrix::Csr(lower.clone());
+        let ra = modeled.sptrsv(&mat, &b, Triangle::Lower).unwrap();
+        let rb = measured.sptrsv(&mat, &b, Triangle::Lower).unwrap();
+        let tag = format!("sptrsv np{np}");
+        assert_eq!(bits(&ra.x), bits(&rb.x), "{tag}: backends diverged");
+        assert_close_to_reference(&rb.x, &expect, 1e-3, &tag);
+        assert_eq!(
+            ra.metrics.modeled_total.to_bits(),
+            rb.metrics.modeled_total.to_bits(),
+            "{tag}: modeled totals diverged"
+        );
+        // the level/sync walls are measured on both backends (the level
+        // loop is shared) and must be finite
+        for m in [&ra.metrics, &rb.metrics] {
+            assert!(m.measured_levels.is_finite() && m.measured_levels >= 0.0, "{tag}");
+            assert!(m.measured_sync.is_finite() && m.measured_sync >= 0.0, "{tag}");
+        }
+    }
+}
+
+/// Adversarial shapes from `tests/properties.rs`: 1×n, n×1, fully empty,
+/// clustered duplicates — partitions with empty tasks, single-row
+/// partitions, and zero-nnz GPUs all appear here.
+fn arb_adversarial_coo(g: &mut Gen) -> Coo {
+    let (m, n) = match g.usize_in(0..5) {
+        0 => (1, g.usize_in(1..10 + g.size())),
+        1 => (g.usize_in(1..10 + g.size()), 1),
+        _ => (g.usize_in(1..10 + g.size()), g.usize_in(1..10 + g.size())),
+    };
+    if g.prob(0.25) {
+        return Coo::empty(m, n);
+    }
+    let nnz = g.usize_in(0..2 * (m + n));
+    let rows: Vec<u32> = (0..nnz).map(|_| (g.usize_in(0..m) / 2 * 2 % m) as u32).collect();
+    let cols: Vec<u32> = (0..nnz).map(|_| (g.usize_in(0..n) / 2 * 2 % n) as u32).collect();
+    let vals = g.vec_f32(nnz);
+    Coo::new(m, n, rows, cols, vals).unwrap()
+}
+
+#[test]
+fn prop_backends_agree_bitwise_on_adversarial_shapes() {
+    check("measured == modeled on adversarial shapes", 60, |g| {
+        let coo = arb_adversarial_coo(g);
+        let fmt = FormatKind::ALL[g.usize_in(0..3)];
+        let np = [1, 2, 4, 8][g.usize_in(0..4)];
+        let mode = [Mode::Baseline, Mode::PStar, Mode::PStarOpt][g.usize_in(0..3)];
+        let mat = convert::to_format(&Matrix::Coo(coo), fmt);
+        let x = gen::dense_vector(mat.cols(), g.rng().next_u64());
+        let modeled = engine(Backend::CpuRef, mode, fmt, np);
+        let measured = engine(Backend::Measured, mode, fmt, np);
+        let a = modeled.spmv(&mat, &x, 1.7, 0.0, None).unwrap();
+        let b = measured.spmv(&mat, &x, 1.7, 0.0, None).unwrap();
+        assert_eq!(
+            bits(&a.y),
+            bits(&b.y),
+            "{}x{} nnz {} {} np{np} {:?}",
+            mat.rows(),
+            mat.cols(),
+            mat.nnz(),
+            fmt.name(),
+            mode
+        );
+        assert_eq!(b.metrics.measured_busy.len(), np);
+    });
+}
+
+#[test]
+fn cg_iterate_trace_is_identical_across_backends() {
+    let spd = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::spd(400, 4_000, 1.8, 31))));
+    let x_star = gen::dense_vector(400, 32);
+    let mut b = vec![0.0f32; 400];
+    spmv_matrix(&spd, &x_star, 1.0, 0.0, &mut b).unwrap();
+    let cfg = msrep::solver::SolverConfig {
+        tol: 1e-6,
+        max_iters: 200,
+        plan_source: msrep::solver::PlanSource::Reused,
+    };
+    for np in [2usize, 8] {
+        let modeled = engine(Backend::CpuRef, Mode::PStarOpt, FormatKind::Csr, np);
+        let measured = engine(Backend::Measured, Mode::PStarOpt, FormatKind::Csr, np);
+        let ra = msrep::solver::cg(&modeled, &spd, &b, &cfg).unwrap();
+        let rb = msrep::solver::cg(&measured, &spd, &b, &cfg).unwrap();
+        assert!(ra.converged && rb.converged, "np{np}: CG should converge on the SPD system");
+        assert_eq!(ra.iterations, rb.iterations, "np{np}: iteration counts diverged");
+        assert_eq!(bits(&ra.x), bits(&rb.x), "np{np}: final iterates diverged");
+        assert_eq!(ra.trace.len(), rb.trace.len(), "np{np}");
+        for (sa, sb) in ra.trace.iter().zip(&rb.trace) {
+            assert_eq!(sa.iter, sb.iter);
+            let rel = (sa.residual - sb.residual).abs() / sa.residual.abs().max(1e-300);
+            assert!(
+                rel <= 1e-12,
+                "np{np} iter {}: residual {} vs {} (rel {rel:.2e})",
+                sa.iter,
+                sa.residual,
+                sb.residual
+            );
+        }
+    }
+}
+
+#[test]
+fn ilu0_pcg_iterate_trace_is_identical_across_backends() {
+    let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::laplacian_2d(20))));
+    let x_star = gen::dense_vector(400, 33);
+    let mut b = vec![0.0f32; 400];
+    spmv_matrix(&a, &x_star, 1.0, 0.0, &mut b).unwrap();
+    let cfg = msrep::solver::SolverConfig {
+        tol: 1e-6,
+        max_iters: 200,
+        plan_source: msrep::solver::PlanSource::Reused,
+    };
+    for np in [2usize, 4] {
+        let modeled = engine(Backend::CpuRef, Mode::PStarOpt, FormatKind::Csr, np);
+        let measured = engine(Backend::Measured, Mode::PStarOpt, FormatKind::Csr, np);
+        let ra = msrep::solver::pcg(&modeled, &a, &b, msrep::solver::Preconditioner::Ilu0, &cfg)
+            .unwrap();
+        let rb = msrep::solver::pcg(&measured, &a, &b, msrep::solver::Preconditioner::Ilu0, &cfg)
+            .unwrap();
+        assert!(ra.converged && rb.converged, "np{np}: PCG should converge on the stencil");
+        assert_eq!(ra.iterations, rb.iterations, "np{np}");
+        assert_eq!(bits(&ra.x), bits(&rb.x), "np{np}: final iterates diverged");
+        for (sa, sb) in ra.trace.iter().zip(&rb.trace) {
+            let rel = (sa.residual - sb.residual).abs() / sa.residual.abs().max(1e-300);
+            assert!(rel <= 1e-12, "np{np} iter {}: rel {rel:.2e}", sa.iter);
+        }
+    }
+}
