@@ -75,6 +75,10 @@ pub enum Error {
     /// candidate, bad options).
     Autoplan(String),
 
+    /// Perf-observatory error (incomparable baseline, modeled drift,
+    /// measured regression past the noise gate; DESIGN.md §15).
+    Perf(String),
+
     /// CLI usage error.
     Usage(String),
 }
@@ -101,6 +105,7 @@ impl fmt::Display for Error {
             Error::Serve(m) => write!(f, "serve error: {m}"),
             Error::Solver(m) => write!(f, "solver error: {m}"),
             Error::Autoplan(m) => write!(f, "autoplan error: {m}"),
+            Error::Perf(m) => write!(f, "perf error: {m}"),
             Error::Usage(m) => write!(f, "usage: {m}"),
         }
     }

@@ -476,28 +476,12 @@ pub fn calibrate(opts: &CalibrationOptions) -> Result<CalibrationReport> {
     })
 }
 
-fn consts_json(c: &SimConstants) -> Value {
-    let mut o = BTreeMap::new();
-    o.insert("csr_efficiency".to_string(), Value::Num(c.csr_efficiency));
-    o.insert("csc_efficiency".to_string(), Value::Num(c.csc_efficiency));
-    o.insert("coo_efficiency".to_string(), Value::Num(c.coo_efficiency));
-    o.insert("spgemm_efficiency".to_string(), Value::Num(c.spgemm_efficiency));
-    o.insert("sptrsv_efficiency".to_string(), Value::Num(c.sptrsv_efficiency));
-    o.insert("sptrsv_sync_scale".to_string(), Value::Num(c.sptrsv_sync_scale));
-    o.insert("merge_bw_divisor".to_string(), Value::Num(c.merge_bw_divisor));
-    o.insert("cpu_search_op_s".to_string(), Value::Num(c.cpu_search_op_s));
-    o.insert("cpu_rewrite_op_s".to_string(), Value::Num(c.cpu_rewrite_op_s));
-    o.insert("cpu_fixup_op_s".to_string(), Value::Num(c.cpu_fixup_op_s));
-    Value::Obj(o)
-}
-
 impl CalibrationReport {
-    /// Canonical `BENCH_calibration.json` payload (`msrep-bench-v1`
+    /// Canonical `BENCH_calibration.json` payload: the shared
+    /// [`crate::util::bench::bench_record`] envelope (`msrep-bench-v1`
     /// schema, sorted keys — byte-stable across runs of the same grid).
     pub fn to_json(&self) -> String {
         let mut root = BTreeMap::new();
-        root.insert("schema".to_string(), Value::Str("msrep-bench-v1".to_string()));
-        root.insert("bench".to_string(), Value::Str("calibration".to_string()));
         root.insert("platform".to_string(), Value::Str(self.platform.clone()));
         root.insert("quick".to_string(), Value::Bool(self.quick));
         root.insert(
@@ -530,13 +514,13 @@ impl CalibrationReport {
             .collect();
         root.insert("phases".to_string(), Value::Arr(phases));
         let mut consts = BTreeMap::new();
-        consts.insert("default".to_string(), consts_json(&self.defaults));
-        consts.insert("fitted".to_string(), consts_json(&self.fitted));
+        consts.insert("default".to_string(), self.defaults.to_json_value());
+        consts.insert("fitted".to_string(), self.fitted.to_json_value());
         root.insert("constants".to_string(), Value::Obj(consts));
         root.insert("rmse_default".to_string(), Value::Num(self.rmse_default));
         root.insert("rmse_fitted".to_string(), Value::Num(self.rmse_fitted));
         root.insert("improved".to_string(), Value::Bool(self.improved));
-        Value::Obj(root).to_json()
+        crate::util::bench::bench_record("calibration", root).to_json()
     }
 
     /// Human-readable fit table plus the aggregate error line.

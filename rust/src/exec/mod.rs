@@ -72,6 +72,29 @@ pub fn cpu_partial_k(t: &GpuTask, x: &[f32], k: usize, alpha: f32) -> Vec<f32> {
     py
 }
 
+/// Test-only fault injection for the perf observatory's regression gate
+/// (DESIGN.md §15): when `MSREP_PERF_INJECT` is set to
+/// `"<phase>:<gpu>:<micros>"` (e.g. `"exec:1:20000"`), the matching
+/// measured-phase worker sleeps that long before running its kernel. The
+/// GPU field accepts `*` for every lane. Only the **measured** walls move
+/// — the modeled timeline and the numerics are untouched — which is
+/// exactly the signature `tests/perf_integration.rs` asserts the
+/// comparator flags and attributes. Unset (the normal case), this is one
+/// failed env lookup on the measured path and nothing anywhere else.
+pub fn inject_sleep(phase: &str, gpu: usize) {
+    let Ok(spec) = std::env::var("MSREP_PERF_INJECT") else { return };
+    let mut parts = spec.splitn(3, ':');
+    let (Some(p), Some(g), Some(us)) = (parts.next(), parts.next(), parts.next()) else {
+        return;
+    };
+    if p != phase || (g != "*" && g.parse() != Ok(gpu)) {
+        return;
+    }
+    if let Ok(us) = us.parse::<u64>() {
+        std::thread::sleep(std::time::Duration::from_micros(us));
+    }
+}
+
 /// Execute every task's SpMV kernel on the per-GPU fan-out and measure it.
 ///
 /// `threaded == true` spawns one scoped std thread per task (p\*'s
@@ -80,14 +103,20 @@ pub fn cpu_partial_k(t: &GpuTask, x: &[f32], k: usize, alpha: f32) -> Vec<f32> {
 /// partials come back in GPU order, so downstream merging is independent
 /// of the thread schedule.
 pub fn run_spmv(tasks: &[GpuTask], x: &[f32], alpha: f32, threaded: bool) -> MeasuredFan {
-    let fan = worker::run_per_gpu(tasks.len(), threaded, |g| cpu_partial(&tasks[g], x, alpha));
+    let fan = worker::run_per_gpu(tasks.len(), threaded, |g| {
+        inject_sleep("exec", g);
+        cpu_partial(&tasks[g], x, alpha)
+    });
     MeasuredFan { partials: fan.results, busy: fan.busy, wall: fan.wall }
 }
 
 /// Execute every task's K-wide SpMM kernel on the per-GPU fan-out and
 /// measure it (see [`run_spmv`]).
 pub fn run_spmm(tasks: &[GpuTask], x: &[f32], k: usize, alpha: f32, threaded: bool) -> MeasuredFan {
-    let fan = worker::run_per_gpu(tasks.len(), threaded, |g| cpu_partial_k(&tasks[g], x, k, alpha));
+    let fan = worker::run_per_gpu(tasks.len(), threaded, |g| {
+        inject_sleep("exec", g);
+        cpu_partial_k(&tasks[g], x, k, alpha)
+    });
     MeasuredFan { partials: fan.results, busy: fan.busy, wall: fan.wall }
 }
 

@@ -89,6 +89,14 @@
 //! `msrep calibrate`) that refits the cost-model constants
 //! ([`sim::SimConstants`]) against those measurements — see DESIGN.md §14.
 
+//! Performance over *time* is tracked by [`perf`]: a continuous-benchmark
+//! observatory (`msrep perf`) that replays a pinned scenario suite on the
+//! modeled and measured backends, reduces walls with median + MAD
+//! ([`util::stats::Robust`]), appends schema-versioned records to
+//! `BENCH_history.jsonl`, and gates against a baseline — modeled phases
+//! bitwise, measured phases at a noise-aware threshold — with span-level
+//! attribution of any regression. See DESIGN.md §15.
+
 #![warn(missing_docs)]
 
 pub mod autoplan;
@@ -97,6 +105,7 @@ pub mod error;
 pub mod exec;
 pub mod formats;
 pub mod obs;
+pub mod perf;
 pub mod report;
 pub mod runtime;
 pub mod serve;

@@ -13,6 +13,7 @@
 //! msrep sptrsv-bench ...                   level-scheduled triangular solves
 //! msrep trace --scenario small ...         traced tour of every subsystem
 //! msrep calibrate --quick ...              fit sim constants to measured walls
+//! msrep perf --against BENCH_history.jsonl continuous perf suite + noise gate
 //! ```
 //!
 //! The paper-figure regeneration lives in `cargo bench` /
@@ -59,6 +60,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "autoplan-bench" => cmd_autoplan_bench(rest),
         "trace" => cmd_trace(rest),
         "calibrate" => cmd_calibrate(rest),
+        "perf" => cmd_perf(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -66,7 +68,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         other => Err(Error::Usage(format!(
             "unknown command '{other}' (expected info | gen | profile | partition | run | \
              suite | serve-bench | solver-bench | spgemm-bench | sptrsv-bench | \
-             autoplan-bench | trace | calibrate; try `msrep help`)"
+             autoplan-bench | trace | calibrate | perf; try `msrep help`)"
         ))),
     }
 }
@@ -97,7 +99,11 @@ fn print_usage() {
          trace-event JSON + an ASCII Gantt (--help for flags)\n\
          \x20 calibrate   replay the workload suites on the measured backend \
          and least-squares fit the sim constants against the recorded walls, \
-         emitting BENCH_calibration.json (--help for flags)\n"
+         emitting BENCH_calibration.json (--help for flags)\n\
+         \x20 perf        replay the pinned perf suite N times, append a \
+         median+MAD record to BENCH_history.jsonl, and optionally gate \
+         against a baseline with span-level regression attribution \
+         (--help for flags)\n"
     );
 }
 
@@ -178,6 +184,20 @@ fn load_matrix(a: &Args) -> Result<Matrix> {
 
 fn to_format(mat: Matrix, format: FormatKind) -> Matrix {
     convert::to_format(&mat, format)
+}
+
+/// Re-price a platform through a saved sim-constants profile when
+/// `--constants <file>` is set (the JSON `msrep calibrate --save` emits —
+/// a whole calibration report is accepted too; see
+/// [`msrep::sim::SimConstants::from_json`]).
+fn apply_constants(platform: Platform, a: &Args) -> Result<Platform> {
+    match a.get("constants") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            Ok(platform.with_consts(msrep::sim::SimConstants::from_json(&text)?))
+        }
+        None => Ok(platform),
+    }
 }
 
 fn cmd_profile(argv: Vec<String>) -> Result<()> {
@@ -271,6 +291,7 @@ fn run_parser() -> Parser {
         .bool_flag("verify", "check against the CPU oracle")
         .bool_flag("timeline", "render the modeled phase timeline + per-GPU loads")
         .flag("trace", "export the span timeline as Chrome trace-event JSON", None)
+        .flag("constants", "sim-constants profile JSON (from `msrep calibrate --save`)", None)
 }
 
 fn cmd_run(argv: Vec<String>) -> Result<()> {
@@ -280,7 +301,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         return Ok(());
     }
     let a = p.parse(argv)?;
-    let platform = Platform::by_name(&a.str_or("platform", "dgx1"))?;
+    let platform = apply_constants(Platform::by_name(&a.str_or("platform", "dgx1"))?, &a)?;
     let num_gpus = a.usize_or("gpus", platform.num_gpus)?;
     let mode = Mode::parse(&a.str_or("mode", "popt"))
         .ok_or_else(|| Error::Usage("bad --mode".into()))?;
@@ -556,6 +577,7 @@ fn solver_parser() -> Parser {
         .flag("seed", "generator seed", Some("42"))
         .bool_flag("scenarios", "run the workload solver scenario set instead")
         .flag("trace", "export the span timeline as Chrome trace-event JSON", None)
+        .flag("constants", "sim-constants profile JSON (from `msrep calibrate --save`)", None)
 }
 
 /// Dispatch one solver method over a prebuilt system matrix (shared by
@@ -604,7 +626,7 @@ fn cmd_solver_bench(argv: Vec<String>) -> Result<()> {
         return Ok(());
     }
     let a = p.parse(argv)?;
-    let platform = Platform::by_name(&a.str_or("platform", "dgx1"))?;
+    let platform = apply_constants(Platform::by_name(&a.str_or("platform", "dgx1"))?, &a)?;
     let num_gpus = a.usize_or("gpus", platform.num_gpus)?;
     let mode = Mode::parse(&a.str_or("mode", "popt"))
         .ok_or_else(|| Error::Usage("bad --mode".into()))?;
@@ -766,6 +788,7 @@ fn spgemm_parser() -> Parser {
         )
         .bool_flag("no-compare", "skip the nnz-balanced planning comparison")
         .flag("trace", "export the span timeline as Chrome trace-event JSON", None)
+        .flag("bench-out", "write the per-stage numeric results as a bench JSON", None)
 }
 
 fn cmd_spgemm_bench(argv: Vec<String>) -> Result<()> {
@@ -818,6 +841,7 @@ fn cmd_spgemm_bench(argv: Vec<String>) -> Result<()> {
         "numeric (flops)",
         "numeric speedup",
     ]);
+    let mut bench_rows: Vec<msrep::util::json::Value> = Vec::new();
     for s in &scenarios {
         let chain = workload::spgemm_scenario_chain(s);
         println!("== {} ({}) ==", s.name, s.kind);
@@ -826,6 +850,23 @@ fn cmd_spgemm_bench(argv: Vec<String>) -> Result<()> {
             let flop_plan = engine.plan_spgemm(&acc, b)?;
             let rep = engine.spgemm_with_plan(&flop_plan, b)?;
             print!("{}", msrep::report::render_spgemm_report(&rep.metrics));
+            if a.get("bench-out").is_some() {
+                use msrep::util::json::Value;
+                let mut row = std::collections::BTreeMap::new();
+                row.insert("scenario".to_string(), Value::Str(s.name.to_string()));
+                row.insert("stage".to_string(), Value::Num(stage as f64));
+                row.insert(
+                    "flop_imbalance".to_string(),
+                    Value::Num(rep.metrics.flop_imbalance),
+                );
+                row.insert("t_symbolic".to_string(), Value::Num(rep.metrics.t_symbolic));
+                row.insert("t_numeric".to_string(), Value::Num(rep.metrics.t_numeric));
+                row.insert(
+                    "modeled_total".to_string(),
+                    Value::Num(rep.metrics.modeled_total),
+                );
+                bench_rows.push(Value::Obj(row));
+            }
             if compare {
                 let nnz_plan = engine.plan(&acc)?;
                 let nnz_rep = engine.spgemm_with_plan(&nnz_plan, b)?;
@@ -857,6 +898,20 @@ fn cmd_spgemm_bench(argv: Vec<String>) -> Result<()> {
     }
     if let Some(path) = a.get("trace") {
         export_trace(&recorder, path)?;
+    }
+    if let Some(path) = a.get("bench-out") {
+        use msrep::util::json::Value;
+        let mut root = std::collections::BTreeMap::new();
+        root.insert(
+            "platform".to_string(),
+            Value::Str(engine.config().platform.name.clone()),
+        );
+        root.insert("gpus".to_string(), Value::Num(num_gpus as f64));
+        root.insert("mode".to_string(), Value::Str(mode.label().to_string()));
+        root.insert("scenarios".to_string(), Value::Arr(bench_rows));
+        let rec = msrep::util::bench::bench_record("spgemm_bench", root);
+        msrep::util::bench::write_bench_json(path, &rec)?;
+        println!("wrote bench trajectory to {path}");
     }
     Ok(())
 }
@@ -1254,8 +1309,6 @@ fn cmd_trace(argv: Vec<String>) -> Result<()> {
     if let Some(path) = a.get("bench-out") {
         use msrep::util::json::Value;
         let mut root = std::collections::BTreeMap::new();
-        root.insert("schema".to_string(), Value::Str("msrep-bench-v1".to_string()));
-        root.insert("bench".to_string(), Value::Str("obs_baseline".to_string()));
         root.insert("scenario".to_string(), Value::Str(scenario.clone()));
         root.insert("platform".to_string(), Value::Str(cfg.platform.name.to_string()));
         root.insert("gpus".to_string(), Value::Num(num_gpus as f64));
@@ -1263,7 +1316,8 @@ fn cmd_trace(argv: Vec<String>) -> Result<()> {
         root.insert("spans".to_string(), Value::Num(trace.len() as f64));
         root.insert("envelope_s".to_string(), Value::Num(trace.envelope()));
         root.insert("metrics".to_string(), registry.to_json());
-        std::fs::write(path, Value::Obj(root).to_json())?;
+        let rec = msrep::util::bench::bench_record("obs_baseline", root);
+        msrep::util::bench::write_bench_json(path, &rec)?;
         println!("wrote bench trajectory to {path}");
     }
     Ok(())
@@ -1287,6 +1341,11 @@ fn calibrate_parser() -> Parser {
         .flag("np", "comma-separated GPU counts to replay", Some("1,2,4,8"))
         .flag("k", "SpMM right-hand sides", Some("8"))
         .flag("out", "calibration report JSON path", Some("BENCH_calibration.json"))
+        .flag(
+            "save",
+            "also write the fitted constants alone, as a `--constants` profile",
+            None,
+        )
         .bool_flag("quick", "smoke grid: 2 SpMV suite entries, 1 SpMM entry")
 }
 
@@ -1328,6 +1387,121 @@ fn cmd_calibrate(argv: Vec<String>) -> Result<()> {
     let out = a.str_or("out", "BENCH_calibration.json");
     std::fs::write(&out, report.to_json())?;
     println!("wrote calibration report to {out}");
+    if let Some(path) = a.get("save") {
+        std::fs::write(path, report.fitted.to_json())?;
+        println!("wrote fitted constants profile to {path} (use with --constants)");
+    }
+    Ok(())
+}
+
+fn perf_parser() -> Parser {
+    Parser::new()
+        .flag("suite", "quick | full (pinned scenario suite variant)", Some("quick"))
+        .flag("reps", "replays per op (median + MAD reduction)", Some("5"))
+        .flag("platform", "summit | dgx1", Some("dgx1"))
+        .flag("gpus", "GPUs to use", None)
+        .flag("mode", "baseline | pstar | popt", Some("popt"))
+        .flag("constants", "sim-constants profile JSON (from `msrep calibrate --save`)", None)
+        .flag("out", "history JSONL the record is appended to", Some("BENCH_history.jsonl"))
+        .flag("record", "also write the record as a standalone JSON document", None)
+        .flag("against", "baseline record (.json, or .jsonl whose last line is used)", None)
+        .flag("k-sigma", "measured gate: MAD-sigma multiplier", Some("8.0"))
+        .flag("rel-floor", "measured gate: relative floor vs the baseline median", Some("0.25"))
+        .flag("abs-floor-us", "measured gate: absolute floor in microseconds", Some("2000"))
+        .bool_flag("warn-only", "report measured regressions without failing the gate")
+        .bool_flag("no-history", "skip appending the record to the history file")
+}
+
+fn cmd_perf(argv: Vec<String>) -> Result<()> {
+    let p = perf_parser();
+    if argv.iter().any(|a| a == "--help") {
+        println!(
+            "msrep perf — continuous perf suite: median+MAD record, noise-gated \
+             baseline comparison, span-level regression attribution\n{}",
+            p.help()
+        );
+        return Ok(());
+    }
+    let a = p.parse(argv)?;
+    let platform = apply_constants(Platform::by_name(&a.str_or("platform", "dgx1"))?, &a)?;
+    let num_gpus = a.usize_or("gpus", platform.num_gpus)?;
+    let mode = Mode::parse(&a.str_or("mode", "popt"))
+        .ok_or_else(|| Error::Usage("bad --mode".into()))?;
+    let opts = msrep::perf::PerfOptions {
+        platform,
+        num_gpus,
+        mode,
+        suite: a.str_or("suite", "quick"),
+        reps: a.usize_or("reps", 5)?.max(1),
+    };
+    let spec = msrep::perf::suite::spec(&opts.suite)
+        .ok_or_else(|| Error::Usage(format!("unknown perf suite '{}' (quick | full)", opts.suite)))?;
+    println!(
+        "perf: suite {} on {} x {num_gpus} GPUs, mode {}, {} reps\n",
+        spec.name,
+        opts.platform.name,
+        mode.label(),
+        opts.reps,
+    );
+    // workloads are built once and reused for regression attribution, so
+    // the traced re-run replays bit-identical inputs
+    let w = msrep::perf::Workloads::build(&spec)?;
+    // read the baseline BEFORE appending: `--against BENCH_history.jsonl
+    // --out BENCH_history.jsonl` must gate against the previous run's
+    // record, not the one this run is about to append
+    let base = match a.get("against") {
+        Some(path) => Some(msrep::perf::PerfRecord::from_value(
+            &msrep::util::bench::read_last_bench_record(path)?,
+        )?),
+        None => None,
+    };
+    let record = msrep::perf::run_suite_on(&opts, &w)?;
+    print!("{}", msrep::report::render_perf_record(&record));
+    let value = record.to_value();
+    if !a.is_set("no-history") {
+        let out = a.str_or("out", "BENCH_history.jsonl");
+        msrep::util::bench::append_bench_jsonl(&out, &value)?;
+        println!("appended record to {out}");
+    }
+    if let Some(path) = a.get("record") {
+        msrep::util::bench::write_bench_json(path, &value)?;
+        println!("wrote record to {path}");
+    }
+    let (Some(base), Some(base_path)) = (base, a.get("against")) else {
+        return Ok(());
+    };
+    let gate = msrep::perf::GateConfig {
+        k_sigma: a.f64_or("k-sigma", 8.0)?,
+        rel_floor: a.f64_or("rel-floor", 0.25)?,
+        abs_floor_s: a.f64_or("abs-floor-us", 2000.0)? * 1e-6,
+    };
+    let cmp = msrep::perf::compare(&base, &record, &gate)?;
+    println!();
+    print!("{}", msrep::report::render_comparison(&cmp));
+    let mut attributed: Vec<String> = Vec::new();
+    for f in cmp.gating() {
+        if f.kind == msrep::perf::FindingKind::MeasuredRegression && !attributed.contains(&f.op) {
+            attributed.push(f.op.clone());
+            println!();
+            print!(
+                "{}",
+                msrep::perf::attribution::attribute(f, &w, &opts.platform, num_gpus, mode)?
+            );
+        }
+    }
+    if !cmp.passed() {
+        let drift = cmp
+            .gating()
+            .iter()
+            .any(|f| f.kind == msrep::perf::FindingKind::ModeledDrift);
+        if drift || !a.is_set("warn-only") {
+            return Err(Error::Perf(format!(
+                "gate FAILED: {} finding(s) past the noise threshold vs {base_path}",
+                cmp.gating().len()
+            )));
+        }
+        println!("(measured regressions reported as warnings only: --warn-only)");
+    }
     Ok(())
 }
 

@@ -94,6 +94,52 @@ pub fn render_gantt(trace: &Trace, width: usize) -> String {
     out
 }
 
+/// Render the top-`k` slowest spans as a table (duration, track, kind,
+/// name), longest first. Zero-width markers never make the cut; ties are
+/// broken by track order then name so the table is deterministic. The perf
+/// observatory's regression-attribution report prints this next to the
+/// swimlane render (DESIGN.md §15) to name the spans worth reading first.
+pub fn render_top_spans(trace: &Trace, k: usize) -> String {
+    let mut spans: Vec<_> = trace
+        .spans()
+        .iter()
+        .filter(|s| s.t_end > s.t_start)
+        .collect();
+    if spans.is_empty() || k == 0 {
+        return "top spans: (none)\n".to_string();
+    }
+    spans.sort_by(|a, b| {
+        (b.t_end - b.t_start)
+            .total_cmp(&(a.t_end - a.t_start))
+            .then_with(|| a.track.cmp(&b.track))
+            .then_with(|| a.name.cmp(b.name))
+    });
+    spans.truncate(k);
+    let label_w = spans
+        .iter()
+        .map(|s| s.track.label().len())
+        .max()
+        .unwrap_or(4)
+        .max(5);
+    let mut out = format!(
+        "top {} spans by duration:\n  {:>10}  {:<label_w$}  {:<9}  name\n",
+        spans.len(),
+        "duration",
+        "track",
+        "kind",
+    );
+    for s in spans {
+        out.push_str(&format!(
+            "  {:>10}  {:<label_w$}  {:<9}  {}\n",
+            format_duration_s(s.t_end - s.t_start),
+            s.track.label(),
+            s.kind.label(),
+            s.name,
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +203,42 @@ mod tests {
         r.marker(Track::Host, "tick", 1.0); // zero time range
         let g = render_gantt(&r.take(), 40);
         assert!(g.contains("host"));
+    }
+
+    #[test]
+    fn top_spans_ranks_by_duration_and_skips_markers() {
+        let r = TraceRecorder::enabled();
+        r.span(Track::Gpu(0), "h2d", SpanKind::Phase, 0.0, 0.5);
+        r.span(Track::Gpu(1), "compute", SpanKind::Phase, 0.5, 2.5);
+        r.span(Track::Host, "merge", SpanKind::Phase, 2.5, 2.6);
+        r.marker(Track::Host, "tick", 1.0);
+        let t = r.take();
+        let top = render_top_spans(&t, 2);
+        let lines: Vec<_> = top.lines().collect();
+        assert!(lines[0].starts_with("top 2 spans"), "{top}");
+        assert!(lines[2].contains("compute") && lines[2].contains("gpu 1"), "{top}");
+        assert!(lines[3].contains("h2d") && lines[3].contains("gpu 0"), "{top}");
+        assert!(!top.contains("tick"), "markers must not rank: {top}");
+        // asking for more than exist returns everything, no panic
+        assert!(render_top_spans(&t, 99).contains("top 3 spans"));
+    }
+
+    #[test]
+    fn top_spans_handles_empty_and_marker_only_traces() {
+        assert_eq!(render_top_spans(&Trace::default(), 5), "top spans: (none)\n");
+        let r = TraceRecorder::enabled();
+        r.marker(Track::Host, "tick", 1.0);
+        assert_eq!(render_top_spans(&r.take(), 5), "top spans: (none)\n");
+    }
+
+    #[test]
+    fn top_spans_ties_break_by_track_then_name() {
+        let r = TraceRecorder::enabled();
+        r.span(Track::Gpu(1), "b", SpanKind::Phase, 0.0, 1.0);
+        r.span(Track::Gpu(0), "a", SpanKind::Phase, 0.0, 1.0);
+        let top = render_top_spans(&r.take(), 2);
+        let lines: Vec<_> = top.lines().collect();
+        assert!(lines[2].contains("gpu 0"), "{top}");
+        assert!(lines[3].contains("gpu 1"), "{top}");
     }
 }

@@ -28,7 +28,7 @@ pub mod gantt;
 pub mod registry;
 
 pub use chrome::{to_chrome_json, to_jsonl, write_chrome_trace, write_jsonl};
-pub use gantt::render_gantt;
+pub use gantt::{render_gantt, render_top_spans};
 pub use registry::MetricsRegistry;
 
 use std::sync::{Arc, Mutex, MutexGuard};

@@ -1,0 +1,158 @@
+//! Span-level regression attribution: when the gate trips, re-run the
+//! offending op with the [`TraceRecorder`](crate::obs::TraceRecorder)
+//! enabled and name *where* the time went (DESIGN.md §15).
+//!
+//! The report answers the three questions a triager asks first:
+//! which phase regressed and by how much, which span dominates the
+//! critical path, and which GPU lane is the straggler — plus plan-cache
+//! hit/miss counts (for the serving op) and the top-K slowest spans
+//! ([`crate::obs::render_top_spans`]).
+
+use crate::coordinator::Mode;
+use crate::error::Result;
+use crate::obs::{render_top_spans, SpanKind, Track};
+use crate::report::format_duration_s;
+use crate::sim::Platform;
+
+use super::compare::Finding;
+use super::suite::{self, Workloads};
+
+/// Worst GPU lane of a traced run: prefer the measured per-worker kernel
+/// walls (honest host time) and fall back to summing modeled phase spans
+/// per device track for the ops that run on the modeled backend.
+fn worst_lane(run: &suite::TracedRun) -> Option<(usize, f64)> {
+    if !run.measured_busy.is_empty() {
+        return run
+            .measured_busy
+            .iter()
+            .copied()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(&b.1));
+    }
+    let mut per_gpu: Vec<(usize, f64)> = Vec::new();
+    for s in run.trace.spans() {
+        if let Track::Gpu(g) = s.track {
+            match per_gpu.iter_mut().find(|(gg, _)| *gg == g) {
+                Some((_, acc)) => *acc += s.duration(),
+                None => per_gpu.push((g, s.duration())),
+            }
+        }
+    }
+    per_gpu.into_iter().max_by(|a, b| a.1.total_cmp(&b.1))
+}
+
+/// Longest `Phase` span off the measured overlay — the critical-path
+/// phase the regressed wall most plausibly hides in.
+fn critical_phase(run: &suite::TracedRun) -> Option<(&'static str, f64)> {
+    run.trace
+        .spans()
+        .iter()
+        .filter(|s| s.kind == SpanKind::Phase && s.track != Track::Measured)
+        .map(|s| (s.name, s.duration()))
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+}
+
+/// Plan-cache hit/miss marker counts (the serving layer drops one marker
+/// per dispatch on `Track::Lane("plan cache")`).
+fn cache_counts(run: &suite::TracedRun) -> (usize, usize) {
+    let mut hits = 0;
+    let mut misses = 0;
+    for s in run.trace.spans() {
+        if s.kind == SpanKind::Marker {
+            match s.name {
+                "cache hit" => hits += 1,
+                "cache miss" => misses += 1,
+                _ => {}
+            }
+        }
+    }
+    (hits, misses)
+}
+
+/// Re-run `finding.op` traced and render the attribution report.
+pub fn attribute(
+    finding: &Finding,
+    w: &Workloads,
+    platform: &Platform,
+    num_gpus: usize,
+    mode: Mode,
+) -> Result<String> {
+    let run = suite::run_traced(&finding.op, w, platform, num_gpus, mode)?;
+    let mut out = format!(
+        "attribution: {} / {} regressed {} -> {} (+{}, gate threshold {})\n",
+        finding.op,
+        finding.phase,
+        format_duration_s(finding.baseline),
+        format_duration_s(finding.current),
+        format_duration_s(finding.current - finding.baseline),
+        format_duration_s(finding.threshold),
+    );
+    if let Some((name, dur)) = critical_phase(&run) {
+        out.push_str(&format!(
+            "  critical-path phase: {name} ({})\n",
+            format_duration_s(dur)
+        ));
+    }
+    if let Some((g, busy)) = worst_lane(&run) {
+        out.push_str(&format!(
+            "  worst lane: gpu {g} ({}{})\n",
+            format_duration_s(busy),
+            if run.measured_busy.is_empty() { " modeled" } else { " measured busy" },
+        ));
+    }
+    let (hits, misses) = cache_counts(&run);
+    if hits + misses > 0 {
+        out.push_str(&format!("  plan cache: {hits} hits / {misses} misses\n"));
+    }
+    out.push_str(&render_top_spans(&run.trace, 8));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::obs::TraceRecorder;
+
+    use super::*;
+
+    fn run_from(rec: &TraceRecorder, busy: Vec<f64>) -> suite::TracedRun {
+        suite::TracedRun { trace: rec.take(), measured_busy: busy }
+    }
+
+    #[test]
+    fn worst_lane_prefers_measured_busy() {
+        let r = TraceRecorder::enabled();
+        r.span(Track::Gpu(0), "compute", SpanKind::Phase, 0.0, 5.0);
+        let run = run_from(&r, vec![0.1, 0.9, 0.2]);
+        assert_eq!(worst_lane(&run), Some((1, 0.9)));
+    }
+
+    #[test]
+    fn worst_lane_falls_back_to_modeled_gpu_spans() {
+        let r = TraceRecorder::enabled();
+        r.span(Track::Gpu(0), "compute", SpanKind::Phase, 0.0, 1.0);
+        r.span(Track::Gpu(2), "compute", SpanKind::Phase, 0.0, 3.0);
+        r.span(Track::Host, "merge", SpanKind::Phase, 3.0, 9.0);
+        let run = run_from(&r, Vec::new());
+        assert_eq!(worst_lane(&run), Some((2, 3.0)));
+    }
+
+    #[test]
+    fn critical_phase_skips_the_measured_overlay() {
+        let r = TraceRecorder::enabled();
+        r.span(Track::Gpu(0), "compute", SpanKind::Phase, 0.0, 1.0);
+        r.span(Track::Measured, "exec wall", SpanKind::Measured, 0.0, 9.0);
+        let run = run_from(&r, Vec::new());
+        assert_eq!(critical_phase(&run), Some(("compute", 1.0)));
+    }
+
+    #[test]
+    fn cache_counts_read_the_serve_markers() {
+        let r = TraceRecorder::enabled();
+        r.marker(Track::Lane("plan cache"), "cache miss", 0.0);
+        r.marker(Track::Lane("plan cache"), "cache hit", 1.0);
+        r.marker(Track::Lane("plan cache"), "cache hit", 2.0);
+        r.marker(Track::Host, "tick", 3.0);
+        let run = run_from(&r, Vec::new());
+        assert_eq!(cache_counts(&run), (2, 1));
+    }
+}

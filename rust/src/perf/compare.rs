@@ -1,0 +1,291 @@
+//! The regression comparator: diff two perf records under the MAD noise
+//! model (DESIGN.md §15).
+//!
+//! Modeled phases are deterministic functions of the workload and the sim
+//! constants, so they are gated **bitwise** — any drift is a real change
+//! in the cost model or the planner, never noise. Measured walls carry
+//! host noise, so each phase is gated at
+//! `max(k · σ_MAD, rel_floor · baseline_median, abs_floor)`: the σ term
+//! adapts to observed jitter, the relative floor forgives proportional
+//! noise on tiny phases, and the absolute floor keeps microsecond phases
+//! from gating on scheduler dust.
+
+use crate::error::{Error, Result};
+
+use super::record::PerfRecord;
+
+/// Thresholds of the measured-wall gate.
+#[derive(Debug, Clone, Copy)]
+pub struct GateConfig {
+    /// MAD-σ multiplier (regression iff delta > k·σ and the floors)
+    pub k_sigma: f64,
+    /// relative floor as a fraction of the baseline median
+    pub rel_floor: f64,
+    /// absolute floor in seconds
+    pub abs_floor_s: f64,
+}
+
+impl Default for GateConfig {
+    fn default() -> GateConfig {
+        GateConfig { k_sigma: 8.0, rel_floor: 0.25, abs_floor_s: 2e-3 }
+    }
+}
+
+impl GateConfig {
+    /// The threshold one measured phase is gated at, given both records'
+    /// noise estimates (the wider of the two MADs wins — either side may
+    /// have caught the noisy run).
+    pub fn threshold(&self, base_median: f64, sigma: f64) -> f64 {
+        (self.k_sigma * sigma)
+            .max(self.rel_floor * base_median)
+            .max(self.abs_floor_s)
+    }
+}
+
+/// What a finding is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FindingKind {
+    /// a modeled phase changed at all (bitwise gate)
+    ModeledDrift,
+    /// a measured phase slowed past the noise threshold
+    MeasuredRegression,
+    /// a measured phase sped up past the noise threshold (informational)
+    MeasuredImprovement,
+}
+
+impl FindingKind {
+    /// Short label for tables and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FindingKind::ModeledDrift => "modeled drift",
+            FindingKind::MeasuredRegression => "REGRESSION",
+            FindingKind::MeasuredImprovement => "improvement",
+        }
+    }
+
+    /// True for the kinds that fail the gate.
+    pub fn gates(&self) -> bool {
+        matches!(self, FindingKind::ModeledDrift | FindingKind::MeasuredRegression)
+    }
+}
+
+/// One comparator finding: an (op, phase) cell that moved.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// op name (`"spmv/mouse_gene"`, ...)
+    pub op: String,
+    /// phase name within the op
+    pub phase: String,
+    /// what moved and in which direction
+    pub kind: FindingKind,
+    /// baseline value (modeled seconds or measured median)
+    pub baseline: f64,
+    /// current value
+    pub current: f64,
+    /// threshold the delta was gated at (0 for the bitwise modeled gate)
+    pub threshold: f64,
+}
+
+/// The full diff of two records.
+#[derive(Debug, Clone, Default)]
+pub struct Comparison {
+    /// every cell that moved, replay order
+    pub findings: Vec<Finding>,
+    /// modeled phases bitwise-checked
+    pub modeled_checked: usize,
+    /// measured phases gated
+    pub measured_checked: usize,
+    /// ops present in only one record (renames need a fresh baseline)
+    pub unmatched: Vec<String>,
+}
+
+impl Comparison {
+    /// Findings that fail the gate (drift + regressions).
+    pub fn gating(&self) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| f.kind.gates()).collect()
+    }
+
+    /// True when the gate passes clean.
+    pub fn passed(&self) -> bool {
+        self.gating().is_empty()
+    }
+}
+
+/// Diff `cur` against `base`. Refuses incomparable pairs (different suite
+/// digest or sim constants) with an error rather than reporting noise as
+/// regressions.
+pub fn compare(base: &PerfRecord, cur: &PerfRecord, gate: &GateConfig) -> Result<Comparison> {
+    if base.suite_digest != cur.suite_digest {
+        return Err(Error::Perf(format!(
+            "suite digest mismatch: baseline {} vs current {} — workload or topology \
+             changed, re-baseline instead of comparing",
+            base.suite_digest, cur.suite_digest
+        )));
+    }
+    if base.constants != cur.constants {
+        return Err(Error::Perf(
+            "sim constants differ between baseline and current record — modeled deltas \
+             would be calibration, not regressions; re-baseline (or rerun with the \
+             baseline's --constants profile)"
+                .into(),
+        ));
+    }
+    let mut cmp = Comparison::default();
+    for cur_op in &cur.ops {
+        let Some(base_op) = base.ops.iter().find(|o| o.name == cur_op.name) else {
+            cmp.unmatched.push(format!("{} (new op, no baseline)", cur_op.name));
+            continue;
+        };
+        for (phase, &cur_v) in &cur_op.modeled {
+            let Some(&base_v) = base_op.modeled.get(phase) else {
+                cmp.unmatched.push(format!("{}:{phase} (new modeled phase)", cur_op.name));
+                continue;
+            };
+            cmp.modeled_checked += 1;
+            // bitwise: the modeled timeline is a pure function of the
+            // pinned workload + constants, so != means the code changed it
+            if cur_v.to_bits() != base_v.to_bits() {
+                cmp.findings.push(Finding {
+                    op: cur_op.name.clone(),
+                    phase: phase.clone(),
+                    kind: FindingKind::ModeledDrift,
+                    baseline: base_v,
+                    current: cur_v,
+                    threshold: 0.0,
+                });
+            }
+        }
+        for (phase, cur_st) in &cur_op.measured {
+            let Some(base_st) = base_op.measured.get(phase) else {
+                cmp.unmatched.push(format!("{}:{phase} (new measured phase)", cur_op.name));
+                continue;
+            };
+            cmp.measured_checked += 1;
+            let sigma = base_st.sigma().max(cur_st.sigma());
+            let threshold = gate.threshold(base_st.median, sigma);
+            let delta = cur_st.median - base_st.median;
+            let kind = if delta > threshold {
+                FindingKind::MeasuredRegression
+            } else if delta < -threshold {
+                FindingKind::MeasuredImprovement
+            } else {
+                continue;
+            };
+            cmp.findings.push(Finding {
+                op: cur_op.name.clone(),
+                phase: phase.clone(),
+                kind,
+                baseline: base_st.median,
+                current: cur_st.median,
+                threshold,
+            });
+        }
+    }
+    for base_op in &base.ops {
+        if !cur.ops.iter().any(|o| o.name == base_op.name) {
+            cmp.unmatched.push(format!("{} (dropped from suite)", base_op.name));
+        }
+    }
+    Ok(cmp)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::super::record::{EnvFingerprint, OpRecord, PhaseStat};
+    use super::*;
+
+    fn record_with(modeled_total: f64, exec_median: f64, exec_mad: f64) -> PerfRecord {
+        let mut modeled = BTreeMap::new();
+        modeled.insert("total".to_string(), modeled_total);
+        let mut measured = BTreeMap::new();
+        measured
+            .insert("exec".to_string(), PhaseStat { median: exec_median, mad: exec_mad, n: 5 });
+        PerfRecord {
+            suite: "quick".to_string(),
+            suite_digest: "d".repeat(16),
+            reps: 5,
+            platform: "dgx1".to_string(),
+            gpus: 8,
+            mode: "p*+opt".to_string(),
+            env: EnvFingerprint {
+                host: "h".to_string(),
+                os: "linux-x86_64".to_string(),
+                threads: 1,
+                git_sha: "x".to_string(),
+            },
+            constants: crate::sim::SimConstants::default().to_json_value(),
+            ops: vec![OpRecord { name: "spmv/mouse_gene".to_string(), modeled, measured }],
+        }
+    }
+
+    #[test]
+    fn identical_records_pass_clean() {
+        let a = record_with(1e-3, 2e-3, 1e-4);
+        let cmp = compare(&a, &a.clone(), &GateConfig::default()).unwrap();
+        assert!(cmp.passed(), "{:?}", cmp.findings);
+        assert_eq!(cmp.modeled_checked, 1);
+        assert_eq!(cmp.measured_checked, 1);
+    }
+
+    #[test]
+    fn modeled_drift_is_bitwise() {
+        let a = record_with(1e-3, 2e-3, 1e-4);
+        // one ULP of drift must still be flagged
+        let b = record_with(f64::from_bits(1e-3f64.to_bits() + 1), 2e-3, 1e-4);
+        let cmp = compare(&a, &b, &GateConfig::default()).unwrap();
+        let gating = cmp.gating();
+        assert_eq!(gating.len(), 1);
+        assert_eq!(gating[0].kind, FindingKind::ModeledDrift);
+    }
+
+    #[test]
+    fn measured_noise_within_threshold_is_forgiven() {
+        let gate = GateConfig { k_sigma: 8.0, rel_floor: 0.25, abs_floor_s: 2e-3 };
+        let a = record_with(1e-3, 10e-3, 0.5e-3);
+        // +20%: inside rel_floor 25% and inside 8σ of the 0.5 ms MAD
+        let b = record_with(1e-3, 12e-3, 0.5e-3);
+        assert!(compare(&a, &b, &gate).unwrap().passed());
+    }
+
+    #[test]
+    fn measured_regression_past_threshold_gates() {
+        let gate = GateConfig { k_sigma: 8.0, rel_floor: 0.25, abs_floor_s: 2e-3 };
+        let a = record_with(1e-3, 10e-3, 0.2e-3);
+        let b = record_with(1e-3, 60e-3, 0.2e-3);
+        let cmp = compare(&a, &b, &gate).unwrap();
+        let gating = cmp.gating();
+        assert_eq!(gating.len(), 1);
+        assert_eq!(gating[0].kind, FindingKind::MeasuredRegression);
+        assert_eq!(gating[0].phase, "exec");
+    }
+
+    #[test]
+    fn improvements_report_but_do_not_gate() {
+        let gate = GateConfig { k_sigma: 8.0, rel_floor: 0.25, abs_floor_s: 2e-3 };
+        let a = record_with(1e-3, 60e-3, 0.2e-3);
+        let b = record_with(1e-3, 10e-3, 0.2e-3);
+        let cmp = compare(&a, &b, &gate).unwrap();
+        assert!(cmp.passed());
+        assert_eq!(cmp.findings.len(), 1);
+        assert_eq!(cmp.findings[0].kind, FindingKind::MeasuredImprovement);
+    }
+
+    #[test]
+    fn digest_mismatch_is_an_error_not_a_finding() {
+        let a = record_with(1e-3, 2e-3, 1e-4);
+        let mut b = record_with(1e-3, 2e-3, 1e-4);
+        b.suite_digest = "e".repeat(16);
+        assert!(compare(&a, &b, &GateConfig::default()).is_err());
+    }
+
+    #[test]
+    fn abs_floor_shields_microsecond_phases() {
+        let gate = GateConfig { k_sigma: 8.0, rel_floor: 0.25, abs_floor_s: 2e-3 };
+        // 5 µs -> 1.5 ms: huge relatively, but under the 2 ms absolute floor
+        let a = record_with(1e-3, 5e-6, 1e-6);
+        let b = record_with(1e-3, 1.5e-3, 1e-6);
+        assert!(compare(&a, &b, &gate).unwrap().passed());
+    }
+}

@@ -1,0 +1,123 @@
+//! The perf trajectory observatory (DESIGN.md §15).
+//!
+//! `msrep perf` replays a canonical suite of pinned workload scenarios
+//! ([`suite`]) N times each, reduces the measured walls with median + MAD
+//! ([`crate::util::stats::Robust`]), and appends one schema-versioned
+//! record ([`record::PerfRecord`]) to `BENCH_history.jsonl` through the
+//! shared [`crate::util::bench`] writer. `msrep perf --against <baseline>`
+//! then diffs the fresh record against a stored one ([`compare`]):
+//! modeled phases gate bitwise, measured phases at a MAD-scaled noise
+//! threshold, and any regression triggers a traced re-run of the
+//! offending op with span-level attribution ([`attribution`]).
+
+pub mod attribution;
+pub mod compare;
+pub mod record;
+pub mod suite;
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::Mode;
+use crate::error::{Error, Result};
+use crate::sim::Platform;
+use crate::util::stats::Robust;
+
+pub use compare::{compare, Comparison, Finding, FindingKind, GateConfig};
+pub use record::{EnvFingerprint, OpRecord, PerfRecord, PhaseStat};
+pub use suite::{SuiteSpec, Workloads};
+
+/// One suite run's configuration.
+#[derive(Debug, Clone)]
+pub struct PerfOptions {
+    /// simulated platform (with any `--constants` profile already applied)
+    pub platform: Platform,
+    /// GPUs to use
+    pub num_gpus: usize,
+    /// partitioning mode
+    pub mode: Mode,
+    /// suite variant: `"quick"` or `"full"`
+    pub suite: String,
+    /// reps per op (>= 2 recommended so MAD is meaningful)
+    pub reps: usize,
+}
+
+impl PerfOptions {
+    /// The default observatory configuration: quick suite, 5 reps, DGX-1
+    /// topology, p*+opt mode.
+    pub fn quick() -> PerfOptions {
+        PerfOptions {
+            platform: Platform::dgx1(),
+            num_gpus: Platform::dgx1().num_gpus,
+            mode: Mode::PStarOpt,
+            suite: "quick".to_string(),
+            reps: 5,
+        }
+    }
+}
+
+/// Replay the whole suite `opts.reps` times and reduce into one record.
+///
+/// Modeled phases are asserted identical across reps — a modeled value
+/// that moves *within* a single run means nondeterminism upstream, which
+/// the observatory reports as an error rather than quietly recording.
+pub fn run_suite(opts: &PerfOptions) -> Result<PerfRecord> {
+    let spec = suite::spec(&opts.suite)
+        .ok_or_else(|| Error::Usage(format!("unknown perf suite '{}' (quick | full)", opts.suite)))?;
+    if opts.reps == 0 {
+        return Err(Error::Usage("--reps must be >= 1".into()));
+    }
+    let w = Workloads::build(&spec)?;
+    let record = run_suite_on(opts, &w)?;
+    Ok(record)
+}
+
+/// [`run_suite`] over pre-built workloads (the CLI reuses the workloads
+/// for attribution after a regression instead of regenerating them).
+pub fn run_suite_on(opts: &PerfOptions, w: &Workloads) -> Result<PerfRecord> {
+    let spec = w.spec();
+    let mut ops = Vec::with_capacity(suite::OP_NAMES.len());
+    for op in suite::OP_NAMES {
+        let mut modeled: Option<BTreeMap<String, f64>> = None;
+        let mut measured_samples: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+        for _ in 0..opts.reps {
+            let s = suite::run_op(op, w, &opts.platform, opts.num_gpus, opts.mode)?;
+            match &modeled {
+                None => modeled = Some(s.modeled),
+                Some(first) => {
+                    if first
+                        .iter()
+                        .any(|(k, v)| s.modeled.get(k).map(|x| x.to_bits()) != Some(v.to_bits()))
+                    {
+                        return Err(Error::Perf(format!(
+                            "op '{op}': modeled phases differ across reps of one run — \
+                             the modeled timeline must be deterministic"
+                        )));
+                    }
+                }
+            }
+            for (phase, wall) in s.measured {
+                measured_samples.entry(phase).or_default().push(wall);
+            }
+        }
+        let measured = measured_samples
+            .into_iter()
+            .map(|(phase, samples)| (phase, PhaseStat::from_robust(Robust::of(&samples))))
+            .collect();
+        ops.push(OpRecord {
+            name: op.to_string(),
+            modeled: modeled.unwrap_or_default(),
+            measured,
+        });
+    }
+    Ok(PerfRecord {
+        suite: spec.name.to_string(),
+        suite_digest: suite::digest(spec, &opts.platform.name, opts.num_gpus, opts.mode),
+        reps: opts.reps,
+        platform: opts.platform.name.clone(),
+        gpus: opts.num_gpus,
+        mode: opts.mode.label().to_string(),
+        env: EnvFingerprint::capture(),
+        constants: opts.platform.consts.to_json_value(),
+        ops,
+    })
+}

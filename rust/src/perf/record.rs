@@ -1,0 +1,335 @@
+//! The schema-versioned perf record: what one suite run appends to
+//! `BENCH_history.jsonl` (DESIGN.md §15).
+//!
+//! Records ride the canonical [`crate::util::bench`] envelope
+//! (`schema: msrep-bench-v1`, `bench: perf_suite`) so the history file is
+//! diffable line-by-line and every BENCH_* artifact in the repo parses
+//! with one reader. The record carries enough environment fingerprint
+//! (host, OS, thread count, git SHA, sim constants) that a regression can
+//! be traced to *what changed*, not just *when*.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::util::bench::{bench_record, BENCH_SCHEMA};
+use crate::util::json::Value;
+use crate::util::stats::Robust;
+
+/// Robust summary of one measured phase across reps: median + MAD + count
+/// (the noise model the comparator gates against).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseStat {
+    /// median wall seconds across reps
+    pub median: f64,
+    /// median absolute deviation (un-scaled; σ ≈ 1.4826 × mad)
+    pub mad: f64,
+    /// reps summarized
+    pub n: usize,
+}
+
+impl PhaseStat {
+    /// Build from a [`Robust`] reduction.
+    pub fn from_robust(r: Robust) -> PhaseStat {
+        PhaseStat { median: r.median, mad: r.mad, n: r.n }
+    }
+
+    /// σ-equivalent scale (MAD × 1.4826).
+    pub fn sigma(&self) -> f64 {
+        self.mad * 1.4826
+    }
+}
+
+/// One op's reduced observations: deterministic modeled phases and
+/// noise-summarized measured phases.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpRecord {
+    /// op name (`"spmv/mouse_gene"`, ...)
+    pub name: String,
+    /// modeled seconds per phase — identical across reps by construction
+    pub modeled: BTreeMap<String, f64>,
+    /// measured wall stats per phase
+    pub measured: BTreeMap<String, PhaseStat>,
+}
+
+/// Environment fingerprint stamped into every record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnvFingerprint {
+    /// host name (`$HOSTNAME`, or `"unknown"`)
+    pub host: String,
+    /// `os-arch` of the build (`"linux-x86_64"`, ...)
+    pub os: String,
+    /// available hardware threads
+    pub threads: usize,
+    /// git commit (env override or `git rev-parse`, else `"unknown"`)
+    pub git_sha: String,
+}
+
+impl EnvFingerprint {
+    /// Capture the current environment. The git SHA resolves in order:
+    /// `MSREP_GIT_SHA`, `GITHUB_SHA` (CI), `git rev-parse --short HEAD`,
+    /// `"unknown"` — so records stay writable outside a checkout.
+    pub fn capture() -> EnvFingerprint {
+        let host = std::env::var("HOSTNAME").unwrap_or_else(|_| "unknown".to_string());
+        let os = format!("{}-{}", std::env::consts::OS, std::env::consts::ARCH);
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let git_sha = std::env::var("MSREP_GIT_SHA")
+            .or_else(|_| std::env::var("GITHUB_SHA"))
+            .ok()
+            .filter(|s| !s.trim().is_empty())
+            .or_else(|| {
+                std::process::Command::new("git")
+                    .args(["rev-parse", "--short", "HEAD"])
+                    .output()
+                    .ok()
+                    .filter(|o| o.status.success())
+                    .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+                    .filter(|s| !s.is_empty())
+            })
+            .unwrap_or_else(|| "unknown".to_string());
+        EnvFingerprint { host, os, threads, git_sha }
+    }
+}
+
+/// One complete suite run, ready to serialize into the bench envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfRecord {
+    /// suite variant (`"quick"` / `"full"`)
+    pub suite: String,
+    /// workload/topology digest ([`super::suite::digest`])
+    pub suite_digest: String,
+    /// reps each op was replayed
+    pub reps: usize,
+    /// simulated platform name
+    pub platform: String,
+    /// GPUs used
+    pub gpus: usize,
+    /// partitioning mode label
+    pub mode: String,
+    /// environment fingerprint
+    pub env: EnvFingerprint,
+    /// sim constants the modeled timeline was priced with
+    /// ([`crate::sim::SimConstants::to_json_value`])
+    pub constants: Value,
+    /// per-op reductions, in replay order
+    pub ops: Vec<OpRecord>,
+}
+
+fn num(v: f64) -> Value {
+    Value::Num(v)
+}
+
+fn s(v: &str) -> Value {
+    Value::Str(v.to_string())
+}
+
+impl PerfRecord {
+    /// Serialize into the canonical bench envelope
+    /// (`bench: "perf_suite"`, sorted keys, byte-stable).
+    pub fn to_value(&self) -> Value {
+        let mut fields = BTreeMap::new();
+        fields.insert("suite".to_string(), s(&self.suite));
+        fields.insert("suite_digest".to_string(), s(&self.suite_digest));
+        fields.insert("reps".to_string(), num(self.reps as f64));
+        fields.insert("platform".to_string(), s(&self.platform));
+        fields.insert("gpus".to_string(), num(self.gpus as f64));
+        fields.insert("mode".to_string(), s(&self.mode));
+        let mut env = BTreeMap::new();
+        env.insert("host".to_string(), s(&self.env.host));
+        env.insert("os".to_string(), s(&self.env.os));
+        env.insert("threads".to_string(), num(self.env.threads as f64));
+        env.insert("git_sha".to_string(), s(&self.env.git_sha));
+        fields.insert("env".to_string(), Value::Obj(env));
+        fields.insert("constants".to_string(), self.constants.clone());
+        let ops: Vec<Value> = self
+            .ops
+            .iter()
+            .map(|op| {
+                let mut o = BTreeMap::new();
+                o.insert("op".to_string(), s(&op.name));
+                o.insert(
+                    "modeled".to_string(),
+                    Value::Obj(op.modeled.iter().map(|(k, v)| (k.clone(), num(*v))).collect()),
+                );
+                o.insert(
+                    "measured".to_string(),
+                    Value::Obj(
+                        op.measured
+                            .iter()
+                            .map(|(k, st)| {
+                                let mut m = BTreeMap::new();
+                                m.insert("median".to_string(), num(st.median));
+                                m.insert("mad".to_string(), num(st.mad));
+                                m.insert("n".to_string(), num(st.n as f64));
+                                (k.clone(), Value::Obj(m))
+                            })
+                            .collect(),
+                    ),
+                );
+                Value::Obj(o)
+            })
+            .collect();
+        fields.insert("ops".to_string(), Value::Arr(ops));
+        bench_record("perf_suite", fields)
+    }
+
+    /// Parse a record back from its envelope — the comparator's baseline
+    /// reader. Rejects foreign schemas and bench families loudly instead
+    /// of diffing garbage.
+    pub fn from_value(v: &Value) -> Result<PerfRecord> {
+        let schema = v.get("schema").and_then(Value::as_str).unwrap_or("");
+        if schema != BENCH_SCHEMA {
+            return Err(Error::Perf(format!(
+                "baseline schema '{schema}' != '{BENCH_SCHEMA}'"
+            )));
+        }
+        let bench = v.get("bench").and_then(Value::as_str).unwrap_or("");
+        if bench != "perf_suite" {
+            return Err(Error::Perf(format!(
+                "baseline bench family '{bench}' != 'perf_suite'"
+            )));
+        }
+        let get_str = |key: &str| -> Result<String> {
+            v.get(key)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| Error::Perf(format!("baseline record missing '{key}'")))
+        };
+        let get_usize = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| Error::Perf(format!("baseline record missing '{key}'")))
+        };
+        let env_v = v
+            .get("env")
+            .ok_or_else(|| Error::Perf("baseline record missing 'env'".into()))?;
+        let env = EnvFingerprint {
+            host: env_v.get("host").and_then(Value::as_str).unwrap_or("unknown").to_string(),
+            os: env_v.get("os").and_then(Value::as_str).unwrap_or("unknown").to_string(),
+            threads: env_v.get("threads").and_then(Value::as_usize).unwrap_or(1),
+            git_sha: env_v.get("git_sha").and_then(Value::as_str).unwrap_or("unknown").to_string(),
+        };
+        let ops_v = v
+            .get("ops")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::Perf("baseline record missing 'ops'".into()))?;
+        let mut ops = Vec::with_capacity(ops_v.len());
+        for op_v in ops_v {
+            let name = op_v
+                .get("op")
+                .and_then(Value::as_str)
+                .ok_or_else(|| Error::Perf("baseline op missing 'op' name".into()))?
+                .to_string();
+            let modeled = op_v
+                .get("modeled")
+                .and_then(Value::as_obj)
+                .ok_or_else(|| Error::Perf(format!("baseline op '{name}' missing 'modeled'")))?
+                .iter()
+                .filter_map(|(k, vv)| vv.as_f64().map(|f| (k.clone(), f)))
+                .collect();
+            let mut measured = BTreeMap::new();
+            let measured_v = op_v
+                .get("measured")
+                .and_then(Value::as_obj)
+                .ok_or_else(|| Error::Perf(format!("baseline op '{name}' missing 'measured'")))?;
+            for (phase, st) in measured_v {
+                let field = |key: &str| {
+                    st.get(key).and_then(Value::as_f64).ok_or_else(|| {
+                        Error::Perf(format!("baseline op '{name}' phase '{phase}' missing '{key}'"))
+                    })
+                };
+                measured.insert(
+                    phase.clone(),
+                    PhaseStat {
+                        median: field("median")?,
+                        mad: field("mad")?,
+                        n: field("n")? as usize,
+                    },
+                );
+            }
+            ops.push(OpRecord { name, modeled, measured });
+        }
+        Ok(PerfRecord {
+            suite: get_str("suite")?,
+            suite_digest: get_str("suite_digest")?,
+            reps: get_usize("reps")?,
+            platform: get_str("platform")?,
+            gpus: get_usize("gpus")?,
+            mode: get_str("mode")?,
+            env,
+            constants: v
+                .get("constants")
+                .cloned()
+                .ok_or_else(|| Error::Perf("baseline record missing 'constants'".into()))?,
+            ops,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PerfRecord {
+        let mut modeled = BTreeMap::new();
+        modeled.insert("total".to_string(), 1.5e-3);
+        let mut measured = BTreeMap::new();
+        measured.insert("exec".to_string(), PhaseStat { median: 2.0e-3, mad: 1.0e-4, n: 5 });
+        PerfRecord {
+            suite: "quick".to_string(),
+            suite_digest: "00ff00ff00ff00ff".to_string(),
+            reps: 5,
+            platform: "dgx1".to_string(),
+            gpus: 8,
+            mode: "p*+opt".to_string(),
+            env: EnvFingerprint {
+                host: "ci".to_string(),
+                os: "linux-x86_64".to_string(),
+                threads: 4,
+                git_sha: "abc1234".to_string(),
+            },
+            constants: crate::sim::SimConstants::default().to_json_value(),
+            ops: vec![OpRecord { name: "spmv/mouse_gene".to_string(), modeled, measured }],
+        }
+    }
+
+    #[test]
+    fn record_round_trips_through_the_envelope() {
+        let rec = sample();
+        let v = rec.to_value();
+        assert_eq!(v.get("schema").and_then(Value::as_str), Some(BENCH_SCHEMA));
+        assert_eq!(v.get("bench").and_then(Value::as_str), Some("perf_suite"));
+        let back = PerfRecord::from_value(&v).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn serialization_is_byte_stable() {
+        let v = sample().to_value();
+        let once = v.to_json();
+        let twice = crate::util::json::parse(&once).unwrap().to_json();
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn foreign_records_are_rejected() {
+        let mut fields = BTreeMap::new();
+        fields.insert("suite".to_string(), Value::Str("quick".to_string()));
+        let wrong_family = bench_record("calibration", fields);
+        let err = PerfRecord::from_value(&wrong_family).unwrap_err();
+        assert!(err.to_string().contains("perf_suite"), "{err}");
+    }
+
+    #[test]
+    fn phase_stat_sigma_scales_mad() {
+        let st = PhaseStat { median: 1.0, mad: 0.1, n: 3 };
+        assert!((st.sigma() - 0.14826).abs() < 1e-12);
+    }
+
+    #[test]
+    fn env_fingerprint_is_well_formed() {
+        let e = EnvFingerprint::capture();
+        assert!(!e.os.is_empty());
+        assert!(e.threads >= 1);
+        assert!(!e.git_sha.is_empty());
+    }
+}

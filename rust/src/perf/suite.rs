@@ -1,0 +1,472 @@
+//! The canonical perf suite: pinned workload scenarios the observatory
+//! replays run after run (DESIGN.md §15).
+//!
+//! Every scenario is derived from the existing workload suites
+//! ([`crate::workload`]) at fixed, seeded sizes, so two runs of the same
+//! tree produce bitwise-identical modeled timelines and the only run-to-run
+//! variance is host noise on the measured walls. The `quick` spec keeps
+//! each op in the low-millisecond range so the suite fits a CI smoke
+//! budget; `full` replays the unscaled workloads.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::coordinator::{Backend, Engine, Mode, RunConfig};
+use crate::error::{Error, Result};
+use crate::formats::{convert, gen, FormatKind, Matrix};
+use crate::obs::{Trace, TraceRecorder};
+use crate::sim::Platform;
+use crate::solver;
+use crate::sptrsv::Triangle;
+use crate::util::rng::Rng;
+use crate::workload;
+
+/// Pinned sizes of one suite variant. Everything that shapes the workload
+/// lives here so the [`digest`] can certify two records replayed the same
+/// scenarios.
+#[derive(Debug, Clone)]
+pub struct SuiteSpec {
+    /// variant name: `"quick"` or `"full"`
+    pub name: &'static str,
+    /// nnz of the scaled `mouse_gene` analog the SpMV/SpMM ops replay
+    pub spmv_nnz: usize,
+    /// SpMM right-hand-side count
+    pub spmm_k: usize,
+    /// CG iteration budget (`poisson2d-cg` scenario, tol unchanged)
+    pub cg_max_iters: usize,
+    /// rows = cols of each serve tenant matrix
+    pub serve_m: usize,
+    /// nnz of each serve tenant matrix
+    pub serve_nnz: usize,
+    /// requests in the serve burst
+    pub serve_requests: usize,
+}
+
+/// Look up a suite variant by name.
+pub fn spec(name: &str) -> Option<SuiteSpec> {
+    match name {
+        "quick" => Some(SuiteSpec {
+            name: "quick",
+            spmv_nnz: 40_000,
+            spmm_k: 4,
+            cg_max_iters: 40,
+            serve_m: 512,
+            serve_nnz: 6_000,
+            serve_requests: 24,
+        }),
+        "full" => Some(SuiteSpec {
+            name: "full",
+            spmv_nnz: 750_000,
+            spmm_k: 8,
+            cg_max_iters: 400,
+            serve_m: 2_048,
+            serve_nnz: 40_000,
+            serve_requests: 96,
+        }),
+        _ => None,
+    }
+}
+
+/// The ops every suite run replays, in replay order.
+pub const OP_NAMES: [&str; 6] = [
+    "spmv/mouse_gene",
+    "spmm/mouse_gene",
+    "spgemm/powerlaw-square",
+    "sptrsv/ilu0-poisson",
+    "cg/poisson2d-cg",
+    "serve/burst",
+];
+
+/// FNV-1a 64-bit hash (the suite-digest primitive — stable, dependency-free).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Digest certifying what a record measured: suite sizes, op list,
+/// platform, GPU count and mode, hashed into 16 hex chars. The comparator
+/// refuses to diff records with different digests — a size or topology
+/// change is a new baseline, not a regression.
+pub fn digest(s: &SuiteSpec, platform: &str, gpus: usize, mode: Mode) -> String {
+    let desc = format!(
+        "{}|spmv_nnz={}|spmm_k={}|cg_max_iters={}|serve_m={}|serve_nnz={}|serve_requests={}\
+         |ops={}|platform={}|gpus={}|mode={}",
+        s.name,
+        s.spmv_nnz,
+        s.spmm_k,
+        s.cg_max_iters,
+        s.serve_m,
+        s.serve_nnz,
+        s.serve_requests,
+        OP_NAMES.join(","),
+        platform,
+        gpus,
+        mode.label(),
+    );
+    format!("{:016x}", fnv1a(desc.as_bytes()))
+}
+
+/// One rep's observation of one op: the deterministic modeled phase
+/// breakdown and this rep's measured host walls, both keyed by phase name.
+#[derive(Debug, Clone)]
+pub struct OpSample {
+    /// modeled seconds per phase (must be identical across reps)
+    pub modeled: BTreeMap<String, f64>,
+    /// measured wall seconds per phase (the noisy, gated quantity)
+    pub measured: BTreeMap<String, f64>,
+}
+
+/// One traced replay of an op: the span timeline plus the measured
+/// per-GPU kernel walls (empty for ops off the measured backend) — the
+/// attribution report's raw material.
+#[derive(Debug)]
+pub struct TracedRun {
+    /// recorded span timeline
+    pub trace: Trace,
+    /// per-GPU measured kernel busy seconds (measured backend only)
+    pub measured_busy: Vec<f64>,
+}
+
+/// Pre-generated inputs shared by every rep: matrix generation is pulled
+/// out of the timed loop so reps measure the kernels, not the PRNG.
+pub struct Workloads {
+    spec: SuiteSpec,
+    spmv_mat: Matrix,
+    spmv_x: Vec<f32>,
+    spmm_x: Vec<f32>,
+    spgemm_chain: Vec<Matrix>,
+    sptrsv_factor: Matrix,
+    sptrsv_b: Vec<f32>,
+    cg_mat: Matrix,
+    cg_b: Vec<f32>,
+    cg_cfg: solver::SolverConfig,
+    serve_tenants: Vec<Matrix>,
+}
+
+impl Workloads {
+    /// Generate every scenario input for one suite variant.
+    pub fn build(spec: &SuiteSpec) -> Result<Workloads> {
+        let entry = workload::by_name("mouse_gene")
+            .ok_or_else(|| Error::Perf("suite matrix 'mouse_gene' missing".into()))?;
+        let mut scaled = entry;
+        scaled.nnz = spec.spmv_nnz;
+        let spmv_mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(workload::suite_matrix(&scaled))));
+        let spmv_x = gen::dense_vector(spmv_mat.cols(), 7);
+        let spmm_x = gen::dense_vector(spmv_mat.cols() * spec.spmm_k, 9);
+
+        let sg = workload::spgemm_scenario_by_name("powerlaw-square")
+            .ok_or_else(|| Error::Perf("spgemm scenario 'powerlaw-square' missing".into()))?;
+        let spgemm_chain = workload::spgemm_scenario_chain(&sg);
+
+        let ts = workload::sptrsv_scenario_by_name("ilu0-poisson")
+            .ok_or_else(|| Error::Perf("sptrsv scenario 'ilu0-poisson' missing".into()))?;
+        let sptrsv_factor = Matrix::Csr(workload::sptrsv_scenario_factor(&ts));
+        let sptrsv_b = gen::dense_vector(sptrsv_factor.rows(), 11);
+
+        let cs = workload::solver_scenario_by_name("poisson2d-cg")
+            .ok_or_else(|| Error::Perf("solver scenario 'poisson2d-cg' missing".into()))?;
+        let cg_mat = Matrix::Csr(convert::to_csr(&Matrix::Coo(workload::scenario_matrix(&cs))));
+        let x_star = gen::dense_vector(cg_mat.rows(), cs.seed.wrapping_add(1));
+        let mut cg_b = vec![0.0f32; cg_mat.rows()];
+        crate::spmv::spmv_matrix(&cg_mat, &x_star, 1.0, 0.0, &mut cg_b)?;
+        let cg_cfg = solver::SolverConfig {
+            tol: cs.tol,
+            max_iters: spec.cg_max_iters.min(cs.max_iters),
+            plan_source: solver::PlanSource::Reused,
+        };
+
+        let serve_tenants = (0..2)
+            .map(|t| {
+                let coo = gen::power_law(spec.serve_m, spec.serve_m, spec.serve_nnz, 2.0, 51 + t);
+                Matrix::Csr(convert::to_csr(&Matrix::Coo(coo)))
+            })
+            .collect();
+
+        Ok(Workloads {
+            spec: spec.clone(),
+            spmv_mat,
+            spmv_x,
+            spmm_x,
+            spgemm_chain,
+            sptrsv_factor,
+            sptrsv_b,
+            cg_mat,
+            cg_b,
+            cg_cfg,
+            serve_tenants,
+        })
+    }
+
+    /// The spec these workloads were generated for.
+    pub fn spec(&self) -> &SuiteSpec {
+        &self.spec
+    }
+}
+
+/// Engine configuration for the measured-backend ops (SpMV/SpMM).
+fn measured_config(platform: &Platform, num_gpus: usize, mode: Mode) -> RunConfig {
+    RunConfig {
+        platform: platform.clone(),
+        num_gpus,
+        mode,
+        format: FormatKind::Csr,
+        backend: Backend::Measured,
+        numa_aware: None,
+        strategy_override: None,
+    }
+}
+
+/// Engine configuration for the modeled ops (SpGEMM/SpTRSV/CG/serve) —
+/// their `measured_*` walls are host `Instant` timings on every backend.
+fn modeled_config(platform: &Platform, num_gpus: usize, mode: Mode) -> RunConfig {
+    RunConfig {
+        backend: Backend::CpuRef,
+        ..measured_config(platform, num_gpus, mode)
+    }
+}
+
+fn bt(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+/// Build the serve burst: exponential inter-arrivals over the registered
+/// tenants (the same trace shape `msrep serve-bench` replays).
+fn serve_burst(
+    tenants: &[crate::serve::MatrixId],
+    n: usize,
+    requests: usize,
+    seed: u64,
+) -> Vec<crate::serve::SpmvRequest> {
+    let mut rng = Rng::new(seed);
+    let rate = 200_000.0;
+    let mut t = 0.0f64;
+    (0..requests)
+        .map(|i| {
+            t += -(1.0 - rng.f64()).ln() / rate;
+            crate::serve::SpmvRequest {
+                matrix: tenants[rng.usize_below(tenants.len())],
+                x: gen::dense_vector(n, seed.wrapping_add(1000 + i as u64)),
+                alpha: 1.0,
+                arrival_s: t,
+                deadline_s: None,
+            }
+        })
+        .collect()
+}
+
+/// Run one rep of one op, optionally traced. Returns the sample and, when
+/// `recorder` is enabled, leaves the spans in it for the caller to take.
+fn run_op_inner(
+    op: &str,
+    w: &Workloads,
+    platform: &Platform,
+    num_gpus: usize,
+    mode: Mode,
+    recorder: Option<&TraceRecorder>,
+) -> Result<(OpSample, Vec<f64>)> {
+    let attach = |mut e: Engine| -> Engine {
+        if let Some(r) = recorder {
+            e.set_recorder(r.clone());
+        }
+        e
+    };
+    match op {
+        "spmv/mouse_gene" => {
+            let e = attach(Engine::new(measured_config(platform, num_gpus, mode))?);
+            let rep = e.spmv(&w.spmv_mat, &w.spmv_x, 1.0, 0.0, None)?;
+            let m = &rep.metrics;
+            Ok((
+                OpSample {
+                    modeled: bt(&[
+                        ("partition", m.t_partition),
+                        ("h2d", m.t_h2d),
+                        ("compute", m.t_compute),
+                        ("merge", m.t_merge),
+                        ("total", m.modeled_total),
+                    ]),
+                    measured: bt(&[
+                        ("partition", m.measured_partition),
+                        ("exec", m.measured_exec),
+                        ("merge", m.measured_merge),
+                    ]),
+                },
+                m.measured_busy.clone(),
+            ))
+        }
+        "spmm/mouse_gene" => {
+            let e = attach(Engine::new(measured_config(platform, num_gpus, mode))?);
+            let rep = e.spmm(&w.spmv_mat, &w.spmm_x, w.spec.spmm_k, 1.0, 0.0, None)?;
+            let m = &rep.metrics;
+            Ok((
+                OpSample {
+                    modeled: bt(&[
+                        ("partition", m.t_partition),
+                        ("h2d", m.t_h2d),
+                        ("compute", m.t_compute),
+                        ("merge", m.t_merge),
+                        ("total", m.modeled_total),
+                    ]),
+                    measured: bt(&[
+                        ("partition", m.measured_partition),
+                        ("exec", m.measured_exec),
+                        ("merge", m.measured_merge),
+                    ]),
+                },
+                m.measured_busy.clone(),
+            ))
+        }
+        "spgemm/powerlaw-square" => {
+            let e = attach(Engine::new(modeled_config(platform, num_gpus, mode))?);
+            let rep = e.spgemm(&w.spgemm_chain[0], &w.spgemm_chain[1])?;
+            let m = &rep.metrics;
+            Ok((
+                OpSample {
+                    modeled: bt(&[
+                        ("partition", m.t_partition),
+                        ("h2d", m.t_h2d),
+                        ("symbolic", m.t_symbolic),
+                        ("numeric", m.t_numeric),
+                        ("merge", m.t_merge),
+                        ("total", m.modeled_total),
+                    ]),
+                    measured: bt(&[
+                        ("partition", m.measured_partition),
+                        ("symbolic", m.measured_symbolic),
+                        ("numeric", m.measured_numeric),
+                        ("merge", m.measured_merge),
+                    ]),
+                },
+                Vec::new(),
+            ))
+        }
+        "sptrsv/ilu0-poisson" => {
+            let e = attach(Engine::new(modeled_config(platform, num_gpus, mode))?);
+            let rep = e.sptrsv(&w.sptrsv_factor, &w.sptrsv_b, Triangle::Lower)?;
+            let m = &rep.metrics;
+            Ok((
+                OpSample {
+                    modeled: bt(&[
+                        ("partition", m.t_partition),
+                        ("h2d", m.t_h2d),
+                        ("levels", m.t_levels),
+                        ("sync", m.t_sync),
+                        ("d2h", m.t_d2h),
+                        ("total", m.modeled_total),
+                    ]),
+                    measured: bt(&[
+                        ("partition", m.measured_partition),
+                        ("levels", m.measured_levels),
+                        ("sync", m.measured_sync),
+                    ]),
+                },
+                Vec::new(),
+            ))
+        }
+        "cg/poisson2d-cg" => {
+            let e = attach(Engine::new(modeled_config(platform, num_gpus, mode))?);
+            let t0 = Instant::now();
+            let rep = solver::cg(&e, &w.cg_mat, &w.cg_b, &w.cg_cfg)?;
+            let wall = t0.elapsed().as_secs_f64();
+            Ok((
+                OpSample {
+                    modeled: bt(&[
+                        ("plan", rep.t_plan),
+                        ("spmv", rep.modeled_spmv_s),
+                        ("total", rep.modeled_total_s),
+                    ]),
+                    measured: bt(&[("wall", wall)]),
+                },
+                Vec::new(),
+            ))
+        }
+        "serve/burst" => {
+            let cfg = crate::serve::ServeConfig {
+                run: modeled_config(platform, num_gpus, mode),
+                num_engines: 2,
+                max_batch: 4,
+                flush_deadline_s: 100e-6,
+                queue_capacity: 64,
+                plan_cache_capacity: 8,
+            };
+            let mut server = crate::serve::Server::new(cfg)?;
+            if let Some(r) = recorder {
+                server.set_recorder(r);
+            }
+            let tenants: Vec<_> =
+                w.serve_tenants.iter().map(|m| server.register(m.clone())).collect();
+            let burst = serve_burst(&tenants, w.spec.serve_m, w.spec.serve_requests, 42);
+            let t0 = Instant::now();
+            let rep = server.run(burst)?;
+            let wall = t0.elapsed().as_secs_f64();
+            Ok((
+                OpSample {
+                    modeled: bt(&[("makespan", rep.makespan_s)]),
+                    measured: bt(&[("wall", wall)]),
+                },
+                Vec::new(),
+            ))
+        }
+        other => Err(Error::Perf(format!("unknown perf op '{other}'"))),
+    }
+}
+
+/// Run one untraced rep of one op.
+pub fn run_op(
+    op: &str,
+    w: &Workloads,
+    platform: &Platform,
+    num_gpus: usize,
+    mode: Mode,
+) -> Result<OpSample> {
+    run_op_inner(op, w, platform, num_gpus, mode, None).map(|(s, _)| s)
+}
+
+/// Replay one op once with a live [`TraceRecorder`] — the attribution
+/// path a flagged regression triggers (DESIGN.md §15).
+pub fn run_traced(
+    op: &str,
+    w: &Workloads,
+    platform: &Platform,
+    num_gpus: usize,
+    mode: Mode,
+) -> Result<TracedRun> {
+    let recorder = TraceRecorder::enabled();
+    let (_, measured_busy) =
+        run_op_inner(op, w, platform, num_gpus, mode, Some(&recorder))?;
+    Ok(TracedRun { trace: recorder.take(), measured_busy })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_resolve_and_differ() {
+        let q = spec("quick").unwrap();
+        let f = spec("full").unwrap();
+        assert!(q.spmv_nnz < f.spmv_nnz);
+        assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let q = spec("quick").unwrap();
+        let a = digest(&q, "dgx1", 8, Mode::PStarOpt);
+        let b = digest(&q, "dgx1", 8, Mode::PStarOpt);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 16);
+        assert_ne!(a, digest(&q, "dgx1", 4, Mode::PStarOpt));
+        assert_ne!(a, digest(&spec("full").unwrap(), "dgx1", 8, Mode::PStarOpt));
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vector() {
+        // FNV-1a("a") from the published reference implementation
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+    }
+}

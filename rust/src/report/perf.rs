@@ -1,0 +1,144 @@
+//! Renderers for the perf observatory: the per-op suite summary and the
+//! baseline-comparison gate report (DESIGN.md §15).
+
+use crate::perf::{Comparison, FindingKind, PerfRecord};
+
+use super::table::{format_duration_s, Table};
+
+/// Render one suite record as a phase table: every op's modeled phases
+/// next to the measured medians (± MAD) they were observed at.
+pub fn render_perf_record(rec: &PerfRecord) -> String {
+    let mut out = format!(
+        "perf suite '{}' on {} x {} GPUs, mode {}, {} reps (digest {}, git {})\n",
+        rec.suite, rec.platform, rec.gpus, rec.mode, rec.reps, rec.suite_digest, rec.env.git_sha,
+    );
+    let mut t = Table::new(["op", "phase", "modeled", "measured p50", "MAD", "n"]);
+    for op in &rec.ops {
+        let mut phases: Vec<&String> = op.modeled.keys().collect();
+        for p in op.measured.keys() {
+            if !phases.contains(&p) {
+                phases.push(p);
+            }
+        }
+        for phase in phases {
+            let modeled = op
+                .modeled
+                .get(phase)
+                .map(|v| format_duration_s(*v))
+                .unwrap_or_else(|| "-".to_string());
+            let (p50, mad, n) = match op.measured.get(phase) {
+                Some(st) => (
+                    format_duration_s(st.median),
+                    format_duration_s(st.mad),
+                    st.n.to_string(),
+                ),
+                None => ("-".to_string(), "-".to_string(), "-".to_string()),
+            };
+            t.row([op.name.clone(), phase.clone(), modeled, p50, mad, n]);
+        }
+    }
+    out.push_str(&t.render());
+    out
+}
+
+/// Render the comparator's verdict: the checked-cell counts, every
+/// finding (drift, regression, improvement) and the pass/fail line the
+/// CI gate greps for.
+pub fn render_comparison(cmp: &Comparison) -> String {
+    let mut out = format!(
+        "perf gate: {} modeled phases checked bitwise, {} measured phases gated at the \
+         MAD noise threshold\n",
+        cmp.modeled_checked, cmp.measured_checked,
+    );
+    for note in &cmp.unmatched {
+        out.push_str(&format!("  note: unmatched {note}\n"));
+    }
+    if cmp.findings.is_empty() {
+        out.push_str("no deltas past the noise gate.\n");
+    } else {
+        let mut t = Table::new(["verdict", "op", "phase", "baseline", "current", "threshold"]);
+        for f in &cmp.findings {
+            t.row([
+                f.kind.label().to_string(),
+                f.op.clone(),
+                f.phase.clone(),
+                format_duration_s(f.baseline),
+                format_duration_s(f.current),
+                if f.kind == FindingKind::ModeledDrift {
+                    "bitwise".to_string()
+                } else {
+                    format_duration_s(f.threshold)
+                },
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    out.push_str(if cmp.passed() {
+        "perf gate: PASS\n"
+    } else {
+        "perf gate: FAIL\n"
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use crate::perf::{
+        compare, EnvFingerprint, GateConfig, OpRecord, PerfRecord, PhaseStat,
+    };
+
+    use super::*;
+
+    fn rec(exec_median: f64) -> PerfRecord {
+        let mut modeled = BTreeMap::new();
+        modeled.insert("total".to_string(), 1.0e-3);
+        let mut measured = BTreeMap::new();
+        measured
+            .insert("exec".to_string(), PhaseStat { median: exec_median, mad: 1e-4, n: 5 });
+        PerfRecord {
+            suite: "quick".to_string(),
+            suite_digest: "f".repeat(16),
+            reps: 5,
+            platform: "dgx1".to_string(),
+            gpus: 8,
+            mode: "p*-opt".to_string(),
+            env: EnvFingerprint {
+                host: "h".to_string(),
+                os: "linux-x86_64".to_string(),
+                threads: 2,
+                git_sha: "abc".to_string(),
+            },
+            constants: crate::sim::SimConstants::default().to_json_value(),
+            ops: vec![OpRecord { name: "spmv/mouse_gene".to_string(), modeled, measured }],
+        }
+    }
+
+    #[test]
+    fn record_render_lists_every_phase() {
+        let s = render_perf_record(&rec(2e-3));
+        assert!(s.contains("spmv/mouse_gene"), "{s}");
+        assert!(s.contains("total"), "{s}");
+        assert!(s.contains("exec"), "{s}");
+        assert!(s.contains("digest"), "{s}");
+    }
+
+    #[test]
+    fn clean_comparison_renders_pass() {
+        let a = rec(2e-3);
+        let cmp = compare(&a, &a.clone(), &GateConfig::default()).unwrap();
+        let s = render_comparison(&cmp);
+        assert!(s.contains("perf gate: PASS"), "{s}");
+        assert!(s.contains("no deltas"), "{s}");
+    }
+
+    #[test]
+    fn regression_renders_fail_with_the_offending_cell() {
+        let cmp = compare(&rec(2e-3), &rec(80e-3), &GateConfig::default()).unwrap();
+        let s = render_comparison(&cmp);
+        assert!(s.contains("perf gate: FAIL"), "{s}");
+        assert!(s.contains("REGRESSION"), "{s}");
+        assert!(s.contains("exec"), "{s}");
+    }
+}

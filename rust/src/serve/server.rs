@@ -463,6 +463,13 @@ fn flush_window(
         for r in &live {
             rec.span(Track::Lane("serve queue"), "queue", SpanKind::Queue, r.arrival_s, start);
         }
+        // hit/miss markers let the perf attribution report count cache
+        // behavior straight off the trace (DESIGN.md §15)
+        rec.marker(
+            Track::Lane("plan cache"),
+            if hit { "cache hit" } else { "cache miss" },
+            start,
+        );
         if !hit {
             rec.span(Track::Engine(e), "plan", SpanKind::Phase, start, start + t_plan);
         }

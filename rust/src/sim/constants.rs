@@ -9,8 +9,11 @@
 //! every modeled number in the repo is unchanged until a calibration is
 //! explicitly applied.
 
+use std::collections::BTreeMap;
+
 use crate::error::{Error, Result};
 use crate::formats::FormatKind;
+use crate::util::json::{self, Value};
 
 /// Default fraction of host memory bandwidth divisor for single-threaded
 /// CPU merge streams (read `np` vectors + write one at `host_mem_bw / 4`).
@@ -111,6 +114,102 @@ impl SimConstants {
         }
         Ok(())
     }
+
+    /// The constant names in field order — the one list [`Self::to_json_value`]
+    /// and [`Self::from_json_value`] both walk, so a field added to the
+    /// struct cannot be forgotten by only one side.
+    const FIELDS: [&'static str; 10] = [
+        "csr_efficiency",
+        "csc_efficiency",
+        "coo_efficiency",
+        "spgemm_efficiency",
+        "sptrsv_efficiency",
+        "sptrsv_sync_scale",
+        "merge_bw_divisor",
+        "cpu_search_op_s",
+        "cpu_rewrite_op_s",
+        "cpu_fixup_op_s",
+    ];
+
+    fn field(&self, name: &str) -> f64 {
+        match name {
+            "csr_efficiency" => self.csr_efficiency,
+            "csc_efficiency" => self.csc_efficiency,
+            "coo_efficiency" => self.coo_efficiency,
+            "spgemm_efficiency" => self.spgemm_efficiency,
+            "sptrsv_efficiency" => self.sptrsv_efficiency,
+            "sptrsv_sync_scale" => self.sptrsv_sync_scale,
+            "merge_bw_divisor" => self.merge_bw_divisor,
+            "cpu_search_op_s" => self.cpu_search_op_s,
+            "cpu_rewrite_op_s" => self.cpu_rewrite_op_s,
+            "cpu_fixup_op_s" => self.cpu_fixup_op_s,
+            other => unreachable!("unknown SimConstants field '{other}'"),
+        }
+    }
+
+    fn set_field(&mut self, name: &str, v: f64) {
+        match name {
+            "csr_efficiency" => self.csr_efficiency = v,
+            "csc_efficiency" => self.csc_efficiency = v,
+            "coo_efficiency" => self.coo_efficiency = v,
+            "spgemm_efficiency" => self.spgemm_efficiency = v,
+            "sptrsv_efficiency" => self.sptrsv_efficiency = v,
+            "sptrsv_sync_scale" => self.sptrsv_sync_scale = v,
+            "merge_bw_divisor" => self.merge_bw_divisor = v,
+            "cpu_search_op_s" => self.cpu_search_op_s = v,
+            "cpu_rewrite_op_s" => self.cpu_rewrite_op_s = v,
+            "cpu_fixup_op_s" => self.cpu_fixup_op_s = v,
+            other => unreachable!("unknown SimConstants field '{other}'"),
+        }
+    }
+
+    /// Serialize to a JSON object value (sorted keys — byte-stable).
+    pub fn to_json_value(&self) -> Value {
+        let mut o = BTreeMap::new();
+        for name in Self::FIELDS {
+            o.insert(name.to_string(), Value::Num(self.field(name)));
+        }
+        Value::Obj(o)
+    }
+
+    /// Serialize to a compact JSON string — the `msrep calibrate --save`
+    /// payload [`Self::from_json`] reads back.
+    pub fn to_json(&self) -> String {
+        self.to_json_value().to_json()
+    }
+
+    /// Deserialize from a parsed JSON value. Every constant is required
+    /// (a calibration profile is a complete constant set, not a patch) and
+    /// the result is [`validate`](Self::validate)d before it is returned.
+    pub fn from_json_value(v: &Value) -> Result<SimConstants> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| Error::Platform("constants profile must be a JSON object".into()))?;
+        let mut c = SimConstants::default();
+        for name in Self::FIELDS {
+            let num = obj
+                .get(name)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| {
+                    Error::Platform(format!("constants profile missing numeric field '{name}'"))
+                })?;
+            c.set_field(name, num);
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Deserialize from JSON text. Accepts either a bare constants object
+    /// (the `msrep calibrate --save` artifact) or a full
+    /// `BENCH_calibration.json` report, whose `constants.fitted` object is
+    /// used — so `--constants BENCH_calibration.json` works directly.
+    pub fn from_json(text: &str) -> Result<SimConstants> {
+        let v = json::parse(text)?;
+        if let Some(fitted) = v.get("constants").and_then(|c| c.get("fitted")) {
+            return Self::from_json_value(fitted);
+        }
+        Self::from_json_value(&v)
+    }
 }
 
 #[cfg(test)]
@@ -131,6 +230,45 @@ mod tests {
         assert_eq!(c.cpu_rewrite_op_s, 1.5e-9);
         assert_eq!(c.cpu_fixup_op_s, 50e-9);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let mut c = SimConstants::default();
+        c.csr_efficiency = 0.6180339887498949;
+        c.cpu_fixup_op_s = 42.5e-9;
+        let back = SimConstants::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c, "constants must survive serialization bitwise");
+    }
+
+    #[test]
+    fn from_json_requires_every_field() {
+        let mut v = SimConstants::default().to_json_value();
+        if let Value::Obj(m) = &mut v {
+            m.remove("merge_bw_divisor");
+        }
+        let err = SimConstants::from_json(&v.to_json()).unwrap_err();
+        assert!(err.to_string().contains("merge_bw_divisor"), "{err}");
+    }
+
+    #[test]
+    fn from_json_rejects_out_of_bound_profiles() {
+        let mut c = SimConstants::default();
+        c.coo_efficiency = 1.5;
+        assert!(SimConstants::from_json(&c.to_json()).is_err());
+    }
+
+    #[test]
+    fn from_json_unwraps_a_calibration_report() {
+        let mut fitted = SimConstants::default();
+        fitted.csc_efficiency = 0.61;
+        let report = format!(
+            r#"{{"schema":"msrep-bench-v1","bench":"calibration","constants":{{"default":{},"fitted":{}}}}}"#,
+            SimConstants::default().to_json(),
+            fitted.to_json(),
+        );
+        let back = SimConstants::from_json(&report).unwrap();
+        assert_eq!(back, fitted);
     }
 
     #[test]

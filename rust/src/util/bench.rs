@@ -1,13 +1,73 @@
-//! Micro/meso benchmark harness (replaces criterion, unavailable offline).
+//! Micro/meso benchmark harness (replaces criterion, unavailable offline)
+//! plus the canonical `BENCH_*` artifact writer.
 //!
-//! Used by every target under `rust/benches/` (declared `harness = false`).
-//! Auto-calibrates the iteration count to a time budget, reports
-//! mean/σ/min/p95, and supports the before/after comparisons the §Perf log
-//! records.
+//! The harness half is used by every target under `rust/benches/`
+//! (declared `harness = false`): it auto-calibrates the iteration count to
+//! a time budget, reports mean/σ/min/p95, and supports the before/after
+//! comparisons the §Perf log records.
+//!
+//! The writer half ([`bench_record`] / [`write_bench_json`] /
+//! [`append_bench_jsonl`]) is the **single** serialization path for every
+//! `BENCH_*` artifact the repo emits — the obs baseline, the calibration
+//! report, the SpGEMM bench trajectory and the perf observatory's
+//! `BENCH_history.jsonl` all share one schema-versioned envelope
+//! (`{"schema": "msrep-bench-v1", "bench": "<name>", ...}`) with
+//! BTreeMap-sorted keys, so records stay byte-stable and diffable
+//! (DESIGN.md §15).
 
+use std::collections::BTreeMap;
+use std::io::Write as _;
 use std::time::Instant;
 
+use super::json::{self, Value};
 use super::stats::Summary;
+use crate::error::{Error, Result};
+
+/// Schema tag stamped into every `BENCH_*` artifact envelope.
+pub const BENCH_SCHEMA: &str = "msrep-bench-v1";
+
+/// Wrap payload fields into the canonical bench envelope: a JSON object
+/// carrying `schema` ([`BENCH_SCHEMA`]) and `bench` (the record family,
+/// e.g. `"calibration"` or `"perf_suite"`) plus the payload, keys sorted.
+///
+/// Reserved keys (`schema`, `bench`) in the payload are overwritten — the
+/// envelope owns them.
+pub fn bench_record(bench: &str, mut fields: BTreeMap<String, Value>) -> Value {
+    fields.insert("schema".to_string(), Value::Str(BENCH_SCHEMA.to_string()));
+    fields.insert("bench".to_string(), Value::Str(bench.to_string()));
+    Value::Obj(fields)
+}
+
+/// Write one bench record as a compact JSON document.
+pub fn write_bench_json(path: &str, record: &Value) -> Result<()> {
+    std::fs::write(path, record.to_json()).map_err(Error::Io)
+}
+
+/// Append one bench record as a single JSONL line (creating the file if
+/// needed) — the `BENCH_history.jsonl` trajectory writer.
+pub fn append_bench_jsonl(path: &str, record: &Value) -> Result<()> {
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map_err(Error::Io)?;
+    writeln!(f, "{}", record.to_json()).map_err(Error::Io)
+}
+
+/// Parse the last non-empty line of a JSONL trajectory (the most recent
+/// record). Accepts a plain single-record `.json` document too, so
+/// baseline flags can point at either artifact shape.
+pub fn read_last_bench_record(path: &str) -> Result<Value> {
+    let text = std::fs::read_to_string(path).map_err(Error::Io)?;
+    let last = text
+        .lines()
+        .rev()
+        .find(|l| !l.trim().is_empty())
+        .ok_or_else(|| Error::Usage(format!("{path}: empty bench file")))?;
+    // a pretty-printed or single-record .json is not line-delimited; fall
+    // back to parsing the whole document
+    json::parse(last).or_else(|_| json::parse(&text))
+}
 
 /// One benchmark's collected samples + summary.
 #[derive(Debug, Clone)]
@@ -102,6 +162,72 @@ pub fn section(title: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_record_pins_canonical_key_order() {
+        // keys inserted out of order must serialize sorted, with the
+        // envelope's schema/bench fields folded in — byte-stable diffs
+        let mut fields = BTreeMap::new();
+        fields.insert("zeta".to_string(), Value::Num(1.0));
+        fields.insert("alpha".to_string(), Value::Str("x".to_string()));
+        let rec = bench_record("unit", fields);
+        assert_eq!(
+            rec.to_json(),
+            r#"{"alpha":"x","bench":"unit","schema":"msrep-bench-v1","zeta":1}"#
+        );
+    }
+
+    #[test]
+    fn bench_record_round_trips_byte_stable() {
+        let mut fields = BTreeMap::new();
+        fields.insert("n".to_string(), Value::Num(3.0));
+        let mut nested = BTreeMap::new();
+        nested.insert("b".to_string(), Value::Num(2.5));
+        nested.insert("a".to_string(), Value::Arr(vec![Value::Bool(true), Value::Null]));
+        fields.insert("payload".to_string(), Value::Obj(nested));
+        let rec = bench_record("unit", fields);
+        let once = rec.to_json();
+        let twice = json::parse(&once).unwrap().to_json();
+        assert_eq!(once, twice, "parse → serialize must be the identity");
+    }
+
+    #[test]
+    fn bench_record_owns_the_envelope_keys() {
+        let mut fields = BTreeMap::new();
+        fields.insert("schema".to_string(), Value::Str("bogus".to_string()));
+        let rec = bench_record("unit", fields);
+        assert_eq!(rec.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
+        assert_eq!(rec.get("bench").unwrap().as_str(), Some("unit"));
+    }
+
+    #[test]
+    fn jsonl_append_and_read_last() {
+        let dir = std::env::temp_dir().join("msrep_bench_writer_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hist.jsonl");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        for i in 0..3 {
+            let mut fields = BTreeMap::new();
+            fields.insert("i".to_string(), Value::Num(i as f64));
+            append_bench_jsonl(path, &bench_record("unit", fields)).unwrap();
+        }
+        let last = read_last_bench_record(path).unwrap();
+        assert_eq!(last.get("i").unwrap().as_f64(), Some(2.0));
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn read_last_accepts_single_record_json() {
+        let dir = std::env::temp_dir().join("msrep_bench_writer_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("single.json");
+        let path = path.to_str().unwrap();
+        let rec = bench_record("unit", BTreeMap::new());
+        write_bench_json(path, &rec).unwrap();
+        assert_eq!(read_last_bench_record(path).unwrap(), rec);
+        let _ = std::fs::remove_file(path);
+    }
 
     #[test]
     fn run_collects_samples_within_bounds() {

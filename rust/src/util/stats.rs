@@ -88,6 +88,49 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Robust location/scale summary: median + MAD (median absolute
+/// deviation). The perf observatory reduces measured wall-clock samples
+/// with this instead of mean/σ because a single scheduler hiccup would
+/// drag a mean arbitrarily far while leaving the median untouched
+/// (DESIGN.md §15).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Robust {
+    /// number of finite samples summarized
+    pub n: usize,
+    /// sample median
+    pub median: f64,
+    /// median absolute deviation from the median (un-scaled)
+    pub mad: f64,
+}
+
+impl Robust {
+    /// Compute median + MAD of the samples. Non-finite samples are
+    /// dropped like [`Summary::of`]; panics when the input is empty or no
+    /// sample is finite.
+    pub fn of(samples: &[f64]) -> Robust {
+        assert!(!samples.is_empty(), "Robust::of on empty samples");
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+        assert!(!sorted.is_empty(), "Robust::of: no finite samples");
+        sorted.sort_by(f64::total_cmp);
+        let median = percentile(&sorted, 0.50);
+        let mut dev: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+        dev.sort_by(f64::total_cmp);
+        Robust { n: sorted.len(), median, mad: percentile(&dev, 0.50) }
+    }
+
+    /// σ-equivalent scale: MAD × 1.4826 (the consistency constant that
+    /// makes the MAD estimate σ for normally distributed noise).
+    pub fn sigma(&self) -> f64 {
+        self.mad * 1.4826
+    }
+}
+
+/// Median absolute deviation of a sample set (convenience over
+/// [`Robust::of`]).
+pub fn mad(samples: &[f64]) -> f64 {
+    Robust::of(samples).mad
+}
+
 /// Geometric mean of positive values.
 pub fn geomean(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
@@ -169,6 +212,48 @@ mod tests {
     fn imbalance_degenerate() {
         assert_eq!(imbalance(&[]), 1.0);
         assert_eq!(imbalance(&[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn robust_median_and_mad_known_values() {
+        // median 3, |x - 3| = [2, 1, 0, 1, 2] -> MAD 1
+        let r = Robust::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(r.n, 5);
+        assert_eq!(r.median, 3.0);
+        assert_eq!(r.mad, 1.0);
+        assert!((r.sigma() - 1.4826).abs() < 1e-12);
+        assert_eq!(mad(&[1.0, 2.0, 3.0, 4.0, 5.0]), 1.0);
+    }
+
+    #[test]
+    fn robust_shrugs_off_a_wild_outlier() {
+        // one poisoned 100x timing: mean moves ~20x, median stays put
+        let clean = Robust::of(&[1.0, 1.1, 0.9, 1.0, 1.05]);
+        let spiked = Robust::of(&[1.0, 1.1, 0.9, 100.0, 1.05]);
+        assert_eq!(clean.median, 1.0);
+        assert_eq!(spiked.median, 1.05);
+        assert!(spiked.mad < 0.2, "MAD must stay noise-sized, got {}", spiked.mad);
+    }
+
+    #[test]
+    fn robust_constant_samples_have_zero_mad() {
+        let r = Robust::of(&[2.5, 2.5, 2.5]);
+        assert_eq!(r.median, 2.5);
+        assert_eq!(r.mad, 0.0);
+        assert_eq!(r.sigma(), 0.0);
+    }
+
+    #[test]
+    fn robust_drops_non_finite_samples() {
+        let r = Robust::of(&[2.0, f64::NAN, 4.0, f64::INFINITY]);
+        assert_eq!(r.n, 2);
+        assert_eq!(r.median, 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty samples")]
+    fn robust_of_empty_panics_cleanly() {
+        Robust::of(&[]);
     }
 
     #[test]

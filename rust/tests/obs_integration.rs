@@ -291,6 +291,78 @@ fn chrome_trace_round_trips_through_json() {
     );
 }
 
+#[test]
+fn empty_trace_writes_valid_chrome_json_to_disk() {
+    let path = std::env::temp_dir().join(format!("msrep-obs-empty-{}.json", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    msrep::obs::write_chrome_trace(&Trace::default(), &path).unwrap();
+    let parsed = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(
+        parsed.get("traceEvents").and_then(|v| v.as_arr()).map(Vec::len),
+        Some(0),
+        "an empty trace must still be a loadable document, not a write error"
+    );
+    assert_eq!(parsed.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn marker_only_tracks_export_as_zero_duration_events() {
+    let rec = TraceRecorder::enabled();
+    rec.marker(Track::Lane("plan cache"), "cache miss", 1e-3);
+    rec.marker(Track::Lane("plan cache"), "cache hit", 2e-3);
+    let trace = rec.take();
+
+    let parsed = json::parse(&to_chrome_json(&trace).to_json()).unwrap();
+    let events = parsed.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+    let phase = |e: &json::Value| e.get("ph").and_then(|v| v.as_str()).map(str::to_string);
+    // The marker-only lane still gets its thread_name metadata record...
+    let metas: Vec<&json::Value> =
+        events.iter().filter(|e| phase(e).as_deref() == Some("M")).collect();
+    assert_eq!(metas.len(), 1);
+    assert_eq!(
+        metas[0].get("args").and_then(|a| a.get("name")).and_then(|v| v.as_str()),
+        Some("plan cache")
+    );
+    // ...and each marker is a complete event of zero duration at its stamp.
+    let xs: Vec<&json::Value> =
+        events.iter().filter(|e| phase(e).as_deref() == Some("X")).collect();
+    assert_eq!(xs.len(), 2);
+    for e in &xs {
+        assert_eq!(e.get("dur").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(e.get("cat").and_then(|v| v.as_str()), Some("marker"));
+    }
+    assert_eq!(xs[0].get("ts").and_then(|v| v.as_f64()), Some(1e-3 * 1e6));
+}
+
+#[test]
+fn cloned_recorders_with_equal_gpu_base_share_one_chrome_lane() {
+    // Two engines given the same base map their local GPU 0 onto the same
+    // global ordinal — the export must merge them into one tid, not mint
+    // a duplicate thread.
+    let rec = TraceRecorder::enabled();
+    let a = rec.with_gpu_base(4);
+    let b = rec.with_gpu_base(4);
+    a.span(a.gpu(0), "compute", SpanKind::Phase, 0.0, 1e-3);
+    b.span(b.gpu(0), "compute", SpanKind::Phase, 2e-3, 3e-3);
+    b.span(b.gpu(1), "compute", SpanKind::Phase, 2e-3, 3e-3);
+    let trace = rec.take();
+    assert_eq!(trace.len(), 3);
+    assert_eq!(trace.tracks(), vec![Track::Gpu(4), Track::Gpu(5)]);
+
+    let parsed = json::parse(&to_chrome_json(&trace).to_json()).unwrap();
+    let events = parsed.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+    let phase = |e: &json::Value| e.get("ph").and_then(|v| v.as_str()).map(str::to_string);
+    let metas = events.iter().filter(|e| phase(e).as_deref() == Some("M")).count();
+    assert_eq!(metas, 2, "one thread_name per distinct global lane");
+    let tids: Vec<usize> = events
+        .iter()
+        .filter(|e| phase(e).as_deref() == Some("X"))
+        .map(|e| e.get("tid").and_then(|v| v.as_usize()).unwrap())
+        .collect();
+    assert_eq!(tids, vec![0, 0, 1], "colliding clones share gpu 4's tid");
+}
+
 // ---------------------------------------------------------------------------
 // Serve + solver span lifecycles.
 

@@ -1,0 +1,121 @@
+//! End-to-end tests of the perf observatory (DESIGN.md §15): record
+//! round-trip through the history file, gate stability on an unchanged
+//! tree, and injected-slowdown detection with span-level attribution.
+//!
+//! The suite replays read the `MSREP_PERF_INJECT` env hook, so every test
+//! that runs the suite serializes on one lock — the injection test must
+//! never leak its sleep into the clean-tree ones.
+
+use std::sync::Mutex;
+
+use msrep::perf::{self, FindingKind, GateConfig, PerfOptions, PerfRecord, Workloads};
+use msrep::util::bench::{append_bench_jsonl, read_last_bench_record};
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+const INJECT_VAR: &str = "MSREP_PERF_INJECT";
+
+fn opts(reps: usize) -> PerfOptions {
+    let mut o = PerfOptions::quick();
+    o.reps = reps;
+    o
+}
+
+/// Loose enough that honest host noise never trips it (10 ms absolute
+/// floor, 50% relative floor), tight enough that the 50 ms injection
+/// below is unmissable.
+fn loose_gate() -> GateConfig {
+    GateConfig { k_sigma: 10.0, rel_floor: 0.5, abs_floor_s: 10e-3 }
+}
+
+#[test]
+fn record_round_trips_through_the_history_file() {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::remove_var(INJECT_VAR);
+
+    let o = opts(2);
+    let record = perf::run_suite(&o).unwrap();
+    assert_eq!(record.ops.len(), perf::suite::OP_NAMES.len());
+    assert_eq!(record.suite, "quick");
+    assert_eq!(record.suite_digest.len(), 16);
+    for op in &record.ops {
+        assert!(!op.modeled.is_empty(), "{}: no modeled phases", op.name);
+        assert!(!op.measured.is_empty(), "{}: no measured phases", op.name);
+        for (phase, st) in &op.measured {
+            assert_eq!(st.n, 2, "{}/{phase}", op.name);
+            assert!(st.median >= 0.0 && st.mad >= 0.0, "{}/{phase}", op.name);
+        }
+    }
+
+    let path = std::env::temp_dir().join(format!("msrep-perf-it-{}.jsonl", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    std::fs::remove_file(&path).ok();
+    let value = record.to_value();
+    append_bench_jsonl(&path, &value).unwrap();
+    append_bench_jsonl(&path, &value).unwrap();
+    let lines = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(lines.lines().count(), 2, "history must append, not overwrite");
+    let back = PerfRecord::from_value(&read_last_bench_record(&path).unwrap()).unwrap();
+    assert_eq!(back, record);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn unchanged_tree_passes_the_gate_twice() {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::remove_var(INJECT_VAR);
+
+    let o = opts(3);
+    let spec = perf::suite::spec(&o.suite).unwrap();
+    let w = Workloads::build(&spec).unwrap();
+    let base = perf::run_suite_on(&o, &w).unwrap();
+    let cur = perf::run_suite_on(&o, &w).unwrap();
+    let cmp = perf::compare(&base, &cur, &loose_gate()).unwrap();
+    assert!(cmp.modeled_checked > 0, "no modeled phases were compared");
+    assert!(cmp.measured_checked > 0, "no measured phases were compared");
+    assert!(
+        cmp.passed(),
+        "clean re-run tripped the gate: {:?}",
+        cmp.gating()
+    );
+}
+
+#[test]
+fn injected_slowdown_is_flagged_and_attributed_to_phase_and_lane() {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::remove_var(INJECT_VAR);
+
+    let o = opts(3);
+    let spec = perf::suite::spec(&o.suite).unwrap();
+    let w = Workloads::build(&spec).unwrap();
+    let base = perf::run_suite_on(&o, &w).unwrap();
+
+    // 50 ms into GPU 1's exec phase — far past max(10·sigma, 50%, 10 ms)
+    std::env::set_var(INJECT_VAR, "exec:1:50000");
+    let cur = perf::run_suite_on(&o, &w);
+    std::env::remove_var(INJECT_VAR);
+    let cur = cur.unwrap();
+
+    let cmp = perf::compare(&base, &cur, &loose_gate()).unwrap();
+    assert!(!cmp.passed(), "injected slowdown passed the gate");
+    let finding = cmp
+        .findings
+        .iter()
+        .find(|f| {
+            f.kind == FindingKind::MeasuredRegression
+                && f.op == "spmv/mouse_gene"
+                && f.phase == "exec"
+        })
+        .expect("spmv exec regression not flagged");
+    assert!(finding.current > finding.baseline + finding.threshold);
+
+    // attribution re-runs traced under the same injection, so the worst
+    // lane must be the injected one
+    std::env::set_var(INJECT_VAR, "exec:1:50000");
+    let report = perf::attribution::attribute(finding, &w, &o.platform, o.num_gpus, o.mode);
+    std::env::remove_var(INJECT_VAR);
+    let report = report.unwrap();
+    assert!(report.contains("attribution: spmv/mouse_gene / exec"), "{report}");
+    assert!(report.contains("worst lane: gpu 1"), "{report}");
+    assert!(report.contains("top "), "{report}");
+}
