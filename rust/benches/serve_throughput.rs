@@ -39,6 +39,7 @@ fn base_config(max_batch: usize, cache: usize) -> ServeConfig {
         flush_deadline_s: 50e-6,
         queue_capacity: REQUESTS,
         plan_cache_capacity: cache,
+        cluster: None,
     }
 }
 

@@ -1,0 +1,492 @@
+//! Two-tier cluster engine — the §6 scale-out composition, promoted from
+//! an ablation into the engine proper (DESIGN.md §16).
+//!
+//! A [`ClusterEngine`] owns one [`Engine`] per node of a
+//! [`Cluster`] and plans in two tiers:
+//!
+//! * **level 0 (nodes)** — contiguous row spans via the shared
+//!   [`super::partitioner::weighted_boundaries`] helper, so spans are a
+//!   true partition (disjoint, nnz-conserving — the seed ablation's twin
+//!   `partition_point` calls double-counted straddling rows). The
+//!   [`NodeSplit::TopologyAware`] weighting minimizes the *modeled
+//!   max-node time* (nnz **and** row terms, priced from the node
+//!   platform), not just nnz balance;
+//! * **level 1 (GPUs)** — each node's row slice becomes a real
+//!   [`PartitionPlan`] built by that node's engine and priced by
+//!   [`super::model_spmv_phases`] — the same machinery as single-node
+//!   runs, which is what makes `num_nodes == 1` degenerate bitwise to the
+//!   plain engine.
+//!
+//! Cross-node traffic is a memoized [`CommPlan`]: the result exchange is
+//! a disjoint-segment allgather (flat in node count — the §7 claim), and
+//! solver dot-products are priced as scalar allreduces.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+use crate::formats::{Csr, FormatKind, Matrix};
+use crate::obs::{SpanKind, Track, TraceRecorder};
+use crate::sim::{model, Cluster};
+
+use super::comm_plan::{
+    structure_fingerprint, CommCacheStats, CommKey, CommPlan, CommPlanCache, ExchangeKind,
+};
+use super::config::RunConfig;
+use super::engine::Engine;
+use super::partitioner::{
+    weighted_boundaries, MergeClass, STREAM_BYTES_PER_NNZ, VEC_BYTES_PER_ENTRY,
+};
+use super::plan::PartitionPlan;
+
+/// Level-0 (node-tier) split policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeSplit {
+    /// weight rows by modeled cost (nnz *and* per-row terms priced from
+    /// the node platform) — minimizes modeled max-node time
+    TopologyAware,
+    /// weight rows by nnz only — the topology-blind two-level baseline
+    NnzBalanced,
+}
+
+impl NodeSplit {
+    /// Report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            NodeSplit::TopologyAware => "topology-aware",
+            NodeSplit::NnzBalanced => "nnz-balanced",
+        }
+    }
+}
+
+/// Modeled phases of one cluster SpMV replay.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterPhases {
+    /// slowest node's intra-node replay time (H2D + kernel + merge)
+    pub t_intra: f64,
+    /// cross-node result-exchange time (0 for one node)
+    pub t_network: f64,
+}
+
+impl ClusterPhases {
+    /// end-to-end modeled replay time
+    pub fn total(&self) -> f64 {
+        self.t_intra + self.t_network
+    }
+}
+
+/// A two-tier partition plan: per-node row spans, one real
+/// [`PartitionPlan`] per node, and the memoized [`CommPlan`] for the
+/// result exchange.
+#[derive(Debug, Clone)]
+pub struct ClusterPlan {
+    /// rows (global)
+    pub m: usize,
+    /// cols
+    pub n: usize,
+    /// total nnz
+    pub nnz: usize,
+    /// level-0 policy that produced the spans
+    pub split: NodeSplit,
+    /// `[lo, hi)` global row span per node — disjoint, covering
+    pub node_spans: Vec<(usize, usize)>,
+    /// nnz per node (sums to `nnz` — conservation is tested)
+    pub node_loads: Vec<u64>,
+    /// level-1 plan per node, built by that node's engine
+    pub node_plans: Vec<PartitionPlan>,
+    /// memoized cross-node exchange schedule
+    pub comm: Rc<CommPlan>,
+    /// whether `comm` came from the cache (no schedule construction ran)
+    pub comm_cached: bool,
+    /// modeled plan-build time: max node plan build (nodes partition
+    /// concurrently) + the level-0 row scan (charged only when N > 1)
+    pub t_partition: f64,
+    /// topology fingerprint of the cluster this plan targets
+    pub cluster_fp: u64,
+}
+
+impl ClusterPlan {
+    /// max/mean nnz imbalance across nodes (1.0 = perfect).
+    pub fn node_imbalance(&self) -> f64 {
+        crate::util::stats::imbalance(&self.node_loads)
+    }
+}
+
+/// Result of one cluster SpMV.
+#[derive(Debug, Clone)]
+pub struct ClusterSpmvReport {
+    /// `y = alpha*A*x + beta*y0`, assembled from the node segments
+    pub y: Vec<f32>,
+    /// modeled replay time per node
+    pub node_modeled: Vec<f64>,
+    /// slowest node's modeled replay time
+    pub t_intra: f64,
+    /// modeled result-exchange time
+    pub t_network: f64,
+    /// `t_intra + t_network`
+    pub modeled_total: f64,
+}
+
+/// The two-tier engine: one [`Engine`] per node plus a [`CommPlanCache`].
+pub struct ClusterEngine {
+    cluster: Cluster,
+    engines: Vec<Engine>,
+    comm_cache: RefCell<CommPlanCache>,
+    recorder: TraceRecorder,
+}
+
+impl ClusterEngine {
+    /// Build one engine per node. `config.platform` is replaced by the
+    /// cluster's node platform so intra-node pricing always matches the
+    /// topology; everything else (mode, format, GPU count, backend) is
+    /// taken from `config`.
+    pub fn new(cluster: Cluster, config: RunConfig) -> Result<ClusterEngine> {
+        cluster.validate()?;
+        let node_config = RunConfig { platform: cluster.node.clone(), ..config };
+        let engines = (0..cluster.num_nodes)
+            .map(|_| Engine::new(node_config.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ClusterEngine {
+            cluster,
+            engines,
+            comm_cache: RefCell::new(CommPlanCache::new()),
+            recorder: TraceRecorder::default(),
+        })
+    }
+
+    /// The cluster topology.
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// The per-node configuration (shared by every node engine).
+    pub fn config(&self) -> &RunConfig {
+        self.engines[0].config()
+    }
+
+    /// Node `i`'s engine.
+    pub fn node_engine(&self, i: usize) -> &Engine {
+        &self.engines[i]
+    }
+
+    /// CommPlan cache counters (hits = schedule constructions avoided).
+    pub fn comm_stats(&self) -> CommCacheStats {
+        self.comm_cache.borrow().stats()
+    }
+
+    /// Install a span recorder. Node `i`'s device lanes are offset by
+    /// `i * num_gpus` so multi-node traces keep GPU tracks unique; the
+    /// result exchange lands on the `"network"` lane.
+    pub fn set_recorder(&mut self, recorder: TraceRecorder) {
+        let np = self.config().num_gpus;
+        for (i, e) in self.engines.iter_mut().enumerate() {
+            e.set_recorder(recorder.with_gpu_base(i * np));
+        }
+        self.recorder = recorder;
+    }
+
+    /// The installed recorder.
+    pub fn recorder(&self) -> &TraceRecorder {
+        &self.recorder
+    }
+
+    /// Two-tier plan with the default [`NodeSplit::TopologyAware`] level-0
+    /// split.
+    pub fn plan(&self, a: &Csr) -> Result<ClusterPlan> {
+        self.plan_with_split(a, NodeSplit::TopologyAware)
+    }
+
+    /// Two-tier plan with an explicit level-0 policy.
+    pub fn plan_with_split(&self, a: &Csr, split: NodeSplit) -> Result<ClusterPlan> {
+        let nodes = self.cluster.num_nodes;
+        let m = a.rows();
+        let n = a.cols();
+        let nnz = a.nnz();
+        if m == 0 {
+            return Err(Error::InvalidMatrix("cluster plan needs rows".into()));
+        }
+
+        // ---- level 0: contiguous row spans via the shared helper -------
+        let weights = self.row_weights(a, split);
+        let bounds = weighted_boundaries(&weights, nodes);
+        let node_spans: Vec<(usize, usize)> =
+            (0..nodes).map(|i| (bounds[i], bounds[i + 1])).collect();
+        let node_loads: Vec<u64> = node_spans
+            .iter()
+            .map(|&(lo, hi)| (a.row_ptr[hi] - a.row_ptr[lo]) as u64)
+            .collect();
+
+        // ---- level 1: a real PartitionPlan per node --------------------
+        let node_plans = node_spans
+            .iter()
+            .map(|&(lo, hi)| {
+                let sub = Matrix::Csr(a.row_slice(lo, hi));
+                self.engines[0].plan(&sub)
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        // Nodes partition concurrently (each node has its own host CPUs);
+        // the level-0 row scan is an O(m) prefix pass, charged only when
+        // there is more than one node so single-node plans stay bitwise
+        // identical to the plain engine's.
+        let mut t_partition = node_plans.iter().map(|p| p.t_partition).fold(0.0, f64::max);
+        if nodes > 1 {
+            t_partition += model::cpu_search_time(&self.cluster.node, m as u64);
+        }
+
+        // ---- cross-node exchange: memoized CommPlan --------------------
+        let segment_bytes: Vec<u64> = node_spans
+            .iter()
+            .map(|&(lo, hi)| (hi - lo) as u64 * VEC_BYTES_PER_ENTRY)
+            .collect();
+        let key = CommKey {
+            matrix: split_fingerprint(structure_fingerprint(a), split),
+            topology: self.cluster.fingerprint(),
+            exchange: ExchangeKind::SegmentAllGather,
+        };
+        let (comm, comm_cached) = self.comm_cache.borrow_mut().get_or_build(key, || {
+            CommPlan::build(&self.cluster, segment_bytes, ExchangeKind::SegmentAllGather)
+        });
+
+        Ok(ClusterPlan {
+            m,
+            n,
+            nnz,
+            split,
+            node_spans,
+            node_loads,
+            node_plans,
+            comm,
+            comm_cached,
+            t_partition,
+            cluster_fp: self.cluster.fingerprint(),
+        })
+    }
+
+    /// Price one replay of `plan` without executing it: slowest node's
+    /// [`super::SpmvPhases`] total plus the memoized exchange time.
+    pub fn model_spmv(&self, plan: &ClusterPlan) -> Result<ClusterPhases> {
+        let mut t_intra = 0.0f64;
+        for node_plan in &plan.node_plans {
+            t_intra = t_intra.max(self.engines[0].model_spmv(node_plan)?.total());
+        }
+        Ok(ClusterPhases { t_intra, t_network: plan.comm.t_exchange })
+    }
+
+    /// Cluster SpMV against a prebuilt plan: `y = alpha*A*x + beta*y0`.
+    ///
+    /// Every node really executes its row slice through its own engine
+    /// (same numerics as single-node), the segments concatenate into `y`
+    /// (disjoint row spans — no halo merge), and the modeled time is the
+    /// slowest node plus the [`CommPlan`] exchange. Like
+    /// [`Engine::spmv_with_plan`], plan build time is not charged here.
+    pub fn spmv_with_plan(
+        &self,
+        plan: &ClusterPlan,
+        x: &[f32],
+        alpha: f32,
+        beta: f32,
+        y0: Option<&[f32]>,
+    ) -> Result<ClusterSpmvReport> {
+        if x.len() != plan.n {
+            return Err(Error::InvalidMatrix(format!("x length {} != n {}", x.len(), plan.n)));
+        }
+        if let Some(y0) = y0 {
+            if y0.len() != plan.m {
+                return Err(Error::InvalidMatrix(format!(
+                    "y0 length {} != m {}",
+                    y0.len(),
+                    plan.m
+                )));
+            }
+        }
+        let t0 = self.recorder.cursor();
+        let mut y = vec![0.0f32; plan.m];
+        let mut node_modeled = Vec::with_capacity(plan.node_plans.len());
+        let mut t_intra = 0.0f64;
+        for (i, node_plan) in plan.node_plans.iter().enumerate() {
+            let (lo, hi) = plan.node_spans[i];
+            // nodes run concurrently: every node's spans start at t0
+            self.engines[i].recorder().set_cursor(t0);
+            let rep = self.engines[i].spmv_with_plan(
+                node_plan,
+                x,
+                alpha,
+                beta,
+                y0.map(|v| &v[lo..hi]),
+            )?;
+            y[lo..hi].copy_from_slice(&rep.y);
+            t_intra = t_intra.max(rep.metrics.modeled_total);
+            node_modeled.push(rep.metrics.modeled_total);
+        }
+        let t_network = plan.comm.t_exchange;
+        if self.recorder.is_enabled() {
+            let net0 = t0 + t_intra;
+            if plan.comm.num_nodes > 1 {
+                self.recorder.span_with(
+                    Track::Lane("network"),
+                    "allgather",
+                    SpanKind::Phase,
+                    net0,
+                    net0 + t_network,
+                    &[
+                        ("nodes", plan.comm.num_nodes as f64),
+                        ("bytes", plan.comm.max_ingest_bytes as f64),
+                    ],
+                );
+            }
+            self.recorder.set_cursor(net0 + t_network);
+        }
+        Ok(ClusterSpmvReport {
+            y,
+            node_modeled,
+            t_intra,
+            t_network,
+            modeled_total: t_intra + t_network,
+        })
+    }
+
+    /// One-shot cluster SpMV: plan (topology-aware), then execute. The
+    /// returned modeled total includes the plan-build and (on a comm-cache
+    /// miss) the schedule-construction cost.
+    pub fn spmv(
+        &self,
+        a: &Csr,
+        x: &[f32],
+        alpha: f32,
+        beta: f32,
+        y0: Option<&[f32]>,
+    ) -> Result<(ClusterSpmvReport, ClusterPlan)> {
+        let plan = self.plan(a)?;
+        let mut rep = self.spmv_with_plan(&plan, x, alpha, beta, y0)?;
+        rep.modeled_total += plan.t_partition;
+        if !plan.comm_cached {
+            rep.modeled_total += plan.comm.t_build;
+        }
+        Ok((rep, plan))
+    }
+
+    /// Per-row level-0 weights. Topology-aware weights price a row at
+    /// `nnz·c_nnz + c_row` where the coefficients come from the node
+    /// platform's link and HBM bandwidths (stream + kernel + result bytes
+    /// per nnz/row), scaled to integers; nnz-balanced weights are plain
+    /// row nnz.
+    fn row_weights(&self, a: &Csr, split: NodeSplit) -> Vec<u64> {
+        let m = a.rows();
+        match split {
+            NodeSplit::NnzBalanced => (0..m).map(|i| a.row_nnz(i) as u64).collect(),
+            NodeSplit::TopologyAware => {
+                let p = &self.cluster.node;
+                let eff = p.consts.kernel_efficiency(FormatKind::Csr);
+                // seconds per nnz: stream upload + kernel value/index reads
+                let c_nnz = STREAM_BYTES_PER_NNZ as f64 / p.cpu_gpu_bw + 8.0 / (p.hbm_bw * eff);
+                // seconds per row: result download + kernel row_ptr/y bytes
+                let c_row = VEC_BYTES_PER_ENTRY as f64 / p.cpu_gpu_bw + 12.0 / (p.hbm_bw * eff);
+                // integer weights at picosecond resolution
+                let s = 1e12;
+                (0..m)
+                    .map(|i| (a.row_nnz(i) as f64 * c_nnz * s + c_row * s).round() as u64)
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Merge class of the node tier (always row-based: spans are disjoint
+/// contiguous row ranges).
+pub fn cluster_merge_class() -> MergeClass {
+    MergeClass::RowBased
+}
+
+/// Fold the level-0 split policy into the matrix side of a [`CommKey`]:
+/// different splits produce different segment layouts, so they must not
+/// share a memoized schedule.
+fn split_fingerprint(base: u64, split: NodeSplit) -> u64 {
+    base ^ match split {
+        NodeSplit::TopologyAware => 0x9e37_79b9_7f4a_7c15,
+        NodeSplit::NnzBalanced => 0x2545_f491_4f6c_dd1d,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Mode;
+    use crate::formats::{convert, gen};
+
+    fn powerlaw() -> Csr {
+        convert::to_csr(&Matrix::Coo(gen::power_law(4_096, 4_096, 120_000, 2.0, 11)))
+    }
+
+    fn engine(nodes: usize) -> ClusterEngine {
+        ClusterEngine::new(
+            Cluster::summit(nodes),
+            RunConfig {
+                platform: crate::sim::Platform::summit(),
+                num_gpus: 6,
+                mode: Mode::PStarOpt,
+                format: FormatKind::Csr,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn spans_partition_rows_and_conserve_nnz() {
+        let a = powerlaw();
+        for split in [NodeSplit::TopologyAware, NodeSplit::NnzBalanced] {
+            let ce = engine(4);
+            let plan = ce.plan_with_split(&a, split).unwrap();
+            assert_eq!(plan.node_spans[0].0, 0);
+            assert_eq!(plan.node_spans.last().unwrap().1, a.rows());
+            for w in plan.node_spans.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "spans must tile: {:?}", plan.node_spans);
+            }
+            let total: u64 = plan.node_loads.iter().sum();
+            assert_eq!(total, a.nnz() as u64, "nnz conserved under {split:?}");
+        }
+    }
+
+    #[test]
+    fn cluster_spmv_matches_reference() {
+        let a = powerlaw();
+        let x: Vec<f32> = (0..a.cols()).map(|i| ((i % 13) as f32) * 0.25 - 1.0).collect();
+        let ce = engine(4);
+        let plan = ce.plan(&a).unwrap();
+        let rep = ce.spmv_with_plan(&plan, &x, 1.0, 0.0, None).unwrap();
+        let mut rf = vec![0.0f32; a.rows()];
+        crate::spmv::spmv_matrix(&Matrix::Csr(a), &x, 1.0, 0.0, &mut rf).unwrap();
+        for (got, want) in rep.y.iter().zip(rf.iter()) {
+            assert!((got - want).abs() <= 1e-3 * want.abs().max(1.0), "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn topology_aware_beats_blind_on_modeled_max_node_time() {
+        let a = powerlaw();
+        let ce = engine(4);
+        let ta = ce.plan_with_split(&a, NodeSplit::TopologyAware).unwrap();
+        let blind = ce.plan_with_split(&a, NodeSplit::NnzBalanced).unwrap();
+        let ta_t = ce.model_spmv(&ta).unwrap().t_intra;
+        let blind_t = ce.model_spmv(&blind).unwrap().t_intra;
+        assert!(
+            ta_t <= blind_t,
+            "topology-aware {ta_t} should not lose to blind {blind_t}"
+        );
+    }
+
+    #[test]
+    fn comm_plans_are_memoized_per_split_and_topology() {
+        let a = powerlaw();
+        let ce = engine(4);
+        let p1 = ce.plan(&a).unwrap();
+        assert!(!p1.comm_cached, "first build is a miss");
+        let p2 = ce.plan(&a).unwrap();
+        assert!(p2.comm_cached, "second build hits");
+        let p3 = ce.plan_with_split(&a, NodeSplit::NnzBalanced).unwrap();
+        assert!(!p3.comm_cached, "different split = different schedule");
+        let s = ce.comm_stats();
+        assert_eq!((s.hits, s.misses), (1, 2));
+    }
+}

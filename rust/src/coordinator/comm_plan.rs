@@ -1,0 +1,287 @@
+//! Memoized cross-node communication plans — DESIGN.md §16.
+//!
+//! A [`CommPlan`] is the network-side twin of a [`super::PartitionPlan`]:
+//! the materialized collective schedule (who sends which bytes to whom in
+//! which round) plus its priced cost, built once per **(matrix structure,
+//! cluster topology, exchange kind)** and memoized in a
+//! [`CommPlanCache`]. Solvers replay hundreds of SpMVs against one plan;
+//! serve traffic replays thousands — the schedule construction
+//! (`O(N·(N−1))` host work, charged via the calibrated
+//! [`crate::sim::model::cpu_search_time`]) is paid on the first build only.
+//! A cache hit performs **zero** collective-schedule construction, and the
+//! hit counter makes that assertable.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::formats::Csr;
+use crate::sim::{collective, model, Cluster, CollectiveAlgo, CommStep};
+
+/// Which cross-node result exchange a [`CommPlan`] schedules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExchangeKind {
+    /// disjoint row-segment allgather — MSREP's two-level composition:
+    /// total traffic ≈ one result vector regardless of node count
+    SegmentAllGather,
+    /// all-to-all full-vector broadcast — Yang et al. [39]: per-node
+    /// ingest grows linearly with node count (the §7 scalability ceiling)
+    FullBroadcast,
+}
+
+impl ExchangeKind {
+    /// Report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            ExchangeKind::SegmentAllGather => "segment-allgather",
+            ExchangeKind::FullBroadcast => "full-broadcast",
+        }
+    }
+}
+
+/// A materialized cross-node communication schedule with priced costs.
+///
+/// Immutable once built; shared via `Rc` so a cached plan is replayed
+/// without copying the step list.
+#[derive(Debug, Clone)]
+pub struct CommPlan {
+    /// nodes participating
+    pub num_nodes: usize,
+    /// exchange pattern scheduled
+    pub exchange: ExchangeKind,
+    /// collective shape chosen for the result exchange (ring vs tree)
+    pub algo: CollectiveAlgo,
+    /// per-node result-segment bytes (disjoint; sums to the full vector)
+    pub segment_bytes: Vec<u64>,
+    /// materialized sends — the artifact memoization avoids rebuilding
+    pub steps: Vec<CommStep>,
+    /// modeled result-exchange time per SpMV
+    pub t_exchange: f64,
+    /// worst per-node ingest bytes per exchange (the §7 metric: flat in N
+    /// for the allgather, `(N−1)·V` for the broadcast)
+    pub max_ingest_bytes: u64,
+    /// modeled cost of one scalar (8-byte) allreduce — the per-dot-product
+    /// charge for cluster solvers
+    pub t_allreduce_scalar: f64,
+    /// host time to construct this schedule — charged on cache miss only
+    pub t_build: f64,
+    /// topology fingerprint this plan was built for
+    pub topology: u64,
+}
+
+impl CommPlan {
+    /// Build (and price) the schedule for `cluster` given the per-node
+    /// result-segment byte sizes.
+    pub fn build(cluster: &Cluster, segment_bytes: Vec<u64>, exchange: ExchangeKind) -> CommPlan {
+        let n = cluster.num_nodes;
+        debug_assert_eq!(segment_bytes.len(), n);
+        let total: u64 = segment_bytes.iter().sum();
+        let min_seg = segment_bytes.iter().copied().min().unwrap_or(0);
+        let (t_exchange, algo, steps, max_ingest_bytes) = match exchange {
+            ExchangeKind::SegmentAllGather => {
+                let (t, algo) = collective::allgather_time(cluster, &segment_bytes);
+                let steps = match algo {
+                    CollectiveAlgo::Ring => collective::ring_allgather_steps(&segment_bytes),
+                    CollectiveAlgo::Tree => collective::tree_allgather_steps(&segment_bytes),
+                };
+                let ingest = if n <= 1 { 0 } else { total - min_seg };
+                (t, algo, steps, ingest)
+            }
+            ExchangeKind::FullBroadcast => {
+                let t = collective::broadcast_allgather_time(cluster, n, total);
+                let steps = collective::broadcast_steps(n, total);
+                let ingest = if n <= 1 { 0 } else { (n as u64 - 1) * total };
+                (t, CollectiveAlgo::Ring, steps, ingest)
+            }
+        };
+        let (t_allreduce_scalar, _) = collective::allreduce_time(cluster, n, 8);
+        // schedule construction is real host work: one boundary/offset
+        // computation per materialized send
+        let t_build = model::cpu_search_time(&cluster.node, steps.len() as u64);
+        CommPlan {
+            num_nodes: n,
+            exchange,
+            algo,
+            segment_bytes,
+            steps,
+            t_exchange,
+            max_ingest_bytes,
+            t_allreduce_scalar,
+            t_build,
+            topology: cluster.fingerprint(),
+        }
+    }
+}
+
+/// Structural fingerprint of a CSR matrix: shape plus the full `row_ptr`
+/// profile (FNV-1a over the offsets). Values are excluded on purpose —
+/// communication schedules depend on where the rows are, not what they
+/// hold — so numeric updates to a matrix reuse its cached [`CommPlan`].
+pub fn structure_fingerprint(csr: &Csr) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat_u64 = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    eat_u64(csr.rows() as u64);
+    eat_u64(csr.cols() as u64);
+    eat_u64(csr.nnz() as u64);
+    for &p in &csr.row_ptr {
+        eat_u64(p as u64);
+    }
+    h
+}
+
+/// Cache key: matrix structure × cluster topology × exchange kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CommKey {
+    /// [`structure_fingerprint`] of the partitioned matrix
+    pub matrix: u64,
+    /// [`Cluster::fingerprint`] of the fabric
+    pub topology: u64,
+    /// exchange pattern
+    pub exchange: ExchangeKind,
+}
+
+/// Hit/miss counters for a [`CommPlanCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommCacheStats {
+    /// lookups answered from cache (zero schedule construction)
+    pub hits: u64,
+    /// lookups that had to build the schedule
+    pub misses: u64,
+}
+
+impl CommCacheStats {
+    /// hits / (hits + misses); 0 when empty.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Memoization table for [`CommPlan`]s, keyed by [`CommKey`].
+///
+/// Unbounded by design: a plan is `O(N²)` tiny steps and the key space per
+/// process is one entry per (matrix, topology, scheme) triple — the serve
+/// layer's matrix registry is the practical bound.
+#[derive(Debug, Default)]
+pub struct CommPlanCache {
+    entries: HashMap<CommKey, Rc<CommPlan>>,
+    stats: CommCacheStats,
+}
+
+impl CommPlanCache {
+    /// Empty cache.
+    pub fn new() -> CommPlanCache {
+        CommPlanCache::default()
+    }
+
+    /// Return the memoized plan for `key`, or build, insert, and return
+    /// it. The boolean is `true` on a cache hit (no construction ran).
+    pub fn get_or_build(
+        &mut self,
+        key: CommKey,
+        build: impl FnOnce() -> CommPlan,
+    ) -> (Rc<CommPlan>, bool) {
+        if let Some(plan) = self.entries.get(&key) {
+            self.stats.hits += 1;
+            return (Rc::clone(plan), true);
+        }
+        self.stats.misses += 1;
+        let plan = Rc::new(build());
+        self.entries.insert(key, Rc::clone(&plan));
+        (plan, false)
+    }
+
+    /// Counters.
+    pub fn stats(&self) -> CommCacheStats {
+        self.stats
+    }
+
+    /// Number of memoized plans.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{convert, gen, Matrix};
+
+    fn csr() -> Csr {
+        convert::to_csr(&Matrix::Coo(gen::power_law(1_000, 1_000, 20_000, 2.0, 7)))
+    }
+
+    #[test]
+    fn allgather_plan_is_flat_broadcast_linear_in_ingest() {
+        let segs = |n: usize| vec![1_000u64; n];
+        let ag4 = CommPlan::build(&Cluster::summit(4), segs(4), ExchangeKind::SegmentAllGather);
+        let ag8 = CommPlan::build(&Cluster::summit(8), segs(8), ExchangeKind::SegmentAllGather);
+        let bc4 = CommPlan::build(&Cluster::summit(4), segs(4), ExchangeKind::FullBroadcast);
+        let bc8 = CommPlan::build(&Cluster::summit(8), segs(8), ExchangeKind::FullBroadcast);
+        // allgather ingest ≈ one vector minus own segment
+        assert_eq!(ag4.max_ingest_bytes, 3_000);
+        assert_eq!(ag8.max_ingest_bytes, 7_000);
+        // broadcast ingest = (N−1) full vectors
+        assert_eq!(bc4.max_ingest_bytes, 3 * 4_000);
+        assert_eq!(bc8.max_ingest_bytes, 7 * 8_000);
+        assert!(bc8.t_exchange > bc4.t_exchange * 2.0);
+    }
+
+    #[test]
+    fn single_node_plan_is_free() {
+        let p = CommPlan::build(&Cluster::summit(1), vec![4_096], ExchangeKind::SegmentAllGather);
+        assert_eq!(p.t_exchange, 0.0);
+        assert_eq!(p.t_allreduce_scalar, 0.0);
+        assert_eq!(p.t_build, 0.0);
+        assert!(p.steps.is_empty());
+    }
+
+    #[test]
+    fn cache_hits_skip_construction() {
+        let cluster = Cluster::summit(4);
+        let a = csr();
+        let key = CommKey {
+            matrix: structure_fingerprint(&a),
+            topology: cluster.fingerprint(),
+            exchange: ExchangeKind::SegmentAllGather,
+        };
+        let mut cache = CommPlanCache::new();
+        let mut builds = 0;
+        for _ in 0..3 {
+            let (_, hit) = cache.get_or_build(key, || {
+                builds += 1;
+                CommPlan::build(&cluster, vec![1_000; 4], ExchangeKind::SegmentAllGather)
+            });
+            let _ = hit;
+        }
+        assert_eq!(builds, 1, "schedule constructed exactly once");
+        assert_eq!(cache.stats().hits, 2);
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn structure_fingerprint_ignores_values_tracks_structure() {
+        let a = csr();
+        let mut b = a.clone();
+        for v in &mut b.val {
+            *v *= 2.0;
+        }
+        assert_eq!(structure_fingerprint(&a), structure_fingerprint(&b));
+        let c = a.row_slice(0, a.rows() / 2);
+        assert_ne!(structure_fingerprint(&a), structure_fingerprint(&c));
+    }
+}

@@ -32,7 +32,7 @@ use crate::sim::{model, DeviceMemory};
 use super::config::{Backend, Mode, RunConfig};
 use super::merge;
 use super::metrics::Metrics;
-use super::partitioner::MergeClass;
+use super::partitioner::{MergeClass, STREAM_BYTES_PER_NNZ, VEC_BYTES_PER_ENTRY};
 use super::plan::PartitionPlan;
 use super::worker;
 
@@ -365,9 +365,9 @@ impl Engine {
         // ---- 1. device memory accounting --------------------------------
         for t in tasks {
             let mut mem = DeviceMemory::new(t.gpu, p.gpu_mem_bytes);
-            mem.alloc("stream", (t.nnz() * 12) as u64)?;
-            mem.alloc("x", (t.x_len * 4) as u64)?;
-            mem.alloc("y_partial", (t.out_len * 4) as u64)?;
+            mem.alloc("stream", t.nnz() as u64 * STREAM_BYTES_PER_NNZ)?;
+            mem.alloc("x", t.x_len as u64 * VEC_BYTES_PER_ENTRY)?;
+            mem.alloc("y_partial", t.out_len as u64 * VEC_BYTES_PER_ENTRY)?;
         }
 
         // ---- 2+3+4 modeled timeline (shared with the autoplan pricer) ---

@@ -10,7 +10,13 @@
 //!   multi-GPU timeline ([`Engine`])
 //! * [`config`]      — the Baseline / p\* / p\*-opt variants of §5.3
 //! * [`metrics`]     — per-phase breakdown every figure is derived from
+//! * [`cluster`]     — the two-tier node×GPU engine ([`ClusterEngine`])
+//!   with topology-aware level-0 splits (§6, DESIGN.md §16)
+//! * [`comm_plan`]   — memoized cross-node collective schedules
+//!   ([`CommPlan`], [`CommPlanCache`])
 
+pub mod cluster;
+pub mod comm_plan;
 pub mod config;
 pub mod engine;
 pub mod merge;
@@ -20,11 +26,19 @@ pub mod plan;
 pub mod scaleout;
 pub mod worker;
 
+pub use cluster::{ClusterEngine, ClusterPhases, ClusterPlan, ClusterSpmvReport, NodeSplit};
+pub use comm_plan::{
+    structure_fingerprint, CommCacheStats, CommKey, CommPlan, CommPlanCache, ExchangeKind,
+};
 pub use config::{Backend, Mode, RunConfig};
 pub use engine::{model_spmv_phases, Engine, SpmvPhases, SpmvReport};
 pub use metrics::Metrics;
-pub use partitioner::{GpuTask, MergeClass, PartitionOutcome, Strategy, WorkModel};
+pub use partitioner::{
+    weighted_boundaries, GpuTask, MergeClass, PartitionOutcome, Strategy, WorkModel,
+    STREAM_BYTES_PER_NNZ, VEC_BYTES_PER_ENTRY,
+};
 pub use plan::PartitionPlan;
+pub use scaleout::{scaleout_spmv, ScaleOutReport, ScaleOutScheme};
 
 // Re-export for the documented `RunConfig { format: ... }` ergonomics.
 pub use crate::formats::FormatKind;

@@ -16,6 +16,18 @@
 use crate::error::{Error, Result};
 use crate::formats::{Coo, Csc, Csr, Matrix, PCoo, PCsc, PCsr, SortOrder};
 
+/// Bytes per non-zero in the upload stream: f32 value + u32 global column
+/// index + u32 row index (4 + 4 + 4). Every layer that prices matrix
+/// traffic — engine H2D, device-memory accounting, scale-out network
+/// models — must use this constant, not a re-derived literal.
+pub const STREAM_BYTES_PER_NNZ: u64 = 12;
+
+/// Bytes per dense-vector entry (f32 x and y): 4. The seed scale-out
+/// ablation mixed this up with an 8-byte value + 4-byte index reading of
+/// the nnz stream; pinning both constants keeps matrix and vector byte
+/// accounting consistent across layers.
+pub const VEC_BYTES_PER_ENTRY: u64 = 4;
+
 /// How this task's partial result merges into the final y (paper §4.3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MergeClass {
@@ -67,12 +79,12 @@ impl GpuTask {
     /// their owned x slice, the refinement that makes pCSC competitive on
     /// wide matrices (DESIGN.md §12).
     pub fn h2d_bytes(&self) -> u64 {
-        (self.nnz() * 12 + self.x_len * 4) as u64
+        self.nnz() as u64 * STREAM_BYTES_PER_NNZ + self.x_len as u64 * VEC_BYTES_PER_ENTRY
     }
 
     /// Partial-result download bytes.
     pub fn d2h_bytes(&self) -> u64 {
-        (self.out_len * 4) as u64
+        self.out_len as u64 * VEC_BYTES_PER_ENTRY
     }
 }
 
@@ -474,6 +486,19 @@ mod tests {
 
     fn skewed() -> Matrix {
         Matrix::Coo(gen::two_band(400, 400, 20_000, 8.0, 1))
+    }
+
+    #[test]
+    fn bytes_per_entry_constants_are_pinned() {
+        // The stream is f32 value + u32 col + u32 row; vectors are f32.
+        // These feed every transfer model — a silent change here would
+        // shift all modeled numbers, so pin them.
+        assert_eq!(STREAM_BYTES_PER_NNZ, 12);
+        assert_eq!(VEC_BYTES_PER_ENTRY, 4);
+        let out = balanced(&skewed(), 4).unwrap();
+        let t = &out.tasks[0];
+        assert_eq!(t.h2d_bytes(), (t.nnz() * 12 + t.x_len * 4) as u64);
+        assert_eq!(t.d2h_bytes(), (t.out_len * 4) as u64);
     }
 
     #[test]

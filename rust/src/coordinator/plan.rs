@@ -196,7 +196,10 @@ impl PartitionPlan {
 
     /// Total stream payload bytes the plan would upload (excluding x).
     pub fn stream_bytes(&self) -> u64 {
-        self.tasks.iter().map(|t| (t.nnz() * 12) as u64).sum()
+        self.tasks
+            .iter()
+            .map(|t| t.nnz() as u64 * partitioner::STREAM_BYTES_PER_NNZ)
+            .sum()
     }
 
     /// Check the plan is executable under `cfg` (same GPU count and

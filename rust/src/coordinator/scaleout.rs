@@ -7,7 +7,7 @@
 //!   node level: the matrix is nnz-balanced across nodes (level 0) and then
 //!   across each node's GPUs (level 1, the in-paper two-level split of
 //!   Fig. 13). Each node owns a *row segment* of the result, so the
-//!   cross-node exchange is a gather of disjoint segments — total network
+//!   cross-node exchange is a disjoint-segment allgather — total network
 //!   traffic is one result vector regardless of node count.
 //! * [`ScaleOutScheme::BroadcastAllGather`] — Yang et al.'s design: every
 //!   node broadcasts its local result to all the others, so per-node
@@ -15,15 +15,28 @@
 //!   this "the key factor limiting the scalability"; the ablation bench
 //!   shows exactly where it bends.
 //!
-//! Intra-node time reuses the real engine machinery: each node's share is
-//! partitioned with the real pCSR partitioner and charged via the same
-//! platform model as [`super::engine`].
+//! Intra-node time reuses the real engine machinery: both schemes split
+//! rows through [`super::partitioner::weighted_boundaries`] (nnz weights
+//! for MSREP, unit weights — i.e. row blocks, faithful to [39] — for the
+//! broadcast baseline), build a real [`super::PartitionPlan`] per node,
+//! and price it with [`super::model_spmv_phases`]. The network side is a
+//! [`CommPlan`] over the [`crate::sim::collective`] cost models; byte
+//! accounting uses the shared
+//! [`super::partitioner::STREAM_BYTES_PER_NNZ`] /
+//! [`super::partitioner::VEC_BYTES_PER_ENTRY`] constants (the seed
+//! ablation mixed 8-byte values into the nnz stream and was off on
+//! vectors).
 
 use crate::error::Result;
-use crate::formats::Csr;
-use crate::sim::{model, Cluster};
+use crate::formats::{Csr, FormatKind, Matrix};
+use crate::sim::Cluster;
 
-use super::partitioner::MergeClass;
+use super::cluster::{ClusterEngine, NodeSplit};
+use super::comm_plan::{CommPlan, ExchangeKind};
+use super::config::{Mode, RunConfig};
+use super::engine::model_spmv_phases;
+use super::partitioner::{weighted_boundaries, MergeClass, VEC_BYTES_PER_ENTRY};
+use super::plan::PartitionPlan;
 
 /// Cross-node result exchange scheme.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,114 +60,82 @@ impl ScaleOutScheme {
 /// Modeled breakdown of one scale-out SpMV.
 #[derive(Debug, Clone)]
 pub struct ScaleOutReport {
-    /// nnz assigned to each node
+    /// nnz assigned to each node (a true partition: sums to the matrix nnz)
     pub node_loads: Vec<u64>,
     /// slowest node's intra-node time (partition + H2D + kernel + merge)
     pub t_intra: f64,
     /// cross-node result exchange time
     pub t_network: f64,
+    /// worst per-node network ingest bytes per exchange — flat in node
+    /// count for msrep-2level, `(N−1)·V` for the broadcast (the §7 metric)
+    pub net_ingest_bytes: u64,
     /// end-to-end modeled time
     pub total: f64,
+}
+
+fn node_config(cluster: &Cluster) -> RunConfig {
+    RunConfig {
+        platform: cluster.node.clone(),
+        num_gpus: cluster.node.num_gpus,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        ..Default::default()
+    }
 }
 
 /// Model a scale-out SpMV of `csr` on `cluster` under `scheme`.
 ///
 /// Level-0 split is nnz-balanced for MSREP and row-block for the broadcast
-/// baseline (faithful to [39], which keeps whole row blocks per node).
+/// baseline (faithful to [39], which keeps whole row blocks per node) —
+/// both through the shared boundary helper, so node spans are disjoint
+/// and conserve nnz by construction.
 pub fn scaleout_spmv(cluster: &Cluster, csr: &Csr, scheme: ScaleOutScheme) -> Result<ScaleOutReport> {
     cluster.validate()?;
-    let nodes = cluster.num_nodes;
-    let nnz = csr.nnz();
-    let m = csr.rows();
-    let n = csr.cols();
-
-    // ---- level-0 split ----------------------------------------------------
-    // (start_row, end_row, nnz) per node
-    let mut spans: Vec<(usize, usize, u64)> = Vec::with_capacity(nodes);
     match scheme {
         ScaleOutScheme::MsrepPartialMerge => {
-            // nnz-balanced boundaries via the real row_ptr (Alg. 2 level 0)
-            for i in 0..nodes {
-                let lo_idx = i * nnz / nodes;
-                let hi_idx = (i + 1) * nnz / nodes;
-                let lo_row = csr.row_ptr.partition_point(|&p| p <= lo_idx).saturating_sub(1);
-                let hi_row = csr.row_ptr.partition_point(|&p| p < hi_idx);
-                spans.push((lo_row, hi_row.max(lo_row), (hi_idx - lo_idx) as u64));
-            }
+            let ce = ClusterEngine::new(cluster.clone(), node_config(cluster))?;
+            let plan = ce.plan_with_split(csr, NodeSplit::NnzBalanced)?;
+            let phases = ce.model_spmv(&plan)?;
+            let t_intra = plan.t_partition + phases.t_intra;
+            Ok(ScaleOutReport {
+                node_loads: plan.node_loads.clone(),
+                t_intra,
+                t_network: phases.t_network,
+                net_ingest_bytes: plan.comm.max_ingest_bytes,
+                total: t_intra + phases.t_network,
+            })
         }
         ScaleOutScheme::BroadcastAllGather => {
-            // row blocks, like [39]'s per-node matrix distribution
+            let cfg = node_config(cluster);
+            let nodes = cluster.num_nodes;
+            let m = csr.rows();
+            // [39] keeps whole row blocks per node: unit row weights
+            let unit = vec![1u64; m];
+            let bounds = weighted_boundaries(&unit, nodes);
+            let mut node_loads = Vec::with_capacity(nodes);
+            let mut t_intra = 0.0f64;
             for i in 0..nodes {
-                let lo = i * m / nodes;
-                let hi = (i + 1) * m / nodes;
-                spans.push((lo, hi, (csr.row_ptr[hi] - csr.row_ptr[lo]) as u64));
+                let (lo, hi) = (bounds[i], bounds[i + 1]);
+                node_loads.push((csr.row_ptr[hi] - csr.row_ptr[lo]) as u64);
+                let sub = Matrix::Csr(csr.row_slice(lo, hi));
+                let plan = PartitionPlan::build(&sub, &cfg)?;
+                let phases = model_spmv_phases(&cfg, &plan);
+                t_intra = t_intra.max(plan.t_partition + phases.total());
             }
+            // every node broadcasts its full local result vector
+            let segment_bytes: Vec<u64> = (0..nodes)
+                .map(|i| (bounds[i + 1] - bounds[i]) as u64 * VEC_BYTES_PER_ENTRY)
+                .collect();
+            let comm = CommPlan::build(cluster, segment_bytes, ExchangeKind::FullBroadcast);
+            Ok(ScaleOutReport {
+                node_loads,
+                t_intra,
+                t_network: comm.t_exchange,
+                net_ingest_bytes: comm.max_ingest_bytes,
+                total: t_intra + comm.t_exchange,
+            })
         }
     }
-    let node_loads: Vec<u64> = spans.iter().map(|s| s.2).collect();
-
-    // ---- intra-node time (slowest node) ------------------------------------
-    // Each node runs the full p*-opt pipeline on its share: per-GPU
-    // nnz-balanced split, concurrent NUMA-aware H2D, kernel, row merge.
-    let p = &cluster.node;
-    let gpus = p.num_gpus;
-    let t_intra = spans
-        .iter()
-        .map(|&(lo_row, hi_row, node_nnz)| {
-            let rows = (hi_row - lo_row).max(1) as u64;
-            let per_gpu_nnz = node_nnz.div_ceil(gpus as u64);
-            let per_gpu_rows = rows.div_ceil(gpus as u64);
-            let t_part = model::cpu_search_time(
-                p,
-                2 * gpus as u64 * (rows.max(2) as f64).log2().ceil() as u64,
-            ) + model::gpu_pointer_rewrite_time(p);
-            let h2d: Vec<u64> = (0..gpus)
-                .map(|_| per_gpu_nnz * 12 + n as u64 * 4)
-                .collect();
-            let src: Vec<usize> = p.gpu_numa.clone();
-            let t_h2d = model::concurrent_h2d_times(p, &h2d, &src)
-                .into_iter()
-                .fold(0.0, f64::max);
-            let t_kernel = model::spmv_kernel_time(
-                p,
-                per_gpu_nnz,
-                per_gpu_rows,
-                n as u64,
-                crate::formats::FormatKind::Csr,
-            );
-            let d2h: Vec<u64> = (0..gpus).map(|_| per_gpu_rows * 4).collect();
-            let t_merge = model::concurrent_d2h_times(p, &d2h, &src)
-                .into_iter()
-                .fold(0.0, f64::max)
-                + model::cpu_fixup_time(p, gpus);
-            t_part + t_h2d + t_kernel + t_merge
-        })
-        .fold(0.0, f64::max);
-
-    // ---- cross-node exchange -----------------------------------------------
-    let vec_bytes = (m * 4) as f64;
-    let t_network = if nodes <= 1 {
-        0.0
-    } else {
-        match scheme {
-            // disjoint segments: the gathering root ingests one vector
-            ScaleOutScheme::MsrepPartialMerge => {
-                cluster.net_latency * (nodes as f64).log2().ceil() + vec_bytes / cluster.net_bw
-            }
-            // all-gather broadcast: every node ingests (nodes-1) vectors
-            ScaleOutScheme::BroadcastAllGather => {
-                cluster.net_latency * nodes as f64
-                    + (nodes as f64 - 1.0) * vec_bytes / cluster.net_bw
-            }
-        }
-    };
-
-    Ok(ScaleOutReport {
-        node_loads,
-        t_intra,
-        t_network,
-        total: t_intra + t_network,
-    })
 }
 
 /// Which merge class the scale-out row split produces (always row-based —
@@ -178,6 +159,7 @@ mod tests {
         let r = scaleout_spmv(&Cluster::summit(1), &csr, ScaleOutScheme::MsrepPartialMerge)
             .unwrap();
         assert_eq!(r.t_network, 0.0);
+        assert_eq!(r.net_ingest_bytes, 0);
         assert_eq!(r.node_loads.len(), 1);
         assert_eq!(r.node_loads[0], csr.nnz() as u64);
     }
@@ -192,6 +174,25 @@ mod tests {
         let imb = |loads: &[u64]| crate::util::stats::imbalance(loads);
         assert!(imb(&ms.node_loads) < 1.01, "msrep {:?}", ms.node_loads);
         assert!(imb(&bc.node_loads) > 1.4, "broadcast {:?}", bc.node_loads);
+    }
+
+    #[test]
+    fn node_loads_conserve_nnz_for_both_schemes() {
+        // the seed ablation's twin partition_point calls double-counted
+        // rows straddling an nnz cut; the shared boundary helper cannot
+        let csr = suite_like_csr();
+        for scheme in [ScaleOutScheme::MsrepPartialMerge, ScaleOutScheme::BroadcastAllGather] {
+            for nodes in [2usize, 4, 7, 16] {
+                let r = scaleout_spmv(&Cluster::summit(nodes), &csr, scheme).unwrap();
+                let total: u64 = r.node_loads.iter().sum();
+                assert_eq!(
+                    total,
+                    csr.nnz() as u64,
+                    "{} on {nodes} nodes must conserve nnz",
+                    scheme.label()
+                );
+            }
+        }
     }
 
     #[test]

@@ -121,6 +121,24 @@ impl Csr {
         d
     }
 
+    /// Extract rows `lo..hi` as a standalone CSR with the same column
+    /// space (`n` unchanged) and a rebased `row_ptr`. The identity slice
+    /// `row_slice(0, m)` reproduces `self` exactly — the property the
+    /// cluster layer relies on for bitwise single-node degeneracy
+    /// (DESIGN.md §16).
+    pub fn row_slice(&self, lo: usize, hi: usize) -> Csr {
+        assert!(lo <= hi && hi <= self.m, "row_slice {lo}..{hi} of {}", self.m);
+        let base = self.row_ptr[lo];
+        let end = self.row_ptr[hi];
+        Csr {
+            m: hi - lo,
+            n: self.n,
+            row_ptr: self.row_ptr[lo..=hi].iter().map(|&p| p - base).collect(),
+            col_idx: self.col_idx[base..end].to_vec(),
+            val: self.val[base..end].to_vec(),
+        }
+    }
+
     /// Payload bytes: val + col_idx + row_ptr (8B entries).
     pub fn storage_bytes(&self) -> u64 {
         (self.nnz() * 8 + (self.m + 1) * 8) as u64
@@ -147,6 +165,23 @@ mod tests {
         // Fig. 1 row nnz counts: 2, 3, 3, 4, 4, 3
         assert_eq!(a.row_ptr, vec![0, 2, 5, 8, 12, 16, 19]);
         assert_eq!(a.row_nnz(3), 4);
+    }
+
+    #[test]
+    fn row_slice_rebases_and_identity_is_exact() {
+        let a = paper_csr();
+        let s = a.row_slice(2, 5);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.cols(), a.cols());
+        assert_eq!(s.row_ptr, vec![0, 3, 7, 11]);
+        assert_eq!(s.val, a.val[a.row_ptr[2]..a.row_ptr[5]].to_vec());
+        let full = a.row_slice(0, a.rows());
+        assert_eq!(full.row_ptr, a.row_ptr);
+        assert_eq!(full.col_idx, a.col_idx);
+        assert_eq!(full.val, a.val);
+        let empty = a.row_slice(4, 4);
+        assert_eq!(empty.rows(), 0);
+        assert_eq!(empty.nnz(), 0);
     }
 
     #[test]

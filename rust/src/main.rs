@@ -11,6 +11,7 @@
 //! msrep solver-bench ...                   plan-reusing iterative solvers
 //! msrep spgemm-bench ...                   flop-balanced multi-GPU SpGEMM
 //! msrep sptrsv-bench ...                   level-scheduled triangular solves
+//! msrep cluster-bench --nodes 1,2,4 ...    two-tier scale-out node sweep
 //! msrep trace --scenario small ...         traced tour of every subsystem
 //! msrep calibrate --quick ...              fit sim constants to measured walls
 //! msrep perf --against BENCH_history.jsonl continuous perf suite + noise gate
@@ -58,6 +59,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "spgemm-bench" => cmd_spgemm_bench(rest),
         "sptrsv-bench" => cmd_sptrsv_bench(rest),
         "autoplan-bench" => cmd_autoplan_bench(rest),
+        "cluster-bench" => cmd_cluster_bench(rest),
         "trace" => cmd_trace(rest),
         "calibrate" => cmd_calibrate(rest),
         "perf" => cmd_perf(rest),
@@ -68,7 +70,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         other => Err(Error::Usage(format!(
             "unknown command '{other}' (expected info | gen | profile | partition | run | \
              suite | serve-bench | solver-bench | spgemm-bench | sptrsv-bench | \
-             autoplan-bench | trace | calibrate | perf; try `msrep help`)"
+             autoplan-bench | cluster-bench | trace | calibrate | perf; try `msrep help`)"
         ))),
     }
 }
@@ -94,6 +96,10 @@ fn print_usage() {
          \x20 autoplan-bench run the profile-driven format tuner over the \
          format-selection scenarios and check it against every fixed format \
          (--help for flags)\n\
+         \x20 cluster-bench sweep the two-tier cluster engine over node counts, \
+         comparing MSREP's partial-merge allgather against the broadcast \
+         baseline and the topology-aware against the topology-blind level-0 \
+         split, with memoized CommPlan cache counters (--help for flags)\n\
          \x20 trace       run a traced tour of every subsystem (SpMV, SpGEMM, \
          SpTRSV, CG, serving) and export the span timeline as Chrome \
          trace-event JSON + an ASCII Gantt (--help for flags)\n\
@@ -499,6 +505,7 @@ fn cmd_serve_bench(argv: Vec<String>) -> Result<()> {
         flush_deadline_s: a.f64_or("flush-us", 100.0)? * 1e-6,
         queue_capacity: a.usize_or("queue", 128)?,
         plan_cache_capacity: a.usize_or("cache", 16)?,
+        cluster: None,
     };
 
     println!(
@@ -1183,6 +1190,192 @@ fn cmd_autoplan_bench(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+fn cluster_parser() -> Parser {
+    Parser::new()
+        .flag("preset", "summit | dgx1 (node platform + network preset)", Some("summit"))
+        .flag("nodes", "comma-separated node counts to sweep", Some("1,2,4,8,16"))
+        .flag(
+            "scenario",
+            "scenario name (powerlaw-cluster | two-band-cluster | banded-cluster) or 'all'",
+            Some("all"),
+        )
+        .bool_flag("quick", "reduced matrix sizes (CI smoke)")
+        .flag("trace", "export a traced cluster SpMV as Chrome trace-event JSON", None)
+        .flag("out", "write the node-scaling results as a bench JSON", None)
+}
+
+fn cmd_cluster_bench(argv: Vec<String>) -> Result<()> {
+    use msrep::coordinator::{scaleout_spmv, ClusterEngine, NodeSplit, ScaleOutScheme};
+    use msrep::sim::Cluster;
+    use msrep::util::json::Value;
+
+    let p = cluster_parser();
+    if argv.iter().any(|a| a == "--help") {
+        println!(
+            "msrep cluster-bench — two-tier scale-out sweep: MSREP partial-merge vs \
+             broadcast[39], topology-aware vs topology-blind node splits, memoized \
+             CommPlans (DESIGN.md §16)\n{}",
+            p.help()
+        );
+        return Ok(());
+    }
+    let a = p.parse(argv)?;
+    let preset = a.str_or("preset", "summit");
+    let cluster_of = |n: usize| -> Result<Cluster> {
+        match preset.as_str() {
+            "summit" => Ok(Cluster::summit(n)),
+            "dgx1" => Ok(Cluster::dgx1_pod(n)),
+            other => Err(Error::Usage(format!("unknown preset '{other}' (summit | dgx1)"))),
+        }
+    };
+    let nodes: Vec<usize> = a
+        .str_or("nodes", "1,2,4,8,16")
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<usize>()
+                .ok()
+                .filter(|&n| n >= 1)
+                .ok_or_else(|| Error::Usage(format!("--nodes: bad node count '{t}'")))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let quick = a.is_set("quick");
+    let which = a.str_or("scenario", "all");
+    let mut scenarios = if which == "all" {
+        workload::scaleout_scenarios()
+    } else {
+        vec![workload::scaleout_scenario_by_name(&which)
+            .ok_or_else(|| Error::Usage(format!("unknown scaleout scenario '{which}'")))?]
+    };
+    if quick {
+        for s in &mut scenarios {
+            s.m /= 4;
+            s.nnz /= 4;
+        }
+    }
+    // validate the preset once up front so a bad name fails before work
+    cluster_of(1)?;
+    println!(
+        "cluster-bench: preset {preset}, nodes {nodes:?}, {} scenario(s){}\n",
+        scenarios.len(),
+        if quick { " (quick)" } else { "" }
+    );
+
+    let node_run_config = |cluster: &Cluster| RunConfig {
+        platform: cluster.node.clone(),
+        num_gpus: cluster.node.num_gpus,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        ..Default::default()
+    };
+
+    let mut bench_scenarios: Vec<Value> = Vec::new();
+    for s in &scenarios {
+        let csr = workload::scaleout_scenario_matrix(s);
+        println!("== {} ({} x {}, {} nnz) ==", s.name, csr.rows(), csr.cols(), csr.nnz());
+        let mut ms = Vec::with_capacity(nodes.len());
+        let mut bc = Vec::with_capacity(nodes.len());
+        let mut points: Vec<Value> = Vec::new();
+        for &n in &nodes {
+            let cluster = cluster_of(n)?;
+            let rep_ms = scaleout_spmv(&cluster, &csr, ScaleOutScheme::MsrepPartialMerge)?;
+            let rep_bc = scaleout_spmv(&cluster, &csr, ScaleOutScheme::BroadcastAllGather)?;
+            for (scheme, rep) in [
+                (ScaleOutScheme::MsrepPartialMerge, &rep_ms),
+                (ScaleOutScheme::BroadcastAllGather, &rep_bc),
+            ] {
+                let mut row = std::collections::BTreeMap::new();
+                row.insert("scheme".to_string(), Value::Str(scheme.label().to_string()));
+                row.insert("nodes".to_string(), Value::Num(n as f64));
+                row.insert("t_intra".to_string(), Value::Num(rep.t_intra));
+                row.insert("t_network".to_string(), Value::Num(rep.t_network));
+                row.insert("total".to_string(), Value::Num(rep.total));
+                row.insert(
+                    "net_ingest_bytes".to_string(),
+                    Value::Num(rep.net_ingest_bytes as f64),
+                );
+                row.insert(
+                    "node_loads".to_string(),
+                    Value::Arr(rep.node_loads.iter().map(|&l| Value::Num(l as f64)).collect()),
+                );
+                points.push(Value::Obj(row));
+            }
+            ms.push(rep_ms);
+            bc.push(rep_bc);
+        }
+        print!("{}", msrep::report::render_scaleout_report(&nodes, &ms, &bc));
+
+        // topology-aware vs blind level-0 split + CommPlan memoization, at
+        // the largest multi-node count of the sweep
+        let mut topology = std::collections::BTreeMap::new();
+        if let Some(&n) = nodes.iter().filter(|&&n| n > 1).max() {
+            let cluster = cluster_of(n)?;
+            let ce = ClusterEngine::new(cluster.clone(), node_run_config(&cluster))?;
+            let aware = ce.plan_with_split(&csr, NodeSplit::TopologyAware)?;
+            let reuse = ce.plan_with_split(&csr, NodeSplit::TopologyAware)?;
+            let blind = ce.plan_with_split(&csr, NodeSplit::NnzBalanced)?;
+            let aware_t = ce.model_spmv(&aware)?.t_intra;
+            let blind_t = ce.model_spmv(&blind)?.t_intra;
+            let stats = ce.comm_stats();
+            println!(
+                "level-0 split at {n} nodes (modeled max-node replay): \
+                 topology-aware {} vs nnz-balanced {} ({:+.2}%)",
+                format_duration_s(aware_t),
+                format_duration_s(blind_t),
+                (aware_t / blind_t - 1.0) * 100.0,
+            );
+            println!(
+                "comm-plan cache: {} misses (one schedule per split), {} hit(s) \
+                 (re-plan {} the memoized schedule)\n",
+                stats.misses,
+                stats.hits,
+                if reuse.comm_cached { "reused" } else { "MISSED" },
+            );
+            topology.insert("nodes".to_string(), Value::Num(n as f64));
+            topology.insert("aware_t_intra".to_string(), Value::Num(aware_t));
+            topology.insert("blind_t_intra".to_string(), Value::Num(blind_t));
+            topology.insert("comm_hits".to_string(), Value::Num(stats.hits as f64));
+            topology.insert("comm_misses".to_string(), Value::Num(stats.misses as f64));
+            topology.insert("reuse_cached".to_string(), Value::Bool(reuse.comm_cached));
+        }
+
+        let mut rec = std::collections::BTreeMap::new();
+        rec.insert("scenario".to_string(), Value::Str(s.name.to_string()));
+        rec.insert("m".to_string(), Value::Num(csr.rows() as f64));
+        rec.insert("nnz".to_string(), Value::Num(csr.nnz() as f64));
+        rec.insert("points".to_string(), Value::Arr(points));
+        rec.insert("topology".to_string(), Value::Obj(topology));
+        bench_scenarios.push(Value::Obj(rec));
+    }
+
+    if let Some(path) = a.get("trace") {
+        // one traced topology-aware cluster SpMV at the largest node count
+        let recorder = msrep::obs::TraceRecorder::enabled();
+        let cluster = cluster_of(nodes.iter().copied().max().unwrap_or(1))?;
+        let mut ce = ClusterEngine::new(cluster.clone(), node_run_config(&cluster))?;
+        ce.set_recorder(recorder.clone());
+        let csr = workload::scaleout_scenario_matrix(&scenarios[0]);
+        let x = gen::dense_vector(csr.cols(), 3);
+        ce.spmv(&csr, &x, 1.0, 0.0, None)?;
+        export_trace(&recorder, path)?;
+    }
+
+    if let Some(path) = a.get("out") {
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("preset".to_string(), Value::Str(preset.clone()));
+        root.insert(
+            "nodes".to_string(),
+            Value::Arr(nodes.iter().map(|&n| Value::Num(n as f64)).collect()),
+        );
+        root.insert("quick".to_string(), Value::Bool(quick));
+        root.insert("scenarios".to_string(), Value::Arr(bench_scenarios));
+        let rec = msrep::util::bench::bench_record("scaleout", root);
+        msrep::util::bench::write_bench_json(path, &rec)?;
+        println!("wrote bench record to {path}");
+    }
+    Ok(())
+}
+
 fn trace_parser() -> Parser {
     Parser::new()
         .flag("scenario", "small | medium (sizes every stage of the traced tour)", Some("small"))
@@ -1251,6 +1444,7 @@ fn cmd_trace(argv: Vec<String>) -> Result<()> {
         flush_deadline_s: 100e-6,
         queue_capacity: 64,
         plan_cache_capacity: 8,
+        cluster: None,
     };
     let mut server = msrep::serve::Server::new(serve_cfg)?;
     server.set_recorder(&recorder);

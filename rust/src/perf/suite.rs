@@ -11,11 +11,11 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::coordinator::{Backend, Engine, Mode, RunConfig};
+use crate::coordinator::{Backend, ClusterEngine, Engine, Mode, RunConfig};
 use crate::error::{Error, Result};
-use crate::formats::{convert, gen, FormatKind, Matrix};
+use crate::formats::{convert, gen, Csr, FormatKind, Matrix};
 use crate::obs::{Trace, TraceRecorder};
-use crate::sim::Platform;
+use crate::sim::{Cluster, Platform};
 use crate::solver;
 use crate::sptrsv::Triangle;
 use crate::util::rng::Rng;
@@ -40,6 +40,12 @@ pub struct SuiteSpec {
     pub serve_nnz: usize,
     /// requests in the serve burst
     pub serve_requests: usize,
+    /// rows = cols of the scale-out power-law matrix
+    pub scaleout_m: usize,
+    /// nnz of the scale-out power-law matrix
+    pub scaleout_nnz: usize,
+    /// node count of the pinned scale-out cluster
+    pub scaleout_nodes: usize,
 }
 
 /// Look up a suite variant by name.
@@ -53,6 +59,9 @@ pub fn spec(name: &str) -> Option<SuiteSpec> {
             serve_m: 512,
             serve_nnz: 6_000,
             serve_requests: 24,
+            scaleout_m: 2_048,
+            scaleout_nnz: 30_000,
+            scaleout_nodes: 4,
         }),
         "full" => Some(SuiteSpec {
             name: "full",
@@ -62,19 +71,23 @@ pub fn spec(name: &str) -> Option<SuiteSpec> {
             serve_m: 2_048,
             serve_nnz: 40_000,
             serve_requests: 96,
+            scaleout_m: 8_192,
+            scaleout_nnz: 300_000,
+            scaleout_nodes: 4,
         }),
         _ => None,
     }
 }
 
 /// The ops every suite run replays, in replay order.
-pub const OP_NAMES: [&str; 6] = [
+pub const OP_NAMES: [&str; 7] = [
     "spmv/mouse_gene",
     "spmm/mouse_gene",
     "spgemm/powerlaw-square",
     "sptrsv/ilu0-poisson",
     "cg/poisson2d-cg",
     "serve/burst",
+    "scaleout/powerlaw-4node",
 ];
 
 /// FNV-1a 64-bit hash (the suite-digest primitive — stable, dependency-free).
@@ -94,6 +107,7 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
 pub fn digest(s: &SuiteSpec, platform: &str, gpus: usize, mode: Mode) -> String {
     let desc = format!(
         "{}|spmv_nnz={}|spmm_k={}|cg_max_iters={}|serve_m={}|serve_nnz={}|serve_requests={}\
+         |scaleout_m={}|scaleout_nnz={}|scaleout_nodes={}\
          |ops={}|platform={}|gpus={}|mode={}",
         s.name,
         s.spmv_nnz,
@@ -102,6 +116,9 @@ pub fn digest(s: &SuiteSpec, platform: &str, gpus: usize, mode: Mode) -> String 
         s.serve_m,
         s.serve_nnz,
         s.serve_requests,
+        s.scaleout_m,
+        s.scaleout_nnz,
+        s.scaleout_nodes,
         OP_NAMES.join(","),
         platform,
         gpus,
@@ -145,6 +162,8 @@ pub struct Workloads {
     cg_b: Vec<f32>,
     cg_cfg: solver::SolverConfig,
     serve_tenants: Vec<Matrix>,
+    scaleout_csr: Csr,
+    scaleout_x: Vec<f32>,
 }
 
 impl Workloads {
@@ -186,6 +205,15 @@ impl Workloads {
             })
             .collect();
 
+        let scaleout_csr = convert::to_csr(&Matrix::Coo(gen::power_law(
+            spec.scaleout_m,
+            spec.scaleout_m,
+            spec.scaleout_nnz,
+            2.0,
+            17,
+        )));
+        let scaleout_x = gen::dense_vector(spec.scaleout_m, 19);
+
         Ok(Workloads {
             spec: spec.clone(),
             spmv_mat,
@@ -198,6 +226,8 @@ impl Workloads {
             cg_b,
             cg_cfg,
             serve_tenants,
+            scaleout_csr,
+            scaleout_x,
         })
     }
 
@@ -391,6 +421,7 @@ fn run_op_inner(
                 flush_deadline_s: 100e-6,
                 queue_capacity: 64,
                 plan_cache_capacity: 8,
+                cluster: None,
             };
             let mut server = crate::serve::Server::new(cfg)?;
             if let Some(r) = recorder {
@@ -405,6 +436,30 @@ fn run_op_inner(
             Ok((
                 OpSample {
                     modeled: bt(&[("makespan", rep.makespan_s)]),
+                    measured: bt(&[("wall", wall)]),
+                },
+                Vec::new(),
+            ))
+        }
+        "scaleout/powerlaw-4node" => {
+            let cluster = Cluster::of(platform.clone(), w.spec.scaleout_nodes);
+            let mut ce =
+                ClusterEngine::new(cluster, modeled_config(platform, num_gpus, mode))?;
+            if let Some(r) = recorder {
+                ce.set_recorder(r.clone());
+            }
+            let t0 = Instant::now();
+            let plan = ce.plan(&w.scaleout_csr)?;
+            let rep = ce.spmv_with_plan(&plan, &w.scaleout_x, 1.0, 0.0, None)?;
+            let wall = t0.elapsed().as_secs_f64();
+            Ok((
+                OpSample {
+                    modeled: bt(&[
+                        ("partition", plan.t_partition),
+                        ("intra", rep.t_intra),
+                        ("network", rep.t_network),
+                        ("total", plan.t_partition + rep.modeled_total),
+                    ]),
                     measured: bt(&[("wall", wall)]),
                 },
                 Vec::new(),

@@ -4,6 +4,7 @@
 pub mod autoplan;
 pub mod figures;
 pub mod perf;
+pub mod scaleout;
 pub mod serve;
 pub mod solver;
 pub mod spgemm;
@@ -13,6 +14,7 @@ pub mod timeline;
 
 pub use autoplan::render_autoplan_report;
 pub use perf::{render_comparison, render_perf_record};
+pub use scaleout::render_scaleout_report;
 pub use serve::render_serve_report;
 pub use solver::render_solver_report;
 pub use spgemm::{render_flop_skew, render_spgemm_report};

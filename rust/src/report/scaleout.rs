@@ -1,0 +1,100 @@
+//! Report rendering for the scale-out (multi-node) comparison: modeled
+//! node-scaling of MSREP's partial-merge allgather against the
+//! broadcast-everything baseline of Yang et al. [39] (DESIGN.md §16).
+
+use std::fmt::Write as _;
+
+use crate::coordinator::ScaleOutReport;
+
+use super::table::{format_duration_s, Table};
+
+fn bytes_label(b: u64) -> String {
+    if b >= 1 << 20 {
+        format!("{:.1} MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1} KiB", b as f64 / (1u64 << 10) as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Render the node-scaling comparison table. The three slices are
+/// parallel: `msrep[i]` and `broadcast[i]` are the two schemes' reports at
+/// `node_counts[i]` nodes. The last column is the broadcast/msrep modeled
+/// total ratio — the quantified §7 scalability claim.
+pub fn render_scaleout_report(
+    node_counts: &[usize],
+    msrep: &[ScaleOutReport],
+    broadcast: &[ScaleOutReport],
+) -> String {
+    assert_eq!(node_counts.len(), msrep.len());
+    assert_eq!(node_counts.len(), broadcast.len());
+    let mut out = String::new();
+    let mut t = Table::new([
+        "nodes",
+        "msrep total",
+        "msrep net",
+        "msrep ingest",
+        "bcast total",
+        "bcast net",
+        "bcast ingest",
+        "bcast/msrep",
+    ]);
+    for (i, &nodes) in node_counts.iter().enumerate() {
+        let (ms, bc) = (&msrep[i], &broadcast[i]);
+        t.row([
+            nodes.to_string(),
+            format_duration_s(ms.total),
+            format_duration_s(ms.t_network),
+            bytes_label(ms.net_ingest_bytes),
+            format_duration_s(bc.total),
+            format_duration_s(bc.t_network),
+            bytes_label(bc.net_ingest_bytes),
+            format!("{:.2}x", bc.total / ms.total),
+        ]);
+    }
+    out.push_str(&t.render());
+    let _ = writeln!(
+        out,
+        "net ingest = worst per-node network receive bytes per exchange \
+         (flat for msrep-2level, linear in nodes for broadcast[39])"
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rep(total: f64, net: f64, ingest: u64) -> ScaleOutReport {
+        ScaleOutReport {
+            node_loads: vec![10, 10],
+            t_intra: total - net,
+            t_network: net,
+            net_ingest_bytes: ingest,
+            total,
+        }
+    }
+
+    #[test]
+    fn table_carries_both_schemes_and_the_ratio() {
+        let s = render_scaleout_report(
+            &[2, 4],
+            &[rep(2e-3, 1e-4, 4096), rep(1e-3, 1e-4, 4096)],
+            &[rep(4e-3, 2e-3, 8192), rep(4e-3, 3e-3, 1 << 21)],
+        );
+        assert!(s.contains("bcast/msrep"));
+        assert!(s.contains("2.00x"));
+        assert!(s.contains("4.00x"));
+        assert!(s.contains("4.0 KiB"));
+        assert!(s.contains("2.0 MiB"));
+        assert!(s.contains("net ingest"));
+    }
+
+    #[test]
+    fn bytes_labels_scale() {
+        assert_eq!(bytes_label(512), "512 B");
+        assert_eq!(bytes_label(2048), "2.0 KiB");
+        assert_eq!(bytes_label(3 << 20), "3.0 MiB");
+    }
+}

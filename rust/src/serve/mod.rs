@@ -33,7 +33,7 @@ pub mod server;
 pub use batcher::{BatchExecution, BatchPolicy, Batcher, PendingRequest};
 pub use metrics::ServeReport;
 pub use plan_cache::{
-    config_fingerprint, fingerprint, ConfigFingerprint, MatrixFingerprint, PlanCache,
-    PlanCacheStats, PlanKey,
+    config_fingerprint, config_fingerprint_with_topology, fingerprint, ConfigFingerprint,
+    MatrixFingerprint, PlanCache, PlanCacheStats, PlanKey,
 };
 pub use server::{MatrixId, Outcome, RejectReason, ServeConfig, Server, SpmvRequest};

@@ -123,6 +123,27 @@ pub fn config_fingerprint(cfg: &RunConfig) -> ConfigFingerprint {
     ConfigFingerprint { config_hash: h.0 }
 }
 
+/// [`config_fingerprint`] with an optional cluster-topology fingerprint
+/// ([`Cluster::fingerprint`](crate::sim::Cluster::fingerprint)) folded in.
+/// `None` — single-node serving — returns a hash byte-identical to
+/// [`config_fingerprint`], so enabling the cluster path never invalidates
+/// (or worse, aliases) existing single-node keys, while plans built for
+/// different fabrics can never be replayed across them (DESIGN.md §16).
+pub fn config_fingerprint_with_topology(
+    cfg: &RunConfig,
+    topology: Option<u64>,
+) -> ConfigFingerprint {
+    let base = config_fingerprint(cfg);
+    match topology {
+        None => base,
+        Some(fp) => {
+            let mut h = Fnv(base.config_hash);
+            h.u64(fp);
+            ConfigFingerprint { config_hash: h.0 }
+        }
+    }
+}
+
 /// Full cache key: matrix payload + build configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PlanKey {
@@ -201,6 +222,9 @@ pub struct PlanCache {
     tick: u64,
     entries: HashMap<PlanKey, CacheEntry>,
     stats: PlanCacheStats,
+    /// cluster-topology fingerprint folded into every key; `None` keeps
+    /// the single-node key shape
+    topology: Option<u64>,
 }
 
 impl PlanCache {
@@ -211,7 +235,15 @@ impl PlanCache {
             tick: 0,
             entries: HashMap::new(),
             stats: PlanCacheStats::default(),
+            topology: None,
         }
+    }
+
+    /// Fold a cluster-topology fingerprint into every subsequent key
+    /// (see [`config_fingerprint_with_topology`]). `None` restores the
+    /// single-node key shape.
+    pub fn set_topology(&mut self, topology: Option<u64>) {
+        self.topology = topology;
     }
 
     /// Plans currently cached.
@@ -240,7 +272,10 @@ impl PlanCache {
         matrix: &Matrix,
         engine: &Engine,
     ) -> Result<(Rc<PartitionPlan>, bool)> {
-        let key = PlanKey { matrix: fp, config: config_fingerprint(engine.config()) };
+        let key = PlanKey {
+            matrix: fp,
+            config: config_fingerprint_with_topology(engine.config(), self.topology),
+        };
         self.tick += 1;
         if let Some(e) = self.entries.get_mut(&key) {
             e.last_used = self.tick;
@@ -272,7 +307,10 @@ impl PlanCache {
         if self.capacity == 0 {
             return;
         }
-        let key = PlanKey { matrix: fp, config: config_fingerprint(cfg) };
+        let key = PlanKey {
+            matrix: fp,
+            config: config_fingerprint_with_topology(cfg, self.topology),
+        };
         self.tick += 1;
         if self.entries.len() >= self.capacity && !self.entries.contains_key(&key) {
             self.evict_lru();
@@ -471,6 +509,35 @@ mod tests {
         let mut off = PlanCache::new(0);
         off.seed(fa, eng.config(), plan);
         assert!(off.is_empty());
+    }
+
+    #[test]
+    fn topology_fingerprint_splits_keys_and_none_is_identity() {
+        let base = engine().config().clone();
+        // None is byte-identical to the plain fingerprint: enabling the
+        // cluster code path must not invalidate single-node keys
+        assert_eq!(
+            config_fingerprint(&base),
+            config_fingerprint_with_topology(&base, None)
+        );
+        let t1 = config_fingerprint_with_topology(&base, Some(0xdead));
+        let t2 = config_fingerprint_with_topology(&base, Some(0xbeef));
+        assert_ne!(config_fingerprint(&base), t1);
+        assert_ne!(t1, t2);
+
+        // a cache pinned to one fabric misses when re-pinned to another
+        let eng = engine();
+        let a = csr(1);
+        let fa = fingerprint(&a);
+        let mut cache = PlanCache::new(8);
+        cache.set_topology(Some(0xdead));
+        let (_, h1) = cache.get_or_build(fa, &a, &eng).unwrap();
+        let (_, h2) = cache.get_or_build(fa, &a, &eng).unwrap();
+        assert!(!h1 && h2);
+        cache.set_topology(Some(0xbeef));
+        let (_, h3) = cache.get_or_build(fa, &a, &eng).unwrap();
+        assert!(!h3, "a different fabric must not replay the plan");
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

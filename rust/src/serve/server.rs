@@ -32,10 +32,11 @@
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use crate::coordinator::{Engine, RunConfig};
+use crate::coordinator::{Engine, RunConfig, VEC_BYTES_PER_ENTRY};
 use crate::error::{Error, Result};
 use crate::formats::Matrix;
 use crate::obs::{SpanKind, Track, TraceRecorder};
+use crate::sim::Cluster;
 
 use super::batcher::{self, BatchPolicy, Batcher, PendingRequest};
 use super::metrics::ServeReport;
@@ -57,6 +58,13 @@ pub struct ServeConfig {
     pub queue_capacity: usize,
     /// partition plans kept by the LRU cache (0 disables caching)
     pub plan_cache_capacity: usize,
+    /// `Some`: serve across a multi-node cluster — one engine per node
+    /// (`num_engines` is overridden to the node count, `run.platform` to
+    /// the node platform), tenants shard round-robin onto home nodes,
+    /// every plan-cache key folds in the fabric fingerprint, and each
+    /// dispatch charges the result's network return trip. A one-node
+    /// cluster behaves identically to `None` (DESIGN.md §16).
+    pub cluster: Option<Cluster>,
 }
 
 impl Default for ServeConfig {
@@ -68,6 +76,7 @@ impl Default for ServeConfig {
             flush_deadline_s: 100e-6,
             queue_capacity: 64,
             plan_cache_capacity: 16,
+            cluster: None,
         }
     }
 }
@@ -158,12 +167,22 @@ pub struct Server {
     engines: Vec<Engine>,
     engine_free_at: Vec<f64>,
     matrices: Vec<(Matrix, MatrixFingerprint)>,
+    /// home engine per registered matrix (round-robin; only consulted
+    /// when serving across a multi-node cluster)
+    homes: Vec<usize>,
     cache: PlanCache,
 }
 
 impl Server {
     /// Build the engine pool and plan cache.
     pub fn new(cfg: ServeConfig) -> Result<Server> {
+        let mut cfg = cfg;
+        if let Some(cluster) = &cfg.cluster {
+            cluster.validate()?;
+            // one engine per node, each modeling that node's GPU pool
+            cfg.num_engines = cluster.num_nodes;
+            cfg.run.platform = cluster.node.clone();
+        }
         if cfg.num_engines == 0 {
             return Err(Error::Serve("num_engines must be >= 1".into()));
         }
@@ -179,9 +198,20 @@ impl Server {
         let engines: Vec<Engine> = (0..cfg.num_engines)
             .map(|_| Engine::new(cfg.run.clone()))
             .collect::<Result<_>>()?;
-        let cache = PlanCache::new(cfg.plan_cache_capacity);
+        let mut cache = PlanCache::new(cfg.plan_cache_capacity);
+        if let Some(cluster) = &cfg.cluster {
+            // plans built for one fabric must never replay on another
+            cache.set_topology(Some(cluster.fingerprint()));
+        }
         let engine_free_at = vec![0.0; cfg.num_engines];
-        Ok(Server { cfg, engines, engine_free_at, matrices: Vec::new(), cache })
+        Ok(Server {
+            cfg,
+            engines,
+            engine_free_at,
+            matrices: Vec::new(),
+            homes: Vec::new(),
+            cache,
+        })
     }
 
     /// The active configuration.
@@ -191,11 +221,22 @@ impl Server {
 
     /// Register a tenant matrix; requests reference the returned id.
     /// Fingerprints cover the full payload, so two tenants registering a
-    /// numerically identical matrix share one cached plan.
+    /// numerically identical matrix share one cached plan. Under a
+    /// multi-node cluster the tenant is assigned a round-robin home node
+    /// and all its dispatches pin there (data residency: the matrix is
+    /// staged on one node, not broadcast).
     pub fn register(&mut self, a: Matrix) -> MatrixId {
         let fp = fingerprint(&a);
+        let id = self.matrices.len();
         self.matrices.push((a, fp));
-        MatrixId(self.matrices.len() - 1)
+        self.homes.push(id % self.cfg.num_engines);
+        MatrixId(id)
+    }
+
+    /// The home engine (node) a matrix's dispatches pin to under a
+    /// multi-node cluster.
+    pub fn home_node(&self, id: MatrixId) -> Option<usize> {
+        self.homes.get(id.0).copied()
     }
 
     /// Register a tenant matrix after auto-selecting its storage format:
@@ -248,6 +289,20 @@ impl Server {
     /// Plan-cache counters.
     pub fn cache_stats(&self) -> PlanCacheStats {
         self.cache.stats()
+    }
+
+    /// Cluster routing for one matrix's dispatch: `Some` only when serving
+    /// across a genuinely multi-node fabric — a one-node cluster routes
+    /// like a plain server so its modeled numbers stay bitwise identical.
+    fn route(&self, mid: usize) -> Option<NodeRoute> {
+        match &self.cfg.cluster {
+            Some(c) if c.num_nodes > 1 => Some(NodeRoute {
+                home: self.homes[mid],
+                net_latency: c.net_latency,
+                net_bw: c.net_bw,
+            }),
+            _ => None,
+        }
     }
 
     /// Run a trace of requests to completion and aggregate the report.
@@ -316,6 +371,7 @@ impl Server {
                 // deadline flush strictly before the next arrival (ties
                 // admit first, giving the window its last chance to fill)
                 (Some((t, mid)), at) if at.map_or(true, |a| t < a) => {
+                    let route = self.route(mid);
                     let q = queues.get_mut(&mid).expect("timer points at live queue");
                     flush_window(
                         &self.engines,
@@ -326,6 +382,7 @@ impl Server {
                         in_flight.entry(mid).or_default(),
                         mid,
                         t,
+                        route,
                         &mut outcomes,
                         &mut agg,
                     )?;
@@ -364,6 +421,7 @@ impl Server {
                         deadline_s: req.deadline_s,
                     });
                     if q.is_full() {
+                        let route = self.route(mid);
                         flush_window(
                             &self.engines,
                             &mut self.engine_free_at,
@@ -373,6 +431,7 @@ impl Server {
                             fl,
                             mid,
                             now,
+                            route,
                             &mut outcomes,
                             &mut agg,
                         )?;
@@ -411,9 +470,21 @@ impl Server {
     }
 }
 
-/// Dispatch one window: pick the earliest-free engine, expire stale
-/// requests, fetch/build the plan, execute the batch, record outcomes
-/// and the in-flight (completion, size) pair backpressure counts.
+/// Cluster routing of one dispatch: the tenant's home node plus the
+/// fabric terms for the result's return trip.
+struct NodeRoute {
+    /// engine (node) index the batch must run on
+    home: usize,
+    /// per-message fabric latency (seconds)
+    net_latency: f64,
+    /// fabric bandwidth (bytes/second)
+    net_bw: f64,
+}
+
+/// Dispatch one window: pick the engine (the tenant's home node under a
+/// cluster, else the earliest-free of the pool), expire stale requests,
+/// fetch/build the plan, execute the batch, record outcomes and the
+/// in-flight (completion, size) pair backpressure counts.
 #[allow(clippy::too_many_arguments)]
 fn flush_window(
     engines: &[Engine],
@@ -424,6 +495,7 @@ fn flush_window(
     in_flight: &mut Vec<(f64, usize)>,
     mid: usize,
     now: f64,
+    route: Option<NodeRoute>,
     outcomes: &mut [Option<Outcome>],
     agg: &mut Agg,
 ) -> Result<()> {
@@ -431,12 +503,18 @@ fn flush_window(
     if pending.is_empty() {
         return Ok(());
     }
-    let e = engine_free_at
-        .iter()
-        .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).expect("free times are finite"))
-        .map(|(i, _)| i)
-        .expect("engine pool is non-empty");
+    // a clustered tenant's matrix lives on its home node — the batch pins
+    // there even if another node is free sooner (moving it would cost a
+    // full matrix transfer, not modeled as worthwhile)
+    let e = match &route {
+        Some(r) => r.home,
+        None => engine_free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).expect("free times are finite"))
+            .map(|(i, _)| i)
+            .expect("engine pool is non-empty"),
+    };
     let start = now.max(engine_free_at[e]);
     let rec = engines[e].recorder();
     let mut live = Vec::with_capacity(pending.len());
@@ -478,16 +556,38 @@ fn flush_window(
     }
     let exec = batcher::dispatch(&engines[e], &plan, &live)?;
     let service = t_plan + exec.metrics.modeled_total;
-    let done = start + service;
+    let engine_done = start + service;
     rec.span_with(
         Track::Engine(e),
         "dispatch",
         SpanKind::Dispatch,
         start,
-        done,
+        engine_done,
         &[("batch_k", live.len() as f64)],
     );
-    engine_free_at[e] = done;
+    // clustered serving returns the batch's results over the fabric; the
+    // home engine is free as soon as compute ends, but the requesters only
+    // see their vectors one network trip later
+    let done = match &route {
+        Some(r) => {
+            let bytes: u64 =
+                exec.ys.iter().map(|y| y.len() as u64 * VEC_BYTES_PER_ENTRY).sum();
+            let t_net = r.net_latency + bytes as f64 / r.net_bw;
+            if rec.is_enabled() {
+                rec.span_with(
+                    Track::Lane("network"),
+                    "result return",
+                    SpanKind::Phase,
+                    engine_done,
+                    engine_done + t_net,
+                    &[("bytes", bytes as f64), ("node", e as f64)],
+                );
+            }
+            engine_done + t_net
+        }
+        None => engine_done,
+    };
+    engine_free_at[e] = engine_done;
     agg.busy += service;
     agg.last_done = agg.last_done.max(done);
     let k = live.len();
@@ -635,6 +735,97 @@ mod tests {
             }
             other => panic!("expected completion, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn one_node_cluster_serving_matches_plain_server() {
+        let req = |id, seed| SpmvRequest {
+            matrix: id,
+            x: gen::dense_vector(256, seed),
+            alpha: 1.0,
+            arrival_s: 0.0,
+            deadline_s: None,
+        };
+        let mut plain = Server::new(cfg()).unwrap();
+        let idp = plain.register(csr(1));
+        let rp = plain.run(vec![req(idp, 9), req(idp, 10)]).unwrap();
+        let one = Cluster::of(Platform::dgx1(), 1);
+        let mut clustered =
+            Server::new(ServeConfig { cluster: Some(one), ..cfg() }).unwrap();
+        let idc = clustered.register(csr(1));
+        let rc = clustered.run(vec![req(idc, 9), req(idc, 10)]).unwrap();
+        // the degenerate cluster charges no fabric time: bitwise identical
+        assert_eq!(rp.latencies_s, rc.latencies_s);
+        assert_eq!(rp.makespan_s, rc.makespan_s);
+        assert_eq!(rp.engine_busy_s, rc.engine_busy_s);
+    }
+
+    #[test]
+    fn cluster_serving_shards_tenants_and_charges_result_return() {
+        let req = |id| SpmvRequest {
+            matrix: id,
+            x: gen::dense_vector(256, 9),
+            alpha: 1.0,
+            arrival_s: 0.0,
+            deadline_s: None,
+        };
+        // a lone request pays the network return trip on top of service
+        let mut plain = Server::new(cfg()).unwrap();
+        let idp = plain.register(csr(1));
+        let rp = plain.run(vec![req(idp)]).unwrap();
+        let two = Cluster::of(Platform::dgx1(), 2);
+        let mut clustered =
+            Server::new(ServeConfig { cluster: Some(two), ..cfg() }).unwrap();
+        assert_eq!(clustered.config().num_engines, 2, "one engine per node");
+        let a = clustered.register(csr(1));
+        let b = clustered.register(csr(2));
+        assert_eq!(clustered.home_node(a), Some(0));
+        assert_eq!(clustered.home_node(b), Some(1), "tenants shard round-robin");
+        let rc = clustered.run(vec![req(a)]).unwrap();
+        assert_eq!(rc.completed, 1);
+        assert!(
+            rc.latencies_s[0] > rp.latencies_s[0],
+            "cluster {} vs plain {}",
+            rc.latencies_s[0],
+            rp.latencies_s[0]
+        );
+        // but the engine itself is busy exactly as long as the plain one
+        assert_eq!(rc.engine_busy_s, rp.engine_busy_s);
+    }
+
+    #[test]
+    fn clustered_tenants_dispatch_concurrently_on_home_nodes() {
+        let req = |id| SpmvRequest {
+            matrix: id,
+            x: gen::dense_vector(256, 9),
+            alpha: 1.0,
+            arrival_s: 0.0,
+            deadline_s: None,
+        };
+        let serve = |nodes: usize| {
+            let mut s = Server::new(ServeConfig {
+                max_batch: 1,
+                cluster: Some(Cluster::of(Platform::dgx1(), nodes)),
+                ..cfg()
+            })
+            .unwrap();
+            // same payload twice: tenants share the cached plan but live
+            // on different home nodes
+            let a = s.register(csr(1));
+            let b = s.register(csr(1));
+            s.run(vec![req(a), req(b)]).unwrap()
+        };
+        let one = serve(1);
+        let two = serve(2);
+        assert_eq!(two.completed, 2);
+        // two home nodes run the simultaneous tenants in parallel; one
+        // node serializes them (even the degenerate cluster)
+        assert!(
+            two.makespan_s < one.makespan_s,
+            "2-node {} vs 1-node {}",
+            two.makespan_s,
+            one.makespan_s
+        );
     }
 
     #[test]

@@ -49,9 +49,46 @@ impl Cluster {
         }
     }
 
+    /// Wrap an arbitrary node platform into an N-node cluster with
+    /// EDR-InfiniBand-class fabric defaults (the same constants as
+    /// [`Cluster::summit`]).
+    pub fn of(node: Platform, num_nodes: usize) -> Cluster {
+        Cluster { node, num_nodes, net_bw: 23e9, net_latency: 5e-9 }
+    }
+
     /// Total GPUs across the cluster.
     pub fn total_gpus(&self) -> usize {
         self.num_nodes * self.node.num_gpus
+    }
+
+    /// Stable 64-bit fingerprint of the cluster topology: node platform
+    /// identity (name + GPU count), node count, and fabric parameters
+    /// (bit-exact). Two clusters with equal fingerprints price collectives
+    /// identically, so the fingerprint keys [`CommPlan`] memoization and is
+    /// folded into serve-layer plan-cache keys.
+    ///
+    /// [`CommPlan`]: ../coordinator/struct.CommPlan.html
+    pub fn fingerprint(&self) -> u64 {
+        // FNV-1a, kept local so `sim` stays dependency-free.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        };
+        for b in self.node.name.bytes() {
+            eat(b);
+        }
+        for v in [
+            self.node.num_gpus as u64,
+            self.num_nodes as u64,
+            self.net_bw.to_bits(),
+            self.net_latency.to_bits(),
+        ] {
+            for b in v.to_le_bytes() {
+                eat(b);
+            }
+        }
+        h
     }
 
     /// Validate.
@@ -81,6 +118,17 @@ mod tests {
     fn total_gpus() {
         assert_eq!(Cluster::summit(4).total_gpus(), 24);
         assert_eq!(Cluster::dgx1_pod(3).total_gpus(), 24);
+    }
+
+    #[test]
+    fn fingerprint_tracks_topology() {
+        let a = Cluster::summit(4);
+        assert_eq!(a.fingerprint(), Cluster::summit(4).fingerprint());
+        assert_ne!(a.fingerprint(), Cluster::summit(8).fingerprint());
+        assert_ne!(a.fingerprint(), Cluster::dgx1_pod(4).fingerprint());
+        let mut slow = Cluster::summit(4);
+        slow.net_bw = 12.5e9;
+        assert_ne!(a.fingerprint(), slow.fingerprint());
     }
 
     #[test]

@@ -20,12 +20,14 @@
 //! outputs are seconds (f64).
 
 pub mod cluster;
+pub mod collective;
 pub mod constants;
 pub mod memory;
 pub mod model;
 mod platform;
 
 pub use cluster::Cluster;
+pub use collective::{CollectiveAlgo, CommStep};
 pub use constants::SimConstants;
 pub use memory::DeviceMemory;
 pub use platform::{HostLink, Platform};

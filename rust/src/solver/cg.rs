@@ -10,13 +10,12 @@
 //! modeled timeline only charges the SpMVs, matching the paper's
 //! SpMV-dominated iterative-solver framing (§1).
 
-use crate::coordinator::Engine;
+use crate::coordinator::{ClusterEngine, Engine};
 use crate::error::{Error, Result};
 use crate::formats::Matrix;
 
 use super::{
-    check_config, check_square_system, dot, norm2, IterationStat, PlannedSpmv, SolveReport,
-    SolverConfig,
+    check_config, check_square_system, IterationStat, PlannedSpmv, SolveReport, SolverConfig,
 };
 
 /// Solve `A x = b` for symmetric positive-definite `A` by the Conjugate
@@ -30,25 +29,55 @@ use super::{
 pub fn cg(engine: &Engine, a: &Matrix, b: &[f32], cfg: &SolverConfig) -> Result<SolveReport> {
     check_config(cfg)?;
     check_square_system(a, Some(b))?;
-    let n = a.rows();
-    let mut spmv = PlannedSpmv::new(engine, a, cfg)?;
+    let spmv = PlannedSpmv::new(engine, a, cfg)?;
+    cg_run(spmv, "cg", b, cfg)
+}
 
-    let b_norm = norm2(b);
+/// [`cg`] dispatched through the two-tier [`ClusterEngine`]: every `A·p`
+/// runs the node×GPU plan and every recurrence dot-product is priced as a
+/// cross-node scalar allreduce from the plan's memoized
+/// [`CommPlan`](crate::coordinator::CommPlan) (DESIGN.md §16). On a
+/// one-node cluster both charges are exactly zero and the solve's modeled
+/// numbers are bitwise identical to [`cg`] on the node's engine. Requires
+/// a CSR matrix; [`super::PlanSource::Auto`] is rejected.
+pub fn cg_cluster(
+    ce: &ClusterEngine,
+    a: &Matrix,
+    b: &[f32],
+    cfg: &SolverConfig,
+) -> Result<SolveReport> {
+    check_config(cfg)?;
+    check_square_system(a, Some(b))?;
+    let spmv = PlannedSpmv::new_cluster(ce, a, cfg)?;
+    cg_run(spmv, "cg-cluster", b, cfg)
+}
+
+/// The Hestenes–Stiefel recurrence, generic over the SpMV dispatch: all
+/// products go through `spmv.apply` and all scalar reductions through
+/// `spmv.dot`/`spmv.norm2` so cluster solves charge their allreduces.
+fn cg_run(
+    mut spmv: PlannedSpmv,
+    method: &'static str,
+    b: &[f32],
+    cfg: &SolverConfig,
+) -> Result<SolveReport> {
+    let n = b.len();
+    let b_norm = spmv.norm2(b);
     if b_norm == 0.0 {
-        return Ok(spmv.finish("cg", cfg, true, 0.0, vec![0.0; n], None, vec![]));
+        return Ok(spmv.finish(method, cfg, true, 0.0, vec![0.0; n], None, vec![]));
     }
 
     let mut x = vec![0.0f32; n];
     let mut r = b.to_vec(); // r = b - A*0
     let mut p = r.clone();
-    let mut rs = dot(&r, &r);
+    let mut rs = spmv.dot(&r, &r);
     let mut residual = rs.sqrt() / b_norm;
     let mut trace = Vec::new();
     let mut converged = false;
 
     for it in 1..=cfg.max_iters {
         let ap = spmv.apply(&p, 1.0, 0.0, None)?;
-        let pap = dot(&p, &ap);
+        let pap = spmv.dot(&p, &ap);
         if pap <= 0.0 {
             return Err(Error::Solver(format!(
                 "matrix is not positive definite (pᵀAp = {pap:.3e} at iteration {it})"
@@ -61,7 +90,7 @@ pub fn cg(engine: &Engine, a: &Matrix, b: &[f32], cfg: &SolverConfig) -> Result<
         for (ri, api) in r.iter_mut().zip(&ap) {
             *ri -= alpha * api;
         }
-        let rs_new = dot(&r, &r);
+        let rs_new = spmv.dot(&r, &r);
         residual = rs_new.sqrt() / b_norm;
         trace.push(IterationStat { iter: it, residual, modeled_spmv_s: spmv.last_spmv_s });
         if residual <= cfg.tol {
@@ -75,7 +104,7 @@ pub fn cg(engine: &Engine, a: &Matrix, b: &[f32], cfg: &SolverConfig) -> Result<
         rs = rs_new;
     }
 
-    Ok(spmv.finish("cg", cfg, converged, residual, x, None, trace))
+    Ok(spmv.finish(method, cfg, converged, residual, x, None, trace))
 }
 
 #[cfg(test)]
@@ -97,6 +126,22 @@ mod tests {
             numa_aware: None,
             strategy_override: None,
         })
+        .unwrap()
+    }
+
+    fn cluster_engine(nodes: usize) -> ClusterEngine {
+        ClusterEngine::new(
+            crate::sim::Cluster::of(Platform::dgx1(), nodes),
+            RunConfig {
+                platform: Platform::dgx1(),
+                num_gpus: 4,
+                mode: Mode::PStarOpt,
+                format: FormatKind::Csr,
+                backend: Backend::CpuRef,
+                numa_aware: None,
+                strategy_override: None,
+            },
+        )
         .unwrap()
     }
 
@@ -186,5 +231,54 @@ mod tests {
         assert!(cg(&engine(1), &rect, &[0.0; 4], &SolverConfig::default()).is_err());
         let (a, _, _) = spd_system(10, 40, 5);
         assert!(cg(&engine(1), &a, &[0.0; 9], &SolverConfig::default()).is_err());
+    }
+
+    #[test]
+    fn one_node_cluster_cg_is_bitwise_identical_to_engine_cg() {
+        let (a, _, b) = spd_system(500, 6_000, 13);
+        let single = cg(&engine(4), &a, &b, &SolverConfig::default()).unwrap();
+        let clustered =
+            cg_cluster(&cluster_engine(1), &a, &b, &SolverConfig::default()).unwrap();
+        assert_eq!(single.x, clustered.x);
+        assert_eq!(single.iterations, clustered.iterations);
+        // the degenerate cluster charges nothing extra: no level-0 scan,
+        // zero-step comm schedule, zero-cost allreduces
+        assert_eq!(single.t_plan, clustered.t_plan);
+        assert_eq!(single.modeled_spmv_s, clustered.modeled_spmv_s);
+        assert_eq!(single.modeled_total_s, clustered.modeled_total_s);
+    }
+
+    #[test]
+    fn cluster_cg_prices_dots_as_allreduces_and_memoizes_comm() {
+        let (a, _, b) = spd_system(500, 6_000, 13);
+        let ce = cluster_engine(4);
+        let rep = cg_cluster(&ce, &a, &b, &SolverConfig::default()).unwrap();
+        assert!(rep.converged, "residual {}", rep.final_residual);
+        assert_eq!(rep.method, "cg-cluster");
+        let csr = match &a {
+            Matrix::Csr(c) => c,
+            _ => unreachable!(),
+        };
+        let plan = ce.plan(csr).unwrap();
+        let t_all = plan.comm.t_allreduce_scalar;
+        assert!(t_all > 0.0);
+        // every iteration runs one SpMV and two recurrence dot-products
+        let floor = rep.iterations as f64 * 2.0 * t_all;
+        assert!(
+            rep.modeled_spmv_s > floor,
+            "allreduces not charged: {} <= {floor}",
+            rep.modeled_spmv_s
+        );
+        // the solve built the CommPlan once; our re-plan above hit the cache
+        let stats = ce.comm_stats();
+        assert_eq!(stats.misses, 1);
+        assert!(stats.hits >= 1, "stats {stats:?}");
+    }
+
+    #[test]
+    fn cluster_cg_rejects_auto_plan_source() {
+        let (a, _, b) = spd_system(100, 1_000, 17);
+        let cfg = SolverConfig { plan_source: PlanSource::Auto, ..Default::default() };
+        assert!(cg_cluster(&cluster_engine(2), &a, &b, &cfg).is_err());
     }
 }

@@ -42,16 +42,16 @@ mod jacobi;
 mod pcg;
 mod power;
 
-pub use cg::cg;
+pub use cg::{cg, cg_cluster};
 pub use ilu::ilu0;
 pub use jacobi::jacobi;
 pub use pcg::{pcg, Preconditioner};
 pub use power::{pagerank, power_iteration};
 
-use crate::coordinator::{Engine, PartitionPlan};
+use crate::coordinator::{ClusterEngine, ClusterPlan, Engine, PartitionPlan};
 use crate::error::{Error, Result};
-use crate::formats::Matrix;
-use crate::obs::{SpanKind, Track};
+use crate::formats::{Csr, Matrix};
+use crate::obs::{SpanKind, Track, TraceRecorder};
 
 /// How each iteration's SpMV obtains its partitioning.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -250,18 +250,55 @@ fn check_square_system(a: &Matrix, b: Option<&[f32]>) -> Result<()> {
     Ok(())
 }
 
+/// Where a solve's SpMVs execute: one node's engine, or the two-tier
+/// node×GPU cluster engine (DESIGN.md §16).
+enum Dispatch<'a> {
+    /// single-node: the plain [`Engine`]
+    Single {
+        /// the engine every `apply` dispatches through
+        engine: &'a Engine,
+        /// `Some` for [`PlanSource::Reused`] (the engine-built plan) and
+        /// [`PlanSource::Auto`] (the tuner's winner); `None` for
+        /// [`PlanSource::Cold`], which re-partitions per apply
+        plan: Option<PartitionPlan>,
+    },
+    /// multi-node: the [`ClusterEngine`], whose replays price the
+    /// cross-node exchange from a memoized [`crate::coordinator::CommPlan`]
+    Cluster {
+        /// the cluster engine every `apply` dispatches through
+        ce: &'a ClusterEngine,
+        /// `Some` for [`PlanSource::Reused`]; `None` for
+        /// [`PlanSource::Cold`], which re-plans per apply (the comm
+        /// schedule still comes out of the cache — only the first build
+        /// constructs it)
+        plan: Option<ClusterPlan>,
+    },
+}
+
+/// Cluster solves run the two-tier row-span split, which dispatches on CSR.
+fn cluster_csr(a: &Matrix) -> Result<&Csr> {
+    match a {
+        Matrix::Csr(csr) => Ok(csr),
+        _ => Err(Error::Solver(
+            "cluster solves need a CSR matrix (two-tier row-span split)".into(),
+        )),
+    }
+}
+
 /// The kernels' SpMV step: owns the plan-source dispatch and the modeled
 /// cost bookkeeping, so each kernel is just its recurrence.
 struct PlannedSpmv<'a> {
-    engine: &'a Engine,
+    dispatch: Dispatch<'a>,
     matrix: &'a Matrix,
-    /// `Some` for [`PlanSource::Reused`] (the engine-built plan) and
-    /// [`PlanSource::Auto`] (the tuner's winner); `None` for
-    /// [`PlanSource::Cold`], which re-partitions per apply
-    plan: Option<PartitionPlan>,
     source: PlanSource,
-    /// modeled cost of one plan build (probed up front for both sources)
+    /// modeled cost of one plan build (probed up front for both sources;
+    /// cluster solves fold in the collective-schedule construction on a
+    /// comm-cache miss — a hit charges nothing)
     t_plan: f64,
+    /// modeled cost of one cross-node scalar allreduce, charged per
+    /// [`Self::dot`] in cluster solves; 0.0 on a single node, so
+    /// single-node numbers stay bitwise identical
+    t_allreduce: f64,
     /// accumulated modeled SpMV time, partitioning excluded
     spmv_modeled: f64,
     /// modeled SpMV time of the most recent `apply`
@@ -271,6 +308,8 @@ struct PlannedSpmv<'a> {
     /// recorder cursor when the solve started — anchors the iteration
     /// spans `finish` overlays on the solver lane
     run_start: f64,
+    /// the dispatching engine's recorder (clones share one buffer)
+    rec: TraceRecorder,
 }
 
 impl<'a> PlannedSpmv<'a> {
@@ -302,7 +341,7 @@ impl<'a> PlannedSpmv<'a> {
         // solver lane and move the shared cursor past it so the first
         // iteration's engine spans start where planning ended (Cold plans
         // rebuild inside every engine one-shot, which traces them itself)
-        let rec = engine.recorder();
+        let rec = engine.recorder().clone();
         let run_start = rec.cursor();
         if rec.is_enabled() && matches!(source, PlanSource::Reused | PlanSource::Auto) {
             rec.span(
@@ -315,31 +354,118 @@ impl<'a> PlannedSpmv<'a> {
             rec.set_cursor(run_start + t_plan);
         }
         Ok(PlannedSpmv {
-            engine,
+            dispatch: Dispatch::Single { engine, plan },
             matrix,
-            plan,
             source,
             t_plan,
+            t_allreduce: 0.0,
             spmv_modeled: 0.0,
             last_spmv_s: 0.0,
             count: 0,
             run_start,
+            rec,
+        })
+    }
+
+    /// Cluster variant: SpMVs run through the [`ClusterEngine`] and every
+    /// [`Self::dot`] additionally prices one cross-node scalar allreduce
+    /// from the plan's memoized [`crate::coordinator::CommPlan`].
+    /// [`PlanSource::Auto`] is rejected — the format tuner searches
+    /// single-node plans and would not price the node tier.
+    fn new_cluster(ce: &'a ClusterEngine, matrix: &'a Matrix, cfg: &SolverConfig) -> Result<Self> {
+        let source = cfg.plan_source;
+        if source == PlanSource::Auto {
+            return Err(Error::Solver(
+                "plan source 'auto' is not supported for cluster solves".into(),
+            ));
+        }
+        let csr = cluster_csr(matrix)?;
+        // built even for Cold: t_plan anchors the amortization report.
+        // On the first solve against this (matrix, topology) the comm
+        // cache misses and the schedule construction is charged; a later
+        // solve through the same ClusterEngine hits and charges nothing.
+        let plan = ce.plan(csr)?;
+        let mut t_plan = plan.t_partition;
+        if !plan.comm_cached {
+            t_plan += plan.comm.t_build;
+        }
+        let t_allreduce = plan.comm.t_allreduce_scalar;
+        let kept = if source == PlanSource::Reused { Some(plan) } else { None };
+        let rec = ce.recorder().clone();
+        let run_start = rec.cursor();
+        if rec.is_enabled() && source == PlanSource::Reused {
+            rec.span(
+                Track::Lane("solver"),
+                "plan",
+                SpanKind::Phase,
+                run_start,
+                run_start + t_plan,
+            );
+            rec.set_cursor(run_start + t_plan);
+        }
+        Ok(PlannedSpmv {
+            dispatch: Dispatch::Cluster { ce, plan: kept },
+            matrix,
+            source,
+            t_plan,
+            t_allreduce,
+            spmv_modeled: 0.0,
+            last_spmv_s: 0.0,
+            count: 0,
+            run_start,
+            rec,
         })
     }
 
     /// `y = alpha*A*x + beta*y0` through the configured plan source.
     fn apply(&mut self, x: &[f32], alpha: f32, beta: f32, y0: Option<&[f32]>) -> Result<Vec<f32>> {
-        let rep = match &self.plan {
-            Some(plan) => self.engine.spmv_with_plan(plan, x, alpha, beta, y0)?,
-            None => self.engine.spmv(self.matrix, x, alpha, beta, y0)?,
+        // SpMV-only share: the with-plan paths charge no partitioning, the
+        // cold paths' per-call charge is excluded here and re-attributed
+        // by charged_total()
+        let (y, spmv_s) = match &self.dispatch {
+            Dispatch::Single { engine, plan: Some(plan) } => {
+                let rep = engine.spmv_with_plan(plan, x, alpha, beta, y0)?;
+                let s = rep.metrics.modeled_total - rep.metrics.t_partition;
+                (rep.y, s)
+            }
+            Dispatch::Single { engine, plan: None } => {
+                let rep = engine.spmv(self.matrix, x, alpha, beta, y0)?;
+                let s = rep.metrics.modeled_total - rep.metrics.t_partition;
+                (rep.y, s)
+            }
+            Dispatch::Cluster { ce, plan: Some(plan) } => {
+                let rep = ce.spmv_with_plan(plan, x, alpha, beta, y0)?;
+                (rep.y, rep.modeled_total)
+            }
+            Dispatch::Cluster { ce, plan: None } => {
+                // cold: re-plan per apply; the collective schedule is
+                // memoized, so only the very first build constructed it
+                let plan = ce.plan(cluster_csr(self.matrix)?)?;
+                let rep = ce.spmv_with_plan(&plan, x, alpha, beta, y0)?;
+                (rep.y, rep.modeled_total)
+            }
         };
-        // SpMV-only share: the with-plan path charges no partitioning, the
-        // cold path's per-call charge is subtracted back out here and
-        // re-attributed by charged_total()
-        self.last_spmv_s = rep.metrics.modeled_total - rep.metrics.t_partition;
-        self.spmv_modeled += self.last_spmv_s;
+        self.last_spmv_s = spmv_s;
+        self.spmv_modeled += spmv_s;
         self.count += 1;
-        Ok(rep.y)
+        Ok(y)
+    }
+
+    /// f64-accumulated dot product, charging the modeled cross-node
+    /// scalar allreduce in cluster solves. On a single node (or a
+    /// one-node cluster) `t_allreduce` is 0.0 and nothing is charged, so
+    /// single-node modeled numbers stay bitwise identical.
+    fn dot(&mut self, a: &[f32], b: &[f32]) -> f64 {
+        if self.t_allreduce > 0.0 {
+            let t = self.t_allreduce;
+            self.charge_side(t);
+        }
+        dot(a, b)
+    }
+
+    /// f64-accumulated 2-norm through [`Self::dot`] (one allreduce).
+    fn norm2(&mut self, a: &[f32]) -> f64 {
+        self.dot(a, a).sqrt()
     }
 
     /// Fold additional plan-build cost into `t_plan` — the hook
@@ -380,7 +506,7 @@ impl<'a> PlannedSpmv<'a> {
         // overlay the convergence trace on the solver lane: one span per
         // iteration, chained from where planning ended (Cold iterations
         // also carry their per-call rebuild, like the engine charged them)
-        let rec = self.engine.recorder();
+        let rec = &self.rec;
         if rec.is_enabled() {
             let cold = self.source == PlanSource::Cold;
             let per_iter_plan = if cold { self.t_plan } else { 0.0 };

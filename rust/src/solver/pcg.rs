@@ -19,8 +19,7 @@ use crate::formats::{convert, Matrix};
 use crate::sptrsv::{SptrsvPlan, Triangle};
 
 use super::{
-    check_config, check_square_system, dot, ilu0, norm2, IterationStat, PlannedSpmv, SolveReport,
-    SolverConfig,
+    check_config, check_square_system, ilu0, IterationStat, PlannedSpmv, SolveReport, SolverConfig,
 };
 
 /// Which preconditioner [`pcg`] applies each iteration.
@@ -107,7 +106,7 @@ pub fn pcg(
         }
     };
 
-    let b_norm = norm2(b);
+    let b_norm = spmv.norm2(b);
     if b_norm == 0.0 {
         return Ok(spmv.finish("pcg", cfg, true, 0.0, vec![0.0; n], None, vec![]));
     }
@@ -134,14 +133,14 @@ pub fn pcg(
     let mut r = b.to_vec(); // r = b - A*0
     let mut z = apply_m(engine, &ilu, &mut spmv, &r)?;
     let mut p = z.clone();
-    let mut rz = dot(&r, &z);
-    let mut residual = norm2(&r) / b_norm;
+    let mut rz = spmv.dot(&r, &z);
+    let mut residual = spmv.norm2(&r) / b_norm;
     let mut trace = Vec::new();
     let mut converged = false;
 
     for it in 1..=cfg.max_iters {
         let ap = spmv.apply(&p, 1.0, 0.0, None)?;
-        let pap = dot(&p, &ap);
+        let pap = spmv.dot(&p, &ap);
         if pap <= 0.0 {
             return Err(Error::Solver(format!(
                 "matrix is not positive definite (pᵀAp = {pap:.3e} at iteration {it})"
@@ -154,7 +153,7 @@ pub fn pcg(
         for (ri, api) in r.iter_mut().zip(&ap) {
             *ri -= alpha * api;
         }
-        residual = norm2(&r) / b_norm;
+        residual = spmv.norm2(&r) / b_norm;
         if residual <= cfg.tol || it == cfg.max_iters {
             // converged, or budget exhausted — either way the next z/p
             // would be discarded, so skip the preconditioner application
@@ -164,7 +163,7 @@ pub fn pcg(
         }
         z = apply_m(engine, &ilu, &mut spmv, &r)?;
         trace.push(IterationStat { iter: it, residual, modeled_spmv_s: spmv.last_spmv_s });
-        let rz_new = dot(&r, &z);
+        let rz_new = spmv.dot(&r, &z);
         let beta = (rz_new / rz) as f32;
         for (pi, zi) in p.iter_mut().zip(&z) {
             *pi = zi + beta * *pi;

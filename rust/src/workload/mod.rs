@@ -9,8 +9,9 @@ mod suite;
 
 pub use suite::{
     autoplan_scenario_by_name, autoplan_scenario_matrix, autoplan_scenarios, by_name,
-    fig6_ratios, row_stochastic, scenario_matrix, solver_scenario_by_name, solver_scenarios,
+    fig6_ratios, row_stochastic, scaleout_scenario_by_name, scaleout_scenario_matrix,
+    scaleout_scenarios, scenario_matrix, solver_scenario_by_name, solver_scenarios,
     spgemm_scenario_by_name, spgemm_scenario_chain, spgemm_scenarios, sptrsv_scenario_by_name,
     sptrsv_scenario_factor, sptrsv_scenarios, suite, suite_matrix, AutoplanScenario,
-    SolverScenario, SpgemmScenario, SptrsvScenario, SuiteEntry,
+    ScaleoutScenario, SolverScenario, SpgemmScenario, SptrsvScenario, SuiteEntry,
 };

@@ -383,6 +383,7 @@ fn serve_run_emits_queue_dispatch_and_device_spans() {
         flush_deadline_s: 50e-6,
         queue_capacity: 64,
         plan_cache_capacity: 4,
+        cluster: None,
     };
     let mut server = Server::new(cfg).unwrap();
     let mat = matrix_in(FormatKind::Csr, 256, 3_000, 23);

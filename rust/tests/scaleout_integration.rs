@@ -1,0 +1,194 @@
+//! Scale-out integration: the two-tier cluster engine and the §7 traffic
+//! claim end to end (DESIGN.md §16).
+//!
+//! Covers the four contracts the cluster layer promises:
+//! * level-0 node spans are disjoint, contiguous, and conserve nnz;
+//! * msrep-2level network traffic is invariant in node count while the
+//!   broadcast baseline grows linearly;
+//! * a one-node cluster degenerates **bitwise** to the single-node engine
+//!   (same plan cost, same modeled total, same result vector);
+//! * the memoized CommPlan is built once and every later solve on the
+//!   same (matrix structure, topology) hits the cache.
+
+use msrep::coordinator::{
+    scaleout_spmv, Backend, ClusterEngine, Engine, Mode, NodeSplit, RunConfig, ScaleOutScheme,
+};
+use msrep::formats::{convert, gen, Csr, FormatKind, Matrix};
+use msrep::sim::{Cluster, Platform};
+use msrep::solver::{cg_cluster, SolverConfig};
+use msrep::spmv::spmv_matrix;
+
+fn node_config() -> RunConfig {
+    RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: 4,
+        mode: Mode::PStarOpt,
+        format: FormatKind::Csr,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    }
+}
+
+fn cluster_engine(nodes: usize) -> ClusterEngine {
+    ClusterEngine::new(Cluster::of(Platform::dgx1(), nodes), node_config()).unwrap()
+}
+
+fn power_law_csr(m: usize, nnz: usize, seed: u64) -> Csr {
+    convert::to_csr(&Matrix::Coo(gen::power_law(m, m, nnz, 2.0, seed)))
+}
+
+#[test]
+fn node_spans_are_disjoint_and_conserve_nnz() {
+    let a = power_law_csr(4_096, 120_000, 7);
+    let total_nnz = a.nnz() as u64;
+    for nodes in [1usize, 2, 4, 8] {
+        let plan = cluster_engine(nodes).plan(&a).unwrap();
+        assert_eq!(plan.node_spans.len(), nodes);
+        // contiguous cover of 0..m with no overlap or gap
+        let mut cursor = 0usize;
+        for (i, &(start, end)) in plan.node_spans.iter().enumerate() {
+            assert_eq!(start, cursor, "node {i} span starts at a gap/overlap");
+            assert!(end >= start);
+            cursor = end;
+        }
+        assert_eq!(cursor, a.rows(), "spans must cover every row");
+        assert_eq!(
+            plan.node_loads.iter().sum::<u64>(),
+            total_nnz,
+            "{nodes}-node split must conserve nnz"
+        );
+        // the ablation path shares the same boundary core, so its loads
+        // conserve nnz too — the double-counting bug this PR fixes
+        let cluster = Cluster::of(Platform::dgx1(), nodes);
+        for scheme in [ScaleOutScheme::MsrepPartialMerge, ScaleOutScheme::BroadcastAllGather] {
+            let rep = scaleout_spmv(&cluster, &a, scheme).unwrap();
+            assert_eq!(rep.node_loads.iter().sum::<u64>(), total_nnz);
+        }
+    }
+}
+
+#[test]
+fn msrep_network_is_flat_while_broadcast_grows_linearly() {
+    let a = power_law_csr(8_192, 300_000, 11);
+    let run = |nodes: usize, scheme: ScaleOutScheme| {
+        scaleout_spmv(&Cluster::of(Platform::dgx1(), nodes), &a, scheme).unwrap()
+    };
+
+    // one node moves nothing over the network under either scheme
+    for scheme in [ScaleOutScheme::MsrepPartialMerge, ScaleOutScheme::BroadcastAllGather] {
+        let solo = run(1, scheme);
+        assert_eq!(solo.t_network, 0.0);
+        assert_eq!(solo.net_ingest_bytes, 0);
+    }
+
+    // msrep-2level: every node ingests the disjoint remainder of y, so
+    // per-node traffic (and its ring time) is ~flat in node count
+    let ms4 = run(4, ScaleOutScheme::MsrepPartialMerge);
+    let ms16 = run(16, ScaleOutScheme::MsrepPartialMerge);
+    assert!(ms4.t_network > 0.0 && ms16.t_network > 0.0);
+    assert!(
+        ms16.t_network / ms4.t_network < 1.5,
+        "msrep network time should be ~invariant in node count: \
+         4 nodes {} vs 16 nodes {}",
+        ms4.t_network,
+        ms16.t_network
+    );
+    assert!(
+        (ms16.net_ingest_bytes as f64) < 1.5 * ms4.net_ingest_bytes as f64,
+        "msrep per-node ingest should stay flat: {} vs {}",
+        ms4.net_ingest_bytes,
+        ms16.net_ingest_bytes
+    );
+
+    // broadcast [39]: every node ingests (N-1) full copies of y — linear
+    let bc4 = run(4, ScaleOutScheme::BroadcastAllGather);
+    let bc16 = run(16, ScaleOutScheme::BroadcastAllGather);
+    assert!(
+        bc16.net_ingest_bytes > 3 * bc4.net_ingest_bytes,
+        "broadcast ingest should grow ~linearly: {} vs {}",
+        bc4.net_ingest_bytes,
+        bc16.net_ingest_bytes
+    );
+    assert!(bc16.t_network > 3.0 * bc4.t_network);
+    // and at any fixed node count broadcast pays more than msrep
+    assert!(bc4.net_ingest_bytes > ms4.net_ingest_bytes);
+}
+
+#[test]
+fn one_node_cluster_is_bitwise_identical_to_the_engine() {
+    let a = power_law_csr(3_000, 60_000, 13);
+    let x = gen::dense_vector(a.cols(), 5);
+
+    let ce = cluster_engine(1);
+    let cplan = ce.plan(&a).unwrap();
+    let crep = ce.spmv_with_plan(&cplan, &x, 1.0, 0.0, None).unwrap();
+
+    let engine = Engine::new(node_config()).unwrap();
+    let m = Matrix::Csr(a.clone());
+    let eplan = engine.plan(&m).unwrap();
+    let erep = engine.spmv_with_plan(&eplan, &x, 1.0, 0.0, None).unwrap();
+
+    // degenerate cluster charges nothing: no level-0 scan, no comm build,
+    // zero-step exchange — every modeled number is bitwise the engine's
+    assert_eq!(cplan.t_partition, eplan.t_partition);
+    assert_eq!(cplan.comm.t_build, 0.0);
+    assert_eq!(cplan.comm.t_exchange, 0.0);
+    assert_eq!(cplan.comm.t_allreduce_scalar, 0.0);
+    assert_eq!(crep.t_network, 0.0);
+    assert_eq!(crep.modeled_total, erep.metrics.modeled_total);
+    assert_eq!(crep.y, erep.y, "one-node cluster result must be bitwise identical");
+
+    // and the numerics are the reference kernel's
+    let mut want = vec![0.0f32; a.rows()];
+    spmv_matrix(&m, &x, 1.0, 0.0, &mut want).unwrap();
+    assert_eq!(crep.y, want);
+}
+
+#[test]
+fn second_solve_hits_the_memoized_comm_plan() {
+    // SPD system so CG is well-posed; convergence is irrelevant here
+    let n = 600;
+    let a = Matrix::Csr(convert::to_csr(&Matrix::Coo(gen::spd(n, 8_000, 2.0, 17))));
+    let mut b = vec![0.0f32; n];
+    spmv_matrix(&a, &gen::dense_vector(n, 18), 1.0, 0.0, &mut b).unwrap();
+    let cfg = SolverConfig { max_iters: 5, ..Default::default() };
+
+    let ce = cluster_engine(4);
+    let first = cg_cluster(&ce, &a, &b, &cfg).unwrap();
+    let after_first = ce.comm_stats();
+    assert_eq!(after_first.misses, 1, "first solve builds the CommPlan once");
+
+    let second = cg_cluster(&ce, &a, &b, &cfg).unwrap();
+    let after_second = ce.comm_stats();
+    assert_eq!(after_second.misses, 1, "second solve must not rebuild");
+    assert!(after_second.hits >= 1, "stats {after_second:?}");
+
+    // the cache hit is visible in the plan charge: the second solve skips
+    // the schedule build but still pays the two-tier partitioning
+    assert!(second.t_plan < first.t_plan, "{} vs {}", second.t_plan, first.t_plan);
+    assert!(second.t_plan > 0.0);
+    // identical numerics either way
+    assert_eq!(first.x, second.x);
+}
+
+#[test]
+fn topology_aware_split_beats_nnz_balance_on_power_law() {
+    let a = power_law_csr(8_192, 400_000, 23);
+    let mut boundaries_shifted = false;
+    for nodes in [4usize, 8] {
+        let ce = cluster_engine(nodes);
+        let aware = ce.plan_with_split(&a, NodeSplit::TopologyAware).unwrap();
+        let blind = ce.plan_with_split(&a, NodeSplit::NnzBalanced).unwrap();
+        let t_aware = ce.model_spmv(&aware).unwrap().t_intra;
+        let t_blind = ce.model_spmv(&blind).unwrap().t_intra;
+        assert!(
+            t_aware <= t_blind,
+            "{nodes} nodes: topology-aware {t_aware} must not lose to nnz-balance {t_blind}"
+        );
+        boundaries_shifted |= aware.node_spans != blind.node_spans;
+    }
+    // the per-row cost term must actually shift level-0 boundaries somewhere
+    // in the sweep — otherwise "topology-aware" is a no-op relabeling
+    assert!(boundaries_shifted, "aware and blind splits never diverged");
+}

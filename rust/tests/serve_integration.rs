@@ -30,6 +30,7 @@ fn serve_config(max_batch: usize, cache: usize) -> ServeConfig {
         flush_deadline_s: 50e-6,
         queue_capacity: 1024,
         plan_cache_capacity: cache,
+        cluster: None,
     }
 }
 
