@@ -1,6 +1,6 @@
 //! Bench: format auto-tuning on the selection scenario suite — the
 //! DESIGN.md §12 acceptance sweep. For every scenario the tuner's pick is
-//! compared against all three fixed formats through the shared acceptance
+//! compared against every fixed format through the shared acceptance
 //! surface (`autoplan::compare_fixed_formats` — the same definition the
 //! `msrep autoplan-bench` CI gate uses); the auto-selected plan's modeled
 //! SpMV time must never be worse than the worst fixed format, must match

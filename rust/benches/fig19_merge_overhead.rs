@@ -34,10 +34,7 @@ fn main() {
             })
             .collect();
         let mut y = vec![0.0f32; mat.rows()];
-        let label = match format {
-            FormatKind::Csr => "row-based",
-            _ => "col-based",
-        };
+        let label = format.spec().merge_label;
         let r = b.run(&format!("fig19/merge/{label}/np8"), || {
             merge(&out.tasks, &partials, 0.5, &mut y).unwrap();
             black_box(y[0])

@@ -1,0 +1,127 @@
+//! Bench: pSELL fill-ratio sweep — where the padded SELL-C-σ stream wins
+//! and where it loses (the DESIGN.md §17 decision surface, made
+//! executable).
+//!
+//! For each structure family the sweep reports the canonical C=32/σ=128
+//! fill ratio next to the modeled max-GPU SpMV compute time of a pSELL
+//! plan vs a pCSR plan on the same matrix, and asserts the acceptance
+//! split: the regular stencils (2-D Laplacian, diagonal bands) must route
+//! *to* pSELL — its padded stream at 0.70 kernel efficiency strictly
+//! beats pCSR's dense stream — while the heavy-tailed power-law graphs
+//! must route *away* (σ-window padding blows the stream up faster than
+//! the efficiency edge pays for).
+//!
+//! Run with `cargo bench --bench psell_fill`
+//! (`MSREP_BENCH_QUICK=1` shrinks the matrices; set `MSREP_BENCH_OUT` to
+//! also write the sweep as a canonical `BENCH_*` envelope).
+
+use std::collections::BTreeMap;
+
+use msrep::coordinator::{model_spmv_phases, Backend, Engine, Mode, RunConfig};
+use msrep::formats::{convert, gen, Coo, FormatKind, Matrix, PSell};
+use msrep::report::Table;
+use msrep::sim::Platform;
+use msrep::util::bench::{bench_record, section, write_bench_json, Bench};
+use msrep::util::json::Value;
+
+fn cfg(format: FormatKind) -> RunConfig {
+    RunConfig {
+        platform: Platform::dgx1(),
+        num_gpus: 8,
+        mode: Mode::PStarOpt,
+        format,
+        backend: Backend::CpuRef,
+        numa_aware: None,
+        strategy_override: None,
+    }
+}
+
+/// Modeled max-GPU compute seconds of one format's plan on `coo`.
+fn modeled_compute(coo: &Coo, format: FormatKind) -> f64 {
+    let c = cfg(format);
+    let mat = convert::to_format(&Matrix::Coo(coo.clone()), format);
+    let plan = Engine::new(c.clone()).expect("engine").plan(&mat).expect("plan");
+    model_spmv_phases(&c, &plan).t_compute
+}
+
+fn main() {
+    let quick = std::env::var("MSREP_BENCH_QUICK").is_ok();
+    let scale = if quick { 4 } else { 1 };
+
+    // (name, matrix, psell_must_win) — fill decays down the table
+    let grid = if quick { 64 } else { 128 };
+    let sweep: Vec<(String, Coo, bool)> = vec![
+        (format!("laplacian2d-{grid}x{grid}"), gen::laplacian_2d(grid), true),
+        ("banded-b4".to_string(), gen::banded(4_096 / scale, 4_096 / scale, 4, 501), true),
+        ("banded-b8".to_string(), gen::banded(4_096 / scale, 4_096 / scale, 8, 501), true),
+        ("banded-b16".to_string(), gen::banded(4_096 / scale, 4_096 / scale, 16, 501), true),
+        (
+            "powerlaw-r1.6".to_string(),
+            gen::power_law(8_192 / scale, 8_192 / scale, 250_000 / scale, 1.6, 502),
+            false,
+        ),
+        (
+            "powerlaw-r2.0".to_string(),
+            gen::power_law(8_192 / scale, 8_192 / scale, 250_000 / scale, 2.0, 502),
+            false,
+        ),
+    ];
+
+    section("pSELL fill-ratio sweep — modeled max-GPU compute, dgx1 x 8, p*-opt");
+    let mut t = Table::new(["structure", "nnz", "fill", "psell", "pcsr", "psell/pcsr", ""]);
+    let mut rows = Vec::new();
+    for (name, coo, psell_must_win) in &sweep {
+        let fill = PSell::from_csr(&convert::to_csr(&Matrix::Coo(coo.clone()))).fill_ratio();
+        let psell_s = modeled_compute(coo, FormatKind::PSell);
+        let pcsr_s = modeled_compute(coo, FormatKind::Csr);
+        let ratio = psell_s / pcsr_s;
+        if *psell_must_win {
+            assert!(
+                psell_s < pcsr_s,
+                "{name}: pSELL {psell_s:.3e}s must strictly beat pCSR {pcsr_s:.3e}s \
+                 (fill {fill:.3})"
+            );
+        } else {
+            assert!(
+                psell_s > pcsr_s,
+                "{name}: pSELL {psell_s:.3e}s must lose to pCSR {pcsr_s:.3e}s on a \
+                 heavy tail (fill {fill:.3})"
+            );
+        }
+        t.row([
+            name.clone(),
+            coo.nnz().to_string(),
+            format!("{fill:.3}"),
+            format!("{psell_s:.3e} s"),
+            format!("{pcsr_s:.3e} s"),
+            format!("{ratio:.2}x"),
+            if *psell_must_win { "<- psell" } else { "<- pcsr" }.to_string(),
+        ]);
+        let mut rec = BTreeMap::new();
+        rec.insert("structure".to_string(), Value::Str(name.clone()));
+        rec.insert("nnz".to_string(), Value::Num(coo.nnz() as f64));
+        rec.insert("fill".to_string(), Value::Num(fill));
+        rec.insert("psell_s".to_string(), Value::Num(psell_s));
+        rec.insert("pcsr_s".to_string(), Value::Num(pcsr_s));
+        rows.push(Value::Obj(rec));
+    }
+    print!("{}", t.render());
+
+    // host wall cost of the pSELL layout build itself (the honest side of
+    // the t_partition model)
+    section("pSELL layout build (host wall)");
+    let b = Bench::from_env();
+    let band = gen::banded(4_096 / scale, 4_096 / scale, 8, 501);
+    let csr = convert::to_csr(&Matrix::Coo(band));
+    let r = b.run("psell_fill/from_csr/banded-b8", || PSell::from_csr(&csr).padded());
+    println!("{}", r.render());
+
+    if let Ok(path) = std::env::var("MSREP_BENCH_OUT") {
+        let mut root = BTreeMap::new();
+        root.insert("rows".to_string(), Value::Arr(rows));
+        root.insert("quick".to_string(), Value::Bool(quick));
+        write_bench_json(&path, &bench_record("psell_fill", root)).expect("write bench json");
+        println!("wrote {path}");
+    }
+    println!("psell fill-ratio acceptance OK");
+}

@@ -121,7 +121,7 @@ impl AutoPlanOptions {
     }
 
     /// The full `(format, strategy, np)` grid under `cfg`'s platform:
-    /// all three formats, both strategies, and power-of-two GPU counts up
+    /// every registered format, both strategies, and power-of-two GPU counts up
     /// to `cfg.num_gpus` (plus `cfg.num_gpus` itself). The winner of this
     /// sweep may need a reconfigured engine — [`AutoPlan::config`] is the
     /// ready-made [`RunConfig`] for it.
@@ -215,18 +215,14 @@ impl AutoPlan {
 }
 
 /// Deterministic tie-break rank so equal-cost candidates sort stably
-/// (format order CSR < CSC < COO, balanced before blocks, small np first).
+/// (registry order CSR < CSC < COO < pSELL, balanced before blocks,
+/// small np first).
 fn structural_rank(c: &Candidate) -> (usize, usize, usize) {
-    let f = match c.format {
-        FormatKind::Csr => 0,
-        FormatKind::Csc => 1,
-        FormatKind::Coo => 2,
-    };
     let s = match c.strategy {
         Strategy::NnzBalanced => 0,
         Strategy::Blocks => 1,
     };
-    (f, s, c.np)
+    (c.format.spec().ordinal, s, c.np)
 }
 
 /// Run the tuner: profile `a`, build + price every candidate of `opts`
@@ -462,7 +458,7 @@ mod tests {
         let c = cfg(8);
         let a = Matrix::Coo(gen::power_law(800, 800, 15_000, 2.0, 2));
         let auto = plan_auto(&c, &a, &AutoPlanOptions::for_config(&c)).unwrap();
-        assert_eq!(auto.ranked.len(), 3, "one candidate per format");
+        assert_eq!(auto.ranked.len(), 4, "one candidate per format");
         for w in auto.ranked.windows(2) {
             assert!(
                 w[0].amortized_s(auto.reuse) <= w[1].amortized_s(auto.reuse) + 1e-18,
@@ -483,9 +479,9 @@ mod tests {
         let c = cfg(8);
         let a = Matrix::Coo(gen::uniform(400, 400, 6_000, 3));
         let auto = plan_auto(&c, &a, &AutoPlanOptions::full_sweep(&c)).unwrap();
-        // 3 formats x 2 strategies x np {1,2,4,8}, minus unbuildable
+        // 4 formats x 2 strategies x np {1,2,4,8}, minus unbuildable
         // combinations — at least the balanced grid must survive
-        assert!(auto.ranked.len() >= 12, "only {} candidates", auto.ranked.len());
+        assert!(auto.ranked.len() >= 16, "only {} candidates", auto.ranked.len());
         let nps: std::collections::BTreeSet<usize> =
             auto.ranked.iter().map(|r| r.candidate.np).collect();
         assert!(nps.contains(&1) && nps.contains(&8));
@@ -504,6 +500,33 @@ mod tests {
         let tall = Matrix::Coo(gen::power_law(20_000, 512, 150_000, 2.0, 5));
         let auto = plan_auto(&c, &tall, &AutoPlanOptions::for_config(&c)).unwrap();
         assert_eq!(auto.choice().candidate.format, FormatKind::Csr, "tall input");
+    }
+
+    #[test]
+    fn banded_stencil_routes_to_psell_and_strictly_beats_every_legacy_format() {
+        // the pSELL acceptance scenario (DESIGN.md §17): a near-uniform
+        // PDE band pads almost nothing, so the 0.70-efficiency sliced
+        // stream undercuts every dense-stream format's modeled replay
+        // cost — the tuner must both pick it and beat each legacy
+        // format's modeled max-GPU compute time strictly
+        let c = cfg(8);
+        let s = crate::workload::autoplan_scenario_by_name("banded-stencil").unwrap();
+        let a = Matrix::Coo(crate::workload::autoplan_scenario_matrix(&s));
+        let auto = plan_auto(&c, &a, &AutoPlanOptions::for_config(&c)).unwrap();
+        assert_eq!(auto.choice().candidate.format, FormatKind::PSell, "banded input");
+        let psell =
+            auto.ranked.iter().find(|r| r.candidate.format == FormatKind::PSell).unwrap();
+        for r in &auto.ranked {
+            if r.candidate.format != FormatKind::PSell {
+                assert!(
+                    psell.phases.t_compute < r.phases.t_compute,
+                    "pSELL max-GPU compute {} must strictly beat {}'s {}",
+                    psell.phases.t_compute,
+                    r.candidate.format.name(),
+                    r.phases.t_compute
+                );
+            }
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@ use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::exec;
-use crate::formats::{FormatKind, Matrix};
+use crate::formats::Matrix;
 use crate::obs::{SpanKind, Track, TraceRecorder};
 use crate::runtime::SpmvRuntime;
 use crate::sim::model::pad_to_gpus;
@@ -105,20 +105,22 @@ pub fn model_spmv_phases(cfg: &RunConfig, plan: &PartitionPlan) -> SpmvPhases {
     // format, not the engine default — a transpose-dispatched plan
     // (plan_transpose) runs CSC streams on an engine configured for CSR
     // input. `x_len` is the x segment the task actually reads: full n for
-    // row-based tasks, the owned column range for column-based ones.
+    // row-based tasks, the owned column range for column-based ones. The
+    // kernel streams `nnz + padded` elements (padding is 0 except pSELL)
+    // and pays the format's pre-kernel conversion pass if the registry
+    // declares one (§5.1: COO runs a COO→CSR conversion kernel first).
     let t_compute = tasks
         .iter()
         .map(|t| {
             let mut kt = model::spmv_kernel_time(
                 p,
-                t.nnz() as u64,
+                t.nnz() as u64 + t.padded,
                 t.out_len as u64,
                 t.x_len as u64,
                 plan.format,
             );
-            if plan.format == FormatKind::Coo {
-                // §5.1: COO inputs run a COO→CSR conversion kernel first
-                kt += model::coo_to_csr_conversion_time(p, t.nnz() as u64);
+            if let Some(conv) = plan.format.spec().pre_kernel_conversion {
+                kt += conv(p, t.nnz() as u64);
             }
             kt
         })
@@ -363,9 +365,11 @@ impl Engine {
         let tasks = &plan.tasks;
 
         // ---- 1. device memory accounting --------------------------------
+        // padding slots are materialized on-device (pSELL), so they count
+        // against capacity even though they never cross the host link
         for t in tasks {
             let mut mem = DeviceMemory::new(t.gpu, p.gpu_mem_bytes);
-            mem.alloc("stream", t.nnz() as u64 * STREAM_BYTES_PER_NNZ)?;
+            mem.alloc("stream", (t.nnz() as u64 + t.padded) * STREAM_BYTES_PER_NNZ)?;
             mem.alloc("x", t.x_len as u64 * VEC_BYTES_PER_ENTRY)?;
             mem.alloc("y_partial", t.out_len as u64 * VEC_BYTES_PER_ENTRY)?;
         }
@@ -459,13 +463,13 @@ impl Engine {
                 .map(|t| {
                     let mut kt = model::spmv_kernel_time(
                         p,
-                        t.nnz() as u64,
+                        t.nnz() as u64 + t.padded,
                         t.out_len as u64,
                         t.x_len as u64,
                         plan.format,
                     );
-                    if plan.format == FormatKind::Coo {
-                        kt += model::coo_to_csr_conversion_time(p, t.nnz() as u64);
+                    if let Some(conv) = plan.format.spec().pre_kernel_conversion {
+                        kt += conv(p, t.nnz() as u64);
                     }
                     kt
                 })
@@ -562,7 +566,7 @@ impl Engine {
             .map(|t| {
                 model::spmm_kernel_time(
                     p,
-                    t.nnz() as u64,
+                    t.nnz() as u64 + t.padded,
                     t.out_len as u64,
                     t.x_len as u64,
                     k as u64,
@@ -678,7 +682,7 @@ impl Engine {
                 .map(|t| {
                     model::spmm_kernel_time(
                         p,
-                        t.nnz() as u64,
+                        t.nnz() as u64 + t.padded,
                         t.out_len as u64,
                         t.x_len as u64,
                         k as u64,
@@ -854,7 +858,7 @@ fn charge_partition(metrics: &mut Metrics, plan: &PartitionPlan) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::formats::{convert, gen, Coo};
+    use crate::formats::{convert, gen, Coo, FormatKind};
     use crate::sim::Platform;
     use crate::spmv::spmv_matrix;
 
@@ -872,12 +876,7 @@ mod tests {
     }
 
     fn matrix_in(format: FormatKind, coo: &Coo) -> Matrix {
-        let m = Matrix::Coo(coo.clone());
-        match format {
-            FormatKind::Csr => Matrix::Csr(convert::to_csr(&m)),
-            FormatKind::Csc => Matrix::Csc(convert::to_csc(&m)),
-            FormatKind::Coo => m,
-        }
+        convert::to_format(&Matrix::Coo(coo.clone()), format)
     }
 
     #[test]

@@ -310,6 +310,7 @@ mod tests {
             overlaps_prev: overlaps,
             merge: class,
             rewrite_ops: 0,
+            padded: 0,
         }
     }
 

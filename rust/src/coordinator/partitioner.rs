@@ -14,7 +14,7 @@
 //! because the three modes attribute it differently (§4.1).
 
 use crate::error::{Error, Result};
-use crate::formats::{Coo, Csc, Csr, Matrix, PCoo, PCsc, PCsr, SortOrder};
+use crate::formats::{Coo, Csc, Csr, Matrix, PCoo, PCsc, PCsr, PSell, SortOrder};
 
 /// Bytes per non-zero in the upload stream: f32 value + u32 global column
 /// index + u32 row index (4 + 4 + 4). Every layer that prices matrix
@@ -65,6 +65,12 @@ pub struct GpuTask {
     /// index-rewrite operations this task required (cost attribution for
     /// §4.1: O(rows) for CSR/CSC pointer builds, O(nnz) for COO)
     pub rewrite_ops: u64,
+    /// padding slots beyond the real non-zeros the task's kernel streams
+    /// (pSELL slice padding; 0 for the dense-stream formats). Charged by
+    /// the compute model and the device-memory accounting, but *not* by
+    /// the H2D model — padding is materialized on-device, it never
+    /// crosses the host link.
+    pub padded: u64,
 }
 
 impl GpuTask {
@@ -186,6 +192,10 @@ pub fn spgemm_element_weights(matrix: &Matrix, b_row_nnz: &[u64]) -> Vec<u64> {
             }
             w
         }
+        // pSELL stores real non-zeros permuted-row-major with per-element
+        // column ids, so the CSR rule applies verbatim (padding slots are
+        // accounting, not stored elements, and do no SpGEMM work)
+        Matrix::PSell(a) => a.col_idx.iter().map(|&j| b_row_nnz[j as usize] + 1).collect(),
     }
 }
 
@@ -246,6 +256,10 @@ pub fn merge_class(matrix: &Matrix) -> MergeClass {
                 MergeClass::RowBased
             }
         }
+        // pSELL partitions at σ-window granularity and the permutation
+        // only moves rows *within* a window, so every task owns a
+        // contiguous global row range (DESIGN.md §17)
+        Matrix::PSell(_) => MergeClass::RowBased,
     }
 }
 
@@ -261,10 +275,18 @@ pub fn build_task(matrix: &Matrix, np: usize, g: usize, strategy: Strategy) -> R
     }
     let nnz = matrix.nnz();
     match (strategy, matrix) {
+        // pSELL balances the slots its kernel actually streams (real nnz
+        // + slice padding, per σ-window) rather than raw element counts —
+        // the padding is modeled work, so it must be balanced work too
+        (Strategy::NnzBalanced, Matrix::PSell(p)) => {
+            let wb = weighted_boundaries(&p.window_weights(), np);
+            Ok(psell_window_task(p, wb[g], wb[g + 1], g))
+        }
         (Strategy::NnzBalanced, _) => build_task_range(matrix, g * nnz / np, (g + 1) * nnz / np, g),
         (Strategy::Blocks, Matrix::Csr(csr)) => Ok(baseline_csr_task(csr, np, g)),
         (Strategy::Blocks, Matrix::Csc(csc)) => Ok(baseline_csc_task(csc, np, g)),
         (Strategy::Blocks, Matrix::Coo(coo)) => baseline_coo_task(coo, np, g),
+        (Strategy::Blocks, Matrix::PSell(p)) => Ok(baseline_psell_task(p, np, g)),
     }
 }
 
@@ -277,6 +299,13 @@ pub fn build_task_range(matrix: &Matrix, lo: usize, hi: usize, g: usize) -> Resu
         Matrix::Csr(csr) => balanced_csr_task(csr, lo, hi, g),
         Matrix::Csc(csc) => balanced_csc_task(csc, lo, hi, g),
         Matrix::Coo(coo) => balanced_coo_task(coo, lo, hi, g),
+        // pSELL snaps the element range to σ-window boundaries (monotone
+        // snap: tiling element ranges stay tiling window ranges), so a
+        // slice is never split across tasks and the merge stays row-based
+        Matrix::PSell(p) => {
+            let (w_lo, w_hi) = p.window_span(lo, hi);
+            Ok(psell_window_task(p, w_lo, w_hi, g))
+        }
     }
 }
 
@@ -295,6 +324,8 @@ pub fn search_ops(matrix: &Matrix, np: usize, strategy: Strategy) -> u64 {
                 Matrix::Csr(a) => a.rows(),
                 Matrix::Csc(a) => a.cols(),
                 Matrix::Coo(a) => a.nnz(),
+                // the weighted boundary search runs over σ-windows
+                Matrix::PSell(a) => a.windows(),
             };
             2 * np as u64 * (dim.max(2) as f64).log2().ceil() as u64
         }
@@ -343,6 +374,7 @@ fn balanced_csr_task(csr: &Csr, lo: usize, hi: usize, g: usize) -> Result<GpuTas
         overlaps_prev: p.start_flag,
         merge: MergeClass::RowBased,
         rewrite_ops: p.local_rows() as u64,
+        padded: 0,
     })
 }
 
@@ -365,6 +397,7 @@ fn balanced_csc_task(csc: &Csc, lo: usize, hi: usize, g: usize) -> Result<GpuTas
         overlaps_prev: p.start_flag,
         merge: MergeClass::ColBased,
         rewrite_ops: p.local_cols() as u64,
+        padded: 0,
     })
 }
 
@@ -383,6 +416,7 @@ fn balanced_coo_task(coo: &Coo, lo: usize, hi: usize, g: usize) -> Result<GpuTas
             merge: MergeClass::RowBased,
             // COO rewrite touches every nnz (§4.1, §5.4)
             rewrite_ops: p.nnz() as u64,
+            padded: 0,
         })
     } else {
         Ok(GpuTask {
@@ -398,6 +432,7 @@ fn balanced_coo_task(coo: &Coo, lo: usize, hi: usize, g: usize) -> Result<GpuTas
             overlaps_prev: p.start_flag,
             merge: MergeClass::ColBased,
             rewrite_ops: p.nnz() as u64,
+            padded: 0,
         })
     }
 }
@@ -424,6 +459,7 @@ fn baseline_csr_task(csr: &Csr, np: usize, g: usize) -> GpuTask {
         overlaps_prev: false, // blocks never share rows
         merge: MergeClass::RowBased,
         rewrite_ops: (row_hi - row_lo) as u64,
+        padded: 0,
     }
 }
 
@@ -449,6 +485,7 @@ fn baseline_csc_task(csc: &Csc, np: usize, g: usize) -> GpuTask {
         overlaps_prev: false,
         merge: MergeClass::ColBased,
         rewrite_ops: (col_hi - col_lo) as u64,
+        padded: 0,
     }
 }
 
@@ -476,16 +513,59 @@ fn baseline_coo_task(coo: &Coo, np: usize, g: usize) -> Result<GpuTask> {
         overlaps_prev: false,
         merge: MergeClass::RowBased,
         rewrite_ops: (hi - lo) as u64,
+        padded: 0,
     })
+}
+
+/// pSELL task over whole σ-windows `[w_lo, w_hi)` — the only pSELL task
+/// shape. Windows are the partition atoms: the row permutation is
+/// window-local, so a whole-window range covers the contiguous global
+/// rows `[w_lo·σ, w_hi·σ)` and merges row-based with zero overlap, and
+/// because σ is a multiple of the slice height C no slice is ever split.
+fn psell_window_task(p: &PSell, w_lo: usize, w_hi: usize, g: usize) -> GpuTask {
+    let (r_lo, r_hi) = p.window_rows(w_lo, w_hi);
+    let (e_lo, e_hi) = p.window_elements(w_lo, w_hi);
+    // local row ids in *global* row space (perm maps permuted position →
+    // global row; rebase to the task's first row like the CSR builders)
+    let mut row_idx = Vec::with_capacity(e_hi - e_lo);
+    for q in r_lo..r_hi {
+        let cnt = p.row_nnz(q);
+        row_idx.extend(std::iter::repeat(p.perm[q] - r_lo as u32).take(cnt));
+    }
+    GpuTask {
+        gpu: g,
+        val: p.val[e_lo..e_hi].to_vec(),
+        col_idx: p.col_idx[e_lo..e_hi].to_vec(),
+        row_idx,
+        out_len: r_hi - r_lo,
+        out_offset: r_lo,
+        x_len: p.cols(),
+        overlaps_prev: false, // window atoms never share rows
+        merge: MergeClass::RowBased,
+        // slice pointers + per-row permutation entries are rebuilt per task
+        rewrite_ops: (r_hi - r_lo) as u64,
+        padded: p.window_padded(w_lo, w_hi),
+    }
+}
+
+/// Baseline pSELL task: equal σ-window *blocks* (the window-granular
+/// analogue of the CSR row-block Baseline).
+fn baseline_psell_task(p: &PSell, np: usize, g: usize) -> GpuTask {
+    let w = p.windows();
+    psell_window_task(p, g * w / np, (g + 1) * w / np, g)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::formats::{convert, gen};
+    use crate::formats::{convert, gen, SORT_WINDOW};
 
     fn skewed() -> Matrix {
         Matrix::Coo(gen::two_band(400, 400, 20_000, 8.0, 1))
+    }
+
+    fn psell_of(mat: &Matrix) -> PSell {
+        PSell::from_csr(&convert::to_csr(mat))
     }
 
     #[test]
@@ -608,6 +688,7 @@ mod tests {
             overlaps_prev: false,
             merge: MergeClass::RowBased,
             rewrite_ops: 0,
+            padded: 0,
         };
         assert_eq!(t.h2d_bytes(), 100 * 12 + 4000);
         assert_eq!(t.d2h_bytes(), 40);
@@ -675,6 +756,7 @@ mod tests {
         for mat in [
             Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
             Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
+            Matrix::PSell(psell_of(&Matrix::Coo(coo.clone()))),
             Matrix::Coo(coo.clone()),
         ] {
             let w = spgemm_element_weights(&mat, &b_row_nnz);
@@ -693,6 +775,70 @@ mod tests {
         for (k, &c) in csr.col_idx.iter().enumerate() {
             assert_eq!(w[k], b_row_nnz[c as usize] + 1);
         }
+    }
+
+    #[test]
+    fn psell_tasks_are_whole_windows_and_conserve_accounting() {
+        // 1024×1024 Poisson grid → 8 σ-windows; both strategies must cut
+        // only at window boundaries, keep the merge row-based with no
+        // overlap, tile the rows, and conserve nnz + padding exactly
+        let p = psell_of(&Matrix::Coo(gen::laplacian_2d(32)));
+        let (m, nnz, padded) = (p.rows(), p.nnz(), p.padded());
+        let mat = Matrix::PSell(p);
+        for np in [1usize, 3, 4, 8] {
+            for out in [balanced(&mat, np).unwrap(), baseline(&mat, np).unwrap()] {
+                assert_eq!(out.merge, MergeClass::RowBased);
+                let mut next_row = 0usize;
+                for t in &out.tasks {
+                    assert!(!t.overlaps_prev);
+                    assert_eq!(t.out_offset, next_row, "np={np}: row coverage gap");
+                    assert_eq!(t.out_offset % SORT_WINDOW, 0, "np={np}: cut inside a window");
+                    next_row += t.out_len;
+                }
+                assert_eq!(next_row, m, "np={np}: rows not tiled");
+                assert_eq!(out.tasks.iter().map(GpuTask::nnz).sum::<usize>(), nnz);
+                assert_eq!(out.tasks.iter().map(|t| t.padded).sum::<u64>(), padded);
+            }
+        }
+    }
+
+    #[test]
+    fn psell_balanced_equalizes_streamed_slots() {
+        // balanced pSELL balances nnz + padding (the streamed slots), at
+        // window granularity: with 32 windows and 4 GPUs the heaviest
+        // GPU's slot load stays within one window's weight of the mean
+        let p = psell_of(&Matrix::Coo(gen::laplacian_2d(64))); // 4096 rows
+        let max_window = p.window_weights().into_iter().max().unwrap();
+        let total: u64 = p.window_weights().iter().sum();
+        let out = balanced(&Matrix::PSell(p), 4).unwrap();
+        let slots: Vec<u64> = out.tasks.iter().map(|t| t.nnz() as u64 + t.padded).collect();
+        let mean = total as f64 / 4.0;
+        for s in slots {
+            assert!(
+                (s as f64 - mean).abs() <= max_window as f64 + 1.0,
+                "slot load {s} strays more than one window from mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn psell_range_snap_keeps_element_tiling() {
+        // arbitrary tiling element boundaries → window-snapped tasks must
+        // still tile the element stream with nothing lost or duplicated
+        let p = psell_of(&Matrix::Coo(gen::power_law(700, 700, 9_000, 1.1, 7)));
+        let nnz = p.nnz();
+        let mat = Matrix::PSell(p);
+        let cuts = [0, nnz / 5 + 1, nnz / 2, nnz - 3, nnz];
+        let mut total = 0usize;
+        let mut next_row = 0usize;
+        for g in 0..cuts.len() - 1 {
+            let t = build_task_range(&mat, cuts[g], cuts[g + 1], g).unwrap();
+            assert_eq!(t.out_offset, next_row, "cut {g}: row gap/overlap");
+            next_row += t.out_len;
+            total += t.nnz();
+        }
+        assert_eq!(total, nnz);
+        assert_eq!(next_row, mat.rows());
     }
 
     #[test]
@@ -776,6 +922,7 @@ mod tests {
         for mat in [
             Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
             Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
+            Matrix::PSell(psell_of(&Matrix::Coo(coo.clone()))),
             Matrix::Coo(coo),
         ] {
             for np in [1, 3, 8] {

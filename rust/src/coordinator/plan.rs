@@ -348,6 +348,7 @@ mod tests {
         for mat in [
             Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
             Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
+            convert::to_format(&Matrix::Coo(coo.clone()), FormatKind::PSell),
             Matrix::Coo(coo.clone()),
         ] {
             let plan = PartitionPlan::build(&mat, &cfg(4)).unwrap();
@@ -363,6 +364,25 @@ mod tests {
         let plan = PartitionPlan::build_spgemm(&empty, &cfg(4), &[3; 5]).unwrap();
         assert_eq!(plan.work_loads.iter().sum::<u64>(), 0);
         assert!(plan.tasks.iter().all(|t| t.nnz() == 0));
+    }
+
+    #[test]
+    fn psell_plan_is_row_based_and_window_cut() {
+        let mat = convert::to_format(
+            &Matrix::Coo(gen::laplacian_2d(32)), // 1024 rows = 8 windows
+            FormatKind::PSell,
+        );
+        let plan = PartitionPlan::build(&mat, &cfg(4)).unwrap();
+        assert_eq!(plan.format, FormatKind::PSell);
+        assert_eq!(plan.merge_class, MergeClass::RowBased);
+        assert_eq!(plan.loads().iter().sum::<u64>(), mat.nnz() as u64);
+        assert!(plan
+            .tasks
+            .iter()
+            .all(|t| t.out_offset % crate::formats::SORT_WINDOW == 0));
+        // the stream upload excludes padding — it is materialized on-device
+        assert_eq!(plan.stream_bytes(), mat.nnz() as u64 * 12);
+        assert!(plan.tasks.iter().any(|t| t.padded > 0) || mat.nnz() == 0);
     }
 
     #[test]

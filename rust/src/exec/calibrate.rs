@@ -162,20 +162,13 @@ pub struct CalibrationReport {
 /// Per-phase sample pools gathered while replaying the scenario grid.
 #[derive(Default)]
 struct Pools {
-    /// per-format kernel θ samples, indexed like [`FormatKind::ALL`]
-    compute: [Vec<LinSample>; 3],
+    /// per-format kernel θ samples, indexed by the registry ordinal
+    /// (`FormatKind::spec().ordinal`, i.e. [`FormatKind::ALL`] order)
+    compute: [Vec<LinSample>; 4],
     fixup: Vec<LinSample>,
     divisor: Vec<LinSample>,
     levels: Vec<LinSample>,
     sync: Vec<LinSample>,
-}
-
-fn fmt_slot(f: FormatKind) -> usize {
-    match f {
-        FormatKind::Csr => 0,
-        FormatKind::Csc => 1,
-        FormatKind::Coo => 2,
-    }
 }
 
 fn engine_for(platform: &Platform, np: usize, format: FormatKind) -> Result<Engine> {
@@ -199,20 +192,16 @@ fn spmv_dominant_bytes(plan: &PartitionPlan, p: &Platform) -> f64 {
     let mut best_kt = f64::NEG_INFINITY;
     let mut best_bytes = 0.0f64;
     for t in &plan.tasks {
-        let mut kt = model::spmv_kernel_time(
-            p,
-            t.nnz() as u64,
-            t.out_len as u64,
-            t.x_len as u64,
-            plan.format,
-        );
-        if plan.format == FormatKind::Coo {
-            kt += model::coo_to_csr_conversion_time(p, t.nnz() as u64);
+        let elems = t.nnz() as u64 + t.padded;
+        let mut kt =
+            model::spmv_kernel_time(p, elems, t.out_len as u64, t.x_len as u64, plan.format);
+        if let Some(conv) = plan.format.spec().pre_kernel_conversion {
+            kt += conv(p, t.nnz() as u64);
         }
         if kt > best_kt {
             best_kt = kt;
             best_bytes = model::spmv_partition_bytes(
-                t.nnz() as u64,
+                elems,
                 t.out_len as u64,
                 t.x_len as u64,
                 plan.format,
@@ -228,15 +217,11 @@ fn spmm_dominant_bytes(plan: &PartitionPlan, p: &Platform, k: usize) -> f64 {
     let mut best_kt = f64::NEG_INFINITY;
     let mut best_bytes = 0.0f64;
     for t in &plan.tasks {
-        let (nnz, rows, cols) = (t.nnz() as u64, t.out_len as u64, t.x_len as u64);
-        let kt = model::spmm_kernel_time(p, nnz, rows, cols, k as u64, plan.format);
+        let (elems, rows, cols) = (t.nnz() as u64 + t.padded, t.out_len as u64, t.x_len as u64);
+        let kt = model::spmm_kernel_time(p, elems, rows, cols, k as u64, plan.format);
         if kt > best_kt {
             best_kt = kt;
-            let stream = match plan.format {
-                FormatKind::Csr => nnz * 8 + rows * 8,
-                FormatKind::Csc => nnz * 8 + cols * 8,
-                FormatKind::Coo => nnz * 12,
-            };
+            let stream = (plan.format.spec().stream_bytes)(elems, rows, cols);
             best_bytes = (stream + (cols * 4 + rows * 4) * k as u64) as f64;
         }
     }
@@ -263,7 +248,7 @@ fn push_engine_samples(
     if b > 0.0 {
         // anchor C so the surrogate reproduces the modeled phase exactly
         // at the default θ (dominant-task linearization)
-        pools.compute[fmt_slot(plan.format)].push(LinSample {
+        pools.compute[plan.format.spec().ordinal].push(LinSample {
             c: metrics.t_compute - b * theta_def,
             b,
             w: metrics.measured_exec,
@@ -411,10 +396,12 @@ pub fn calibrate(opts: &CalibrationOptions) -> Result<CalibrationReport> {
     };
 
     let id = |p: f64| p;
+    // slots follow the registry ordinals ([`FormatKind::ALL`] order)
     for (slot, (phase, param, def_eff)) in [
         ("compute (csr)", "csr_efficiency", defaults.csr_efficiency),
         ("compute (csc)", "csc_efficiency", defaults.csc_efficiency),
         ("compute (coo)", "coo_efficiency", defaults.coo_efficiency),
+        ("compute (psell)", "psell_efficiency", defaults.psell_efficiency),
     ]
     .into_iter()
     .enumerate()
@@ -426,7 +413,8 @@ pub fn calibrate(opts: &CalibrationOptions) -> Result<CalibrationReport> {
         match slot {
             0 => fitted.csr_efficiency = eff,
             1 => fitted.csc_efficiency = eff,
-            _ => fitted.coo_efficiency = eff,
+            2 => fitted.coo_efficiency = eff,
+            _ => fitted.psell_efficiency = eff,
         }
     }
     {
@@ -622,6 +610,7 @@ mod tests {
             rep.fitted.csr_efficiency,
             rep.fitted.csc_efficiency,
             rep.fitted.coo_efficiency,
+            rep.fitted.psell_efficiency,
             rep.fitted.sptrsv_efficiency,
         ] {
             assert!(eff > 0.0 && eff <= 1.0, "efficiency {eff} out of (0, 1]");

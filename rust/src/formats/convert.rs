@@ -8,41 +8,88 @@ use crate::error::{Error, Result};
 
 use super::{Coo, Csc, Csr, Matrix, PCsr};
 
-/// Convert any matrix to CSR.
+/// Convert any matrix to CSR. Duplicate COO coordinates are kept (the
+/// low-level conversions never merge entries — canonicalization is
+/// [`to_format`]'s job).
 pub fn to_csr(a: &Matrix) -> Csr {
     match a {
         Matrix::Csr(x) => x.clone(),
         Matrix::Csc(x) => Csr::from_coo(&x.to_coo()),
         Matrix::Coo(x) => Csr::from_coo(x),
+        Matrix::PSell(x) => Csr::from_coo(&x.to_coo()),
     }
 }
 
-/// Convert any matrix to CSC.
+/// Convert any matrix to CSC (duplicates kept, see [`to_csr`]).
 pub fn to_csc(a: &Matrix) -> Csc {
     match a {
         Matrix::Csr(x) => Csc::from_coo(&x.to_coo()),
         Matrix::Csc(x) => x.clone(),
         Matrix::Coo(x) => Csc::from_coo(x),
+        Matrix::PSell(x) => Csc::from_coo(&x.to_coo()),
     }
+}
+
+/// Sum duplicate coordinates of a COO into a canonical row-sorted COO,
+/// or `None` if the input has no duplicates (so [`to_format`] is a
+/// bitwise passthrough for already-canonical inputs). Duplicates sum in
+/// their original stream order (stable sort), matching what
+/// [`Coo::to_dense`] accumulates.
+pub fn dedup_coo(a: &Coo) -> Option<Coo> {
+    let nnz = a.nnz();
+    let mut order: Vec<usize> = (0..nnz).collect();
+    order.sort_by_key(|&k| (a.row_idx[k], a.col_idx[k]));
+    let dup = order.windows(2).any(|w| {
+        a.row_idx[w[0]] == a.row_idx[w[1]] && a.col_idx[w[0]] == a.col_idx[w[1]]
+    });
+    if !dup {
+        return None;
+    }
+    let mut row_idx: Vec<u32> = Vec::with_capacity(nnz);
+    let mut col_idx: Vec<u32> = Vec::with_capacity(nnz);
+    let mut val: Vec<f32> = Vec::with_capacity(nnz);
+    for &k in &order {
+        let (r, c) = (a.row_idx[k], a.col_idx[k]);
+        if let (Some(&pr), Some(&pc)) = (row_idx.last(), col_idx.last()) {
+            if pr == r && pc == c {
+                *val.last_mut().expect("val tracks the index arrays") += a.val[k];
+                continue;
+            }
+        }
+        row_idx.push(r);
+        col_idx.push(c);
+        val.push(a.val[k]);
+    }
+    Some(Coo::new(a.rows(), a.cols(), row_idx, col_idx, val).expect("dedup preserves validity"))
 }
 
 /// Convert any matrix into the named storage format — the dispatch the
 /// CLI and the [`crate::autoplan`] tuner use to materialize a candidate
-/// (or chosen) format. A matrix already in `kind` is cloned as-is.
+/// (or chosen) format, via the registry's `convert_into` hook
+/// (DESIGN.md §17). A matrix already in `kind` is cloned as-is.
+///
+/// Duplicate-entry COO inputs are canonicalized first ([`dedup_coo`]:
+/// duplicates summed, entries row-sorted) — pSELL's slice construction
+/// assumes deduplicated rows, and every other target is mathematically
+/// unchanged by the summing. Duplicate-free inputs pass through
+/// untouched, so existing modeled costs and numerics are bit-identical.
 pub fn to_format(a: &Matrix, kind: super::FormatKind) -> Matrix {
-    match kind {
-        super::FormatKind::Csr => Matrix::Csr(to_csr(a)),
-        super::FormatKind::Csc => Matrix::Csc(to_csc(a)),
-        super::FormatKind::Coo => Matrix::Coo(to_coo(a)),
+    if let Matrix::Coo(x) = a {
+        if let Some(canonical) = dedup_coo(x) {
+            return (kind.spec().convert_into)(&Matrix::Coo(canonical));
+        }
     }
+    (kind.spec().convert_into)(a)
 }
 
-/// Convert any matrix to COO (row-sorted for CSR, col-sorted for CSC).
+/// Convert any matrix to COO (row-sorted for CSR and pSELL, col-sorted
+/// for CSC; duplicates kept).
 pub fn to_coo(a: &Matrix) -> Coo {
     match a {
         Matrix::Csr(x) => x.to_coo(),
         Matrix::Csc(x) => x.to_coo(),
         Matrix::Coo(x) => x.clone(),
+        Matrix::PSell(x) => x.to_coo(),
     }
 }
 
@@ -64,6 +111,9 @@ pub fn transpose(a: &Matrix) -> Matrix {
                 .expect("valid CSC arrays are the CSR arrays of the transpose"),
         ),
         Matrix::Coo(x) => Matrix::Coo(x.transpose()),
+        // pSELL has no cheap reinterpretation (the permutation is
+        // row-side); unpermute and swap, landing on the COO path.
+        Matrix::PSell(x) => Matrix::Coo(x.to_coo().transpose()),
     }
 }
 
@@ -207,6 +257,76 @@ mod tests {
             let parts = PCsr::partition(&csr, np).unwrap();
             let merged = merge_pcsr(&csr, &parts).unwrap();
             assert_eq!(merged.row_ptr, csr.row_ptr, "np={np}");
+        }
+    }
+
+    #[test]
+    fn to_format_reaches_every_registered_format() {
+        let a = paper_matrix();
+        let dense = to_coo(&a).to_dense();
+        for kind in crate::formats::FormatKind::ALL {
+            let b = to_format(&a, kind);
+            assert_eq!(b.kind(), kind);
+            assert_eq!(to_coo(&b).to_dense(), dense, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn to_format_canonicalizes_duplicate_coo() {
+        // (1,1) appears three times; dedup must sum in stream order
+        let coo = Coo::new(
+            3,
+            3,
+            vec![1, 0, 1, 1, 2],
+            vec![1, 0, 1, 1, 2],
+            vec![1.0, 5.0, 2.0, 4.0, 3.0],
+        )
+        .unwrap();
+        let dense = coo.to_dense();
+        for kind in crate::formats::FormatKind::ALL {
+            let b = to_format(&Matrix::Coo(coo.clone()), kind);
+            assert_eq!(b.nnz(), 3, "{kind:?} should hold the deduped entries");
+            assert_eq!(to_coo(&b).to_dense(), dense, "{kind:?}");
+        }
+        // the low-level conversions still keep duplicates (their contract)
+        assert_eq!(to_csr(&Matrix::Coo(coo.clone())).nnz(), 5);
+        // dedup summed left-to-right: 1 + 2 + 4
+        let deduped = dedup_coo(&coo).unwrap();
+        assert_eq!(deduped.nnz(), 3);
+        assert_eq!(deduped.to_dense()[1][1], 7.0);
+        assert_eq!(deduped.sort_order(), crate::formats::SortOrder::Row);
+    }
+
+    #[test]
+    fn duplicate_free_coo_passes_through_bitwise() {
+        let coo = Coo::paper_example();
+        assert!(dedup_coo(&coo).is_none());
+        let direct = to_csr(&Matrix::Coo(coo.clone()));
+        let via = to_format(&Matrix::Coo(coo), crate::formats::FormatKind::Csr);
+        match via {
+            Matrix::Csr(c) => {
+                assert_eq!(c.row_ptr, direct.row_ptr);
+                assert_eq!(c.col_idx, direct.col_idx);
+                assert_eq!(c.val, direct.val);
+            }
+            other => panic!("expected CSR, got {:?}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn psell_conversions_and_transpose_preserve_dense() {
+        let a = paper_matrix();
+        let dense = to_coo(&a).to_dense();
+        let p = to_format(&a, crate::formats::FormatKind::PSell);
+        assert_eq!(to_csr(&p).to_dense(), dense);
+        assert_eq!(to_csc(&p).to_dense(), dense);
+        assert_eq!(to_coo(&p).to_dense(), dense);
+        let t = transpose(&p);
+        let td = to_coo(&t).to_dense();
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(td[j][i], dense[i][j]);
+            }
         }
     }
 

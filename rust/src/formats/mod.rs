@@ -25,6 +25,8 @@ pub mod io;
 mod pcoo;
 mod pcsc;
 mod pcsr;
+mod psell;
+pub mod registry;
 pub mod stats;
 
 pub use coo::{Coo, SortOrder};
@@ -33,6 +35,8 @@ pub use csr::Csr;
 pub use pcoo::PCoo;
 pub use pcsc::{merge_col_partials, PCsc};
 pub use pcsr::{merge_row_partials, PCsr};
+pub use psell::{PSell, SLICE_HEIGHT, SORT_WINDOW};
+pub use registry::{FormatSpec, REGISTRY};
 
 /// Which base format a matrix is stored in (selects kernel + merge paths).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -43,33 +47,33 @@ pub enum FormatKind {
     Csc,
     /// Coordinate list
     Coo,
+    /// Partitioned SELL-C-σ (sorted-sliced ELLPACK)
+    PSell,
 }
 
 impl FormatKind {
-    /// All three mainstream formats (paper §2.1).
-    pub const ALL: [FormatKind; 3] = [FormatKind::Csr, FormatKind::Csc, FormatKind::Coo];
+    /// Every registered format, in registry (ordinal) order: the three
+    /// mainstream formats of paper §2.1 plus pSELL (DESIGN.md §17).
+    pub const ALL: [FormatKind; 4] =
+        [FormatKind::Csr, FormatKind::Csc, FormatKind::Coo, FormatKind::PSell];
 
-    /// Short lowercase name for reports and CLI.
+    /// Short lowercase name for reports and CLI (registry-backed).
     pub fn name(self) -> &'static str {
-        match self {
-            FormatKind::Csr => "csr",
-            FormatKind::Csc => "csc",
-            FormatKind::Coo => "coo",
-        }
+        self.spec().name
     }
 
-    /// Parse a CLI name.
+    /// Parse a CLI name or one of the registry's aliases.
     pub fn parse(s: &str) -> Option<FormatKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "csr" => Some(FormatKind::Csr),
-            "csc" => Some(FormatKind::Csc),
-            "coo" => Some(FormatKind::Coo),
-            _ => None,
-        }
+        let s = s.to_ascii_lowercase();
+        registry::REGISTRY
+            .iter()
+            .find(|spec| spec.name == s || spec.aliases.contains(&s.as_str()))
+            .map(|spec| spec.kind)
     }
 }
 
-/// A matrix in any of the three base formats (the engine's input type).
+/// A matrix in any of the registered base formats (the engine's input
+/// type).
 #[derive(Debug, Clone)]
 pub enum Matrix {
     /// CSR storage
@@ -78,6 +82,8 @@ pub enum Matrix {
     Csc(Csc),
     /// COO storage
     Coo(Coo),
+    /// pSELL (SELL-C-σ) storage
+    PSell(PSell),
 }
 
 impl Matrix {
@@ -87,6 +93,7 @@ impl Matrix {
             Matrix::Csr(a) => a.rows(),
             Matrix::Csc(a) => a.rows(),
             Matrix::Coo(a) => a.rows(),
+            Matrix::PSell(a) => a.rows(),
         }
     }
 
@@ -96,6 +103,7 @@ impl Matrix {
             Matrix::Csr(a) => a.cols(),
             Matrix::Csc(a) => a.cols(),
             Matrix::Coo(a) => a.cols(),
+            Matrix::PSell(a) => a.cols(),
         }
     }
 
@@ -105,6 +113,7 @@ impl Matrix {
             Matrix::Csr(a) => a.nnz(),
             Matrix::Csc(a) => a.nnz(),
             Matrix::Coo(a) => a.nnz(),
+            Matrix::PSell(a) => a.nnz(),
         }
     }
 
@@ -114,6 +123,7 @@ impl Matrix {
             Matrix::Csr(_) => FormatKind::Csr,
             Matrix::Csc(_) => FormatKind::Csc,
             Matrix::Coo(_) => FormatKind::Coo,
+            Matrix::PSell(_) => FormatKind::PSell,
         }
     }
 
@@ -126,6 +136,7 @@ impl Matrix {
             Matrix::Csr(a) => a.diagonal(),
             Matrix::Csc(a) => a.diagonal(),
             Matrix::Coo(a) => a.diagonal(),
+            Matrix::PSell(a) => a.diagonal(),
         }
     }
 
@@ -137,6 +148,7 @@ impl Matrix {
             Matrix::Csr(a) => a.storage_bytes(),
             Matrix::Csc(a) => a.storage_bytes(),
             Matrix::Coo(a) => a.storage_bytes(),
+            Matrix::PSell(a) => a.storage_bytes(),
         }
     }
 }
@@ -154,6 +166,11 @@ impl From<Csc> for Matrix {
 impl From<Coo> for Matrix {
     fn from(a: Coo) -> Self {
         Matrix::Coo(a)
+    }
+}
+impl From<PSell> for Matrix {
+    fn from(a: PSell) -> Self {
+        Matrix::PSell(a)
     }
 }
 
@@ -209,6 +226,7 @@ mod tests {
         assert_eq!(Matrix::Coo(coo.clone()).diagonal(), want);
         assert_eq!(Matrix::Csr(Csr::from_coo(&coo)).diagonal(), want);
         assert_eq!(Matrix::Csc(Csc::from_coo(&coo)).diagonal(), want);
+        assert_eq!(Matrix::PSell(PSell::from_csr(&Csr::from_coo(&coo))).diagonal(), want);
     }
 
     #[test]
@@ -228,6 +246,9 @@ mod tests {
         for k in FormatKind::ALL {
             assert_eq!(FormatKind::parse(k.name()), Some(k));
         }
+        // registry aliases parse too; unknown names don't
+        assert_eq!(FormatKind::parse("sell-c-sigma"), Some(FormatKind::PSell));
+        assert_eq!(FormatKind::parse("PSELL"), Some(FormatKind::PSell));
         assert_eq!(FormatKind::parse("bogus"), None);
     }
 }

@@ -1,0 +1,428 @@
+//! Partitioned SELL-C-σ storage (pSELL, DESIGN.md §17).
+//!
+//! SELL-C-σ (Kreutzer et al., PAPERS.md) sorts rows by length inside
+//! σ-row windows, groups the sorted rows into C-row *slices*, and pads
+//! every row of a slice to the slice's widest row so a SIMT warp can walk
+//! the slice without per-row divergence. On banded / stencil structure the
+//! slices are nearly full (fill ratio → 1) and the kernel streams at a
+//! higher fraction of HBM bandwidth than the CSR row loop; on power-law
+//! structure the padding blows the stream up and CSR wins — which is what
+//! makes the autoplan routing decision non-trivial.
+//!
+//! The MSREP twist (the "p" in pSELL): like [`super::PCsr`], a partial
+//! pSELL view is a contiguous range of the element stream. Because rows
+//! are only permuted *within* a window, any range of whole windows covers
+//! a contiguous range of **global** rows — so pSELL partitions merge on
+//! the ordinary row-based path with zero overlap fix-ups, and the
+//! fine-grained boundary search runs over per-window weights (σ rows per
+//! step instead of one). Slices never straddle a window (σ is a multiple
+//! of C), so window-aligned cuts are always slice-aligned too.
+//!
+//! Storage is a permuted CSR: only real non-zeros are materialized, and
+//! padding is carried as *accounting* (per-slice widths + a padded-slot
+//! total) for the cost model. The executable kernels stream the real
+//! elements — numerics are independent of the padding, exactly like the
+//! modeled-vs-measured split everywhere else in the engine.
+
+use crate::error::{Error, Result};
+
+use super::{Coo, Csr};
+
+/// Canonical slice height C (rows per padded slice) — warp-sized, the
+/// standard choice in the SELL-C-σ literature for SIMT-width 32 devices.
+pub const SLICE_HEIGHT: usize = 32;
+
+/// Canonical sort-window σ (rows per local sort scope). A multiple of
+/// [`SLICE_HEIGHT`] so slices never straddle a window; 4 slices per
+/// window keeps the permutation local enough that window-aligned
+/// partition cuts stay row-contiguous globally.
+pub const SORT_WINDOW: usize = 128;
+
+/// Sorted-sliced ELLPACK matrix (SELL-C-σ) backed by a permuted CSR.
+///
+/// `perm[p]` is the global row stored at permuted position `p`; within
+/// each σ-row window the permuted order is by descending row length
+/// (ties keep ascending global order, so construction is deterministic).
+/// `row_ptr`/`col_idx`/`val` are ordinary CSR arrays over the *permuted*
+/// rows and hold only real non-zeros. `slice_width[s]` is the padded
+/// width (max row length) of slice `s`; the difference between
+/// `Σ slice_rows·width` and `nnz` is the padding the cost model charges.
+#[derive(Debug, Clone)]
+pub struct PSell {
+    m: usize,
+    n: usize,
+    c: usize,
+    sigma: usize,
+    /// Global row id stored at each permuted position.
+    pub perm: Vec<u32>,
+    /// CSR-style pointers over permuted rows (real non-zeros only).
+    pub row_ptr: Vec<usize>,
+    /// Column indices in permuted-row-major order (within-row order as in
+    /// the source CSR).
+    pub col_idx: Vec<u32>,
+    /// Values aligned with `col_idx`.
+    pub val: Vec<f32>,
+    /// Per-slice padded width (the slice's max row length).
+    pub slice_width: Vec<usize>,
+    padded: u64,
+}
+
+impl PSell {
+    /// Build with the canonical `C = 32, σ = 128` parameters.
+    pub fn from_csr(csr: &Csr) -> PSell {
+        PSell::with_params(csr, SLICE_HEIGHT, SORT_WINDOW).expect("canonical parameters are valid")
+    }
+
+    /// Build with explicit parameters. `c > 0`, `sigma > 0`, and `sigma`
+    /// must be a multiple of `c` (slices may not straddle sort windows).
+    pub fn with_params(csr: &Csr, c: usize, sigma: usize) -> Result<PSell> {
+        if c == 0 || sigma == 0 || sigma % c != 0 {
+            return Err(Error::InvalidMatrix(format!(
+                "pSELL needs c > 0 and sigma a positive multiple of c, got c={c} sigma={sigma}"
+            )));
+        }
+        let m = csr.rows();
+        let mut perm: Vec<u32> = Vec::with_capacity(m);
+        let mut w0 = 0usize;
+        while w0 < m {
+            let w1 = (w0 + sigma).min(m);
+            let mut rows: Vec<u32> = (w0 as u32..w1 as u32).collect();
+            // stable: ties stay in ascending global-row order
+            rows.sort_by_key(|&r| std::cmp::Reverse(csr.row_nnz(r as usize)));
+            perm.extend_from_slice(&rows);
+            w0 = w1;
+        }
+        let nnz = csr.nnz();
+        let mut row_ptr = Vec::with_capacity(m + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut val = Vec::with_capacity(nnz);
+        for &g in &perm {
+            let lo = csr.row_ptr[g as usize];
+            let hi = csr.row_ptr[g as usize + 1];
+            col_idx.extend_from_slice(&csr.col_idx[lo..hi]);
+            val.extend_from_slice(&csr.val[lo..hi]);
+            row_ptr.push(col_idx.len());
+        }
+        let slices = m.div_ceil(c.max(1));
+        let mut slice_width = Vec::with_capacity(slices);
+        let mut slots: u64 = 0;
+        for s in 0..slices {
+            let lo = s * c;
+            let hi = ((s + 1) * c).min(m);
+            let width = (lo..hi).map(|p| row_ptr[p + 1] - row_ptr[p]).max().unwrap_or(0);
+            slice_width.push(width);
+            slots += ((hi - lo) * width) as u64;
+        }
+        Ok(PSell {
+            m,
+            n: csr.cols(),
+            c,
+            sigma,
+            perm,
+            row_ptr,
+            col_idx,
+            val,
+            slice_width,
+            padded: slots - nnz as u64,
+        })
+    }
+
+    /// Rows.
+    pub fn rows(&self) -> usize {
+        self.m
+    }
+
+    /// Columns.
+    pub fn cols(&self) -> usize {
+        self.n
+    }
+
+    /// Real (stored) non-zeros — padding is accounting, not storage.
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Slice height C.
+    pub fn c(&self) -> usize {
+        self.c
+    }
+
+    /// Sort window σ.
+    pub fn sigma(&self) -> usize {
+        self.sigma
+    }
+
+    /// Number of σ-row sort windows (the partition atoms).
+    pub fn windows(&self) -> usize {
+        self.m.div_ceil(self.sigma)
+    }
+
+    /// Total padded slots beyond the real non-zeros
+    /// (`Σ slice_rows·slice_width − nnz`).
+    pub fn padded(&self) -> u64 {
+        self.padded
+    }
+
+    /// Padded slots including the real non-zeros — the element count the
+    /// memory-bound kernel model streams.
+    pub fn padded_slots(&self) -> u64 {
+        self.nnz() as u64 + self.padded
+    }
+
+    /// Fraction of padded slots holding real data, in `(0, 1]`
+    /// (1.0 for an empty matrix).
+    pub fn fill_ratio(&self) -> f64 {
+        let slots = self.padded_slots();
+        if slots == 0 {
+            1.0
+        } else {
+            self.nnz() as f64 / slots as f64
+        }
+    }
+
+    /// Permuted-row range `[lo, hi)` covered by windows `[w_lo, w_hi)`.
+    /// Whole windows cover the *same set* of global rows, contiguously.
+    pub fn window_rows(&self, w_lo: usize, w_hi: usize) -> (usize, usize) {
+        ((w_lo * self.sigma).min(self.m), (w_hi * self.sigma).min(self.m))
+    }
+
+    /// Element (nnz) range covered by windows `[w_lo, w_hi)`.
+    pub fn window_elements(&self, w_lo: usize, w_hi: usize) -> (usize, usize) {
+        let (r_lo, r_hi) = self.window_rows(w_lo, w_hi);
+        (self.row_ptr[r_lo], self.row_ptr[r_hi])
+    }
+
+    /// Padded slots (beyond real nnz) inside windows `[w_lo, w_hi)` —
+    /// the per-range share of [`Self::padded`], exact because slices
+    /// never straddle windows.
+    pub fn window_padded(&self, w_lo: usize, w_hi: usize) -> u64 {
+        let (r_lo, r_hi) = self.window_rows(w_lo, w_hi);
+        let (s_lo, s_hi) = (r_lo / self.c, r_hi.div_ceil(self.c));
+        let mut slots: u64 = 0;
+        for s in s_lo..s_hi {
+            let lo = (s * self.c).max(r_lo);
+            let hi = ((s + 1) * self.c).min(r_hi);
+            slots += ((hi - lo) * self.slice_width[s]) as u64;
+        }
+        slots - (self.row_ptr[r_hi] - self.row_ptr[r_lo]) as u64
+    }
+
+    /// Snap a half-open element range `[e_lo, e_hi)` to a window range
+    /// `[w_lo, w_hi)`: interior boundaries round *up* to the next window
+    /// start (a run of equal starts — empty windows — goes to the later
+    /// range), while boundaries at or past the last element map to the
+    /// window count so trailing empty windows stay covered. The snap is
+    /// monotone, so element ranges that tile `[0, nnz)` map to window
+    /// ranges that tile `[0, windows)` — nothing is lost or duplicated.
+    pub fn window_span(&self, e_lo: usize, e_hi: usize) -> (usize, usize) {
+        let w = self.windows();
+        let starts: Vec<usize> =
+            (0..=w).map(|k| self.row_ptr[(k * self.sigma).min(self.m)]).collect();
+        let snap = |e: usize| {
+            if e >= self.nnz() {
+                w
+            } else {
+                starts.partition_point(|&s| s < e).min(w)
+            }
+        };
+        let w_lo = snap(e_lo);
+        (w_lo, snap(e_hi).max(w_lo))
+    }
+
+    /// Per-window *padded-slot* weights (real nnz + padding) — what the
+    /// nnz-balanced boundary scan balances, because padded slots are what
+    /// the modeled kernel actually streams.
+    pub fn window_weights(&self) -> Vec<u64> {
+        (0..self.windows())
+            .map(|w| {
+                let (lo, hi) = self.window_elements(w, w + 1);
+                (hi - lo) as u64 + self.window_padded(w, w + 1)
+            })
+            .collect()
+    }
+
+    /// Stored-row length at permuted position `p`.
+    pub fn row_nnz(&self, p: usize) -> usize {
+        self.row_ptr[p + 1] - self.row_ptr[p]
+    }
+
+    /// Diagonal entries (length `min(m, n)`, duplicates accumulate) —
+    /// same contract as the other formats' extractions.
+    pub fn diagonal(&self) -> Vec<f32> {
+        let len = self.m.min(self.n);
+        let mut d = vec![0.0f32; len];
+        for p in 0..self.m {
+            let g = self.perm[p] as usize;
+            if g >= len {
+                continue;
+            }
+            for k in self.row_ptr[p]..self.row_ptr[p + 1] {
+                if self.col_idx[k] as usize == g {
+                    d[g] += self.val[k];
+                }
+            }
+        }
+        d
+    }
+
+    /// Payload bytes: val + col index per stored element, permuted-row
+    /// pointers, the permutation itself, and the per-slice widths.
+    pub fn storage_bytes(&self) -> u64 {
+        (self.nnz() * 8 + (self.m + 1) * 8 + self.m * 4 + self.slice_width.len() * 8) as u64
+    }
+
+    /// Undo the window permutation back to a row-sorted COO (within-row
+    /// order preserved from the source CSR).
+    pub fn to_coo(&self) -> Coo {
+        let mut inv = vec![0u32; self.m];
+        for (p, &g) in self.perm.iter().enumerate() {
+            inv[g as usize] = p as u32;
+        }
+        let nnz = self.nnz();
+        let mut row_idx = Vec::with_capacity(nnz);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut val = Vec::with_capacity(nnz);
+        for g in 0..self.m {
+            let p = inv[g] as usize;
+            for k in self.row_ptr[p]..self.row_ptr[p + 1] {
+                row_idx.push(g as u32);
+                col_idx.push(self.col_idx[k]);
+                val.push(self.val[k]);
+            }
+        }
+        Coo::new(self.m, self.n, row_idx, col_idx, val).expect("pSELL unpermutes to a valid COO")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::gen;
+
+    fn paper_psell() -> PSell {
+        PSell::with_params(&Csr::from_coo(&Coo::paper_example()), 2, 4).unwrap()
+    }
+
+    #[test]
+    fn construction_conserves_elements_and_shape() {
+        let coo = Coo::paper_example();
+        let csr = Csr::from_coo(&coo);
+        let p = PSell::from_csr(&csr);
+        assert_eq!((p.rows(), p.cols(), p.nnz()), (6, 6, 19));
+        // m < sigma: one window, one slice at canonical params
+        assert_eq!(p.windows(), 1);
+        assert_eq!(p.slice_width.len(), 1);
+        // padded slots = rows * widest row
+        assert_eq!(p.padded_slots(), 6 * p.slice_width[0] as u64);
+        assert_eq!(p.to_coo().to_dense(), coo.to_dense());
+    }
+
+    #[test]
+    fn rows_sorted_descending_within_windows_only() {
+        let a = gen::power_law(500, 500, 4000, 1.6, 11);
+        let p = PSell::from_csr(&Csr::from_coo(&a));
+        for w in 0..p.windows() {
+            let (lo, hi) = p.window_rows(w, w + 1);
+            // descending lengths inside the window
+            for q in lo + 1..hi {
+                assert!(p.row_nnz(q - 1) >= p.row_nnz(q), "window {w} pos {q}");
+            }
+            // permutation stays inside the window's global row range
+            for q in lo..hi {
+                let g = p.perm[q] as usize;
+                assert!((lo..hi).contains(&g), "row {g} escaped window [{lo},{hi})");
+            }
+        }
+    }
+
+    #[test]
+    fn permutation_is_deterministic_and_ties_keep_row_order() {
+        let a = gen::banded(200, 200, 5, 3);
+        let csr = Csr::from_coo(&a);
+        let p1 = PSell::from_csr(&csr);
+        let p2 = PSell::from_csr(&csr);
+        assert_eq!(p1.perm, p2.perm);
+        assert_eq!(p1.val, p2.val);
+        // stable sort: within a window, equal-length runs stay in
+        // ascending global-row order
+        for w in 0..p1.windows() {
+            let (lo, hi) = p1.window_rows(w, w + 1);
+            for q in lo + 1..hi {
+                if p1.row_nnz(q - 1) == p1.row_nnz(q) {
+                    assert!(p1.perm[q - 1] < p1.perm[q], "tie order broke at {q}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn banded_fills_well_power_law_pads_heavily() {
+        let banded = PSell::from_csr(&Csr::from_coo(&gen::banded(2048, 2048, 9, 5)));
+        assert!(banded.fill_ratio() > 0.9, "banded fill {}", banded.fill_ratio());
+        let skew = PSell::from_csr(&Csr::from_coo(&gen::power_law(2048, 2048, 20_000, 1.2, 5)));
+        assert!(skew.fill_ratio() < 0.6, "power-law fill {}", skew.fill_ratio());
+        assert!(banded.fill_ratio() > skew.fill_ratio());
+    }
+
+    #[test]
+    fn window_accounting_sums_to_totals() {
+        let a = gen::power_law(700, 700, 6000, 1.8, 21);
+        let p = PSell::from_csr(&Csr::from_coo(&a));
+        let weights = p.window_weights();
+        assert_eq!(weights.len(), p.windows());
+        assert_eq!(weights.iter().sum::<u64>(), p.padded_slots());
+        let mut nnz_sum = 0usize;
+        let mut pad_sum = 0u64;
+        for w in 0..p.windows() {
+            let (lo, hi) = p.window_elements(w, w + 1);
+            nnz_sum += hi - lo;
+            pad_sum += p.window_padded(w, w + 1);
+        }
+        assert_eq!(nnz_sum, p.nnz());
+        assert_eq!(pad_sum, p.padded());
+        // multi-window ranges agree with single-window sums
+        assert_eq!(p.window_padded(0, p.windows()), p.padded());
+        assert_eq!(p.window_elements(0, p.windows()), (0, p.nnz()));
+    }
+
+    #[test]
+    fn small_params_pad_the_paper_example_exactly() {
+        // c=2, sigma=4: rows 0..4 sorted by length desc, rows 4..6 likewise
+        let p = paper_psell();
+        assert_eq!(p.sigma(), 4);
+        assert_eq!(p.slice_width.len(), 3);
+        let slots: u64 = p
+            .slice_width
+            .iter()
+            .enumerate()
+            .map(|(s, &w)| (((s + 1) * 2).min(6) - s * 2) as u64 * w as u64)
+            .sum();
+        assert_eq!(p.padded_slots(), slots);
+        assert_eq!(p.padded(), slots - 19);
+        assert_eq!(p.to_coo().to_dense(), Coo::paper_example().to_dense());
+    }
+
+    #[test]
+    fn diagonal_matches_coo_diagonal() {
+        let a = gen::laplacian_2d(12);
+        let p = PSell::from_csr(&Csr::from_coo(&a));
+        assert_eq!(p.diagonal(), a.diagonal());
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        let csr = Csr::from_coo(&Coo::paper_example());
+        assert!(PSell::with_params(&csr, 0, 4).is_err());
+        assert!(PSell::with_params(&csr, 4, 0).is_err());
+        assert!(PSell::with_params(&csr, 3, 4).is_err()); // sigma not multiple of c
+        assert!(PSell::with_params(&csr, 4, 8).is_ok());
+    }
+
+    #[test]
+    fn storage_bytes_counts_payload_arrays() {
+        let p = paper_psell();
+        let want = (19 * 8 + 7 * 8 + 6 * 4 + 3 * 8) as u64;
+        assert_eq!(p.storage_bytes(), want);
+    }
+}

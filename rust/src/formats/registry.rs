@@ -1,0 +1,258 @@
+//! The format registry (DESIGN.md §17).
+//!
+//! One [`FormatSpec`] descriptor per first-class format centralizes every
+//! piece of per-format behavior that used to be `match`-dispatched across
+//! the engine, the sim cost model, autoplan, serve, the solvers and the
+//! CLI: names and labels, kernel-efficiency access, the memory-bound
+//! stream-bytes model, the optional pre-kernel conversion charge, and
+//! conversion into the format. Call sites ask `kind.spec()` and read the
+//! field they need — adding a format means adding one descriptor here
+//! (plus its storage type) and *nothing* elsewhere.
+//!
+//! This module deliberately contains the **only** `match` on
+//! [`FormatKind`] in the tree; a CI grep gate pins that invariant, so a
+//! new format can't silently fall into a wildcard arm somewhere.
+//!
+//! Bitwise contract: for the three legacy formats, every function pointer
+//! below reproduces the formula previously inlined at each call site
+//! exactly — same integer arithmetic, same operation order — so modeled
+//! costs are bit-identical before/after the registry migration
+//! (`tests/determinism.rs` locks this).
+
+use crate::sim::model;
+use crate::sim::{Platform, SimConstants};
+
+use super::convert;
+use super::psell::{PSell, SLICE_HEIGHT};
+use super::{FormatKind, Matrix};
+
+/// Per-format descriptor: everything the rest of the stack needs to know
+/// about a format, in one row of the registry table.
+pub struct FormatSpec {
+    /// The format this descriptor describes.
+    pub kind: FormatKind,
+    /// Dense index of this format — its position in [`REGISTRY`] and in
+    /// [`FormatKind::ALL`]. Used wherever per-format arrays are indexed
+    /// (calibration sample pools, autoplan tie-breaking).
+    pub ordinal: usize,
+    /// Short lowercase CLI/report name (`csr`, `psell`, …).
+    pub name: &'static str,
+    /// Extra accepted spellings for [`FormatKind::parse`].
+    pub aliases: &'static [&'static str],
+    /// Display label of the *partial* (partitioned) form, for figures
+    /// and prose (`pCSR`, `pSELL`, …).
+    pub label: &'static str,
+    /// Label of the merge path the format's partitions take by default
+    /// (`row-based` / `col-based`); COO is data-dependent and reports its
+    /// sorted-axis default.
+    pub merge_label: &'static str,
+    /// Uncalibrated HBM-efficiency default for the format's SpMV/SpMM
+    /// kernel — the value `SimConstants::default()` starts from.
+    pub default_efficiency: f64,
+    /// Live kernel efficiency: reads the format's field out of the
+    /// platform's calibratable [`SimConstants`].
+    pub efficiency: fn(&SimConstants) -> f64,
+    /// HBM bytes of the format's element stream for `elems` streamed
+    /// elements over a partition with `rows` × `cols` local shape.
+    /// `elems` is the *padded* element count — real nnz for the dense-
+    /// stream formats, nnz + padding slots for pSELL — so padding
+    /// overhead is priced where it occurs: in the kernel stream.
+    pub stream_bytes: fn(elems: u64, rows: u64, cols: u64) -> u64,
+    /// Pre-kernel device conversion charged once per partition, if the
+    /// format needs one before the compute kernel can run (paper §5.1:
+    /// COO runs a COO→CSR counting pass). `None` means no charge — the
+    /// cost is skipped entirely, not added as zero.
+    pub pre_kernel_conversion: Option<fn(&Platform, u64) -> f64>,
+    /// Convert any matrix into this format (duplicate-entry COO inputs
+    /// are canonicalized by [`convert::to_format`] before this runs).
+    pub convert_into: fn(&Matrix) -> Matrix,
+}
+
+fn eff_csr(c: &SimConstants) -> f64 {
+    c.csr_efficiency
+}
+fn eff_csc(c: &SimConstants) -> f64 {
+    c.csc_efficiency
+}
+fn eff_coo(c: &SimConstants) -> f64 {
+    c.coo_efficiency
+}
+fn eff_psell(c: &SimConstants) -> f64 {
+    c.psell_efficiency
+}
+
+// Stream-bytes models. CSR/CSC: val + 4-byte index per element plus the
+// pointer array amortized over the compressed axis. COO: explicit row AND
+// col index per element. pSELL: val + col index per *padded slot* plus a
+// 16-byte descriptor (offset + width) per C-row slice.
+fn stream_csr(elems: u64, rows: u64, _cols: u64) -> u64 {
+    elems * 8 + rows * 8
+}
+fn stream_csc(elems: u64, _rows: u64, cols: u64) -> u64 {
+    elems * 8 + cols * 8
+}
+fn stream_coo(elems: u64, _rows: u64, _cols: u64) -> u64 {
+    elems * 12
+}
+fn stream_psell(elems: u64, rows: u64, _cols: u64) -> u64 {
+    elems * 8 + rows.div_ceil(SLICE_HEIGHT as u64) * 16
+}
+
+fn into_csr(a: &Matrix) -> Matrix {
+    Matrix::Csr(convert::to_csr(a))
+}
+fn into_csc(a: &Matrix) -> Matrix {
+    Matrix::Csc(convert::to_csc(a))
+}
+fn into_coo(a: &Matrix) -> Matrix {
+    Matrix::Coo(convert::to_coo(a))
+}
+fn into_psell(a: &Matrix) -> Matrix {
+    if let Matrix::PSell(p) = a {
+        return Matrix::PSell(p.clone());
+    }
+    Matrix::PSell(PSell::from_csr(&convert::to_csr(a)))
+}
+
+/// The registry table, in [`FormatKind::ALL`] order. Every descriptor's
+/// `ordinal` equals its index here (pinned by a test).
+pub static REGISTRY: [FormatSpec; 4] = [
+    FormatSpec {
+        kind: FormatKind::Csr,
+        ordinal: 0,
+        name: "csr",
+        aliases: &[],
+        label: "pCSR",
+        merge_label: "row-based",
+        default_efficiency: 0.65,
+        efficiency: eff_csr,
+        stream_bytes: stream_csr,
+        pre_kernel_conversion: None,
+        convert_into: into_csr,
+    },
+    FormatSpec {
+        kind: FormatKind::Csc,
+        ordinal: 1,
+        name: "csc",
+        aliases: &[],
+        label: "pCSC",
+        merge_label: "col-based",
+        default_efficiency: 0.55,
+        efficiency: eff_csc,
+        stream_bytes: stream_csc,
+        pre_kernel_conversion: None,
+        convert_into: into_csc,
+    },
+    FormatSpec {
+        kind: FormatKind::Coo,
+        ordinal: 2,
+        name: "coo",
+        aliases: &[],
+        label: "pCOO",
+        merge_label: "col-based",
+        default_efficiency: 0.50,
+        efficiency: eff_coo,
+        stream_bytes: stream_coo,
+        pre_kernel_conversion: Some(model::coo_to_csr_conversion_time),
+        convert_into: into_coo,
+    },
+    FormatSpec {
+        kind: FormatKind::PSell,
+        ordinal: 3,
+        name: "psell",
+        aliases: &["sell", "sell-c-sigma"],
+        label: "pSELL",
+        merge_label: "row-based",
+        default_efficiency: 0.70,
+        efficiency: eff_psell,
+        stream_bytes: stream_psell,
+        pre_kernel_conversion: None,
+        convert_into: into_psell,
+    },
+];
+
+impl FormatKind {
+    /// This format's registry descriptor — the single dispatch point for
+    /// per-format behavior (and the only `match` on `FormatKind`).
+    pub fn spec(self) -> &'static FormatSpec {
+        match self {
+            FormatKind::Csr => &REGISTRY[0],
+            FormatKind::Csc => &REGISTRY[1],
+            FormatKind::Coo => &REGISTRY[2],
+            FormatKind::PSell => &REGISTRY[3],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Coo, Csr};
+
+    #[test]
+    fn ordinals_match_table_and_all_order() {
+        for (i, spec) in REGISTRY.iter().enumerate() {
+            assert_eq!(spec.ordinal, i, "{}", spec.name);
+            assert_eq!(spec.kind, FormatKind::ALL[i]);
+            assert!(std::ptr::eq(spec.kind.spec(), spec));
+        }
+    }
+
+    #[test]
+    fn legacy_stream_formulas_are_bitwise_preserved() {
+        for (elems, rows, cols) in [(0u64, 0u64, 0u64), (19, 6, 6), (1 << 20, 1 << 10, 1 << 9)] {
+            assert_eq!((FormatKind::Csr.spec().stream_bytes)(elems, rows, cols), elems * 8 + rows * 8);
+            assert_eq!((FormatKind::Csc.spec().stream_bytes)(elems, rows, cols), elems * 8 + cols * 8);
+            assert_eq!((FormatKind::Coo.spec().stream_bytes)(elems, rows, cols), elems * 12);
+        }
+        // pSELL: per-slot stream + 16 B per 32-row slice
+        assert_eq!((FormatKind::PSell.spec().stream_bytes)(100, 64, 64), 100 * 8 + 2 * 16);
+    }
+
+    #[test]
+    fn efficiency_accessors_read_the_live_constants() {
+        let mut c = SimConstants::default();
+        for spec in &REGISTRY {
+            assert_eq!((spec.efficiency)(&c), spec.default_efficiency, "{}", spec.name);
+        }
+        c.csr_efficiency = 0.11;
+        c.psell_efficiency = 0.22;
+        assert_eq!((FormatKind::Csr.spec().efficiency)(&c), 0.11);
+        assert_eq!((FormatKind::PSell.spec().efficiency)(&c), 0.22);
+    }
+
+    #[test]
+    fn only_coo_pays_a_pre_kernel_conversion() {
+        for spec in &REGISTRY {
+            assert_eq!(
+                spec.pre_kernel_conversion.is_some(),
+                spec.kind == FormatKind::Coo,
+                "{}",
+                spec.name
+            );
+        }
+        let p = Platform::dgx1();
+        let conv = FormatKind::Coo.spec().pre_kernel_conversion.unwrap();
+        assert_eq!(conv(&p, 1 << 20), model::coo_to_csr_conversion_time(&p, 1 << 20));
+    }
+
+    #[test]
+    fn convert_into_lands_in_the_described_format() {
+        let a = Matrix::Csr(Csr::from_coo(&Coo::paper_example()));
+        for spec in &REGISTRY {
+            let b = (spec.convert_into)(&a);
+            assert_eq!(b.kind(), spec.kind, "{}", spec.name);
+            assert_eq!((b.rows(), b.cols(), b.nnz()), (6, 6, 19));
+        }
+    }
+
+    #[test]
+    fn names_and_labels_are_distinct() {
+        for (i, s) in REGISTRY.iter().enumerate() {
+            for t in &REGISTRY[i + 1..] {
+                assert_ne!(s.name, t.name);
+                assert_ne!(s.label, t.label);
+            }
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! [`crate::report::render_flop_skew`], and to feed the
 //! [`crate::autoplan`] format tuner's feature vector.
 
+use super::psell::{SLICE_HEIGHT, SORT_WINDOW};
 use super::{Coo, Csc, Csr};
 
 /// Structural profile of a sparse matrix.
@@ -33,6 +34,16 @@ pub struct Profile {
     /// matrix bandwidth: max |i − j| over stored entries (0 when empty) —
     /// small for banded/stencil structures, ~max(m, n) for scattered ones
     pub bandwidth: usize,
+    /// modeled pSELL occupancy at the canonical `C = 32, σ = 128`
+    /// parameters: real nnz over padded slots after the window sort
+    /// (1.0 when nothing pads) — near 1 for banded/uniform row lengths,
+    /// collapsing toward 0 under heavy row skew (DESIGN.md §17)
+    pub psell_fill: f64,
+    /// mean within-σ-window CV of the per-row nnz counts — the locality
+    /// the pSELL window sort can exploit: ~0 when every window is
+    /// homogeneous (padding vanishes after sorting), large when the row
+    /// skew lands *inside* single windows and padding survives the sort
+    pub window_row_cv: f64,
     /// fitted power-law exponent R of the column-degree distribution
     /// (paper §5.2: P(k) ~ k^-R), or None if the fit is degenerate
     pub r_exponent: Option<f64>,
@@ -71,6 +82,21 @@ pub fn profile(coo: &Coo) -> Profile {
         .map(|(&r, &c)| (r as i64 - c as i64).unsigned_abs() as usize)
         .max()
         .unwrap_or(0);
+    // replay pSELL's canonical padding rule on the row-degree sequence:
+    // sort each σ-window descending, pad every C-row slice to its max —
+    // same accounting as PSell::with_params, without building the matrix
+    let mut padded_slots = nnz as u64;
+    let mut wcv_sum = 0.0f64;
+    let mut wcv_n = 0usize;
+    for w in row_degrees.chunks(SORT_WINDOW) {
+        wcv_sum += coeff_of_variation(w);
+        wcv_n += 1;
+        let mut sorted = w.to_vec();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        for s in sorted.chunks(SLICE_HEIGHT) {
+            padded_slots += s.iter().map(|&k| (s[0] - k) as u64).sum::<u64>();
+        }
+    }
     Profile {
         m,
         n,
@@ -82,6 +108,8 @@ pub fn profile(coo: &Coo) -> Profile {
         row_cv: coeff_of_variation(&row_degrees),
         col_cv: coeff_of_variation(&col_degrees),
         bandwidth,
+        psell_fill: if padded_slots == 0 { 1.0 } else { nnz as f64 / padded_slots as f64 },
+        window_row_cv: if wcv_n == 0 { 0.0 } else { wcv_sum / wcv_n as f64 },
         r_exponent: fit_power_law(&col_degrees),
     }
 }
@@ -335,9 +363,47 @@ mod tests {
             skewed.col_cv,
             banded.col_cv
         );
+        // pSELL features point the same way: homogeneous banded rows pad
+        // almost nothing, in-window power-law skew survives the sort
+        assert!(banded.psell_fill > 0.9, "banded fill {}", banded.psell_fill);
+        assert!(
+            skewed.psell_fill < banded.psell_fill,
+            "power-law fill {} vs banded {}",
+            skewed.psell_fill,
+            banded.psell_fill
+        );
+        assert!(banded.window_row_cv < 0.3, "banded window CV {}", banded.window_row_cv);
+        assert!(
+            skewed.window_row_cv > banded.window_row_cv,
+            "power-law window CV {} vs banded {}",
+            skewed.window_row_cv,
+            banded.window_row_cv
+        );
         // empty matrix: everything defined, nothing NaN
         let empty = profile(&Coo::empty(4, 7));
         assert_eq!((empty.bandwidth, empty.nnz), (0, 0));
         assert_eq!((empty.row_cv, empty.col_cv), (0.0, 0.0));
+        assert_eq!((empty.psell_fill, empty.window_row_cv), (1.0, 0.0));
+    }
+
+    #[test]
+    fn psell_fill_matches_the_real_layout() {
+        use crate::formats::{convert, Matrix, PSell};
+        // the profile feature replays the canonical padding rule on row
+        // degrees only — it must agree exactly with a built PSell
+        for coo in [
+            gen::banded(700, 700, 4, 21),
+            gen::power_law(900, 500, 8_000, 1.5, 22),
+            gen::uniform(300, 300, 2_500, 23),
+        ] {
+            let p = profile(&coo);
+            let built = PSell::from_csr(&convert::to_csr(&Matrix::Coo(coo)));
+            assert!(
+                (p.psell_fill - built.fill_ratio()).abs() < 1e-12,
+                "profile fill {} vs built {}",
+                p.psell_fill,
+                built.fill_ratio()
+            );
+        }
     }
 }

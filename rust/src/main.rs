@@ -254,7 +254,7 @@ fn cmd_partition(argv: Vec<String>) -> Result<()> {
         .flag("matrix", "MatrixMarket file", None)
         .flag("suite", "suite matrix name", None)
         .flag("np", "partitions", Some("8"))
-        .flag("format", "csr | csc | coo", Some("csr"))
+        .flag("format", "csr | csc | coo | psell", Some("csr"))
         .flag("strategy", "balanced | blocks", Some("balanced"));
     let a = p.parse(argv)?;
     let format = FormatKind::parse(&a.str_or("format", "csr"))
@@ -288,7 +288,7 @@ fn run_parser() -> Parser {
         .flag("platform", "summit | dgx1", Some("dgx1"))
         .flag("gpus", "GPUs to use", None)
         .flag("mode", "baseline | pstar | popt", Some("popt"))
-        .flag("format", "csr | csc | coo", Some("csr"))
+        .flag("format", "csr | csc | coo | psell", Some("csr"))
         .flag("backend", "pjrt | cpu | measured", Some("pjrt"))
         .flag("alpha", "alpha scalar", Some("1.0"))
         .flag("beta", "beta scalar", Some("0.0"))
@@ -567,7 +567,7 @@ fn solver_parser() -> Parser {
         .flag("platform", "summit | dgx1", Some("dgx1"))
         .flag("gpus", "GPUs to use", None)
         .flag("mode", "baseline | pstar | popt", Some("popt"))
-        .flag("format", "csr | csc | coo (CG/Jacobi input format)", Some("csr"))
+        .flag("format", "csr | csc | coo | psell (CG/Jacobi input format)", Some("csr"))
         .flag("backend", "cpu | measured (identical numerics, measured adds walls)", Some("cpu"))
         .flag(
             "method",

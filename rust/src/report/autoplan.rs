@@ -19,6 +19,8 @@ pub fn render_autoplan_report(auto: &AutoPlan) -> String {
     t.row(["row-length CV".to_string(), format!("{:.3}", p.row_cv)]);
     t.row(["col-length CV".to_string(), format!("{:.3}", p.col_cv)]);
     t.row(["bandwidth".to_string(), p.bandwidth.to_string()]);
+    t.row(["pSELL fill".to_string(), format!("{:.3}", p.psell_fill)]);
+    t.row(["window row CV".to_string(), format!("{:.3}", p.window_row_cv)]);
     t.row([
         "power-law R".to_string(),
         p.r_exponent.map_or("n/a".to_string(), |r| format!("{r:.2}")),
@@ -91,7 +93,7 @@ mod tests {
         let s = render_autoplan_report(&auto);
         assert!(s.contains("row-length CV"), "profile missing:\n{s}");
         assert!(s.contains("<- chosen"), "choice marker missing:\n{s}");
-        for fmt in ["csr/", "csc/", "coo/"] {
+        for fmt in ["csr/", "csc/", "coo/", "psell/"] {
             assert!(s.contains(fmt), "candidate row {fmt} missing:\n{s}");
         }
         assert!(s.contains("beats runner-up"), "rationale missing:\n{s}");

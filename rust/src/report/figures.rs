@@ -68,13 +68,10 @@ impl SuiteCache {
     }
 }
 
-/// Convert a cached matrix into the requested storage format.
+/// Convert a cached matrix into the requested storage format (the
+/// registry's converter, so new formats work here with no edits).
 pub fn in_format(mat: &Matrix, format: FormatKind) -> Matrix {
-    match format {
-        FormatKind::Csr => Matrix::Csr(convert::to_csr(mat)),
-        FormatKind::Csc => Matrix::Csc(convert::to_csc(mat)),
-        FormatKind::Coo => Matrix::Coo(convert::to_coo(mat)),
-    }
+    convert::to_format(mat, format)
 }
 
 fn engine(platform: &Platform, np: usize, mode: Mode, format: FormatKind) -> Result<Engine> {

@@ -173,6 +173,15 @@ pub fn fingerprint(a: &Matrix) -> MatrixFingerprint {
             h.u32s(&c.col_idx);
             h.f32s(&c.val);
         }
+        Matrix::PSell(c) => {
+            // the permutation is derived from the structure, but hash it
+            // anyway: two pSELL matrices with different window params may
+            // share the permuted payload yet partition differently
+            h.u32s(&c.perm);
+            h.usizes(&c.row_ptr);
+            h.u32s(&c.col_idx);
+            h.f32s(&c.val);
+        }
     }
     MatrixFingerprint {
         rows: a.rows(),

@@ -37,6 +37,10 @@ pub struct SimConstants {
     pub csc_efficiency: f64,
     /// HBM efficiency of the COO SpMV kernel (scattered atomics).
     pub coo_efficiency: f64,
+    /// HBM efficiency of the pSELL (SELL-C-σ) sliced SpMV kernel —
+    /// above CSR because the padded slices remove row-loop divergence;
+    /// the padding itself is charged as extra streamed elements.
+    pub psell_efficiency: f64,
     /// HBM efficiency of the hash-based SpGEMM kernels.
     pub spgemm_efficiency: f64,
     /// HBM efficiency of the level-scheduled SpTRSV wavefront kernel.
@@ -60,6 +64,7 @@ impl Default for SimConstants {
             csr_efficiency: super::model::kernel_efficiency(FormatKind::Csr),
             csc_efficiency: super::model::kernel_efficiency(FormatKind::Csc),
             coo_efficiency: super::model::kernel_efficiency(FormatKind::Coo),
+            psell_efficiency: super::model::kernel_efficiency(FormatKind::PSell),
             spgemm_efficiency: super::model::SPGEMM_EFFICIENCY,
             sptrsv_efficiency: super::model::SPTRSV_EFFICIENCY,
             sptrsv_sync_scale: DEFAULT_SPTRSV_SYNC_SCALE,
@@ -72,13 +77,10 @@ impl Default for SimConstants {
 }
 
 impl SimConstants {
-    /// Per-format SpMV/SpMM kernel efficiency.
+    /// Per-format SpMV/SpMM kernel efficiency, dispatched through the
+    /// format registry's accessor (DESIGN.md §17).
     pub fn kernel_efficiency(&self, format: FormatKind) -> f64 {
-        match format {
-            FormatKind::Csr => self.csr_efficiency,
-            FormatKind::Csc => self.csc_efficiency,
-            FormatKind::Coo => self.coo_efficiency,
-        }
+        (format.spec().efficiency)(self)
     }
 
     /// Enforce the documented bounds: efficiencies in `(0, 1]`, everything
@@ -88,6 +90,7 @@ impl SimConstants {
             ("csr_efficiency", self.csr_efficiency),
             ("csc_efficiency", self.csc_efficiency),
             ("coo_efficiency", self.coo_efficiency),
+            ("psell_efficiency", self.psell_efficiency),
             ("spgemm_efficiency", self.spgemm_efficiency),
             ("sptrsv_efficiency", self.sptrsv_efficiency),
         ];
@@ -118,10 +121,11 @@ impl SimConstants {
     /// The constant names in field order — the one list [`Self::to_json_value`]
     /// and [`Self::from_json_value`] both walk, so a field added to the
     /// struct cannot be forgotten by only one side.
-    const FIELDS: [&'static str; 10] = [
+    const FIELDS: [&'static str; 11] = [
         "csr_efficiency",
         "csc_efficiency",
         "coo_efficiency",
+        "psell_efficiency",
         "spgemm_efficiency",
         "sptrsv_efficiency",
         "sptrsv_sync_scale",
@@ -136,6 +140,7 @@ impl SimConstants {
             "csr_efficiency" => self.csr_efficiency,
             "csc_efficiency" => self.csc_efficiency,
             "coo_efficiency" => self.coo_efficiency,
+            "psell_efficiency" => self.psell_efficiency,
             "spgemm_efficiency" => self.spgemm_efficiency,
             "sptrsv_efficiency" => self.sptrsv_efficiency,
             "sptrsv_sync_scale" => self.sptrsv_sync_scale,
@@ -152,6 +157,7 @@ impl SimConstants {
             "csr_efficiency" => self.csr_efficiency = v,
             "csc_efficiency" => self.csc_efficiency = v,
             "coo_efficiency" => self.coo_efficiency = v,
+            "psell_efficiency" => self.psell_efficiency = v,
             "spgemm_efficiency" => self.spgemm_efficiency = v,
             "sptrsv_efficiency" => self.sptrsv_efficiency = v,
             "sptrsv_sync_scale" => self.sptrsv_sync_scale = v,
@@ -222,6 +228,7 @@ mod tests {
         assert_eq!(c.kernel_efficiency(FormatKind::Csr), 0.65);
         assert_eq!(c.kernel_efficiency(FormatKind::Csc), 0.55);
         assert_eq!(c.kernel_efficiency(FormatKind::Coo), 0.50);
+        assert_eq!(c.kernel_efficiency(FormatKind::PSell), 0.70);
         assert_eq!(c.spgemm_efficiency, 0.35);
         assert_eq!(c.sptrsv_efficiency, 0.40);
         assert_eq!(c.sptrsv_sync_scale, 1.0);
@@ -249,6 +256,18 @@ mod tests {
         }
         let err = SimConstants::from_json(&v.to_json()).unwrap_err();
         assert!(err.to_string().contains("merge_bw_divisor"), "{err}");
+    }
+
+    #[test]
+    fn from_json_requires_the_psell_field_too() {
+        // pre-registry 10-field profiles are not silently patched with a
+        // default — a calibration profile is a complete constant set
+        let mut v = SimConstants::default().to_json_value();
+        if let Value::Obj(m) = &mut v {
+            m.remove("psell_efficiency");
+        }
+        let err = SimConstants::from_json(&v.to_json()).unwrap_err();
+        assert!(err.to_string().contains("psell_efficiency"), "{err}");
     }
 
     #[test]

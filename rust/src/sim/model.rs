@@ -27,35 +27,28 @@ use super::platform::Platform;
 use crate::formats::FormatKind;
 
 /// Default effective fraction of HBM bandwidth a tuned single-GPU SpMV
-/// kernel achieves per format. CSR (cuSparse csrmv) is the best case; CSC
-/// is run as transposed CSR (paper §5.1) with a small penalty; COO pays
-/// scattered atomics. The live per-platform value is
-/// `p.consts.kernel_efficiency(format)`.
+/// kernel achieves per format, straight from the registry descriptor
+/// (DESIGN.md §17). CSR (cuSparse csrmv) is the best case; CSC is run as
+/// transposed CSR (paper §5.1) with a small penalty; COO pays scattered
+/// atomics; pSELL's divergence-free slice walk beats the CSR row loop
+/// (its padding is charged as extra streamed elements instead). The live
+/// per-platform value is `p.consts.kernel_efficiency(format)`.
 pub fn kernel_efficiency(format: FormatKind) -> f64 {
-    match format {
-        FormatKind::Csr => 0.65,
-        FormatKind::Csc => 0.55,
-        FormatKind::Coo => 0.50,
-    }
+    format.spec().default_efficiency
 }
 
-/// Bytes a single-device SpMV over a partition touches in HBM:
-/// the nnz stream (val + 4-byte index(es)) + the dense x slice + the
-/// partial y output. `rows`/`cols` are the partition's local dimensions.
-pub fn spmv_partition_bytes(nnz: u64, rows: u64, cols: u64, format: FormatKind) -> u64 {
-    let stream = match format {
-        // val + col_idx, row_ptr amortized over rows
-        FormatKind::Csr => nnz * 8 + rows * 8,
-        FormatKind::Csc => nnz * 8 + cols * 8,
-        // explicit row AND col index per nnz
-        FormatKind::Coo => nnz * 12,
-    };
-    stream + cols * 4 + rows * 4
+/// Bytes a single-device SpMV over a partition touches in HBM: the
+/// element stream (registry `stream_bytes`, val + index(es) per streamed
+/// element) + the dense x slice + the partial y output. `elems` is the
+/// streamed element count — real nnz for CSR/CSC/COO, padded slots for
+/// pSELL; `rows`/`cols` are the partition's local dimensions.
+pub fn spmv_partition_bytes(elems: u64, rows: u64, cols: u64, format: FormatKind) -> u64 {
+    (format.spec().stream_bytes)(elems, rows, cols) + cols * 4 + rows * 4
 }
 
 /// Device SpMV kernel time for one partition (V100, memory-bound model).
-pub fn spmv_kernel_time(p: &Platform, nnz: u64, rows: u64, cols: u64, format: FormatKind) -> f64 {
-    let bytes = spmv_partition_bytes(nnz, rows, cols, format) as f64;
+pub fn spmv_kernel_time(p: &Platform, elems: u64, rows: u64, cols: u64, format: FormatKind) -> f64 {
+    let bytes = spmv_partition_bytes(elems, rows, cols, format) as f64;
     p.launch_latency + bytes / (p.hbm_bw * p.consts.kernel_efficiency(format))
 }
 
@@ -64,17 +57,13 @@ pub fn spmv_kernel_time(p: &Platform, nnz: u64, rows: u64, cols: u64, format: Fo
 /// argument — for K vectors, SpMM ≪ K × SpMV).
 pub fn spmm_kernel_time(
     p: &Platform,
-    nnz: u64,
+    elems: u64,
     rows: u64,
     cols: u64,
     k: u64,
     format: FormatKind,
 ) -> f64 {
-    let stream = match format {
-        FormatKind::Csr => nnz * 8 + rows * 8,
-        FormatKind::Csc => nnz * 8 + cols * 8,
-        FormatKind::Coo => nnz * 12,
-    };
+    let stream = (format.spec().stream_bytes)(elems, rows, cols);
     let bytes = (stream + (cols * 4 + rows * 4) * k) as f64;
     p.launch_latency + bytes / (p.hbm_bw * p.consts.kernel_efficiency(format))
 }

@@ -94,6 +94,7 @@ mod tests {
             overlaps_prev: false,
             merge,
             rewrite_ops: 0,
+            padded: 0,
         }
     }
 

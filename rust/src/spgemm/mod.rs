@@ -477,12 +477,7 @@ mod tests {
     }
 
     fn matrix_in(format: FormatKind, coo: &Coo) -> Matrix {
-        let m = Matrix::Coo(coo.clone());
-        match format {
-            FormatKind::Csr => Matrix::Csr(convert::to_csr(&m)),
-            FormatKind::Csc => Matrix::Csc(convert::to_csc(&m)),
-            FormatKind::Coo => m,
-        }
+        convert::to_format(&Matrix::Coo(coo.clone()), format)
     }
 
     fn assert_dense_close(got: &Csr, want: &Csr) {

@@ -73,6 +73,14 @@ pub fn b_row_nnz(b: &Matrix) -> Vec<u64> {
             }
             h
         }
+        // permuted positions map back through perm to global rows
+        Matrix::PSell(x) => {
+            let mut h = vec![0u64; x.rows()];
+            for p in 0..x.rows() {
+                h[x.perm[p] as usize] = x.row_nnz(p) as u64;
+            }
+            h
+        }
     }
 }
 

@@ -226,6 +226,93 @@ fn measured_backend_is_schedule_independent() {
     }
 }
 
+/// The determinism half of the registry equivalence lock (DESIGN.md §17):
+/// for the three legacy formats, a duplicate-free matrix routed through
+/// the registry's `convert_into` hook must produce byte-identical plans,
+/// modeled phase costs, and SpMV/SpMM numerics to one built with the
+/// direct per-format constructors — across np and both real backends.
+#[test]
+fn registry_routing_is_byte_identical_to_direct_construction() {
+    let coo = gen::banded(600, 600, 5, 91);
+    let x = gen::dense_vector(600, 92);
+    let xk = gen::dense_vector(600 * 3, 93);
+    for fmt in [FormatKind::Csr, FormatKind::Csc, FormatKind::Coo] {
+        let direct = if fmt == FormatKind::Csr {
+            Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone())))
+        } else if fmt == FormatKind::Csc {
+            Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone())))
+        } else {
+            Matrix::Coo(coo.clone())
+        };
+        let routed = convert::to_format(&Matrix::Coo(coo.clone()), fmt);
+        for np in [1usize, 2, 4, 8] {
+            for backend in [Backend::CpuRef, Backend::Measured] {
+                let eng = Engine::new(RunConfig {
+                    platform: Platform::dgx1(),
+                    num_gpus: np,
+                    mode: Mode::PStarOpt,
+                    format: fmt,
+                    backend,
+                    numa_aware: None,
+                    strategy_override: None,
+                })
+                .unwrap();
+                let ctx = format!("{} np{np} {backend:?}", fmt.name());
+
+                let pa = eng.plan(&direct).unwrap();
+                let pb = eng.plan(&routed).unwrap();
+                assert_eq!(pa.work_loads, pb.work_loads, "{ctx}: plan loads");
+                assert_eq!(
+                    pa.t_partition.to_bits(),
+                    pb.t_partition.to_bits(),
+                    "{ctx}: modeled partition cost"
+                );
+                for (ta, tb) in pa.tasks.iter().zip(&pb.tasks) {
+                    assert_eq!(ta.padded, tb.padded, "{ctx}: task padding");
+                    assert_eq!(ta.col_idx, tb.col_idx, "{ctx}: task col_idx");
+                    assert_eq!(ta.row_idx, tb.row_idx, "{ctx}: task row_idx");
+                    assert_eq!(
+                        ta.val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        tb.val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{ctx}: task payload bits"
+                    );
+                }
+
+                let a = eng.spmv(&direct, &x, 1.0, 0.0, None).unwrap();
+                let b = eng.spmv(&routed, &x, 1.0, 0.0, None).unwrap();
+                assert_eq!(
+                    a.y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    b.y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{ctx}: spmv y bits"
+                );
+                assert_eq!(
+                    a.metrics.modeled_total.to_bits(),
+                    b.metrics.modeled_total.to_bits(),
+                    "{ctx}: spmv modeled total"
+                );
+                assert_eq!(
+                    a.metrics.t_compute.to_bits(),
+                    b.metrics.t_compute.to_bits(),
+                    "{ctx}: spmv compute phase"
+                );
+
+                let am = eng.spmm(&direct, &xk, 3, 1.0, 0.0, None).unwrap();
+                let bm = eng.spmm(&routed, &xk, 3, 1.0, 0.0, None).unwrap();
+                assert_eq!(
+                    am.y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    bm.y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{ctx}: spmm y bits"
+                );
+                assert_eq!(
+                    am.metrics.modeled_total.to_bits(),
+                    bm.metrics.modeled_total.to_bits(),
+                    "{ctx}: spmm modeled total"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn auto_selection_is_deterministic_across_runs() {
     // the tuner's whole verdict — winner, ranking order, and every

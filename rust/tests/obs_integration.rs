@@ -105,11 +105,7 @@ fn engine_on(np: usize, mode: Mode, format: FormatKind) -> Engine {
 
 fn matrix_in(format: FormatKind, m: usize, nnz: usize, seed: u64) -> Matrix {
     let coo = gen::power_law(m, m, nnz, 2.0, seed);
-    match format {
-        FormatKind::Csr => Matrix::Csr(convert::to_csr(&Matrix::Coo(coo))),
-        FormatKind::Csc => Matrix::Csc(convert::to_csc(&Matrix::Coo(coo))),
-        FormatKind::Coo => Matrix::Coo(coo),
-    }
+    convert::to_format(&Matrix::Coo(coo), format)
 }
 
 /// Within every device lane, spans must tile without overlap: sorted by

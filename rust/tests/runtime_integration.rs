@@ -198,11 +198,7 @@ fn full_engine_pjrt_backend_end_to_end() {
     let y0 = gen::dense_vector(600, 79);
 
     for format in msrep::formats::FormatKind::ALL {
-        let mat = match format {
-            msrep::formats::FormatKind::Csr => Matrix::Csr(convert::to_csr(&Matrix::Coo(coo.clone()))),
-            msrep::formats::FormatKind::Csc => Matrix::Csc(convert::to_csc(&Matrix::Coo(coo.clone()))),
-            msrep::formats::FormatKind::Coo => Matrix::Coo(coo.clone()),
-        };
+        let mat = convert::to_format(&Matrix::Coo(coo.clone()), format);
         let mut expect = y0.clone();
         spmv_matrix(&mat, &x, 2.0, -1.0, &mut expect).unwrap();
 

@@ -1,5 +1,5 @@
 //! SpGEMM integration: the multi-GPU `C = A·B` matches the dense
-//! reference product across all three partitioned formats (property
+//! reference product across every registered format (property
 //! test), the Galerkin triple product works as a chain, and — the
 //! planning acceptance — flop-balanced plans beat nnz-balanced plans on
 //! a skewed power-law A·A under the sim cost model.
@@ -71,11 +71,7 @@ fn spgemm_matches_dense_reference_property_all_formats() {
         let expect = dense_product(&Matrix::Coo(a_coo.clone()), &b);
         let np = *g.choose(&[1usize, 2, 4, 8]);
         for format in FormatKind::ALL {
-            let a = match format {
-                FormatKind::Csr => Matrix::Csr(convert::to_csr(&Matrix::Coo(a_coo.clone()))),
-                FormatKind::Csc => Matrix::Csc(convert::to_csc(&Matrix::Coo(a_coo.clone()))),
-                FormatKind::Coo => Matrix::Coo(a_coo.clone()),
-            };
+            let a = convert::to_format(&Matrix::Coo(a_coo.clone()), format);
             let rep = engine(np).spgemm(&a, &b).expect("spgemm");
             assert_matches_dense(&rep.c, &expect, &format!("{format:?}/np{np}/seed{seed}"));
         }

@@ -2,7 +2,7 @@
 //! criteria, end to end through the public API:
 //!
 //!  * the multi-GPU level-scheduled solve matches the dense substitution
-//!    oracle across pCSR/pCSC/pCOO inputs, both triangles, every mode;
+//!    oracle across every registered format, both triangles, every mode;
 //!  * ILU(0)-preconditioned CG reaches tol=1e-6 on the 2-D Laplacian
 //!    scenario in strictly fewer iterations than plain CG;
 //!  * the level-aware plan's modeled max-GPU kernel time beats a naive
@@ -31,12 +31,7 @@ fn engine(mode: Mode, np: usize) -> Engine {
 }
 
 fn matrix_in(format: FormatKind, csr: &msrep::formats::Csr) -> Matrix {
-    let m = Matrix::Csr(csr.clone());
-    match format {
-        FormatKind::Csr => m,
-        FormatKind::Csc => Matrix::Csc(convert::to_csc(&m)),
-        FormatKind::Coo => Matrix::Coo(convert::to_coo(&m)),
-    }
+    convert::to_format(&Matrix::Csr(csr.clone()), format)
 }
 
 #[test]
